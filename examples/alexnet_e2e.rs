@@ -1,0 +1,81 @@
+//! End-to-end driver: all eight AlexNet layers (the paper's Table II
+//! workload) through the full three-layer stack.
+//!
+//! For every layer: the DSE picks the optimal ⟨N_p, S_i⟩ from the
+//! analytical model, the coordinator partitions the GEMM into sub-block
+//! tasks, N_p work-stealing workers execute the numerics through the
+//! AOT-compiled JAX/Pallas artifacts on the PJRT runtime (golden engine
+//! if artifacts are absent), and the cycle-level simulator reports the
+//! FPGA-side time. Output is the Table II comparison plus a numerics
+//! check per layer. Recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example alexnet_e2e
+//! ```
+
+use multi_array::accelerator::SimOptions;
+use multi_array::cnn;
+use multi_array::config::HardwareConfig;
+use multi_array::coordinator::{Coordinator, GemmJob, NumericsEngine};
+use multi_array::dse;
+use multi_array::gemm::Matrix;
+
+fn main() -> anyhow::Result<()> {
+    let hw = HardwareConfig::paper();
+    let engine = NumericsEngine::auto("artifacts");
+    println!(
+        "accelerator Pm={} P={} @ {} MHz, numerics = {}",
+        hw.pm, hw.p, hw.freq_mhz, engine.name
+    );
+    let co = Coordinator::new(hw.clone(), engine);
+
+    println!(
+        "\n{:>8} {:>16} {:>9} | {:>9} {:>9} {:>9} | {:>10} {:>10}",
+        "Layer", "M*K*N", "Optimal", "Opt", "Np=4", "Np=1", "max|err|", "host(s)"
+    );
+    let mut total_flops = 0u64;
+    let mut total_sim = 0.0f64;
+    for (idx, l) in cnn::alexnet_layers().into_iter().enumerate() {
+        // Deterministic per-layer operands.
+        let a = Matrix::random(l.m, l.k, idx as u64 * 2 + 1);
+        let b = Matrix::random(l.k, l.n, idx as u64 * 2 + 2);
+        let want = a.matmul(&b);
+
+        // Optimal config via DSE; run the real job with it.
+        let r = co.run_job(GemmJob { id: idx as u64, a, b, run: None })?;
+        let err = r.c.max_abs_diff(&want);
+        assert!(r.c.allclose(&want, 1e-3), "{}: numerics mismatch {err}", l.name);
+
+        // Baselines, simulated at their best fixed-extension configs.
+        let acc = co.accelerator();
+        let b4 = dse::baseline(&hw, hw.pm, l.m, l.k, l.n, acc.surface())?;
+        let s4 = acc.simulate(&b4.run, l.m, l.k, l.n, &SimOptions::default())?;
+        let b1 = dse::baseline(&hw, 1, l.m, l.k, l.n, acc.surface())?;
+        let s1 = acc.simulate(&b1.run, l.m, l.k, l.n, &SimOptions::default())?;
+
+        println!(
+            "{:>8} {:>16} {:>9} | {:>9.1} {:>9.1} {:>9.1} | {:>10.2e} {:>10.2}",
+            l.name,
+            format!("{}*{}*{}", l.m, l.k, l.n),
+            format!("({},{})", r.run.np, r.run.si),
+            r.sim.gflops,
+            s4.gflops,
+            s1.gflops,
+            err,
+            r.host_latency_secs,
+        );
+        total_flops += l.flops();
+        total_sim += r.sim.total_secs;
+    }
+
+    println!(
+        "\nwhole network: {:.2} GFLOP in {:.2} ms simulated -> {:.1} GFLOPS ({:.1}% of {:.1} peak)",
+        total_flops as f64 / 1e9,
+        total_sim * 1e3,
+        total_flops as f64 / total_sim / 1e9,
+        100.0 * total_flops as f64 / total_sim / 1e9 / hw.peak_gflops(),
+        hw.peak_gflops()
+    );
+    println!("coordinator metrics: {}", co.metrics().summary());
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Design-space exploration walkthrough: how the Section IV model turns
+//! a problem size into an optimal ⟨N_p, S_i⟩, and what the Eq. 7 bounds
+//! look like across the whole feasible space (the Fig. 4 view, for any
+//! problem you like).
+//!
+//! ```sh
+//! cargo run --release --example design_space -- 128 1200 729
+//! ```
+
+use multi_array::accelerator::{Accelerator, SimOptions};
+use multi_array::analytical;
+use multi_array::config::HardwareConfig;
+use multi_array::dse;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<usize> = std::env::args()
+        .skip(1)
+        .map(|s| s.parse().expect("usage: design_space [M K N]"))
+        .collect();
+    let (m, k, n) = match args.as_slice() {
+        [m, k, n] => (*m, *k, *n),
+        [] => (128, 1200, 729), // conv-2, the paper's Fig. 4 subject
+        _ => anyhow::bail!("usage: design_space [M K N]"),
+    };
+
+    let hw = HardwareConfig::paper();
+    let acc = Accelerator::new(hw.clone());
+    println!("problem: {m} x {k} x {n}  on Pm={} P={}", hw.pm, hw.p);
+
+    // Step 1: Eq. 9 prunes the (N_p, S_i) space.
+    println!("\nEq. 9 feasible N_p per S_i:");
+    for si in [16usize, 32, 64, 128, 256] {
+        println!("  S_i = {si:>3}: N_p in {:?}", analytical::feasible_nps(&hw, si));
+    }
+
+    // Step 2: the model evaluates every feasible point.
+    let e = dse::explore(&hw, m, k, n, acc.surface())?;
+    println!("\nmodel ranking (top 10 of {}):", e.points.len());
+    println!(
+        "{:>12} {:>10} {:>12} {:>12} {:>12} {:>8}",
+        "(Np,Si)", "n_work", "lower(ms)", "upper(ms)", "est GFLOPS", "bound"
+    );
+    for p in e.points.iter().take(10) {
+        println!(
+            "{:>12} {:>10} {:>12.3} {:>12.3} {:>12.1} {:>8}",
+            format!("({},{})", p.run.np, p.run.si),
+            p.prediction.n_work,
+            p.prediction.lower * 1e3,
+            p.prediction.upper * 1e3,
+            p.est_gflops,
+            if p.prediction.memory_bound() { "mem" } else { "compute" }
+        );
+    }
+
+    // Step 3: validate the choice in the cycle-level simulator.
+    println!("\nsimulator check of the top 5:");
+    for p in e.points.iter().take(5) {
+        let sim = acc.simulate(&p.run, m, k, n, &SimOptions::default())?;
+        println!(
+            "  {:>10}: simulated {:.3} ms, {:.1} GFLOPS ({:.1}% of peak)",
+            format!("({},{})", p.run.np, p.run.si),
+            sim.total_secs * 1e3,
+            sim.gflops,
+            100.0 * sim.efficiency(&hw)
+        );
+    }
+    println!("\nchosen optimum: {}", e.best.run);
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: configure the paper's accelerator, run one GEMM through
+//! the coordinator (PJRT numerics if `make artifacts` has run, golden
+//! fallback otherwise), verify against the oracle, and print the
+//! simulated FPGA performance.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use multi_array::config::{HardwareConfig, RunConfig};
+use multi_array::coordinator::{Coordinator, GemmJob, NumericsEngine};
+use multi_array::gemm::Matrix;
+
+fn main() -> anyhow::Result<()> {
+    // The paper's Section V setup: Pm = 4 arrays of P = 64 PEs, 200 MHz.
+    let hw = HardwareConfig::paper();
+    println!(
+        "accelerator: Pm={} P={} @ {} MHz  (peak {:.1} GFLOPS)",
+        hw.pm,
+        hw.p,
+        hw.freq_mhz,
+        hw.peak_gflops()
+    );
+
+    // PJRT backend when artifacts exist, golden numerics otherwise.
+    let engine = NumericsEngine::auto("artifacts");
+    println!("numerics backend: {}", engine.name);
+    let co = Coordinator::new(hw.clone(), engine);
+
+    // A 512x512x512 GEMM, pinned to the paper's favourite (2, 128).
+    let a = Matrix::random(512, 512, 1);
+    let b = Matrix::random(512, 512, 2);
+    let want = a.matmul(&b);
+    let job = GemmJob { id: 0, a, b, run: Some(RunConfig::square(2, 128)) };
+    let r = co.run_job(job)?;
+
+    println!("config used: {}", r.run);
+    println!("max |err| vs oracle: {:.3e}", r.c.max_abs_diff(&want));
+    println!(
+        "simulated FPGA time: {:.3} ms -> {:.1} GFLOPS ({:.1}% of peak)",
+        r.sim.total_secs * 1e3,
+        r.sim.gflops,
+        100.0 * r.sim.efficiency(&hw)
+    );
+    for (i, arr) in r.sim.arrays.iter().enumerate() {
+        println!(
+            "  array {i}: {} tasks, stolen in/out = {}/{}",
+            arr.tasks, arr.stolen_in, arr.stolen_out
+        );
+    }
+    assert!(r.c.allclose(&want, 1e-3), "numerics mismatch!");
+    println!("OK");
+    Ok(())
+}

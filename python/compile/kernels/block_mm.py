@@ -1,0 +1,142 @@
+"""L1 — Pallas kernel for the paper's block matrix-multiplication dataflow.
+
+The paper's linear PE array computes a sub-block product
+``C_ij = SA_i x SB_j`` as a sum of rank-1 updates (Eq. 2):
+
+    C_ij = sum_k V_k (x) U_k        V_k = k-th column of SA_i  (length S_i)
+                                    U_k = k-th row    of SB_j  (length S_j)
+
+Each PE owns one row of the ``S_i x S_j`` accumulator (its local memory
+``M_c``), holds one element of ``V_k`` in a double-buffered register ``R_a``
+(reused ``S_j`` times), and streams ``U_k`` through the array FIFOs.
+
+TPU adaptation (see DESIGN.md SS Hardware-Adaptation): the whole accumulator
+block lives in VMEM (the union of the PEs' ``M_c`` memories), the K dimension
+becomes the innermost grid axis so A/B *panels* stream HBM->VMEM exactly like
+the MAC's burst descriptors, and the rank-1 update batch of ``KP`` steps is
+expressed as an MXU ``dot`` over an ``(S_i, KP) x (KP, S_j)`` panel pair.
+``KP`` (panel depth) is the analogue of the paper's burst length ``STR``.
+
+All kernels are built with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; correctness is validated against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_mm_kernel(a_ref, b_ref, c_ref, *, n_k: int):
+    """One grid step: accumulate a panel product into the C block.
+
+    Grid is (M/S_i, N/S_j, K/KP); the k axis is innermost so the (i, j)
+    accumulator block stays resident in VMEM while panels stream through —
+    the Pallas mirror of the PE array keeping M_c local across the K loop.
+    """
+    k = pl.program_id(2)
+
+    # First panel of a fresh (i, j) block: clear the accumulator (the PE's
+    # M_c is written, not read, on iteration k = 1 of Eq. 2).
+    @pl.when(k == 0)
+    def _():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    # The rank-1-update batch: (S_i, KP) @ (KP, S_j). f32 accumulation is
+    # the FMAC's behaviour; preferred_element_type keeps it explicit.
+    c_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(c_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_si", "block_sj", "block_k")
+)
+def block_mm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_si: int = 128,
+    block_sj: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Blocked matmul ``a @ b`` with the paper's (S_i, S_j) tiling.
+
+    Shapes must be multiples of the block sizes — the coordinator (L3) and
+    :func:`..model.pad_to_blocks` zero-pad exactly as Section IV prescribes
+    ("we pad matrices A and B with zeros if M and N are not integer
+    multiples of S_i and S_j").
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    if m % block_si or n % block_sj or k % block_k:
+        raise ValueError(
+            f"shapes {a.shape} @ {b.shape} not multiples of blocks "
+            f"({block_si}, {block_sj}, {block_k}); pad first"
+        )
+
+    grid = (m // block_si, n // block_sj, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_block_mm_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            # A panel: row-block i, K-panel k. The index_map is the burst
+            # descriptor: base ADDR = (i, k), BZ = (S_i, KP).
+            pl.BlockSpec((block_si, block_k), lambda i, j, kk: (i, kk)),
+            # B panel: K-panel k, column-block j.
+            pl.BlockSpec((block_k, block_sj), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_si, block_sj), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def _rank1_kernel(a_ref, b_ref, c_ref):
+    """Literal Eq. 2 dataflow: one rank-1 update per grid step (KP = 1).
+
+    Slower than :func:`block_mm` (no MXU batching) but it is the faithful
+    cycle-for-cycle analogue of the PE pipeline: V_k broadcast down the
+    array x U_k streamed across it. Kept as a teaching / cross-check
+    kernel; tests assert it matches both ``ref.py`` and ``block_mm``.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    v = a_ref[...]  # (S_i, 1)  — V_k held in the R_a registers
+    u = b_ref[...]  # (1, S_j)  — U_k streamed through the FIFOs
+    c_ref[...] += v * u  # each PE row: R_a reused S_j times
+
+
+@functools.partial(jax.jit, static_argnames=("block_si", "block_sj"))
+def rank1_mm(
+    a: jax.Array, b: jax.Array, *, block_si: int = 8, block_sj: int = 8
+) -> jax.Array:
+    """Rank-1-update matmul — the un-batched PE-array dataflow."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    if m % block_si or n % block_sj:
+        raise ValueError("pad M, N to block multiples first")
+
+    grid = (m // block_si, n // block_sj, k)
+    return pl.pallas_call(
+        _rank1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_si, 1), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((1, block_sj), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_si, block_sj), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)

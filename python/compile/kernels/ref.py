@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the L1 kernels — the build-time correctness signal.
+
+Every Pallas kernel in this package has a reference here written with no
+Pallas, no tiling tricks: plain jnp so a reviewer can audit it in seconds.
+pytest (``python/tests/``) asserts allclose between kernel and oracle across
+a hypothesis sweep of shapes, block sizes and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A @ B with f32 accumulation — the FMAC's semantics."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def rank1_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Eq. 2 evaluated literally: C = sum_k outer(A[:, k], B[k, :]).
+
+    Accumulation order matches the PE array (k ascending), so this is also
+    the bit-for-bit oracle for the simulator's functional model.
+    """
+
+    def step(c, k):
+        return c + jnp.outer(a[:, k], b[k, :]), None
+
+    k_dim = a.shape[1]
+    init = jnp.zeros((a.shape[0], b.shape[1]), dtype=jnp.float32)
+    c, _ = jax.lax.scan(step, init, jnp.arange(k_dim))
+    return c.astype(a.dtype)
+
+
+def pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Zero-pad a 2-D array up to (rows, cols) — Section IV's padding rule."""
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))

@@ -1,0 +1,53 @@
+"""L1 — Pallas kernel for the MAC's transpose of A (Section III-C).
+
+The paper stores A transposed so that fetching a *column* of `SA_i`
+(the `V_k` the PE array prefetches) is a contiguous burst. The transpose
+itself is a one-time preprocessing pass the MAC performs when the host
+uploads A; here it is the tiled-transpose Pallas kernel that would run
+as part of the upload pipeline.
+
+TPU adaptation: a `(T, T)` tile is staged through VMEM and written back
+transposed — the classic shared-memory-tile trick of GPU transposes,
+re-expressed with BlockSpec index maps (read block `(i, j)`, write block
+`(j, i)`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _transpose_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].T
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def transpose(x: jax.Array, *, tile: int = 128) -> jax.Array:
+    """Tiled transpose; dims must be multiples of `tile` (pad first —
+    the MAC sizes its staging buffers to burst multiples anyway)."""
+    m, n = x.shape
+    if m % tile or n % tile:
+        raise ValueError(f"shape {x.shape} not a multiple of tile {tile}")
+    grid = (m // tile, n // tile)
+    return pl.pallas_call(
+        _transpose_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, tile), lambda i, j: (i, j))],
+        # The write side lands at the transposed block coordinate.
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def transpose_padded(x: jax.Array, *, tile: int = 128) -> jax.Array:
+    """Transpose with automatic zero-padding and un-padding."""
+    m, n = x.shape
+    mp = -(-m // tile) * tile
+    np_ = -(-n // tile) * tile
+    xp = jnp.pad(x, ((0, mp - m), (0, np_ - n)))
+    return transpose(xp, tile=tile)[:n, :m]

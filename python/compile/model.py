@@ -1,0 +1,123 @@
+"""L2 — the jax compute graph the accelerator executes.
+
+The paper evaluates on AlexNet by converting each conv / fully-connected
+layer to a single large GEMM (Cong & Xiao's im2col formulation, ref. [14]).
+This module provides that graph:
+
+* :func:`gemm` — padded block GEMM over the L1 Pallas kernel; the unit the
+  MAC/WQM schedule as ``C_ij`` sub-block tasks.
+* :func:`conv2d_as_gemm` — im2col lowering of a conv layer to ``gemm`` with
+  the exact (M, K, N) the paper lists in Table II.
+* :func:`alexnet_gemm_shapes` — the eight (M, K, N) triples of Table II,
+  used by aot.py and cross-checked against rust/src/cnn.
+
+Build-time only: ``aot.py`` lowers these functions once to HLO text; the
+rust runtime executes the artifacts. Python never sits on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import block_mm as kernels
+from .kernels import ref
+
+
+def pad_to_blocks(
+    a: jax.Array, b: jax.Array, si: int, sj: int, sk: int
+) -> tuple[jax.Array, jax.Array]:
+    """Zero-pad A (M x K) and B (K x N) to block multiples (Section IV)."""
+    m, k = a.shape
+    _, n = b.shape
+    mp = math.ceil(m / si) * si
+    np_ = math.ceil(n / sj) * sj
+    kp = math.ceil(k / sk) * sk
+    return ref.pad_to(a, mp, kp), ref.pad_to(b, kp, np_)
+
+
+@functools.partial(jax.jit, static_argnames=("si", "sj", "sk"))
+def gemm(
+    a: jax.Array, b: jax.Array, *, si: int = 128, sj: int = 128, sk: int = 128
+) -> jax.Array:
+    """C = A @ B via the paper's blocked algorithm; pads then un-pads.
+
+    ``si``/``sj`` are the paper's S_i/S_j block sizes; ``sk`` is the K-panel
+    depth (the burst length analogue — the paper streams K un-tiled, we
+    stream it in panels for VMEM residency; numerics are unchanged).
+    """
+    m, _ = a.shape
+    _, n = b.shape
+    ap, bp = pad_to_blocks(a, b, si, sj, sk)
+    cp = kernels.block_mm(ap, bp, block_si=si, block_sj=sj, block_k=sk)
+    return cp[:m, :n]
+
+
+def im2col(
+    x: jax.Array, kh: int, kw: int, stride: int, pad: int
+) -> jax.Array:
+    """Unroll (C, H, W) feature maps to the (C*kh*kw, oh*ow) GEMM operand.
+
+    Column ``p`` holds the receptive field of output pixel ``p`` — the
+    standard conv->GEMM lowering the paper adopts from ref. [14].
+    """
+    c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    # (C, kh, kw, oh, ow) patch tensor via dynamic slicing in a vmapped grid.
+    ii = jnp.arange(oh) * stride
+    jj = jnp.arange(ow) * stride
+
+    def patch(i, j):
+        return jax.lax.dynamic_slice(xp, (0, i, j), (c, kh, kw))
+
+    patches = jax.vmap(lambda i: jax.vmap(lambda j: patch(i, j))(jj))(ii)
+    # (oh, ow, C, kh, kw) -> (C*kh*kw, oh*ow)
+    return patches.transpose(2, 3, 4, 0, 1).reshape(c * kh * kw, oh * ow)
+
+
+def conv2d_as_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    si: int = 128,
+    sj: int = 128,
+    sk: int = 128,
+) -> jax.Array:
+    """Conv layer as GEMM: W (F, C*kh*kw) @ im2col(x) -> (F, oh*ow).
+
+    For AlexNet conv-i this produces exactly the Table II M*K*N problem
+    (M = filters, K = C*kh*kw, N = oh*ow).
+    """
+    f, c, kh, kw = w.shape
+    a = w.reshape(f, c * kh * kw)
+    b = im2col(x, kh, kw, stride, pad)
+    out = gemm(a, b, si=si, sj=sj, sk=sk)
+    oh = (x.shape[1] + 2 * pad - kh) // stride + 1
+    ow = (x.shape[2] + 2 * pad - kw) // stride + 1
+    return out.reshape(f, oh, ow)
+
+
+# Table II problem sizes: layer -> (M, K, N). Mirrored in rust/src/cnn;
+# test_model.py asserts the two stay in sync via the generated artifact set.
+ALEXNET_GEMM_SHAPES: dict[str, tuple[int, int, int]] = {
+    "conv1": (96, 363, 3025),
+    "conv2": (128, 1200, 729),
+    "conv3": (384, 2304, 169),
+    "conv4": (192, 1728, 169),
+    "conv5": (128, 1728, 169),
+    "fc6": (128, 9216, 4096),
+    "fc7": (128, 4096, 4096),
+    "fc8": (128, 4096, 1000),
+}
+
+
+def alexnet_gemm_shapes() -> dict[str, tuple[int, int, int]]:
+    """The eight Table II (M, K, N) GEMM problems of AlexNet."""
+    return dict(ALEXNET_GEMM_SHAPES)

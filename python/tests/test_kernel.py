@@ -1,0 +1,141 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+The hypothesis sweeps are the core signal — they cover shapes, block sizes
+(including S_i != S_j, the PSU case), and dtypes, exactly the degrees of
+freedom the paper's PE control units add over prior fixed-block designs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import block_mm, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, dtype=jnp.float32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+class TestBlockMM:
+    def test_square_one_block(self):
+        a, b = rand((32, 32)), rand((32, 32), seed=1)
+        got = block_mm.block_mm(a, b, block_si=32, block_sj=32, block_k=32)
+        np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_multi_block_grid(self):
+        a, b = rand((64, 96)), rand((96, 128), seed=1)
+        got = block_mm.block_mm(a, b, block_si=32, block_sj=32, block_k=32)
+        np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_asymmetric_blocks_psu_case(self):
+        # S_i != S_j — the configuration the PSU exists for.
+        a, b = rand((32, 64)), rand((64, 96), seed=2)
+        got = block_mm.block_mm(a, b, block_si=16, block_sj=48, block_k=32)
+        np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-5, atol=1e-5)
+
+    def test_rejects_unpadded(self):
+        a, b = rand((30, 32)), rand((32, 32))
+        with pytest.raises(ValueError, match="pad"):
+            block_mm.block_mm(a, b, block_si=16, block_sj=16, block_k=16)
+
+    def test_rejects_contraction_mismatch(self):
+        a, b = rand((32, 32)), rand((48, 32))
+        with pytest.raises(ValueError, match="mismatch"):
+            block_mm.block_mm(a, b, block_si=16, block_sj=16, block_k=16)
+
+    def test_zero_matrix(self):
+        a = jnp.zeros((32, 32), jnp.float32)
+        b = rand((32, 32))
+        got = block_mm.block_mm(a, b, block_si=16, block_sj=16, block_k=16)
+        np.testing.assert_array_equal(got, jnp.zeros((32, 32)))
+
+    def test_identity(self):
+        a = jnp.eye(64, dtype=jnp.float32)
+        b = rand((64, 64))
+        got = block_mm.block_mm(a, b, block_si=32, block_sj=32, block_k=32)
+        np.testing.assert_allclose(got, b, rtol=1e-6, atol=1e-6)
+
+    @settings(deadline=None, max_examples=25)
+    @given(
+        mi=st.integers(1, 4),
+        nj=st.integers(1, 4),
+        kk=st.integers(1, 4),
+        si=st.sampled_from([8, 16, 32]),
+        sj=st.sampled_from([8, 16, 32]),
+        sk=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shapes(self, mi, nj, kk, si, sj, sk, seed):
+        a = rand((mi * si, kk * sk), seed=seed)
+        b = rand((kk * sk, nj * sj), seed=seed + 1)
+        got = block_mm.block_mm(a, b, block_si=si, block_sj=sj, block_k=sk)
+        np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+    @settings(deadline=None, max_examples=8)
+    @given(
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_dtypes(self, dtype, seed):
+        a = rand((32, 32), dtype=dtype, seed=seed)
+        b = rand((32, 32), dtype=dtype, seed=seed + 1)
+        got = block_mm.block_mm(a, b, block_si=16, block_sj=16, block_k=16)
+        want = ref.matmul(a, b)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32),
+            np.asarray(want, np.float32),
+            rtol=tol,
+            atol=tol,
+        )
+
+
+class TestRank1MM:
+    """The literal Eq. 2 dataflow kernel."""
+
+    def test_matches_ref(self):
+        a, b = rand((16, 24)), rand((24, 16), seed=3)
+        got = block_mm.rank1_mm(a, b, block_si=8, block_sj=8)
+        np.testing.assert_allclose(
+            got, ref.rank1_matmul(a, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_matches_block_mm(self):
+        a, b = rand((16, 16)), rand((16, 16), seed=4)
+        r1 = block_mm.rank1_mm(a, b, block_si=8, block_sj=8)
+        bm = block_mm.block_mm(a, b, block_si=8, block_sj=8, block_k=8)
+        np.testing.assert_allclose(r1, bm, rtol=1e-5, atol=1e-5)
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        mi=st.integers(1, 3),
+        nj=st.integers(1, 3),
+        k=st.integers(1, 24),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis(self, mi, nj, k, seed):
+        a = rand((mi * 8, k), seed=seed)
+        b = rand((k, nj * 8), seed=seed + 1)
+        got = block_mm.rank1_mm(a, b, block_si=8, block_sj=8)
+        np.testing.assert_allclose(
+            got, ref.matmul(a, b), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestRefOracle:
+    def test_rank1_equals_matmul(self):
+        a, b = rand((8, 12)), rand((12, 8), seed=5)
+        np.testing.assert_allclose(
+            ref.rank1_matmul(a, b), ref.matmul(a, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_pad_to(self):
+        x = jnp.ones((3, 5))
+        p = ref.pad_to(x, 8, 8)
+        assert p.shape == (8, 8)
+        assert float(p.sum()) == 15.0

@@ -1,0 +1,116 @@
+"""L2 correctness: padded GEMM, im2col conv lowering, Table II shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestGemm:
+    def test_exact_blocks(self):
+        a, b = rand((64, 64)), rand((64, 64), seed=1)
+        got = model.gemm(a, b, si=32, sj=32, sk=32)
+        np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_ragged_all_dims(self):
+        # None of M, K, N divisible by the blocks — Section IV padding rule.
+        a, b = rand((37, 53)), rand((53, 41), seed=1)
+        got = model.gemm(a, b, si=16, sj=16, sk=16)
+        assert got.shape == (37, 41)
+        np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_tall_skinny(self):
+        a, b = rand((200, 7)), rand((7, 3), seed=2)
+        got = model.gemm(a, b, si=64, sj=64, sk=64)
+        np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 70),
+        n=st.integers(1, 70),
+        si=st.sampled_from([8, 16, 32]),
+        sj=st.sampled_from([8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_ragged(self, m, k, n, si, sj, seed):
+        a, b = rand((m, k), seed=seed), rand((k, n), seed=seed + 1)
+        got = model.gemm(a, b, si=si, sj=sj, sk=16)
+        assert got.shape == (m, n)
+        np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+class TestPadding:
+    def test_pad_to_blocks_shapes(self):
+        a, b = rand((37, 53)), rand((53, 41))
+        ap, bp = model.pad_to_blocks(a, b, 16, 16, 16)
+        assert ap.shape == (48, 64)
+        assert bp.shape == (64, 48)
+
+    def test_pad_preserves_product(self):
+        a, b = rand((10, 12)), rand((12, 9), seed=1)
+        ap, bp = model.pad_to_blocks(a, b, 8, 8, 8)
+        full = ref.matmul(ap, bp)
+        np.testing.assert_allclose(
+            full[:10, :9], ref.matmul(a, b), rtol=1e-5, atol=1e-5
+        )
+        # Padding region contributes zeros only.
+        np.testing.assert_array_equal(np.asarray(full[10:, :]), 0.0)
+
+
+class TestIm2col:
+    def test_1x1_is_reshape(self):
+        x = rand((3, 4, 4))
+        col = model.im2col(x, 1, 1, 1, 0)
+        np.testing.assert_array_equal(col, x.reshape(3, 16))
+
+    def test_conv_matches_lax(self):
+        x = rand((3, 11, 11))
+        w = rand((8, 3, 3, 3), seed=1)
+        got = model.conv2d_as_gemm(x, w, stride=2, pad=1, si=16, sj=16, sk=16)
+        want = jax.lax.conv_general_dilated(
+            x[None], w, (2, 2), [(1, 1), (1, 1)]
+        )[0]
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        c=st.integers(1, 4),
+        hw=st.integers(5, 12),
+        f=st.integers(1, 6),
+        kh=st.sampled_from([1, 3]),
+        stride=st.sampled_from([1, 2]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_conv(self, c, hw, f, kh, stride, seed):
+        x = rand((c, hw, hw), seed=seed)
+        w = rand((f, c, kh, kh), seed=seed + 1)
+        got = model.conv2d_as_gemm(x, w, stride=stride, pad=0, si=8, sj=8, sk=8)
+        want = jax.lax.conv_general_dilated(
+            x[None], w, (stride, stride), [(0, 0), (0, 0)]
+        )[0]
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestAlexNetShapes:
+    def test_table2_triples(self):
+        shapes = model.alexnet_gemm_shapes()
+        assert shapes["conv2"] == (128, 1200, 729)
+        assert shapes["fc6"] == (128, 9216, 4096)
+        assert len(shapes) == 8
+
+    def test_conv1_shape_derivation(self):
+        # conv-1: 96 filters, 3x11x11 kernels, 227x227 input, stride 4
+        # -> M=96, K=3*11*11=363, N=55*55=3025 (Table II row 1).
+        m, k, n = model.alexnet_gemm_shapes()["conv1"]
+        assert (m, k, n) == (96, 3 * 11 * 11, 55 * 55)

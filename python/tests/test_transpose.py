@@ -1,0 +1,55 @@
+"""L1 transpose kernel (the MAC's Section III-C preprocessing) vs jnp.T."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import transpose
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+class TestTranspose:
+    def test_square_single_tile(self):
+        x = rand((16, 16))
+        got = transpose.transpose(x, tile=16)
+        np.testing.assert_array_equal(got, x.T)
+
+    def test_rectangular_grid(self):
+        x = rand((32, 64))
+        got = transpose.transpose(x, tile=16)
+        assert got.shape == (64, 32)
+        np.testing.assert_array_equal(got, x.T)
+
+    def test_rejects_unpadded(self):
+        with pytest.raises(ValueError, match="tile"):
+            transpose.transpose(rand((10, 16)), tile=16)
+
+    def test_padded_wrapper_ragged(self):
+        x = rand((37, 53))
+        got = transpose.transpose_padded(x, tile=16)
+        assert got.shape == (53, 37)
+        np.testing.assert_array_equal(got, x.T)
+
+    def test_involution(self):
+        x = rand((32, 32))
+        got = transpose.transpose(transpose.transpose(x, tile=16), tile=16)
+        np.testing.assert_array_equal(got, x)
+
+    @settings(deadline=None, max_examples=15)
+    @given(
+        m=st.integers(1, 70),
+        n=st.integers(1, 70),
+        tile=st.sampled_from([8, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_ragged(self, m, n, tile, seed):
+        x = rand((m, n), seed=seed)
+        got = transpose.transpose_padded(x, tile=tile)
+        np.testing.assert_array_equal(got, x.T)

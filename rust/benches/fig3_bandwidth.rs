@@ -1,0 +1,44 @@
+//! Fig. 3 regenerator: effective per-array memory bandwidth vs block
+//! size, for N_p in {1, 2, 4}.
+//!
+//! Prints the figure's series (the paper's two observations: BW rises
+//! with block size, falls with array count), then times the measurement
+//! itself (the DDR-model hot loop).
+
+use multi_array::ddr::{DdrConfig, DdrSim};
+use multi_array::util::Bench;
+
+fn print_figure() {
+    let cfg = DdrConfig::vc709();
+    println!("\n=== Fig. 3: effective per-array bandwidth (GB/s) ===");
+    println!(
+        "{:>8} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "Si", "Np=1", "Np=2", "Np=4", "hit(Np=1)", "hit(Np=4)"
+    );
+    for si in [8usize, 16, 32, 64, 128, 256, 512] {
+        let p1 = DdrSim::block_bandwidth(&cfg, 1, si);
+        let p2 = DdrSim::block_bandwidth(&cfg, 2, si);
+        let p4 = DdrSim::block_bandwidth(&cfg, 4, si);
+        println!(
+            "{:>8} {:>10.2} {:>10.2} {:>10.2} {:>11.1}% {:>11.1}%",
+            si,
+            p1.per_master_gbps(),
+            p2.per_master_gbps(),
+            p4.per_master_gbps(),
+            p1.row_hit_rate * 100.0,
+            p4.row_hit_rate * 100.0,
+        );
+    }
+    println!("peak = {:.1} GB/s (DDR3-1600 x64)\n", cfg.peak_gbps());
+}
+
+fn main() {
+    print_figure();
+    let cfg = DdrConfig::vc709();
+    let bench = Bench::new("fig3_bandwidth");
+    for np in [1usize, 2, 4] {
+        bench.run(&format!("block_bandwidth_np{np}_si128"), || {
+            DdrSim::block_bandwidth(&cfg, np, 128)
+        });
+    }
+}

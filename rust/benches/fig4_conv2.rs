@@ -1,0 +1,74 @@
+//! Fig. 4 regenerator: predicted execution-time bounds (Eq. 7) vs the
+//! simulated "actual" time for conv-2, across (N_p, S_i) configurations.
+//!
+//! The paper's qualitative claims this must reproduce:
+//! * the lower bound tracks the measurement when bandwidth is satisfied;
+//! * memory-bound configs sit near the upper bound;
+//! * (1, 32) beats (2, 16) even though it uses fewer arrays, because its
+//!   larger blocks reach higher effective bandwidth.
+
+use multi_array::accelerator::{Accelerator, SimOptions};
+use multi_array::analytical;
+use multi_array::cnn;
+use multi_array::config::{HardwareConfig, RunConfig};
+use multi_array::util::Bench;
+
+fn print_figure() {
+    let hw = HardwareConfig::paper();
+    let acc = Accelerator::new(hw.clone());
+    let l = cnn::layer("conv2").unwrap();
+    println!("\n=== Fig. 4: conv-2 (128*1200*729) predicted vs simulated ===");
+    println!(
+        "{:>10} {:>12} {:>12} {:>12} {:>10} {:>6}",
+        "(Np,Si)", "lower(ms)", "upper(ms)", "sim(ms)", "GFLOPS", "memB"
+    );
+    for si in [16usize, 32, 64, 128, 256] {
+        for np in analytical::feasible_nps(&hw, si) {
+            let run = RunConfig::square(np, si);
+            let p =
+                analytical::predict(&hw, &run, l.m, l.k, l.n, acc.surface()).unwrap();
+            let sim = acc.simulate(&run, l.m, l.k, l.n, &SimOptions::default()).unwrap();
+            println!(
+                "{:>10} {:>12.3} {:>12.3} {:>12.3} {:>10.1} {:>6}",
+                format!("({np},{si})"),
+                p.lower * 1e3,
+                p.upper * 1e3,
+                sim.total_secs * 1e3,
+                sim.gflops,
+                if p.memory_bound() { "yes" } else { "no" }
+            );
+        }
+    }
+
+    // The paper's crossover callout.
+    let s132 = acc
+        .simulate(&RunConfig::square(1, 32), l.m, l.k, l.n, &SimOptions::default())
+        .unwrap();
+    let s216 = acc
+        .simulate(&RunConfig::square(2, 16), l.m, l.k, l.n, &SimOptions::default())
+        .unwrap();
+    println!(
+        "\ncrossover check: (1,32) = {:.3} ms vs (2,16) = {:.3} ms  ({})\n",
+        s132.total_secs * 1e3,
+        s216.total_secs * 1e3,
+        if s132.total_secs < s216.total_secs {
+            "reproduces the paper: (1,32) wins"
+        } else {
+            "MISMATCH with the paper"
+        }
+    );
+}
+
+fn main() {
+    print_figure();
+    let hw = HardwareConfig::paper();
+    let acc = Accelerator::new(hw);
+    let l = cnn::layer("conv2").unwrap();
+    let bench = Bench::new("fig4_conv2");
+    for (np, si) in [(4usize, 64usize), (2, 128), (1, 256)] {
+        let run = RunConfig::square(np, si);
+        bench.run(&format!("simulate_np{np}_si{si}"), || {
+            acc.simulate(&run, l.m, l.k, l.n, &SimOptions::default()).unwrap()
+        });
+    }
+}

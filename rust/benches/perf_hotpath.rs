@@ -1,0 +1,69 @@
+//! Hot-path microbenchmarks for the §Perf pass: the pieces that bound
+//! end-to-end throughput of the stack.
+//!
+//! * DDR model burst loop (bounds bandwidth calibration and Fig. 3);
+//! * event-sim task loop (bounds every `simulate` call);
+//! * stepped PE array (bounds the cross-validation tests);
+//! * functional block task + WQM pop/steal (bounds the coordinator).
+
+use multi_array::accelerator::{Accelerator, SimOptions};
+use multi_array::blocking::BlockPlan;
+use multi_array::config::{HardwareConfig, RunConfig};
+use multi_array::ddr::{DdrConfig, DdrSim, StreamPattern};
+use multi_array::gemm::{self, Matrix};
+use multi_array::mpe::LinearArray;
+use multi_array::util::Bench;
+use multi_array::wqm::Wqm;
+
+fn main() {
+    let bench = Bench::new("perf_hotpath");
+
+    // DDR stream: 4096 chunks of 512 B.
+    let cfg = DdrConfig::vc709();
+    bench.run_throughput("ddr_sequential_4096x512B", 4096 * 512, || {
+        DdrSim::measure_stream(&cfg, 1, 512, 4096, StreamPattern::Sequential)
+    });
+
+    // Event-driven simulator on the two Table II extremes.
+    let acc = Accelerator::new(HardwareConfig::paper());
+    for (name, m, k, n) in
+        [("conv2", 128usize, 1200usize, 729usize), ("fc6", 128, 9216, 4096)]
+    {
+        bench.run(&format!("event_sim_{name}"), || {
+            acc.simulate(&RunConfig::square(2, 128), m, k, n, &SimOptions::default())
+                .unwrap()
+        });
+    }
+
+    // Cycle-stepped PE array, one 64^3 task.
+    let sa = Matrix::random(64, 64, 1);
+    let sb = Matrix::random(64, 64, 2);
+    let arr = LinearArray::new(64, 14);
+    bench.run_throughput("pe_array_stepped_64cubed", 2 * 64 * 64 * 64, || {
+        arr.execute_task(&sa, &sb, 64, 64)
+    });
+
+    // Functional block task (the golden engine's unit of work).
+    let a = Matrix::random(128, 256, 3);
+    let b = Matrix::random(256, 128, 4);
+    bench.run_throughput("functional_block_128x256x128", 2 * 128 * 256 * 128, || {
+        gemm::block_task(&a, &b, 0, 0, 128, 128)
+    });
+
+    // WQM drain with stealing, 4096 tasks over 4 queues.
+    let plan = BlockPlan::new(4096, 64, 4096, 64, 64);
+    bench.run("wqm_drain_4096_tasks", || {
+        let mut wqm = Wqm::from_partition(plan.partition(4));
+        let mut n = 0usize;
+        'outer: loop {
+            for q in 0..4 {
+                if wqm.pop(q).is_some() {
+                    n += 1;
+                } else if wqm.is_empty() {
+                    break 'outer;
+                }
+            }
+        }
+        n
+    });
+}

@@ -1,0 +1,48 @@
+//! Table I regenerator: post-synthesis resource utilization of the
+//! paper's (Pm=4, P=64) design on the XC7VX690T, from the calibrated
+//! resource model, plus extrapolations the paper's DSE would need.
+
+use multi_array::config::HardwareConfig;
+use multi_array::resources::{self, xc7vx690t, ResourceModel};
+use multi_array::util::Bench;
+
+fn print_table() {
+    let hw = HardwareConfig::paper();
+    let r = resources::report(&hw);
+    println!("\n=== Table I: post-synthesis resource utilization ===");
+    println!(
+        "{:<14} {:>10} {:>10} {:>12} {:>10}",
+        "Resource", "DSP48Es", "BRAMs", "Flip-Flops", "LUTs"
+    );
+    println!(
+        "{:<14} {:>10.0} {:>10.1} {:>12.0} {:>10.0}",
+        "Utilization", r.usage.dsp, r.usage.bram36, r.usage.ff, r.usage.lut
+    );
+    println!(
+        "{:<14} {:>10.2} {:>10.2} {:>12.2} {:>10.2}",
+        "percentage(%)",
+        r.percent.dsp,
+        r.percent.bram36,
+        r.percent.ff,
+        r.percent.lut
+    );
+
+    // Extrapolation: how far the multi-array design could scale.
+    let m = ResourceModel::calibrated();
+    let d = xc7vx690t();
+    println!("\nextrapolation — max P per Pm on XC7VX690T:");
+    for pm in [1usize, 2, 4, 8] {
+        println!("  Pm={pm}: max P = {}", m.max_p(pm, &d));
+    }
+    println!();
+}
+
+fn main() {
+    print_table();
+    let m = ResourceModel::calibrated();
+    let d = xc7vx690t();
+    Bench::new("table1_resources").run("resource_model_estimate", || {
+        let e = m.estimate(4, 64);
+        std::hint::black_box(e.max_fraction(&d))
+    });
+}

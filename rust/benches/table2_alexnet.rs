@@ -1,0 +1,57 @@
+//! Table II regenerator: optimal ⟨N_p, S_i⟩ per AlexNet layer and the
+//! simulated GFLOPS of the optimum vs the two pure-extension baselines
+//! (Np=4 fixed, Np=1 fixed).
+//!
+//! Shape claims this must reproduce: the optimum beats both baselines on
+//! every layer; fc layers approach peak (paper: 100.9 GFLOPS = 98.6%).
+
+use multi_array::accelerator::{Accelerator, SimOptions};
+use multi_array::cnn;
+use multi_array::config::HardwareConfig;
+use multi_array::dse;
+use multi_array::util::Bench;
+
+fn print_table() {
+    let hw = HardwareConfig::paper();
+    let acc = Accelerator::new(hw.clone());
+    println!("\n=== Table II: optimal (Np, Si) per AlexNet layer ===");
+    println!(
+        "{:>8} {:>16} {:>10} | {:>9} {:>9} {:>9} | {:>6}",
+        "Layer", "M*K*N", "Optimal", "Opt", "Np=4", "Np=1", "eff%"
+    );
+    for l in cnn::alexnet_layers() {
+        let e = dse::explore(&hw, l.m, l.k, l.n, acc.surface()).unwrap();
+        let opt = acc
+            .simulate(&e.best.run, l.m, l.k, l.n, &SimOptions::default())
+            .unwrap();
+        let b4 = dse::baseline(&hw, 4, l.m, l.k, l.n, acc.surface()).unwrap();
+        let s4 = acc.simulate(&b4.run, l.m, l.k, l.n, &SimOptions::default()).unwrap();
+        let b1 = dse::baseline(&hw, 1, l.m, l.k, l.n, acc.surface()).unwrap();
+        let s1 = acc.simulate(&b1.run, l.m, l.k, l.n, &SimOptions::default()).unwrap();
+        println!(
+            "{:>8} {:>16} {:>10} | {:>9.1} {:>9.1} {:>9.1} | {:>5.1}%",
+            l.name,
+            format!("{}*{}*{}", l.m, l.k, l.n),
+            format!("({},{})", e.best.run.np, e.best.run.si),
+            opt.gflops,
+            s4.gflops,
+            s1.gflops,
+            100.0 * opt.efficiency(&hw),
+        );
+    }
+    println!("peak = {:.1} GFLOPS\n", hw.peak_gflops());
+}
+
+fn main() {
+    print_table();
+    let hw = HardwareConfig::paper();
+    let acc = Accelerator::new(hw.clone());
+    let bench = Bench::new("table2_alexnet").samples(20);
+    for l in cnn::alexnet_layers() {
+        bench.run(&format!("dse_plus_sim_{}", l.name), || {
+            let e = dse::explore(&hw, l.m, l.k, l.n, acc.surface()).unwrap();
+            acc.simulate(&e.best.run, l.m, l.k, l.n, &SimOptions::default())
+                .unwrap()
+        });
+    }
+}

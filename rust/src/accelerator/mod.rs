@@ -1,0 +1,521 @@
+//! The integrated accelerator: MAC + WQM + MPE composed into an
+//! event-driven simulation — the "actual measurement" half of Fig. 4 and
+//! Table II, with the VC709 replaced by the crate's timing models.
+//!
+//! Granularity: one event per (array, task). For each task an array pops
+//! (stealing when its queue is dry), the simulator charges
+//!
+//! * a transfer time from Eq. 4 at the effective bandwidth of Eq. 8 —
+//!   the `BW = f(N_p, S_i)` surface measured on the DDR model, with an
+//!   optional per-array skew (asymmetric DDR routing — the inequality
+//!   the paper's work stealing exists to counter);
+//! * a compute time from the Eq. 6 closed form (validated against the
+//!   cycle-stepped PE simulation in `mpe::pe`);
+//!
+//! and overlaps them under double buffering: steady-state cost per task
+//! is `max(T_work, T_task_compute)`, plus a pipeline-fill charge of the
+//! first task's transfer.
+//!
+//! Optionally the simulator also executes every task *functionally*
+//! (through [`crate::gemm::block_task`]) so the result matrix is real and
+//! checked against the oracle in tests, and records a per-task event
+//! trace ([`trace`] renders Gantt/CSV).
+
+pub mod cycle;
+pub mod trace;
+
+use crate::analytical::BandwidthSurface;
+use crate::blocking::BlockPlan;
+use crate::config::{HardwareConfig, RunConfig};
+use crate::gemm::{self, Matrix};
+use crate::mpe::{timing::TaskTiming, ArrayGeometry};
+use crate::wqm::Wqm;
+
+/// Simulation options.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Work stealing on (the paper's WQM) or off (static partition).
+    pub stealing: bool,
+    /// Skew factors multiplying each array's effective bandwidth — models
+    /// asymmetric DDR port routing; `None` = symmetric. Used by the
+    /// work-stealing demo and ablation.
+    pub bw_skew: Option<Vec<f64>>,
+    /// Double buffering in `R_a`/the task pipeline (Section III-A). When
+    /// off, transfer and compute serialize per task — the ablation that
+    /// shows why the paper overlaps them.
+    pub double_buffering: bool,
+    /// Record a per-task event trace in the report (timeline analysis,
+    /// Gantt rendering, CSV export). Off by default: traces cost an
+    /// allocation per task.
+    pub trace: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self { stealing: true, bw_skew: None, double_buffering: true, trace: false }
+    }
+}
+
+/// One traced task execution.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub array: usize,
+    pub task_id: usize,
+    pub start_secs: f64,
+    pub end_secs: f64,
+    /// Task came from another array's queue.
+    pub stolen: bool,
+}
+
+/// Per-array outcome.
+#[derive(Debug, Clone)]
+pub struct ArrayStats {
+    pub tasks: usize,
+    pub busy_secs: f64,
+    pub finish_secs: f64,
+    pub stolen_in: u64,
+    pub stolen_out: u64,
+}
+
+/// Whole-run outcome.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub run: RunConfig,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub total_secs: f64,
+    pub gflops: f64,
+    pub arrays: Vec<ArrayStats>,
+    pub total_tasks: usize,
+    pub total_steals: u64,
+    /// Fraction of tasks whose transfer outweighed compute.
+    pub memory_bound_frac: f64,
+    /// Per-task events (only when `SimOptions::trace` is set).
+    pub trace: Vec<TraceEvent>,
+}
+
+impl SimReport {
+    /// Sustained-to-peak ratio against `2 * F_acc * P_m * P`.
+    pub fn efficiency(&self, hw: &HardwareConfig) -> f64 {
+        self.gflops / hw.peak_gflops()
+    }
+
+    /// Load imbalance: max array finish time over mean busy time.
+    pub fn imbalance(&self) -> f64 {
+        let max = self.arrays.iter().map(|a| a.finish_secs).fold(0.0, f64::max);
+        let mean = self.arrays.iter().map(|a| a.busy_secs).sum::<f64>()
+            / self.arrays.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// The simulated accelerator.
+pub struct Accelerator {
+    pub hw: HardwareConfig,
+    surface: BandwidthSurface,
+}
+
+impl Accelerator {
+    pub fn new(hw: HardwareConfig) -> Self {
+        let surface = BandwidthSurface::calibrate_for(
+            &hw.ddr,
+            &nps_of(hw.pm),
+        );
+        Self { hw, surface }
+    }
+
+    pub fn with_surface(hw: HardwareConfig, surface: BandwidthSurface) -> Self {
+        Self { hw, surface }
+    }
+
+    pub fn surface(&self) -> &BandwidthSurface {
+        &self.surface
+    }
+
+    /// Simulate one GEMM problem (timing only).
+    pub fn simulate(
+        &self,
+        run: &RunConfig,
+        m: usize,
+        k: usize,
+        n: usize,
+        opts: &SimOptions,
+    ) -> anyhow::Result<SimReport> {
+        self.run_sim(run, m, k, n, opts, None).map(|(r, _)| r)
+    }
+
+    /// Simulate and also compute `C = A x B` functionally, task by task,
+    /// in exactly the schedule order the arrays executed.
+    pub fn execute(
+        &self,
+        run: &RunConfig,
+        a: &Matrix,
+        b: &Matrix,
+        opts: &SimOptions,
+    ) -> anyhow::Result<(SimReport, Matrix)> {
+        let (report, c) = self.run_sim(
+            run,
+            a.rows,
+            a.cols,
+            b.cols,
+            opts,
+            Some((a, b)),
+        )?;
+        Ok((report, c.expect("functional mode returns C")))
+    }
+
+    fn run_sim(
+        &self,
+        run: &RunConfig,
+        m: usize,
+        k: usize,
+        n: usize,
+        opts: &SimOptions,
+        operands: Option<(&Matrix, &Matrix)>,
+    ) -> anyhow::Result<(SimReport, Option<Matrix>)> {
+        let geom = ArrayGeometry::for_run(&self.hw, run)?;
+        if let Some(skew) = &opts.bw_skew {
+            anyhow::ensure!(skew.len() == geom.np, "skew length != np");
+        }
+        let plan = BlockPlan::new(m, k, n, run.si, run.sj);
+        let mut wqm = Wqm::from_partition(plan.partition(geom.np));
+        wqm.set_stealing(opts.stealing);
+
+        let task_cycles =
+            TaskTiming::per_task(run.si, run.sj, k, self.hw.fmac_stages).total();
+        let t_task_compute = task_cycles as f64 / (self.hw.freq_mhz * 1e6);
+
+        // Effective bandwidth: f(N_p, S_i) as the paper's Eq. 8 — the
+        // *configured* array count sets the contention level (the MAC's
+        // port arbitration is fixed at configure time), optionally skewed
+        // per array to model asymmetric routing. Hoisted out of the task
+        // loop: the surface lookup interpolates a BTreeMap and dominated
+        // the per-task cost before (§Perf).
+        let bw_base = self.surface.bw(geom.np, run.si);
+        let bw_of: Vec<f64> = (0..geom.np)
+            .map(|i| match &opts.bw_skew {
+                Some(skew) => bw_base * skew[i],
+                None => bw_base,
+            })
+            .collect();
+
+        let mut c = operands.map(|(a, b)| Matrix::zeros(a.rows, b.cols));
+
+        // Per-array clocks: when each array's *compute engine* frees, and
+        // whether the first task (pipeline fill) is behind it.
+        let mut clock = vec![0.0f64; geom.np];
+        let mut busy = vec![0.0f64; geom.np];
+        let mut tasks_done = vec![0usize; geom.np];
+        let mut first = vec![true; geom.np];
+        let mut active = vec![true; geom.np];
+        let mut mem_bound_tasks = 0usize;
+        let mut trace: Vec<TraceEvent> = Vec::new();
+        let total_tasks = plan.num_tasks();
+
+        // Event loop: always advance the array whose engine frees first;
+        // that is the array whose pop (and possible steal) happens next.
+        loop {
+            let Some(a_idx) = (0..geom.np)
+                .filter(|&i| active[i])
+                .min_by(|&x, &y| clock[x].partial_cmp(&clock[y]).unwrap())
+            else {
+                break;
+            };
+            let stolen_before = wqm.stats()[a_idx].stolen_in;
+            let Some(task) = wqm.pop(a_idx) else {
+                active[a_idx] = false;
+                continue;
+            };
+            let was_stolen = wqm.stats()[a_idx].stolen_in > stolen_before;
+
+            let t_transfer = task.bytes_moved() as f64 / bw_of[a_idx];
+            if t_transfer > t_task_compute {
+                mem_bound_tasks += 1;
+            }
+
+            // Double buffering: the first task pays its full transfer
+            // before compute; thereafter the engines overlap and the
+            // slower one paces the pipeline. Without it (ablation) every
+            // task serializes load + compute.
+            let dt = if !opts.double_buffering {
+                t_transfer + t_task_compute
+            } else if first[a_idx] {
+                first[a_idx] = false;
+                t_transfer + t_task_compute
+            } else {
+                t_transfer.max(t_task_compute)
+            };
+            if opts.trace {
+                trace.push(TraceEvent {
+                    array: a_idx,
+                    task_id: task.id,
+                    start_secs: clock[a_idx],
+                    end_secs: clock[a_idx] + dt,
+                    stolen: was_stolen,
+                });
+            }
+            clock[a_idx] += dt;
+            busy[a_idx] += dt;
+            tasks_done[a_idx] += 1;
+
+            if let (Some(c), Some((a, b))) = (c.as_mut(), operands) {
+                let block =
+                    gemm::block_task(a, b, task.row0, task.col0, task.si, task.sj);
+                c.set_block(task.row0, task.col0, &block);
+            }
+        }
+
+        // The final write-back drains after the last compute: one block
+        // stream-out at the current bandwidth (small; kept for fidelity).
+        let total_secs = clock.iter().cloned().fold(0.0, f64::max);
+        let stats = wqm.stats();
+        let arrays = (0..geom.np)
+            .map(|i| ArrayStats {
+                tasks: tasks_done[i],
+                busy_secs: busy[i],
+                finish_secs: clock[i],
+                stolen_in: stats[i].stolen_in,
+                stolen_out: stats[i].stolen_out,
+            })
+            .collect::<Vec<_>>();
+        let total_steals = stats.iter().map(|s| s.stolen_in).sum();
+
+        let report = SimReport {
+            run: *run,
+            m,
+            k,
+            n,
+            total_secs,
+            gflops: plan.effective_flops() as f64 / total_secs / 1e9,
+            arrays,
+            total_tasks,
+            total_steals,
+            memory_bound_frac: mem_bound_tasks as f64 / total_tasks as f64,
+            trace,
+        };
+        Ok((report, c))
+    }
+}
+
+fn nps_of(pm: usize) -> Vec<usize> {
+    (0..)
+        .map(|e| 1usize << e)
+        .take_while(|np| *np <= pm)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn acc() -> Accelerator {
+        Accelerator::new(HardwareConfig::paper())
+    }
+
+    #[test]
+    fn all_tasks_execute() {
+        let acc = acc();
+        let r = acc
+            .simulate(&RunConfig::square(4, 64), 300, 100, 300, &SimOptions::default())
+            .unwrap();
+        let done: usize = r.arrays.iter().map(|a| a.tasks).sum();
+        assert_eq!(done, r.total_tasks);
+        assert!(r.total_secs > 0.0);
+    }
+
+    #[test]
+    fn functional_result_matches_oracle() {
+        let acc = acc();
+        let a = Matrix::random(100, 40, 1);
+        let b = Matrix::random(40, 90, 2);
+        let (_, c) = acc
+            .execute(&RunConfig::square(2, 32), &a, &b, &SimOptions::default())
+            .unwrap();
+        assert!(c.allclose(&a.matmul(&b), 1e-4));
+    }
+
+    #[test]
+    fn stealing_never_slower_with_skew() {
+        let acc = acc();
+        let skew = Some(vec![1.0, 0.4]);
+        let on = acc
+            .simulate(
+                &RunConfig::square(2, 64),
+                512,
+                512,
+                512,
+                &SimOptions { stealing: true, bw_skew: skew.clone(), ..Default::default() },
+            )
+            .unwrap();
+        let off = acc
+            .simulate(
+                &RunConfig::square(2, 64),
+                512,
+                512,
+                512,
+                &SimOptions { stealing: false, bw_skew: skew, ..Default::default() },
+            )
+            .unwrap();
+        assert!(on.total_secs <= off.total_secs * 1.0001);
+        assert!(on.total_steals > 0);
+    }
+
+    #[test]
+    fn stealing_improves_imbalance_under_skew() {
+        let acc = acc();
+        let opts_on = SimOptions { stealing: true, bw_skew: Some(vec![1.0, 0.3]), ..Default::default() };
+        let opts_off = SimOptions { stealing: false, bw_skew: Some(vec![1.0, 0.3]), ..Default::default() };
+        let run = RunConfig::square(2, 32);
+        let on = acc.simulate(&run, 1024, 256, 1024, &opts_on).unwrap();
+        let off = acc.simulate(&run, 1024, 256, 1024, &opts_off).unwrap();
+        assert!(on.imbalance() < off.imbalance());
+        assert!(on.total_secs < off.total_secs);
+    }
+
+    #[test]
+    fn gflops_below_peak() {
+        let acc = acc();
+        for (np, si) in [(1, 256), (2, 128), (4, 64)] {
+            let r = acc
+                .simulate(
+                    &RunConfig::square(np, si),
+                    128,
+                    9216,
+                    4096,
+                    &SimOptions::default(),
+                )
+                .unwrap();
+            assert!(r.gflops <= acc.hw.peak_gflops() * 1.001, "{}", r.gflops);
+            assert!(r.gflops > 0.0);
+        }
+    }
+
+    #[test]
+    fn fc6_optimal_config_is_efficient() {
+        // Paper: fc-6 at (2, 128) reaches 100.9 GFLOPS = 98.6% of peak.
+        let acc = acc();
+        let r = acc
+            .simulate(
+                &RunConfig::square(2, 128),
+                128,
+                9216,
+                4096,
+                &SimOptions::default(),
+            )
+            .unwrap();
+        assert!(
+            r.efficiency(&acc.hw) > 0.90,
+            "efficiency {} too low",
+            r.efficiency(&acc.hw)
+        );
+    }
+
+    #[test]
+    fn rejects_infeasible_config() {
+        let acc = acc();
+        assert!(acc
+            .simulate(&RunConfig::square(4, 128), 128, 128, 128, &SimOptions::default())
+            .is_err());
+    }
+
+    #[test]
+    fn memory_bound_fraction_tracks_block_size() {
+        // Small blocks starve the arrays (Fig. 4's memory-bound cases);
+        // big blocks feed them.
+        let acc = acc();
+        let small = acc
+            .simulate(&RunConfig::square(2, 16), 128, 1200, 729, &SimOptions::default())
+            .unwrap();
+        let large = acc
+            .simulate(&RunConfig::square(2, 128), 128, 1200, 729, &SimOptions::default())
+            .unwrap();
+        assert!(small.memory_bound_frac > 0.9, "{}", small.memory_bound_frac);
+        assert!(large.memory_bound_frac < 0.1, "{}", large.memory_bound_frac);
+    }
+
+    #[test]
+    fn tiny_hardware_config_simulates() {
+        let acc = Accelerator::new(HardwareConfig::tiny()); // Pm=2, P=8
+        let r = acc
+            .simulate(&RunConfig::square(2, 8), 40, 20, 40, &SimOptions::default())
+            .unwrap();
+        assert_eq!(r.total_tasks, 25);
+        assert!(r.gflops <= acc.hw.peak_gflops());
+    }
+
+    #[test]
+    fn double_buffering_never_slower() {
+        let acc = acc();
+        for (m, k, n) in [(128, 1200, 729), (128, 9216, 4096), (300, 100, 300)] {
+            let run = RunConfig::square(2, 64);
+            let on = acc.simulate(&run, m, k, n, &SimOptions::default()).unwrap();
+            let off = acc
+                .simulate(
+                    &run,
+                    m,
+                    k,
+                    n,
+                    &SimOptions { double_buffering: false, ..Default::default() },
+                )
+                .unwrap();
+            assert!(on.total_secs <= off.total_secs * 1.0001);
+            // Serialized = sum of both phases exactly.
+            assert!(off.total_secs > on.total_secs);
+        }
+    }
+
+    #[test]
+    fn skew_length_mismatch_rejected() {
+        let acc = acc();
+        let opts = SimOptions { stealing: true, bw_skew: Some(vec![1.0]), ..Default::default() };
+        assert!(acc.simulate(&RunConfig::square(2, 64), 64, 64, 64, &opts).is_err());
+    }
+
+    #[test]
+    fn report_identifies_run_and_problem() {
+        let acc = acc();
+        let run = RunConfig::square(2, 64);
+        let r = acc.simulate(&run, 100, 50, 60, &SimOptions::default()).unwrap();
+        assert_eq!(r.run, run);
+        assert_eq!((r.m, r.k, r.n), (100, 50, 60));
+        assert_eq!(r.arrays.len(), 2);
+    }
+
+    /// Conservation + numerics across the config space.
+    #[test]
+    fn prop_simulation_consistent() {
+        let acc = acc();
+        check::cases(24, |rng| {
+            let np = 1usize << rng.range(0, 3);
+            let si = 1usize << rng.range(4, 7);
+            let (m, k, n) = (rng.range(1, 300), rng.range(1, 100), rng.range(1, 300));
+            let run = RunConfig::square(np, si);
+            let opts = SimOptions { stealing: rng.bool(), bw_skew: None, ..Default::default() };
+            let r = acc.simulate(&run, m, k, n, &opts).unwrap();
+            let done: usize = r.arrays.iter().map(|a| a.tasks).sum();
+            assert_eq!(done, r.total_tasks);
+            assert!(r.total_secs > 0.0);
+            assert!(r.gflops <= acc.hw.peak_gflops() * 1.001);
+        });
+    }
+
+    #[test]
+    fn prop_functional_always_correct() {
+        let acc = acc();
+        check::cases(24, |rng| {
+            let (m, k, n) = (rng.range(1, 80), rng.range(1, 40), rng.range(1, 80));
+            let a = Matrix::random(m, k, rng.next_u64());
+            let b = Matrix::random(k, n, rng.next_u64());
+            let run = RunConfig::square(2, 1usize << rng.range(3, 6));
+            let opts = SimOptions { stealing: rng.bool(), bw_skew: None, ..Default::default() };
+            let (_, c) = acc.execute(&run, &a, &b, &opts).unwrap();
+            assert!(c.allclose(&a.matmul(&b), 1e-3));
+        });
+    }
+}

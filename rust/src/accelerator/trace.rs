@@ -1,0 +1,115 @@
+//! Trace rendering: turn a [`super::SimReport`]'s event trace into an
+//! ASCII Gantt chart or CSV for offline analysis. The Gantt makes the
+//! work-stealing behaviour visible at a glance: stolen tasks render as
+//! `s`, locally-queued ones as `#`, idle as `.`.
+
+use super::SimReport;
+
+/// ASCII Gantt: one row per array, `width` columns of wall-clock time.
+/// Requires the report to carry a trace (`SimOptions::trace = true`).
+pub fn gantt(report: &SimReport, width: usize) -> String {
+    assert!(width >= 10, "gantt needs at least 10 columns");
+    if report.trace.is_empty() {
+        return String::from("(no trace recorded — set SimOptions::trace)\n");
+    }
+    let total = report.total_secs;
+    let np = report.arrays.len();
+    let mut rows = vec![vec!['.'; width]; np];
+    for ev in &report.trace {
+        let c0 = ((ev.start_secs / total) * width as f64) as usize;
+        let c1 = (((ev.end_secs / total) * width as f64).ceil() as usize).min(width);
+        let ch = if ev.stolen { 's' } else { '#' };
+        for cell in rows[ev.array][c0.min(width - 1)..c1.max(c0 + 1).min(width)]
+            .iter_mut()
+        {
+            *cell = ch;
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in rows.iter().enumerate() {
+        out.push_str(&format!("array {i} |"));
+        out.extend(row.iter());
+        out.push_str("|\n");
+    }
+    out.push_str(&format!(
+        "         0{:>width$}\n",
+        format!("{:.3} ms", total * 1e3),
+        width = width
+    ));
+    out
+}
+
+/// CSV export: `array,task_id,start_secs,end_secs,stolen` per event.
+pub fn to_csv(report: &SimReport) -> String {
+    let mut out = String::from("array,task_id,start_secs,end_secs,stolen\n");
+    for ev in &report.trace {
+        out.push_str(&format!(
+            "{},{},{:.9},{:.9},{}\n",
+            ev.array, ev.task_id, ev.start_secs, ev.end_secs, ev.stolen
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accelerator::{Accelerator, SimOptions};
+    use crate::config::{HardwareConfig, RunConfig};
+
+    fn traced_report(stealing: bool) -> SimReport {
+        let acc = Accelerator::new(HardwareConfig::paper());
+        let opts = SimOptions {
+            stealing,
+            bw_skew: Some(vec![1.0, 0.25]),
+            trace: true,
+            ..Default::default()
+        };
+        acc.simulate(&RunConfig::square(2, 64), 512, 128, 512, &opts).unwrap()
+    }
+
+    #[test]
+    fn trace_covers_every_task() {
+        let r = traced_report(true);
+        assert_eq!(r.trace.len(), r.total_tasks);
+        // Events are well-formed and within the run window.
+        for ev in &r.trace {
+            assert!(ev.start_secs >= 0.0 && ev.end_secs <= r.total_secs * 1.0001);
+            assert!(ev.end_secs > ev.start_secs);
+        }
+    }
+
+    #[test]
+    fn stolen_events_marked_only_with_stealing() {
+        let on = traced_report(true);
+        assert!(on.trace.iter().any(|e| e.stolen));
+        let off = traced_report(false);
+        assert!(off.trace.iter().all(|e| !e.stolen));
+    }
+
+    #[test]
+    fn gantt_renders_rows_and_steals() {
+        let r = traced_report(true);
+        let g = gantt(&r, 60);
+        assert_eq!(g.lines().count(), 3); // 2 arrays + time axis
+        assert!(g.contains('#'));
+        assert!(g.contains('s'));
+    }
+
+    #[test]
+    fn gantt_without_trace_is_graceful() {
+        let acc = Accelerator::new(HardwareConfig::paper());
+        let r = acc
+            .simulate(&RunConfig::square(2, 64), 128, 64, 128, &SimOptions::default())
+            .unwrap();
+        assert!(gantt(&r, 40).contains("no trace"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let r = traced_report(true);
+        let csv = to_csv(&r);
+        assert!(csv.starts_with("array,task_id"));
+        assert_eq!(csv.lines().count(), r.total_tasks + 1);
+    }
+}

@@ -1,0 +1,137 @@
+//! The effective-bandwidth surface `BW = f(N_p, S_i)` — Eq. 8.
+//!
+//! The paper quantifies `f` empirically (Fig. 3) by measuring the average
+//! effective bandwidth of one PE array against block size and array
+//! count. We do the same measurement against the DDR model once, cache
+//! the grid, and interpolate log-linearly in `S_i` between grid points
+//! (bandwidth varies smoothly with burst length).
+
+use std::collections::BTreeMap;
+
+use crate::ddr::{DdrConfig, DdrSim};
+
+/// Grid of `S_i` sample points (powers of two, the paper's sweep).
+pub const SI_GRID: [usize; 9] = [4, 8, 16, 32, 64, 128, 256, 512, 1024];
+
+/// Calibrated per-array bandwidth surface (bytes/s).
+#[derive(Debug, Clone)]
+pub struct BandwidthSurface {
+    /// np -> (si -> bytes/s), measured.
+    grid: BTreeMap<usize, BTreeMap<usize, f64>>,
+}
+
+impl BandwidthSurface {
+    /// Measure the Fig. 3 grid on the DDR model for `np` in {1, 2, 4}.
+    pub fn calibrate(ddr: &DdrConfig) -> Self {
+        Self::calibrate_for(ddr, &[1, 2, 4])
+    }
+
+    pub fn calibrate_for(ddr: &DdrConfig, nps: &[usize]) -> Self {
+        let mut grid = BTreeMap::new();
+        for &np in nps {
+            let mut row = BTreeMap::new();
+            for &si in &SI_GRID {
+                row.insert(si, DdrSim::block_bandwidth(ddr, np, si).per_master);
+            }
+            grid.insert(np, row);
+        }
+        Self { grid }
+    }
+
+    /// Build from explicit measurements (e.g. replaying the paper's own
+    /// Fig. 3 numbers instead of the DDR model).
+    pub fn from_points(points: &[(usize, usize, f64)]) -> Self {
+        let mut grid: BTreeMap<usize, BTreeMap<usize, f64>> = BTreeMap::new();
+        for &(np, si, bw) in points {
+            grid.entry(np).or_default().insert(si, bw);
+        }
+        Self { grid }
+    }
+
+    /// Per-array effective bandwidth for `(np, si)`, bytes/s.
+    /// `np` snaps to the nearest calibrated array count; `si` interpolates
+    /// linearly between grid points (clamped at the ends).
+    pub fn bw(&self, np: usize, si: usize) -> f64 {
+        let row = self
+            .grid
+            .iter()
+            .min_by_key(|(k, _)| k.abs_diff(np))
+            .map(|(_, v)| v)
+            .expect("empty bandwidth surface");
+        let (&lo_si, &lo_bw) = match row.range(..=si).next_back() {
+            Some(kv) => kv,
+            None => return *row.values().next().unwrap(),
+        };
+        let (&hi_si, &hi_bw) = match row.range(si..).next() {
+            Some(kv) => kv,
+            None => return lo_bw,
+        };
+        if hi_si == lo_si {
+            return lo_bw;
+        }
+        let t = (si - lo_si) as f64 / (hi_si - lo_si) as f64;
+        lo_bw + t * (hi_bw - lo_bw)
+    }
+
+    /// The calibrated grid, for reports and the Fig. 3 bench.
+    pub fn points(&self) -> Vec<(usize, usize, f64)> {
+        self.grid
+            .iter()
+            .flat_map(|(&np, row)| row.iter().map(move |(&si, &bw)| (np, si, bw)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn surface() -> BandwidthSurface {
+        BandwidthSurface::calibrate(&DdrConfig::vc709())
+    }
+
+    #[test]
+    fn fig3_shape_monotone_in_si() {
+        let s = surface();
+        for np in [1, 2, 4] {
+            assert!(s.bw(np, 16) < s.bw(np, 64));
+            assert!(s.bw(np, 64) < s.bw(np, 256));
+        }
+    }
+
+    #[test]
+    fn fig3_shape_declines_with_np() {
+        let s = surface();
+        for si in [16, 64, 256] {
+            assert!(s.bw(1, si) > s.bw(2, si));
+            assert!(s.bw(2, si) > s.bw(4, si));
+        }
+    }
+
+    #[test]
+    fn interpolation_between_grid_points() {
+        let s = surface();
+        let mid = s.bw(2, 96);
+        assert!(mid > s.bw(2, 64) && mid < s.bw(2, 128));
+    }
+
+    #[test]
+    fn clamps_outside_grid() {
+        let s = surface();
+        assert_eq!(s.bw(2, 1), s.bw(2, 4));
+        assert_eq!(s.bw(2, 100_000), s.bw(2, 1024));
+    }
+
+    #[test]
+    fn np_snaps_to_nearest() {
+        let s = surface();
+        assert_eq!(s.bw(3, 64), s.bw(2, 64)); // ties break low
+    }
+
+    #[test]
+    fn from_points_roundtrip() {
+        let s = BandwidthSurface::from_points(&[(1, 64, 2e9), (1, 128, 3e9)]);
+        assert_eq!(s.bw(1, 64), 2e9);
+        assert_eq!(s.bw(1, 96), 2.5e9);
+    }
+}

@@ -1,0 +1,275 @@
+//! The analytical performance model — Section IV, Eqs. 3–9.
+//!
+//! Given a problem `(M, K, N)`, a hardware config and a run config
+//! `⟨N_p, S_i⟩`, the model predicts the per-array workload (Eq. 3), the
+//! data-transfer time (Eqs. 4–5, using the effective bandwidth surface
+//! `BW = f(N_p, S_i)` of Eq. 8 measured on the DDR model), the compute
+//! time (Eq. 6) and the `T_total` bounds of Eq. 7. Eq. 9 prunes the
+//! design space: chaining trades array count for array length, so `S_i`
+//! caps the feasible `N_p`.
+
+pub mod bandwidth;
+
+pub use bandwidth::BandwidthSurface;
+
+
+use crate::blocking::BlockPlan;
+use crate::config::{HardwareConfig, RunConfig};
+use crate::mpe::timing::TaskTiming;
+
+/// Everything Eqs. 3–7 say about one `(problem, config)` pair.
+#[derive(Debug, Clone, Copy)]
+pub struct Prediction {
+    /// Tasks per array (Eq. 3).
+    pub n_work: usize,
+    /// Effective per-array bandwidth used (Eq. 8), bytes/s.
+    pub bw: f64,
+    /// Seconds to move one task's data (Eq. 4).
+    pub t_work: f64,
+    /// Per-array transfer time (Eq. 5).
+    pub t_trans: f64,
+    /// Per-array compute time (Eq. 6).
+    pub t_compute: f64,
+    /// Eq. 7 bounds on `T_total`.
+    pub lower: f64,
+    pub upper: f64,
+}
+
+impl Prediction {
+    /// Overlap estimate: with double buffering, steady state is governed
+    /// by the slower of the two engines. Always within the Eq. 7 bounds;
+    /// this is what the DSE ranks by and what Fig. 4's "estimated" series
+    /// brackets.
+    pub fn t_overlap(&self) -> f64 {
+        self.t_compute.max(self.t_trans)
+    }
+
+    /// Is this configuration memory-bound (transfer dominates compute)?
+    pub fn memory_bound(&self) -> bool {
+        self.t_trans > self.t_compute
+    }
+
+    /// Bandwidth one array *needs* for full overlap (bytes/s): move one
+    /// task's bytes in one task's compute time.
+    pub fn required_bw(&self) -> f64 {
+        if self.t_compute == 0.0 {
+            return f64::INFINITY;
+        }
+        self.t_trans / self.t_compute * self.bw
+    }
+
+    /// GFLOPS estimates for a problem with `flops` useful FLOPs.
+    pub fn gflops_from(&self, flops: u64) -> f64 {
+        flops as f64 / self.t_overlap() / 1e9
+    }
+}
+
+/// Eq. 3: average sub-block multiplications per array.
+pub fn n_work(m: usize, n: usize, si: usize, sj: usize, np: usize) -> usize {
+    (m.div_ceil(si) * n.div_ceil(sj)).div_ceil(np)
+}
+
+/// Eq. 4: seconds to load `SA_i`, `SB_j` and write `C_ij` at bandwidth
+/// `bw` (bytes/s).
+pub fn t_work(si: usize, sj: usize, k: usize, bw: f64) -> f64 {
+    4.0 * (si as f64 * k as f64 + sj as f64 * k as f64 + si as f64 * sj as f64) / bw
+}
+
+/// Full model evaluation, Eqs. 3–7.
+pub fn predict(
+    hw: &HardwareConfig,
+    run: &RunConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+) -> anyhow::Result<Prediction> {
+    run.validate(hw)?;
+    let nw = n_work(m, n, run.si, run.sj, run.np);
+    let bw = surface.bw(run.np, run.si);
+    let tw = t_work(run.si, run.sj, k, bw);
+    let t_trans = nw as f64 * tw;
+    let t_compute = nw as f64
+        * TaskTiming::per_task(run.si, run.sj, k, hw.fmac_stages).total() as f64
+        / (hw.freq_mhz * 1e6);
+    Ok(Prediction {
+        n_work: nw,
+        bw,
+        t_work: tw,
+        t_trans,
+        t_compute,
+        lower: t_compute,
+        upper: t_trans + t_compute,
+    })
+}
+
+/// Eq. 9: the feasible `N_p` values for a block size `S_i`, given the
+/// hardware's `P_m` and `P`. An `N_p`-array run chains `P_m / N_p` base
+/// arrays into each logical array of `P_m * P / N_p` PEs, which must hold
+/// at least `S_i` PEs.
+pub fn feasible_nps(hw: &HardwareConfig, si: usize) -> Vec<usize> {
+    (0..)
+        .map(|e| 1usize << e)
+        .take_while(|np| *np <= hw.pm)
+        .filter(|np| hw.pm % np == 0 && si <= hw.total_pes() / np)
+        .collect()
+}
+
+/// GFLOPS the paper reports: useful FLOPs of the *problem* over the
+/// whole-accelerator time estimate.
+pub fn estimated_gflops(
+    hw: &HardwareConfig,
+    run: &RunConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+) -> anyhow::Result<f64> {
+    let p = predict(hw, run, m, k, n, surface)?;
+    let plan = BlockPlan::new(m, k, n, run.si, run.sj);
+    Ok(p.gflops_from(plan.effective_flops()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn surface() -> BandwidthSurface {
+        BandwidthSurface::calibrate(&HardwareConfig::paper().ddr)
+    }
+
+    #[test]
+    fn eq3_matches_paper_conv2() {
+        // conv-2 at (2, 128): ceil(128/128)*ceil(729/128) = 6 tasks, 3/array.
+        assert_eq!(n_work(128, 729, 128, 128, 2), 3);
+        assert_eq!(n_work(128, 729, 128, 128, 4), 2);
+        assert_eq!(n_work(128, 729, 128, 128, 1), 6);
+    }
+
+    #[test]
+    fn eq4_byte_count() {
+        let bw = 1e9;
+        let t = t_work(128, 128, 1200, bw);
+        let bytes = 4.0 * (128.0 * 1200.0 + 128.0 * 1200.0 + 128.0 * 128.0);
+        assert!((t - bytes / bw).abs() < 1e-15);
+    }
+
+    #[test]
+    fn eq7_bounds_order() {
+        let hw = HardwareConfig::paper();
+        let s = surface();
+        let p = predict(&hw, &RunConfig::square(2, 128), 128, 1200, 729, &s).unwrap();
+        assert!(p.lower <= p.t_overlap());
+        assert!(p.t_overlap() <= p.upper);
+        assert!(p.lower > 0.0);
+    }
+
+    #[test]
+    fn eq9_pruning() {
+        let hw = HardwareConfig::paper(); // Pm=4, P=64
+        assert_eq!(feasible_nps(&hw, 32), vec![1, 2, 4]);
+        assert_eq!(feasible_nps(&hw, 64), vec![1, 2, 4]);
+        assert_eq!(feasible_nps(&hw, 65), vec![1, 2]);
+        assert_eq!(feasible_nps(&hw, 128), vec![1, 2]);
+        assert_eq!(feasible_nps(&hw, 129), vec![1]);
+        assert_eq!(feasible_nps(&hw, 256), vec![1]);
+        assert_eq!(feasible_nps(&hw, 257), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn small_blocks_are_memory_bound() {
+        // The Fig. 4 observation: (2, 16) on conv-2 is memory-bound.
+        let hw = HardwareConfig::paper();
+        let s = surface();
+        let p16 = predict(&hw, &RunConfig::square(2, 16), 128, 1200, 729, &s).unwrap();
+        assert!(p16.memory_bound());
+        let p128 = predict(&hw, &RunConfig::square(2, 128), 128, 1200, 729, &s).unwrap();
+        assert!(!p128.memory_bound() || p128.t_trans < 1.5 * p128.t_compute);
+    }
+
+    #[test]
+    fn gflops_reasonable_for_fc6() {
+        // fc-6 at the paper's optimum (2, 128) should approach the
+        // 102.4 GFLOPS peak (paper reports 100.9 at 98.6% efficiency).
+        let hw = HardwareConfig::paper();
+        let s = surface();
+        let g = estimated_gflops(&hw, &RunConfig::square(2, 128), 128, 9216, 4096, &s)
+            .unwrap();
+        assert!(g > 80.0 && g <= hw.peak_gflops() * 1.01, "{g}");
+    }
+
+    #[test]
+    fn required_bw_marks_the_overlap_break_even() {
+        let hw = HardwareConfig::paper();
+        let s = surface();
+        let p = predict(&hw, &RunConfig::square(2, 128), 128, 1200, 729, &s).unwrap();
+        // required_bw is the bandwidth at which t_trans == t_compute:
+        // re-evaluating t_work at that bandwidth must equal t_compute/n.
+        let t_at_required = t_work(128, 128, 1200, p.required_bw());
+        let t_compute_per_task = p.t_compute / p.n_work as f64;
+        assert!((t_at_required - t_compute_per_task).abs() / t_compute_per_task < 1e-9);
+    }
+
+    #[test]
+    fn gflops_from_is_flops_over_overlap() {
+        let hw = HardwareConfig::paper();
+        let s = surface();
+        let p = predict(&hw, &RunConfig::square(2, 128), 128, 9216, 4096, &s).unwrap();
+        let flops = 2u64 * 128 * 9216 * 4096;
+        let g = p.gflops_from(flops);
+        assert!((g - flops as f64 / p.t_overlap() / 1e9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn feasible_nps_respects_tiny_hardware() {
+        let hw = HardwareConfig::tiny(); // Pm=2, P=8 -> 16 PEs
+        assert_eq!(feasible_nps(&hw, 8), vec![1, 2]);
+        assert_eq!(feasible_nps(&hw, 9), vec![1]);
+        assert_eq!(feasible_nps(&hw, 16), vec![1]);
+        assert_eq!(feasible_nps(&hw, 17), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn larger_si_needs_less_bandwidth_per_flop() {
+        // Eq. 4 / Eq. 6: bytes per task ~ 2*Si*K, flops ~ 2*Si^2*K —
+        // doubling Si halves bytes-per-flop, the root of Fig. 4's shape.
+        let bw = 1e9;
+        let per_flop =
+            |si: usize| t_work(si, si, 1000, bw) / (2.0 * (si * si * 1000) as f64);
+        assert!(per_flop(128) < per_flop(64));
+        assert!(per_flop(64) < per_flop(32));
+    }
+
+    #[test]
+    fn prop_bounds_always_ordered() {
+        let hw = HardwareConfig::paper();
+        let s = surface();
+        check::cases(48, |rng| {
+            let np = 1usize << rng.range(0, 3);
+            let si = 1usize << rng.range(4, 8);
+            if si > hw.total_pes() / np {
+                return;
+            }
+            let (m, k, n) =
+                (rng.range(1, 2000), rng.range(1, 4000), rng.range(1, 2000));
+            let p = predict(&hw, &RunConfig::square(np, si), m, k, n, &s).unwrap();
+            assert!(p.lower <= p.upper);
+            assert!(p.lower <= p.t_overlap() && p.t_overlap() <= p.upper);
+            assert!(p.t_work > 0.0);
+        });
+    }
+
+    #[test]
+    fn prop_n_work_eq3_identity() {
+        check::cases(48, |rng| {
+            let (m, n) = (rng.range(1, 3000), rng.range(1, 3000));
+            let si = rng.range(1, 300);
+            let np = rng.range(1, 5);
+            let nw = n_work(m, n, si, si, np);
+            let tasks = m.div_ceil(si) * n.div_ceil(si);
+            assert!(nw * np >= tasks);
+            assert!(nw <= tasks);
+        });
+    }
+}

@@ -1,0 +1,263 @@
+//! Workload partitioning: split `C = A x B` into the sub-block tasks the
+//! WQM distributes over the PE arrays (Section II's blocked algorithm).
+//!
+//! A is split into `ceil(M/S_i)` row blocks `SA_i`, B into `ceil(N/S_j)`
+//! column blocks `SB_j`; every pair `(i, j)` is one task producing the
+//! `S_i x S_j` block `C_ij`. Ragged edges are padded with zeros in memory
+//! (Section IV) but the task remembers its *effective* extent so the
+//! functional model writes only real elements back.
+
+
+/// One sub-block task `C_ij = SA_i x SB_j` — the WQM's queue element and
+/// the unit of work stealing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockTask {
+    /// Sequential task id (row-major over the (i, j) grid).
+    pub id: usize,
+    /// Block row index `i`.
+    pub bi: usize,
+    /// Block column index `j`.
+    pub bj: usize,
+    /// Element offset of the block in C (top-left corner).
+    pub row0: usize,
+    pub col0: usize,
+    /// Nominal (padded) block shape = (S_i, S_j).
+    pub si: usize,
+    pub sj: usize,
+    /// Effective extent before the matrix edge (<= si, <= sj).
+    pub rows: usize,
+    pub cols: usize,
+    /// Shared contraction depth K.
+    pub k: usize,
+}
+
+impl BlockTask {
+    /// FLOPs of the padded task (what the PE array actually executes:
+    /// zero-padded lanes still occupy pipeline slots).
+    pub fn padded_flops(&self) -> u64 {
+        2 * self.si as u64 * self.sj as u64 * self.k as u64
+    }
+
+    /// FLOPs that contribute to the un-padded result.
+    pub fn effective_flops(&self) -> u64 {
+        2 * self.rows as u64 * self.cols as u64 * self.k as u64
+    }
+
+    /// Bytes moved per Eq. 4: load SA_i + SB_j, write back C_ij (FP32).
+    pub fn bytes_moved(&self) -> u64 {
+        4 * (self.si as u64 * self.k as u64
+            + self.sj as u64 * self.k as u64
+            + self.si as u64 * self.sj as u64)
+    }
+}
+
+/// The full task grid for one GEMM problem.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockPlan {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub si: usize,
+    pub sj: usize,
+}
+
+impl BlockPlan {
+    pub fn new(m: usize, k: usize, n: usize, si: usize, sj: usize) -> Self {
+        assert!(m > 0 && k > 0 && n > 0, "degenerate problem");
+        assert!(si > 0 && sj > 0, "degenerate block");
+        Self { m, k, n, si, sj }
+    }
+
+    /// `ceil(M / S_i)` — row blocks of A.
+    pub fn blocks_i(&self) -> usize {
+        self.m.div_ceil(self.si)
+    }
+
+    /// `ceil(N / S_j)` — column blocks of B.
+    pub fn blocks_j(&self) -> usize {
+        self.n.div_ceil(self.sj)
+    }
+
+    /// Total task count `ceil(M/S_i) * ceil(N/S_j)`.
+    pub fn num_tasks(&self) -> usize {
+        self.blocks_i() * self.blocks_j()
+    }
+
+    /// Average tasks per array, Eq. 3.
+    pub fn n_work(&self, np: usize) -> usize {
+        self.num_tasks().div_ceil(np)
+    }
+
+    pub fn task(&self, id: usize) -> BlockTask {
+        assert!(id < self.num_tasks(), "task id out of range");
+        let bj_count = self.blocks_j();
+        let bi = id / bj_count;
+        let bj = id % bj_count;
+        let row0 = bi * self.si;
+        let col0 = bj * self.sj;
+        BlockTask {
+            id,
+            bi,
+            bj,
+            row0,
+            col0,
+            si: self.si,
+            sj: self.sj,
+            rows: self.si.min(self.m - row0),
+            cols: self.sj.min(self.n - col0),
+            k: self.k,
+        }
+    }
+
+    pub fn tasks(&self) -> impl Iterator<Item = BlockTask> + '_ {
+        (0..self.num_tasks()).map(|id| self.task(id))
+    }
+
+    /// Initial static partition: round-robin tasks over `np` queues (the
+    /// WQM's starting state before any stealing happens).
+    pub fn partition(&self, np: usize) -> Vec<Vec<BlockTask>> {
+        let mut queues = vec![Vec::new(); np];
+        for t in self.tasks() {
+            queues[t.id % np].push(t);
+        }
+        queues
+    }
+
+    /// Total bytes moved over the whole problem (all tasks, Eq. 4/5).
+    pub fn total_bytes(&self) -> u64 {
+        self.tasks().map(|t| t.bytes_moved()).sum()
+    }
+
+    /// Effective (un-padded) FLOPs of the whole problem: 2 M K N.
+    pub fn effective_flops(&self) -> u64 {
+        2 * self.m as u64 * self.k as u64 * self.n as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+    use std::collections::HashSet;
+
+    #[test]
+    fn exact_grid() {
+        let p = BlockPlan::new(256, 100, 512, 64, 128);
+        assert_eq!(p.blocks_i(), 4);
+        assert_eq!(p.blocks_j(), 4);
+        assert_eq!(p.num_tasks(), 16);
+    }
+
+    #[test]
+    fn ragged_grid_rounds_up() {
+        let p = BlockPlan::new(100, 10, 100, 64, 64);
+        assert_eq!(p.blocks_i(), 2);
+        assert_eq!(p.blocks_j(), 2);
+        let t = p.task(3);
+        assert_eq!((t.rows, t.cols), (36, 36));
+        assert_eq!((t.si, t.sj), (64, 64));
+    }
+
+    #[test]
+    fn n_work_eq3() {
+        // Paper example: conv-2 (M=128, N=729) at Si=Sj=128:
+        // ceil(128/128) * ceil(729/128) = 1 * 6 = 6 tasks; Np=2 -> 3 each.
+        let p = BlockPlan::new(128, 1200, 729, 128, 128);
+        assert_eq!(p.num_tasks(), 6);
+        assert_eq!(p.n_work(2), 3);
+        assert_eq!(p.n_work(4), 2);
+    }
+
+    #[test]
+    fn task_bytes_eq4() {
+        let p = BlockPlan::new(128, 1200, 729, 128, 128);
+        let t = p.task(0);
+        // 4 * (Si*K + Sj*K + Si*Sj)
+        assert_eq!(t.bytes_moved(), 4 * (128 * 1200 + 128 * 1200 + 128 * 128));
+    }
+
+    #[test]
+    fn partition_is_balanced_and_complete() {
+        let p = BlockPlan::new(300, 50, 300, 64, 64);
+        let queues = p.partition(4);
+        let total: usize = queues.iter().map(Vec::len).sum();
+        assert_eq!(total, p.num_tasks());
+        let (min, max) = (
+            queues.iter().map(Vec::len).min().unwrap(),
+            queues.iter().map(Vec::len).max().unwrap(),
+        );
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn prop_tasks_tile_c_exactly() {
+        // Every element of C belongs to exactly one task.
+        check::cases(64, |rng| {
+            let (m, n) = (rng.range(1, 200), rng.range(1, 200));
+            let (si, sj) = (rng.range(1, 70), rng.range(1, 70));
+            let p = BlockPlan::new(m, 7, n, si, sj);
+            let mut covered = vec![0u8; m * n];
+            for t in p.tasks() {
+                for r in t.row0..t.row0 + t.rows {
+                    for c in t.col0..t.col0 + t.cols {
+                        covered[r * n + c] += 1;
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&v| v == 1));
+        });
+    }
+
+    #[test]
+    fn prop_ids_unique_and_dense() {
+        check::cases(64, |rng| {
+            let (m, n) = (rng.range(1, 150), rng.range(1, 150));
+            let (si, sj) = (rng.range(1, 64), rng.range(1, 64));
+            let p = BlockPlan::new(m, 3, n, si, sj);
+            let ids: HashSet<usize> = p.tasks().map(|t| t.id).collect();
+            assert_eq!(ids.len(), p.num_tasks());
+            assert!(ids.iter().all(|&id| id < p.num_tasks()));
+        });
+    }
+
+    #[test]
+    fn prop_partition_conserves_tasks() {
+        check::cases(64, |rng| {
+            let (m, n) = (rng.range(1, 150), rng.range(1, 150));
+            let (si, sj) = (rng.range(1, 64), rng.range(1, 64));
+            let np = rng.range(1, 8);
+            let p = BlockPlan::new(m, 5, n, si, sj);
+            let queues = p.partition(np);
+            let mut ids: Vec<usize> =
+                queues.iter().flatten().map(|t| t.id).collect();
+            ids.sort_unstable();
+            let want: Vec<usize> = (0..p.num_tasks()).collect();
+            assert_eq!(ids, want);
+        });
+    }
+
+    #[test]
+    fn prop_effective_flops_bounded_by_padded() {
+        check::cases(64, |rng| {
+            let (m, k, n) = (rng.range(1, 100), rng.range(1, 50), rng.range(1, 100));
+            let (si, sj) = (rng.range(1, 40), rng.range(1, 40));
+            let p = BlockPlan::new(m, k, n, si, sj);
+            for t in p.tasks() {
+                assert!(t.effective_flops() <= t.padded_flops());
+            }
+            let eff: u64 = p.tasks().map(|t| t.effective_flops()).sum();
+            assert_eq!(eff, p.effective_flops());
+        });
+    }
+
+    #[test]
+    fn prop_n_work_covers_all() {
+        check::cases(64, |rng| {
+            let (m, n) = (rng.range(1, 200), rng.range(1, 200));
+            let si = rng.range(1, 64);
+            let np = rng.range(1, 5);
+            let p = BlockPlan::new(m, 3, n, si, si);
+            assert!(p.n_work(np) * np >= p.num_tasks());
+        });
+    }
+}

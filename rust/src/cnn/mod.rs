@@ -1,0 +1,182 @@
+//! AlexNet-as-GEMM: the paper's case-study workload (Section V, Table II).
+//!
+//! Each conv layer is lowered to one GEMM via im2col (Cong & Xiao, ref.
+//! [14]): `M` = output channels, `K` = in_channels x kh x kw, `N` =
+//! output pixels. Fully-connected layers are GEMMs with the paper's batch
+//! of 128. The derived `(M, K, N)` triples are asserted against Table II
+//! and against the Python model's `ALEXNET_GEMM_SHAPES` (via the artifact
+//! manifest) so all three layers of the stack agree on the workload.
+//!
+//! [`schedule`] extends the per-layer view to whole-network scheduling
+//! with reconfiguration costs.
+
+pub mod schedule;
+
+
+/// Convolution geometry of one CNN layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    pub in_channels: usize,
+    pub in_hw: usize, // square feature maps
+    pub out_channels: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Grouped convolution factor (AlexNet's two-GPU split).
+    pub groups: usize,
+}
+
+impl ConvShape {
+    pub fn out_hw(&self) -> usize {
+        (self.in_hw + 2 * self.pad - self.kernel) / self.stride + 1
+    }
+
+    /// im2col GEMM dims for ONE group: (M, K, N).
+    pub fn gemm_dims(&self) -> (usize, usize, usize) {
+        let m = self.out_channels / self.groups;
+        let k = (self.in_channels / self.groups) * self.kernel * self.kernel;
+        let n = self.out_hw() * self.out_hw();
+        (m, k, n)
+    }
+}
+
+/// One workload row of Table II.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GemmLayer {
+    pub name: &'static str,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl GemmLayer {
+    pub fn flops(&self) -> u64 {
+        2 * self.m as u64 * self.k as u64 * self.n as u64
+    }
+}
+
+/// The eight AlexNet layers exactly as Table II lists them (`M*K*N`).
+///
+/// Notes on the derivation, to keep the provenance auditable:
+/// * conv-1: 96 filters of 3x11x11 on 227x227 stride 4 -> 96 * 363 * 55^2.
+/// * conv-2/4/5 are grouped (2 GPUs in the original net); the paper lists
+///   the per-group GEMM (e.g. conv-2: 256/2=128 filters, K=48*5*5=1200).
+/// * fc layers: batch 128 -> M=128, K=in features, N=out features.
+pub fn alexnet_layers() -> Vec<GemmLayer> {
+    vec![
+        GemmLayer { name: "conv1", m: 96, k: 363, n: 3025 },
+        GemmLayer { name: "conv2", m: 128, k: 1200, n: 729 },
+        GemmLayer { name: "conv3", m: 384, k: 2304, n: 169 },
+        GemmLayer { name: "conv4", m: 192, k: 1728, n: 169 },
+        GemmLayer { name: "conv5", m: 128, k: 1728, n: 169 },
+        GemmLayer { name: "fc6", m: 128, k: 9216, n: 4096 },
+        GemmLayer { name: "fc7", m: 128, k: 4096, n: 4096 },
+        GemmLayer { name: "fc8", m: 128, k: 4096, n: 1000 },
+    ]
+}
+
+pub fn layer(name: &str) -> Option<GemmLayer> {
+    alexnet_layers().into_iter().find(|l| l.name == name)
+}
+
+/// The conv geometries the Table II GEMMs derive from.
+pub fn alexnet_conv_shapes() -> Vec<(&'static str, ConvShape)> {
+    vec![
+        (
+            "conv1",
+            ConvShape {
+                in_channels: 3,
+                in_hw: 227,
+                out_channels: 96,
+                kernel: 11,
+                stride: 4,
+                pad: 0,
+                groups: 1,
+            },
+        ),
+        (
+            "conv2",
+            ConvShape {
+                in_channels: 96,
+                in_hw: 27,
+                out_channels: 256,
+                kernel: 5,
+                stride: 1,
+                pad: 2,
+                groups: 2,
+            },
+        ),
+        (
+            "conv3",
+            ConvShape {
+                in_channels: 256,
+                in_hw: 13,
+                out_channels: 384,
+                kernel: 3,
+                stride: 1,
+                pad: 1,
+                groups: 1,
+            },
+        ),
+        (
+            "conv4",
+            ConvShape {
+                in_channels: 384,
+                in_hw: 13,
+                out_channels: 384,
+                kernel: 3,
+                stride: 1,
+                pad: 1,
+                groups: 2,
+            },
+        ),
+        (
+            "conv5",
+            ConvShape {
+                in_channels: 384,
+                in_hw: 13,
+                out_channels: 256,
+                kernel: 3,
+                stride: 1,
+                pad: 1,
+                groups: 2,
+            },
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_eight_layers() {
+        assert_eq!(alexnet_layers().len(), 8);
+    }
+
+    #[test]
+    fn conv_geometries_derive_table2_gemms() {
+        for (name, shape) in alexnet_conv_shapes() {
+            let (m, k, n) = shape.gemm_dims();
+            let l = layer(name).unwrap();
+            assert_eq!((m, k, n), (l.m, l.k, l.n), "layer {name}");
+        }
+    }
+
+    #[test]
+    fn conv1_output_is_55() {
+        let (_, c1) = alexnet_conv_shapes().into_iter().next().unwrap();
+        assert_eq!(c1.out_hw(), 55);
+    }
+
+    #[test]
+    fn fc6_flops() {
+        // fc-6: 2 * 128 * 9216 * 4096 ~= 9.66 GFLOP.
+        assert_eq!(layer("fc6").unwrap().flops(), 9_663_676_416);
+    }
+
+    #[test]
+    fn unknown_layer_is_none() {
+        assert!(layer("conv9").is_none());
+    }
+}

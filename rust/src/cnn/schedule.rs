@@ -1,0 +1,203 @@
+//! Network-level scheduling — the deployment question Table II implies
+//! but never asks: the host CPU *can* reprogram the multiplexers and
+//! buffer descriptors between layers (Section III-A: "the multiplexers
+//! are initialized by the host CPU"), so should a whole network run with
+//! per-layer optimal `⟨N_p, S_i⟩` (paying a reconfiguration stall per
+//! switch) or one fixed configuration?
+//!
+//! This extends the paper's per-layer analysis into an end-to-end
+//! schedule: `schedule_network` evaluates both policies on the simulator
+//! and reports the break-even reconfiguration cost.
+
+use crate::accelerator::{Accelerator, SimOptions};
+use crate::config::{HardwareConfig, RunConfig};
+use crate::dse;
+
+use super::GemmLayer;
+
+/// How to configure the accelerator across a layer sequence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// DSE-optimal config per layer; costs `reconfig_secs` whenever the
+    /// config changes between consecutive layers.
+    PerLayerOptimal,
+    /// One configuration for the whole network.
+    Fixed(RunConfig),
+}
+
+/// One scheduled layer.
+#[derive(Debug, Clone)]
+pub struct ScheduledLayer {
+    pub name: &'static str,
+    pub run: RunConfig,
+    pub secs: f64,
+    pub gflops: f64,
+    pub reconfigured: bool,
+}
+
+/// A whole-network schedule.
+#[derive(Debug, Clone)]
+pub struct NetworkSchedule {
+    pub layers: Vec<ScheduledLayer>,
+    pub reconfigs: usize,
+    /// Compute time + reconfiguration stalls.
+    pub total_secs: f64,
+    pub total_gflops: f64,
+}
+
+/// Evaluate `policy` over `layers` on the simulated accelerator.
+/// `reconfig_secs` is the host-side stall to rewrite muxes + descriptors
+/// (PCIe config writes; tens of microseconds on the VC709 class).
+pub fn schedule_network(
+    hw: &HardwareConfig,
+    acc: &Accelerator,
+    layers: &[GemmLayer],
+    policy: Policy,
+    reconfig_secs: f64,
+) -> anyhow::Result<NetworkSchedule> {
+    let mut out = Vec::with_capacity(layers.len());
+    let mut prev: Option<RunConfig> = None;
+    let mut total = 0.0;
+    let mut reconfigs = 0;
+    let mut flops = 0u64;
+    for l in layers {
+        let run = match policy {
+            Policy::PerLayerOptimal => {
+                dse::explore(hw, l.m, l.k, l.n, acc.surface())?.best.run
+            }
+            Policy::Fixed(run) => run,
+        };
+        let sim = acc.simulate(&run, l.m, l.k, l.n, &SimOptions::default())?;
+        let reconfigured = prev.is_some_and(|p| p != run);
+        if reconfigured {
+            reconfigs += 1;
+            total += reconfig_secs;
+        }
+        total += sim.total_secs;
+        flops += l.flops();
+        out.push(ScheduledLayer {
+            name: l.name,
+            run,
+            secs: sim.total_secs,
+            gflops: sim.gflops,
+            reconfigured,
+        });
+        prev = Some(run);
+    }
+    Ok(NetworkSchedule {
+        layers: out,
+        reconfigs,
+        total_secs: total,
+        total_gflops: flops as f64 / total / 1e9,
+    })
+}
+
+/// The best single configuration for the whole network: evaluate every
+/// Eq. 9-feasible `⟨N_p, S_i⟩` as a `Fixed` policy and keep the fastest.
+pub fn best_fixed(
+    hw: &HardwareConfig,
+    acc: &Accelerator,
+    layers: &[GemmLayer],
+) -> anyhow::Result<NetworkSchedule> {
+    let max_m = layers.iter().map(|l| l.m).max().unwrap_or(16);
+    let mut best: Option<NetworkSchedule> = None;
+    for si in dse::candidate_sis(hw, max_m) {
+        for np in crate::analytical::feasible_nps(hw, si) {
+            let s = schedule_network(
+                hw,
+                acc,
+                layers,
+                Policy::Fixed(RunConfig::square(np, si)),
+                0.0,
+            )?;
+            if best.as_ref().map(|b| s.total_secs < b.total_secs).unwrap_or(true) {
+                best = Some(s);
+            }
+        }
+    }
+    best.ok_or_else(|| anyhow::anyhow!("no feasible fixed configuration"))
+}
+
+/// Reconfiguration cost at which per-layer-optimal and best-fixed tie.
+pub fn break_even_reconfig_secs(
+    hw: &HardwareConfig,
+    acc: &Accelerator,
+    layers: &[GemmLayer],
+) -> anyhow::Result<f64> {
+    let per_layer = schedule_network(hw, acc, layers, Policy::PerLayerOptimal, 0.0)?;
+    let fixed = best_fixed(hw, acc, layers)?;
+    if per_layer.reconfigs == 0 {
+        return Ok(f64::INFINITY);
+    }
+    Ok((fixed.total_secs - per_layer.total_secs) / per_layer.reconfigs as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::alexnet_layers;
+
+    fn setup() -> (HardwareConfig, Accelerator) {
+        let hw = HardwareConfig::paper();
+        let acc = Accelerator::new(hw.clone());
+        (hw, acc)
+    }
+
+    #[test]
+    fn per_layer_optimal_beats_fixed_at_zero_cost() {
+        let (hw, acc) = setup();
+        let layers = alexnet_layers();
+        let opt =
+            schedule_network(&hw, &acc, &layers, Policy::PerLayerOptimal, 0.0).unwrap();
+        let fixed = best_fixed(&hw, &acc, &layers).unwrap();
+        assert!(opt.total_secs <= fixed.total_secs * 1.0001);
+        assert_eq!(opt.layers.len(), 8);
+    }
+
+    #[test]
+    fn reconfig_cost_charged_per_switch() {
+        let (hw, acc) = setup();
+        let layers = alexnet_layers();
+        let free =
+            schedule_network(&hw, &acc, &layers, Policy::PerLayerOptimal, 0.0).unwrap();
+        let costly =
+            schedule_network(&hw, &acc, &layers, Policy::PerLayerOptimal, 1e-3).unwrap();
+        assert_eq!(free.reconfigs, costly.reconfigs);
+        let want = free.total_secs + free.reconfigs as f64 * 1e-3;
+        assert!((costly.total_secs - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_policy_never_reconfigures() {
+        let (hw, acc) = setup();
+        let layers = alexnet_layers();
+        let s = schedule_network(
+            &hw,
+            &acc,
+            &layers,
+            Policy::Fixed(RunConfig::square(2, 128)),
+            1.0, // would be catastrophic if charged
+        )
+        .unwrap();
+        assert_eq!(s.reconfigs, 0);
+        assert!(s.layers.iter().all(|l| l.run == RunConfig::square(2, 128)));
+    }
+
+    #[test]
+    fn break_even_is_positive_for_alexnet() {
+        // Per-layer optimal saves real time, so some nonzero reconfig
+        // budget is affordable.
+        let (hw, acc) = setup();
+        let be = break_even_reconfig_secs(&hw, &acc, &alexnet_layers()).unwrap();
+        assert!(be > 0.0, "break-even {be}");
+    }
+
+    #[test]
+    fn single_layer_network_never_reconfigures() {
+        let (hw, acc) = setup();
+        let layers = vec![crate::cnn::layer("fc6").unwrap()];
+        let s =
+            schedule_network(&hw, &acc, &layers, Policy::PerLayerOptimal, 1.0).unwrap();
+        assert_eq!(s.reconfigs, 0);
+    }
+}

@@ -1,0 +1,293 @@
+//! Accelerator configuration — the knobs the paper's host CPU programs.
+//!
+//! A [`HardwareConfig`] fixes what would be baked into the bitstream
+//! (`P_m`, `P`, pipeline depths, DDR timing); a [`RunConfig`] holds the
+//! per-problem knobs the host writes into the multiplexers and buffer
+//! descriptors at run time (`N_p`, `S_i`, `S_j`).
+
+
+use crate::ddr::DdrConfig;
+
+/// Bitstream-time parameters of the accelerator (Section V defaults).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareConfig {
+    /// Maximum number of independent PE arrays (`P_m`), all muxes open.
+    pub pm: usize,
+    /// PEs per base array (`P`).
+    pub p: usize,
+    /// Accelerator clock in MHz (`F_acc`; paper: 200 MHz post-synthesis).
+    pub freq_mhz: f64,
+    /// Depth of the FMAC pipeline (`Stage_fmac` in Eq. 6).
+    pub fmac_stages: usize,
+    /// Bytes per matrix element (FP32 = 4, the paper's word size).
+    pub elem_bytes: usize,
+    /// Off-chip memory model parameters.
+    pub ddr: DdrConfig,
+}
+
+impl Default for HardwareConfig {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+impl HardwareConfig {
+    /// The experimental setup of Section V: `P_m = 4`, `P = 64`,
+    /// `F_acc = 200 MHz` on a VC709 (two DDR3 DIMMs).
+    pub fn paper() -> Self {
+        Self {
+            pm: 4,
+            p: 64,
+            freq_mhz: 200.0,
+            fmac_stages: 14, // Virtex-7 FP32 mul (8) + add (6) class depth
+            elem_bytes: 4,
+            ddr: DdrConfig::vc709(),
+        }
+    }
+
+    /// A small config for fast tests: `P_m = 2`, `P = 8`.
+    pub fn tiny() -> Self {
+        Self {
+            pm: 2,
+            p: 8,
+            freq_mhz: 200.0,
+            fmac_stages: 4,
+            elem_bytes: 4,
+            ddr: DdrConfig::vc709(),
+        }
+    }
+
+    /// Total PE budget `P_m * P` — fixed across all run configs.
+    pub fn total_pes(&self) -> usize {
+        self.pm * self.p
+    }
+
+    /// Theoretical peak in GFLOPS: `2 * F_acc * P_m * P` (Section V).
+    pub fn peak_gflops(&self) -> f64 {
+        2.0 * self.freq_mhz * 1e6 * self.total_pes() as f64 / 1e9
+    }
+
+    /// Accelerator clock period in seconds.
+    pub fn clock_period(&self) -> f64 {
+        1.0 / (self.freq_mhz * 1e6)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.pm >= 1, "pm must be >= 1");
+        anyhow::ensure!(
+            self.pm.is_power_of_two(),
+            "pm must be a power of two (mux chaining halves array count)"
+        );
+        anyhow::ensure!(self.p >= 1, "p must be >= 1");
+        anyhow::ensure!(self.freq_mhz > 0.0, "freq must be positive");
+        anyhow::ensure!(self.elem_bytes > 0, "elem_bytes must be positive");
+        self.ddr.validate()?;
+        Ok(())
+    }
+
+    /// Parse a config file (flat `key = value` with an optional `[ddr]`
+    /// section — see `configs/paper.toml`). Unset keys keep the paper's
+    /// defaults; unknown keys are an error so typos fail loudly.
+    pub fn from_toml(text: &str) -> anyhow::Result<Self> {
+        let kv = crate::util::kv::KvFile::parse(text)?;
+        let mut cfg = Self::paper();
+        for key in kv.keys("") {
+            match key {
+                "pm" => cfg.pm = kv.get_usize("", "pm")?.unwrap(),
+                "p" => cfg.p = kv.get_usize("", "p")?.unwrap(),
+                "freq_mhz" => cfg.freq_mhz = kv.get_f64("", "freq_mhz")?.unwrap(),
+                "fmac_stages" => {
+                    cfg.fmac_stages = kv.get_usize("", "fmac_stages")?.unwrap()
+                }
+                "elem_bytes" => {
+                    cfg.elem_bytes = kv.get_usize("", "elem_bytes")?.unwrap()
+                }
+                other => anyhow::bail!("unknown config key {other:?}"),
+            }
+        }
+        for key in kv.keys("ddr") {
+            let d = &mut cfg.ddr;
+            match key {
+                "mem_clock_mhz" => {
+                    d.mem_clock_mhz = kv.get_f64("ddr", key)?.unwrap()
+                }
+                "bus_bytes" => d.bus_bytes = kv.get_usize("ddr", key)?.unwrap(),
+                "banks" => d.banks = kv.get_usize("ddr", key)?.unwrap(),
+                "row_bytes" => d.row_bytes = kv.get_usize("ddr", key)?.unwrap(),
+                "t_rcd" => d.t_rcd = kv.get_u64("ddr", key)?.unwrap(),
+                "t_rp" => d.t_rp = kv.get_u64("ddr", key)?.unwrap(),
+                "t_cl" => d.t_cl = kv.get_u64("ddr", key)?.unwrap(),
+                "burst_transfers" => {
+                    d.burst_transfers = kv.get_usize("ddr", key)?.unwrap()
+                }
+                "req_overhead" => d.req_overhead = kv.get_u64("ddr", key)?.unwrap(),
+                other => anyhow::bail!("unknown [ddr] key {other:?}"),
+            }
+        }
+        if let Some(section) = kv.sections().iter().find(|&&s| !s.is_empty() && s != "ddr")
+        {
+            anyhow::bail!("unknown config section [{section}]");
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to the same `key = value` format `from_toml` accepts.
+    pub fn to_toml(&self) -> String {
+        format!(
+            "pm = {}\np = {}\nfreq_mhz = {}\nfmac_stages = {}\nelem_bytes = {}\n\n\
+             [ddr]\nmem_clock_mhz = {}\nbus_bytes = {}\nbanks = {}\nrow_bytes = {}\n\
+             t_rcd = {}\nt_rp = {}\nt_cl = {}\nburst_transfers = {}\nreq_overhead = {}\n",
+            self.pm,
+            self.p,
+            self.freq_mhz,
+            self.fmac_stages,
+            self.elem_bytes,
+            self.ddr.mem_clock_mhz,
+            self.ddr.bus_bytes,
+            self.ddr.banks,
+            self.ddr.row_bytes,
+            self.ddr.t_rcd,
+            self.ddr.t_rp,
+            self.ddr.t_cl,
+            self.ddr.burst_transfers,
+            self.ddr.req_overhead,
+        )
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        Self::from_toml(&std::fs::read_to_string(path)?)
+    }
+}
+
+/// Run-time configuration: the `<N_p, S_i>` the host programs per problem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RunConfig {
+    /// Number of PE arrays working in parallel (`N_p`).
+    pub np: usize,
+    /// Block size on rows of A (`S_i`).
+    pub si: usize,
+    /// Block size on columns of B (`S_j`).
+    pub sj: usize,
+}
+
+impl RunConfig {
+    pub fn new(np: usize, si: usize, sj: usize) -> Self {
+        Self { np, si, sj }
+    }
+
+    /// Square-block config (`S_i = S_j`), the Section IV simplification.
+    pub fn square(np: usize, si: usize) -> Self {
+        Self { np, si, sj: si }
+    }
+
+    /// PEs available to each (possibly chained) array: `P_m * P / N_p`.
+    pub fn pes_per_array(&self, hw: &HardwareConfig) -> usize {
+        hw.total_pes() / self.np
+    }
+
+    /// Validity under Eq. 9: `N_p` arrays exist after chaining, each
+    /// chained array must hold at least `S_i` PEs (one PE per result row),
+    /// and `S_j` must not starve the pipeline.
+    pub fn validate(&self, hw: &HardwareConfig) -> anyhow::Result<()> {
+        anyhow::ensure!(self.np >= 1 && self.np <= hw.pm, "np out of range [1, pm]");
+        anyhow::ensure!(
+            hw.pm % self.np == 0,
+            "np must divide pm (arrays chain in powers of two)"
+        );
+        anyhow::ensure!(self.si >= 1 && self.sj >= 1, "block sizes must be >= 1");
+        let pes = self.pes_per_array(hw);
+        anyhow::ensure!(
+            self.si <= pes,
+            "S_i = {} exceeds the {} PEs of a chained array (Eq. 9)",
+            self.si,
+            pes
+        );
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for RunConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.si == self.sj {
+            write!(f, "(Np={}, Si={})", self.np, self.si)
+        } else {
+            write!(f, "(Np={}, Si={}, Sj={})", self.np, self.si, self.sj)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_matches_section5() {
+        let hw = HardwareConfig::paper();
+        assert_eq!(hw.total_pes(), 256);
+        assert!((hw.peak_gflops() - 102.4).abs() < 1e-9);
+        hw.validate().unwrap();
+    }
+
+    #[test]
+    fn clock_period() {
+        let hw = HardwareConfig::paper();
+        assert!((hw.clock_period() - 5e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn eq9_constraint_enforced() {
+        let hw = HardwareConfig::paper();
+        // Np=4 -> 64 PEs/array -> Si <= 64.
+        assert!(RunConfig::square(4, 64).validate(&hw).is_ok());
+        assert!(RunConfig::square(4, 65).validate(&hw).is_err());
+        // Np=2 -> 128 PEs/array.
+        assert!(RunConfig::square(2, 128).validate(&hw).is_ok());
+        assert!(RunConfig::square(2, 129).validate(&hw).is_err());
+        // Np=1 -> 256 PEs.
+        assert!(RunConfig::square(1, 256).validate(&hw).is_ok());
+        assert!(RunConfig::square(1, 257).validate(&hw).is_err());
+    }
+
+    #[test]
+    fn np_must_divide_pm() {
+        let hw = HardwareConfig::paper();
+        assert!(RunConfig::square(3, 16).validate(&hw).is_err());
+        assert!(RunConfig::square(0, 16).validate(&hw).is_err());
+        assert!(RunConfig::square(5, 16).validate(&hw).is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let hw = HardwareConfig::paper();
+        let back = HardwareConfig::from_toml(&hw.to_toml()).unwrap();
+        assert_eq!(hw, back);
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults() {
+        let hw = HardwareConfig::from_toml("p = 32\n").unwrap();
+        assert_eq!(hw.p, 32);
+        assert_eq!(hw.pm, 4); // default preserved
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(HardwareConfig::from_toml("pe_count = 3\n").is_err());
+        assert!(HardwareConfig::from_toml("[dddr]\nbanks = 8\n").is_err());
+    }
+
+    #[test]
+    fn invalid_toml_rejected() {
+        assert!(HardwareConfig::from_toml("pm = 3").is_err());
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(RunConfig::square(2, 128).to_string(), "(Np=2, Si=128)");
+        assert_eq!(
+            RunConfig::new(2, 64, 32).to_string(),
+            "(Np=2, Si=64, Sj=32)"
+        );
+    }
+}

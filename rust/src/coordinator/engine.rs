@@ -1,0 +1,141 @@
+//! Numerics engine: where block products actually get computed.
+//!
+//! PJRT handles (`xla::PjRtLoadedExecutable`) wrap raw C pointers and are
+//! not `Send`, so the PJRT backend runs on one dedicated OS thread that
+//! owns the [`crate::runtime::Runtime`]; coordinator workers talk to it
+//! over channels. The golden backend computes in-process with the oracle
+//! GEMM — used in tests and when `artifacts/` is absent.
+
+use std::sync::mpsc;
+
+use crate::gemm::{self, Matrix};
+use crate::runtime::Runtime;
+
+struct Request {
+    sa: Matrix,
+    sb: Matrix,
+    reply: mpsc::Sender<anyhow::Result<Matrix>>,
+}
+
+enum Backend {
+    Golden,
+    Pjrt { tx: mpsc::Sender<Request> },
+}
+
+/// Thread-safe block-product executor shared by the coordinator workers.
+pub struct NumericsEngine {
+    backend: Backend,
+    /// Human-readable backend name for logs/metrics.
+    pub name: &'static str,
+}
+
+impl NumericsEngine {
+    /// Pure-rust oracle backend.
+    pub fn golden() -> Self {
+        Self { backend: Backend::Golden, name: "golden" }
+    }
+
+    /// PJRT backend: spawns the runtime thread and loads + compiles all
+    /// artifacts before returning (so failures surface here, not on the
+    /// first job).
+    pub fn pjrt(artifacts_dir: impl Into<std::path::PathBuf>) -> anyhow::Result<Self> {
+        let dir = artifacts_dir.into();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (init_tx, init_rx) = mpsc::channel::<anyhow::Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-numerics".into())
+            .spawn(move || {
+                let runtime = match Runtime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = init_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    let _ = req.reply.send(runtime.block_product(&req.sa, &req.sb));
+                }
+            })?;
+        init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("pjrt thread died during init"))??;
+        Ok(Self { backend: Backend::Pjrt { tx }, name: "pjrt" })
+    }
+
+    /// PJRT if artifacts are present, golden otherwise.
+    pub fn auto(artifacts_dir: impl Into<std::path::PathBuf>) -> Self {
+        let dir = artifacts_dir.into();
+        match Self::pjrt(&dir) {
+            Ok(e) => e,
+            Err(_) => Self::golden(),
+        }
+    }
+
+    /// `SA (rows x k) x SB (k x cols)` — one WQM task's numerics.
+    /// Blocking call; safe from any worker thread.
+    pub fn block_product(&self, sa: Matrix, sb: Matrix) -> anyhow::Result<Matrix> {
+        match &self.backend {
+            Backend::Golden => {
+                Ok(gemm::block_task(&sa, &sb, 0, 0, sa.rows, sb.cols))
+            }
+            Backend::Pjrt { tx } => {
+                let (reply, rx) = mpsc::channel();
+                tx.send(Request { sa, sb, reply })
+                    .map_err(|_| anyhow::anyhow!("pjrt thread gone"))?;
+                rx.recv()
+                    .map_err(|_| anyhow::anyhow!("pjrt thread dropped reply"))?
+            }
+        }
+    }
+}
+
+// The PJRT variant only holds a channel Sender (Send + !Sync by default
+// is false: mpsc::Sender is Send + !Sync in old std, Send + Sync since
+// 1.72). Workers clone nothing — they share &NumericsEngine.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_block_product() {
+        let e = NumericsEngine::golden();
+        let a = Matrix::random(10, 6, 1);
+        let b = Matrix::random(6, 12, 2);
+        let c = e.block_product(a.clone(), b.clone()).unwrap();
+        assert!(c.allclose(&a.matmul(&b), 1e-5));
+    }
+
+    #[test]
+    fn pjrt_missing_artifacts_fails_fast() {
+        assert!(NumericsEngine::pjrt("/nonexistent").is_err());
+    }
+
+    #[test]
+    fn auto_falls_back_to_golden() {
+        let e = NumericsEngine::auto("/nonexistent");
+        assert_eq!(e.name, "golden");
+        let a = Matrix::random(4, 4, 3);
+        let b = Matrix::random(4, 4, 4);
+        let c = e.block_product(a.clone(), b.clone()).unwrap();
+        assert!(c.allclose(&a.matmul(&b), 1e-5));
+    }
+
+    #[test]
+    fn engine_usable_from_threads() {
+        let e = NumericsEngine::golden();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let e = &e;
+                s.spawn(move || {
+                    let a = Matrix::random(8, 8, t);
+                    let b = Matrix::random(8, 8, t + 10);
+                    let c = e.block_product(a.clone(), b.clone()).unwrap();
+                    assert!(c.allclose(&a.matmul(&b), 1e-5));
+                });
+            }
+        });
+    }
+}

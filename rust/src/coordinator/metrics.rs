@@ -1,0 +1,121 @@
+//! Coordinator metrics: atomic counters + latency aggregates, cheap
+//! enough to update from every worker without contention concerns.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    jobs: AtomicU64,
+    tasks: AtomicU64,
+    steals: AtomicU64,
+    latencies: Mutex<LatencyAgg>,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct LatencyAgg {
+    count: u64,
+    host_sum: f64,
+    host_max: f64,
+    sim_sum: f64,
+}
+
+impl Metrics {
+    pub fn task_done(&self) {
+        self.tasks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_steals(&self, n: u64) {
+        self.steals.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn job_done(&self, host_secs: f64, sim_secs: f64) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        l.count += 1;
+        l.host_sum += host_secs;
+        l.host_max = l.host_max.max(host_secs);
+        l.sim_sum += sim_secs;
+    }
+
+    pub fn jobs(&self) -> u64 {
+        self.jobs.load(Ordering::Relaxed)
+    }
+
+    pub fn tasks(&self) -> u64 {
+        self.tasks.load(Ordering::Relaxed)
+    }
+
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// (mean, max) host latency in seconds.
+    pub fn host_latency(&self) -> (f64, f64) {
+        let l = self.latencies.lock().unwrap();
+        if l.count == 0 {
+            (0.0, 0.0)
+        } else {
+            (l.host_sum / l.count as f64, l.host_max)
+        }
+    }
+
+    /// Mean simulated FPGA time per job, seconds.
+    pub fn mean_sim_secs(&self) -> f64 {
+        let l = self.latencies.lock().unwrap();
+        if l.count == 0 {
+            0.0
+        } else {
+            l.sim_sum / l.count as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        let (mean, max) = self.host_latency();
+        format!(
+            "jobs={} tasks={} steals={} host_lat(mean/max)={:.3}s/{:.3}s sim(mean)={:.6}s",
+            self.jobs(),
+            self.tasks(),
+            self.steals(),
+            mean,
+            max,
+            self.mean_sim_secs()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.task_done();
+        m.task_done();
+        m.add_steals(3);
+        m.job_done(0.5, 0.001);
+        m.job_done(1.5, 0.003);
+        assert_eq!(m.tasks(), 2);
+        assert_eq!(m.steals(), 3);
+        assert_eq!(m.jobs(), 2);
+        let (mean, max) = m.host_latency();
+        assert!((mean - 1.0).abs() < 1e-12);
+        assert!((max - 1.5).abs() < 1e-12);
+        assert!((m.mean_sim_secs() - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_latency_is_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.host_latency(), (0.0, 0.0));
+        assert_eq!(m.mean_sim_secs(), 0.0);
+    }
+
+    #[test]
+    fn summary_formats() {
+        let m = Metrics::default();
+        m.job_done(0.1, 0.01);
+        assert!(m.summary().contains("jobs=1"));
+    }
+}

@@ -1,0 +1,282 @@
+//! L3 coordinator: the serving face of the accelerator.
+//!
+//! GEMM jobs come in; the coordinator picks the optimal `⟨N_p, S_i⟩` via
+//! the DSE (unless pinned), partitions the problem into sub-block tasks,
+//! and drives `N_p` worker threads that pop tasks from a shared
+//! work-stealing WQM — the software twin of the paper's hardware WQM.
+//! Numerics execute on the [`engine::NumericsEngine`]: a dedicated thread
+//! owning the PJRT runtime (XLA handles are not `Send`), fed over
+//! channels, or a pure-rust golden engine for environments without
+//! artifacts. Timing comes from the cycle-level simulator, so every job
+//! returns both a real result matrix and the FPGA-time report.
+
+pub mod engine;
+pub mod metrics;
+
+pub use engine::NumericsEngine;
+pub use metrics::Metrics;
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use crate::accelerator::{Accelerator, SimOptions, SimReport};
+use crate::blocking::BlockPlan;
+use crate::config::{HardwareConfig, RunConfig};
+use crate::dse;
+use crate::gemm::Matrix;
+use crate::wqm::Wqm;
+
+/// One GEMM request.
+#[derive(Debug, Clone)]
+pub struct GemmJob {
+    pub id: u64,
+    pub a: Matrix,
+    pub b: Matrix,
+    /// Pin a config, or let the DSE choose.
+    pub run: Option<RunConfig>,
+}
+
+/// What the coordinator returns per job.
+#[derive(Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub c: Matrix,
+    /// The configuration actually used.
+    pub run: RunConfig,
+    /// Simulated FPGA-side execution report.
+    pub sim: SimReport,
+    /// Wall-clock host latency of the numerics execution.
+    pub host_latency_secs: f64,
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    pub hw: HardwareConfig,
+    accelerator: Accelerator,
+    engine: NumericsEngine,
+    metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    pub fn new(hw: HardwareConfig, engine: NumericsEngine) -> Self {
+        Self {
+            accelerator: Accelerator::new(hw.clone()),
+            hw,
+            engine,
+            metrics: Arc::new(Metrics::default()),
+        }
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    pub fn accelerator(&self) -> &Accelerator {
+        &self.accelerator
+    }
+
+    /// Choose the run config for a job: pinned, or DSE-optimal.
+    pub fn plan_job(&self, job: &GemmJob) -> anyhow::Result<RunConfig> {
+        if let Some(run) = job.run {
+            run.validate(&self.hw)?;
+            return Ok(run);
+        }
+        let e = dse::explore(
+            &self.hw,
+            job.a.rows,
+            job.a.cols,
+            job.b.cols,
+            self.accelerator.surface(),
+        )?;
+        Ok(e.best.run)
+    }
+
+    /// Execute one job: numerics through `N_p` work-stealing workers on
+    /// the engine, timing through the simulator.
+    pub fn run_job(&self, job: GemmJob) -> anyhow::Result<JobResult> {
+        anyhow::ensure!(job.a.cols == job.b.rows, "contraction mismatch");
+        let run = self.plan_job(&job)?;
+        let start = Instant::now();
+
+        let plan = BlockPlan::new(job.a.rows, job.a.cols, job.b.cols, run.si, run.sj);
+        let mut wqm = Wqm::from_partition(plan.partition(run.np));
+        wqm.set_stealing(true);
+        let wqm = Mutex::new(wqm);
+        let a = &job.a;
+        let b = &job.b;
+        let c = Mutex::new(Matrix::zeros(a.rows, b.cols));
+
+        std::thread::scope(|s| -> anyhow::Result<()> {
+            let mut handles = Vec::with_capacity(run.np);
+            for w in 0..run.np {
+                let wqm = &wqm;
+                let c = &c;
+                let engine = &self.engine;
+                let metrics = &self.metrics;
+                handles.push(s.spawn(move || -> anyhow::Result<()> {
+                    loop {
+                        // Pop (with stealing) under the WQM lock — the
+                        // hardware controller's atomic counter compare.
+                        let task = { wqm.lock().unwrap().pop(w) };
+                        let Some(task) = task else { break };
+                        let sa = a.block(task.row0, 0, task.si, a.cols);
+                        let sb = b.block(0, task.col0, b.rows, task.sj);
+                        let block = engine.block_product(sa, sb)?;
+                        c.lock().unwrap().set_block(task.row0, task.col0, &block);
+                        metrics.task_done();
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+            }
+            Ok(())
+        })?;
+
+        let steals: u64 = {
+            let w = wqm.lock().unwrap();
+            w.stats().iter().map(|s| s.stolen_in).sum()
+        };
+        self.metrics.add_steals(steals);
+
+        let sim = self.accelerator.simulate(
+            &run,
+            a.rows,
+            a.cols,
+            b.cols,
+            &SimOptions::default(),
+        )?;
+        let host_latency_secs = start.elapsed().as_secs_f64();
+        self.metrics.job_done(host_latency_secs, sim.total_secs);
+
+        Ok(JobResult {
+            id: job.id,
+            c: c.into_inner().unwrap(),
+            run,
+            sim,
+            host_latency_secs,
+        })
+    }
+
+    /// Serve a stream of jobs, replying on per-job channels. Jobs run
+    /// sequentially (the accelerator is a single shared device); the
+    /// queue is the batching point. Returns when the sender hangs up.
+    pub fn serve(
+        &self,
+        jobs: mpsc::Receiver<(GemmJob, mpsc::Sender<anyhow::Result<JobResult>>)>,
+    ) {
+        while let Ok((job, reply)) = jobs.recv() {
+            let result = self.run_job(job);
+            let _ = reply.send(result);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coordinator() -> Coordinator {
+        Coordinator::new(HardwareConfig::paper(), NumericsEngine::golden())
+    }
+
+    #[test]
+    fn job_produces_correct_result() {
+        let co = coordinator();
+        let a = Matrix::random(100, 50, 1);
+        let b = Matrix::random(50, 80, 2);
+        let want = a.matmul(&b);
+        let job = GemmJob { id: 1, a, b, run: Some(RunConfig::square(2, 32)) };
+        let r = co.run_job(job).unwrap();
+        assert!(r.c.allclose(&want, 1e-4));
+        assert_eq!(r.run, RunConfig::square(2, 32));
+        assert!(r.sim.total_secs > 0.0);
+    }
+
+    #[test]
+    fn dse_chooses_config_when_unpinned() {
+        let co = coordinator();
+        let a = Matrix::random(128, 64, 3);
+        let b = Matrix::random(64, 128, 4);
+        let want = a.matmul(&b);
+        let r = co.run_job(GemmJob { id: 2, a, b, run: None }).unwrap();
+        assert!(r.c.allclose(&want, 1e-4));
+        assert!(r.run.validate(&co.hw).is_ok());
+    }
+
+    #[test]
+    fn invalid_pinned_config_rejected() {
+        let co = coordinator();
+        let a = Matrix::random(8, 8, 5);
+        let b = Matrix::random(8, 8, 6);
+        let job = GemmJob { id: 3, a, b, run: Some(RunConfig::square(4, 256)) };
+        assert!(co.run_job(job).is_err());
+    }
+
+    #[test]
+    fn mismatched_operands_rejected() {
+        let co = coordinator();
+        let job = GemmJob {
+            id: 4,
+            a: Matrix::random(8, 8, 7),
+            b: Matrix::random(9, 8, 8),
+            run: None,
+        };
+        assert!(co.run_job(job).is_err());
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let co = coordinator();
+        let a = Matrix::random(64, 32, 9);
+        let b = Matrix::random(32, 64, 10);
+        let job = GemmJob { id: 5, a, b, run: Some(RunConfig::square(4, 16)) };
+        co.run_job(job).unwrap();
+        let m = co.metrics();
+        assert_eq!(m.jobs(), 1);
+        assert!(m.tasks() >= 16); // 4x4 block grid
+    }
+
+    #[test]
+    fn serve_loop_replies() {
+        let co = coordinator();
+        let (tx, rx) = mpsc::channel();
+        let (rtx, rrx) = mpsc::channel();
+        let a = Matrix::random(32, 16, 11);
+        let b = Matrix::random(16, 32, 12);
+        let want = a.matmul(&b);
+        tx.send((GemmJob { id: 6, a, b, run: Some(RunConfig::square(2, 16)) }, rtx))
+            .unwrap();
+        drop(tx);
+        co.serve(rx);
+        let r = rrx.recv().unwrap().unwrap();
+        assert!(r.c.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn concurrent_jobs_from_multiple_clients() {
+        // The engine + coordinator are shared across threads.
+        let co = coordinator();
+        std::thread::scope(|s| {
+            for t in 0u64..3 {
+                let co = &co;
+                s.spawn(move || {
+                    let a = Matrix::random(40, 20, t);
+                    let b = Matrix::random(20, 40, t + 50);
+                    let want = a.matmul(&b);
+                    let r = co
+                        .run_job(GemmJob {
+                            id: t,
+                            a,
+                            b,
+                            run: Some(RunConfig::square(2, 16)),
+                        })
+                        .unwrap();
+                    assert!(r.c.allclose(&want, 1e-4));
+                });
+            }
+        });
+        assert_eq!(co.metrics().jobs(), 3);
+    }
+}

@@ -1,0 +1,155 @@
+//! Off-chip DDR3 timing model — the substrate behind Fig. 3.
+//!
+//! The paper measures the *effective* memory bandwidth a PE array sees as
+//! a function of block size (`S_i`, which sets the burst length of each
+//! transfer) and the number of arrays sharing the memory interface
+//! (`N_p`, which sets how often streams from different address regions
+//! interleave and evict each other's open DRAM rows). We reproduce that
+//! surface with a bank/row-state DDR3 model:
+//!
+//! * data moves in fixed BL8 bursts (`burst_bytes` per `burst_clocks`);
+//! * a burst that hits the open row of its bank costs only data beats;
+//! * a burst to a different row pays precharge + activate + CAS
+//!   (`t_rp + t_rcd + t_cl`);
+//! * `N_p` masters stream from disjoint regions and are arbitrated
+//!   round-robin at *chunk* granularity (one chunk = one contiguous
+//!   block-row/column of `S_i` elements — the unit a buffer descriptor
+//!   transfers), so small blocks force a row miss on nearly every
+//!   arbitration turn while large blocks amortize it.
+//!
+//! The two observations of Fig. 3 fall out: effective bandwidth rises
+//! with block size and falls as arrays are added.
+
+pub mod sim;
+
+pub use sim::{BandwidthPoint, DdrSim, StreamPattern};
+
+
+/// DDR3 channel parameters (defaults model the VC709's DDR3-1600 SODIMM).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DdrConfig {
+    /// Memory controller clock in MHz (DDR3-1600: 800 MHz, 2 transfers/clk).
+    pub mem_clock_mhz: f64,
+    /// Data bus width in bytes (64-bit DIMM = 8).
+    pub bus_bytes: usize,
+    /// Banks per rank.
+    pub banks: usize,
+    /// Row (page) size in bytes.
+    pub row_bytes: usize,
+    /// Row-to-column delay (activate), controller clocks.
+    pub t_rcd: u64,
+    /// Row precharge, controller clocks.
+    pub t_rp: u64,
+    /// CAS latency, controller clocks.
+    pub t_cl: u64,
+    /// Burst length in bus transfers (BL8).
+    pub burst_transfers: usize,
+    /// Fixed controller/arbitration overhead per chunk request, clocks.
+    pub req_overhead: u64,
+    /// Independent DDR channels (the VC709 carries two SODIMMs). Rows
+    /// stripe across channels; transfers on different channels overlap
+    /// in time, so peak bandwidth scales with this.
+    pub channels: usize,
+}
+
+impl Default for DdrConfig {
+    fn default() -> Self {
+        Self::vc709()
+    }
+}
+
+impl DdrConfig {
+    /// One DDR3-1600 channel of the VC709 (MIG defaults, 11-11-11).
+    /// Single-channel is the calibration default — it reproduces the
+    /// Fig. 3 *shape* most clearly; see [`Self::vc709_dual`].
+    pub fn vc709() -> Self {
+        Self {
+            mem_clock_mhz: 800.0,
+            bus_bytes: 8,
+            banks: 8,
+            row_bytes: 8192,
+            t_rcd: 11,
+            t_rp: 11,
+            t_cl: 11,
+            burst_transfers: 8,
+            req_overhead: 4,
+            channels: 1,
+        }
+    }
+
+    /// Both VC709 SODIMMs: rows stripe across two independent channels,
+    /// doubling peak bandwidth. The N_p contention *ratio* is preserved
+    /// under striping (every master touches every channel); see the
+    /// channel ablation bench.
+    pub fn vc709_dual() -> Self {
+        Self { channels: 2, ..Self::vc709() }
+    }
+
+    /// Bytes moved by one burst (BL8 x bus width).
+    pub fn burst_bytes(&self) -> usize {
+        self.bus_bytes * self.burst_transfers
+    }
+
+    /// Controller clocks of pure data transfer per burst (2 transfers/clk).
+    pub fn burst_clocks(&self) -> u64 {
+        (self.burst_transfers / 2).max(1) as u64
+    }
+
+    /// Theoretical peak bandwidth in bytes/second (all channels).
+    pub fn peak_bytes_per_sec(&self) -> f64 {
+        self.mem_clock_mhz * 1e6 * 2.0 * self.bus_bytes as f64 * self.channels as f64
+    }
+
+    /// Theoretical peak in GB/s.
+    pub fn peak_gbps(&self) -> f64 {
+        self.peak_bytes_per_sec() / 1e9
+    }
+
+    /// Seconds per controller clock.
+    pub fn clock_period(&self) -> f64 {
+        1.0 / (self.mem_clock_mhz * 1e6)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.mem_clock_mhz > 0.0, "mem clock must be positive");
+        anyhow::ensure!(self.bus_bytes > 0, "bus width must be positive");
+        anyhow::ensure!(self.banks.is_power_of_two(), "banks must be 2^k");
+        anyhow::ensure!(
+            self.row_bytes >= self.burst_bytes(),
+            "row must hold at least one burst"
+        );
+        anyhow::ensure!(self.burst_transfers >= 2, "burst must be >= 2 transfers");
+        anyhow::ensure!(self.channels >= 1, "need at least one channel");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vc709_peak_is_12_8_gbps() {
+        let c = DdrConfig::vc709();
+        assert!((c.peak_gbps() - 12.8).abs() < 1e-9);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn burst_geometry() {
+        let c = DdrConfig::vc709();
+        assert_eq!(c.burst_bytes(), 64);
+        assert_eq!(c.burst_clocks(), 4);
+        assert_eq!(c.row_bytes / c.burst_bytes(), 128);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = DdrConfig::vc709();
+        c.banks = 3;
+        assert!(c.validate().is_err());
+        let mut c = DdrConfig::vc709();
+        c.row_bytes = 16;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Design-space exploration: pick the optimal `⟨N_p, S_i⟩` for a problem.
+//!
+//! Section IV's procedure: fix the PE budget `P_m * P`, enumerate the
+//! `(N_p, S_i)` pairs Eq. 9 admits, evaluate the analytical model for
+//! each, and keep the pair that minimizes the (range of) `T_total`. The
+//! explorer ranks by the overlap estimate `max(T_compute, T_trans)` with
+//! the Eq. 7 upper bound as tie-break — the candidate that is fastest
+//! when double buffering works and degrades least when it doesn't.
+
+
+use crate::analytical::{self, BandwidthSurface, Prediction};
+use crate::blocking::BlockPlan;
+use crate::config::{HardwareConfig, RunConfig};
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub run: RunConfig,
+    pub prediction: Prediction,
+    pub est_gflops: f64,
+}
+
+/// Result of exploring one problem.
+#[derive(Debug, Clone)]
+pub struct Exploration {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub best: DesignPoint,
+    /// All feasible points, sorted best-first.
+    pub points: Vec<DesignPoint>,
+}
+
+/// Candidate block sizes: multiples of 16 up to the full PE budget (the
+/// paper's sweep granularity in Fig. 4), clipped to the problem's M.
+pub fn candidate_sis(hw: &HardwareConfig, m: usize) -> Vec<usize> {
+    let max = hw.total_pes();
+    let mut sis: Vec<usize> = (1..=max / 16).map(|i| i * 16).collect();
+    // Block sizes beyond M only waste pipeline slots on padding, but keep
+    // the next multiple above M so ragged problems can use one row block.
+    sis.retain(|&si| si <= m.next_multiple_of(16).max(16));
+    if sis.is_empty() {
+        sis.push(16);
+    }
+    sis
+}
+
+/// Evaluate every Eq. 9-feasible `(N_p, S_i)` for `(m, k, n)`.
+pub fn explore(
+    hw: &HardwareConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+) -> anyhow::Result<Exploration> {
+    let flops = BlockPlan::new(m, k, n, 16, 16).effective_flops();
+    let mut points = Vec::new();
+    for si in candidate_sis(hw, m) {
+        for np in analytical::feasible_nps(hw, si) {
+            let run = RunConfig::square(np, si);
+            let prediction = analytical::predict(hw, &run, m, k, n, surface)?;
+            let est_gflops = prediction.gflops_from(flops);
+            points.push(DesignPoint { run, prediction, est_gflops });
+        }
+    }
+    anyhow::ensure!(!points.is_empty(), "no feasible design point");
+    points.sort_by(|a, b| {
+        a.prediction
+            .t_overlap()
+            .partial_cmp(&b.prediction.t_overlap())
+            .unwrap()
+            .then(a.prediction.upper.partial_cmp(&b.prediction.upper).unwrap())
+    });
+    Ok(Exploration { m, k, n, best: points[0].clone(), points })
+}
+
+/// The fixed-extension baselines Table II compares against: all arrays
+/// independent (`N_p = P_m`) and one fully-chained array (`N_p = 1`),
+/// each at its best feasible S_i.
+pub fn baseline(
+    hw: &HardwareConfig,
+    np: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+) -> anyhow::Result<DesignPoint> {
+    let flops = BlockPlan::new(m, k, n, 16, 16).effective_flops();
+    let mut best: Option<DesignPoint> = None;
+    for si in candidate_sis(hw, m) {
+        if !analytical::feasible_nps(hw, si).contains(&np) {
+            continue;
+        }
+        let run = RunConfig::square(np, si);
+        let prediction = analytical::predict(hw, &run, m, k, n, surface)?;
+        let point = DesignPoint {
+            run,
+            prediction,
+            est_gflops: prediction.gflops_from(flops),
+        };
+        if best
+            .as_ref()
+            .map(|b| point.prediction.t_overlap() < b.prediction.t_overlap())
+            .unwrap_or(true)
+        {
+            best = Some(point);
+        }
+    }
+    best.ok_or_else(|| anyhow::anyhow!("no feasible point for np={np}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (HardwareConfig, BandwidthSurface) {
+        let hw = HardwareConfig::paper();
+        let s = BandwidthSurface::calibrate(&hw.ddr);
+        (hw, s)
+    }
+
+    #[test]
+    fn explore_returns_sorted_feasible_points() {
+        let (hw, s) = setup();
+        let e = explore(&hw, 128, 1200, 729, &s).unwrap();
+        assert!(!e.points.is_empty());
+        for w in e.points.windows(2) {
+            assert!(
+                w[0].prediction.t_overlap() <= w[1].prediction.t_overlap() + 1e-12
+            );
+        }
+        for p in &e.points {
+            assert!(p.run.validate(&hw).is_ok());
+        }
+    }
+
+    #[test]
+    fn best_beats_baselines_on_alexnet_layers() {
+        // The Table II headline: the optimal mixed extension is at least
+        // as fast as both pure extensions on every layer.
+        let (hw, s) = setup();
+        for l in crate::cnn::alexnet_layers() {
+            let e = explore(&hw, l.m, l.k, l.n, &s).unwrap();
+            let b4 = baseline(&hw, 4, l.m, l.k, l.n, &s).unwrap();
+            let b1 = baseline(&hw, 1, l.m, l.k, l.n, &s).unwrap();
+            assert!(
+                e.best.est_gflops >= b4.est_gflops - 1e-9,
+                "{}: best {} < np=4 {}",
+                l.name,
+                e.best.est_gflops,
+                b4.est_gflops
+            );
+            assert!(
+                e.best.est_gflops >= b1.est_gflops - 1e-9,
+                "{}: best {} < np=1 {}",
+                l.name,
+                e.best.est_gflops,
+                b1.est_gflops
+            );
+        }
+    }
+
+    #[test]
+    fn optimal_uses_multiple_arrays_on_conv2() {
+        // Paper Table II: conv-2 optimum is (2, 128) — multi-array with
+        // chaining, not a pure extension.
+        let (hw, s) = setup();
+        let e = explore(&hw, 128, 1200, 729, &s).unwrap();
+        assert!(e.best.run.np >= 2, "got {}", e.best.run);
+        assert!(e.best.run.si >= 64, "got {}", e.best.run);
+    }
+
+    #[test]
+    fn candidate_sis_respects_budget_and_m() {
+        let hw = HardwareConfig::paper();
+        let sis = candidate_sis(&hw, 10_000);
+        assert_eq!(*sis.last().unwrap(), 256);
+        let sis = candidate_sis(&hw, 96);
+        assert!(*sis.last().unwrap() <= 96);
+        let sis = candidate_sis(&hw, 1);
+        assert_eq!(sis, vec![16]);
+    }
+
+    #[test]
+    fn baseline_infeasible_np_errors() {
+        let (hw, s) = setup();
+        assert!(baseline(&hw, 8, 128, 128, 128, &s).is_err());
+    }
+
+    #[test]
+    fn explore_works_on_tiny_hardware() {
+        let hw = HardwareConfig::tiny(); // Pm=2, P=8 -> 16 PEs
+        let s = BandwidthSurface::calibrate_for(&hw.ddr, &[1, 2]);
+        let e = explore(&hw, 50, 30, 50, &s).unwrap();
+        assert!(e.best.run.si <= 16);
+        assert!(e.best.run.np <= 2);
+    }
+
+    #[test]
+    fn fc_layers_prefer_chained_big_blocks() {
+        // The paper's fc rows all land on (2, 128): K is huge, so big
+        // blocks amortize transfers and chaining supplies the PEs.
+        let (hw, s) = setup();
+        for name in ["fc6", "fc7", "fc8"] {
+            let l = crate::cnn::layer(name).unwrap();
+            let e = explore(&hw, l.m, l.k, l.n, &s).unwrap();
+            assert_eq!(
+                (e.best.run.np, e.best.run.si),
+                (2, 128),
+                "{name} chose {}",
+                e.best.run
+            );
+        }
+    }
+
+    #[test]
+    fn baseline_np1_uses_full_chain() {
+        let (hw, s) = setup();
+        let b = baseline(&hw, 1, 128, 9216, 4096, &s).unwrap();
+        assert_eq!(b.run.np, 1);
+        assert!(b.run.si > 64, "chained baseline should use big blocks");
+    }
+}

@@ -1,0 +1,239 @@
+//! Row-major FP32 matrix with the handful of operations the accelerator
+//! stack needs: oracle matmul, transpose (the MAC's layout fix for A),
+//! zero-padding (Section IV), block get/set, and comparison helpers.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Deterministic pseudo-random matrix in [-1, 1) — test/bench data.
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols).map(|_| rng.next_f32_signed()).collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Oracle GEMM: naive ikj triple loop, f32 accumulation.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "contraction mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                let brow = other.row(k);
+                for (o, b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// The MAC's transpose of A: makes column-of-SA fetches contiguous so
+    /// both matrices stream in burst mode (Section III-C).
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Zero-pad to (rows, cols) — Section IV's padding rule.
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Matrix {
+        assert!(rows >= self.rows && cols >= self.cols, "pad must grow");
+        let mut out = Matrix::zeros(rows, cols);
+        for r in 0..self.rows {
+            out.data[r * cols..r * cols + self.cols]
+                .copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Copy of the `rows x cols` block at (row0, col0), clipped to bounds.
+    pub fn block(&self, row0: usize, col0: usize, rows: usize, cols: usize) -> Matrix {
+        let r1 = (row0 + rows).min(self.rows);
+        let c1 = (col0 + cols).min(self.cols);
+        let mut out = Matrix::zeros(r1 - row0, c1 - col0);
+        for (i, r) in (row0..r1).enumerate() {
+            let src = &self.data[r * self.cols + col0..r * self.cols + c1];
+            out.data[i * out.cols..(i + 1) * out.cols].copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Write `block` into this matrix at (row0, col0).
+    pub fn set_block(&mut self, row0: usize, col0: usize, block: &Matrix) {
+        assert!(row0 + block.rows <= self.rows && col0 + block.cols <= self.cols);
+        for i in 0..block.rows {
+            let dst_off = (row0 + i) * self.cols + col0;
+            self.data[dst_off..dst_off + block.cols]
+                .copy_from_slice(block.row(i));
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Mixed absolute/relative closeness, scaled to the magnitude range.
+    pub fn allclose(&self, other: &Matrix, tol: f32) -> bool {
+        if (self.rows, self.cols) != (other.rows, other.cols) {
+            return false;
+        }
+        let scale = self
+            .data
+            .iter()
+            .map(|v| v.abs())
+            .fold(1.0f32, f32::max);
+        self.max_abs_diff(other) <= tol * scale
+    }
+
+    pub fn flops_of_matmul(m: usize, k: usize, n: usize) -> u64 {
+        2 * m as u64 * k as u64 * n as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    #[test]
+    fn identity_matmul() {
+        let a = Matrix::random(5, 5, 42);
+        let got = a.matmul(&Matrix::identity(5));
+        assert!(got.allclose(&a, 1e-7));
+    }
+
+    #[test]
+    fn known_product() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Matrix::random(7, 3, 1);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn transpose_values() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = a.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.get(2, 1), 6.0);
+        assert_eq!(t.get(0, 1), 4.0);
+    }
+
+    #[test]
+    fn pad_preserves_and_zeros() {
+        let a = Matrix::random(3, 5, 2);
+        let p = a.pad_to(8, 8);
+        assert_eq!(p.block(0, 0, 3, 5), a);
+        assert!(p.data[3 * 8..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let a = Matrix::random(10, 10, 3);
+        let blk = a.block(4, 6, 4, 4);
+        let mut b = Matrix::zeros(10, 10);
+        b.set_block(4, 6, &blk);
+        assert_eq!(b.block(4, 6, 4, 4), blk);
+    }
+
+    #[test]
+    fn block_clips_at_edges() {
+        let a = Matrix::random(10, 10, 4);
+        let blk = a.block(8, 8, 4, 4);
+        assert_eq!((blk.rows, blk.cols), (2, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "contraction mismatch")]
+    fn mismatched_matmul_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        a.matmul(&b);
+    }
+
+    #[test]
+    fn prop_transpose_matmul_identity() {
+        // (A B)^T = B^T A^T
+        check::cases(48, |rng| {
+            let (m, k, n) = (rng.range(1, 12), rng.range(1, 12), rng.range(1, 12));
+            let seed = rng.next_u64();
+            let a = Matrix::random(m, k, seed);
+            let b = Matrix::random(k, n, seed + 1);
+            let lhs = a.matmul(&b).transpose();
+            let rhs = b.transpose().matmul(&a.transpose());
+            assert!(lhs.allclose(&rhs, 1e-4));
+        });
+    }
+
+    #[test]
+    fn prop_pad_does_not_change_product() {
+        check::cases(48, |rng| {
+            let (m, k, n) = (rng.range(1, 10), rng.range(1, 10), rng.range(1, 10));
+            let seed = rng.next_u64();
+            let a = Matrix::random(m, k, seed);
+            let b = Matrix::random(k, n, seed + 1);
+            let ap = a.pad_to(m + 3, k + 5);
+            let bp = b.pad_to(k + 5, n + 2);
+            let full = ap.matmul(&bp);
+            assert!(full.block(0, 0, m, n).allclose(&a.matmul(&b), 1e-4));
+        });
+    }
+}

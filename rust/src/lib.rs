@@ -1,0 +1,47 @@
+//! # multi-array-gemm
+//!
+//! A full-stack reproduction of *“Towards a Multi-array Architecture for
+//! Accelerating Large-scale Matrix Multiplication on FPGAs”* (Shen, Qiao,
+//! Huang, Wen, Zhang — NUDT, 2018).
+//!
+//! The paper extends the classic linear systolic array for blocked dense
+//! GEMM into a configurable **multi-array** design with work stealing and
+//! an analytical performance model. This crate rebuilds the whole system
+//! with a cycle-level simulator standing in for the VC709 FPGA:
+//!
+//! * [`config`] — bitstream (`P_m`, `P`) and run-time (`N_p`, `S_i`) knobs;
+//! * [`gemm`] / [`blocking`] — dense-matrix substrate and the blocked
+//!   algorithm's task grid;
+//! * [`ddr`] — DDR3 bank/row timing model (the Fig. 3 substrate);
+//! * [`mac`] — buffer descriptors, transpose-of-A, burst scheduling;
+//! * [`wqm`] — workload queues + the work-stealing controller;
+//! * [`mpe`] — PE / linear-array / multi-array cycle model (PSU, FIFOs,
+//!   Independent vs Cooperation mux modes);
+//! * [`accelerator`] — the integrated event-driven simulation;
+//! * [`analytical`] — Eqs. 3–9 and the `BW = f(N_p, S_i)` surface;
+//! * [`dse`] — design-space exploration for optimal `⟨N_p, S_i⟩`;
+//! * [`resources`] — Table I's post-synthesis resource model;
+//! * [`cnn`] — AlexNet-as-GEMM workloads (Table II);
+//! * [`runtime`] — PJRT client executing the AOT-compiled JAX/Pallas
+//!   kernels (`artifacts/*.hlo.txt`) for the real numerics;
+//! * [`coordinator`] — the async serving layer: GEMM jobs in, blocks
+//!   scheduled across simulated arrays, numerics via the runtime.
+
+pub mod accelerator;
+pub mod analytical;
+pub mod blocking;
+pub mod cnn;
+pub mod config;
+pub mod coordinator;
+pub mod ddr;
+pub mod dse;
+pub mod gemm;
+pub mod mac;
+pub mod mpe;
+pub mod resources;
+pub mod runtime;
+pub mod util;
+pub mod wqm;
+
+pub use config::{HardwareConfig, RunConfig};
+pub use gemm::Matrix;

@@ -1,0 +1,427 @@
+//! `marr` — CLI for the multi-array GEMM accelerator.
+//!
+//! Subcommands map one-to-one onto the paper's artifacts:
+//! * `resources` — Table I (post-synthesis utilization model);
+//! * `sweep-bandwidth` — Fig. 3 (effective BW vs block size and N_p);
+//! * `predict --layer conv2` — Fig. 4 (model bounds vs simulated time);
+//! * `alexnet` — Table II (optimal ⟨N_p, S_i⟩ per layer vs baselines);
+//! * `dse --m M --k K --n N` — design-space report for any problem;
+//! * `run --m M --k K --n N [--np NP --si SI] [--golden]` — one GEMM
+//!   through the full coordinator (numerics + simulation).
+//!
+//! Global: `--hw <file>` loads a hardware config (see `configs/`).
+
+use std::collections::HashMap;
+
+use multi_array::accelerator::{Accelerator, SimOptions};
+use multi_array::analytical::{self, bandwidth::SI_GRID, BandwidthSurface};
+use multi_array::cnn;
+use multi_array::config::{HardwareConfig, RunConfig};
+use multi_array::coordinator::{Coordinator, GemmJob, NumericsEngine};
+use multi_array::dse;
+use multi_array::gemm::Matrix;
+use multi_array::resources;
+
+const USAGE: &str = "\
+marr — multi-array linear-systolic GEMM accelerator (Shen et al. 2018)
+
+USAGE: marr [--hw <config-file>] <command> [options]
+
+COMMANDS:
+  resources                         Table I resource utilization
+  sweep-bandwidth                   Fig. 3 bandwidth surface
+  predict [--layer conv2]           Fig. 4 bounds vs simulation
+  alexnet                           Table II optimal configs
+  dse --m M --k K --n N             design-space exploration
+  run --m M --k K --n N [--np NP --si SI] [--golden] [--artifacts DIR]
+                                    run one GEMM end to end
+  batch --file JOBS [--golden] [--artifacts DIR]
+                                    serve a job file (lines: M K N [NP SI]);
+                                    '-' reads stdin
+  schedule [--reconfig-us US]       whole-AlexNet schedule: per-layer
+                                    optimal (w/ reconfiguration cost) vs
+                                    best fixed config
+  help                              this message
+";
+
+/// Tiny argv parser: positional command + `--key value` flags
+/// (`--golden`-style booleans take no value).
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+const BOOL_FLAGS: &[&str] = &["golden"];
+
+fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
+    let mut cmd = None;
+    let mut flags = HashMap::new();
+    let mut it = argv.iter().peekable();
+    while let Some(arg) = it.next() {
+        if let Some(key) = arg.strip_prefix("--") {
+            if BOOL_FLAGS.contains(&key) {
+                flags.insert(key.to_string(), "true".to_string());
+            } else {
+                let val = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+            }
+        } else if cmd.is_none() {
+            cmd = Some(arg.clone());
+        } else {
+            anyhow::bail!("unexpected argument {arg:?}");
+        }
+    }
+    Ok(Args { cmd: cmd.unwrap_or_else(|| "help".into()), flags })
+}
+
+impl Args {
+    fn get_usize(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        self.flags
+            .get(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| anyhow::anyhow!("--{key} = {v:?} is not an integer"))
+            })
+            .transpose()
+    }
+
+    fn require_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.get_usize(key)?
+            .ok_or_else(|| anyhow::anyhow!("missing required --{key}"))
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse_args(&argv)?;
+    let hw = match args.flags.get("hw") {
+        Some(path) => HardwareConfig::load(std::path::Path::new(path))?,
+        None => HardwareConfig::paper(),
+    };
+    match args.cmd.as_str() {
+        "resources" => cmd_resources(&hw),
+        "sweep-bandwidth" => cmd_sweep(&hw),
+        "predict" => cmd_predict(
+            &hw,
+            args.flags.get("layer").map(String::as_str).unwrap_or("conv2"),
+        ),
+        "alexnet" => cmd_alexnet(&hw),
+        "dse" => cmd_dse(
+            &hw,
+            args.require_usize("m")?,
+            args.require_usize("k")?,
+            args.require_usize("n")?,
+        ),
+        "run" => cmd_run(&hw, &args),
+        "batch" => cmd_batch(&hw, &args),
+        "schedule" => cmd_schedule(&hw, &args),
+        "help" | "-h" | "--help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_resources(hw: &HardwareConfig) -> anyhow::Result<()> {
+    let r = resources::report(hw);
+    println!("Post-synthesis resource utilization (Pm={}, P={}):", hw.pm, hw.p);
+    println!("{:<12} {:>10} {:>12}", "Resource", "Used", "Percent");
+    println!("{:<12} {:>10.0} {:>11.2}%", "DSP48Es", r.usage.dsp, r.percent.dsp);
+    println!("{:<12} {:>10.1} {:>11.2}%", "BRAMs", r.usage.bram36, r.percent.bram36);
+    println!("{:<12} {:>10.0} {:>11.2}%", "Flip-Flops", r.usage.ff, r.percent.ff);
+    println!("{:<12} {:>10.0} {:>11.2}%", "LUTs", r.usage.lut, r.percent.lut);
+    Ok(())
+}
+
+fn cmd_sweep(hw: &HardwareConfig) -> anyhow::Result<()> {
+    println!("Effective per-array memory bandwidth (GB/s), Fig. 3:");
+    print!("{:>8}", "Si");
+    for np in [1usize, 2, 4] {
+        print!("{:>10}", format!("Np={np}"));
+    }
+    println!();
+    let surface = BandwidthSurface::calibrate(&hw.ddr);
+    for &si in SI_GRID.iter().filter(|&&si| si <= 512) {
+        print!("{si:>8}");
+        for np in [1usize, 2, 4] {
+            print!("{:>10.2}", surface.bw(np, si) / 1e9);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_predict(hw: &HardwareConfig, layer: &str) -> anyhow::Result<()> {
+    let l = cnn::layer(layer)
+        .ok_or_else(|| anyhow::anyhow!("unknown layer {layer} (conv1..fc8)"))?;
+    let acc = Accelerator::new(hw.clone());
+    println!(
+        "Layer {} (M*K*N = {}*{}*{}): predicted bounds vs simulated, Fig. 4:",
+        l.name, l.m, l.k, l.n
+    );
+    println!(
+        "{:>12} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "(Np,Si)", "lower(ms)", "upper(ms)", "sim(ms)", "GFLOPS", "memB"
+    );
+    for si in [16usize, 32, 64, 128, 256] {
+        for np in analytical::feasible_nps(hw, si) {
+            let run = RunConfig::square(np, si);
+            let p = analytical::predict(hw, &run, l.m, l.k, l.n, acc.surface())?;
+            let sim = acc.simulate(&run, l.m, l.k, l.n, &SimOptions::default())?;
+            println!(
+                "{:>12} {:>12.3} {:>12.3} {:>12.3} {:>12.1} {:>8}",
+                format!("({np},{si})"),
+                p.lower * 1e3,
+                p.upper * 1e3,
+                sim.total_secs * 1e3,
+                sim.gflops,
+                if p.memory_bound() { "yes" } else { "no" }
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_alexnet(hw: &HardwareConfig) -> anyhow::Result<()> {
+    let acc = Accelerator::new(hw.clone());
+    println!("Optimal (Np, Si) per AlexNet layer, Table II (simulated GFLOPS):");
+    println!(
+        "{:>8} {:>16} {:>10} {:>10} {:>10} {:>10}",
+        "Layer", "M*K*N", "Optimal", "GFLOPS", "Np=4", "Np=1"
+    );
+    for l in cnn::alexnet_layers() {
+        let e = dse::explore(hw, l.m, l.k, l.n, acc.surface())?;
+        let best = e.best.run;
+        let opt = acc.simulate(&best, l.m, l.k, l.n, &SimOptions::default())?;
+        let b4 = dse::baseline(hw, hw.pm, l.m, l.k, l.n, acc.surface())?;
+        let s4 = acc.simulate(&b4.run, l.m, l.k, l.n, &SimOptions::default())?;
+        let b1 = dse::baseline(hw, 1, l.m, l.k, l.n, acc.surface())?;
+        let s1 = acc.simulate(&b1.run, l.m, l.k, l.n, &SimOptions::default())?;
+        println!(
+            "{:>8} {:>16} {:>10} {:>10.1} {:>10.1} {:>10.1}",
+            l.name,
+            format!("{}*{}*{}", l.m, l.k, l.n),
+            format!("({},{})", best.np, best.si),
+            opt.gflops,
+            s4.gflops,
+            s1.gflops
+        );
+    }
+    println!("peak = {:.1} GFLOPS (2 * F_acc * Pm * P)", hw.peak_gflops());
+    Ok(())
+}
+
+fn cmd_dse(hw: &HardwareConfig, m: usize, k: usize, n: usize) -> anyhow::Result<()> {
+    let surface = BandwidthSurface::calibrate(&hw.ddr);
+    let e = dse::explore(hw, m, k, n, &surface)?;
+    println!("Design space for {m}x{k}x{n} (best first):");
+    println!(
+        "{:>12} {:>12} {:>12} {:>12} {:>10}",
+        "(Np,Si)", "lower(ms)", "upper(ms)", "overlap(ms)", "GFLOPS"
+    );
+    for p in e.points.iter().take(12) {
+        println!(
+            "{:>12} {:>12.3} {:>12.3} {:>12.3} {:>10.1}",
+            format!("({},{})", p.run.np, p.run.si),
+            p.prediction.lower * 1e3,
+            p.prediction.upper * 1e3,
+            p.prediction.t_overlap() * 1e3,
+            p.est_gflops
+        );
+    }
+    println!("optimal: {}", e.best.run);
+    Ok(())
+}
+
+fn cmd_run(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
+    let (m, k, n) = (
+        args.require_usize("m")?,
+        args.require_usize("k")?,
+        args.require_usize("n")?,
+    );
+    let artifacts = args
+        .flags
+        .get("artifacts")
+        .map(String::as_str)
+        .unwrap_or("artifacts");
+    let engine = if args.flags.contains_key("golden") {
+        NumericsEngine::golden()
+    } else {
+        NumericsEngine::auto(artifacts)
+    };
+    println!("numerics backend: {}", engine.name);
+    let co = Coordinator::new(hw.clone(), engine);
+    let run = match (args.get_usize("np")?, args.get_usize("si")?) {
+        (Some(np), Some(si)) => Some(RunConfig::square(np, si)),
+        (None, None) => None,
+        _ => anyhow::bail!("--np and --si must be given together"),
+    };
+    let a = Matrix::random(m, k, 42);
+    let b = Matrix::random(k, n, 43);
+    let want = a.matmul(&b);
+
+    let result = co.run_job(GemmJob { id: 0, a, b, run })?;
+
+    let err = result.c.max_abs_diff(&want);
+    println!("config: {}", result.run);
+    println!("max |err| vs oracle: {err:.3e}");
+    println!(
+        "simulated FPGA time: {:.3} ms ({:.1} GFLOPS, {:.1}% of peak)",
+        result.sim.total_secs * 1e3,
+        result.sim.gflops,
+        100.0 * result.sim.efficiency(hw)
+    );
+    println!("host numerics latency: {:.3} s", result.host_latency_secs);
+    println!("metrics: {}", co.metrics().summary());
+    Ok(())
+}
+
+/// Whole-network scheduling: per-layer-optimal with reconfiguration
+/// stalls vs the best single fixed configuration (cnn::schedule).
+fn cmd_schedule(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
+    use multi_array::cnn::schedule::{self, Policy};
+    let reconfig_us = args.get_usize("reconfig-us")?.unwrap_or(50) as f64;
+    let reconfig = reconfig_us * 1e-6;
+    let acc = Accelerator::new(hw.clone());
+    let layers = cnn::alexnet_layers();
+
+    let opt = schedule::schedule_network(hw, &acc, &layers, Policy::PerLayerOptimal, reconfig)?;
+    let fixed = schedule::best_fixed(hw, &acc, &layers)?;
+    let be = schedule::break_even_reconfig_secs(hw, &acc, &layers)?;
+
+    println!("AlexNet schedule (reconfig stall = {reconfig_us} µs):");
+    println!("{:>8} {:>10} {:>12} {:>10} {:>8}", "Layer", "config", "time(ms)", "GFLOPS", "reconf");
+    for l in &opt.layers {
+        println!(
+            "{:>8} {:>10} {:>12.3} {:>10.1} {:>8}",
+            l.name,
+            format!("({},{})", l.run.np, l.run.si),
+            l.secs * 1e3,
+            l.gflops,
+            if l.reconfigured { "yes" } else { "" }
+        );
+    }
+    println!(
+        "\nper-layer optimal: {:.3} ms total ({} reconfigs) -> {:.1} GFLOPS",
+        opt.total_secs * 1e3,
+        opt.reconfigs,
+        opt.total_gflops
+    );
+    println!(
+        "best fixed {}: {:.3} ms total -> {:.1} GFLOPS",
+        fixed.layers[0].run,
+        fixed.total_secs * 1e3,
+        fixed.total_gflops
+    );
+    println!(
+        "break-even reconfiguration cost: {:.1} µs per switch",
+        be * 1e6
+    );
+    Ok(())
+}
+
+/// Serve a file of jobs through the coordinator's queue, one line per
+/// GEMM: `M K N [NP SI]`. Demonstrates the serving face: the client
+/// thread enqueues, the coordinator drains, per-job replies come back on
+/// per-job channels.
+fn cmd_batch(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
+    let file = args
+        .flags
+        .get("file")
+        .ok_or_else(|| anyhow::anyhow!("missing required --file"))?;
+    let text = if file == "-" {
+        let mut s = String::new();
+        std::io::Read::read_to_string(&mut std::io::stdin(), &mut s)?;
+        s
+    } else {
+        std::fs::read_to_string(file)?
+    };
+    let mut jobs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let nums: Vec<usize> = line
+            .split_whitespace()
+            .map(|t| {
+                t.parse()
+                    .map_err(|_| anyhow::anyhow!("line {}: bad number {t:?}", lineno + 1))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let (mkn, run) = match nums.as_slice() {
+            [m, k, n] => ((*m, *k, *n), None),
+            [m, k, n, np, si] => ((*m, *k, *n), Some(RunConfig::square(*np, *si))),
+            _ => anyhow::bail!("line {}: expected `M K N [NP SI]`", lineno + 1),
+        };
+        jobs.push((mkn, run));
+    }
+    anyhow::ensure!(!jobs.is_empty(), "no jobs in {file}");
+
+    let artifacts = args
+        .flags
+        .get("artifacts")
+        .map(String::as_str)
+        .unwrap_or("artifacts");
+    let engine = if args.flags.contains_key("golden") {
+        NumericsEngine::golden()
+    } else {
+        NumericsEngine::auto(artifacts)
+    };
+    println!("numerics backend: {} | {} jobs", engine.name, jobs.len());
+    let co = Coordinator::new(hw.clone(), engine);
+
+    let (jtx, jrx) = std::sync::mpsc::channel();
+    let replies: Vec<_> = jobs
+        .iter()
+        .enumerate()
+        .map(|(id, ((m, k, n), run))| {
+            let (rtx, rrx) = std::sync::mpsc::channel();
+            let a = Matrix::random(*m, *k, id as u64 * 2);
+            let b = Matrix::random(*k, *n, id as u64 * 2 + 1);
+            jtx.send((GemmJob { id: id as u64, a, b, run: *run }, rtx)).unwrap();
+            rrx
+        })
+        .collect();
+    drop(jtx);
+
+    let t0 = std::time::Instant::now();
+    co.serve(jrx);
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "{:>4} {:>16} {:>10} {:>12} {:>10} {:>10}",
+        "job", "M*K*N", "config", "sim(ms)", "GFLOPS", "host(s)"
+    );
+    let mut total_flops = 0u64;
+    let mut total_sim = 0.0;
+    for ((id, ((m, k, n), _)), rrx) in jobs.iter().enumerate().zip(replies) {
+        let r = rrx.recv()??;
+        total_flops += 2 * (*m as u64) * (*k as u64) * (*n as u64);
+        total_sim += r.sim.total_secs;
+        println!(
+            "{:>4} {:>16} {:>10} {:>12.3} {:>10.1} {:>10.3}",
+            id,
+            format!("{m}*{k}*{n}"),
+            format!("({},{})", r.run.np, r.run.si),
+            r.sim.total_secs * 1e3,
+            r.sim.gflops,
+            r.host_latency_secs
+        );
+    }
+    println!(
+        "batch: {} jobs in {:.2} s host wall | simulated {:.3} ms total -> {:.1} GFLOPS sustained",
+        jobs.len(),
+        wall,
+        total_sim * 1e3,
+        total_flops as f64 / total_sim / 1e9
+    );
+    println!("metrics: {}", co.metrics().summary());
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! The Matrices Processing Engine — Section III-A.
+//!
+//! `P_m` linear arrays of `P` PEs with multiplexers between adjacent
+//! arrays. In *Independent* mode each array executes tasks alone; in
+//! *Cooperation* mode a multiplexer chains two neighbours into one longer
+//! array that shares a single memory interface and supports block sizes
+//! up to the combined PE count (Eq. 9's coupling of `N_p` and `S_i`).
+//!
+//! Two levels of fidelity, cross-validated in tests:
+//! * [`pe`] — a cycle-stepped simulation of one (possibly chained) array
+//!   executing one sub-block task: per-PE `R_a` double buffering, `M_c`
+//!   accumulation, PSU stall insertion when `S_i != S_j`, `f_c` drain.
+//!   Produces both the numerical result and the exact cycle count.
+//! * [`timing`] — the closed-form per-task cycle model (the Eq. 6
+//!   components); asserted equal to the stepped simulation across the
+//!   parameter space, then used by the fast event-driven simulator in
+//!   [`crate::accelerator`].
+
+pub mod pe;
+pub mod timing;
+
+pub use pe::{LinearArray, TaskExecution};
+pub use timing::TaskTiming;
+
+use crate::config::{HardwareConfig, RunConfig};
+
+/// How the muxes are programmed for a run: `pm / np` base arrays chain
+/// into each of the `np` logical arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrayGeometry {
+    /// Logical (post-chaining) arrays working in parallel (`N_p`).
+    pub np: usize,
+    /// Base arrays chained per logical array (`pm / np`).
+    pub chain: usize,
+    /// PEs per logical array (`chain * P`).
+    pub pes: usize,
+}
+
+impl ArrayGeometry {
+    pub fn for_run(hw: &HardwareConfig, run: &RunConfig) -> anyhow::Result<Self> {
+        run.validate(hw)?;
+        let chain = hw.pm / run.np;
+        Ok(Self { np: run.np, chain, pes: chain * hw.p })
+    }
+
+    /// Operation mode of the inter-array multiplexers.
+    pub fn mode(&self) -> OperatingMode {
+        if self.chain == 1 {
+            OperatingMode::Independent
+        } else {
+            OperatingMode::Cooperation
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OperatingMode {
+    /// All muxes disabled; arrays run separate tasks.
+    Independent,
+    /// Muxes enabled; chained arrays act as one longer array.
+    Cooperation,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_chains_by_power_of_two() {
+        let hw = HardwareConfig::paper();
+        let g = ArrayGeometry::for_run(&hw, &RunConfig::square(4, 64)).unwrap();
+        assert_eq!((g.chain, g.pes), (1, 64));
+        assert_eq!(g.mode(), OperatingMode::Independent);
+
+        let g = ArrayGeometry::for_run(&hw, &RunConfig::square(2, 128)).unwrap();
+        assert_eq!((g.chain, g.pes), (2, 128));
+        assert_eq!(g.mode(), OperatingMode::Cooperation);
+
+        let g = ArrayGeometry::for_run(&hw, &RunConfig::square(1, 256)).unwrap();
+        assert_eq!((g.chain, g.pes), (4, 256));
+    }
+
+    #[test]
+    fn geometry_rejects_eq9_violations() {
+        let hw = HardwareConfig::paper();
+        assert!(ArrayGeometry::for_run(&hw, &RunConfig::square(4, 128)).is_err());
+        assert!(ArrayGeometry::for_run(&hw, &RunConfig::square(3, 16)).is_err());
+    }
+}

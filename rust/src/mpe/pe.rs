@@ -1,0 +1,315 @@
+//! Cycle-stepped simulation of one linear PE array executing one
+//! sub-block task `C_ij = SA_i x SB_j` (the dataflow of Fig. 1, right).
+//!
+//! Per PE state, exactly as the paper describes:
+//! * `r_a` — double-buffered registers holding this PE's element of the
+//!   current column `V_k` (front) while the next column `V_{k+1}` streams
+//!   in (back);
+//! * `m_c` — local memory accumulating this PE's row of `C_ij`;
+//! * the PSU — when `S_i != S_j` the two streams finish an iteration at
+//!   different times; the PSU stalls the faster stream so every PE sees
+//!   the `k`-th column of SA and the `k`-th row of SB aligned.
+//!
+//! One element of each stream enters the array per cycle (the linear
+//! array's single memory interface delivers one `a` and one `b` word per
+//! cycle — its low-bandwidth virtue). An iteration therefore takes
+//! `max(S_i, S_j)` cycles, the prefetch of `V_1` takes `S_i`, and the
+//! FMAC pipeline drains in `Stage_fmac`: the stepped total reproduces
+//! Eq. 6's `S_i + max(S_i, S_j) * K + Stage_fmac` per task, which
+//! [`super::timing`] then uses in closed form.
+
+use crate::gemm::Matrix;
+
+/// What one task execution produced.
+#[derive(Debug, Clone)]
+pub struct TaskExecution {
+    /// The `rows x cols` result block.
+    pub result: Matrix,
+    /// Cycles spent in each phase.
+    pub prefetch_cycles: u64,
+    pub compute_cycles: u64,
+    pub drain_cycles: u64,
+    /// PSU stalls inserted (cycles the shorter stream waited).
+    pub psu_stalls: u64,
+    /// Cycles to stream the result block out through `f_c` (overlapped
+    /// with the next task's load in the full accelerator; reported for
+    /// the write-back path model).
+    pub writeback_cycles: u64,
+}
+
+impl TaskExecution {
+    /// Total compute-pipeline cycles (what Eq. 6 counts).
+    pub fn total_cycles(&self) -> u64 {
+        self.prefetch_cycles + self.compute_cycles + self.drain_cycles
+    }
+}
+
+/// One logical (possibly mux-chained) linear array of `pes` PEs.
+#[derive(Debug, Clone)]
+pub struct LinearArray {
+    pub pes: usize,
+    pub fmac_stages: usize,
+}
+
+struct PeState {
+    /// Double-buffered R_a: [front (in use), back (being loaded)].
+    r_a: [f32; 2],
+    /// Local memory M_c: this PE's row of the accumulator block.
+    m_c: Vec<f32>,
+}
+
+impl LinearArray {
+    pub fn new(pes: usize, fmac_stages: usize) -> Self {
+        assert!(pes >= 1);
+        Self { pes, fmac_stages }
+    }
+
+    /// Execute one sub-block task. `sa` is the `rows x k` slice of A
+    /// (`rows <= S_i`), `sb` the `k x cols` slice of B (`cols <= S_j`);
+    /// `si`/`sj` are the *programmed* block sizes (BZ in the buffer
+    /// descriptor) — the pipeline walks the padded extent, which is how
+    /// the zero-padding of Section IV spends real cycles.
+    pub fn execute_task(
+        &self,
+        sa: &Matrix,
+        sb: &Matrix,
+        si: usize,
+        sj: usize,
+    ) -> TaskExecution {
+        assert_eq!(sa.cols, sb.rows, "contraction mismatch");
+        assert!(sa.rows <= si && sb.cols <= sj, "block overflow");
+        assert!(
+            si <= self.pes,
+            "S_i = {si} exceeds array length {} (Eq. 9)",
+            self.pes
+        );
+        let k_iters = sa.cols;
+        let iter_len = si.max(sj) as u64;
+
+        let mut pes: Vec<PeState> = (0..si)
+            .map(|_| PeState { r_a: [0.0; 2], m_c: vec![0.0; sj] })
+            .collect();
+
+        // --- Prefetch: V_1 streams in, PE `i` latches element `i`.
+        // One element per cycle => S_i cycles.
+        let mut cycles_prefetch = 0u64;
+        for (i, pe) in pes.iter_mut().enumerate() {
+            pe.r_a[0] = if i < sa.rows { sa.get(i, 0) } else { 0.0 };
+            cycles_prefetch += 1;
+        }
+
+        // --- Compute: K iterations. In iteration k (1-based), U_k streams
+        // across all PEs while V_{k+1} streams into the back buffers.
+        let mut cycles_compute = 0u64;
+        let mut psu_stalls = 0u64;
+        for k in 0..k_iters {
+            // The b-stream delivers U_k in S_j cycles and the a-stream
+            // delivers V_{k+1} in S_i cycles, concurrently; the iteration
+            // slot closes when the longer stream finishes, so the PSU
+            // holds the compute (b) stream for max(S_i,S_j) - S_j cycles
+            // whenever S_i > S_j (and idles the a-stream in the converse
+            // case, which costs nothing — the FMAC keeps consuming b).
+            cycles_compute += iter_len;
+            psu_stalls += iter_len - sj as u64;
+
+            for (i, pe) in pes.iter_mut().enumerate() {
+                // FMAC: R_a (front) times every element of U_k, accumulated
+                // into M_c — the R_a value is reused S_j times.
+                let a = pe.r_a[0];
+                for j in 0..sj {
+                    let b = if i < sa.rows && j < sb.cols {
+                        sb.get(k, j)
+                    } else {
+                        0.0
+                    };
+                    pe.m_c[j] += a * b;
+                }
+                // Back buffer fills with V_{k+1} in the same iteration.
+                if k + 1 < k_iters {
+                    pe.r_a[1] = if i < sa.rows { sa.get(i, k + 1) } else { 0.0 };
+                }
+            }
+            // Double-buffer swap at the iteration boundary.
+            for pe in pes.iter_mut() {
+                pe.r_a[0] = pe.r_a[1];
+            }
+        }
+
+        // --- Drain: the FMAC pipeline empties.
+        let cycles_drain = self.fmac_stages as u64;
+
+        // --- Write-back: the last iteration writes into f_c instead of
+        // M_c; the block then streams PE-to-PE to PE_0 and out to the MAC:
+        // S_i * S_j elements at one per cycle (+ array traversal latency).
+        let writeback_cycles = (si * sj) as u64 + si as u64;
+
+        // Collect the un-padded result.
+        let rows = sa.rows;
+        let cols = sb.cols;
+        let mut result = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            result.data[i * cols..(i + 1) * cols]
+                .copy_from_slice(&pes[i].m_c[..cols]);
+        }
+
+        TaskExecution {
+            result,
+            prefetch_cycles: cycles_prefetch,
+            compute_cycles: cycles_compute,
+            drain_cycles: cycles_drain,
+            psu_stalls,
+            writeback_cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpe::timing::TaskTiming;
+    use crate::util::check;
+
+    fn array(pes: usize) -> LinearArray {
+        LinearArray::new(pes, 14)
+    }
+
+    #[test]
+    fn numerics_match_oracle() {
+        let sa = Matrix::random(8, 5, 1);
+        let sb = Matrix::random(5, 8, 2);
+        let exec = array(8).execute_task(&sa, &sb, 8, 8);
+        assert!(exec.result.allclose(&sa.matmul(&sb), 1e-5));
+    }
+
+    #[test]
+    fn padded_task_numerics_unchanged() {
+        // rows < S_i, cols < S_j: padding lanes must not pollute results.
+        let sa = Matrix::random(5, 7, 3);
+        let sb = Matrix::random(7, 3, 4);
+        let exec = array(8).execute_task(&sa, &sb, 8, 8);
+        assert_eq!((exec.result.rows, exec.result.cols), (5, 3));
+        assert!(exec.result.allclose(&sa.matmul(&sb), 1e-5));
+    }
+
+    #[test]
+    fn cycle_count_matches_eq6_square() {
+        let si = 8;
+        let k = 12;
+        let sa = Matrix::random(si, k, 5);
+        let sb = Matrix::random(k, si, 6);
+        let exec = array(8).execute_task(&sa, &sb, si, si);
+        let want = TaskTiming::per_task(si, si, k, 14);
+        assert_eq!(exec.total_cycles(), want.total());
+    }
+
+    #[test]
+    fn psu_stalls_zero_when_square() {
+        let sa = Matrix::random(8, 6, 7);
+        let sb = Matrix::random(6, 8, 8);
+        let exec = array(8).execute_task(&sa, &sb, 8, 8);
+        assert_eq!(exec.psu_stalls, 0);
+    }
+
+    #[test]
+    fn psu_stalls_when_si_exceeds_sj() {
+        // a-stream (S_i = 8) longer than b-stream (S_j = 4): the PSU
+        // holds the compute stream (8 - 4) cycles every iteration.
+        let k = 5;
+        let sa = Matrix::random(8, k, 9);
+        let sb = Matrix::random(k, 4, 10);
+        let exec = array(8).execute_task(&sa, &sb, 8, 4);
+        assert_eq!(exec.psu_stalls, (8 - 4) * k as u64);
+        assert!(exec.result.allclose(&sa.matmul(&sb), 1e-5));
+    }
+
+    #[test]
+    fn no_fmac_stall_when_sj_exceeds_si() {
+        let sa = Matrix::random(4, 3, 15);
+        let sb = Matrix::random(3, 8, 16);
+        let exec = array(8).execute_task(&sa, &sb, 4, 8);
+        assert_eq!(exec.psu_stalls, 0);
+        assert!(exec.result.allclose(&sa.matmul(&sb), 1e-5));
+    }
+
+    #[test]
+    fn writeback_streams_block_plus_latency() {
+        let sa = Matrix::random(4, 3, 11);
+        let sb = Matrix::random(3, 6, 12);
+        let exec = array(8).execute_task(&sa, &sb, 4, 6);
+        assert_eq!(exec.writeback_cycles, 4 * 6 + 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "Eq. 9")]
+    fn block_larger_than_array_panics() {
+        let sa = Matrix::random(9, 2, 13);
+        let sb = Matrix::random(2, 9, 14);
+        array(8).execute_task(&sa, &sb, 9, 9);
+    }
+
+    /// The stepped simulation always agrees with the closed form the
+    /// fast simulator uses — the key cross-validation of the crate.
+    #[test]
+    fn prop_cycles_equal_closed_form() {
+        check::cases(48, |rng| {
+            let (si, sj, k) = (rng.range(1, 24), rng.range(1, 24), rng.range(1, 16));
+            let seed = rng.next_u64();
+            let sa = Matrix::random(si, k, seed);
+            let sb = Matrix::random(k, sj, seed + 1);
+            let exec = LinearArray::new(32, 14).execute_task(&sa, &sb, si, sj);
+            let want = TaskTiming::per_task(si, sj, k, 14);
+            assert_eq!(exec.total_cycles(), want.total());
+        });
+    }
+
+    #[test]
+    fn cooperation_mode_supports_blocks_beyond_base_array() {
+        // Two chained 64-PE arrays act as one 128-PE array (Cooperation
+        // mode): an S_i = 128 task is only executable on the chain.
+        let chained = LinearArray::new(128, 14);
+        let sa = Matrix::random(128, 6, 21);
+        let sb = Matrix::random(6, 128, 22);
+        let exec = chained.execute_task(&sa, &sb, 128, 128);
+        assert!(exec.result.allclose(&sa.matmul(&sb), 1e-4));
+        assert_eq!(
+            exec.total_cycles(),
+            TaskTiming::per_task(128, 128, 6, 14).total()
+        );
+    }
+
+    #[test]
+    fn single_pe_array_degenerates_to_dot_products() {
+        // P = 1, S_i = 1: the array is one PE computing a row of C.
+        let arr = LinearArray::new(1, 2);
+        let sa = Matrix::random(1, 9, 23);
+        let sb = Matrix::random(9, 5, 24);
+        let exec = arr.execute_task(&sa, &sb, 1, 5);
+        assert!(exec.result.allclose(&sa.matmul(&sb), 1e-5));
+    }
+
+    #[test]
+    fn k_equals_one_single_rank1_update() {
+        let arr = array(8);
+        let sa = Matrix::random(4, 1, 25);
+        let sb = Matrix::random(1, 4, 26);
+        let exec = arr.execute_task(&sa, &sb, 4, 4);
+        assert!(exec.result.allclose(&sa.matmul(&sb), 1e-6));
+        // One iteration: prefetch 4 + compute 4 + drain 14.
+        assert_eq!(exec.total_cycles(), 4 + 4 + 14);
+    }
+
+    /// Numerics always match the oracle, padded or not.
+    #[test]
+    fn prop_numerics() {
+        check::cases(48, |rng| {
+            let (rows, cols, k) = (rng.range(1, 16), rng.range(1, 16), rng.range(1, 10));
+            let (pad_r, pad_c) = (rng.range(0, 4), rng.range(0, 4));
+            let seed = rng.next_u64();
+            let sa = Matrix::random(rows, k, seed);
+            let sb = Matrix::random(k, cols, seed + 1);
+            let exec = LinearArray::new(32, 8)
+                .execute_task(&sa, &sb, rows + pad_r, cols + pad_c);
+            assert!(exec.result.allclose(&sa.matmul(&sb), 1e-4));
+        });
+    }
+}

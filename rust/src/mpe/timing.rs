@@ -1,0 +1,105 @@
+//! Closed-form per-task cycle model — Eq. 6's numerator, validated
+//! cycle-for-cycle against the stepped simulation in [`super::pe`].
+
+
+/// Cycle breakdown of one sub-block task on one logical array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskTiming {
+    /// V_1 prefetch: `S_i` cycles.
+    pub prefetch: u64,
+    /// K iterations of `max(S_i, S_j)` cycles each.
+    pub compute: u64,
+    /// FMAC pipeline drain: `Stage_fmac` cycles.
+    pub drain: u64,
+    /// Result stream-out through `f_c`: `S_i * S_j + S_i` cycles
+    /// (overlapped with the next task in the full accelerator; *not*
+    /// part of Eq. 6's compute time).
+    pub writeback: u64,
+}
+
+impl TaskTiming {
+    /// Eq. 6 numerator for one task: `S_i + max(S_i,S_j) * K + Stage_fmac`.
+    pub fn per_task(si: usize, sj: usize, k: usize, fmac_stages: usize) -> Self {
+        Self {
+            prefetch: si as u64,
+            compute: si.max(sj) as u64 * k as u64,
+            drain: fmac_stages as u64,
+            writeback: (si * sj + si) as u64,
+        }
+    }
+
+    /// Compute-pipeline cycles (what Eq. 6 counts).
+    pub fn total(&self) -> u64 {
+        self.prefetch + self.compute + self.drain
+    }
+
+    /// Seconds at the accelerator clock.
+    pub fn seconds(&self, freq_mhz: f64) -> f64 {
+        self.total() as f64 / (freq_mhz * 1e6)
+    }
+}
+
+/// Eq. 6 in full: compute time (seconds) for `n_work` tasks on one array.
+pub fn t_compute(
+    n_work: usize,
+    si: usize,
+    sj: usize,
+    k: usize,
+    fmac_stages: usize,
+    freq_mhz: f64,
+) -> f64 {
+    n_work as f64 * TaskTiming::per_task(si, sj, k, fmac_stages).total() as f64
+        / (freq_mhz * 1e6)
+}
+
+/// Sustained-throughput ceiling of one array running back-to-back tasks:
+/// useful FLOPs per task over cycles per task, at `freq_mhz`.
+pub fn array_gflops(si: usize, sj: usize, k: usize, fmac_stages: usize, freq_mhz: f64) -> f64 {
+    let t = TaskTiming::per_task(si, sj, k, fmac_stages);
+    let flops = 2.0 * si as f64 * sj as f64 * k as f64;
+    flops / (t.total() as f64 / (freq_mhz * 1e6)) / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq6_components() {
+        let t = TaskTiming::per_task(128, 128, 1200, 14);
+        assert_eq!(t.prefetch, 128);
+        assert_eq!(t.compute, 128 * 1200);
+        assert_eq!(t.drain, 14);
+        assert_eq!(t.total(), 128 + 128 * 1200 + 14);
+    }
+
+    #[test]
+    fn asymmetric_uses_max() {
+        let t = TaskTiming::per_task(64, 96, 10, 8);
+        assert_eq!(t.compute, 96 * 10);
+    }
+
+    #[test]
+    fn t_compute_scales_with_n_work() {
+        let one = t_compute(1, 128, 128, 1200, 14, 200.0);
+        let three = t_compute(3, 128, 128, 1200, 14, 200.0);
+        assert!((three - 3.0 * one).abs() < 1e-12);
+    }
+
+    #[test]
+    fn array_gflops_approaches_2si_freq() {
+        // With S_i = S_j and K large, cycles/task -> S_i * K, so the array
+        // sustains ~2 * S_i FLOP/cycle = 2 * S_i * F GFLOPS: each of the
+        // S_i PEs retires one FMAC per cycle.
+        let g = array_gflops(128, 128, 100_000, 14, 200.0);
+        let peak = 2.0 * 128.0 * 200e6 / 1e9; // 51.2
+        assert!(g > 0.99 * peak && g <= peak, "{g} vs {peak}");
+    }
+
+    #[test]
+    fn seconds_at_200mhz() {
+        let t = TaskTiming::per_task(2, 2, 1, 0);
+        // 2 + 2 + 0 = 4 cycles at 200 MHz = 20 ns.
+        assert!((t.seconds(200.0) - 20e-9).abs() < 1e-18);
+    }
+}

@@ -1,0 +1,156 @@
+//! `artifacts/manifest.tsv` — the contract between `python/compile/aot.py`
+//! and the rust runtime. Python writes both a human-friendly
+//! `manifest.json` and this TSV twin; rust reads the TSV (the offline
+//! vendored crate set has no JSON parser, and the schema is three flat
+//! record types — TSV is the honest format).
+//!
+//! Line format (tab-separated, `#` comments):
+//! ```text
+//! task\t<name>\t<file>\t<si>\t<kc>\t<sj>
+//! full\t<name>\t<file>\t<n>
+//! alexnet\t<layer>\t<m>\t<k>\t<n>
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One task-executable entry (`C' = C + A @ B` at fixed panel shape).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskShapeEntry {
+    pub name: String,
+    pub file: String,
+    pub si: usize,
+    pub kc: usize,
+    pub sj: usize,
+}
+
+/// One self-contained `A @ B` entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FullEntry {
+    pub name: String,
+    pub file: String,
+    pub n: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub tasks: Vec<TaskShapeEntry>,
+    pub full: Vec<FullEntry>,
+    /// Table II layer name -> [M, K, N]; asserted against `crate::cnn`.
+    pub alexnet: BTreeMap<String, [usize; 3]>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("read {} — run `make artifacts`", path.display())
+        })?;
+        let m = Self::parse(&text)?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut m = Self::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            let ctx = || format!("manifest.tsv line {}: {line:?}", lineno + 1);
+            match f.as_slice() {
+                ["task", name, file, si, kc, sj] => m.tasks.push(TaskShapeEntry {
+                    name: name.to_string(),
+                    file: file.to_string(),
+                    si: si.parse().with_context(ctx)?,
+                    kc: kc.parse().with_context(ctx)?,
+                    sj: sj.parse().with_context(ctx)?,
+                }),
+                ["full", name, file, n] => m.full.push(FullEntry {
+                    name: name.to_string(),
+                    file: file.to_string(),
+                    n: n.parse().with_context(ctx)?,
+                }),
+                ["alexnet", layer, mm, kk, nn] => {
+                    m.alexnet.insert(
+                        layer.to_string(),
+                        [
+                            mm.parse().with_context(ctx)?,
+                            kk.parse().with_context(ctx)?,
+                            nn.parse().with_context(ctx)?,
+                        ],
+                    );
+                }
+                _ => bail!("{}: unknown record", ctx()),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.tasks.is_empty(), "manifest lists no task shapes");
+        for t in &self.tasks {
+            anyhow::ensure!(
+                t.si > 0 && t.kc > 0 && t.sj > 0,
+                "degenerate task shape {}",
+                t.name
+            );
+        }
+        // The Python model and the rust cnn module must agree on Table II.
+        for (name, &[m, k, n]) in &self.alexnet {
+            if let Some(layer) = crate::cnn::layer(name) {
+                anyhow::ensure!(
+                    (layer.m, layer.k, layer.n) == (m, k, n),
+                    "layer {name}: python says {m}x{k}x{n}, rust says {}x{}x{}",
+                    layer.m,
+                    layer.k,
+                    layer.n
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_cross_checks() {
+        let text = "# comment\n\
+                    task\tt\tt.hlo.txt\t32\t128\t32\n\
+                    full\tg\tg.hlo.txt\t256\n\
+                    alexnet\tconv2\t128\t1200\t729\n";
+        let m = Manifest::parse(text).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.tasks[0].si, 32);
+        assert_eq!(m.full[0].n, 256);
+        assert_eq!(m.alexnet["conv2"], [128, 1200, 729]);
+    }
+
+    #[test]
+    fn mismatched_alexnet_shape_rejected() {
+        let text = "task\tt\tt.hlo.txt\t32\t128\t32\n\
+                    alexnet\tconv2\t128\t1200\t999\n";
+        let m = Manifest::parse(text).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn empty_tasks_rejected() {
+        let m = Manifest::parse("full\tg\tg.hlo.txt\t256\n").unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(Manifest::parse("task\tonly\ttwo\n").is_err());
+        assert!(Manifest::parse("task\tt\tf\tx\t128\t32\n").is_err());
+        assert!(Manifest::parse("what\tis\tthis\n").is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
+//! them on the CPU PJRT client. This is the only place numerics leave
+//! rust; Python is never on this path.
+//!
+//! The workload unit mirrors the accelerator's: a *task executable*
+//! computes `C' = C + A_panel @ B_panel` for a fixed `(S_i, KC, S_j)`
+//! panel shape (the L1 Pallas kernel under the hood). Arbitrary block
+//! products are built by tiling rows/columns to an available shape and
+//! threading `C` through K-chunks — exactly how the PE array's `M_c`
+//! accumulates across the K loop.
+
+mod manifest;
+
+pub use manifest::{FullEntry, Manifest, TaskShapeEntry};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::gemm::Matrix;
+
+/// A compiled task executable and its panel geometry.
+struct TaskExe {
+    si: usize,
+    kc: usize,
+    sj: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT-backed GEMM engine.
+pub struct Runtime {
+    tasks: Vec<TaskExe>,
+    full: HashMap<usize, xla::PjRtLoadedExecutable>,
+    pub dir: PathBuf,
+}
+
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+impl Runtime {
+    /// Load and compile every artifact listed in `manifest.json`.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+
+        let mut tasks = Vec::new();
+        for entry in &manifest.tasks {
+            let exe = Self::compile(&client, &dir.join(&entry.file))?;
+            tasks.push(TaskExe { si: entry.si, kc: entry.kc, sj: entry.sj, exe });
+        }
+        // Largest panels first: the chunking loop prefers them.
+        tasks.sort_by(|a, b| (b.si, b.kc).cmp(&(a.si, a.kc)));
+
+        let mut full = HashMap::new();
+        for entry in &manifest.full {
+            full.insert(entry.n, Self::compile(&client, &dir.join(&entry.file))?);
+        }
+        Ok(Self { tasks, full, dir })
+    }
+
+    fn compile(
+        client: &xla::PjRtClient,
+        path: &Path,
+    ) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(xerr)
+    }
+
+    /// Convenience: load from `$MARR_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> anyhow::Result<Self> {
+        let dir = std::env::var("MARR_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    /// Panel shapes available, largest first — `(si, kc, sj)`.
+    pub fn task_shapes(&self) -> Vec<(usize, usize, usize)> {
+        self.tasks.iter().map(|t| (t.si, t.kc, t.sj)).collect()
+    }
+
+    /// Pick the largest square tile `<= want` (artifacts ship 16..128),
+    /// falling back to the smallest available for tiny blocks.
+    fn tile_for(&self, want: usize) -> anyhow::Result<usize> {
+        self.tasks
+            .iter()
+            .filter(|t| t.si == t.sj && t.si <= want)
+            .map(|t| t.si)
+            .max()
+            .or_else(|| {
+                self.tasks.iter().filter(|t| t.si == t.sj).map(|t| t.si).min()
+            })
+            .ok_or_else(|| anyhow::anyhow!("no square task artifacts loaded"))
+    }
+
+    fn literal(m: &Matrix) -> anyhow::Result<xla::Literal> {
+        xla::Literal::vec1(&m.data)
+            .reshape(&[m.rows as i64, m.cols as i64])
+            .map_err(xerr)
+    }
+
+    fn unpack(result: xla::Literal, rows: usize, cols: usize) -> anyhow::Result<Matrix> {
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(xerr)?;
+        Ok(Matrix::from_vec(rows, cols, out.to_vec::<f32>().map_err(xerr)?))
+    }
+
+    /// One accumulation step `C' = C + A @ B` on task executable
+    /// `exe_idx`. Operands must already have the exact panel shape.
+    fn run_task_exe(
+        &self,
+        exe_idx: usize,
+        a: &Matrix,
+        b: &Matrix,
+        c: &Matrix,
+    ) -> anyhow::Result<Matrix> {
+        let t = &self.tasks[exe_idx];
+        debug_assert_eq!((a.rows, a.cols), (t.si, t.kc));
+        debug_assert_eq!((b.rows, b.cols), (t.kc, t.sj));
+        let out = t
+            .exe
+            .execute::<xla::Literal>(&[
+                Self::literal(a)?,
+                Self::literal(b)?,
+                Self::literal(c)?,
+            ])
+            .map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        Self::unpack(out, t.si, t.sj)
+    }
+
+    /// Compute one sub-block product `SA x SB` (`rows x k` times
+    /// `k x cols`, any sizes) by tiling to the available panel shapes:
+    /// the runtime analogue of one WQM task.
+    pub fn block_product(&self, sa: &Matrix, sb: &Matrix) -> anyhow::Result<Matrix> {
+        anyhow::ensure!(sa.cols == sb.rows, "contraction mismatch");
+        let tile = self.tile_for(sa.rows.max(sb.cols))?;
+        let k = sa.cols;
+        let mut c = Matrix::zeros(sa.rows, sb.cols);
+        let mut r0 = 0;
+        while r0 < sa.rows {
+            let mut c0 = 0;
+            while c0 < sb.cols {
+                let block = self.tile_product(sa, sb, r0, c0, tile, k)?;
+                let rows = tile.min(sa.rows - r0);
+                let cols = tile.min(sb.cols - c0);
+                c.set_block(r0, c0, &block.block(0, 0, rows, cols));
+                c0 += tile;
+            }
+            r0 += tile;
+        }
+        Ok(c)
+    }
+
+    /// One `tile x tile` output block, accumulated over K chunks chosen
+    /// greedily from the available `kc` variants (largest first), with
+    /// the ragged tail zero-padded — Section IV's padding, applied at
+    /// the artifact boundary.
+    fn tile_product(
+        &self,
+        sa: &Matrix,
+        sb: &Matrix,
+        r0: usize,
+        c0: usize,
+        tile: usize,
+        k: usize,
+    ) -> anyhow::Result<Matrix> {
+        let min_kc = self.min_kc(tile);
+        let mut c = Matrix::zeros(tile, tile);
+        let mut k0 = 0;
+        while k0 < k {
+            // Largest kc that still fits the remaining depth; the
+            // smallest kc otherwise (its tail will be zero-padded).
+            let exe_idx = self
+                .tasks
+                .iter()
+                .position(|t| {
+                    t.si == tile
+                        && t.sj == tile
+                        && (k0 + t.kc <= k || t.kc == min_kc)
+                })
+                .ok_or_else(|| anyhow::anyhow!("no task exe for tile {tile}"))?;
+            let kc = self.tasks[exe_idx].kc;
+            // Gather the (padded) A and B panels for this chunk. Row-wise
+            // memcpy, not per-element loops — this gather sits on the
+            // coordinator's hot path (see EXPERIMENTS.md §Perf).
+            let valid_k = kc.min(k - k0);
+            let valid_rows = tile.min(sa.rows.saturating_sub(r0));
+            let valid_cols = tile.min(sb.cols.saturating_sub(c0));
+            let mut a = Matrix::zeros(tile, kc);
+            for i in 0..valid_rows {
+                let src = (r0 + i) * sa.cols + k0;
+                a.data[i * kc..i * kc + valid_k]
+                    .copy_from_slice(&sa.data[src..src + valid_k]);
+            }
+            let mut b = Matrix::zeros(kc, tile);
+            for kk in 0..valid_k {
+                let src = (k0 + kk) * sb.cols + c0;
+                b.data[kk * tile..kk * tile + valid_cols]
+                    .copy_from_slice(&sb.data[src..src + valid_cols]);
+            }
+            c = self.run_task_exe(exe_idx, &a, &b, &c)?;
+            k0 += kc;
+        }
+        Ok(c)
+    }
+
+    fn min_kc(&self, tile: usize) -> usize {
+        self.tasks
+            .iter()
+            .filter(|t| t.si == tile && t.sj == tile)
+            .map(|t| t.kc)
+            .min()
+            .unwrap_or(usize::MAX)
+    }
+
+    /// Full GEMM through the task executables (blocked at the largest
+    /// available tile). The numerics path of the coordinator.
+    pub fn gemm(&self, a: &Matrix, b: &Matrix) -> anyhow::Result<Matrix> {
+        self.block_product(a, b)
+    }
+
+    /// Run a `gemm_full_{n}` artifact (quickstart/smoke path).
+    pub fn gemm_full(&self, a: &Matrix, b: &Matrix) -> anyhow::Result<Matrix> {
+        let n = a.rows;
+        let exe = self
+            .full
+            .get(&n)
+            .ok_or_else(|| anyhow::anyhow!("no gemm_full_{n} artifact"))?;
+        anyhow::ensure!(
+            a.cols == n && b.rows == n && b.cols == n,
+            "gemm_full_{n} needs {n}x{n} operands"
+        );
+        let out = exe
+            .execute::<xla::Literal>(&[Self::literal(a)?, Self::literal(b)?])
+            .map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        Self::unpack(out, n, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Tests needing compiled artifacts live in `rust/tests/runtime.rs`
+    //! (they skip when `artifacts/` is absent); here only pure logic.
+
+    use super::*;
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Runtime::load("/nonexistent/path").is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Minimal criterion-style benchmark harness for `harness = false`
+//! benches: warmup, timed iterations, mean / median / p95 / min, and an
+//! optional throughput line. Honors `MARR_BENCH_QUICK=1` for CI-speed
+//! runs.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark group/runner.
+pub struct Bench {
+    name: String,
+    warmup_iters: usize,
+    samples: usize,
+}
+
+/// Summary statistics of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub samples: usize,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        let quick = std::env::var("MARR_BENCH_QUICK").is_ok();
+        Self {
+            name: name.into(),
+            warmup_iters: if quick { 1 } else { 3 },
+            samples: if quick { 5 } else { 30 },
+        }
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    /// Time `f`, print a report line, return the stats.
+    pub fn run<T>(&self, label: &str, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut times: Vec<Duration> = (0..self.samples)
+            .map(|_| {
+                let t0 = Instant::now();
+                std::hint::black_box(f());
+                t0.elapsed()
+            })
+            .collect();
+        times.sort_unstable();
+        let total: Duration = times.iter().sum();
+        let stats = Stats {
+            mean: total / times.len() as u32,
+            median: times[times.len() / 2],
+            p95: times[(times.len() * 95 / 100).min(times.len() - 1)],
+            min: times[0],
+            samples: times.len(),
+        };
+        println!(
+            "bench {}/{label:<32} mean {:>12} median {:>12} p95 {:>12} min {:>12} (n={})",
+            self.name,
+            fmt(stats.mean),
+            fmt(stats.median),
+            fmt(stats.p95),
+            fmt(stats.min),
+            stats.samples
+        );
+        stats
+    }
+
+    /// Like [`run`], also printing elements/second throughput.
+    pub fn run_throughput<T>(
+        &self,
+        label: &str,
+        elements: u64,
+        f: impl FnMut() -> T,
+    ) -> Stats {
+        let stats = self.run(label, f);
+        let per_sec = elements as f64 / stats.median.as_secs_f64();
+        println!(
+            "bench {}/{label:<32} throughput {:.3e} elem/s",
+            self.name, per_sec
+        );
+        stats
+    }
+}
+
+fn fmt(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let b = Bench::new("test").samples(10);
+        let s = b.run("noop", || 1 + 1);
+        assert!(s.min <= s.median && s.median <= s.p95);
+        assert_eq!(s.samples, 10);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt(Duration::from_nanos(12)).contains("ns"));
+        assert!(fmt(Duration::from_micros(12)).contains("µs"));
+        assert!(fmt(Duration::from_millis(12)).contains("ms"));
+        assert!(fmt(Duration::from_secs(2)).contains(" s"));
+    }
+}

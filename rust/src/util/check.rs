@@ -1,0 +1,55 @@
+//! Seeded randomized property testing — the proptest replacement.
+//!
+//! [`cases`] drives a closure over `n` deterministic PRNG streams; a
+//! failure reports the seed so the case replays exactly. Shrinking is
+//! not implemented (cases are generated small instead).
+
+use super::rng::Rng;
+
+/// Run `f` over `n` seeded cases; panic with the failing seed on error.
+pub fn cases(n: usize, mut f: impl FnMut(&mut Rng)) {
+    for seed in 0..n as u64 {
+        let mut rng = Rng::new(0xC0FFEE ^ (seed.wrapping_mul(0x9E3779B97F4A7C15)));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at case #{seed} (replay with this index)");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Default case count, overridable via `MARR_CHECK_CASES`.
+pub fn default_cases() -> usize {
+    std::env::var("MARR_CHECK_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(48)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let count = std::cell::Cell::new(0);
+        cases(10, |_| count.set(count.get() + 1));
+        assert_eq!(count.get(), 10);
+    }
+
+    #[test]
+    fn cases_see_distinct_streams() {
+        let mut first = Vec::new();
+        cases(5, |rng| first.push(rng.next_u64()));
+        let uniq: std::collections::HashSet<_> = first.iter().collect();
+        assert_eq!(uniq.len(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failure_propagates() {
+        cases(3, |rng| assert!(rng.next_f64() < -1.0));
+    }
+}

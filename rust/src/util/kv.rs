@@ -1,0 +1,112 @@
+//! Flat `key = value` config parser with `[section]` headers — the TOML
+//! subset the hardware config files use. Values are numbers or bare
+//! strings; `#` starts a comment.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed file: `section -> key -> raw value` (the root section is "").
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KvFile {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl KvFile {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut out = Self::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                out.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got {line:?}", lineno + 1);
+            };
+            out.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(String::as_str)
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        self.get(section, key)
+            .map(|v| v.parse().with_context(|| format!("{section}.{key} = {v:?} is not a number")))
+            .transpose()
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
+        self.get(section, key)
+            .map(|v| v.parse().with_context(|| format!("{section}.{key} = {v:?} is not an integer")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Result<Option<u64>> {
+        self.get(section, key)
+            .map(|v| v.parse().with_context(|| format!("{section}.{key} = {v:?} is not an integer")))
+            .transpose()
+    }
+
+    /// Keys present in a section (for unknown-key validation).
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn sections(&self) -> Vec<&str> {
+        self.sections.keys().map(String::as_str).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let f = KvFile::parse(
+            "pm = 4 # arrays\nfreq_mhz = 200.0\n[ddr]\nbanks = 8\nname = \"vc709\"\n",
+        )
+        .unwrap();
+        assert_eq!(f.get_usize("", "pm").unwrap(), Some(4));
+        assert_eq!(f.get_f64("", "freq_mhz").unwrap(), Some(200.0));
+        assert_eq!(f.get_usize("ddr", "banks").unwrap(), Some(8));
+        assert_eq!(f.get("ddr", "name"), Some("vc709"));
+        assert_eq!(f.get("ddr", "missing"), None);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(KvFile::parse("this is not kv").is_err());
+        assert!(KvFile::parse("[unterminated\n").is_err());
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let f = KvFile::parse("pm = four").unwrap();
+        assert!(f.get_usize("", "pm").is_err());
+    }
+
+    #[test]
+    fn empty_file_ok() {
+        let f = KvFile::parse("\n# just a comment\n").unwrap();
+        assert_eq!(f.get("", "x"), None);
+    }
+}

@@ -1,0 +1,21 @@
+//! Std-only infrastructure the offline build environment demands.
+//!
+//! This workspace compiles against a vendored crate set containing only
+//! the `xla` closure + `anyhow`, so the usual ecosystem crates are
+//! replaced by small, tested, purpose-built equivalents:
+//!
+//! * [`rng`] — SplitMix64 PRNG (replaces `rand`/`rand_chacha`);
+//! * [`bench`] — a criterion-style timing harness for `harness = false`
+//!   benches (replaces `criterion`);
+//! * [`check`] — seeded randomized property-test driver (replaces
+//!   `proptest`);
+//! * [`kv`] — flat `key = value` config-file parser with `[section]`
+//!   support, the TOML subset [`crate::config`] needs (replaces `toml`).
+
+pub mod bench;
+pub mod check;
+pub mod kv;
+pub mod rng;
+
+pub use bench::Bench;
+pub use rng::Rng;

@@ -1,0 +1,267 @@
+//! Cross-module integration tests: the full simulated accelerator against
+//! golden numerics, model-vs-simulation agreement, DSE consistency, and
+//! the work-stealing end-to-end behaviour.
+
+use multi_array::accelerator::{Accelerator, SimOptions};
+use multi_array::analytical::{self, BandwidthSurface};
+use multi_array::blocking::BlockPlan;
+use multi_array::cnn;
+use multi_array::config::{HardwareConfig, RunConfig};
+use multi_array::coordinator::{Coordinator, GemmJob, NumericsEngine};
+use multi_array::dse;
+use multi_array::gemm::{blocked_matmul, Matrix};
+use multi_array::mpe::LinearArray;
+
+fn paper_acc() -> Accelerator {
+    Accelerator::new(HardwareConfig::paper())
+}
+
+#[test]
+fn stepped_array_equals_functional_equals_oracle() {
+    // Three independent numerics paths agree: the cycle-stepped PE array,
+    // the functional blocked algorithm, and the naive oracle.
+    let a = Matrix::random(48, 30, 1);
+    let b = Matrix::random(30, 40, 2);
+    let oracle = a.matmul(&b);
+
+    let functional = blocked_matmul(&a, &b, 16, 16);
+    assert!(functional.allclose(&oracle, 1e-4));
+
+    let arr = LinearArray::new(64, 14);
+    let plan = BlockPlan::new(48, 30, 40, 16, 16);
+    let mut c = Matrix::zeros(48, 40);
+    for t in plan.tasks() {
+        let sa = a.block(t.row0, 0, t.si, a.cols);
+        let sb = b.block(0, t.col0, b.rows, t.sj);
+        let exec = arr.execute_task(&sa, &sb, t.si, t.sj);
+        c.set_block(t.row0, t.col0, &exec.result);
+    }
+    assert!(c.allclose(&oracle, 1e-4));
+}
+
+#[test]
+fn simulated_time_within_model_bounds() {
+    // Eq. 7 must bracket the event simulation for every feasible config
+    // on conv-2 — the Fig. 4 claim.
+    let hw = HardwareConfig::paper();
+    let acc = paper_acc();
+    let l = cnn::layer("conv2").unwrap();
+    for si in [16usize, 32, 64, 128, 256] {
+        for np in analytical::feasible_nps(&hw, si) {
+            let run = RunConfig::square(np, si);
+            let p = analytical::predict(&hw, &run, l.m, l.k, l.n, acc.surface()).unwrap();
+            let sim = acc
+                .simulate(&run, l.m, l.k, l.n, &SimOptions::default())
+                .unwrap();
+            // Allow the pipeline-fill transfer of the first task above
+            // the pure-compute lower bound, and a small epsilon.
+            assert!(
+                sim.total_secs >= p.lower * 0.999,
+                "({np},{si}): sim {} < lower {}",
+                sim.total_secs,
+                p.lower
+            );
+            assert!(
+                sim.total_secs <= p.upper * 1.001 + p.t_work,
+                "({np},{si}): sim {} > upper {}",
+                sim.total_secs,
+                p.upper
+            );
+        }
+    }
+}
+
+#[test]
+fn memory_bound_configs_sit_near_upper_bound() {
+    // Fig. 4's second observation: when bandwidth is unsatisfied the
+    // actual time approaches the upper bound, not the lower.
+    let hw = HardwareConfig::paper();
+    let acc = paper_acc();
+    let l = cnn::layer("conv2").unwrap();
+    let run = RunConfig::square(2, 16); // memory-bound case
+    let p = analytical::predict(&hw, &run, l.m, l.k, l.n, acc.surface()).unwrap();
+    assert!(p.memory_bound());
+    let sim = acc.simulate(&run, l.m, l.k, l.n, &SimOptions::default()).unwrap();
+    let to_lower = (sim.total_secs - p.lower).abs();
+    let to_upper = (sim.total_secs - p.upper).abs();
+    assert!(
+        to_upper < to_lower,
+        "memory-bound sim {} should be nearer upper {} than lower {}",
+        sim.total_secs,
+        p.upper,
+        p.lower
+    );
+}
+
+#[test]
+fn compute_bound_configs_sit_near_lower_bound() {
+    let hw = HardwareConfig::paper();
+    let acc = paper_acc();
+    let l = cnn::layer("fc6").unwrap();
+    let run = RunConfig::square(2, 128); // the paper's optimum for fc6
+    let p = analytical::predict(&hw, &run, l.m, l.k, l.n, acc.surface()).unwrap();
+    assert!(!p.memory_bound());
+    let sim = acc.simulate(&run, l.m, l.k, l.n, &SimOptions::default()).unwrap();
+    let to_lower = (sim.total_secs - p.lower).abs();
+    let to_upper = (sim.total_secs - p.upper).abs();
+    assert!(to_lower < to_upper);
+}
+
+#[test]
+fn fig4_crossover_1_32_beats_2_16() {
+    // "the case of (Np,Si)=(1,32) achieves lower execution time than the
+    // case of (Np,Si)=(2,16)" — both memory-bound, bigger blocks win.
+    let acc = paper_acc();
+    let l = cnn::layer("conv2").unwrap();
+    let s132 = acc
+        .simulate(&RunConfig::square(1, 32), l.m, l.k, l.n, &SimOptions::default())
+        .unwrap();
+    let s216 = acc
+        .simulate(&RunConfig::square(2, 16), l.m, l.k, l.n, &SimOptions::default())
+        .unwrap();
+    assert!(
+        s132.total_secs < s216.total_secs,
+        "(1,32) {} should beat (2,16) {}",
+        s132.total_secs,
+        s216.total_secs
+    );
+}
+
+#[test]
+fn table2_optimal_beats_baselines_in_simulation() {
+    // The Table II claim, checked in the simulator (not just the model):
+    // the DSE's choice is at least as fast as both pure extensions.
+    let hw = HardwareConfig::paper();
+    let acc = paper_acc();
+    for l in cnn::alexnet_layers() {
+        let e = dse::explore(&hw, l.m, l.k, l.n, acc.surface()).unwrap();
+        let opt = acc
+            .simulate(&e.best.run, l.m, l.k, l.n, &SimOptions::default())
+            .unwrap();
+        for np in [4usize, 1] {
+            let base = dse::baseline(&hw, np, l.m, l.k, l.n, acc.surface()).unwrap();
+            let sim = acc
+                .simulate(&base.run, l.m, l.k, l.n, &SimOptions::default())
+                .unwrap();
+            assert!(
+                opt.gflops >= sim.gflops * 0.98,
+                "{}: optimal {} ({:.1}) slower than np={} {} ({:.1})",
+                l.name,
+                e.best.run,
+                opt.gflops,
+                np,
+                base.run,
+                sim.gflops
+            );
+        }
+    }
+}
+
+#[test]
+fn fc6_reaches_high_efficiency() {
+    // Paper: 100.9 / 102.4 GFLOPS = 98.6% on fc-6.
+    let hw = HardwareConfig::paper();
+    let acc = paper_acc();
+    let l = cnn::layer("fc6").unwrap();
+    let e = dse::explore(&hw, l.m, l.k, l.n, acc.surface()).unwrap();
+    let sim = acc
+        .simulate(&e.best.run, l.m, l.k, l.n, &SimOptions::default())
+        .unwrap();
+    assert!(
+        sim.efficiency(&hw) > 0.9,
+        "fc6 efficiency {:.3} below 0.9",
+        sim.efficiency(&hw)
+    );
+}
+
+#[test]
+fn work_stealing_recovers_skewed_bandwidth() {
+    let acc = paper_acc();
+    let run = RunConfig::square(4, 64);
+    let skew = Some(vec![1.0, 1.0, 0.5, 0.25]);
+    let on = acc
+        .simulate(
+            &run,
+            2048,
+            512,
+            2048,
+            &SimOptions { stealing: true, bw_skew: skew.clone(), ..Default::default() },
+        )
+        .unwrap();
+    let off = acc
+        .simulate(&run, 2048, 512, 2048, &SimOptions { stealing: false, bw_skew: skew, ..Default::default() })
+        .unwrap();
+    assert!(on.total_steals > 0);
+    assert!(
+        on.total_secs < off.total_secs * 0.95,
+        "stealing {} not faster than static {}",
+        on.total_secs,
+        off.total_secs
+    );
+}
+
+#[test]
+fn coordinator_end_to_end_golden() {
+    let co = Coordinator::new(HardwareConfig::paper(), NumericsEngine::golden());
+    let a = Matrix::random(200, 120, 10);
+    let b = Matrix::random(120, 160, 11);
+    let want = a.matmul(&b);
+    let r = co.run_job(GemmJob { id: 1, a, b, run: None }).unwrap();
+    assert!(r.c.allclose(&want, 1e-4));
+    assert!(r.sim.gflops > 0.0);
+    assert_eq!(co.metrics().jobs(), 1);
+}
+
+#[test]
+fn coordinator_batch_of_jobs() {
+    let co = Coordinator::new(HardwareConfig::paper(), NumericsEngine::golden());
+    for (i, (m, k, n)) in [(64usize, 32usize, 64usize), (100, 50, 70), (33, 17, 9)]
+        .iter()
+        .enumerate()
+    {
+        let a = Matrix::random(*m, *k, i as u64);
+        let b = Matrix::random(*k, *n, 100 + i as u64);
+        let want = a.matmul(&b);
+        let r = co
+            .run_job(GemmJob { id: i as u64, a, b, run: None })
+            .unwrap();
+        assert!(r.c.allclose(&want, 1e-4), "job {i}");
+    }
+    assert_eq!(co.metrics().jobs(), 3);
+}
+
+#[test]
+fn dse_agrees_with_exhaustive_simulation_ranking() {
+    // The model's chosen optimum should land in the top tier of the
+    // simulated ranking (the model is a predictor, not an oracle —
+    // within 5% of the simulated best is a pass).
+    let hw = HardwareConfig::paper();
+    let acc = paper_acc();
+    let l = cnn::layer("conv3").unwrap();
+    let e = dse::explore(&hw, l.m, l.k, l.n, acc.surface()).unwrap();
+    let chosen = acc
+        .simulate(&e.best.run, l.m, l.k, l.n, &SimOptions::default())
+        .unwrap();
+    let mut best_sim = 0.0f64;
+    for p in &e.points {
+        let s = acc
+            .simulate(&p.run, l.m, l.k, l.n, &SimOptions::default())
+            .unwrap();
+        best_sim = best_sim.max(s.gflops);
+    }
+    assert!(
+        chosen.gflops >= 0.95 * best_sim,
+        "DSE pick {:.1} vs simulated best {:.1}",
+        chosen.gflops,
+        best_sim
+    );
+}
+
+#[test]
+fn bandwidth_surface_matches_direct_measurement() {
+    let hw = HardwareConfig::paper();
+    let surface = BandwidthSurface::calibrate(&hw.ddr);
+    let direct = multi_array::ddr::DdrSim::block_bandwidth(&hw.ddr, 2, 128);
+    let cached = surface.bw(2, 128);
+    assert!((cached - direct.per_master).abs() / direct.per_master < 1e-9);
+}

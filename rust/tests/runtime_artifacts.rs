@@ -1,0 +1,107 @@
+//! Runtime tests against the real AOT artifacts. These exercise the
+//! python→HLO→PJRT→rust bridge end to end; they skip (with a notice)
+//! when `artifacts/` has not been built, so `cargo test` stays green in
+//! a fresh checkout — run `make artifacts` first for full coverage.
+
+use multi_array::config::HardwareConfig;
+use multi_array::coordinator::{Coordinator, GemmJob, NumericsEngine};
+use multi_array::gemm::Matrix;
+use multi_array::runtime::Runtime;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn runtime_loads_all_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let shapes = rt.task_shapes();
+    assert!(!shapes.is_empty());
+    assert!(shapes.iter().any(|&(si, _, sj)| si == 128 && sj == 128));
+}
+
+#[test]
+fn gemm_full_artifact_matches_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let a = Matrix::random(256, 256, 1);
+    let b = Matrix::random(256, 256, 2);
+    let got = rt.gemm_full(&a, &b).unwrap();
+    let want = a.matmul(&b);
+    assert!(
+        got.allclose(&want, 1e-4),
+        "max err {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn block_product_exact_panel() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    // Exactly one (128, 128, 128) task execution.
+    let a = Matrix::random(128, 128, 3);
+    let b = Matrix::random(128, 128, 4);
+    let got = rt.block_product(&a, &b).unwrap();
+    assert!(got.allclose(&a.matmul(&b), 1e-4));
+}
+
+#[test]
+fn block_product_chunked_k() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    // K = 1200 (conv-2's depth): 1024-chunk + 128-chunks + padded tail.
+    let a = Matrix::random(128, 1200, 5);
+    let b = Matrix::random(1200, 128, 6);
+    let got = rt.block_product(&a, &b).unwrap();
+    let want = a.matmul(&b);
+    assert!(
+        got.allclose(&want, 1e-3),
+        "max err {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn block_product_ragged_all_dims() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let a = Matrix::random(97, 201, 7);
+    let b = Matrix::random(201, 55, 8);
+    let got = rt.block_product(&a, &b).unwrap();
+    assert!(got.allclose(&a.matmul(&b), 1e-3));
+}
+
+#[test]
+fn block_product_tiny() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let a = Matrix::random(3, 5, 9);
+    let b = Matrix::random(5, 2, 10);
+    let got = rt.block_product(&a, &b).unwrap();
+    assert!(got.allclose(&a.matmul(&b), 1e-4));
+}
+
+#[test]
+fn coordinator_with_pjrt_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = NumericsEngine::pjrt(&dir).unwrap();
+    assert_eq!(engine.name, "pjrt");
+    let co = Coordinator::new(HardwareConfig::paper(), engine);
+    let a = Matrix::random(150, 90, 11);
+    let b = Matrix::random(90, 130, 12);
+    let want = a.matmul(&b);
+    let r = co.run_job(GemmJob { id: 1, a, b, run: None }).unwrap();
+    assert!(
+        r.c.allclose(&want, 1e-3),
+        "max err {}",
+        r.c.max_abs_diff(&want)
+    );
+}
