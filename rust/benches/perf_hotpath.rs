@@ -4,16 +4,23 @@
 //! * DDR model burst loop (bounds bandwidth calibration and Fig. 3);
 //! * event-sim task loop (bounds every `simulate` call);
 //! * stepped PE array (bounds the cross-validation tests);
-//! * functional block task + WQM pop/steal (bounds the coordinator).
+//! * the packed-panel task product — the coordinator's actual unit of
+//!   work — vs the scalar k-i-j reference it replaced;
+//! * panel packing and the cache-blocked transpose (per-job setup);
+//! * WQM drain through the lock-free `AtomicWqm`, single- and
+//!   multi-threaded.
+//!
+//! Writes `BENCH_hotpath.json` with every measurement so before/after
+//! numbers are recorded per run.
 
 use multi_array::accelerator::{Accelerator, SimOptions};
 use multi_array::blocking::BlockPlan;
 use multi_array::config::{HardwareConfig, RunConfig};
 use multi_array::ddr::{DdrConfig, DdrSim, StreamPattern};
-use multi_array::gemm::{self, Matrix};
+use multi_array::gemm::{self, DisjointBlocks, Matrix, PackedPanels};
 use multi_array::mpe::LinearArray;
 use multi_array::util::Bench;
-use multi_array::wqm::Wqm;
+use multi_array::wqm::AtomicWqm;
 
 fn main() {
     let bench = Bench::new("perf_hotpath");
@@ -43,27 +50,79 @@ fn main() {
         arr.execute_task(&sa, &sb, 64, 64)
     });
 
-    // Functional block task (the golden engine's unit of work).
+    // The coordinator's unit of work, old vs new:
+    // scalar reference — per-task panel copies + k-i-j loop;
     let a = Matrix::random(128, 256, 3);
     let b = Matrix::random(256, 128, 4);
-    bench.run_throughput("functional_block_128x256x128", 2 * 128 * 256 * 128, || {
-        gemm::block_task(&a, &b, 0, 0, 128, 128)
+    let flops = 2u64 * 128 * 256 * 128;
+    bench.run_throughput("functional_block_scalar_ref", flops, || {
+        let sa = a.block(0, 0, 128, a.cols);
+        let sb = b.block(0, 0, b.rows, 128);
+        gemm::block_task(&sa, &sb, 0, 0, 128, 128)
+    });
+    // packed pipeline — pre-packed panels + register-blocked microkernel
+    // streamed straight into C (what `run_job` executes per task).
+    let plan = BlockPlan::new(128, 256, 128, 128, 128);
+    let panels = PackedPanels::pack(a.view(), b.view(), &plan);
+    let task = plan.task(0);
+    let mut c = Matrix::zeros(128, 128);
+    bench.run_throughput("functional_block_128x256x128", flops, || {
+        let writer = DisjointBlocks::new(c.view_mut());
+        // SAFETY: single-threaded; one writer per iteration.
+        unsafe { gemm::task_product_into(&panels, &task, &writer) };
     });
 
-    // WQM drain with stealing, 4096 tasks over 4 queues.
+    // Per-job setup costs the packed path amortizes over all tasks.
+    bench.run("pack_panels_128x256x128", || {
+        PackedPanels::pack(a.view(), b.view(), &plan)
+    });
+    let big = Matrix::random(1024, 1024, 5);
+    bench.run_throughput("transpose_1024x1024", 1024 * 1024, || big.transpose());
+
+    // WQM drain through the lock-free queues, 4096 tasks over 4 queues.
     let plan = BlockPlan::new(4096, 64, 4096, 64, 64);
     bench.run("wqm_drain_4096_tasks", || {
-        let mut wqm = Wqm::from_partition(plan.partition(4));
+        let wqm = AtomicWqm::from_partition(plan.partition(4));
         let mut n = 0usize;
-        'outer: loop {
+        loop {
+            let mut claimed = false;
             for q in 0..4 {
                 if wqm.pop(q).is_some() {
                     n += 1;
-                } else if wqm.is_empty() {
-                    break 'outer;
+                    claimed = true;
                 }
+            }
+            if !claimed {
+                break;
             }
         }
         n
     });
+    bench.run("wqm_drain_4096_tasks_4threads", || {
+        let wqm = AtomicWqm::from_partition(plan.partition(4));
+        let mut total = 0usize;
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for q in 0..4 {
+                let wqm = &wqm;
+                handles.push(s.spawn(move || {
+                    let mut n = 0usize;
+                    while wqm.pop(q).is_some() {
+                        n += 1;
+                    }
+                    n
+                }));
+            }
+            for h in handles {
+                total += h.join().unwrap();
+            }
+        });
+        total
+    });
+
+    if let Err(e) = bench.write_json("BENCH_hotpath.json") {
+        eprintln!("could not write BENCH_hotpath.json: {e}");
+    } else {
+        println!("wrote BENCH_hotpath.json");
+    }
 }

@@ -1,14 +1,25 @@
 //! Numerics engine: where block products actually get computed.
 //!
-//! PJRT handles (`xla::PjRtLoadedExecutable`) wrap raw C pointers and are
-//! not `Send`, so the PJRT backend runs on one dedicated OS thread that
-//! owns the [`crate::runtime::Runtime`]; coordinator workers talk to it
-//! over channels. The golden backend computes in-process with the oracle
-//! GEMM — used in tests and when `artifacts/` is absent.
+//! Two backends behind one handle:
+//!
+//! * **golden** — in-process, allocation-free on the hot path: tasks are
+//!   computed by the register-blocked microkernel straight out of the
+//!   job's [`PackedPanels`] and streamed into C through the shared
+//!   [`DisjointBlocks`] writer. Used in tests and whenever `artifacts/`
+//!   is absent.
+//! * **pjrt** — PJRT handles (`xla::PjRtLoadedExecutable`) wrap raw C
+//!   pointers and are not `Send`, so this backend runs on one dedicated
+//!   OS thread that owns the [`crate::runtime::Runtime`]; workers talk
+//!   to it over channels. Crossing the channel inherently copies the
+//!   task's panels (counted by the coordinator's `panel_copies` metric).
+//!
+//! Both take operands by reference — the engine never consumes a job's
+//! matrices.
 
 use std::sync::mpsc;
 
-use crate::gemm::{self, Matrix};
+use crate::blocking::BlockTask;
+use crate::gemm::{self, DisjointBlocks, Matrix, PackedPanels};
 use crate::runtime::Runtime;
 
 struct Request {
@@ -30,7 +41,8 @@ pub struct NumericsEngine {
 }
 
 impl NumericsEngine {
-    /// Pure-rust oracle backend.
+    /// Pure-rust in-process backend (microkernel fast path, oracle
+    /// `block_task` as its cross-check in tests).
     pub fn golden() -> Self {
         Self { backend: Backend::Golden, name: "golden" }
     }
@@ -74,13 +86,30 @@ impl NumericsEngine {
         }
     }
 
-    /// `SA (rows x k) x SB (k x cols)` — one WQM task's numerics.
-    /// Blocking call; safe from any worker thread.
-    pub fn block_product(&self, sa: Matrix, sb: Matrix) -> anyhow::Result<Matrix> {
+    /// Does this backend compute in the worker's own thread (and can it
+    /// therefore consume packed panels zero-copy)?
+    pub fn is_inprocess(&self) -> bool {
+        matches!(self.backend, Backend::Golden)
+    }
+
+    /// `SA (rows x k) x SB (k x cols)` — one block product, borrowed
+    /// operands. Blocking call; safe from any worker thread. The PJRT
+    /// backend clones the operands to cross the runtime-thread channel;
+    /// callers that already own their operands should use
+    /// [`Self::block_product_owned`] to skip that clone.
+    pub fn block_product(&self, sa: &Matrix, sb: &Matrix) -> anyhow::Result<Matrix> {
         match &self.backend {
-            Backend::Golden => {
-                Ok(gemm::block_task(&sa, &sb, 0, 0, sa.rows, sb.cols))
-            }
+            Backend::Golden => Ok(gemm::block_task(sa, sb, 0, 0, sa.rows, sb.cols)),
+            Backend::Pjrt { .. } => self.block_product_owned(sa.clone(), sb.clone()),
+        }
+    }
+
+    /// Owned-operand variant of [`Self::block_product`]: the PJRT
+    /// backend moves the operands into the runtime-thread channel
+    /// without an extra copy.
+    pub fn block_product_owned(&self, sa: Matrix, sb: Matrix) -> anyhow::Result<Matrix> {
+        match &self.backend {
+            Backend::Golden => Ok(gemm::block_task(&sa, &sb, 0, 0, sa.rows, sb.cols)),
             Backend::Pjrt { tx } => {
                 let (reply, rx) = mpsc::channel();
                 tx.send(Request { sa, sb, reply })
@@ -90,21 +119,69 @@ impl NumericsEngine {
             }
         }
     }
+
+    /// Execute one WQM task and write its `C_ij` block through the
+    /// shared writer. Returns `true` when the zero-copy path ran (no
+    /// per-task panel copies were made).
+    ///
+    /// * golden + packed panels: microkernel over `panels`, written in
+    ///   place — no allocation, no copy;
+    /// * pjrt (or no panels): gather the task's `SA_i` / `SB_j` slices
+    ///   from the borrowed operands and run [`Self::block_product`].
+    ///
+    /// `task` must come from the same [`crate::blocking::BlockPlan`]
+    /// that built `panels` and sized `out`, and each task must be
+    /// executed at most once per writer — the disjointness contract of
+    /// [`DisjointBlocks::write_block`].
+    pub fn task_product_into(
+        &self,
+        panels: Option<&PackedPanels>,
+        a: &Matrix,
+        b: &Matrix,
+        task: &BlockTask,
+        out: &DisjointBlocks<'_>,
+    ) -> anyhow::Result<bool> {
+        if self.is_inprocess() {
+            if let Some(panels) = panels {
+                // SAFETY: the caller (coordinator / tests) executes each
+                // task exactly once per writer, and a BlockPlan's tasks
+                // tile C disjointly, so this block has a single writer.
+                unsafe { gemm::task_product_into(panels, task, out) };
+                return Ok(true);
+            }
+        }
+        // One gather copy per operand; the owned variant moves them into
+        // the channel, so `panel_copies` (+2/task) is the true count.
+        let sa = a.block(task.row0, 0, task.si, a.cols);
+        let sb = b.block(0, task.col0, b.rows, task.sj);
+        let block = self.block_product_owned(sa, sb)?;
+        anyhow::ensure!(
+            (block.rows, block.cols) == (task.rows, task.cols),
+            "backend returned a {}x{} block for a {}x{} task",
+            block.rows,
+            block.cols,
+            task.rows,
+            task.cols
+        );
+        // SAFETY: same single-writer-per-task argument as above.
+        unsafe {
+            out.write_block(task.row0, task.col0, &block.data, block.cols, block.rows, block.cols)
+        };
+        Ok(false)
+    }
 }
 
-// The PJRT variant only holds a channel Sender (Send + !Sync by default
-// is false: mpsc::Sender is Send + !Sync in old std, Send + Sync since
-// 1.72). Workers clone nothing — they share &NumericsEngine.
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::blocking::BlockPlan;
 
     #[test]
     fn golden_block_product() {
         let e = NumericsEngine::golden();
         let a = Matrix::random(10, 6, 1);
         let b = Matrix::random(6, 12, 2);
-        let c = e.block_product(a.clone(), b.clone()).unwrap();
+        let c = e.block_product(&a, &b).unwrap();
         assert!(c.allclose(&a.matmul(&b), 1e-5));
     }
 
@@ -117,9 +194,10 @@ mod tests {
     fn auto_falls_back_to_golden() {
         let e = NumericsEngine::auto("/nonexistent");
         assert_eq!(e.name, "golden");
+        assert!(e.is_inprocess());
         let a = Matrix::random(4, 4, 3);
         let b = Matrix::random(4, 4, 4);
-        let c = e.block_product(a.clone(), b.clone()).unwrap();
+        let c = e.block_product(&a, &b).unwrap();
         assert!(c.allclose(&a.matmul(&b), 1e-5));
     }
 
@@ -132,10 +210,48 @@ mod tests {
                 s.spawn(move || {
                     let a = Matrix::random(8, 8, t);
                     let b = Matrix::random(8, 8, t + 10);
-                    let c = e.block_product(a.clone(), b.clone()).unwrap();
+                    let c = e.block_product(&a, &b).unwrap();
                     assert!(c.allclose(&a.matmul(&b), 1e-5));
                 });
             }
         });
+    }
+
+    #[test]
+    fn task_product_into_zero_copy_matches_oracle() {
+        let e = NumericsEngine::golden();
+        let a = Matrix::random(40, 22, 5);
+        let b = Matrix::random(22, 33, 6);
+        let plan = BlockPlan::new(40, 22, 33, 16, 16);
+        let panels = PackedPanels::pack(a.view(), b.view(), &plan);
+        let mut c = Matrix::zeros(40, 33);
+        {
+            let w = DisjointBlocks::new(c.view_mut());
+            for task in plan.tasks() {
+                let zero_copy =
+                    e.task_product_into(Some(&panels), &a, &b, &task, &w).unwrap();
+                assert!(zero_copy);
+            }
+        }
+        assert!(c.allclose(&a.matmul(&b), 1e-4));
+    }
+
+    #[test]
+    fn task_product_into_gather_fallback_matches_oracle() {
+        // Without panels the in-process engine falls back to the gather
+        // path (what the pjrt backend does), flagging the copy.
+        let e = NumericsEngine::golden();
+        let a = Matrix::random(25, 14, 7);
+        let b = Matrix::random(14, 19, 8);
+        let plan = BlockPlan::new(25, 14, 19, 8, 8);
+        let mut c = Matrix::zeros(25, 19);
+        {
+            let w = DisjointBlocks::new(c.view_mut());
+            for task in plan.tasks() {
+                let zero_copy = e.task_product_into(None, &a, &b, &task, &w).unwrap();
+                assert!(!zero_copy);
+            }
+        }
+        assert!(c.allclose(&a.matmul(&b), 1e-4));
     }
 }

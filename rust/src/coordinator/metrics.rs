@@ -9,6 +9,11 @@ pub struct Metrics {
     jobs: AtomicU64,
     tasks: AtomicU64,
     steals: AtomicU64,
+    /// Per-task operand-panel copies made on the numerics path. The
+    /// packed zero-copy pipeline keeps this at 0; the PJRT channel
+    /// backend pays 2 per task (SA and SB gathers). The hotpath tests
+    /// assert on it.
+    panel_copies: AtomicU64,
     latencies: Mutex<LatencyAgg>,
 }
 
@@ -27,6 +32,10 @@ impl Metrics {
 
     pub fn add_steals(&self, n: u64) {
         self.steals.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_panel_copies(&self, n: u64) {
+        self.panel_copies.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn job_done(&self, host_secs: f64, sim_secs: f64) {
@@ -48,6 +57,10 @@ impl Metrics {
 
     pub fn steals(&self) -> u64 {
         self.steals.load(Ordering::Relaxed)
+    }
+
+    pub fn panel_copies(&self) -> u64 {
+        self.panel_copies.load(Ordering::Relaxed)
     }
 
     /// (mean, max) host latency in seconds.
@@ -73,10 +86,11 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let (mean, max) = self.host_latency();
         format!(
-            "jobs={} tasks={} steals={} host_lat(mean/max)={:.3}s/{:.3}s sim(mean)={:.6}s",
+            "jobs={} tasks={} steals={} panel_copies={} host_lat(mean/max)={:.3}s/{:.3}s sim(mean)={:.6}s",
             self.jobs(),
             self.tasks(),
             self.steals(),
+            self.panel_copies(),
             mean,
             max,
             self.mean_sim_secs()
@@ -94,10 +108,12 @@ mod tests {
         m.task_done();
         m.task_done();
         m.add_steals(3);
+        m.add_panel_copies(2);
         m.job_done(0.5, 0.001);
         m.job_done(1.5, 0.003);
         assert_eq!(m.tasks(), 2);
         assert_eq!(m.steals(), 3);
+        assert_eq!(m.panel_copies(), 2);
         assert_eq!(m.jobs(), 2);
         let (mean, max) = m.host_latency();
         assert!((mean - 1.0).abs() < 1e-12);

@@ -2,13 +2,27 @@
 //!
 //! GEMM jobs come in; the coordinator picks the optimal `⟨N_p, S_i⟩` via
 //! the DSE (unless pinned), partitions the problem into sub-block tasks,
-//! and drives `N_p` worker threads that pop tasks from a shared
-//! work-stealing WQM — the software twin of the paper's hardware WQM.
-//! Numerics execute on the [`engine::NumericsEngine`]: a dedicated thread
-//! owning the PJRT runtime (XLA handles are not `Send`), fed over
-//! channels, or a pure-rust golden engine for environments without
-//! artifacts. Timing comes from the cycle-level simulator, so every job
-//! returns both a real result matrix and the FPGA-time report.
+//! and drives `N_p` worker threads — the software twin of the paper's
+//! hardware WQM + MAC pipeline. The numerics hot path is lock-free and
+//! zero-copy end to end:
+//!
+//! * both operand panel sets are packed **once per job** into
+//!   [`crate::gemm::PackedPanels`] (A panels transposed, the MAC's
+//!   layout fix) instead of once per task;
+//! * workers pop/steal from a shared [`crate::wqm::AtomicWqm`] — one CAS
+//!   per claim on a packed `head|tail` word, no `Mutex<Wqm>`;
+//! * each worker runs the register-blocked microkernel over the packed
+//!   panels and streams its finished `C_ij` straight into the result
+//!   matrix through a shared [`crate::gemm::DisjointBlocks`] writer — no
+//!   `Mutex<Matrix>`. Writes are race-free because a
+//!   [`BlockPlan`]'s tasks tile C exactly and the WQM hands each task to
+//!   exactly one worker (disjoint ownership by construction).
+//!
+//! Numerics execute on the [`engine::NumericsEngine`]: the in-process
+//! golden/packed backend, or a dedicated thread owning the PJRT runtime
+//! (XLA handles are not `Send`) fed over channels. Timing comes from the
+//! cycle-level simulator, so every job returns both a real result matrix
+//! and the FPGA-time report.
 
 pub mod engine;
 pub mod metrics;
@@ -16,15 +30,15 @@ pub mod metrics;
 pub use engine::NumericsEngine;
 pub use metrics::Metrics;
 
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::accelerator::{Accelerator, SimOptions, SimReport};
 use crate::blocking::BlockPlan;
 use crate::config::{HardwareConfig, RunConfig};
 use crate::dse;
-use crate::gemm::Matrix;
-use crate::wqm::Wqm;
+use crate::gemm::{DisjointBlocks, Matrix, PackedPanels};
+use crate::wqm::AtomicWqm;
 
 /// One GEMM request.
 #[derive(Debug, Clone)]
@@ -93,51 +107,62 @@ impl Coordinator {
 
     /// Execute one job: numerics through `N_p` work-stealing workers on
     /// the engine, timing through the simulator.
+    ///
+    /// Hot-path structure: pack panels once, spawn `N_p` workers that
+    /// claim tasks lock-free from the [`AtomicWqm`] and write disjoint C
+    /// blocks through a shared [`DisjointBlocks`] writer — no global
+    /// lock is taken between the first pop and the last write-back.
     pub fn run_job(&self, job: GemmJob) -> anyhow::Result<JobResult> {
         anyhow::ensure!(job.a.cols == job.b.rows, "contraction mismatch");
         let run = self.plan_job(&job)?;
         let start = Instant::now();
 
-        let plan = BlockPlan::new(job.a.rows, job.a.cols, job.b.cols, run.si, run.sj);
-        let mut wqm = Wqm::from_partition(plan.partition(run.np));
-        wqm.set_stealing(true);
-        let wqm = Mutex::new(wqm);
         let a = &job.a;
         let b = &job.b;
-        let c = Mutex::new(Matrix::zeros(a.rows, b.cols));
-
-        std::thread::scope(|s| -> anyhow::Result<()> {
-            let mut handles = Vec::with_capacity(run.np);
-            for w in 0..run.np {
-                let wqm = &wqm;
-                let c = &c;
-                let engine = &self.engine;
-                let metrics = &self.metrics;
-                handles.push(s.spawn(move || -> anyhow::Result<()> {
-                    loop {
-                        // Pop (with stealing) under the WQM lock — the
-                        // hardware controller's atomic counter compare.
-                        let task = { wqm.lock().unwrap().pop(w) };
-                        let Some(task) = task else { break };
-                        let sa = a.block(task.row0, 0, task.si, a.cols);
-                        let sb = b.block(0, task.col0, b.rows, task.sj);
-                        let block = engine.block_product(sa, sb)?;
-                        c.lock().unwrap().set_block(task.row0, task.col0, &block);
-                        metrics.task_done();
-                    }
-                    Ok(())
-                }));
-            }
-            for h in handles {
-                h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
-            }
-            Ok(())
-        })?;
-
-        let steals: u64 = {
-            let w = wqm.lock().unwrap();
-            w.stats().iter().map(|s| s.stolen_in).sum()
+        let plan = BlockPlan::new(a.rows, a.cols, b.cols, run.si, run.sj);
+        let wqm = AtomicWqm::from_partition(plan.partition(run.np));
+        // In-process backends consume the packed panels zero-copy; the
+        // channel-fed PJRT backend gathers per task instead, so skip the
+        // pack there.
+        let packed = if self.engine.is_inprocess() {
+            Some(PackedPanels::pack(a.view(), b.view(), &plan))
+        } else {
+            None
         };
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        {
+            // The writer holds C's unique borrow for the worker scope;
+            // per-block writes are disjoint because the plan's tasks
+            // tile C and the WQM pops each task exactly once.
+            let writer = DisjointBlocks::new(c.view_mut());
+            std::thread::scope(|s| -> anyhow::Result<()> {
+                let mut handles = Vec::with_capacity(run.np);
+                for w in 0..run.np {
+                    let wqm = &wqm;
+                    let writer = &writer;
+                    let packed = packed.as_ref();
+                    let engine = &self.engine;
+                    let metrics = &self.metrics;
+                    handles.push(s.spawn(move || -> anyhow::Result<()> {
+                        while let Some(task) = wqm.pop(w) {
+                            let zero_copy =
+                                engine.task_product_into(packed, a, b, &task, writer)?;
+                            if !zero_copy {
+                                metrics.add_panel_copies(2);
+                            }
+                            metrics.task_done();
+                        }
+                        Ok(())
+                    }));
+                }
+                for h in handles {
+                    h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+                }
+                Ok(())
+            })?;
+        }
+
+        let steals: u64 = wqm.stats().iter().map(|s| s.stolen_in).sum();
         self.metrics.add_steals(steals);
 
         let sim = self.accelerator.simulate(
@@ -150,13 +175,7 @@ impl Coordinator {
         let host_latency_secs = start.elapsed().as_secs_f64();
         self.metrics.job_done(host_latency_secs, sim.total_secs);
 
-        Ok(JobResult {
-            id: job.id,
-            c: c.into_inner().unwrap(),
-            run,
-            sim,
-            host_latency_secs,
-        })
+        Ok(JobResult { id: job.id, c, run, sim, host_latency_secs })
     }
 
     /// Serve a stream of jobs, replying on per-job channels. Jobs run
@@ -236,6 +255,35 @@ mod tests {
         let m = co.metrics();
         assert_eq!(m.jobs(), 1);
         assert!(m.tasks() >= 16); // 4x4 block grid
+    }
+
+    #[test]
+    fn golden_hot_path_makes_no_panel_copies() {
+        // The zero-copy acceptance gate: a golden job must not gather
+        // any per-task operand panels.
+        let co = coordinator();
+        let a = Matrix::random(100, 40, 21);
+        let b = Matrix::random(40, 90, 22);
+        let want = a.matmul(&b);
+        let job = GemmJob { id: 9, a, b, run: Some(RunConfig::square(4, 16)) };
+        let r = co.run_job(job).unwrap();
+        assert!(r.c.allclose(&want, 1e-4));
+        assert_eq!(co.metrics().panel_copies(), 0);
+        assert!(co.metrics().tasks() > 0);
+    }
+
+    #[test]
+    fn more_workers_than_tasks() {
+        // np = 4 but the problem is one block: three workers find the
+        // WQM empty immediately; the result is still correct.
+        let co = coordinator();
+        let a = Matrix::random(10, 8, 23);
+        let b = Matrix::random(8, 12, 24);
+        let want = a.matmul(&b);
+        let job = GemmJob { id: 10, a, b, run: Some(RunConfig::square(4, 16)) };
+        let r = co.run_job(job).unwrap();
+        assert!(r.c.allclose(&want, 1e-5));
+        assert_eq!(co.metrics().tasks(), 1);
     }
 
     #[test]

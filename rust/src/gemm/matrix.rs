@@ -1,8 +1,11 @@
 //! Row-major FP32 matrix with the handful of operations the accelerator
-//! stack needs: oracle matmul, transpose (the MAC's layout fix for A),
-//! zero-padding (Section IV), block get/set, and comparison helpers.
+//! stack needs: oracle matmul, cache-blocked transpose (the MAC's layout
+//! fix for A), zero-padding (Section IV), block get/set, borrowed views,
+//! and comparison helpers.
 
 use crate::util::rng::Rng;
+
+use super::view::{MatrixView, MatrixViewMut};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Matrix {
@@ -70,13 +73,38 @@ impl Matrix {
         out
     }
 
+    /// Borrowed read-only view of the whole matrix — the zero-copy entry
+    /// point of the panel pipeline.
+    pub fn view(&self) -> MatrixView<'_> {
+        MatrixView::new(&self.data, self.rows, self.cols, self.cols)
+    }
+
+    /// Borrowed mutable view (dense stride), splittable into disjoint
+    /// row bands and wrappable by [`super::DisjointBlocks`].
+    pub fn view_mut(&mut self) -> MatrixViewMut<'_> {
+        MatrixViewMut::new(&mut self.data, self.rows, self.cols, self.cols)
+    }
+
     /// The MAC's transpose of A: makes column-of-SA fetches contiguous so
     /// both matrices stream in burst mode (Section III-C).
+    ///
+    /// Cache-blocked: walks `TILE x TILE` tiles so both the source reads
+    /// and the (strided) destination writes stay within a tile that fits
+    /// L1, instead of streaming one full strided column per output row.
+    /// This routine feeds the MAC path and the panel packer, so it sits
+    /// on the per-job setup path of every coordinator job.
     pub fn transpose(&self) -> Matrix {
+        const TILE: usize = 32;
         let mut out = Matrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+        for r0 in (0..self.rows).step_by(TILE) {
+            let r1 = (r0 + TILE).min(self.rows);
+            for c0 in (0..self.cols).step_by(TILE) {
+                let c1 = (c0 + TILE).min(self.cols);
+                for r in r0..r1 {
+                    for c in c0..c1 {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
             }
         }
         out
@@ -175,6 +203,21 @@ mod tests {
         assert_eq!(t.rows, 3);
         assert_eq!(t.get(2, 1), 6.0);
         assert_eq!(t.get(0, 1), 4.0);
+    }
+
+    #[test]
+    fn transpose_ragged_tiles() {
+        // Shapes straddling the 32-tile boundary in both dimensions.
+        for (rows, cols) in [(1, 1), (31, 33), (32, 32), (33, 31), (65, 97), (100, 3)] {
+            let a = Matrix::random(rows, cols, (rows * 1000 + cols) as u64);
+            let t = a.transpose();
+            assert_eq!((t.rows, t.cols), (cols, rows));
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(t.get(c, r), a.get(r, c), "({rows}x{cols}) at ({r},{c})");
+                }
+            }
+        }
     }
 
     #[test]

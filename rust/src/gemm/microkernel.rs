@@ -1,0 +1,194 @@
+//! Register-blocked inner kernel of the packed panel pipeline.
+//!
+//! One call computes a full-K `MR x NR` tile of C with the accumulator
+//! held in locals (LLVM keeps the 4x8 tile in registers and
+//! autovectorizes the NR-wide update), reading A through an MR-strip and
+//! B through an NR-strip of [`super::PackedPanels`]. Compared to the
+//! scalar k-i-j loop in [`super::block_task`] this retires MR*NR FMAs
+//! per (MR + NR)-element load instead of one FMA per load+store of C —
+//! the register reuse a PE's `R_a`/`M_c` pair provides in hardware.
+//!
+//! Accumulation order over k is identical to [`super::block_task`] and
+//! the PE array (ascending k, one rank-1 update per step), so results
+//! agree with the oracle to the usual FP32 reassociation noise only from
+//! padding zeros, which contribute exact `+0.0` terms.
+
+use crate::blocking::BlockTask;
+
+use super::pack::PackedPanels;
+use super::view::DisjointBlocks;
+use super::Matrix;
+
+/// Rows of C per register tile (A-strip width).
+pub const MR: usize = 4;
+/// Columns of C per register tile (B-strip width).
+pub const NR: usize = 8;
+
+/// Multiply one packed A strip (`k * MR`, k-major) by one packed B strip
+/// (`k * NR`, k-major), returning the `MR x NR` tile row-major. The tile
+/// lives entirely in locals: no loads or stores of C inside the k loop.
+#[inline]
+pub fn micro_kernel(ap: &[f32], bp: &[f32], k: usize) -> [f32; MR * NR] {
+    debug_assert!(ap.len() >= k * MR && bp.len() >= k * NR);
+    let mut acc = [0.0f32; MR * NR];
+    for (a_col, b_row) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)).take(k) {
+        for (acc_row, &a) in acc.chunks_exact_mut(NR).zip(a_col) {
+            for (c, &b) in acc_row.iter_mut().zip(b_row) {
+                *c += a * b;
+            }
+        }
+    }
+    acc
+}
+
+/// Compute one sub-block task `C_ij = SA_i x SB_j` from pre-packed
+/// panels, streaming the register tiles straight into the shared output
+/// writer. Allocation-free: the only scratch is the `MR x NR` stack
+/// tile.
+///
+/// # Safety
+///
+/// Inherits [`DisjointBlocks::write_block`]'s contract: `task`'s block
+/// must not be written concurrently by anyone else. The coordinator
+/// guarantees this because each task is popped from the WQM exactly once
+/// and tasks tile C disjointly.
+pub unsafe fn task_product_into(
+    panels: &PackedPanels,
+    task: &BlockTask,
+    out: &DisjointBlocks<'_>,
+) {
+    write_task(panels, task, out, task.row0, task.col0);
+}
+
+/// Shared body of [`task_product_into`] (global C coordinates) and
+/// [`task_product`] (block-local coordinates).
+///
+/// # Safety
+///
+/// Same contract as [`task_product_into`].
+unsafe fn write_task(
+    panels: &PackedPanels,
+    task: &BlockTask,
+    out: &DisjointBlocks<'_>,
+    base_row: usize,
+    base_col: usize,
+) {
+    let k = panels.k();
+    let (ap, rows) = panels.a_panel(task.bi);
+    let (bp, cols) = panels.b_panel(task.bj);
+    assert_eq!(rows, task.rows, "panel/task row mismatch");
+    assert_eq!(cols, task.cols, "panel/task col mismatch");
+    let a_strips = rows.div_ceil(MR);
+    let b_strips = cols.div_ceil(NR);
+    for s in 0..a_strips {
+        let ap_s = &ap[s * k * MR..(s + 1) * k * MR];
+        let rows_here = MR.min(rows - s * MR);
+        for t in 0..b_strips {
+            let bp_t = &bp[t * k * NR..(t + 1) * k * NR];
+            let cols_here = NR.min(cols - t * NR);
+            let acc = micro_kernel(ap_s, bp_t, k);
+            out.write_block(
+                base_row + s * MR,
+                base_col + t * NR,
+                &acc,
+                NR,
+                rows_here,
+                cols_here,
+            );
+        }
+    }
+}
+
+/// Owned-result variant of [`task_product_into`]: compute one task's
+/// `rows x cols` block into a fresh [`Matrix`]. Used by tests and by
+/// callers that want a block without a shared writer.
+pub fn task_product(panels: &PackedPanels, task: &BlockTask) -> Matrix {
+    let mut c = Matrix::zeros(task.rows, task.cols);
+    {
+        let w = DisjointBlocks::new(c.view_mut());
+        // SAFETY: `w` wraps an exclusive borrow of the local `c`, and
+        // this is the only writer — no concurrent access is possible.
+        unsafe { write_task(panels, task, &w, 0, 0) };
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocking::BlockPlan;
+    use crate::util::check;
+
+    fn packed(a: &Matrix, b: &Matrix, si: usize, sj: usize) -> (BlockPlan, PackedPanels) {
+        let plan = BlockPlan::new(a.rows, a.cols, b.cols, si, sj);
+        let panels = PackedPanels::pack(a.view(), b.view(), &plan);
+        (plan, panels)
+    }
+
+    #[test]
+    fn single_tile_matches_oracle() {
+        let a = Matrix::random(MR, 17, 1);
+        let b = Matrix::random(17, NR, 2);
+        let (plan, panels) = packed(&a, &b, MR, NR);
+        let got = task_product(&panels, &plan.task(0));
+        assert!(got.allclose(&a.matmul(&b), 1e-5));
+    }
+
+    #[test]
+    fn whole_block_matches_block_task() {
+        let a = Matrix::random(32, 24, 3);
+        let b = Matrix::random(24, 40, 4);
+        let (plan, panels) = packed(&a, &b, 16, 16);
+        for task in plan.tasks() {
+            let got = task_product(&panels, &task);
+            let want = crate::gemm::block_task(&a, &b, task.row0, task.col0, task.si, task.sj);
+            assert!(got.allclose(&want, 1e-5), "task {}", task.id);
+        }
+    }
+
+    #[test]
+    fn ragged_edge_blocks_match() {
+        // Shapes chosen so every edge case fires: rows % MR != 0,
+        // cols % NR != 0, blocks clip at both matrix edges.
+        let a = Matrix::random(37, 19, 5);
+        let b = Matrix::random(19, 29, 6);
+        let (plan, panels) = packed(&a, &b, 16, 12);
+        for task in plan.tasks() {
+            let got = task_product(&panels, &task);
+            assert_eq!((got.rows, got.cols), (task.rows, task.cols));
+            let want = crate::gemm::block_task(&a, &b, task.row0, task.col0, task.si, task.sj);
+            assert!(got.allclose(&want, 1e-5), "task {}", task.id);
+        }
+    }
+
+    #[test]
+    fn prop_packed_task_equals_oracle() {
+        check::cases(64, |rng| {
+            let (m, k, n) = (rng.range(1, 40), rng.range(1, 40), rng.range(1, 40));
+            let (si, sj) = (rng.range(1, 20), rng.range(1, 20));
+            let seed = rng.next_u64();
+            let a = Matrix::random(m, k, seed);
+            let b = Matrix::random(k, n, seed + 1);
+            let (plan, panels) = packed(&a, &b, si, sj);
+            let oracle = a.matmul(&b);
+            for task in plan.tasks() {
+                let got = task_product(&panels, &task);
+                let want = oracle.block(task.row0, task.col0, task.rows, task.cols);
+                assert!(got.allclose(&want, 1e-3), "task {}", task.id);
+            }
+        });
+    }
+
+    #[test]
+    fn micro_kernel_is_rank1_accumulation() {
+        // k = 1: acc[i][j] = a[i] * b[j] exactly.
+        let ap: Vec<f32> = (0..MR).map(|i| i as f32 + 1.0).collect();
+        let bp: Vec<f32> = (0..NR).map(|j| j as f32 + 1.0).collect();
+        let acc = micro_kernel(&ap, &bp, 1);
+        for i in 0..MR {
+            for j in 0..NR {
+                assert_eq!(acc[i * NR + j], (i as f32 + 1.0) * (j as f32 + 1.0));
+            }
+        }
+    }
+}

@@ -1,13 +1,35 @@
-//! Dense-matrix substrate: row-major FP32 matrices, golden GEMM, the
-//! paper's blocked algorithm in functional form, and the MAC's transpose.
+//! Dense-matrix substrate: row-major FP32 matrices, the paper's blocked
+//! algorithm, and the zero-copy panel pipeline the coordinator serves
+//! from.
 //!
-//! Everything the simulator and coordinator compute numerically is checked
-//! against [`Matrix::matmul`] (naive triple loop — the audit-grade oracle)
-//! and, at build time, against the jnp oracle through the pytest suite.
+//! Three numeric layers, slowest to fastest, each checked against the
+//! one above it:
+//!
+//! * [`Matrix::matmul`] — naive triple loop, the audit-grade oracle
+//!   (also cross-checked against the jnp oracle through the pytest
+//!   suite at artifact-build time);
+//! * [`block_task`] / [`blocked_matmul`] — the functional form of the
+//!   PE array's k-i-j dataflow, bit-for-bit what the simulated arrays
+//!   produce; kept as the readable reference the fast path is verified
+//!   against;
+//! * the packed pipeline — [`view`]'s borrowed [`MatrixView`] /
+//!   [`MatrixViewMut`] windows feed [`pack`]'s [`PackedPanels`] (each
+//!   operand element packed once per job, A panels transposed exactly
+//!   like the MAC's layout fix), [`microkernel`]'s register-blocked
+//!   `MR x NR` kernel does the FLOPs, and [`DisjointBlocks`] streams
+//!   finished blocks into C without locks. [`packed_matmul`] composes
+//!   them single-threaded; the coordinator runs the same pieces across
+//!   its work-stealing workers.
 
 mod matrix;
+pub mod microkernel;
+pub mod pack;
+pub mod view;
 
 pub use matrix::Matrix;
+pub use microkernel::{micro_kernel, task_product, task_product_into, MR, NR};
+pub use pack::PackedPanels;
+pub use view::{DisjointBlocks, MatrixView, MatrixViewMut};
 
 use crate::blocking::BlockPlan;
 
@@ -57,6 +79,27 @@ pub fn block_task(
             for (cc, bb) in crow.iter_mut().zip(brow) {
                 *cc += v * bb; // FMAC
             }
+        }
+    }
+    c
+}
+
+/// Full GEMM through the packed panel pipeline: pack both operands once,
+/// then run the register-blocked microkernel over every task of the
+/// block grid, writing blocks in place. Single-threaded twin of the
+/// coordinator's hot path; same task decomposition as [`blocked_matmul`]
+/// but with panel reuse instead of per-task copies.
+pub fn packed_matmul(a: &Matrix, b: &Matrix, si: usize, sj: usize) -> Matrix {
+    assert_eq!(a.cols, b.rows, "contraction mismatch");
+    let plan = BlockPlan::new(a.rows, a.cols, b.cols, si, sj);
+    let panels = PackedPanels::pack(a.view(), b.view(), &plan);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    {
+        let writer = DisjointBlocks::new(c.view_mut());
+        for task in plan.tasks() {
+            // SAFETY: `plan.tasks()` yields each task exactly once and
+            // tasks tile C disjointly, so no block is written twice.
+            unsafe { task_product_into(&panels, &task, &writer) };
         }
     }
     c
@@ -113,6 +156,37 @@ mod tests {
             let a = rand_matrix(m, k, seed);
             let b = rand_matrix(k, n, seed + 1);
             let got = blocked_matmul(&a, &b, si, sj);
+            assert!(got.allclose(&a.matmul(&b), 1e-3));
+        });
+    }
+
+    #[test]
+    fn packed_matmul_matches_oracle() {
+        let a = rand_matrix(48, 36, 9);
+        let b = rand_matrix(36, 56, 10);
+        let got = packed_matmul(&a, &b, 16, 16);
+        let want = a.matmul(&b);
+        assert!(got.allclose(&want, 1e-4), "max err {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn packed_matmul_matches_blocked_on_ragged_shapes() {
+        let a = rand_matrix(37, 53, 11);
+        let b = rand_matrix(53, 41, 12);
+        let got = packed_matmul(&a, &b, 16, 12);
+        let want = blocked_matmul(&a, &b, 16, 12);
+        assert!(got.allclose(&want, 1e-5));
+    }
+
+    #[test]
+    fn prop_packed_matches_naive() {
+        check::cases(32, |rng| {
+            let (m, k, n) = (rng.range(1, 40), rng.range(1, 40), rng.range(1, 40));
+            let (si, sj) = (rng.range(1, 20), rng.range(1, 20));
+            let seed = rng.next_u64();
+            let a = rand_matrix(m, k, seed);
+            let b = rand_matrix(k, n, seed + 1);
+            let got = packed_matmul(&a, &b, si, sj);
             assert!(got.allclose(&a.matmul(&b), 1e-3));
         });
     }

@@ -1,0 +1,217 @@
+//! Panel packing — each operand element is touched once per *job*, not
+//! once per task.
+//!
+//! The old hot path re-copied a full `S_i x K` slice of A and a
+//! `K x S_j` slice of B out of the operands for every WQM task (so a
+//! `bi` row-panel was copied `blocks_j` times and a `bj` column-panel
+//! `blocks_i` times). [`PackedPanels`] does the copy exactly once per
+//! panel, into the layout the register-blocked microkernel streams:
+//!
+//! * A's row-panel `bi` is stored as `ceil(rows/MR)` strips; within a
+//!   strip the layout is k-major with `MR` row-adjacent values per k —
+//!   i.e. *transposed*, so a column of `SA_i` is contiguous, the same
+//!   layout fix the MAC applies to A for burst-friendly DDR reads
+//!   (Section III-C);
+//! * B's column-panel `bj` is `ceil(cols/NR)` strips, k-major with `NR`
+//!   column-adjacent values per k.
+//!
+//! Ragged strips are zero-padded to the full `MR`/`NR` width so the
+//! microkernel never branches on edges; the padding contributes exact
+//! `+0.0` terms and the writer clips them on the way out.
+
+use crate::blocking::BlockPlan;
+
+use super::microkernel::{MR, NR};
+use super::view::MatrixView;
+
+/// Both operands of one GEMM job, packed panel-by-panel for the
+/// microkernel. Built once per job by the coordinator (or by
+/// [`super::packed_matmul`]); shared read-only across all workers.
+#[derive(Debug, Clone)]
+pub struct PackedPanels {
+    k: usize,
+    /// Per block-row of A: strip-major `[strip][k][MR]` packing.
+    a_panels: Vec<Vec<f32>>,
+    /// Effective (unpadded) rows per A panel.
+    a_rows: Vec<usize>,
+    /// Per block-column of B: strip-major `[strip][k][NR]` packing.
+    b_panels: Vec<Vec<f32>>,
+    /// Effective (unpadded) columns per B panel.
+    b_cols: Vec<usize>,
+}
+
+impl PackedPanels {
+    /// Pack `a` (`M x K`) and `b` (`K x N`) for `plan`'s block grid.
+    pub fn pack(a: MatrixView<'_>, b: MatrixView<'_>, plan: &BlockPlan) -> Self {
+        assert_eq!((a.rows(), a.cols()), (plan.m, plan.k), "A shape mismatch");
+        assert_eq!((b.rows(), b.cols()), (plan.k, plan.n), "B shape mismatch");
+        let k = plan.k;
+        let mut a_panels = Vec::with_capacity(plan.blocks_i());
+        let mut a_rows = Vec::with_capacity(plan.blocks_i());
+        for bi in 0..plan.blocks_i() {
+            let row0 = bi * plan.si;
+            let rows = plan.si.min(plan.m - row0);
+            a_panels.push(pack_a_panel(&a, row0, rows, k));
+            a_rows.push(rows);
+        }
+        let mut b_panels = Vec::with_capacity(plan.blocks_j());
+        let mut b_cols = Vec::with_capacity(plan.blocks_j());
+        for bj in 0..plan.blocks_j() {
+            let col0 = bj * plan.sj;
+            let cols = plan.sj.min(plan.n - col0);
+            b_panels.push(pack_b_panel(&b, col0, cols, k));
+            b_cols.push(cols);
+        }
+        Self { k, a_panels, a_rows, b_panels, b_cols }
+    }
+
+    /// Shared contraction depth K.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Packed strips of A's row-panel `bi` and its effective row count.
+    pub fn a_panel(&self, bi: usize) -> (&[f32], usize) {
+        (&self.a_panels[bi], self.a_rows[bi])
+    }
+
+    /// Packed strips of B's column-panel `bj` and its effective column
+    /// count.
+    pub fn b_panel(&self, bj: usize) -> (&[f32], usize) {
+        (&self.b_panels[bj], self.b_cols[bj])
+    }
+
+    /// Total packed floats (diagnostics: equals padded operand sizes).
+    pub fn packed_len(&self) -> usize {
+        self.a_panels.iter().map(Vec::len).sum::<usize>()
+            + self.b_panels.iter().map(Vec::len).sum::<usize>()
+    }
+}
+
+/// Pack `rows` rows of A starting at `row0` into MR-strips, k-major.
+/// Element `(row0 + s*MR + r, p)` of A lands at `s*k*MR + p*MR + r`.
+fn pack_a_panel(a: &MatrixView<'_>, row0: usize, rows: usize, k: usize) -> Vec<f32> {
+    let strips = rows.div_ceil(MR);
+    let mut out = vec![0.0f32; strips * k * MR];
+    for s in 0..strips {
+        let base = s * k * MR;
+        for r in 0..MR.min(rows - s * MR) {
+            let src = a.row(row0 + s * MR + r);
+            for (p, &v) in src.iter().enumerate() {
+                out[base + p * MR + r] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Pack `cols` columns of B starting at `col0` into NR-strips, k-major.
+/// Element `(p, col0 + s*NR + c)` of B lands at `s*k*NR + p*NR + c`.
+fn pack_b_panel(b: &MatrixView<'_>, col0: usize, cols: usize, k: usize) -> Vec<f32> {
+    let strips = cols.div_ceil(NR);
+    let mut out = vec![0.0f32; strips * k * NR];
+    for s in 0..strips {
+        let base = s * k * NR;
+        let c0 = col0 + s * NR;
+        let width = NR.min(cols - s * NR);
+        for p in 0..k {
+            let src = b.row(p);
+            out[base + p * NR..base + p * NR + width].copy_from_slice(&src[c0..c0 + width]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Matrix;
+    use crate::util::check;
+
+    #[test]
+    fn a_panel_layout_is_transposed_strips() {
+        // 6x3 A, si = 6: one panel, two strips (4 + 2 rows).
+        let a = Matrix::from_vec(
+            6,
+            3,
+            (0..18).map(|v| v as f32).collect::<Vec<_>>(),
+        );
+        let plan = BlockPlan::new(6, 3, 8, 6, 8);
+        let p = PackedPanels::pack(a.view(), Matrix::zeros(3, 8).view(), &plan);
+        let (ap, rows) = p.a_panel(0);
+        assert_eq!(rows, 6);
+        assert_eq!(ap.len(), 2 * 3 * MR);
+        // Strip 0, k = 0 holds column 0 of rows 0..4: [0, 3, 6, 9].
+        assert_eq!(&ap[0..4], &[0.0, 3.0, 6.0, 9.0]);
+        // Strip 0, k = 2 holds column 2 of rows 0..4: [2, 5, 8, 11].
+        assert_eq!(&ap[2 * MR..2 * MR + 4], &[2.0, 5.0, 8.0, 11.0]);
+        // Strip 1, k = 0: rows 4..6 then zero padding.
+        assert_eq!(&ap[3 * MR..3 * MR + 4], &[12.0, 15.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn b_panel_layout_is_row_strips() {
+        // 2x10 B, sj = 10: one panel, two strips (8 + 2 cols).
+        let b = Matrix::from_vec(
+            2,
+            10,
+            (0..20).map(|v| v as f32).collect::<Vec<_>>(),
+        );
+        let plan = BlockPlan::new(4, 2, 10, 4, 10);
+        let p = PackedPanels::pack(Matrix::zeros(4, 2).view(), b.view(), &plan);
+        let (bp, cols) = p.b_panel(0);
+        assert_eq!(cols, 10);
+        assert_eq!(bp.len(), 2 * 2 * NR);
+        // Strip 0, k = 0: columns 0..8 of row 0.
+        assert_eq!(&bp[0..NR], &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        // Strip 1, k = 1: columns 8..10 of row 1, zero-padded.
+        assert_eq!(&bp[2 * NR + NR..2 * NR + NR + 4], &[18.0, 19.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn panels_cover_whole_operands() {
+        let a = Matrix::random(50, 13, 7);
+        let b = Matrix::random(13, 41, 8);
+        let plan = BlockPlan::new(50, 13, 41, 16, 16);
+        let p = PackedPanels::pack(a.view(), b.view(), &plan);
+        assert_eq!(p.a_panels.len(), plan.blocks_i());
+        assert_eq!(p.b_panels.len(), plan.blocks_j());
+        assert_eq!(p.a_rows.iter().sum::<usize>(), 50);
+        assert_eq!(p.b_cols.iter().sum::<usize>(), 41);
+    }
+
+    #[test]
+    fn prop_pack_preserves_every_element() {
+        check::cases(48, |rng| {
+            let (m, k, n) = (rng.range(1, 30), rng.range(1, 20), rng.range(1, 30));
+            let (si, sj) = (rng.range(1, 16), rng.range(1, 16));
+            let seed = rng.next_u64();
+            let a = Matrix::random(m, k, seed);
+            let b = Matrix::random(k, n, seed + 1);
+            let plan = BlockPlan::new(m, k, n, si, sj);
+            let p = PackedPanels::pack(a.view(), b.view(), &plan);
+            // Every A element is recoverable from its packed slot.
+            for bi in 0..plan.blocks_i() {
+                let (ap, rows) = p.a_panel(bi);
+                for r in 0..rows {
+                    let (s, rr) = (r / MR, r % MR);
+                    for p_idx in 0..k {
+                        let got = ap[s * k * MR + p_idx * MR + rr];
+                        assert_eq!(got, a.get(bi * si + r, p_idx));
+                    }
+                }
+            }
+            // Every B element likewise.
+            for bj in 0..plan.blocks_j() {
+                let (bp, cols) = p.b_panel(bj);
+                for c in 0..cols {
+                    let (s, cc) = (c / NR, c % NR);
+                    for p_idx in 0..k {
+                        let got = bp[s * k * NR + p_idx * NR + cc];
+                        assert_eq!(got, b.get(p_idx, bj * sj + c));
+                    }
+                }
+            }
+        });
+    }
+}

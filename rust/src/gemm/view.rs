@@ -1,0 +1,331 @@
+//! Borrowed matrix views — the zero-copy substrate of the panel
+//! pipeline.
+//!
+//! [`MatrixView`] / [`MatrixViewMut`] are `(rows, cols, row_stride)`
+//! windows over borrowed FP32 storage: the panel packer reads operand
+//! sub-blocks through them without materializing per-task copies, and
+//! row-band splits of a mutable view are how C is partitioned across
+//! workers. [`DisjointBlocks`] is the writer the coordinator hands its
+//! workers: a `Sync` handle over C's storage whose block writes are data-
+//! race-free because the blocks of one [`crate::blocking::BlockPlan`]
+//! tile C exactly (see `prop_tasks_tile_c_exactly`) and the WQM hands
+//! every task to exactly one worker (see the conservation proptests) —
+//! disjointness by construction, no `Mutex<Matrix>` on the hot path.
+
+use super::Matrix;
+
+/// Immutable window over row-major FP32 storage.
+#[derive(Debug, Clone, Copy)]
+pub struct MatrixView<'a> {
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+    data: &'a [f32],
+}
+
+impl<'a> MatrixView<'a> {
+    /// View over `data` with explicit geometry. `data` must hold the
+    /// last element of the last row.
+    pub fn new(data: &'a [f32], rows: usize, cols: usize, row_stride: usize) -> Self {
+        assert!(row_stride >= cols, "row stride shorter than a row");
+        if rows > 0 && cols > 0 {
+            assert!(
+                data.len() >= (rows - 1) * row_stride + cols,
+                "view geometry exceeds storage"
+            );
+        }
+        Self { rows, cols, row_stride, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        assert!(r < self.rows && c < self.cols, "view index out of bounds");
+        self.data[r * self.row_stride + c]
+    }
+
+    /// Row `r` as a contiguous slice (borrows the underlying storage).
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        assert!(r < self.rows, "row out of bounds");
+        &self.data[r * self.row_stride..r * self.row_stride + self.cols]
+    }
+
+    /// Sub-view of the `rows x cols` block at `(row0, col0)`, clipped to
+    /// the parent bounds — the borrowed twin of [`Matrix::block`].
+    pub fn block(&self, row0: usize, col0: usize, rows: usize, cols: usize) -> MatrixView<'a> {
+        let r1 = (row0 + rows).min(self.rows);
+        let c1 = (col0 + cols).min(self.cols);
+        assert!(row0 <= r1 && col0 <= c1, "block origin out of bounds");
+        let (nrows, ncols) = (r1 - row0, c1 - col0);
+        if nrows == 0 || ncols == 0 {
+            return MatrixView { rows: 0, cols: 0, row_stride: self.row_stride, data: &[] };
+        }
+        let start = row0 * self.row_stride + col0;
+        let end = start + (nrows - 1) * self.row_stride + ncols;
+        MatrixView {
+            rows: nrows,
+            cols: ncols,
+            row_stride: self.row_stride,
+            data: &self.data[start..end],
+        }
+    }
+
+    /// Copy this view into an owned [`Matrix`] (test/diagnostic helper;
+    /// the hot path never calls it).
+    pub fn to_matrix(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            out.data[r * self.cols..(r + 1) * self.cols].copy_from_slice(self.row(r));
+        }
+        out
+    }
+}
+
+/// Mutable window over row-major FP32 storage.
+#[derive(Debug)]
+pub struct MatrixViewMut<'a> {
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+    data: &'a mut [f32],
+}
+
+impl<'a> MatrixViewMut<'a> {
+    pub fn new(data: &'a mut [f32], rows: usize, cols: usize, row_stride: usize) -> Self {
+        assert!(row_stride >= cols, "row stride shorter than a row");
+        if rows > 0 && cols > 0 {
+            assert!(
+                data.len() >= (rows - 1) * row_stride + cols,
+                "view geometry exceeds storage"
+            );
+        }
+        Self { rows, cols, row_stride, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row `r` as a mutable contiguous slice.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        assert!(r < self.rows, "row out of bounds");
+        &mut self.data[r * self.row_stride..r * self.row_stride + self.cols]
+    }
+
+    /// Reborrow immutably.
+    pub fn as_view(&self) -> MatrixView<'_> {
+        MatrixView::new(self.data, self.rows, self.cols, self.row_stride)
+    }
+
+    /// Split into two disjoint row bands `[0, r)` and `[r, rows)` — the
+    /// safe primitive behind partitioning C across owners.
+    pub fn split_at_row(self, r: usize) -> (MatrixViewMut<'a>, MatrixViewMut<'a>) {
+        assert!(r <= self.rows, "split row out of bounds");
+        let (top, bottom) = self.data.split_at_mut(r * self.row_stride);
+        (
+            MatrixViewMut { rows: r, cols: self.cols, row_stride: self.row_stride, data: top },
+            MatrixViewMut {
+                rows: self.rows - r,
+                cols: self.cols,
+                row_stride: self.row_stride,
+                data: bottom,
+            },
+        )
+    }
+}
+
+/// Shared writer over a dense output matrix whose writes target
+/// *disjoint* blocks.
+///
+/// This is the partitioned-C half of the lock-free coordinator: every
+/// worker holds `&DisjointBlocks` and streams its finished `C_ij` blocks
+/// straight into place. Soundness rests on the invariant named in the
+/// constructor docs and discharged by the callers: concurrent
+/// [`DisjointBlocks::write_block`] calls never overlap because (a) a
+/// [`crate::blocking::BlockPlan`]'s tasks tile C exactly — every element
+/// belongs to exactly one `(bi, bj)` block — and (b) the WQM pops each
+/// task exactly once, so exactly one worker writes each block.
+pub struct DisjointBlocks<'a> {
+    ptr: *mut f32,
+    rows: usize,
+    cols: usize,
+    _borrow: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: the writer only ever writes through `ptr`, and the contract of
+// `write_block` (each block written by at most one thread) makes those
+// writes disjoint; the PhantomData keeps the exclusive borrow of the
+// underlying matrix alive for 'a, so no other safe code can observe the
+// storage concurrently.
+unsafe impl Send for DisjointBlocks<'_> {}
+unsafe impl Sync for DisjointBlocks<'_> {}
+
+impl<'a> DisjointBlocks<'a> {
+    /// Wrap a dense (`row_stride == cols`) mutable view. The view's
+    /// exclusive borrow is held for the writer's lifetime.
+    pub fn new(view: MatrixViewMut<'a>) -> Self {
+        assert_eq!(view.row_stride, view.cols, "writer needs a dense view");
+        Self {
+            ptr: view.data.as_mut_ptr(),
+            rows: view.rows,
+            cols: view.cols,
+            _borrow: std::marker::PhantomData,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Write a `rows x cols` tile (stored row-major at `src_stride`)
+    /// at `(row0, col0)`.
+    ///
+    /// # Safety
+    ///
+    /// No two concurrent calls may target overlapping element ranges.
+    /// The coordinator guarantees this by only writing the block of a
+    /// [`crate::blocking::BlockTask`] it popped from the WQM: tasks tile
+    /// C disjointly and each is popped once. Bounds are checked.
+    pub unsafe fn write_block(
+        &self,
+        row0: usize,
+        col0: usize,
+        src: &[f32],
+        src_stride: usize,
+        rows: usize,
+        cols: usize,
+    ) {
+        assert!(row0 + rows <= self.rows && col0 + cols <= self.cols, "block out of bounds");
+        assert!(cols <= src_stride, "source stride shorter than a row");
+        if rows == 0 || cols == 0 {
+            return;
+        }
+        assert!(src.len() >= (rows - 1) * src_stride + cols, "source too short");
+        for i in 0..rows {
+            let dst = self.ptr.add((row0 + i) * self.cols + col0);
+            std::ptr::copy_nonoverlapping(src.as_ptr().add(i * src_stride), dst, cols);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view_matches_matrix() {
+        let m = Matrix::random(7, 5, 1);
+        let v = m.view();
+        assert_eq!((v.rows(), v.cols()), (7, 5));
+        for r in 0..7 {
+            assert_eq!(v.row(r), m.row(r));
+            for c in 0..5 {
+                assert_eq!(v.get(r, c), m.get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn sub_view_equals_copied_block() {
+        let m = Matrix::random(10, 8, 2);
+        let v = m.view().block(3, 2, 4, 5);
+        assert_eq!(v.to_matrix(), m.block(3, 2, 4, 5));
+    }
+
+    #[test]
+    fn sub_view_clips_at_edges() {
+        let m = Matrix::random(10, 10, 3);
+        let v = m.view().block(8, 7, 4, 4);
+        assert_eq!((v.rows(), v.cols()), (2, 3));
+        assert_eq!(v.to_matrix(), m.block(8, 7, 4, 4));
+    }
+
+    #[test]
+    fn nested_sub_views_compose() {
+        let m = Matrix::random(12, 12, 4);
+        let outer = m.view().block(2, 2, 8, 8);
+        let inner = outer.block(1, 3, 4, 4);
+        assert_eq!(inner.to_matrix(), m.block(3, 5, 4, 4));
+    }
+
+    #[test]
+    fn mut_view_writes_through() {
+        let mut m = Matrix::zeros(4, 4);
+        {
+            let mut v = m.view_mut();
+            v.row_mut(2)[1] = 7.0;
+        }
+        assert_eq!(m.get(2, 1), 7.0);
+    }
+
+    #[test]
+    fn split_at_row_is_disjoint_and_complete() {
+        let mut m = Matrix::zeros(6, 3);
+        {
+            let v = m.view_mut();
+            let (mut top, mut bottom) = v.split_at_row(2);
+            assert_eq!((top.rows(), bottom.rows()), (2, 4));
+            top.row_mut(1)[0] = 1.0;
+            bottom.row_mut(0)[2] = 2.0;
+        }
+        assert_eq!(m.get(1, 0), 1.0);
+        assert_eq!(m.get(2, 2), 2.0);
+    }
+
+    #[test]
+    fn disjoint_writer_places_blocks() {
+        let mut m = Matrix::zeros(6, 6);
+        {
+            let w = DisjointBlocks::new(m.view_mut());
+            let tile = [1.0f32, 2.0, 3.0, 4.0];
+            // SAFETY: single-threaded, disjoint targets.
+            unsafe {
+                w.write_block(0, 0, &tile, 2, 2, 2);
+                w.write_block(4, 4, &tile, 2, 2, 2);
+            }
+        }
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(1, 1), 4.0);
+        assert_eq!(m.get(4, 5), 2.0);
+        assert_eq!(m.get(5, 4), 3.0);
+        assert_eq!(m.get(3, 3), 0.0);
+    }
+
+    #[test]
+    fn writer_respects_source_stride() {
+        let mut m = Matrix::zeros(2, 4);
+        {
+            let w = DisjointBlocks::new(m.view_mut());
+            // 2x2 tile embedded in a stride-3 scratch buffer.
+            let scratch = [1.0f32, 2.0, 9.0, 3.0, 4.0, 9.0];
+            unsafe { w.write_block(0, 1, &scratch, 3, 2, 2) };
+        }
+        assert_eq!(m.data, vec![0.0, 1.0, 2.0, 0.0, 0.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn writer_bounds_checked() {
+        let mut m = Matrix::zeros(4, 4);
+        let w = DisjointBlocks::new(m.view_mut());
+        let tile = [0.0f32; 16];
+        unsafe { w.write_block(2, 2, &tile, 4, 4, 4) };
+    }
+}

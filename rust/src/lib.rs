@@ -10,11 +10,18 @@
 //! with a cycle-level simulator standing in for the VC709 FPGA:
 //!
 //! * [`config`] — bitstream (`P_m`, `P`) and run-time (`N_p`, `S_i`) knobs;
-//! * [`gemm`] / [`blocking`] — dense-matrix substrate and the blocked
-//!   algorithm's task grid;
+//! * [`gemm`] — dense-matrix substrate in three layers: the oracle
+//!   [`Matrix`], the functional blocked algorithm, and the zero-copy
+//!   panel pipeline (borrowed `MatrixView`s → once-per-job
+//!   `PackedPanels` → register-blocked microkernel → lock-free
+//!   `DisjointBlocks` writes into C);
+//! * [`blocking`] — the blocked algorithm's task grid (`BlockPlan`,
+//!   whose exact tiling of C is what makes the disjoint writes sound);
 //! * [`ddr`] — DDR3 bank/row timing model (the Fig. 3 substrate);
 //! * [`mac`] — buffer descriptors, transpose-of-A, burst scheduling;
-//! * [`wqm`] — workload queues + the work-stealing controller;
+//! * [`wqm`] — workload queues + the work-stealing controller: the
+//!   steppable `Wqm` for the simulators and the lock-free `AtomicWqm`
+//!   (one CAS per pop/steal) for the coordinator's workers;
 //! * [`mpe`] — PE / linear-array / multi-array cycle model (PSU, FIFOs,
 //!   Independent vs Cooperation mux modes);
 //! * [`accelerator`] — the integrated event-driven simulation;
@@ -24,8 +31,9 @@
 //! * [`cnn`] — AlexNet-as-GEMM workloads (Table II);
 //! * [`runtime`] — PJRT client executing the AOT-compiled JAX/Pallas
 //!   kernels (`artifacts/*.hlo.txt`) for the real numerics;
-//! * [`coordinator`] — the async serving layer: GEMM jobs in, blocks
-//!   scheduled across simulated arrays, numerics via the runtime.
+//! * [`coordinator`] — the serving layer: GEMM jobs in, panels packed
+//!   once per job, `N_p` workers draining the lock-free WQM and writing
+//!   disjoint C blocks in place, timing via the simulator.
 
 pub mod accelerator;
 pub mod analytical;

@@ -1,15 +1,20 @@
 //! Minimal criterion-style benchmark harness for `harness = false`
-//! benches: warmup, timed iterations, mean / median / p95 / min, and an
-//! optional throughput line. Honors `MARR_BENCH_QUICK=1` for CI-speed
-//! runs.
+//! benches: warmup, timed iterations, mean / median / p95 / min, an
+//! optional throughput line, and a JSON report ([`Bench::write_json`])
+//! so runs leave a machine-readable artifact (`BENCH_hotpath.json`).
+//! Honors `MARR_BENCH_QUICK=1` for CI-speed runs.
 
+use std::cell::RefCell;
+use std::path::Path;
 use std::time::{Duration, Instant};
 
-/// One benchmark group/runner.
+/// One benchmark group/runner. Results accumulate internally so a bench
+/// binary can dump everything it measured as JSON at exit.
 pub struct Bench {
     name: String,
     warmup_iters: usize,
     samples: usize,
+    records: RefCell<Vec<Record>>,
 }
 
 /// Summary statistics of one benchmark.
@@ -22,6 +27,13 @@ pub struct Stats {
     pub samples: usize,
 }
 
+struct Record {
+    label: String,
+    stats: Stats,
+    /// Elements per iteration, when the caller declared a throughput.
+    elements: Option<u64>,
+}
+
 impl Bench {
     pub fn new(name: impl Into<String>) -> Self {
         let quick = std::env::var("MARR_BENCH_QUICK").is_ok();
@@ -29,6 +41,7 @@ impl Bench {
             name: name.into(),
             warmup_iters: if quick { 1 } else { 3 },
             samples: if quick { 5 } else { 30 },
+            records: RefCell::new(Vec::new()),
         }
     }
 
@@ -38,7 +51,27 @@ impl Bench {
     }
 
     /// Time `f`, print a report line, return the stats.
-    pub fn run<T>(&self, label: &str, mut f: impl FnMut() -> T) -> Stats {
+    pub fn run<T>(&self, label: &str, f: impl FnMut() -> T) -> Stats {
+        self.run_recorded(label, None, f)
+    }
+
+    /// Like [`Bench::run`], also printing elements/second throughput.
+    pub fn run_throughput<T>(&self, label: &str, elements: u64, f: impl FnMut() -> T) -> Stats {
+        let stats = self.run_recorded(label, Some(elements), f);
+        println!(
+            "bench {}/{label:<32} throughput {:.3e} elem/s",
+            self.name,
+            rate(elements, stats.median)
+        );
+        stats
+    }
+
+    fn run_recorded<T>(
+        &self,
+        label: &str,
+        elements: Option<u64>,
+        mut f: impl FnMut() -> T,
+    ) -> Stats {
         for _ in 0..self.warmup_iters {
             std::hint::black_box(f());
         }
@@ -67,23 +100,76 @@ impl Bench {
             fmt(stats.min),
             stats.samples
         );
+        self.records.borrow_mut().push(Record {
+            label: label.to_string(),
+            stats,
+            elements,
+        });
         stats
     }
 
-    /// Like [`run`], also printing elements/second throughput.
-    pub fn run_throughput<T>(
-        &self,
-        label: &str,
-        elements: u64,
-        f: impl FnMut() -> T,
-    ) -> Stats {
-        let stats = self.run(label, f);
-        let per_sec = elements as f64 / stats.median.as_secs_f64();
-        println!(
-            "bench {}/{label:<32} throughput {:.3e} elem/s",
-            self.name, per_sec
-        );
-        stats
+    /// Dump everything measured so far as a JSON report. Schema:
+    /// `{bench, quick, results: [{label, samples, mean_ns, median_ns,
+    /// p95_ns, min_ns, elements?, elements_per_sec?}]}`.
+    pub fn write_json(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let records = self.records.borrow();
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", escape_json(&self.name)));
+        out.push_str(&format!(
+            "  \"quick\": {},\n",
+            std::env::var("MARR_BENCH_QUICK").is_ok()
+        ));
+        out.push_str("  \"results\": [\n");
+        for (i, r) in records.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": \"{}\", \"samples\": {}, \"mean_ns\": {}, \
+                 \"median_ns\": {}, \"p95_ns\": {}, \"min_ns\": {}",
+                escape_json(&r.label),
+                r.stats.samples,
+                r.stats.mean.as_nanos(),
+                r.stats.median.as_nanos(),
+                r.stats.p95.as_nanos(),
+                r.stats.min.as_nanos()
+            ));
+            if let Some(elements) = r.elements {
+                out.push_str(&format!(
+                    ", \"elements\": {}, \"elements_per_sec\": {:.6e}",
+                    elements,
+                    rate(elements, r.stats.median)
+                ));
+            }
+            out.push('}');
+            if i + 1 < records.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(path, out)
+    }
+}
+
+/// Escape a string for embedding in a JSON string literal.
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn rate(elements: u64, median: Duration) -> f64 {
+    let secs = median.as_secs_f64();
+    if secs > 0.0 {
+        elements as f64 / secs
+    } else {
+        0.0
     }
 }
 
@@ -118,5 +204,41 @@ mod tests {
         assert!(fmt(Duration::from_micros(12)).contains("µs"));
         assert!(fmt(Duration::from_millis(12)).contains("ms"));
         assert!(fmt(Duration::from_secs(2)).contains(" s"));
+    }
+
+    #[test]
+    fn json_report_lists_all_labels() {
+        let b = Bench::new("jsontest").samples(3);
+        b.run("alpha", || 1 + 1);
+        b.run_throughput("beta", 1_000_000, || std::hint::black_box(0u64));
+        let path = std::env::temp_dir().join("marr_bench_test.json");
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(text.contains("\"bench\": \"jsontest\""));
+        assert!(text.contains("\"label\": \"alpha\""));
+        assert!(text.contains("\"label\": \"beta\""));
+        assert!(text.contains("elements_per_sec"));
+        // Exactly one comma between the two result objects, none trailing.
+        assert_eq!(text.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn rate_handles_zero_duration() {
+        assert_eq!(rate(100, Duration::ZERO), 0.0);
+    }
+
+    #[test]
+    fn json_metacharacters_in_labels_are_escaped() {
+        assert_eq!(escape_json(r#"a "b" \c"#), r#"a \"b\" \\c"#);
+        assert_eq!(escape_json("tab\there"), "tab\\u0009here");
+        let b = Bench::new("esc\"name").samples(3);
+        b.run("label \"quoted\"", || 0u8);
+        let path = std::env::temp_dir().join("marr_bench_escape_test.json");
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(text.contains(r#""bench": "esc\"name""#));
+        assert!(text.contains(r#"label \"quoted\""#));
     }
 }

@@ -1,0 +1,377 @@
+//! Lock-free WQM for the coordinator's worker threads.
+//!
+//! The hardware WQM's per-queue counter lives in one place and every
+//! pop/steal is a counter compare plus a FIFO op. The first software
+//! twin serialized all of that behind one `Mutex<Wqm>` — every pop from
+//! every worker contended one lock. [`AtomicWqm`] removes the lock: each
+//! queue is a frozen task array plus a single packed `head|tail` word,
+//! and a pop (front) or steal (back) is one CAS on that word.
+//!
+//! Linearizability argument: both endpoints live in the *same* atomic,
+//! so a successful `compare_exchange` claims index `head` (pop) or
+//! `tail - 1` (steal) with the emptiness check (`head < tail`) in the
+//! same atomic step. Head only grows, tail only shrinks, and claimed
+//! indices are therefore unique — every task is handed out exactly once
+//! (the conservation invariant the threaded tests hammer). The task
+//! array itself is never mutated after construction, so reading the
+//! claimed slot needs no synchronization beyond the acquire on the CAS.
+//!
+//! Stealing policy matches the paper and [`super::Wqm`]: an empty queue
+//! steals one task from the back of the *fullest* other queue. The
+//! fullest-victim scan reads racy lengths (like the hardware's counter
+//! snapshot), which can momentarily pick a second-fullest victim — the
+//! policy is a heuristic; correctness never depends on it.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use super::QueueStats;
+
+/// Pack `(head, tail)` into one CAS-able word.
+#[inline]
+fn pack(head: u32, tail: u32) -> u64 {
+    (u64::from(head) << 32) | u64::from(tail)
+}
+
+#[inline]
+fn unpack(bounds: u64) -> (u32, u32) {
+    ((bounds >> 32) as u32, bounds as u32)
+}
+
+#[derive(Debug)]
+struct Queue<T> {
+    /// Frozen at construction; slots are claimed via `bounds`, never
+    /// overwritten.
+    tasks: Vec<T>,
+    /// `head << 32 | tail`: live tasks are `tasks[head..tail]`.
+    bounds: AtomicU64,
+    executed: AtomicU64,
+    stolen_in: AtomicU64,
+    stolen_out: AtomicU64,
+}
+
+impl<T: Copy> Queue<T> {
+    fn new(tasks: Vec<T>) -> Self {
+        assert!(u32::try_from(tasks.len()).is_ok(), "queue exceeds u32 tasks");
+        let bounds = AtomicU64::new(pack(0, tasks.len() as u32));
+        Self {
+            tasks,
+            bounds,
+            executed: AtomicU64::new(0),
+            stolen_in: AtomicU64::new(0),
+            stolen_out: AtomicU64::new(0),
+        }
+    }
+
+    fn len(&self) -> usize {
+        let (head, tail) = unpack(self.bounds.load(Ordering::Relaxed));
+        (tail - head) as usize
+    }
+
+    /// Claim the front task (FIFO local pop).
+    fn pop_front(&self) -> Option<T> {
+        let mut cur = self.bounds.load(Ordering::Acquire);
+        loop {
+            let (head, tail) = unpack(cur);
+            if head >= tail {
+                return None;
+            }
+            match self.bounds.compare_exchange_weak(
+                cur,
+                pack(head + 1, tail),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some(self.tasks[head as usize]),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Claim the back task (steal — the tasks the owner would reach
+    /// last, minimizing disruption of its stream).
+    fn steal_back(&self) -> Option<T> {
+        let mut cur = self.bounds.load(Ordering::Acquire);
+        loop {
+            let (head, tail) = unpack(cur);
+            if head >= tail {
+                return None;
+            }
+            match self.bounds.compare_exchange_weak(
+                cur,
+                pack(head, tail - 1),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some(self.tasks[(tail - 1) as usize]),
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+/// Lock-free work-stealing queue set: `N_p` frozen queues, atomic
+/// endpoint words, shared by reference across workers (`pop` takes
+/// `&self`).
+#[derive(Debug)]
+pub struct AtomicWqm<T> {
+    queues: Vec<Queue<T>>,
+    stealing: AtomicBool,
+}
+
+impl<T: Copy> AtomicWqm<T> {
+    /// Build from an initial static partition (one Vec per array).
+    pub fn from_partition(partition: Vec<Vec<T>>) -> Self {
+        assert!(!partition.is_empty(), "need at least one queue");
+        Self {
+            queues: partition.into_iter().map(Queue::new).collect(),
+            stealing: AtomicBool::new(true),
+        }
+    }
+
+    /// Global switch — `false` models the no-stealing baseline ablation.
+    pub fn set_stealing(&self, enabled: bool) {
+        self.stealing.store(enabled, Ordering::Relaxed);
+    }
+
+    pub fn num_queues(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Per-queue live counts (the WQM counters), as a racy snapshot.
+    pub fn counters(&self) -> Vec<usize> {
+        self.queues.iter().map(Queue::len).collect()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.queues.iter().map(Queue::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Snapshot of the per-queue statistics (same shape as
+    /// [`super::Wqm::stats`]; `enqueued` is the initial load).
+    pub fn stats(&self) -> Vec<QueueStats> {
+        self.queues
+            .iter()
+            .map(|q| QueueStats {
+                enqueued: q.tasks.len() as u64,
+                executed: q.executed.load(Ordering::Relaxed),
+                stolen_in: q.stolen_in.load(Ordering::Relaxed),
+                stolen_out: q.stolen_out.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Pop for array `queue`; if its queue is empty and stealing is
+    /// enabled, steal one task from the fullest non-empty queue.
+    /// Returns `None` only once every reachable queue is empty.
+    pub fn pop(&self, queue: usize) -> Option<T> {
+        if let Some(task) = self.queues[queue].pop_front() {
+            self.queues[queue].executed.fetch_add(1, Ordering::Relaxed);
+            return Some(task);
+        }
+        if !self.stealing.load(Ordering::Relaxed) {
+            return None;
+        }
+        loop {
+            let victim = self.fullest_other(queue)?;
+            if let Some(task) = self.queues[victim].steal_back() {
+                self.queues[victim].stolen_out.fetch_add(1, Ordering::Relaxed);
+                self.queues[queue].stolen_in.fetch_add(1, Ordering::Relaxed);
+                self.queues[queue].executed.fetch_add(1, Ordering::Relaxed);
+                return Some(task);
+            }
+            // Victim drained between the scan and the CAS — rescan. The
+            // loop terminates: total remaining work is finite and
+            // strictly shrinks under claims, and when every other queue
+            // reads empty the scan returns None.
+        }
+    }
+
+    /// Victim selection: fullest non-empty other queue, ties toward the
+    /// lowest index (the paper's "queue with the most workloads").
+    fn fullest_other(&self, requester: usize) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None;
+        for (q, queue) in self.queues.iter().enumerate() {
+            if q == requester {
+                continue;
+            }
+            let len = queue.len();
+            if len == 0 {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((_, best_len)) => len > best_len,
+            };
+            if better {
+                best = Some((q, len));
+            }
+        }
+        best.map(|(q, _)| q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check;
+
+    fn loaded(counts: &[usize]) -> AtomicWqm<usize> {
+        let mut id = 0;
+        let partition = counts
+            .iter()
+            .map(|&c| {
+                (0..c)
+                    .map(|_| {
+                        id += 1;
+                        id - 1
+                    })
+                    .collect()
+            })
+            .collect();
+        AtomicWqm::from_partition(partition)
+    }
+
+    #[test]
+    fn local_pop_is_fifo() {
+        let w = loaded(&[3, 0]);
+        assert_eq!(w.pop(0), Some(0));
+        assert_eq!(w.pop(0), Some(1));
+        assert_eq!(w.pop(0), Some(2));
+    }
+
+    #[test]
+    fn empty_queue_steals_from_fullest_back() {
+        let w = loaded(&[2, 0, 5]); // queue 1 empty; fullest is 2 (ids 2..7)
+        assert_eq!(w.pop(1), Some(6));
+        let stats = w.stats();
+        assert_eq!(stats[1].stolen_in, 1);
+        assert_eq!(stats[2].stolen_out, 1);
+    }
+
+    #[test]
+    fn stealing_disabled_returns_none() {
+        let w = loaded(&[0, 5]);
+        w.set_stealing(false);
+        assert_eq!(w.pop(0), None);
+        assert_eq!(w.remaining(), 5);
+    }
+
+    #[test]
+    fn counters_track_claims() {
+        let w = loaded(&[0, 3, 7, 5]);
+        w.pop(0).unwrap();
+        assert_eq!(w.counters(), vec![0, 3, 6, 5]);
+    }
+
+    #[test]
+    fn drain_executes_everything_exactly_once() {
+        let w = loaded(&[4, 0, 9, 1]);
+        let mut seen = Vec::new();
+        for q in 0..4 {
+            while let Some(t) = w.pop(q) {
+                seen.push(t);
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..14).collect::<Vec<_>>());
+        assert!(w.is_empty());
+        assert_eq!(w.stats().iter().map(|s| s.executed).sum::<u64>(), 14);
+    }
+
+    #[test]
+    fn prop_sequential_conservation_matches_locked_wqm_semantics() {
+        check::cases(96, |rng| {
+            let np = rng.range(1, 6);
+            let counts: Vec<usize> = (0..np).map(|_| rng.range(0, 12)).collect();
+            let total: usize = counts.iter().sum();
+            let w = loaded(&counts);
+            w.set_stealing(rng.bool());
+            let mut seen = Vec::new();
+            for _ in 0..rng.range(0, 200) {
+                if let Some(t) = w.pop(rng.range(0, np)) {
+                    seen.push(t);
+                }
+            }
+            for q in 0..np {
+                while let Some(t) = w.pop(q) {
+                    seen.push(t);
+                }
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, (0..total).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn threaded_drain_no_loss_no_duplication() {
+        // The invariant the lock-free claim rests on, hammered from
+        // many threads: every task claimed exactly once.
+        let nthreads = 8;
+        let per_queue = 2000;
+        let w = loaded(&[per_queue; 4]);
+        let total = 4 * per_queue;
+        let mut all: Vec<usize> = Vec::with_capacity(total);
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..nthreads {
+                let w = &w;
+                handles.push(s.spawn(move || {
+                    let mut mine = Vec::new();
+                    let mut q = t % 4;
+                    while let Some(task) = w.pop(q) {
+                        mine.push(task);
+                        q = (q + 1) % 4;
+                    }
+                    mine
+                }));
+            }
+            for h in handles {
+                all.extend(h.join().unwrap());
+            }
+        });
+        all.sort_unstable();
+        assert_eq!(all, (0..total).collect::<Vec<_>>());
+        let stats = w.stats();
+        assert_eq!(stats.iter().map(|s| s.executed).sum::<u64>(), total as u64);
+        assert_eq!(
+            stats.iter().map(|s| s.stolen_in).sum::<u64>(),
+            stats.iter().map(|s| s.stolen_out).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn threaded_single_queue_contention() {
+        // All threads fight over one queue's packed word.
+        let w = loaded(&[10_000]);
+        let mut all: Vec<usize> = Vec::new();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for _ in 0..8 {
+                let w = &w;
+                handles.push(s.spawn(move || {
+                    let mut mine = Vec::new();
+                    while let Some(task) = w.pop(0) {
+                        mine.push(task);
+                    }
+                    mine
+                }));
+            }
+            for h in handles {
+                all.extend(h.join().unwrap());
+            }
+        });
+        all.sort_unstable();
+        assert_eq!(all, (0..10_000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for (h, t) in [(0u32, 0u32), (1, 5), (u32::MAX, u32::MAX), (7, u32::MAX)] {
+            assert_eq!(unpack(pack(h, t)), (h, t));
+        }
+    }
+}

@@ -10,6 +10,18 @@
 //! (over [`crate::blocking::BlockTask`]) and the async coordinator (over
 //! job handles) reuse the exact same policy, and so the proptests pin the
 //! conservation invariants once for everyone.
+//!
+//! Two implementations share the policy and the [`QueueStats`] shape:
+//!
+//! * [`Wqm`] — the single-owner (`&mut self`) deque version the
+//!   simulators step; supports pushes and the round-robin arbiter;
+//! * [`atomic::AtomicWqm`] — the lock-free (`&self`) version the
+//!   coordinator's worker threads share: frozen queues with one packed
+//!   `head|tail` CAS word each, no `Mutex` on the pop/steal fast path.
+
+pub mod atomic;
+
+pub use atomic::AtomicWqm;
 
 use std::collections::VecDeque;
 

@@ -1,0 +1,144 @@
+//! Offline stub of the `xla` (xla-rs / PJRT) bindings.
+//!
+//! The build environment has no XLA C API distribution, so this crate
+//! provides the exact type/method surface `multi_array::runtime` needs,
+//! with every entry point that would touch PJRT failing fast with a
+//! descriptive [`Error`]. The effect at the crate level: `Runtime::load`
+//! returns `Err`, `NumericsEngine::pjrt` propagates it, and
+//! `NumericsEngine::auto` falls back to the in-process golden/packed
+//! backend — numerics stay correct, only the PJRT execution path is
+//! dark. Swapping this path dependency for the real `xla` crate (plus
+//! its `libpjrt` closure) re-enables it without touching the main crate.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (Display + std::error::Error).
+#[derive(Debug, Clone)]
+pub struct Error {
+    message: String,
+}
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Self {
+            message: format!(
+                "{what}: PJRT unavailable (vendored `xla` stub — link the real xla-rs \
+                 bindings to enable the PJRT backend)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub of `xla::PjRtClient`. [`PjRtClient::cpu`] always errors.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable`. Unreachable in practice: no
+/// client can be constructed to compile one.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Stub of `xla::PjRtBuffer`.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub of `xla::Literal` (host-side tensor value).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Ok(Literal { _private: () })
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Stub of `xla::HloModuleProto`.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_fast_with_clear_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn hlo_loading_fails() {
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn literal_construction_is_inert() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_ok());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
