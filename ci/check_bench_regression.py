@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: fail CI when hot-path throughput drops.
+
+Usage:
+    check_bench_regression.py BASELINE.json FRESH.json [SERVING.json]
+
+Compares `elements_per_sec` of the gated label in FRESH against the
+checked-in BASELINE and fails (exit 1) on a drop of more than
+MAX_DROP_FRAC. A baseline without the label (e.g. the placeholder
+shipped before the first toolchain-enabled run) passes with a notice, so
+the gate arms itself automatically once real numbers are committed.
+
+When SERVING.json is given, also sanity-checks that the cross-job
+stealing mode does not show a *higher* worker idle fraction than the
+per-job-pool baseline; CI runners are noisy, so that check only warns.
+"""
+
+import json
+import sys
+
+GATED_LABEL = "functional_block_128x256x128"
+MAX_DROP_FRAC = 0.20
+
+
+def load_report(path):
+    with open(path) as f:
+        data = json.load(f)
+    return data
+
+
+def load_results(path):
+    return {r.get("label"): r for r in load_report(path).get("results", [])}
+
+
+def throughput(results, label):
+    r = results.get(label)
+    if r is None:
+        return None
+    return r.get("elements_per_sec")
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    baseline = load_results(argv[1])
+    fresh = load_results(argv[2])
+
+    fresh_tput = throughput(fresh, GATED_LABEL)
+    if fresh_tput is None:
+        print(f"FAIL: fresh run {argv[2]} did not emit '{GATED_LABEL}'")
+        return 1
+
+    base_tput = throughput(baseline, GATED_LABEL)
+    if base_tput is None:
+        print(
+            f"NOTICE: baseline {argv[1]} has no '{GATED_LABEL}' entry yet "
+            f"(fresh: {fresh_tput:.3e} elem/s). Gate passes; commit a "
+            "baseline recorded with MARR_BENCH_QUICK=1 on a CI-class "
+            "runner to arm it."
+        )
+        rc = 0
+    else:
+        base_quick = load_report(argv[1]).get("quick")
+        fresh_quick = load_report(argv[2]).get("quick")
+        if base_quick != fresh_quick:
+            print(
+                f"WARNING: baseline quick={base_quick} vs fresh "
+                f"quick={fresh_quick} — different sampling modes; the "
+                "comparison is biased. Re-record the baseline in the "
+                "gate's mode (MARR_BENCH_QUICK=1)."
+            )
+        drop = (base_tput - fresh_tput) / base_tput
+        print(
+            f"{GATED_LABEL}: baseline {base_tput:.3e} elem/s, "
+            f"fresh {fresh_tput:.3e} elem/s, drop {drop * 100:+.1f}%"
+        )
+        if drop > MAX_DROP_FRAC:
+            print(f"FAIL: throughput dropped more than {MAX_DROP_FRAC * 100:.0f}%")
+            return 1
+        rc = 0
+
+    if len(argv) > 3:
+        serving = load_results(argv[3])
+        pools = serving.get("serve64_per_job_pools", {}).get("worker_idle_frac")
+        steal = serving.get("serve64_cross_steal", {}).get("worker_idle_frac")
+        if pools is not None and steal is not None:
+            print(
+                f"serving idle fraction: per-job pools {pools:.3f}, "
+                f"cross-job stealing {steal:.3f}"
+            )
+            if steal > pools:
+                print(
+                    "WARNING: cross-job stealing shows a higher idle fraction "
+                    "than the per-job-pool baseline on this runner"
+                )
+        else:
+            print("NOTICE: serving idle-fraction annotations missing; skipped")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,76 @@
+//! Serving-runtime demonstration: why cross-job work stealing exists.
+//!
+//! One persistent pool serves a burst of mixed-size GEMM jobs — a few
+//! elephants among many single-task mice. With cross-job stealing off
+//! the pool drains jobs one at a time (per-job-pool behaviour) and
+//! small jobs idle most workers; with it on, idle workers pull tasks
+//! from the fullest live job and the pool stays busy. Small jobs are
+//! additionally coalesced into batched super-jobs.
+//!
+//! ```sh
+//! cargo run --release --example serving_demo
+//! ```
+
+use multi_array::config::{HardwareConfig, RunConfig};
+use multi_array::coordinator::{GemmJob, JobServer, NumericsEngine, ServerConfig};
+use multi_array::gemm::Matrix;
+
+fn burst(srv: &JobServer, njobs: usize) -> anyhow::Result<()> {
+    let mut tickets = Vec::with_capacity(njobs);
+    for j in 0..njobs {
+        let seed = j as u64;
+        let (a, b) = if j % 8 == 0 {
+            (Matrix::random(512, 128, seed), Matrix::random(128, 512, seed + 900))
+        } else {
+            (Matrix::random(64, 32, seed), Matrix::random(32, 64, seed + 900))
+        };
+        tickets.push(srv.submit(GemmJob {
+            id: seed,
+            a,
+            b,
+            run: Some(RunConfig::square(4, 64)),
+        })?);
+    }
+    for t in tickets {
+        t.wait()?;
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let hw = HardwareConfig::paper();
+    let njobs = 64;
+    println!(
+        "{njobs} mixed-size jobs (8 elephants 512x128x512 + 56 single-task mice 64x32x64)\n"
+    );
+
+    for (label, cross, batching) in [
+        ("per-job pools (stealing OFF, batching OFF)", false, false),
+        ("cross-job stealing ON, batching OFF", true, false),
+        ("full system (stealing + batching)", true, true),
+    ] {
+        let cfg = ServerConfig {
+            workers: 4,
+            queue_capacity: njobs,
+            batch_max_tasks: if batching { 4 } else { 0 },
+            batch_window: if batching { 8 } else { 1 },
+            cross_job_stealing: cross,
+            default_run: None,
+        };
+        let srv = JobServer::new(hw.clone(), NumericsEngine::golden(), cfg)?;
+        let t0 = std::time::Instant::now();
+        burst(&srv, njobs)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = srv.stats();
+        println!("{label}:");
+        println!("  wall {:.3}s  |  {stats}", wall);
+        srv.shutdown();
+        println!();
+    }
+    println!(
+        "idle fraction drops when stealing crosses job boundaries: the mice\n\
+         no longer serialize the pool behind themselves, exactly the paper's\n\
+         inter-array argument lifted to inter-job scope."
+    );
+    Ok(())
+}

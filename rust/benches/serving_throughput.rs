@@ -1,0 +1,130 @@
+//! Serving-runtime benchmark: 64 mixed-size jobs through one persistent
+//! pool, cross-job stealing vs the per-job-pool baseline.
+//!
+//! The workload is the ISSUE's motivating mix — a few elephants
+//! (512x128x512, 64 WQM tasks each) among many single-task mice
+//! (64x32x64) — so the per-job-pool baseline visibly idles workers
+//! while a mouse holds the pool and the cross-job scheduler does not.
+//! Three modes:
+//!
+//! * `serve64_per_job_pools`  — stealing OFF, batching OFF (baseline:
+//!   the pool drains jobs strictly one at a time);
+//! * `serve64_cross_steal`    — stealing ON, batching OFF (isolates the
+//!   inter-job stealing win);
+//! * `serve64_full_system`    — stealing ON, batching ON (the shipped
+//!   configuration, small jobs coalesced into super-jobs).
+//!
+//! Each mode's record carries `worker_idle_frac` (mean across samples)
+//! and `cross_job_steals` annotations; the CI gate and BENCH_serving.json
+//! consumers compare idle fractions across modes.
+
+use std::cell::Cell;
+
+use multi_array::config::{HardwareConfig, RunConfig};
+use multi_array::coordinator::{GemmJob, JobServer, NumericsEngine, ServerConfig};
+use multi_array::gemm::Matrix;
+use multi_array::util::Bench;
+
+const NJOBS: usize = 64;
+const WORKERS: usize = 4;
+
+/// The job mix: every 8th job an elephant, the rest single-task mice.
+/// Returns `(a, b, run)` triples; operands are rebuilt per submission
+/// (the server consumes them).
+fn workload() -> Vec<(Matrix, Matrix, RunConfig)> {
+    (0..NJOBS)
+        .map(|j| {
+            let seed = j as u64;
+            if j % 8 == 0 {
+                (
+                    Matrix::random(512, 128, seed),
+                    Matrix::random(128, 512, seed + 9000),
+                    RunConfig::square(4, 64),
+                )
+            } else {
+                (
+                    Matrix::random(64, 32, seed),
+                    Matrix::random(32, 64, seed + 9000),
+                    RunConfig::square(4, 64),
+                )
+            }
+        })
+        .collect()
+}
+
+fn total_flops(jobs: &[(Matrix, Matrix, RunConfig)]) -> u64 {
+    jobs.iter()
+        .map(|(a, b, _)| 2 * a.rows as u64 * a.cols as u64 * b.cols as u64)
+        .sum()
+}
+
+/// Push the whole mix through a fresh server; returns
+/// `(worker_idle_frac, cross_job_steals)`.
+fn serve_once(
+    jobs: &[(Matrix, Matrix, RunConfig)],
+    cross_job_stealing: bool,
+    batching: bool,
+) -> (f64, u64) {
+    let cfg = ServerConfig {
+        workers: WORKERS,
+        queue_capacity: NJOBS,
+        batch_max_tasks: if batching { 4 } else { 0 },
+        batch_window: if batching { 8 } else { 1 },
+        cross_job_stealing,
+        default_run: None,
+    };
+    let srv = JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), cfg)
+        .expect("server construction");
+    let tickets: Vec<_> = jobs
+        .iter()
+        .enumerate()
+        .map(|(id, (a, b, run))| {
+            srv.submit(GemmJob {
+                id: id as u64,
+                a: a.clone(),
+                b: b.clone(),
+                run: Some(*run),
+            })
+            .expect("submit")
+        })
+        .collect();
+    for t in tickets {
+        t.wait().expect("job result");
+    }
+    let stats = srv.stats();
+    assert_eq!(stats.jobs, NJOBS as u64, "every job must complete");
+    (stats.worker_idle_frac, stats.cross_job_steals)
+}
+
+fn main() {
+    let bench = Bench::new("serving_throughput");
+    let jobs = workload();
+    let flops = total_flops(&jobs);
+
+    for (label, cross, batching) in [
+        ("serve64_per_job_pools", false, false),
+        ("serve64_cross_steal", true, false),
+        ("serve64_full_system", true, true),
+    ] {
+        let idle_sum = Cell::new(0.0f64);
+        let steal_sum = Cell::new(0.0f64);
+        let samples = Cell::new(0u32);
+        bench.run_throughput(label, flops, || {
+            let (idle, steals) = serve_once(&jobs, cross, batching);
+            idle_sum.set(idle_sum.get() + idle);
+            steal_sum.set(steal_sum.get() + steals as f64);
+            samples.set(samples.get() + 1);
+        });
+        let n = samples.get().max(1) as f64;
+        bench.annotate("worker_idle_frac", idle_sum.get() / n);
+        bench.annotate("cross_job_steals", steal_sum.get() / n);
+        bench.annotate("jobs", NJOBS as f64);
+        bench.annotate("workers", WORKERS as f64);
+    }
+
+    if let Err(e) = bench.write_json("BENCH_serving.json") {
+        eprintln!("could not write BENCH_serving.json: {e}");
+    } else {
+        println!("wrote BENCH_serving.json");
+    }
+}

@@ -7,11 +7,17 @@
 //!
 //! This extends the paper's per-layer analysis into an end-to-end
 //! schedule: `schedule_network` evaluates both policies on the simulator
-//! and reports the break-even reconfiguration cost.
+//! and reports the break-even reconfiguration cost, and
+//! [`schedule_network_served`] routes the same layer sequence through
+//! the serving runtime ([`crate::coordinator::JobServer`]) so a
+//! whole-network run is just another job stream — real numerics per
+//! layer, same schedule accounting.
 
 use crate::accelerator::{Accelerator, SimOptions};
 use crate::config::{HardwareConfig, RunConfig};
+use crate::coordinator::{GemmJob, JobServer};
 use crate::dse;
+use crate::gemm::Matrix;
 
 use super::GemmLayer;
 
@@ -83,6 +89,65 @@ pub fn schedule_network(
             reconfigured,
         });
         prev = Some(run);
+    }
+    Ok(NetworkSchedule {
+        layers: out,
+        reconfigs,
+        total_secs: total,
+        total_gflops: flops as f64 / total / 1e9,
+    })
+}
+
+/// Run a whole network through the serving runtime: one [`GemmJob`] per
+/// layer (deterministic random operands seeded by layer index),
+/// submitted as a stream and folded into the same [`NetworkSchedule`]
+/// shape as [`schedule_network`] — compute times come from each job's
+/// simulation report, reconfiguration stalls from consecutive config
+/// changes in layer order.
+///
+/// `Policy::PerLayerOptimal` leaves jobs unpinned, so the server picks
+/// per-layer configs (its `default_run` if set, else the DSE optimum —
+/// pass a server without a default to reproduce the DSE schedule).
+pub fn schedule_network_served(
+    server: &JobServer,
+    layers: &[GemmLayer],
+    policy: Policy,
+    reconfig_secs: f64,
+) -> anyhow::Result<NetworkSchedule> {
+    anyhow::ensure!(!layers.is_empty(), "empty layer sequence");
+    let mut tickets = Vec::with_capacity(layers.len());
+    for (i, l) in layers.iter().enumerate() {
+        let run = match policy {
+            Policy::PerLayerOptimal => None,
+            Policy::Fixed(run) => Some(run),
+        };
+        let seed = 0x5EED ^ ((i as u64) << 8);
+        let a = Matrix::random(l.m, l.k, seed);
+        let b = Matrix::random(l.k, l.n, seed + 1);
+        tickets.push(server.submit(GemmJob { id: i as u64, a, b, run })?);
+    }
+    let mut out = Vec::with_capacity(layers.len());
+    let mut prev: Option<RunConfig> = None;
+    let mut total = 0.0;
+    let mut reconfigs = 0;
+    let mut flops = 0u64;
+    for (l, t) in layers.iter().zip(tickets) {
+        let r = t.wait()?;
+        let reconfigured = prev.is_some_and(|p| p != r.run);
+        if reconfigured {
+            reconfigs += 1;
+            total += reconfig_secs;
+        }
+        total += r.sim.total_secs;
+        flops += l.flops();
+        out.push(ScheduledLayer {
+            name: l.name,
+            run: r.run,
+            secs: r.sim.total_secs,
+            gflops: r.sim.gflops,
+            reconfigured,
+        });
+        prev = Some(r.run);
     }
     Ok(NetworkSchedule {
         layers: out,
@@ -190,6 +255,53 @@ mod tests {
         let (hw, acc) = setup();
         let be = break_even_reconfig_secs(&hw, &acc, &alexnet_layers()).unwrap();
         assert!(be > 0.0, "break-even {be}");
+    }
+
+    #[test]
+    fn served_fixed_policy_matches_simulated_totals() {
+        // The served path and the simulate-only path agree exactly on a
+        // fixed schedule: same sim model, same accounting.
+        use crate::coordinator::{NumericsEngine, ServerConfig};
+        let (hw, acc) = setup();
+        let srv = JobServer::new(
+            hw.clone(),
+            NumericsEngine::golden(),
+            ServerConfig {
+                workers: 4,
+                queue_capacity: 8,
+                batch_max_tasks: 0,
+                batch_window: 1,
+                cross_job_stealing: true,
+                default_run: None,
+            },
+        )
+        .unwrap();
+        let layers = vec![
+            GemmLayer { name: "l0", m: 64, k: 32, n: 64 },
+            GemmLayer { name: "l1", m: 48, k: 24, n: 40 },
+        ];
+        let run = RunConfig::square(2, 32);
+        let served =
+            schedule_network_served(&srv, &layers, Policy::Fixed(run), 1.0).unwrap();
+        let simulated =
+            schedule_network(&hw, &acc, &layers, Policy::Fixed(run), 1.0).unwrap();
+        assert_eq!(served.reconfigs, 0);
+        assert_eq!(served.layers.len(), 2);
+        assert!((served.total_secs - simulated.total_secs).abs() < 1e-12);
+        assert!(served.layers.iter().all(|l| l.run == run));
+    }
+
+    #[test]
+    fn served_empty_network_rejected() {
+        use crate::coordinator::{NumericsEngine, ServerConfig};
+        let (hw, _) = setup();
+        let srv = JobServer::new(
+            hw,
+            NumericsEngine::golden(),
+            ServerConfig { workers: 2, ..ServerConfig::default() },
+        )
+        .unwrap();
+        assert!(schedule_network_served(&srv, &[], Policy::PerLayerOptimal, 0.0).is_err());
     }
 
     #[test]

@@ -1,14 +1,32 @@
 //! Coordinator metrics: atomic counters + latency aggregates, cheap
 //! enough to update from every worker without contention concerns.
+//!
+//! The serving layer ([`crate::coordinator::JobServer`]) shares this
+//! struct: per-job latencies are recorded individually so server-level
+//! percentiles (p50/p95/p99) come from the true distribution, not from
+//! a mean — tail latency is the serving metric that matters.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::util::rng::Rng;
+
+/// Latency samples kept for percentile queries. Exact up to this many
+/// jobs; beyond it, Algorithm-R reservoir sampling keeps a uniform
+/// subsample so a long-lived server's memory stays bounded.
+const LATENCY_RESERVOIR: usize = 4096;
+
 #[derive(Debug, Default)]
 pub struct Metrics {
     jobs: AtomicU64,
+    jobs_failed: AtomicU64,
     tasks: AtomicU64,
     steals: AtomicU64,
+    /// Pops a serving worker made from a different job than its previous
+    /// one — the inter-job extension of the paper's inter-array steal.
+    cross_job_steals: AtomicU64,
+    /// Sub-threshold jobs that were coalesced into a batched super-job.
+    batched_jobs: AtomicU64,
     /// Per-task operand-panel copies made on the numerics path. The
     /// packed zero-copy pipeline keeps this at 0; the PJRT channel
     /// backend pays 2 per task (SA and SB gathers). The hotpath tests
@@ -17,12 +35,31 @@ pub struct Metrics {
     latencies: Mutex<LatencyAgg>,
 }
 
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug)]
 struct LatencyAgg {
     count: u64,
     host_sum: f64,
     host_max: f64,
     sim_sum: f64,
+    /// Host-latency reservoir for percentile queries (exact below
+    /// [`LATENCY_RESERVOIR`] jobs, uniform subsample above).
+    host_all: Vec<f64>,
+    /// Drives the reservoir's replacement choices; deterministic seed —
+    /// the sampling, not the stream, is what needs to be unbiased.
+    rng: Rng,
+}
+
+impl Default for LatencyAgg {
+    fn default() -> Self {
+        Self {
+            count: 0,
+            host_sum: 0.0,
+            host_max: 0.0,
+            sim_sum: 0.0,
+            host_all: Vec::new(),
+            rng: Rng::new(0x7A11_1A7E),
+        }
+    }
 }
 
 impl Metrics {
@@ -32,6 +69,14 @@ impl Metrics {
 
     pub fn add_steals(&self, n: u64) {
         self.steals.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_cross_job_steals(&self, n: u64) {
+        self.cross_job_steals.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_batched_jobs(&self, n: u64) {
+        self.batched_jobs.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn add_panel_copies(&self, n: u64) {
@@ -45,10 +90,28 @@ impl Metrics {
         l.host_sum += host_secs;
         l.host_max = l.host_max.max(host_secs);
         l.sim_sum += sim_secs;
+        // Algorithm R: keep the first RESERVOIR samples, then replace a
+        // uniformly-chosen slot with probability RESERVOIR / count.
+        if l.host_all.len() < LATENCY_RESERVOIR {
+            l.host_all.push(host_secs);
+        } else {
+            let j = (l.rng.next_u64() % l.count) as usize;
+            if j < LATENCY_RESERVOIR {
+                l.host_all[j] = host_secs;
+            }
+        }
+    }
+
+    pub fn job_failed(&self) {
+        self.jobs_failed.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn jobs(&self) -> u64 {
         self.jobs.load(Ordering::Relaxed)
+    }
+
+    pub fn jobs_failed(&self) -> u64 {
+        self.jobs_failed.load(Ordering::Relaxed)
     }
 
     pub fn tasks(&self) -> u64 {
@@ -57,6 +120,14 @@ impl Metrics {
 
     pub fn steals(&self) -> u64 {
         self.steals.load(Ordering::Relaxed)
+    }
+
+    pub fn cross_job_steals(&self) -> u64 {
+        self.cross_job_steals.load(Ordering::Relaxed)
+    }
+
+    pub fn batched_jobs(&self) -> u64 {
+        self.batched_jobs.load(Ordering::Relaxed)
     }
 
     pub fn panel_copies(&self) -> u64 {
@@ -73,6 +144,34 @@ impl Metrics {
         }
     }
 
+    /// Host-latency percentiles (nearest-rank) for each `p` in `[0, 1]`,
+    /// seconds; zeros with no recorded jobs. One snapshot + one sort for
+    /// the whole batch, with the sort done off the lock so finalizing
+    /// workers never wait behind a stats poll.
+    pub fn host_latency_percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        let mut sorted = {
+            let l = self.latencies.lock().unwrap();
+            l.host_all.clone()
+        };
+        if sorted.is_empty() {
+            return vec![0.0; ps.len()];
+        }
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ps.iter()
+            .map(|p| {
+                let idx = ((p.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize)
+                    .saturating_sub(1)
+                    .min(sorted.len() - 1);
+                sorted[idx]
+            })
+            .collect()
+    }
+
+    /// Single-percentile convenience over [`Self::host_latency_percentiles`].
+    pub fn host_latency_percentile(&self, p: f64) -> f64 {
+        self.host_latency_percentiles(&[p])[0]
+    }
+
     /// Mean simulated FPGA time per job, seconds.
     pub fn mean_sim_secs(&self) -> f64 {
         let l = self.latencies.lock().unwrap();
@@ -86,12 +185,17 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let (mean, max) = self.host_latency();
         format!(
-            "jobs={} tasks={} steals={} panel_copies={} host_lat(mean/max)={:.3}s/{:.3}s sim(mean)={:.6}s",
+            "jobs={} (failed={}, batched={}) tasks={} steals={} (cross-job={}) \
+             panel_copies={} host_lat(mean/p95/max)={:.3}s/{:.3}s/{:.3}s sim(mean)={:.6}s",
             self.jobs(),
+            self.jobs_failed(),
+            self.batched_jobs(),
             self.tasks(),
             self.steals(),
+            self.cross_job_steals(),
             self.panel_copies(),
             mean,
+            self.host_latency_percentile(0.95),
             max,
             self.mean_sim_secs()
         )
@@ -108,13 +212,19 @@ mod tests {
         m.task_done();
         m.task_done();
         m.add_steals(3);
+        m.add_cross_job_steals(2);
+        m.add_batched_jobs(4);
         m.add_panel_copies(2);
         m.job_done(0.5, 0.001);
         m.job_done(1.5, 0.003);
+        m.job_failed();
         assert_eq!(m.tasks(), 2);
         assert_eq!(m.steals(), 3);
+        assert_eq!(m.cross_job_steals(), 2);
+        assert_eq!(m.batched_jobs(), 4);
         assert_eq!(m.panel_copies(), 2);
         assert_eq!(m.jobs(), 2);
+        assert_eq!(m.jobs_failed(), 1);
         let (mean, max) = m.host_latency();
         assert!((mean - 1.0).abs() < 1e-12);
         assert!((max - 1.5).abs() < 1e-12);
@@ -126,6 +236,45 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.host_latency(), (0.0, 0.0));
         assert_eq!(m.mean_sim_secs(), 0.0);
+        assert_eq!(m.host_latency_percentile(0.99), 0.0);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let m = Metrics::default();
+        for v in 1..=100 {
+            m.job_done(v as f64, 0.0);
+        }
+        assert_eq!(m.host_latency_percentile(0.50), 50.0);
+        assert_eq!(m.host_latency_percentile(0.95), 95.0);
+        assert_eq!(m.host_latency_percentile(0.99), 99.0);
+        assert_eq!(m.host_latency_percentile(1.0), 100.0);
+        assert_eq!(m.host_latency_percentile(0.0), 1.0);
+    }
+
+    #[test]
+    fn reservoir_keeps_percentiles_representative() {
+        // Push far more jobs than the reservoir holds: aggregates stay
+        // exact, percentiles stay statistically representative.
+        let m = Metrics::default();
+        for v in 1..=10_000 {
+            m.job_done(v as f64, 0.0);
+        }
+        let (mean, max) = m.host_latency();
+        assert_eq!(max, 10_000.0); // max is exact, not sampled
+        assert!((mean - 5000.5).abs() < 1e-9); // sum/count exact too
+        let ps = m.host_latency_percentiles(&[0.50, 0.95]);
+        assert!((4000.0..=6000.0).contains(&ps[0]), "p50 {}", ps[0]);
+        assert!((9000.0..=10_000.0).contains(&ps[1]), "p95 {}", ps[1]);
+        assert!(ps[0] <= ps[1]);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let m = Metrics::default();
+        m.job_done(0.25, 0.0);
+        assert_eq!(m.host_latency_percentile(0.5), 0.25);
+        assert_eq!(m.host_latency_percentile(0.99), 0.25);
     }
 
     #[test]
@@ -133,5 +282,6 @@ mod tests {
         let m = Metrics::default();
         m.job_done(0.1, 0.01);
         assert!(m.summary().contains("jobs=1"));
+        assert!(m.summary().contains("cross-job=0"));
     }
 }

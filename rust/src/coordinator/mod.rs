@@ -23,12 +23,30 @@
 //! (XLA handles are not `Send`) fed over channels. Timing comes from the
 //! cycle-level simulator, so every job returns both a real result matrix
 //! and the FPGA-time report.
+//!
+//! Two serving shapes share that job-scoped pipeline:
+//!
+//! * [`Coordinator`] — one job at a time; spawns `N_p` workers per job
+//!   and joins them before returning (the shape of the paper's single
+//!   measured run). Simple, deterministic, good for tests and the CLI.
+//! * [`server::JobServer`] — the production shape: a persistent worker
+//!   pool fed by a bounded admission queue, per-job `AtomicWqm`s in an
+//!   epoch-tagged job table ([`crate::wqm::JobRegistry`]), **cross-job**
+//!   work stealing so small requests can't idle the pool behind a large
+//!   one, and batching of sub-threshold jobs into shared super-jobs.
+//!   Use this when jobs arrive as traffic rather than as one call.
+//!
+//! Both report into the same [`Metrics`] shape; the server additionally
+//! exposes throughput and latency percentiles via
+//! [`server::JobServer::stats`].
 
 pub mod engine;
 pub mod metrics;
+pub mod server;
 
 pub use engine::NumericsEngine;
 pub use metrics::Metrics;
+pub use server::{JobServer, JobTicket, ServerConfig, ServerStats, TrySubmitError};
 
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
@@ -59,8 +77,32 @@ pub struct JobResult {
     pub run: RunConfig,
     /// Simulated FPGA-side execution report.
     pub sim: SimReport,
-    /// Wall-clock host latency of the numerics execution.
+    /// Wall-clock host latency of the numerics execution (for served
+    /// jobs: admission to completion, queueing included).
     pub host_latency_secs: f64,
+    /// Whether the job was coalesced into a batched super-job by the
+    /// serving runtime. Always `false` from [`Coordinator::run_job`].
+    pub batched: bool,
+}
+
+/// Shared planning policy: a job's pinned config wins, then the caller's
+/// default (the server's serving fast path), then the DSE optimum.
+pub(crate) fn choose_run(
+    hw: &HardwareConfig,
+    surface: &crate::analytical::BandwidthSurface,
+    job: &GemmJob,
+    default_run: Option<RunConfig>,
+) -> anyhow::Result<RunConfig> {
+    if let Some(run) = job.run {
+        run.validate(hw)?;
+        return Ok(run);
+    }
+    if let Some(run) = default_run {
+        run.validate(hw)?;
+        return Ok(run);
+    }
+    let e = dse::explore(hw, job.a.rows, job.a.cols, job.b.cols, surface)?;
+    Ok(e.best.run)
 }
 
 /// The coordinator.
@@ -91,18 +133,7 @@ impl Coordinator {
 
     /// Choose the run config for a job: pinned, or DSE-optimal.
     pub fn plan_job(&self, job: &GemmJob) -> anyhow::Result<RunConfig> {
-        if let Some(run) = job.run {
-            run.validate(&self.hw)?;
-            return Ok(run);
-        }
-        let e = dse::explore(
-            &self.hw,
-            job.a.rows,
-            job.a.cols,
-            job.b.cols,
-            self.accelerator.surface(),
-        )?;
-        Ok(e.best.run)
+        choose_run(&self.hw, self.accelerator.surface(), job, None)
     }
 
     /// Execute one job: numerics through `N_p` work-stealing workers on
@@ -175,12 +206,16 @@ impl Coordinator {
         let host_latency_secs = start.elapsed().as_secs_f64();
         self.metrics.job_done(host_latency_secs, sim.total_secs);
 
-        Ok(JobResult { id: job.id, c, run, sim, host_latency_secs })
+        Ok(JobResult { id: job.id, c, run, sim, host_latency_secs, batched: false })
     }
 
     /// Serve a stream of jobs, replying on per-job channels. Jobs run
     /// sequentially (the accelerator is a single shared device); the
     /// queue is the batching point. Returns when the sender hangs up.
+    ///
+    /// This is the minimal serving loop; for concurrent traffic use
+    /// [`JobServer`], which keeps one persistent pool busy across jobs
+    /// (cross-job stealing) instead of processing them one at a time.
     pub fn serve(
         &self,
         jobs: mpsc::Receiver<(GemmJob, mpsc::Sender<anyhow::Result<JobResult>>)>,

@@ -1,0 +1,1260 @@
+//! The multi-job serving runtime: a persistent worker pool with
+//! cross-job work stealing.
+//!
+//! [`super::Coordinator::run_job`] reproduces the paper's work stealing
+//! *inside* one job: `N_p` workers spawned per job drain one
+//! [`AtomicWqm`] and exit. Under serving traffic that shape wastes the
+//! pool — a 128x128 request occupies one task while the other workers
+//! idle, and every job pays thread spawn/join. [`JobServer`] extends the
+//! paper's inter-array stealing to *inter-job* scheduling:
+//!
+//! * one worker pool, spawned once, serves a stream of [`GemmJob`]s;
+//! * jobs enter through a **bounded admission queue**
+//!   ([`JobServer::submit`] blocks when full — backpressure;
+//!   [`JobServer::try_submit`] sheds load instead);
+//! * a dispatcher thread plans each admitted job (pinned config,
+//!   server default, or DSE), packs its operands once via the existing
+//!   [`PackedPanels`] path, and publishes its tasks into a per-job
+//!   [`AtomicWqm`] registered in a shared epoch-tagged
+//!   [`JobRegistry`];
+//! * workers drain the job they are already on first (panel locality),
+//!   then **steal from the fullest queue of any live job** — so one
+//!   small request can never idle the pool while a 4096x4096 job runs;
+//! * sub-threshold jobs are **coalesced into one batched super-job**:
+//!   their tasks share a single WQM and fan out to per-sub-job
+//!   [`DisjointBlocks`] writers, so tiny GEMMs amortize scheduling and
+//!   still produce bit-identical results to individually-run ones
+//!   (same panels, same microkernel, same accumulation order).
+//!
+//! Completion is counter-driven: the worker that finishes a job's last
+//! task assembles the result, runs the timing simulation, records
+//! per-job latency into the shared [`Metrics`] (server-level
+//! percentiles), replies on the job's ticket channel, and retires the
+//! job from the registry.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use crate::accelerator::{Accelerator, SimOptions};
+use crate::blocking::{BlockPlan, BlockTask};
+use crate::config::{HardwareConfig, RunConfig};
+use crate::gemm::{DisjointBlocks, Matrix, PackedPanels};
+use crate::wqm::{AtomicWqm, JobRegistry};
+
+use super::engine::NumericsEngine;
+use super::metrics::Metrics;
+use super::{choose_run, GemmJob, JobResult};
+
+/// Serving-runtime knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Persistent worker threads (the software `N_p` of the pool).
+    pub workers: usize,
+    /// Bounded admission-queue capacity, in jobs. `submit` blocks and
+    /// `try_submit` rejects while the queue is full. The same figure
+    /// bounds *activated* jobs (`max(queue_capacity, workers)`), so the
+    /// server's in-flight memory is capped regardless of arrival rate.
+    pub queue_capacity: usize,
+    /// A job whose block grid has at most this many tasks is "small"
+    /// and eligible for batching (it cannot occupy the pool alone).
+    pub batch_max_tasks: usize,
+    /// Maximum small jobs coalesced into one batched super-job.
+    /// `<= 1` disables batching.
+    pub batch_window: usize,
+    /// When `false`, workers only take tasks from the oldest live job —
+    /// the per-job-pool baseline the serving bench compares against.
+    pub cross_job_stealing: bool,
+    /// Used for unpinned jobs instead of running the DSE per job (the
+    /// serving fast path). `None` = explore per job.
+    pub default_run: Option<RunConfig>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        let workers = thread::available_parallelism().map(|n| n.get().min(8)).unwrap_or(4);
+        Self {
+            workers,
+            queue_capacity: 64,
+            batch_max_tasks: 4,
+            batch_window: 8,
+            cross_job_stealing: true,
+            default_run: None,
+        }
+    }
+}
+
+/// Handle to one in-flight job; resolves to its [`JobResult`].
+#[derive(Debug)]
+pub struct JobTicket {
+    pub id: u64,
+    rx: mpsc::Receiver<anyhow::Result<JobResult>>,
+}
+
+impl JobTicket {
+    /// Block until the job completes.
+    pub fn wait(self) -> anyhow::Result<JobResult> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!("server dropped job {} without replying", self.id)),
+        }
+    }
+
+    /// Non-blocking poll; `None` while the job is still in flight. A
+    /// dropped reply channel (server died without answering, or the
+    /// result was already consumed) surfaces as `Some(Err(..))`, never
+    /// as an eternal `None`.
+    pub fn try_wait(&self) -> Option<anyhow::Result<JobResult>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(anyhow::anyhow!(
+                "server dropped job {} without replying",
+                self.id
+            ))),
+        }
+    }
+}
+
+/// Why [`JobServer::try_submit`] rejected a job; carries the job back so
+/// the caller can retry, shed, or route elsewhere.
+#[derive(Debug)]
+pub enum TrySubmitError {
+    /// Admission queue at capacity (backpressure).
+    Full(GemmJob),
+    /// Server is shutting down.
+    Closed(GemmJob),
+}
+
+/// Server-level snapshot: throughput, tail latency, pool utilization.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub jobs: u64,
+    pub jobs_failed: u64,
+    pub tasks: u64,
+    pub steals: u64,
+    pub cross_job_steals: u64,
+    pub batched_jobs: u64,
+    pub uptime_secs: f64,
+    pub throughput_jobs_per_sec: f64,
+    pub latency_mean_secs: f64,
+    pub latency_p50_secs: f64,
+    pub latency_p95_secs: f64,
+    pub latency_p99_secs: f64,
+    /// Total worker busy time (numerics execution), seconds.
+    pub worker_busy_secs: f64,
+    /// `1 - busy / (workers * uptime)` — the figure cross-job stealing
+    /// exists to lower.
+    pub worker_idle_frac: f64,
+}
+
+impl std::fmt::Display for ServerStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "jobs={} (failed={}, batched={}) tasks={} steals={} (cross-job={}) \
+             {:.1} jobs/s lat(p50/p95/p99)={:.4}s/{:.4}s/{:.4}s idle={:.1}%",
+            self.jobs,
+            self.jobs_failed,
+            self.batched_jobs,
+            self.tasks,
+            self.steals,
+            self.cross_job_steals,
+            self.throughput_jobs_per_sec,
+            self.latency_p50_secs,
+            self.latency_p95_secs,
+            self.latency_p99_secs,
+            100.0 * self.worker_idle_frac
+        )
+    }
+}
+
+/// One queue element of a (possibly batched) job: which sub-job it
+/// belongs to, and which C block it computes.
+#[derive(Debug, Clone, Copy)]
+struct SubTask {
+    sub: u32,
+    task: BlockTask,
+}
+
+/// Raw handle to a sub-job's C storage; the buffer it points into is
+/// owned by [`SubJob::out`] and outlives every task of the sub-job.
+#[derive(Debug, Clone, Copy)]
+struct RawOut {
+    ptr: *mut f32,
+    rows: usize,
+    cols: usize,
+}
+
+// SAFETY: the pointer targets heap storage owned by the same `SubJob`
+// (kept alive in `out` until after the last task completes), and all
+// writes through it go through `DisjointBlocks::write_block`'s
+// disjointness contract.
+unsafe impl Send for RawOut {}
+unsafe impl Sync for RawOut {}
+
+/// One GEMM inside an active (possibly batched) job.
+struct SubJob {
+    id: u64,
+    run: RunConfig,
+    a: Matrix,
+    b: Matrix,
+    /// Packed once at admission for in-process engines; `None` for the
+    /// channel-fed PJRT backend (it gathers per task).
+    panels: Option<PackedPanels>,
+    /// C's owned storage; taken by the finalizing worker.
+    out: Mutex<Option<Matrix>>,
+    raw: RawOut,
+    /// Tasks not yet completed; the worker that decrements it to zero
+    /// finalizes the sub-job.
+    pending: AtomicUsize,
+    /// First task-level error, if any (delivered at finalize).
+    error: Mutex<Option<anyhow::Error>>,
+    reply: Mutex<Option<mpsc::Sender<anyhow::Result<JobResult>>>>,
+    accepted_at: Instant,
+    batched: bool,
+}
+
+/// A registered job: its lock-free task queues plus execution context.
+struct ActiveJob {
+    wqm: AtomicWqm<SubTask>,
+    subs: Vec<SubJob>,
+    /// Sub-jobs not yet finalized; zero retires the job from the table.
+    subs_pending: AtomicUsize,
+}
+
+/// Generation-counted wakeup gate: registration (and shutdown) bump the
+/// generation; idle workers sleep until it moves past what they saw
+/// before their last empty scan — no lost wakeups, no busy wait.
+///
+/// `current` is one atomic load (it sits on the workers' per-task fast
+/// path); the mutex + condvar only serialize the sleep/notify
+/// handshake. The bump increments the generation *under* the lock, so
+/// it cannot land between a waiter's re-check and its `wait`.
+struct WorkGate {
+    gen: AtomicU64,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl WorkGate {
+    fn new() -> Self {
+        Self { gen: AtomicU64::new(0), lock: Mutex::new(()), cv: Condvar::new() }
+    }
+
+    fn current(&self) -> u64 {
+        self.gen.load(Ordering::Acquire)
+    }
+
+    fn bump(&self) {
+        {
+            let _g = self.lock.lock().unwrap();
+            self.gen.fetch_add(1, Ordering::AcqRel);
+        }
+        self.cv.notify_all();
+    }
+
+    fn wait_past(&self, seen: u64) {
+        let mut g = self.lock.lock().unwrap();
+        while self.gen.load(Ordering::Acquire) == seen {
+            g = self.cv.wait(g).unwrap();
+        }
+        drop(g);
+    }
+}
+
+/// One admitted submission awaiting dispatch.
+struct Submission {
+    job: GemmJob,
+    reply: mpsc::Sender<anyhow::Result<JobResult>>,
+    accepted_at: Instant,
+}
+
+/// Admission-queue element: a lone job, or an explicit group (from
+/// [`JobServer::submit_batch`]) the dispatcher coalesces as a unit.
+enum QueueItem {
+    One(Submission),
+    Group(Vec<Submission>),
+}
+
+impl QueueItem {
+    fn jobs(&self) -> usize {
+        match self {
+            QueueItem::One(_) => 1,
+            QueueItem::Group(g) => g.len(),
+        }
+    }
+}
+
+struct AdmissionState {
+    queue: VecDeque<QueueItem>,
+    /// Jobs (not items) currently queued — what capacity bounds.
+    len: usize,
+    closed: bool,
+    /// FIFO tickets for blocking pushers: each `push_blocking` call takes
+    /// `next_ticket` and may only admit when it becomes `serving`, so a
+    /// large group waiting for space cannot be starved by a stream of
+    /// later single-job submitters barging into the freed capacity.
+    next_ticket: u64,
+    serving: u64,
+}
+
+/// Bounded admission queue with blocking and load-shedding entry points.
+struct Admission {
+    capacity: usize,
+    state: Mutex<AdmissionState>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+enum TryPushError {
+    Full(QueueItem),
+    Closed(QueueItem),
+}
+
+impl Admission {
+    fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            state: Mutex::new(AdmissionState {
+                queue: VecDeque::new(),
+                len: 0,
+                closed: false,
+                next_ticket: 0,
+                serving: 0,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Block until the item fits (backpressure), admitting blocked
+    /// pushers strictly in arrival (ticket) order. An item larger than
+    /// the whole capacity is admitted once the queue is empty, so
+    /// oversized explicit batches make progress instead of deadlocking.
+    fn push_blocking(&self, item: QueueItem) -> Result<(), QueueItem> {
+        let n = item.jobs();
+        let mut st = self.state.lock().unwrap();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        loop {
+            if st.closed {
+                // Every waiter sees `closed` and exits; `serving` need
+                // not advance past abandoned tickets.
+                return Err(item);
+            }
+            if st.serving == ticket && (st.len + n <= self.capacity || st.len == 0) {
+                st.serving += 1;
+                st.len += n;
+                st.queue.push_back(item);
+                self.not_empty.notify_one();
+                // Hand the turn to the next ticket holder, if any.
+                self.not_full.notify_all();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    fn try_push(&self, item: QueueItem) -> Result<(), TryPushError> {
+        let n = item.jobs();
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(TryPushError::Closed(item));
+        }
+        // Never barge past blocked FIFO pushers (serving < next_ticket
+        // means someone is waiting for space).
+        if st.serving != st.next_ticket || (st.len + n > self.capacity && st.len > 0) {
+            return Err(TryPushError::Full(item));
+        }
+        st.len += n;
+        st.queue.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dispatcher side: next item, or `None` once closed *and* drained.
+    fn pop_blocking(&self) -> Option<QueueItem> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.queue.pop_front() {
+                st.len -= item.jobs();
+                self.not_full.notify_all();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    fn try_pop(&self) -> Option<QueueItem> {
+        let mut st = self.state.lock().unwrap();
+        let item = st.queue.pop_front()?;
+        st.len -= item.jobs();
+        self.not_full.notify_all();
+        Some(item)
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    fn len(&self) -> usize {
+        self.state.lock().unwrap().len
+    }
+}
+
+/// State shared by the dispatcher and every worker.
+struct Shared {
+    hw: HardwareConfig,
+    accelerator: Accelerator,
+    engine: NumericsEngine,
+    metrics: Arc<Metrics>,
+    registry: JobRegistry<ActiveJob>,
+    gate: WorkGate,
+    stop: AtomicBool,
+    cfg: ServerConfig,
+    /// Per-worker busy nanoseconds (numerics execution only).
+    worker_busy: Vec<AtomicU64>,
+    /// Registered-but-unfinished jobs; shutdown drains this to zero.
+    inflight: AtomicUsize,
+    started: Instant,
+}
+
+/// A planned submission, ready to activate.
+struct Planned {
+    sub: Submission,
+    run: RunConfig,
+    plan: BlockPlan,
+    small: bool,
+}
+
+/// The serving runtime. See the module docs for the architecture.
+pub struct JobServer {
+    shared: Arc<Shared>,
+    admission: Arc<Admission>,
+    dispatcher: Option<thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl JobServer {
+    pub fn new(
+        hw: HardwareConfig,
+        engine: NumericsEngine,
+        cfg: ServerConfig,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
+        anyhow::ensure!(cfg.queue_capacity >= 1, "need admission capacity >= 1");
+        anyhow::ensure!(cfg.batch_window >= 1, "batch window must be >= 1");
+        if let Some(run) = cfg.default_run {
+            run.validate(&hw)?;
+        }
+        let shared = Arc::new(Shared {
+            accelerator: Accelerator::new(hw.clone()),
+            hw,
+            engine,
+            metrics: Arc::new(Metrics::default()),
+            registry: JobRegistry::new(),
+            gate: WorkGate::new(),
+            stop: AtomicBool::new(false),
+            worker_busy: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
+            inflight: AtomicUsize::new(0),
+            started: Instant::now(),
+            cfg,
+        });
+        let admission = Arc::new(Admission::new(shared.cfg.queue_capacity));
+
+        let mut workers = Vec::with_capacity(shared.cfg.workers);
+        for w in 0..shared.cfg.workers {
+            let shared = shared.clone();
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("marr-worker-{w}"))
+                    .spawn(move || worker_loop(shared, w))?,
+            );
+        }
+        let dispatcher = {
+            let shared = shared.clone();
+            let admission = admission.clone();
+            thread::Builder::new()
+                .name("marr-dispatcher".into())
+                .spawn(move || dispatcher_loop(shared, admission))?
+        };
+        Ok(Self { shared, admission, dispatcher: Some(dispatcher), workers })
+    }
+
+    /// A server with default knobs.
+    pub fn with_defaults(hw: HardwareConfig, engine: NumericsEngine) -> anyhow::Result<Self> {
+        Self::new(hw, engine, ServerConfig::default())
+    }
+
+    /// Submit one job; blocks while the admission queue is full
+    /// (backpressure) and errors once the server is shutting down.
+    pub fn submit(&self, job: GemmJob) -> anyhow::Result<JobTicket> {
+        let (tx, rx) = mpsc::channel();
+        let id = job.id;
+        let item = QueueItem::One(Submission {
+            job,
+            reply: tx,
+            accepted_at: Instant::now(),
+        });
+        match self.admission.push_blocking(item) {
+            Ok(()) => Ok(JobTicket { id, rx }),
+            Err(_) => Err(anyhow::anyhow!("server closed; job {id} rejected")),
+        }
+    }
+
+    /// Non-blocking submit: rejects with the job handed back when the
+    /// queue is full (shed load) or the server is closed.
+    pub fn try_submit(&self, job: GemmJob) -> Result<JobTicket, TrySubmitError> {
+        let (tx, rx) = mpsc::channel();
+        let id = job.id;
+        let item = QueueItem::One(Submission {
+            job,
+            reply: tx,
+            accepted_at: Instant::now(),
+        });
+        match self.admission.try_push(item) {
+            Ok(()) => Ok(JobTicket { id, rx }),
+            Err(TryPushError::Full(QueueItem::One(s))) => Err(TrySubmitError::Full(s.job)),
+            Err(TryPushError::Closed(QueueItem::One(s))) => Err(TrySubmitError::Closed(s.job)),
+            Err(_) => unreachable!("single submission came back as a group"),
+        }
+    }
+
+    /// Submit jobs as one admission unit: the dispatcher coalesces the
+    /// sub-threshold ones into batched super-jobs deterministically
+    /// (no reliance on queue-timing races). Blocks under backpressure.
+    pub fn submit_batch(&self, jobs: Vec<GemmJob>) -> anyhow::Result<Vec<JobTicket>> {
+        anyhow::ensure!(!jobs.is_empty(), "empty batch");
+        let now = Instant::now();
+        let mut tickets = Vec::with_capacity(jobs.len());
+        let mut subs = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let (tx, rx) = mpsc::channel();
+            tickets.push(JobTicket { id: job.id, rx });
+            subs.push(Submission { job, reply: tx, accepted_at: now });
+        }
+        match self.admission.push_blocking(QueueItem::Group(subs)) {
+            Ok(()) => Ok(tickets),
+            Err(_) => Err(anyhow::anyhow!("server closed; batch rejected")),
+        }
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.shared.metrics.clone()
+    }
+
+    pub fn hw(&self) -> &HardwareConfig {
+        &self.shared.hw
+    }
+
+    /// Jobs currently waiting in the admission queue.
+    pub fn queue_depth(&self) -> usize {
+        self.admission.len()
+    }
+
+    /// Server-level snapshot (throughput, percentiles, idle fraction).
+    pub fn stats(&self) -> ServerStats {
+        let m = &self.shared.metrics;
+        let uptime = self.shared.started.elapsed().as_secs_f64();
+        let busy_secs = self
+            .shared
+            .worker_busy
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed) as f64 / 1e9)
+            .sum::<f64>();
+        let denom = uptime * self.shared.cfg.workers as f64;
+        let idle = if denom > 0.0 { (1.0 - busy_secs / denom).clamp(0.0, 1.0) } else { 0.0 };
+        let (mean, _) = m.host_latency();
+        let pcts = m.host_latency_percentiles(&[0.50, 0.95, 0.99]);
+        ServerStats {
+            jobs: m.jobs(),
+            jobs_failed: m.jobs_failed(),
+            tasks: m.tasks(),
+            steals: m.steals(),
+            cross_job_steals: m.cross_job_steals(),
+            batched_jobs: m.batched_jobs(),
+            uptime_secs: uptime,
+            throughput_jobs_per_sec: if uptime > 0.0 { m.jobs() as f64 / uptime } else { 0.0 },
+            latency_mean_secs: mean,
+            latency_p50_secs: pcts[0],
+            latency_p95_secs: pcts[1],
+            latency_p99_secs: pcts[2],
+            worker_busy_secs: busy_secs,
+            worker_idle_frac: idle,
+        }
+    }
+
+    /// Graceful shutdown: stop admitting, dispatch what was admitted,
+    /// finish every in-flight job (tickets still resolve), then join the
+    /// pool. `Drop` does the same.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.admission.close();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        // Wait for registered jobs to drain; unregister bumps the gate.
+        loop {
+            if self.shared.inflight.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            let seen = self.shared.gate.current();
+            if self.shared.inflight.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            self.shared.gate.wait_past(seen);
+        }
+        self.shared.stop.store(true, Ordering::Release);
+        self.shared.gate.bump();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for JobServer {
+    fn drop(&mut self) {
+        if self.dispatcher.is_some() || !self.workers.is_empty() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+/// Plan one submission: validate, choose the run config, build the block
+/// grid. On failure the submitter gets the error through its ticket and
+/// `None` comes back.
+fn plan_one(shared: &Shared, s: Submission) -> Option<Planned> {
+    let planned = (|| -> anyhow::Result<(RunConfig, BlockPlan)> {
+        anyhow::ensure!(s.job.a.cols == s.job.b.rows, "contraction mismatch");
+        // BlockPlan::new panics on zero dims; in a server that would
+        // take the dispatcher thread down — reject the job instead.
+        anyhow::ensure!(
+            s.job.a.rows > 0 && s.job.a.cols > 0 && s.job.b.cols > 0,
+            "degenerate problem {}x{}x{}",
+            s.job.a.rows,
+            s.job.a.cols,
+            s.job.b.cols
+        );
+        let run = choose_run(
+            &shared.hw,
+            shared.accelerator.surface(),
+            &s.job,
+            shared.cfg.default_run,
+        )?;
+        let plan = BlockPlan::new(s.job.a.rows, s.job.a.cols, s.job.b.cols, run.si, run.sj);
+        Ok((run, plan))
+    })();
+    match planned {
+        Ok((run, plan)) => {
+            let small = plan.num_tasks() <= shared.cfg.batch_max_tasks;
+            Some(Planned { sub: s, run, plan, small })
+        }
+        Err(e) => {
+            shared.metrics.job_failed();
+            let _ = s.reply.send(Err(e));
+            None
+        }
+    }
+}
+
+/// Build the active job for `planned` (one sub = a plain job, several =
+/// a batched super-job), pack panels, publish the combined task set into
+/// a fresh per-job WQM, and register it for the workers.
+///
+/// Blocks while the in-flight bound is reached, which is what makes the
+/// admission queue's backpressure real: the dispatcher stops draining,
+/// the queue fills, and `submit` blocks — so total server memory is
+/// bounded by `queue_capacity` queued plus `max(queue_capacity,
+/// workers)` active jobs, not by the arrival rate.
+fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
+    debug_assert!(!planned.is_empty());
+    let inflight_bound = shared.cfg.queue_capacity.max(shared.cfg.workers);
+    loop {
+        let seen = shared.gate.current();
+        if shared.inflight.load(Ordering::Acquire) < inflight_bound {
+            break;
+        }
+        // Job retirement bumps the gate; workers drain independently of
+        // the dispatcher, so this always makes progress.
+        shared.gate.wait_past(seen);
+    }
+    let batched = planned.len() > 1;
+    if batched {
+        shared.metrics.add_batched_jobs(planned.len() as u64);
+    }
+    let mut subs = Vec::with_capacity(planned.len());
+    let mut tasks: Vec<SubTask> = Vec::new();
+    for (i, p) in planned.into_iter().enumerate() {
+        for task in p.plan.tasks() {
+            tasks.push(SubTask { sub: i as u32, task });
+        }
+        let a = p.sub.job.a;
+        let b = p.sub.job.b;
+        let panels = if shared.engine.is_inprocess() {
+            Some(PackedPanels::pack(a.view(), b.view(), &p.plan))
+        } else {
+            None
+        };
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        let raw = RawOut { ptr: c.data.as_mut_ptr(), rows: c.rows, cols: c.cols };
+        subs.push(SubJob {
+            id: p.sub.job.id,
+            run: p.run,
+            a,
+            b,
+            panels,
+            pending: AtomicUsize::new(p.plan.num_tasks()),
+            out: Mutex::new(Some(c)),
+            raw,
+            error: Mutex::new(None),
+            reply: Mutex::new(Some(p.sub.reply)),
+            accepted_at: p.sub.accepted_at,
+            batched,
+        });
+    }
+    // Round-robin the combined task set over the pool's queues — the
+    // same initial static partition a single job's WQM gets.
+    let mut partition: Vec<Vec<SubTask>> = vec![Vec::new(); shared.cfg.workers];
+    for (i, st) in tasks.into_iter().enumerate() {
+        partition[i % shared.cfg.workers].push(st);
+    }
+    let subs_pending = AtomicUsize::new(subs.len());
+    let job = Arc::new(ActiveJob {
+        wqm: AtomicWqm::from_partition(partition),
+        subs,
+        subs_pending,
+    });
+    shared.inflight.fetch_add(1, Ordering::AcqRel);
+    shared.registry.register(job);
+    shared.gate.bump();
+}
+
+/// What the dispatcher carries over to its next iteration when batch
+/// accumulation runs into a non-batchable item.
+enum Carry {
+    Fresh(QueueItem),
+    Planned(Planned),
+}
+
+fn dispatcher_loop(shared: Arc<Shared>, admission: Arc<Admission>) {
+    let mut carry: Option<Carry> = None;
+    loop {
+        let item = match carry.take() {
+            Some(c) => c,
+            None => match admission.pop_blocking() {
+                Some(i) => Carry::Fresh(i),
+                None => break, // closed and drained
+            },
+        };
+        match item {
+            Carry::Fresh(QueueItem::Group(group)) => dispatch_group(&shared, group),
+            Carry::Fresh(QueueItem::One(s)) => {
+                if let Some(p) = plan_one(&shared, s) {
+                    dispatch_single(&shared, &admission, p, &mut carry);
+                }
+            }
+            Carry::Planned(p) => dispatch_single(&shared, &admission, p, &mut carry),
+        }
+    }
+}
+
+/// Dispatch one planned job; when it is small, opportunistically coalesce
+/// the run of small jobs already waiting at the queue front (a non-small
+/// job or an explicit group ends the run and is carried to the next
+/// iteration — small jobs may therefore complete ahead of a larger job
+/// admitted between them).
+fn dispatch_single(
+    shared: &Arc<Shared>,
+    admission: &Admission,
+    first: Planned,
+    carry: &mut Option<Carry>,
+) {
+    if !first.small || shared.cfg.batch_window <= 1 {
+        activate(shared, vec![first]);
+        return;
+    }
+    let mut batch = vec![first];
+    while batch.len() < shared.cfg.batch_window {
+        match admission.try_pop() {
+            Some(QueueItem::One(s)) => match plan_one(shared, s) {
+                Some(p) if p.small => batch.push(p),
+                Some(p) => {
+                    *carry = Some(Carry::Planned(p));
+                    break;
+                }
+                None => {}
+            },
+            Some(group @ QueueItem::Group(_)) => {
+                *carry = Some(Carry::Fresh(group));
+                break;
+            }
+            None => break,
+        }
+    }
+    activate(shared, batch);
+}
+
+/// Dispatch an explicit group: batch its small members (in windows),
+/// activate the rest individually.
+fn dispatch_group(shared: &Arc<Shared>, group: Vec<Submission>) {
+    let mut smalls: Vec<Planned> = Vec::new();
+    for s in group {
+        if let Some(p) = plan_one(shared, s) {
+            if p.small && shared.cfg.batch_window > 1 {
+                smalls.push(p);
+                if smalls.len() == shared.cfg.batch_window {
+                    activate(shared, std::mem::take(&mut smalls));
+                }
+            } else {
+                activate(shared, vec![p]);
+            }
+        }
+    }
+    if !smalls.is_empty() {
+        activate(shared, smalls);
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, w: usize) {
+    let mut cache_epoch = u64::MAX;
+    let mut cache: Vec<(u64, Arc<ActiveJob>)> = Vec::new();
+    // The job this worker last took a task from — drained first for
+    // panel locality; switching away from it is a cross-job steal.
+    let mut last_job: Option<u64> = None;
+    loop {
+        // Read the gate generation BEFORE the stop flag: shutdown does
+        // `stop.store` then `bump`, so either this iteration sees stop,
+        // or the bump lands after `gate_seen` and any later `wait_past`
+        // returns immediately — the stop check then fires next loop.
+        // (Checking stop first would allow store+bump to slip between
+        // the check and the read, putting the worker to sleep forever.)
+        let gate_seen = shared.gate.current();
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        if shared.registry.epoch() != cache_epoch {
+            let (epoch, snap) = shared.registry.snapshot();
+            cache_epoch = epoch;
+            cache = snap;
+        }
+
+        // 1) Keep draining the job we're already on. A job that retired
+        //    from the table resets the affinity — adopting the next job
+        //    after that is assignment, not a cross-job steal.
+        let mut claimed: Option<(u64, Arc<ActiveJob>, SubTask, bool)> = None;
+        if let Some(tag) = last_job {
+            match cache.iter().find(|(t, _)| *t == tag) {
+                Some((t, job)) => {
+                    if let Some(st) = job.wqm.pop(w) {
+                        claimed = Some((*t, job.clone(), st, false));
+                    }
+                }
+                None => last_job = None,
+            }
+        }
+        // 2) Otherwise take from another live job: the fullest one
+        //    (cross-job steal). With stealing disabled, the pool behaves
+        //    like per-job pools instead: every worker converges on the
+        //    *oldest* live job and waits for it to retire before moving
+        //    on — jobs run through the pool strictly one at a time.
+        if claimed.is_none() {
+            let pick = if shared.cfg.cross_job_stealing {
+                cache
+                    .iter()
+                    .map(|(t, j)| (*t, j, j.wqm.remaining()))
+                    .filter(|(_, _, r)| *r > 0)
+                    .max_by_key(|(_, _, r)| *r)
+            } else {
+                cache.iter().map(|(t, j)| (*t, j, j.wqm.remaining())).next()
+            };
+            if let Some((tag, job, _)) = pick {
+                if let Some(st) = job.wqm.pop(w) {
+                    // Adopting a job when we had none is assignment, not
+                    // stealing; and the no-cross-steal baseline moves to
+                    // the next job sequentially, which doesn't count.
+                    let switched = shared.cfg.cross_job_stealing
+                        && last_job.is_some()
+                        && last_job != Some(tag);
+                    claimed = Some((tag, job.clone(), st, switched));
+                } else if shared.cfg.cross_job_stealing {
+                    // Raced with other workers; another job may still
+                    // hold work — rescan immediately.
+                    std::thread::yield_now();
+                    continue;
+                } else {
+                    // Baseline: the oldest job is drained but not yet
+                    // retired, and this worker may not move past it.
+                    // Sleep until membership changes (retirement bumps
+                    // the gate) instead of busy-polling. Drop the
+                    // snapshot first so sleeping pins no retired jobs.
+                    cache.clear();
+                    cache_epoch = u64::MAX;
+                    shared.gate.wait_past(gate_seen);
+                    continue;
+                }
+            }
+        }
+
+        match claimed {
+            Some((tag, job, st, switched)) => {
+                if switched {
+                    shared.metrics.add_cross_job_steals(1);
+                }
+                last_job = Some(tag);
+                let t0 = Instant::now();
+                execute_subtask(&shared, &job, tag, st);
+                shared.worker_busy[w]
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            None => {
+                last_job = None;
+                // Sleep until a registration (or shutdown) moves the
+                // gate past what we saw before the empty scan. Drop the
+                // snapshot first: a sleeping worker must not pin retired
+                // jobs' operands/panels through an idle period.
+                cache.clear();
+                cache_epoch = u64::MAX;
+                shared.gate.wait_past(gate_seen);
+            }
+        }
+    }
+}
+
+fn execute_subtask(shared: &Shared, job: &ActiveJob, tag: u64, st: SubTask) {
+    let sub = &job.subs[st.sub as usize];
+    // SAFETY: `sub.out` keeps C's buffer alive until the final task's
+    // completion below; the WQM hands each task to exactly one worker
+    // and a BlockPlan's tasks tile C disjointly, so concurrent
+    // write_block calls never overlap.
+    let writer = unsafe { DisjointBlocks::from_raw(sub.raw.ptr, sub.raw.rows, sub.raw.cols) };
+    // Contain panics from the numerics path (kernel/writer invariant
+    // asserts): an unwinding worker would skip the completion
+    // bookkeeping below, wedging the job's ticket and shutdown forever.
+    // A panic degrades to a job error instead; no lock is held across
+    // this call, so nothing gets poisoned. (AssertUnwindSafe: on panic
+    // the only cross-boundary state is C's buffer, which the error path
+    // discards with the job.)
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        shared
+            .engine
+            .task_product_into(sub.panels.as_ref(), &sub.a, &sub.b, &st.task, &writer)
+    }));
+    match outcome {
+        Ok(Ok(zero_copy)) => {
+            if !zero_copy {
+                shared.metrics.add_panel_copies(2);
+            }
+        }
+        Ok(Err(e)) => {
+            let mut g = sub.error.lock().unwrap();
+            if g.is_none() {
+                *g = Some(e);
+            }
+        }
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            let mut g = sub.error.lock().unwrap();
+            if g.is_none() {
+                *g = Some(anyhow::anyhow!("task {} panicked: {msg}", st.task.id));
+            }
+        }
+    }
+    shared.metrics.task_done();
+    if sub.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+        finalize_sub(shared, sub);
+        if job.subs_pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Whole (super-)job done: fold its WQM stats into the server
+            // metrics and retire it from the table.
+            let intra: u64 = job.wqm.stats().iter().map(|s| s.stolen_in).sum();
+            shared.metrics.add_steals(intra);
+            shared.registry.unregister(tag);
+            shared.inflight.fetch_sub(1, Ordering::AcqRel);
+            shared.gate.bump();
+        }
+    }
+}
+
+/// Assemble and deliver one finished sub-job: take C, run the timing
+/// simulation, record per-job metrics, reply on the ticket.
+fn finalize_sub(shared: &Shared, sub: &SubJob) {
+    let c = sub.out.lock().unwrap().take();
+    let err = sub.error.lock().unwrap().take();
+    let host_latency_secs = sub.accepted_at.elapsed().as_secs_f64();
+    let result = match (err, c) {
+        (None, Some(c)) => shared
+            .accelerator
+            .simulate(&sub.run, sub.a.rows, sub.a.cols, sub.b.cols, &SimOptions::default())
+            .map(|sim| {
+                shared.metrics.job_done(host_latency_secs, sim.total_secs);
+                JobResult {
+                    id: sub.id,
+                    c,
+                    run: sub.run,
+                    sim,
+                    host_latency_secs,
+                    batched: sub.batched,
+                }
+            }),
+        (Some(e), _) => Err(e),
+        (None, None) => Err(anyhow::anyhow!("job {} finalized twice", sub.id)),
+    };
+    if result.is_err() {
+        shared.metrics.job_failed();
+    }
+    if let Some(tx) = sub.reply.lock().unwrap().take() {
+        let _ = tx.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server(cfg: ServerConfig) -> JobServer {
+        JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), cfg).unwrap()
+    }
+
+    fn small_cfg() -> ServerConfig {
+        ServerConfig {
+            workers: 4,
+            queue_capacity: 16,
+            batch_max_tasks: 4,
+            batch_window: 4,
+            cross_job_stealing: true,
+            default_run: Some(RunConfig::square(2, 16)),
+        }
+    }
+
+    #[test]
+    fn single_job_roundtrip() {
+        let srv = server(small_cfg());
+        let a = Matrix::random(48, 24, 1);
+        let b = Matrix::random(24, 40, 2);
+        let want = a.matmul(&b);
+        let t = srv
+            .submit(GemmJob { id: 7, a, b, run: Some(RunConfig::square(2, 16)) })
+            .unwrap();
+        let r = t.wait().unwrap();
+        assert_eq!(r.id, 7);
+        assert!(r.c.allclose(&want, 1e-4));
+        assert!(r.sim.total_secs > 0.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn unpinned_job_uses_default_run() {
+        let srv = server(small_cfg());
+        let a = Matrix::random(40, 20, 3);
+        let b = Matrix::random(20, 40, 4);
+        let want = a.matmul(&b);
+        let r = srv.submit(GemmJob { id: 1, a, b, run: None }).unwrap().wait().unwrap();
+        assert_eq!(r.run, RunConfig::square(2, 16));
+        assert!(r.c.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn invalid_job_rejected_through_ticket() {
+        let srv = server(small_cfg());
+        let job = GemmJob {
+            id: 2,
+            a: Matrix::random(8, 8, 5),
+            b: Matrix::random(9, 8, 6),
+            run: None,
+        };
+        assert!(srv.submit(job).unwrap().wait().is_err());
+        assert_eq!(srv.metrics().jobs_failed(), 1);
+    }
+
+    #[test]
+    fn degenerate_job_rejected_without_killing_dispatcher() {
+        let srv = server(small_cfg());
+        let bad = GemmJob {
+            id: 4,
+            a: Matrix::zeros(0, 0),
+            b: Matrix::zeros(0, 8),
+            run: None,
+        };
+        assert!(srv.submit(bad).unwrap().wait().is_err());
+        // The dispatcher must still be alive to serve the next job.
+        let a = Matrix::random(16, 8, 31);
+        let b = Matrix::random(8, 16, 32);
+        let want = a.matmul(&b);
+        let r = srv
+            .submit(GemmJob { id: 5, a, b, run: Some(RunConfig::square(2, 16)) })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(r.c.allclose(&want, 1e-5));
+    }
+
+    #[test]
+    fn invalid_pinned_config_rejected() {
+        let srv = server(small_cfg());
+        let job = GemmJob {
+            id: 3,
+            a: Matrix::random(8, 8, 7),
+            b: Matrix::random(8, 8, 8),
+            run: Some(RunConfig::square(4, 256)),
+        };
+        assert!(srv.submit(job).unwrap().wait().is_err());
+    }
+
+    #[test]
+    fn batch_submit_is_bit_identical_to_packed_matmul() {
+        let srv = server(small_cfg());
+        let mut jobs = Vec::new();
+        let mut wants = Vec::new();
+        for i in 0..6u64 {
+            let a = Matrix::random(20, 12, 100 + i);
+            let b = Matrix::random(12, 24, 200 + i);
+            wants.push(crate::gemm::packed_matmul(&a, &b, 16, 16));
+            jobs.push(GemmJob { id: i, a, b, run: Some(RunConfig::square(2, 16)) });
+        }
+        let tickets = srv.submit_batch(jobs).unwrap();
+        for (t, want) in tickets.into_iter().zip(&wants) {
+            let r = t.wait().unwrap();
+            assert!(r.batched, "small group member should be batched");
+            // Bit-identical: same panels, same microkernel, same order.
+            assert_eq!(r.c.data, want.data);
+        }
+        assert_eq!(srv.metrics().batched_jobs(), 6);
+    }
+
+    #[test]
+    fn big_jobs_in_group_are_not_batched() {
+        let srv = server(small_cfg());
+        let a = Matrix::random(96, 16, 11);
+        let b = Matrix::random(16, 96, 12);
+        let want = a.matmul(&b);
+        // 6x6 = 36 tasks at si=16 — far above batch_max_tasks.
+        let tickets = srv
+            .submit_batch(vec![GemmJob { id: 0, a, b, run: Some(RunConfig::square(2, 16)) }])
+            .unwrap();
+        let r = tickets.into_iter().next().unwrap().wait().unwrap();
+        assert!(!r.batched);
+        assert!(r.c.allclose(&want, 1e-4));
+        assert_eq!(srv.metrics().batched_jobs(), 0);
+    }
+
+    #[test]
+    fn mixed_sizes_with_cross_job_stealing_off_still_correct() {
+        let mut cfg = small_cfg();
+        cfg.cross_job_stealing = false;
+        let srv = server(cfg);
+        let mut pending = Vec::new();
+        for i in 0..8u64 {
+            let (m, n) = if i % 2 == 0 { (64, 64) } else { (20, 28) };
+            let a = Matrix::random(m, 16, 300 + i);
+            let b = Matrix::random(16, n, 400 + i);
+            let want = a.matmul(&b);
+            let t = srv
+                .submit(GemmJob { id: i, a, b, run: Some(RunConfig::square(2, 16)) })
+                .unwrap();
+            pending.push((t, want));
+        }
+        for (t, want) in pending {
+            assert!(t.wait().unwrap().c.allclose(&want, 1e-4));
+        }
+        assert_eq!(srv.metrics().cross_job_steals(), 0);
+    }
+
+    #[test]
+    fn shutdown_resolves_outstanding_tickets() {
+        let srv = server(small_cfg());
+        let a = Matrix::random(64, 32, 21);
+        let b = Matrix::random(32, 64, 22);
+        let want = a.matmul(&b);
+        let t = srv
+            .submit(GemmJob { id: 9, a, b, run: Some(RunConfig::square(2, 16)) })
+            .unwrap();
+        srv.shutdown();
+        assert!(t.wait().unwrap().c.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn stats_snapshot_is_sane() {
+        let srv = server(small_cfg());
+        for i in 0..5u64 {
+            let a = Matrix::random(32, 16, i);
+            let b = Matrix::random(16, 32, i + 50);
+            srv.submit(GemmJob { id: i, a, b, run: Some(RunConfig::square(2, 16)) })
+                .unwrap()
+                .wait()
+                .unwrap();
+        }
+        let s = srv.stats();
+        assert_eq!(s.jobs, 5);
+        assert!(s.tasks >= 5);
+        assert!(s.throughput_jobs_per_sec > 0.0);
+        assert!(s.latency_p50_secs <= s.latency_p95_secs);
+        assert!(s.latency_p95_secs <= s.latency_p99_secs);
+        assert!((0.0..=1.0).contains(&s.worker_idle_frac));
+        assert!(s.to_string().contains("jobs=5"));
+    }
+
+    #[test]
+    fn admission_try_push_full_and_closed() {
+        let adm = Admission::new(1);
+        let (tx, _rx) = mpsc::channel();
+        let sub = |tx: &mpsc::Sender<anyhow::Result<JobResult>>| {
+            QueueItem::One(Submission {
+                job: GemmJob {
+                    id: 0,
+                    a: Matrix::zeros(1, 1),
+                    b: Matrix::zeros(1, 1),
+                    run: None,
+                },
+                reply: tx.clone(),
+                accepted_at: Instant::now(),
+            })
+        };
+        assert!(adm.try_push(sub(&tx)).is_ok());
+        assert!(matches!(adm.try_push(sub(&tx)), Err(TryPushError::Full(_))));
+        assert_eq!(adm.len(), 1);
+        assert!(adm.try_pop().is_some());
+        assert!(adm.try_push(sub(&tx)).is_ok());
+        adm.close();
+        assert!(matches!(adm.try_push(sub(&tx)), Err(TryPushError::Closed(_))));
+        // Closed but not drained: the dispatcher still sees the item.
+        assert!(adm.pop_blocking().is_some());
+        assert!(adm.pop_blocking().is_none());
+    }
+
+    #[test]
+    fn admission_oversized_group_admitted_when_empty() {
+        let adm = Admission::new(2);
+        let (tx, _rx) = mpsc::channel::<anyhow::Result<JobResult>>();
+        let group = QueueItem::Group(
+            (0..5)
+                .map(|i| Submission {
+                    job: GemmJob {
+                        id: i,
+                        a: Matrix::zeros(1, 1),
+                        b: Matrix::zeros(1, 1),
+                        run: None,
+                    },
+                    reply: tx.clone(),
+                    accepted_at: Instant::now(),
+                })
+                .collect(),
+        );
+        assert!(adm.try_push(group).is_ok());
+        assert_eq!(adm.len(), 5);
+    }
+}

@@ -186,6 +186,22 @@ impl<'a> DisjointBlocks<'a> {
         }
     }
 
+    /// Wrap raw dense row-major storage without a borrow — the
+    /// `Arc`-owned twin of [`DisjointBlocks::new`] for writers whose
+    /// output buffer lives in shared job state (the serving runtime)
+    /// rather than on a caller's stack frame.
+    ///
+    /// # Safety
+    ///
+    /// `ptr` must point to at least `rows * cols` valid, writable `f32`s
+    /// that stay allocated (and are not read or written by anyone else
+    /// outside this writer's `write_block` contract) for as long as the
+    /// returned writer is used. The usual disjointness contract of
+    /// [`DisjointBlocks::write_block`] applies on top.
+    pub unsafe fn from_raw(ptr: *mut f32, rows: usize, cols: usize) -> DisjointBlocks<'static> {
+        DisjointBlocks { ptr, rows, cols, _borrow: std::marker::PhantomData }
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -318,6 +334,22 @@ mod tests {
             unsafe { w.write_block(0, 1, &scratch, 3, 2, 2) };
         }
         assert_eq!(m.data, vec![0.0, 1.0, 2.0, 0.0, 0.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn raw_writer_matches_borrowed_writer() {
+        let mut m = Matrix::zeros(4, 4);
+        {
+            // SAFETY: the Vec outlives the writer; single-threaded use.
+            let w = unsafe {
+                DisjointBlocks::from_raw(m.data.as_mut_ptr(), m.rows, m.cols)
+            };
+            let tile = [5.0f32, 6.0, 7.0, 8.0];
+            unsafe { w.write_block(1, 1, &tile, 2, 2, 2) };
+        }
+        assert_eq!(m.get(1, 1), 5.0);
+        assert_eq!(m.get(2, 2), 8.0);
+        assert_eq!(m.get(0, 0), 0.0);
     }
 
     #[test]

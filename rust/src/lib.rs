@@ -20,8 +20,10 @@
 //! * [`ddr`] — DDR3 bank/row timing model (the Fig. 3 substrate);
 //! * [`mac`] — buffer descriptors, transpose-of-A, burst scheduling;
 //! * [`wqm`] — workload queues + the work-stealing controller: the
-//!   steppable `Wqm` for the simulators and the lock-free `AtomicWqm`
-//!   (one CAS per pop/steal) for the coordinator's workers;
+//!   steppable `Wqm` for the simulators, the lock-free `AtomicWqm`
+//!   (one CAS per pop/steal) for the coordinator's workers, and the
+//!   epoch-tagged `JobRegistry` that widens the stealing scope from
+//!   arrays to live jobs;
 //! * [`mpe`] — PE / linear-array / multi-array cycle model (PSU, FIFOs,
 //!   Independent vs Cooperation mux modes);
 //! * [`accelerator`] — the integrated event-driven simulation;
@@ -32,8 +34,12 @@
 //! * [`runtime`] — PJRT client executing the AOT-compiled JAX/Pallas
 //!   kernels (`artifacts/*.hlo.txt`) for the real numerics;
 //! * [`coordinator`] — the serving layer: GEMM jobs in, panels packed
-//!   once per job, `N_p` workers draining the lock-free WQM and writing
-//!   disjoint C blocks in place, timing via the simulator.
+//!   once per job, workers draining lock-free WQMs and writing disjoint
+//!   C blocks in place, timing via the simulator. Two shapes: the
+//!   one-job-at-a-time `Coordinator`, and the multi-job `JobServer` —
+//!   a persistent pool behind a bounded admission queue with cross-job
+//!   work stealing and small-job batching, the production serving
+//!   runtime.
 
 pub mod accelerator;
 pub mod analytical;
@@ -52,4 +58,5 @@ pub mod util;
 pub mod wqm;
 
 pub use config::{HardwareConfig, RunConfig};
+pub use coordinator::{GemmJob, JobServer, ServerConfig};
 pub use gemm::Matrix;

@@ -32,6 +32,9 @@ struct Record {
     stats: Stats,
     /// Elements per iteration, when the caller declared a throughput.
     elements: Option<u64>,
+    /// Caller-attached named metrics (e.g. a measured idle fraction),
+    /// emitted as extra JSON fields on the record.
+    extras: Vec<(String, f64)>,
 }
 
 impl Bench {
@@ -104,8 +107,19 @@ impl Bench {
             label: label.to_string(),
             stats,
             elements,
+            extras: Vec::new(),
         });
         stats
+    }
+
+    /// Attach a named numeric metric to the most recently recorded
+    /// benchmark (no-op before the first `run`). Keys should not collide
+    /// with the schema's own field names.
+    pub fn annotate(&self, key: &str, value: f64) {
+        if let Some(r) = self.records.borrow_mut().last_mut() {
+            println!("bench {}/{:<32} {key} = {value:.6}", self.name, r.label);
+            r.extras.push((key.to_string(), value));
+        }
     }
 
     /// Dump everything measured so far as a JSON report. Schema:
@@ -138,6 +152,10 @@ impl Bench {
                     elements,
                     rate(elements, r.stats.median)
                 ));
+            }
+            for (key, value) in &r.extras {
+                let value = if value.is_finite() { *value } else { 0.0 };
+                out.push_str(&format!(", \"{}\": {:.6e}", escape_json(key), value));
             }
             out.push('}');
             if i + 1 < records.len() {
@@ -226,6 +244,26 @@ mod tests {
     #[test]
     fn rate_handles_zero_duration() {
         assert_eq!(rate(100, Duration::ZERO), 0.0);
+    }
+
+    #[test]
+    fn annotations_land_on_last_record() {
+        let b = Bench::new("annot").samples(3);
+        b.annotate("ignored_before_first_run", 1.0); // no record yet: no-op
+        b.run("one", || 0u8);
+        b.annotate("idle_frac", 0.25);
+        b.run("two", || 0u8);
+        b.annotate("jobs", 64.0);
+        b.annotate("bad", f64::NAN); // sanitized: JSON has no NaN
+        let path = std::env::temp_dir().join("marr_bench_annotate_test.json");
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(!text.contains("ignored_before_first_run"));
+        assert!(text.contains("\"idle_frac\": 2.500000e-1"));
+        assert!(text.contains("\"jobs\": 6.400000e1"));
+        assert!(text.contains("\"bad\": 0.000000e0"));
+        assert!(!text.contains("NaN"));
     }
 
     #[test]

@@ -18,10 +18,17 @@
 //! * [`atomic::AtomicWqm`] — the lock-free (`&self`) version the
 //!   coordinator's worker threads share: frozen queues with one packed
 //!   `head|tail` CAS word each, no `Mutex` on the pop/steal fast path.
+//!
+//! [`registry::JobRegistry`] extends the stealing scope from arrays to
+//! *jobs*: an epoch-tagged table of live per-job `AtomicWqm`s that the
+//! serving runtime's persistent workers scan, so an idle worker can
+//! steal from the fullest queue of any live job, not just its own.
 
 pub mod atomic;
+pub mod registry;
 
 pub use atomic::AtomicWqm;
+pub use registry::JobRegistry;
 
 use std::collections::VecDeque;
 

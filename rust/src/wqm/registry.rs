@@ -1,0 +1,172 @@
+//! Epoch-tagged job table — the membership layer under cross-job work
+//! stealing.
+//!
+//! The paper's WQM equalizes load *between arrays* of one job; the
+//! serving runtime must also equalize load *between jobs*. The registry
+//! is the shared table the server's persistent workers scan for live
+//! jobs: each entry is an `Arc` to a job (in practice a job's
+//! [`super::AtomicWqm`] plus its execution context) tagged with the
+//! epoch at which it was registered.
+//!
+//! Concurrency design: membership changes (register/unregister) are rare
+//! compared to pops, so they take a plain mutex and bump a global epoch
+//! counter. Workers keep a private snapshot of the table and revalidate
+//! it with a single relaxed-cost atomic load per scan
+//! ([`JobRegistry::epoch`]); only when the epoch moved do they pay the
+//! lock for a fresh [`JobRegistry::snapshot`]. The hot path (popping
+//! tasks from a job already in
+//! the snapshot) never touches the registry at all — it goes straight to
+//! the job's lock-free WQM. A worker's stale snapshot can briefly pin a
+//! finished job's `Arc` (bounded by its next epoch check) and can
+//! briefly miss a new job (bounded the same way); neither affects the
+//! conservation invariant, because tasks live in the per-job WQMs, not
+//! here.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shared table of live jobs, epoch-tagged for cheap staleness checks.
+///
+/// `J` is the per-job state (the server uses its `ActiveJob`); the
+/// registry only needs to refcount it.
+#[derive(Debug)]
+pub struct JobRegistry<J> {
+    /// Bumped on every membership change; never decreases. Registration
+    /// tags are drawn from this counter, so tags are unique per table.
+    epoch: AtomicU64,
+    /// Live jobs in registration (FIFO) order.
+    jobs: Mutex<Vec<(u64, Arc<J>)>>,
+}
+
+impl<J> JobRegistry<J> {
+    pub fn new() -> Self {
+        Self { epoch: AtomicU64::new(0), jobs: Mutex::new(Vec::new()) }
+    }
+
+    /// Current epoch. A worker whose cached snapshot was taken at an
+    /// older epoch must refresh before trusting membership.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Add a job; returns its unique tag. Bumps the epoch.
+    pub fn register(&self, job: Arc<J>) -> u64 {
+        let mut jobs = self.jobs.lock().unwrap();
+        let tag = self.epoch.fetch_add(1, Ordering::AcqRel) + 1;
+        jobs.push((tag, job));
+        tag
+    }
+
+    /// Remove the job with `tag`. Returns whether it was present. Bumps
+    /// the epoch when it was.
+    pub fn unregister(&self, tag: u64) -> bool {
+        let mut jobs = self.jobs.lock().unwrap();
+        let before = jobs.len();
+        jobs.retain(|(t, _)| *t != tag);
+        let removed = jobs.len() != before;
+        if removed {
+            self.epoch.fetch_add(1, Ordering::AcqRel);
+        }
+        removed
+    }
+
+    /// Consistent `(epoch, live jobs)` snapshot, FIFO order. The epoch is
+    /// read under the membership lock, so it matches the returned list
+    /// exactly.
+    pub fn snapshot(&self) -> (u64, Vec<(u64, Arc<J>)>) {
+        let jobs = self.jobs.lock().unwrap();
+        (self.epoch.load(Ordering::Acquire), jobs.clone())
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<J> Default for JobRegistry<J> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_returns_unique_tags() {
+        let reg: JobRegistry<usize> = JobRegistry::new();
+        let a = reg.register(Arc::new(1));
+        let b = reg.register(Arc::new(2));
+        assert_ne!(a, b);
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn unregister_removes_and_reports() {
+        let reg: JobRegistry<usize> = JobRegistry::new();
+        let tag = reg.register(Arc::new(7));
+        assert!(reg.unregister(tag));
+        assert!(!reg.unregister(tag));
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn epoch_moves_on_every_membership_change() {
+        let reg: JobRegistry<usize> = JobRegistry::new();
+        let e0 = reg.epoch();
+        let tag = reg.register(Arc::new(0));
+        let e1 = reg.epoch();
+        assert!(e1 > e0);
+        reg.unregister(tag);
+        assert!(reg.epoch() > e1);
+        // Unregistering a missing tag is not a membership change.
+        let e2 = reg.epoch();
+        reg.unregister(tag);
+        assert_eq!(reg.epoch(), e2);
+    }
+
+    #[test]
+    fn snapshot_is_fifo_and_matches_epoch() {
+        let reg: JobRegistry<&'static str> = JobRegistry::new();
+        reg.register(Arc::new("first"));
+        reg.register(Arc::new("second"));
+        let (epoch, jobs) = reg.snapshot();
+        assert_eq!(epoch, reg.epoch());
+        let order: Vec<&str> = jobs.iter().map(|(_, j)| **j).collect();
+        assert_eq!(order, vec!["first", "second"]);
+    }
+
+    #[test]
+    fn stale_snapshot_detected_by_epoch_check() {
+        let reg: JobRegistry<usize> = JobRegistry::new();
+        let (seen, _) = reg.snapshot();
+        reg.register(Arc::new(1));
+        assert_ne!(reg.epoch(), seen);
+        let (seen, _) = reg.snapshot();
+        assert_eq!(reg.epoch(), seen);
+    }
+
+    #[test]
+    fn threaded_register_unregister_keeps_table_consistent() {
+        let reg = Arc::new(JobRegistry::<u64>::new());
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let reg = &reg;
+                s.spawn(move || {
+                    for i in 0..50 {
+                        let tag = reg.register(Arc::new(t * 1000 + i));
+                        assert!(reg.unregister(tag));
+                    }
+                });
+            }
+        });
+        assert!(reg.is_empty());
+        // 4 threads x 50 iterations x 2 membership changes each.
+        assert_eq!(reg.epoch(), 400);
+    }
+}

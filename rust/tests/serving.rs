@@ -1,0 +1,239 @@
+//! Serving-runtime integration tests: the multi-job `JobServer` under
+//! real thread contention — per-job correctness against the scalar
+//! reference, task conservation across the job table, cross-job
+//! stealing actually firing, batching bit-identity, and backpressure.
+
+use multi_array::blocking::BlockPlan;
+use multi_array::config::{HardwareConfig, RunConfig};
+use multi_array::coordinator::{
+    Coordinator, GemmJob, JobServer, NumericsEngine, ServerConfig, TrySubmitError,
+};
+use multi_array::gemm::Matrix;
+
+fn server(cfg: ServerConfig) -> JobServer {
+    JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), cfg).unwrap()
+}
+
+fn cfg(workers: usize, capacity: usize) -> ServerConfig {
+    ServerConfig {
+        workers,
+        queue_capacity: capacity,
+        batch_max_tasks: 4,
+        batch_window: 4,
+        cross_job_stealing: true,
+        default_run: None,
+    }
+}
+
+/// Expected WQM task count of a job pinned to `run`.
+fn tasks_of(m: usize, k: usize, n: usize, run: RunConfig) -> usize {
+    BlockPlan::new(m, k, n, run.si, run.sj).num_tasks()
+}
+
+#[test]
+fn stress_concurrent_mixed_size_submitters() {
+    // Several client threads submit mixed-size jobs concurrently; every
+    // result matches the scalar reference, and the task count across
+    // the whole job table is conserved exactly.
+    let srv = server(cfg(4, 16));
+    let run = RunConfig::square(2, 16);
+    let mut expected_tasks = 0usize;
+    let threads = 4usize;
+    let per_thread = 8usize;
+    for t in 0..threads {
+        for i in 0..per_thread {
+            let (m, k, n) = shape(t, i);
+            expected_tasks += tasks_of(m, k, n, run);
+        }
+    }
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let srv = &srv;
+            s.spawn(move || {
+                for i in 0..per_thread {
+                    let (m, k, n) = shape(t, i);
+                    let seed = (t * 1000 + i) as u64;
+                    let a = Matrix::random(m, k, seed);
+                    let b = Matrix::random(k, n, seed + 500);
+                    let want = a.matmul(&b);
+                    let ticket = srv
+                        .submit(GemmJob { id: seed, a, b, run: Some(run) })
+                        .unwrap();
+                    let r = ticket.wait().unwrap();
+                    assert_eq!(r.id, seed);
+                    assert!(
+                        r.c.allclose(&want, 1e-4),
+                        "job {seed} ({m}x{k}x{n}) wrong"
+                    );
+                }
+            });
+        }
+    });
+    let m = srv.metrics();
+    assert_eq!(m.jobs(), (threads * per_thread) as u64);
+    assert_eq!(m.jobs_failed(), 0);
+    assert_eq!(m.tasks(), expected_tasks as u64, "task conservation across the job table");
+    // Golden in-process engine: the packed zero-copy path, no gathers.
+    assert_eq!(m.panel_copies(), 0);
+}
+
+fn shape(t: usize, i: usize) -> (usize, usize, usize) {
+    // Mixed sizes: from single-task 16x8x16 up to 64x20x48.
+    (16 * (1 + (t + i) % 4), 8 + 4 * t, 16 * (1 + i % 3))
+}
+
+#[test]
+fn sixty_four_concurrent_mixed_jobs_with_cross_job_stealing() {
+    // The acceptance-scale run: >= 64 concurrent mixed-size jobs through
+    // one pool, elephants and mice together. All correct, tasks
+    // conserved, and the pool demonstrably stole across jobs.
+    let srv = server(cfg(4, 64));
+    let run = RunConfig::square(4, 16);
+    let njobs = 64usize;
+    let mut pending = Vec::with_capacity(njobs);
+    let mut expected_tasks = 0usize;
+    for j in 0..njobs {
+        // Every 8th job is an elephant; the rest are small.
+        let (m, k, n) = if j % 8 == 0 { (160, 48, 160) } else { (16 + 8 * (j % 3), 12, 24) };
+        expected_tasks += tasks_of(m, k, n, run);
+        let seed = j as u64;
+        let a = Matrix::random(m, k, seed);
+        let b = Matrix::random(k, n, seed + 1000);
+        let want = a.matmul(&b);
+        let ticket = srv
+            .submit(GemmJob { id: seed, a, b, run: Some(run) })
+            .unwrap();
+        pending.push((ticket, want));
+    }
+    for (ticket, want) in pending {
+        let r = ticket.wait().unwrap();
+        assert!(r.c.allclose(&want, 1e-4), "job {} wrong", r.id);
+    }
+    let m = srv.metrics();
+    assert_eq!(m.jobs(), njobs as u64);
+    assert_eq!(m.tasks(), expected_tasks as u64);
+    // All 64 jobs are admitted before any ticket is waited on, so many
+    // are live concurrently (8 elephants of 100 tasks each guarantee
+    // long-lived jobs). A switch is counted whenever a worker leaves a
+    // still-live job for another — which happens every time a worker
+    // drains its job's queues while a sibling still holds one of its
+    // tasks in flight, a window this mix opens dozens of times. For the
+    // counter to stay 0, every such window across the whole run would
+    // have to be missed by every worker (each miss needs the OS to park
+    // the worker for an entire task execution) — not a real schedule.
+    assert!(m.cross_job_steals() > 0, "no cross-job steals recorded");
+    let stats = srv.stats();
+    assert!(stats.latency_p95_secs >= stats.latency_p50_secs);
+    assert!((0.0..=1.0).contains(&stats.worker_idle_frac));
+}
+
+#[test]
+fn batched_small_jobs_bit_identical_to_individual_runs() {
+    // The same small GEMMs through (a) a batched super-job on the server
+    // and (b) individual Coordinator::run_job calls must produce
+    // bit-identical C matrices: same packing, same microkernel, same
+    // per-element accumulation order.
+    let run = RunConfig::square(2, 16);
+    let jobs: Vec<(Matrix, Matrix)> = (0..8u64)
+        .map(|i| {
+            (
+                Matrix::random(24, 16, 7000 + i),
+                Matrix::random(16, 32, 8000 + i),
+            )
+        })
+        .collect();
+
+    let srv = server(ServerConfig { batch_window: 8, ..cfg(4, 16) });
+    let tickets = srv
+        .submit_batch(
+            jobs.iter()
+                .enumerate()
+                .map(|(i, (a, b))| GemmJob {
+                    id: i as u64,
+                    a: a.clone(),
+                    b: b.clone(),
+                    run: Some(run),
+                })
+                .collect(),
+        )
+        .unwrap();
+    let served: Vec<_> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+    assert!(served.iter().all(|r| r.batched), "small group members must batch");
+    assert!(srv.metrics().batched_jobs() >= 8);
+
+    let co = Coordinator::new(HardwareConfig::paper(), NumericsEngine::golden());
+    for (r, (a, b)) in served.iter().zip(&jobs) {
+        let individual = co
+            .run_job(GemmJob {
+                id: r.id,
+                a: a.clone(),
+                b: b.clone(),
+                run: Some(run),
+            })
+            .unwrap();
+        assert!(!individual.batched);
+        assert_eq!(
+            r.c.data, individual.c.data,
+            "batched job {} not bit-identical to its individual run",
+            r.id
+        );
+    }
+}
+
+#[test]
+fn try_submit_sheds_load_without_losing_jobs() {
+    // try_submit either admits a job (which must then complete
+    // correctly) or hands it back intact — never silently drops it.
+    let srv = server(cfg(2, 2));
+    let run = RunConfig::square(2, 16);
+    let mut admitted = Vec::new();
+    let mut rejected = 0usize;
+    for j in 0..100u64 {
+        let a = Matrix::random(32, 16, j);
+        let b = Matrix::random(16, 32, j + 200);
+        let want = a.matmul(&b);
+        match srv.try_submit(GemmJob { id: j, a, b, run: Some(run) }) {
+            Ok(t) => admitted.push((t, want)),
+            Err(TrySubmitError::Full(job)) => {
+                assert_eq!(job.id, j, "rejected job must come back intact");
+                assert_eq!((job.a.rows, job.b.cols), (32, 32));
+                rejected += 1;
+            }
+            Err(TrySubmitError::Closed(_)) => panic!("server is not closed"),
+        }
+    }
+    assert!(!admitted.is_empty());
+    for (t, want) in admitted {
+        assert!(t.wait().unwrap().c.allclose(&want, 1e-4));
+    }
+    // Conservation: admitted + rejected covers every submission.
+    assert_eq!(srv.metrics().jobs() as usize + rejected, 100);
+}
+
+#[test]
+fn steals_balance_and_zero_copy_hold_under_serving() {
+    // Aggregated WQM statistics stay coherent when many jobs flow
+    // through the shared pool, and the golden path stays zero-copy.
+    let srv = server(cfg(4, 32));
+    let run = RunConfig::square(4, 16);
+    let mut pending = Vec::new();
+    for j in 0..24u64 {
+        let a = Matrix::random(64, 24, j);
+        let b = Matrix::random(24, 64, j + 77);
+        let want = a.matmul(&b);
+        pending.push((
+            srv.submit(GemmJob { id: j, a, b, run: Some(run) }).unwrap(),
+            want,
+        ));
+    }
+    for (t, want) in pending {
+        assert!(t.wait().unwrap().c.allclose(&want, 1e-4));
+    }
+    let m = srv.metrics();
+    assert_eq!(m.panel_copies(), 0);
+    // Intra-job steals are bounded by total tasks; cross-job steals are
+    // bounded by total pops (sanity, not exact accounting).
+    assert!(m.steals() <= m.tasks());
+    assert!(m.cross_job_steals() <= m.tasks());
+    srv.shutdown();
+}
