@@ -1,31 +1,35 @@
 #!/usr/bin/env python3
-"""Bench-regression gate: fail CI when hot-path throughput drops.
+"""Bench-regression gate: fail CI when gated throughputs drop.
 
 Usage:
-    check_bench_regression.py BASELINE.json FRESH.json [SERVING.json]
+    check_bench_regression.py [--gate LABEL ...] [--max-drop-frac F]
+                              BASELINE.json FRESH.json [SERVING.json]
 
-Compares `elements_per_sec` of the gated label in FRESH against the
+Compares `elements_per_sec` of every gated label in FRESH against the
 checked-in BASELINE and fails (exit 1) on a drop of more than
-MAX_DROP_FRAC. A baseline without the label (e.g. the placeholder
-shipped before the first toolchain-enabled run) passes with a notice, so
-the gate arms itself automatically once real numbers are committed.
+--max-drop-frac (default 0.20). The gate list is configurable:
+repeat --gate to add labels; with no --gate flags it defaults to
+DEFAULT_GATES. A baseline without a gated label (e.g. the placeholder
+shipped before the first toolchain-enabled run) passes with a notice,
+so each gate arms itself automatically once real numbers are committed.
+A FRESH run missing a gated label always fails — the bench stopped
+emitting a gated metric.
 
 When SERVING.json is given, also sanity-checks that the cross-job
 stealing mode does not show a *higher* worker idle fraction than the
 per-job-pool baseline; CI runners are noisy, so that check only warns.
 """
 
+import argparse
 import json
 import sys
 
-GATED_LABEL = "functional_block_128x256x128"
-MAX_DROP_FRAC = 0.20
+DEFAULT_GATES = ["functional_block_128x256x128"]
 
 
 def load_report(path):
     with open(path) as f:
-        data = json.load(f)
-    return data
+        return json.load(f)
 
 
 def load_results(path):
@@ -39,64 +43,91 @@ def throughput(results, label):
     return r.get("elements_per_sec")
 
 
-def main(argv):
-    if len(argv) < 3:
-        print(__doc__)
-        return 2
-    baseline = load_results(argv[1])
-    fresh = load_results(argv[2])
-
-    fresh_tput = throughput(fresh, GATED_LABEL)
+def check_label(label, baseline, fresh, base_path, fresh_path, max_drop):
+    """Gate one label; returns False on a hard failure."""
+    fresh_tput = throughput(fresh, label)
     if fresh_tput is None:
-        print(f"FAIL: fresh run {argv[2]} did not emit '{GATED_LABEL}'")
-        return 1
-
-    base_tput = throughput(baseline, GATED_LABEL)
+        print(f"FAIL: fresh run {fresh_path} did not emit '{label}'")
+        return False
+    base_tput = throughput(baseline, label)
     if base_tput is None:
         print(
-            f"NOTICE: baseline {argv[1]} has no '{GATED_LABEL}' entry yet "
+            f"NOTICE: baseline {base_path} has no '{label}' entry yet "
             f"(fresh: {fresh_tput:.3e} elem/s). Gate passes; commit a "
             "baseline recorded with MARR_BENCH_QUICK=1 on a CI-class "
             "runner to arm it."
         )
-        rc = 0
-    else:
-        base_quick = load_report(argv[1]).get("quick")
-        fresh_quick = load_report(argv[2]).get("quick")
-        if base_quick != fresh_quick:
-            print(
-                f"WARNING: baseline quick={base_quick} vs fresh "
-                f"quick={fresh_quick} — different sampling modes; the "
-                "comparison is biased. Re-record the baseline in the "
-                "gate's mode (MARR_BENCH_QUICK=1)."
-            )
-        drop = (base_tput - fresh_tput) / base_tput
-        print(
-            f"{GATED_LABEL}: baseline {base_tput:.3e} elem/s, "
-            f"fresh {fresh_tput:.3e} elem/s, drop {drop * 100:+.1f}%"
-        )
-        if drop > MAX_DROP_FRAC:
-            print(f"FAIL: throughput dropped more than {MAX_DROP_FRAC * 100:.0f}%")
-            return 1
-        rc = 0
+        return True
+    drop = (base_tput - fresh_tput) / base_tput
+    print(
+        f"{label}: baseline {base_tput:.3e} elem/s, "
+        f"fresh {fresh_tput:.3e} elem/s, drop {drop * 100:+.1f}%"
+    )
+    if drop > max_drop:
+        print(f"FAIL: '{label}' throughput dropped more than {max_drop * 100:.0f}%")
+        return False
+    return True
 
-    if len(argv) > 3:
-        serving = load_results(argv[3])
-        pools = serving.get("serve64_per_job_pools", {}).get("worker_idle_frac")
-        steal = serving.get("serve64_cross_steal", {}).get("worker_idle_frac")
-        if pools is not None and steal is not None:
+
+def check_serving(path):
+    serving = load_results(path)
+    pools = serving.get("serve64_per_job_pools", {}).get("worker_idle_frac")
+    steal = serving.get("serve64_cross_steal", {}).get("worker_idle_frac")
+    if pools is not None and steal is not None:
+        print(
+            f"serving idle fraction: per-job pools {pools:.3f}, "
+            f"cross-job stealing {steal:.3f}"
+        )
+        if steal > pools:
             print(
-                f"serving idle fraction: per-job pools {pools:.3f}, "
-                f"cross-job stealing {steal:.3f}"
+                "WARNING: cross-job stealing shows a higher idle fraction "
+                "than the per-job-pool baseline on this runner"
             )
-            if steal > pools:
-                print(
-                    "WARNING: cross-job stealing shows a higher idle fraction "
-                    "than the per-job-pool baseline on this runner"
-                )
-        else:
-            print("NOTICE: serving idle-fraction annotations missing; skipped")
-    return rc
+    else:
+        print("NOTICE: serving idle-fraction annotations missing; skipped")
+
+
+def main(argv):
+    parser = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    parser.add_argument(
+        "--gate",
+        action="append",
+        metavar="LABEL",
+        help=f"label to gate (repeatable; default: {DEFAULT_GATES})",
+    )
+    parser.add_argument("--max-drop-frac", type=float, default=0.20)
+    parser.add_argument("baseline")
+    parser.add_argument("fresh")
+    parser.add_argument("serving", nargs="?")
+    args = parser.parse_args(argv[1:])
+
+    gates = args.gate if args.gate else DEFAULT_GATES
+    baseline = load_results(args.baseline)
+    fresh = load_results(args.fresh)
+
+    # Only meaningful once a gated label is armed — an unarmed placeholder
+    # baseline makes no comparison, so a mode mismatch is not noise-worthy.
+    armed = any(throughput(baseline, label) is not None for label in gates)
+    sampling = (load_report(args.baseline).get("quick"), load_report(args.fresh).get("quick"))
+    if armed and None not in sampling and sampling[0] != sampling[1]:
+        print(
+            f"WARNING: baseline quick={sampling[0]} vs fresh "
+            f"quick={sampling[1]} — different sampling modes; the "
+            "comparison is biased. Re-record the baseline in the "
+            "gate's mode (MARR_BENCH_QUICK=1)."
+        )
+
+    ok = True
+    for label in gates:
+        ok = check_label(
+            label, baseline, fresh, args.baseline, args.fresh, args.max_drop_frac
+        ) and ok
+
+    if args.serving:
+        check_serving(args.serving)
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,103 @@
+//! Strassen vs direct execution through the serving runtime.
+//!
+//! Four modes over the same 256x256x256 problem on one persistent
+//! 4-worker server:
+//!
+//! * `direct_server_256`    — one plain job (the baseline);
+//! * `strassen_depth1_256`  — one forced recursion level: 7 leaf GEMMs
+//!   submitted as a job group, combine on the host;
+//! * `strassen_depth2_256`  — two forced levels (49 leaves);
+//! * `strassen_model_256`   — the model-chosen cutoff (depth 0 at this
+//!   size: 256³ sits far below the modeled crossover, so this measures
+//!   the predictor declining to recurse).
+//!
+//! Annotations carry the acceptance-relevant facts into
+//! `BENCH_strassen.json`: the model-chosen depth for the measured
+//! problem and for a serving-scale 4096³/8192³ projection, the executed
+//! depth, leaf-GEMM count, and the measured per-level fan-out (7
+//! sub-multiplies per node vs 8 for a direct quadrant split).
+
+use multi_array::analytical::strassen_crossover;
+use multi_array::config::{HardwareConfig, RunConfig};
+use multi_array::coordinator::{GemmJob, JobServer, NumericsEngine, ServerConfig};
+use multi_array::gemm::Matrix;
+use multi_array::strassen::{self, Cutoff, StrassenConfig, DIRECT_SPLIT_FANOUT};
+use multi_array::util::Bench;
+
+const DIM: usize = 256;
+
+fn main() {
+    let bench = Bench::new("strassen_vs_direct");
+    let hw = HardwareConfig::paper();
+    let run = RunConfig::square(4, 64);
+    let srv = JobServer::new(
+        hw.clone(),
+        NumericsEngine::golden(),
+        ServerConfig {
+            workers: 4,
+            queue_capacity: 64,
+            batch_max_tasks: 0,
+            batch_window: 1,
+            cross_job_stealing: true,
+            default_run: Some(run),
+        },
+    )
+    .expect("server construction");
+
+    let a = Matrix::random(DIM, DIM, 1);
+    let b = Matrix::random(DIM, DIM, 2);
+    let flops = 2 * (DIM as u64).pow(3);
+
+    bench.run_throughput("direct_server_256", flops, || {
+        let job = GemmJob { id: 0, a: a.clone(), b: b.clone(), run: Some(run) };
+        srv.submit(job).expect("submit").wait().expect("direct job")
+    });
+
+    // Evaluate the model once, outside any timed region, so the
+    // direct-vs-Strassen comparison is not skewed by the sweep (forced
+    // Cutoff::Depth runs skip it entirely; only strassen_model_256 pays
+    // it in-loop, which is what that mode measures).
+    let plan_256 = strassen_crossover(&hw, DIM, DIM, DIM, srv.surface()).expect("crossover");
+
+    for (label, cutoff) in [
+        ("strassen_depth1_256", Cutoff::Depth(1)),
+        ("strassen_depth2_256", Cutoff::Depth(2)),
+        ("strassen_model_256", Cutoff::Model),
+    ] {
+        let cfg = StrassenConfig { cutoff, run: Some(run) };
+        let mut last = None;
+        bench.run_throughput(label, flops, || {
+            last = Some(strassen::multiply(&srv, &a, &b, &cfg).expect("strassen multiply"));
+        });
+        let r = last.expect("at least one sample ran");
+        bench.annotate("model_chosen_depth", plan_256.depth as f64);
+        bench.annotate("executed_depth", r.depth as f64);
+        bench.annotate("leaf_gemms", r.leaf_gemms as f64);
+        // Measured at every node: 7 sub-multiplies per recursion level,
+        // vs the 8 a direct quadrant split would spawn.
+        bench.annotate("sub_multiplies_per_level", if r.depth > 0 { r.fanout(0) } else { 1.0 });
+        bench.annotate("direct_sub_multiplies_per_level", DIRECT_SPLIT_FANOUT as f64);
+        bench.annotate("arena_fresh_bytes", r.arena.fresh_bytes as f64);
+        bench.annotate("arena_reuses", r.arena.reuses as f64);
+    }
+
+    // Where the model arms at serving scale (no execution — pure Eqs.
+    // 3–9 + combine-traffic prediction on the calibrated surface).
+    for dim in [4096usize, 8192] {
+        let plan = strassen_crossover(&hw, dim, dim, dim, srv.surface()).expect("crossover");
+        println!(
+            "bench strassen_vs_direct/crossover_{dim}^3          model depth {} \
+             (direct {:.3} s, strassen {:.3} s)",
+            plan.depth, plan.t_direct, plan.t_chosen
+        );
+    }
+    let plan = strassen_crossover(&hw, 8192, 8192, 8192, srv.surface()).expect("crossover");
+    bench.annotate("model_depth_8192cubed", plan.depth as f64);
+
+    srv.shutdown();
+    if let Err(e) = bench.write_json("BENCH_strassen.json") {
+        eprintln!("could not write BENCH_strassen.json: {e}");
+    } else {
+        println!("wrote BENCH_strassen.json");
+    }
+}

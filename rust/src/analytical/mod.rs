@@ -7,10 +7,18 @@
 //! time (Eq. 6) and the `T_total` bounds of Eq. 7. Eq. 9 prunes the
 //! design space: chaining trades array count for array length, so `S_i`
 //! caps the feasible `N_p`.
+//!
+//! [`strassen`] layers an algorithmic question on top: given those
+//! per-problem time predictions, when does one level of Strassen
+//! recursion (7 half-size products plus O(n²) combine traffic) beat the
+//! direct multi-array run? [`strassen_crossover`] answers per level and
+//! hands the planner its recursion cutoff.
 
 pub mod bandwidth;
+pub mod strassen;
 
 pub use bandwidth::BandwidthSurface;
+pub use strassen::{strassen_crossover, CrossoverPlan};
 
 
 use crate::blocking::BlockPlan;

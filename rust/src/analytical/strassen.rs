@@ -1,0 +1,255 @@
+//! Strassen recursion-cutoff predictor, built on the Eqs. 3–9 model.
+//!
+//! Strassen trades the 8 sub-multiplies of a quadrant split for 7 plus
+//! O(n²) element-wise combine traffic. Whether that trade wins on the
+//! multi-array accelerator is exactly the kind of question the paper's
+//! analytical model answers: the direct time of a `(M, K, N)` problem is
+//! the best `⟨N_p, S_i⟩` design point's overlap estimate (Eqs. 3–7 over
+//! the Eq. 9-feasible space), and one recursion level replaces it with
+//! `7 · T(M/2, K/2, N/2) + T_combine`, where the combine term streams
+//! the add/sub traffic at the Fig. 3 bandwidth of a single fully-chained
+//! master (`BW(1, S_max)` — sequential bursts, the surface's sweet
+//! spot).
+//!
+//! [`strassen_crossover`] evaluates that recurrence level by level and
+//! stops at the first level where recursing no longer pays (or where a
+//! half falls below one `S_i = 16` granule). The result is a
+//! [`CrossoverPlan`]: the model-chosen depth plus the full per-level
+//! decision trace, which [`crate::dse::explore_strassen`] surfaces as a
+//! first-class DSE output and `strassen::multiply` uses as its default
+//! cutoff policy.
+//!
+//! Combine-traffic accounting per level (quadrants `m2 x k2`, `k2 x n2`,
+//! `m2 x n2`, FP32): operand formation does 5 add/subs and 2 copies on
+//! each operand side (7 products need `A11+A22`, `A21+A22`, `A11`,
+//! `A22`, `A11+A12`, `A21-A11`, `A12-A22` and the B-side mirror), and
+//! recombination does 8 add/subs on C quadrants. An add/sub streams
+//! 12 bytes per element (two reads + one write), a copy 8.
+
+use crate::config::{HardwareConfig, RunConfig};
+
+use super::bandwidth::{BandwidthSurface, SI_GRID};
+use super::{feasible_nps, predict};
+
+/// Recursion is only considered while both halves keep at least one
+/// full `S_i = 16` block granule per dimension.
+pub const MIN_HALF: usize = 16;
+
+/// One level of the crossover recurrence: the problem size seen at that
+/// level and the model's two options for it.
+#[derive(Debug, Clone, Copy)]
+pub struct LevelDecision {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Best direct multi-array time (Eq. 3–7 optimum), seconds.
+    pub t_direct: f64,
+    /// `7 · T(child) + combine`, seconds; infinite when recursion is
+    /// infeasible (a half below [`MIN_HALF`]).
+    pub t_strassen: f64,
+    /// The combine term alone, seconds (0 when infeasible).
+    pub combine_secs: f64,
+    /// Did the model choose to recurse at this level?
+    pub recurse: bool,
+}
+
+/// The model's verdict for a problem: chosen depth plus the per-level
+/// decision trace (level 0 is the full problem; the last level is the
+/// one executed directly).
+#[derive(Debug, Clone)]
+pub struct CrossoverPlan {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Recursion levels the model recommends (0 = run direct).
+    pub depth: usize,
+    /// Decision at each level, outermost first; `levels.len() == depth + 1`.
+    pub levels: Vec<LevelDecision>,
+    /// Direct time of the full problem, seconds.
+    pub t_direct: f64,
+    /// Total time of the chosen plan (equals `t_direct` when depth = 0).
+    pub t_chosen: f64,
+}
+
+/// Seconds to form the 7 operand combinations and recombine the 7
+/// sub-products, for quadrants `m2 x k2` (A side), `k2 x n2` (B side)
+/// and `m2 x n2` (C side), streaming at `bw` bytes/s.
+pub fn combine_secs(m2: usize, k2: usize, n2: usize, bw: f64) -> f64 {
+    let a_bytes = (m2 * k2) as f64 * (5.0 * 12.0 + 2.0 * 8.0);
+    let b_bytes = (k2 * n2) as f64 * (5.0 * 12.0 + 2.0 * 8.0);
+    let c_bytes = (m2 * n2) as f64 * (8.0 * 12.0);
+    (a_bytes + b_bytes + c_bytes) / bw
+}
+
+/// Best direct time for `(m, k, n)`: minimum overlap estimate over the
+/// Eq. 9-feasible `(N_p, S_i)` space — the same
+/// [`crate::dse::candidate_sis`] sweep [`crate::dse::explore`] ranks,
+/// so the two agree by construction (`dse` has a test pinning it).
+pub fn best_direct_secs(
+    hw: &HardwareConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+) -> anyhow::Result<f64> {
+    let mut best: Option<f64> = None;
+    for si in crate::dse::candidate_sis(hw, m) {
+        for np in feasible_nps(hw, si) {
+            let p = predict(hw, &RunConfig::square(np, si), m, k, n, surface)?;
+            let t = p.t_overlap();
+            if best.map(|b| t < b).unwrap_or(true) {
+                best = Some(t);
+            }
+        }
+    }
+    best.ok_or_else(|| anyhow::anyhow!("no feasible direct design point for {m}x{k}x{n}"))
+}
+
+/// Evaluate the Strassen recurrence for `(m, k, n)` and return the
+/// model-chosen recursion depth with its full decision trace. Child
+/// sizes are `ceil(dim / 2)` — the even-padded halves the planner
+/// actually executes.
+pub fn strassen_crossover(
+    hw: &HardwareConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+) -> anyhow::Result<CrossoverPlan> {
+    // Combine traffic streams sequentially through one master; use the
+    // surface's best single-master point (largest calibrated burst).
+    let combine_bw = surface.bw(1, SI_GRID[SI_GRID.len() - 1]);
+    let (levels, t_chosen) = eval_level(hw, m, k, n, surface, combine_bw)?;
+    let depth = levels.len() - 1;
+    Ok(CrossoverPlan { m, k, n, depth, t_direct: levels[0].t_direct, levels, t_chosen })
+}
+
+/// Recursive core: returns the decision chain from this level down
+/// (ending at the first non-recursing level) and the chosen total time.
+fn eval_level(
+    hw: &HardwareConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+    combine_bw: f64,
+) -> anyhow::Result<(Vec<LevelDecision>, f64)> {
+    let t_direct = best_direct_secs(hw, m, k, n, surface)?;
+    let (m2, k2, n2) = (m.div_ceil(2), k.div_ceil(2), n.div_ceil(2));
+    if m2 < MIN_HALF || k2 < MIN_HALF || n2 < MIN_HALF {
+        let leaf = LevelDecision {
+            m,
+            k,
+            n,
+            t_direct,
+            t_strassen: f64::INFINITY,
+            combine_secs: 0.0,
+            recurse: false,
+        };
+        return Ok((vec![leaf], t_direct));
+    }
+    let (child_levels, t_child) = eval_level(hw, m2, k2, n2, surface, combine_bw)?;
+    let combine = combine_secs(m2, k2, n2, combine_bw);
+    let t_strassen = 7.0 * t_child + combine;
+    let recurse = t_strassen < t_direct;
+    let here = LevelDecision { m, k, n, t_direct, t_strassen, combine_secs: combine, recurse };
+    if recurse {
+        let mut levels = vec![here];
+        levels.extend(child_levels);
+        Ok((levels, t_strassen))
+    } else {
+        Ok((vec![here], t_direct))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ddr::DdrConfig;
+
+    fn setup() -> (HardwareConfig, BandwidthSurface) {
+        let hw = HardwareConfig::paper();
+        let s = BandwidthSurface::calibrate(&DdrConfig::vc709());
+        (hw, s)
+    }
+
+    #[test]
+    fn small_problems_run_direct() {
+        let (hw, s) = setup();
+        let plan = strassen_crossover(&hw, 128, 128, 128, &s).unwrap();
+        assert_eq!(plan.depth, 0);
+        assert_eq!(plan.levels.len(), 1);
+        assert!(!plan.levels[0].recurse);
+        assert_eq!(plan.t_chosen, plan.t_direct);
+    }
+
+    #[test]
+    fn huge_problems_recurse() {
+        // At serving scale one level of Strassen must beat 8 direct
+        // sub-multiplies: the saved eighth of compute dwarfs the O(n²)
+        // combine traffic.
+        let (hw, s) = setup();
+        let plan = strassen_crossover(&hw, 8192, 8192, 8192, &s).unwrap();
+        assert!(plan.depth >= 1, "depth {} at 8192^3", plan.depth);
+        assert!(plan.t_chosen < plan.t_direct);
+        assert!(plan.levels[0].recurse);
+    }
+
+    #[test]
+    fn depth_is_monotone_in_problem_size() {
+        let (hw, s) = setup();
+        let mut last = 0;
+        for dim in [256usize, 1024, 4096, 16384] {
+            let plan = strassen_crossover(&hw, dim, dim, dim, &s).unwrap();
+            assert!(plan.depth >= last, "depth shrank from {last} to {} at {dim}^3", plan.depth);
+            last = plan.depth;
+        }
+    }
+
+    #[test]
+    fn levels_chain_halves_and_terminates() {
+        let (hw, s) = setup();
+        let plan = strassen_crossover(&hw, 10_000, 9_000, 11_000, &s).unwrap();
+        assert_eq!(plan.levels.len(), plan.depth + 1);
+        for w in plan.levels.windows(2) {
+            assert!(w[0].recurse);
+            assert_eq!(w[1].m, w[0].m.div_ceil(2));
+            assert_eq!(w[1].k, w[0].k.div_ceil(2));
+            assert_eq!(w[1].n, w[0].n.div_ceil(2));
+        }
+        assert!(!plan.levels.last().unwrap().recurse);
+    }
+
+    #[test]
+    fn chosen_time_matches_recurrence() {
+        let (hw, s) = setup();
+        let plan = strassen_crossover(&hw, 8192, 8192, 8192, &s).unwrap();
+        // Reconstruct the total from the trace: fold leaf-up.
+        let mut t = plan.levels.last().unwrap().t_direct;
+        for lvl in plan.levels.iter().rev().skip(1) {
+            t = 7.0 * t + lvl.combine_secs;
+        }
+        assert!((t - plan.t_chosen).abs() <= 1e-12 * t.max(1.0));
+    }
+
+    #[test]
+    fn combine_grows_linearly_with_area() {
+        let t1 = combine_secs(100, 100, 100, 1e9);
+        let t4 = combine_secs(200, 200, 200, 1e9);
+        assert!((t4 / t1 - 4.0).abs() < 1e-9);
+        // 12 bytes per add/sub element, 8 per copied element.
+        let bytes = 100.0 * 100.0 * (76.0 + 76.0 + 96.0);
+        assert!((t1 - bytes / 1e9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn min_half_floor_respected() {
+        let (hw, s) = setup();
+        // Halves of 31 fall to 16 >= MIN_HALF; halves of 30 fall to 15.
+        let p31 = strassen_crossover(&hw, 31, 31, 31, &s).unwrap();
+        assert!(p31.levels[0].t_strassen.is_finite() || p31.depth == 0);
+        let p30 = strassen_crossover(&hw, 30, 30, 30, &s).unwrap();
+        assert_eq!(p30.depth, 0);
+        assert!(p30.levels[0].t_strassen.is_infinite());
+    }
+}

@@ -46,7 +46,7 @@ pub mod server;
 
 pub use engine::NumericsEngine;
 pub use metrics::Metrics;
-pub use server::{JobServer, JobTicket, ServerConfig, ServerStats, TrySubmitError};
+pub use server::{JobGroup, JobServer, JobTicket, ServerConfig, ServerStats, TrySubmitError};
 
 use std::sync::{mpsc, Arc};
 use std::time::Instant;

@@ -118,6 +118,53 @@ impl JobTicket {
     }
 }
 
+/// A set of tickets submitted as one unit ([`JobServer::submit_group`])
+/// that resolves jointly — the completion-join primitive the Strassen
+/// planner uses for its 7-way sub-product fan-out per recursion level.
+#[derive(Debug)]
+pub struct JobGroup {
+    tickets: Vec<JobTicket>,
+}
+
+impl JobGroup {
+    pub fn len(&self) -> usize {
+        self.tickets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tickets.is_empty()
+    }
+
+    /// Block until every job in the group completes, returning results
+    /// in submission order. All tickets are drained even when one fails
+    /// (no in-flight work is abandoned mid-group); the first failure is
+    /// then returned, tagged with its job id.
+    pub fn wait_all(self) -> anyhow::Result<Vec<JobResult>> {
+        let mut results = Vec::with_capacity(self.tickets.len());
+        let mut first_err: Option<anyhow::Error> = None;
+        for t in self.tickets {
+            let id = t.id;
+            match t.wait() {
+                Ok(r) => results.push(r),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e.context(format!("job {id} in group failed")));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(results),
+        }
+    }
+
+    /// Take the individual tickets back (per-job polling).
+    pub fn into_tickets(self) -> Vec<JobTicket> {
+        self.tickets
+    }
+}
+
 /// Why [`JobServer::try_submit`] rejected a job; carries the job back so
 /// the caller can retry, shed, or route elsewhere.
 #[derive(Debug)]
@@ -548,12 +595,26 @@ impl JobServer {
         }
     }
 
+    /// Submit jobs as one admission unit and get a joint handle back:
+    /// [`JobGroup::wait_all`] resolves the whole group in submission
+    /// order. Same admission semantics as [`JobServer::submit_batch`].
+    pub fn submit_group(&self, jobs: Vec<GemmJob>) -> anyhow::Result<JobGroup> {
+        Ok(JobGroup { tickets: self.submit_batch(jobs)? })
+    }
+
     pub fn metrics(&self) -> Arc<Metrics> {
         self.shared.metrics.clone()
     }
 
     pub fn hw(&self) -> &HardwareConfig {
         &self.shared.hw
+    }
+
+    /// The calibrated bandwidth surface of the server's accelerator —
+    /// what planners (DSE, Strassen crossover) evaluate the analytical
+    /// model against.
+    pub fn surface(&self) -> &crate::analytical::BandwidthSurface {
+        self.shared.accelerator.surface()
     }
 
     /// Jobs currently waiting in the admission queue.
@@ -1134,6 +1195,44 @@ mod tests {
             assert_eq!(r.c.data, want.data);
         }
         assert_eq!(srv.metrics().batched_jobs(), 6);
+    }
+
+    #[test]
+    fn submit_group_joins_in_submission_order() {
+        let srv = server(small_cfg());
+        let mut jobs = Vec::new();
+        let mut wants = Vec::new();
+        for i in 0..7u64 {
+            let a = Matrix::random(24, 16, 700 + i);
+            let b = Matrix::random(16, 20, 800 + i);
+            wants.push(a.matmul(&b));
+            jobs.push(GemmJob { id: i, a, b, run: Some(RunConfig::square(2, 16)) });
+        }
+        let group = srv.submit_group(jobs).unwrap();
+        assert_eq!(group.len(), 7);
+        let results = group.wait_all().unwrap();
+        assert_eq!(results.len(), 7);
+        for (i, (r, want)) in results.iter().zip(&wants).enumerate() {
+            assert_eq!(r.id, i as u64, "results must come back in submission order");
+            assert!(r.c.allclose(want, 1e-4));
+        }
+    }
+
+    #[test]
+    fn submit_group_surfaces_member_failure_after_draining() {
+        let srv = server(small_cfg());
+        let good_a = Matrix::random(16, 8, 41);
+        let good_b = Matrix::random(8, 16, 42);
+        let jobs = vec![
+            GemmJob { id: 0, a: good_a, b: good_b, run: Some(RunConfig::square(2, 16)) },
+            // Contraction mismatch: rejected at planning.
+            GemmJob { id: 1, a: Matrix::random(8, 8, 43), b: Matrix::random(9, 8, 44), run: None },
+        ];
+        let err = srv.submit_group(jobs).unwrap().wait_all().unwrap_err();
+        assert!(format!("{err:#}").contains("job 1"), "got: {err:#}");
+        // The healthy member still ran to completion (metrics prove it).
+        assert_eq!(srv.metrics().jobs(), 1);
+        assert_eq!(srv.metrics().jobs_failed(), 1);
     }
 
     #[test]

@@ -74,6 +74,32 @@ pub fn explore(
     Ok(Exploration { m, k, n, best: points[0].clone(), points })
 }
 
+/// Direct exploration plus the Strassen recursion verdict — the cutoff
+/// is a first-class DSE output alongside the optimal `⟨N_p, S_i⟩`.
+#[derive(Debug, Clone)]
+pub struct StrassenExploration {
+    /// The classic per-problem exploration (best direct design point).
+    pub direct: Exploration,
+    /// The recursion-cutoff trace for the same problem.
+    pub crossover: crate::analytical::CrossoverPlan,
+}
+
+/// Explore `(m, k, n)` both ways: the best direct `⟨N_p, S_i⟩` and the
+/// model-chosen Strassen depth on top of it
+/// ([`crate::analytical::strassen_crossover`]).
+pub fn explore_strassen(
+    hw: &HardwareConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+) -> anyhow::Result<StrassenExploration> {
+    Ok(StrassenExploration {
+        direct: explore(hw, m, k, n, surface)?,
+        crossover: analytical::strassen_crossover(hw, m, k, n, surface)?,
+    })
+}
+
 /// The fixed-extension baselines Table II compares against: all arrays
 /// independent (`N_p = P_m`) and one fully-chained array (`N_p = 1`),
 /// each at its best feasible S_i.
@@ -211,6 +237,30 @@ mod tests {
                 e.best.run
             );
         }
+    }
+
+    #[test]
+    fn strassen_exploration_agrees_with_direct_sweep() {
+        // analytical::strassen::best_direct_secs mirrors explore()'s
+        // candidate sweep; the crossover's level-0 direct time must be
+        // exactly the best explored overlap estimate.
+        let (hw, s) = setup();
+        for (m, k, n) in [(128, 1200, 729), (128, 9216, 4096), (50, 30, 50), (1000, 1000, 1000)] {
+            let e = explore_strassen(&hw, m, k, n, &s).unwrap();
+            let direct = e.direct.best.prediction.t_overlap();
+            let model = e.crossover.t_direct;
+            assert!(
+                (direct - model).abs() <= 1e-12 * direct.max(1.0),
+                "{m}x{k}x{n}: explore {direct} vs crossover {model}"
+            );
+        }
+    }
+
+    #[test]
+    fn strassen_exploration_recurses_only_at_scale() {
+        let (hw, s) = setup();
+        assert_eq!(explore_strassen(&hw, 128, 128, 128, &s).unwrap().crossover.depth, 0);
+        assert!(explore_strassen(&hw, 8192, 8192, 8192, &s).unwrap().crossover.depth >= 1);
     }
 
     #[test]

@@ -20,9 +20,14 @@
 //!   finished blocks into C without locks. [`packed_matmul`] composes
 //!   them single-threaded; the coordinator runs the same pieces across
 //!   its work-stealing workers.
+//!
+//! [`ops`] adds the row-streamed element-wise add/sub kernels the
+//! Strassen layer ([`crate::strassen`]) uses to form operand
+//! combinations and recombine quadrants through borrowed views.
 
 mod matrix;
 pub mod microkernel;
+pub mod ops;
 pub mod pack;
 pub mod view;
 

@@ -1,0 +1,162 @@
+//! Blocked element-wise add/sub kernels over borrowed views — the
+//! combine substrate of the Strassen subsystem.
+//!
+//! Strassen forms its 7 operand combinations (`A11 + A22`, `B12 - B22`,
+//! ...) and recombines the 7 sub-products into C's quadrants with pure
+//! element-wise adds and subtracts. These kernels do that work through
+//! [`MatrixView`] / [`MatrixViewMut`] windows, so quadrants are read and
+//! written in place — no quadrant is ever materialized just to be added.
+//!
+//! Blocking structure: a view's rows are contiguous runs of the parent's
+//! storage, so the kernels stream row-by-row — each row is one
+//! sequential burst for all three operands (the same access shape the
+//! DDR model rewards in Fig. 3), and the inner loops are plain slice
+//! zips LLVM autovectorizes. Shapes are asserted equal up front; there
+//! is no edge handling inside the loops.
+
+use super::view::{MatrixView, MatrixViewMut};
+
+/// `out = x + y`, element-wise. All three shapes must match.
+pub fn add_into(x: MatrixView<'_>, y: MatrixView<'_>, out: &mut MatrixViewMut<'_>) {
+    assert_shapes(x.rows(), x.cols(), y.rows(), y.cols(), out.rows(), out.cols());
+    for r in 0..out.rows() {
+        let (xr, yr) = (x.row(r), y.row(r));
+        for ((o, &a), &b) in out.row_mut(r).iter_mut().zip(xr).zip(yr) {
+            *o = a + b;
+        }
+    }
+}
+
+/// `out = x - y`, element-wise. All three shapes must match.
+pub fn sub_into(x: MatrixView<'_>, y: MatrixView<'_>, out: &mut MatrixViewMut<'_>) {
+    assert_shapes(x.rows(), x.cols(), y.rows(), y.cols(), out.rows(), out.cols());
+    for r in 0..out.rows() {
+        let (xr, yr) = (x.row(r), y.row(r));
+        for ((o, &a), &b) in out.row_mut(r).iter_mut().zip(xr).zip(yr) {
+            *o = a - b;
+        }
+    }
+}
+
+/// `out += x`, element-wise accumulate.
+pub fn acc_add(out: &mut MatrixViewMut<'_>, x: MatrixView<'_>) {
+    assert_eq!((out.rows(), out.cols()), (x.rows(), x.cols()), "shape mismatch");
+    for r in 0..out.rows() {
+        let xr = x.row(r);
+        for (o, &a) in out.row_mut(r).iter_mut().zip(xr) {
+            *o += a;
+        }
+    }
+}
+
+/// `out -= x`, element-wise accumulate-subtract.
+pub fn acc_sub(out: &mut MatrixViewMut<'_>, x: MatrixView<'_>) {
+    assert_eq!((out.rows(), out.cols()), (x.rows(), x.cols()), "shape mismatch");
+    for r in 0..out.rows() {
+        let xr = x.row(r);
+        for (o, &a) in out.row_mut(r).iter_mut().zip(xr) {
+            *o -= a;
+        }
+    }
+}
+
+/// `out = x`, row-streamed copy between views.
+pub fn copy_into(x: MatrixView<'_>, out: &mut MatrixViewMut<'_>) {
+    assert_eq!((out.rows(), out.cols()), (x.rows(), x.cols()), "shape mismatch");
+    for r in 0..out.rows() {
+        out.row_mut(r).copy_from_slice(x.row(r));
+    }
+}
+
+fn assert_shapes(xr: usize, xc: usize, yr: usize, yc: usize, or: usize, oc: usize) {
+    assert_eq!((xr, xc), (yr, yc), "operand shape mismatch");
+    assert_eq!((xr, xc), (or, oc), "output shape mismatch");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Matrix;
+    use crate::util::check;
+
+    #[test]
+    fn add_and_sub_whole_matrices() {
+        let x = Matrix::random(5, 7, 1);
+        let y = Matrix::random(5, 7, 2);
+        let mut sum = Matrix::zeros(5, 7);
+        let mut diff = Matrix::zeros(5, 7);
+        add_into(x.view(), y.view(), &mut sum.view_mut());
+        sub_into(x.view(), y.view(), &mut diff.view_mut());
+        for i in 0..5 * 7 {
+            assert_eq!(sum.data[i], x.data[i] + y.data[i]);
+            assert_eq!(diff.data[i], x.data[i] - y.data[i]);
+        }
+    }
+
+    #[test]
+    fn accumulate_variants() {
+        let x = Matrix::random(4, 4, 3);
+        let mut out = Matrix::random(4, 4, 4);
+        let before = out.clone();
+        acc_add(&mut out.view_mut(), x.view());
+        for i in 0..16 {
+            assert_eq!(out.data[i], before.data[i] + x.data[i]);
+        }
+        acc_sub(&mut out.view_mut(), x.view());
+        for i in 0..16 {
+            assert_eq!(out.data[i], before.data[i]);
+        }
+    }
+
+    #[test]
+    fn copy_between_views() {
+        let x = Matrix::random(3, 9, 5);
+        let mut out = Matrix::zeros(3, 9);
+        copy_into(x.view(), &mut out.view_mut());
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn strided_quadrant_views_add_in_place() {
+        // Add the top-left quadrant of one 6x6 into the bottom-right
+        // quadrant of another — both sides are strided sub-views.
+        let src = Matrix::random(6, 6, 6);
+        let mut dst = Matrix::zeros(6, 6);
+        {
+            let mut dv = dst.view_mut();
+            let mut q = dv.block_mut(3, 3, 3, 3);
+            let sv = src.view();
+            add_into(sv.block(0, 0, 3, 3), sv.block(0, 3, 3, 3), &mut q);
+        }
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(dst.get(3 + r, 3 + c), src.get(r, c) + src.get(r, 3 + c));
+                assert_eq!(dst.get(r, c), 0.0, "outside the target quadrant");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn mismatched_shapes_panic() {
+        let x = Matrix::zeros(2, 3);
+        let y = Matrix::zeros(3, 2);
+        let mut out = Matrix::zeros(2, 3);
+        add_into(x.view(), y.view(), &mut out.view_mut());
+    }
+
+    #[test]
+    fn prop_add_sub_roundtrip() {
+        check::cases(32, |rng| {
+            let (m, n) = (rng.range(1, 20), rng.range(1, 20));
+            let seed = rng.next_u64();
+            let x = Matrix::random(m, n, seed);
+            let y = Matrix::random(m, n, seed + 1);
+            let mut sum = Matrix::zeros(m, n);
+            add_into(x.view(), y.view(), &mut sum.view_mut());
+            let mut back = Matrix::zeros(m, n);
+            sub_into(sum.view(), y.view(), &mut back.view_mut());
+            assert!(back.allclose(&x, 1e-6));
+        });
+    }
+}

@@ -130,6 +130,31 @@ impl<'a> MatrixViewMut<'a> {
         MatrixView::new(self.data, self.rows, self.cols, self.row_stride)
     }
 
+    /// Exclusive sub-view of the `rows x cols` block at `(row0, col0)` —
+    /// the mutable twin of [`MatrixView::block`], used by the Strassen
+    /// combine step to write one quadrant of C at a time. Strict bounds
+    /// (no clipping): writers must know exactly what they target.
+    pub fn block_mut(
+        &mut self,
+        row0: usize,
+        col0: usize,
+        rows: usize,
+        cols: usize,
+    ) -> MatrixViewMut<'_> {
+        assert!(row0 + rows <= self.rows && col0 + cols <= self.cols, "block out of bounds");
+        if rows == 0 || cols == 0 {
+            return MatrixViewMut { rows: 0, cols: 0, row_stride: self.row_stride, data: &mut [] };
+        }
+        let start = row0 * self.row_stride + col0;
+        let end = start + (rows - 1) * self.row_stride + cols;
+        MatrixViewMut {
+            rows,
+            cols,
+            row_stride: self.row_stride,
+            data: &mut self.data[start..end],
+        }
+    }
+
     /// Split into two disjoint row bands `[0, r)` and `[r, rows)` — the
     /// safe primitive behind partitioning C across owners.
     pub fn split_at_row(self, r: usize) -> (MatrixViewMut<'a>, MatrixViewMut<'a>) {
@@ -289,6 +314,37 @@ mod tests {
             v.row_mut(2)[1] = 7.0;
         }
         assert_eq!(m.get(2, 1), 7.0);
+    }
+
+    #[test]
+    fn block_mut_writes_only_its_window() {
+        let mut m = Matrix::zeros(6, 5);
+        {
+            let mut v = m.view_mut();
+            let mut q = v.block_mut(2, 1, 3, 2);
+            assert_eq!((q.rows(), q.cols()), (3, 2));
+            for r in 0..3 {
+                q.row_mut(r).fill(1.0);
+            }
+        }
+        let ones: f32 = m.data.iter().sum();
+        assert_eq!(ones, 6.0);
+        for r in 2..5 {
+            for c in 1..3 {
+                assert_eq!(m.get(r, c), 1.0);
+            }
+        }
+        assert_eq!(m.get(1, 1), 0.0);
+        assert_eq!(m.get(2, 0), 0.0);
+        assert_eq!(m.get(5, 1), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "block out of bounds")]
+    fn block_mut_bounds_checked() {
+        let mut m = Matrix::zeros(4, 4);
+        let mut v = m.view_mut();
+        v.block_mut(2, 2, 3, 3);
     }
 
     #[test]

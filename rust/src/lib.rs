@@ -39,7 +39,14 @@
 //!   one-job-at-a-time `Coordinator`, and the multi-job `JobServer` —
 //!   a persistent pool behind a bounded admission queue with cross-job
 //!   work stealing and small-job batching, the production serving
-//!   runtime.
+//!   runtime;
+//! * [`strassen`] — the algorithmic layer above the serving runtime:
+//!   recursive Strassen decomposition (7 sub-products per quadrant
+//!   split instead of 8) whose per-level fan-out is submitted to the
+//!   `JobServer` as a job group and load-balanced by cross-job
+//!   stealing, with the recursion cutoff chosen by the analytical
+//!   model (`analytical::strassen_crossover`) and temporaries recycled
+//!   through a scratch arena.
 
 pub mod accelerator;
 pub mod analytical;
@@ -54,6 +61,7 @@ pub mod mac;
 pub mod mpe;
 pub mod resources;
 pub mod runtime;
+pub mod strassen;
 pub mod util;
 pub mod wqm;
 

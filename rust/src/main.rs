@@ -35,6 +35,11 @@ COMMANDS:
   dse --m M --k K --n N             design-space exploration
   run --m M --k K --n N [--np NP --si SI] [--golden] [--artifacts DIR]
                                     run one GEMM end to end
+  strassen --m M --k K --n N [--depth D] [--np NP --si SI]
+           [--workers W] [--check] [--golden] [--artifacts DIR]
+                                    Strassen-decomposed GEMM through the
+                                    job server (depth: forced levels;
+                                    default: model-chosen cutoff)
   batch --file JOBS [--golden] [--artifacts DIR]
                                     serve a job file (lines: M K N [NP SI]);
                                     '-' reads stdin
@@ -51,7 +56,7 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
-const BOOL_FLAGS: &[&str] = &["golden"];
+const BOOL_FLAGS: &[&str] = &["golden", "check"];
 
 fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
     let mut cmd = None;
@@ -115,6 +120,7 @@ fn main() -> anyhow::Result<()> {
             args.require_usize("n")?,
         ),
         "run" => cmd_run(&hw, &args),
+        "strassen" => cmd_strassen(&hw, &args),
         "batch" => cmd_batch(&hw, &args),
         "schedule" => cmd_schedule(&hw, &args),
         "help" | "-h" | "--help" => {
@@ -125,6 +131,21 @@ fn main() -> anyhow::Result<()> {
             eprint!("unknown command {other:?}\n\n{USAGE}");
             std::process::exit(2);
         }
+    }
+}
+
+/// Numerics backend from the shared `--golden` / `--artifacts` flags:
+/// golden when forced, otherwise PJRT with golden fallback.
+fn engine_from(args: &Args) -> NumericsEngine {
+    let artifacts = args
+        .flags
+        .get("artifacts")
+        .map(String::as_str)
+        .unwrap_or("artifacts");
+    if args.flags.contains_key("golden") {
+        NumericsEngine::golden()
+    } else {
+        NumericsEngine::auto(artifacts)
     }
 }
 
@@ -245,16 +266,7 @@ fn cmd_run(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
         args.require_usize("k")?,
         args.require_usize("n")?,
     );
-    let artifacts = args
-        .flags
-        .get("artifacts")
-        .map(String::as_str)
-        .unwrap_or("artifacts");
-    let engine = if args.flags.contains_key("golden") {
-        NumericsEngine::golden()
-    } else {
-        NumericsEngine::auto(artifacts)
-    };
+    let engine = engine_from(args);
     println!("numerics backend: {}", engine.name);
     let co = Coordinator::new(hw.clone(), engine);
     let run = match (args.get_usize("np")?, args.get_usize("si")?) {
@@ -279,6 +291,104 @@ fn cmd_run(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
     );
     println!("host numerics latency: {:.3} s", result.host_latency_secs);
     println!("metrics: {}", co.metrics().summary());
+    Ok(())
+}
+
+/// Strassen-decomposed GEMM through the job server: the model picks the
+/// recursion depth (`--depth` forces it), each level fans 7 sub-products
+/// into the pool as a job group, and the crossover trace is printed the
+/// way `dse` prints design points.
+fn cmd_strassen(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
+    use multi_array::coordinator::{JobServer, ServerConfig};
+    use multi_array::strassen::{self, Cutoff, StrassenConfig, DIRECT_SPLIT_FANOUT};
+
+    let (m, k, n) = (
+        args.require_usize("m")?,
+        args.require_usize("k")?,
+        args.require_usize("n")?,
+    );
+    let run = match (args.get_usize("np")?, args.get_usize("si")?) {
+        (Some(np), Some(si)) => Some(RunConfig::square(np, si)),
+        (None, None) => None,
+        _ => anyhow::bail!("--np and --si must be given together"),
+    };
+    let engine = engine_from(args);
+    println!("numerics backend: {}", engine.name);
+    let mut server_cfg = ServerConfig::default();
+    if let Some(w) = args.get_usize("workers")? {
+        server_cfg.workers = w;
+    }
+    server_cfg.default_run = run;
+    let srv = JobServer::new(hw.clone(), engine, server_cfg)?;
+
+    let cutoff = match args.get_usize("depth")? {
+        Some(d) => Cutoff::Depth(d),
+        None => Cutoff::Model,
+    };
+    let a = Matrix::random(m, k, 42);
+    let b = Matrix::random(k, n, 43);
+    let want = if args.flags.contains_key("check") {
+        Some(a.matmul(&b))
+    } else {
+        None
+    };
+
+    let t0 = std::time::Instant::now();
+    let r = strassen::multiply(&srv, &a, &b, &StrassenConfig { cutoff, run })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Model runs carry their plan in the report; forced-depth runs skip
+    // the sweep, so evaluate it here (outside the timed region) for the
+    // trace.
+    let computed;
+    let plan = match &r.model {
+        Some(p) => p,
+        None => {
+            computed = multi_array::analytical::strassen_crossover(hw, m, k, n, srv.surface())?;
+            &computed
+        }
+    };
+    println!("\nmodel crossover trace (level: size, direct vs 7·child+combine):");
+    println!(
+        "{:>6} {:>18} {:>12} {:>12} {:>8}",
+        "level", "M*K*N", "direct(ms)", "strassen(ms)", "recurse"
+    );
+    for (i, l) in plan.levels.iter().enumerate() {
+        let ts = if l.t_strassen.is_finite() {
+            format!("{:.3}", l.t_strassen * 1e3)
+        } else {
+            "-".to_string()
+        };
+        println!(
+            "{:>6} {:>18} {:>12.3} {:>12} {:>8}",
+            i,
+            format!("{}*{}*{}", l.m, l.k, l.n),
+            l.t_direct * 1e3,
+            ts,
+            if l.recurse { "yes" } else { "no" }
+        );
+    }
+    println!("model-chosen depth: {}", plan.depth);
+    println!(
+        "executed depth: {} ({} leaf GEMMs; padded to {}x{}x{})",
+        r.depth, r.leaf_gemms, r.padded.0, r.padded.1, r.padded.2
+    );
+    for lvl in 0..r.depth {
+        println!(
+            "  level {lvl}: {} node(s), measured fan-out {} sub-multiplies (direct split: {})",
+            r.level_nodes[lvl], r.fanout(lvl), DIRECT_SPLIT_FANOUT
+        );
+    }
+    println!(
+        "arena: {} fresh allocs ({:.1} MiB), {} reuses",
+        r.arena.fresh_allocs, r.arena.fresh_bytes as f64 / (1 << 20) as f64, r.arena.reuses
+    );
+    if let Some(want) = want {
+        println!("max |err| vs oracle: {:.3e}", r.c.max_abs_diff(&want));
+    }
+    println!("host wall time: {wall:.3} s");
+    println!("server: {}", srv.stats());
+    srv.shutdown();
     Ok(())
 }
 
@@ -364,16 +474,7 @@ fn cmd_batch(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
     }
     anyhow::ensure!(!jobs.is_empty(), "no jobs in {file}");
 
-    let artifacts = args
-        .flags
-        .get("artifacts")
-        .map(String::as_str)
-        .unwrap_or("artifacts");
-    let engine = if args.flags.contains_key("golden") {
-        NumericsEngine::golden()
-    } else {
-        NumericsEngine::auto(artifacts)
-    };
+    let engine = engine_from(args);
     println!("numerics backend: {} | {} jobs", engine.name, jobs.len());
     let co = Coordinator::new(hw.clone(), engine);
 

@@ -1,0 +1,142 @@
+//! Reusable scratch buffers for the Strassen recursion.
+//!
+//! Every recursion node needs 14 operand temporaries (two per
+//! sub-product), 7 sub-product results, and one combined output.
+//! Allocating each fresh would scale peak memory with the node count;
+//! the arena instead parks finished buffers on a free list and hands
+//! them back best-fit, so a deep recursion cycles through a small,
+//! bounded working set. Buffers handed to the [`crate::coordinator`]
+//! as job operands leave the arena for good (the server owns and drops
+//! them), but the server's result matrices flow *into* the arena after
+//! combining, which keeps the pool balanced across levels.
+//!
+//! Buffers come back zero-filled, so a taken matrix is always a valid
+//! zero matrix (the same contract as [`Matrix::zeros`]); the zeroing
+//! cost is linear and vanishes next to the O(n³) products.
+
+use crate::gemm::Matrix;
+
+/// Allocation statistics — the numbers that show the reuse working.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArenaStats {
+    /// Buffers allocated fresh (free list could not serve the request).
+    pub fresh_allocs: u64,
+    /// Requests served by recycling a parked buffer.
+    pub reuses: u64,
+    /// Total bytes of fresh allocations — the arena's memory footprint
+    /// bound (reused buffers add nothing here).
+    pub fresh_bytes: u64,
+    /// Bytes currently parked on the free list.
+    pub freelist_bytes: u64,
+}
+
+/// Best-fit free list of FP32 buffers, single-owner (the planner
+/// threads recursion through one `&mut` arena).
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    free: Vec<Vec<f32>>,
+    stats: ArenaStats,
+}
+
+impl ScratchArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zeroed `rows x cols` matrix, recycled when a parked buffer's
+    /// capacity fits (best fit: the smallest sufficient one), fresh
+    /// otherwise.
+    pub fn take(&mut self, rows: usize, cols: usize) -> Matrix {
+        let need = rows * cols;
+        let candidate = self
+            .free
+            .iter()
+            .enumerate()
+            .filter(|(_, buf)| buf.capacity() >= need)
+            .min_by_key(|(_, buf)| buf.capacity())
+            .map(|(i, _)| i);
+        let data = match candidate {
+            Some(i) => {
+                let mut buf = self.free.swap_remove(i);
+                self.stats.freelist_bytes -= 4 * buf.capacity() as u64;
+                self.stats.reuses += 1;
+                buf.clear();
+                buf.resize(need, 0.0);
+                buf
+            }
+            None => {
+                self.stats.fresh_allocs += 1;
+                self.stats.fresh_bytes += 4 * need as u64;
+                vec![0.0; need]
+            }
+        };
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    /// Park a finished matrix's buffer for reuse.
+    pub fn put(&mut self, m: Matrix) {
+        self.stats.freelist_bytes += 4 * m.data.capacity() as u64;
+        self.free.push(m.data);
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_returns_zeroed_matrix() {
+        let mut arena = ScratchArena::new();
+        let mut m = arena.take(3, 4);
+        assert_eq!(m, Matrix::zeros(3, 4));
+        m.data.fill(7.0);
+        arena.put(m);
+        // Recycled buffer must come back clean.
+        let again = arena.take(2, 5);
+        assert_eq!(again, Matrix::zeros(2, 5));
+        assert_eq!(arena.stats().reuses, 1);
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_buffer() {
+        let mut arena = ScratchArena::new();
+        let big = arena.take(10, 10);
+        let small = arena.take(3, 3);
+        arena.put(big);
+        arena.put(small);
+        // A 3x3 request must take the 9-slot buffer, not the 100-slot.
+        let got = arena.take(3, 3);
+        assert_eq!(got.data.capacity(), 9);
+        assert_eq!(arena.stats().fresh_allocs, 2);
+        assert_eq!(arena.stats().reuses, 1);
+    }
+
+    #[test]
+    fn fresh_bytes_bound_under_reuse() {
+        let mut arena = ScratchArena::new();
+        // Serial take/put of equal sizes must allocate exactly once.
+        for _ in 0..50 {
+            let m = arena.take(8, 8);
+            arena.put(m);
+        }
+        let s = arena.stats();
+        assert_eq!(s.fresh_allocs, 1);
+        assert_eq!(s.reuses, 49);
+        assert_eq!(s.fresh_bytes, 4 * 64);
+        assert_eq!(s.freelist_bytes, 4 * 64);
+    }
+
+    #[test]
+    fn too_small_parked_buffers_are_skipped() {
+        let mut arena = ScratchArena::new();
+        let tiny = arena.take(2, 2);
+        arena.put(tiny);
+        let big = arena.take(20, 20);
+        assert_eq!(big.data.len(), 400);
+        assert_eq!(arena.stats().fresh_allocs, 2, "tiny buffer cannot serve 400 elems");
+    }
+}

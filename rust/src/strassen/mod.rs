@@ -1,0 +1,38 @@
+//! Strassen decomposition on top of the serving runtime — the
+//! algorithmic lever above the paper's architectural ones.
+//!
+//! The paper scales GEMM by multiplying PE arrays and balancing them
+//! with work stealing; Strassen changes the FLOP count itself: a
+//! quadrant split needs only 7 sub-products instead of 8, at the price
+//! of O(n²) element-wise combine traffic. This module composes the two:
+//!
+//! * the **planner** ([`multiply`]) recursively splits `C = A x B` into
+//!   quadrants, padding odd dimensions once up front with the Section-IV
+//!   zero-pad machinery ([`crate::gemm::Matrix::pad_to`] to a multiple
+//!   of `2^depth`, so every level halves exactly);
+//! * the 7 operand combinations per level are formed by the
+//!   row-streamed add/sub kernels of [`crate::gemm::ops`] reading
+//!   quadrants through borrowed [`crate::gemm::MatrixView`]s;
+//! * the 7 sub-products of a level are submitted to the
+//!   [`crate::coordinator::JobServer`] as **one group**
+//!   ([`crate::coordinator::JobServer::submit_group`]) — cross-job work
+//!   stealing spreads the 7-way fan-out over the persistent pool, the
+//!   serving-runtime twin of the paper's inter-array WQM balancing;
+//! * recursion depth comes from the analytical model:
+//!   [`crate::analytical::strassen_crossover`] recurses only while
+//!   `7·T(n/2) + combine` beats the best direct multi-array time
+//!   (override with [`Cutoff::Depth`] to force levels);
+//! * per-level temporaries cycle through a reusable [`ScratchArena`],
+//!   so peak allocation stays bounded across recursion levels instead
+//!   of growing with every node.
+//!
+//! [`multiply`] returns a [`StrassenReport`]: the result matrix plus
+//! the executed depth, the measured per-level fan-out (7, vs 8 for a
+//! direct quadrant split), leaf-GEMM count, the model's crossover
+//! trace (on model-cutoff runs), and arena statistics.
+
+mod arena;
+mod planner;
+
+pub use arena::{ArenaStats, ScratchArena};
+pub use planner::{multiply, Cutoff, StrassenConfig, StrassenReport, DIRECT_SPLIT_FANOUT};

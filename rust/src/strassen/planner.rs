@@ -1,0 +1,439 @@
+//! The recursive Strassen planner: quadrant split, 7-way sub-product
+//! fan-out through the [`JobServer`], combine from the scratch arena.
+//!
+//! One recursion node computes `C = A x B` (all dimensions even, kept
+//! divisible by `2^depth` by the top-level padding) as:
+//!
+//! ```text
+//! M1 = (A11 + A22)(B11 + B22)    C11 = M1 + M4 - M5 + M7
+//! M2 = (A21 + A22) B11           C12 = M3 + M5
+//! M3 =  A11 (B12 - B22)          C21 = M2 + M4
+//! M4 =  A22 (B21 - B11)          C22 = M1 - M2 + M3 + M6
+//! M5 = (A11 + A12) B22
+//! M6 = (A21 - A11)(B11 + B12)
+//! M7 = (A12 - A22)(B21 + B22)
+//! ```
+//!
+//! 7 sub-products per node instead of the direct split's 8. At the leaf
+//! level all 7 are submitted to the server as one job group, so the
+//! pool's cross-job stealing load-balances the fan-out; above the leaf
+//! the planner recurses depth-first. Temporaries and results cycle
+//! through the node-local [`ScratchArena`].
+
+use crate::analytical::{strassen_crossover, CrossoverPlan};
+use crate::config::RunConfig;
+use crate::coordinator::{GemmJob, JobServer};
+use crate::gemm::{ops, Matrix, MatrixView};
+
+use super::arena::{ArenaStats, ScratchArena};
+
+/// Children a *direct* quadrant split would spawn per node — the figure
+/// Strassen's 7 is measured against.
+pub const DIRECT_SPLIT_FANOUT: u64 = 8;
+
+/// How the recursion depth is chosen.
+#[derive(Debug, Clone, Copy)]
+pub enum Cutoff {
+    /// Ask [`strassen_crossover`]: recurse while the model says
+    /// `7·T(n/2) + combine` beats the direct multi-array time.
+    Model,
+    /// Force exactly this many levels (clamped so no padded leaf
+    /// dimension collapses below 1 — tests use this to exercise
+    /// multi-level recombination on small problems).
+    Depth(usize),
+}
+
+/// Planner knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct StrassenConfig {
+    pub cutoff: Cutoff,
+    /// Pinned run config for the leaf GEMMs; `None` lets the server
+    /// plan each leaf (server default or per-job DSE).
+    pub run: Option<RunConfig>,
+}
+
+impl Default for StrassenConfig {
+    fn default() -> Self {
+        Self { cutoff: Cutoff::Model, run: None }
+    }
+}
+
+/// What a Strassen run reports besides the product itself.
+#[derive(Debug)]
+pub struct StrassenReport {
+    pub c: Matrix,
+    /// Recursion levels actually executed (0 = ran direct).
+    pub depth: usize,
+    /// GEMMs submitted to the server (`7^depth`).
+    pub leaf_gemms: u64,
+    /// Recursion nodes per level (`level_nodes[i]` = nodes at level i).
+    pub level_nodes: Vec<u64>,
+    /// Sub-multiplies spawned per level, measured by counting at each
+    /// node (not assumed).
+    pub level_spawns: Vec<u64>,
+    /// Operand shapes after top-level padding to a multiple of
+    /// `2^depth` (equals the input shape when depth = 0).
+    pub padded: (usize, usize, usize),
+    /// The analytical model's verdict, present only when the cutoff was
+    /// [`Cutoff::Model`] (forced-depth runs skip the sweep; call
+    /// [`strassen_crossover`] directly to compare against a forced run).
+    pub model: Option<CrossoverPlan>,
+    pub arena: ArenaStats,
+}
+
+impl StrassenReport {
+    /// Measured sub-multiplies per node at `level` — 7.0 on every
+    /// executed Strassen level (vs [`DIRECT_SPLIT_FANOUT`]).
+    pub fn fanout(&self, level: usize) -> f64 {
+        match self.level_nodes.get(level) {
+            Some(&nodes) if nodes > 0 => self.level_spawns[level] as f64 / nodes as f64,
+            _ => 0.0,
+        }
+    }
+}
+
+/// Deepest recursion the shape admits: each level halves every padded
+/// dimension, so `2^depth` may not exceed any of them.
+fn depth_cap(m: usize, k: usize, n: usize) -> usize {
+    (m.ilog2().min(k.ilog2()).min(n.ilog2())) as usize
+}
+
+struct Ctx<'s> {
+    server: &'s JobServer,
+    arena: ScratchArena,
+    run: Option<RunConfig>,
+    next_id: u64,
+    leaf_gemms: u64,
+    level_nodes: Vec<u64>,
+    level_spawns: Vec<u64>,
+}
+
+impl Ctx<'_> {
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+}
+
+/// One operand combination to materialize from quadrant views.
+#[derive(Clone, Copy)]
+enum Combo<'v> {
+    Copy(MatrixView<'v>),
+    Add(MatrixView<'v>, MatrixView<'v>),
+    Sub(MatrixView<'v>, MatrixView<'v>),
+}
+
+fn materialize(arena: &mut ScratchArena, rows: usize, cols: usize, combo: Combo<'_>) -> Matrix {
+    let mut out = arena.take(rows, cols);
+    {
+        let mut ov = out.view_mut();
+        match combo {
+            Combo::Copy(x) => ops::copy_into(x, &mut ov),
+            Combo::Add(x, y) => ops::add_into(x, y, &mut ov),
+            Combo::Sub(x, y) => ops::sub_into(x, y, &mut ov),
+        }
+    }
+    out
+}
+
+/// Compute `C = A x B` through the Strassen planner on `server`.
+///
+/// The recursion depth is `cfg.cutoff` (model-chosen by default),
+/// clamped by the shape; `depth = 0` degrades to one direct server job,
+/// the model's own verdict for sub-crossover problems.
+pub fn multiply(
+    server: &JobServer,
+    a: &Matrix,
+    b: &Matrix,
+    cfg: &StrassenConfig,
+) -> anyhow::Result<StrassenReport> {
+    anyhow::ensure!(a.cols == b.rows, "contraction mismatch");
+    anyhow::ensure!(
+        a.rows > 0 && a.cols > 0 && b.cols > 0,
+        "degenerate problem {}x{}x{}",
+        a.rows,
+        a.cols,
+        b.cols
+    );
+    if let Some(run) = cfg.run {
+        run.validate(server.hw())?;
+    }
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let (model, requested) = match cfg.cutoff {
+        Cutoff::Model => {
+            let plan = strassen_crossover(server.hw(), m, k, n, server.surface())?;
+            let depth = plan.depth;
+            (Some(plan), depth)
+        }
+        Cutoff::Depth(d) => (None, d),
+    };
+    let depth = requested.min(depth_cap(m, k, n));
+
+    let mut ctx = Ctx {
+        server,
+        arena: ScratchArena::new(),
+        run: cfg.run,
+        next_id: 0,
+        leaf_gemms: 0,
+        level_nodes: vec![0; depth],
+        level_spawns: vec![0; depth],
+    };
+
+    let (c, padded) = if depth == 0 {
+        let job = GemmJob { id: ctx.fresh_id(), a: a.clone(), b: b.clone(), run: cfg.run };
+        let r = server.submit(job)?.wait()?;
+        ctx.leaf_gemms = 1;
+        (r.c, (m, k, n))
+    } else {
+        // Section-IV zero padding, once, up to a multiple of 2^depth:
+        // every level then halves exactly and leaves stay unragged.
+        let align = 1usize << depth;
+        let (mp, kp, np) =
+            (m.next_multiple_of(align), k.next_multiple_of(align), n.next_multiple_of(align));
+        let ap = a.pad_to(mp, kp);
+        let bp = b.pad_to(kp, np);
+        let cp = node(&mut ctx, ap, bp, depth, 0)?;
+        // Padded columns of A meet padded rows of B as exact zero
+        // terms, so the real product is the top-left block.
+        let c = cp.block(0, 0, m, n);
+        ctx.arena.put(cp);
+        (c, (mp, kp, np))
+    };
+
+    Ok(StrassenReport {
+        c,
+        depth,
+        leaf_gemms: ctx.leaf_gemms,
+        level_nodes: ctx.level_nodes,
+        level_spawns: ctx.level_spawns,
+        padded,
+        model,
+        arena: ctx.arena.stats(),
+    })
+}
+
+/// One recursion node (`depth_left >= 1`; all dims even).
+fn node(
+    ctx: &mut Ctx<'_>,
+    a: Matrix,
+    b: Matrix,
+    depth_left: usize,
+    level: usize,
+) -> anyhow::Result<Matrix> {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    debug_assert!(m % 2 == 0 && k % 2 == 0 && n % 2 == 0, "node dims must be even");
+    let (m2, k2, n2) = (m / 2, k / 2, n / 2);
+
+    let mut pairs: Vec<(Matrix, Matrix)> = Vec::with_capacity(7);
+    {
+        let av = a.view();
+        let bv = b.view();
+        let a11 = av.block(0, 0, m2, k2);
+        let a12 = av.block(0, k2, m2, k2);
+        let a21 = av.block(m2, 0, m2, k2);
+        let a22 = av.block(m2, k2, m2, k2);
+        let b11 = bv.block(0, 0, k2, n2);
+        let b12 = bv.block(0, n2, k2, n2);
+        let b21 = bv.block(k2, 0, k2, n2);
+        let b22 = bv.block(k2, n2, k2, n2);
+        let specs: [(Combo<'_>, Combo<'_>); 7] = [
+            (Combo::Add(a11, a22), Combo::Add(b11, b22)), // M1
+            (Combo::Add(a21, a22), Combo::Copy(b11)),     // M2
+            (Combo::Copy(a11), Combo::Sub(b12, b22)),     // M3
+            (Combo::Copy(a22), Combo::Sub(b21, b11)),     // M4
+            (Combo::Add(a11, a12), Combo::Copy(b22)),     // M5
+            (Combo::Sub(a21, a11), Combo::Add(b11, b12)), // M6
+            (Combo::Sub(a12, a22), Combo::Add(b21, b22)), // M7
+        ];
+        for (ca, cb) in specs {
+            let ta = materialize(&mut ctx.arena, m2, k2, ca);
+            let tb = materialize(&mut ctx.arena, k2, n2, cb);
+            pairs.push((ta, tb));
+        }
+    }
+    // Operands are fully captured in the combos; recycle them before
+    // the sub-products run so children draw from the same pool.
+    ctx.arena.put(a);
+    ctx.arena.put(b);
+    ctx.level_nodes[level] += 1;
+    ctx.level_spawns[level] += 7;
+
+    let ms: Vec<Matrix> = if depth_left == 1 {
+        // Leaf level: one job group of 7 — the admission queue keeps
+        // them together and cross-job stealing spreads them over the
+        // pool.
+        let jobs: Vec<GemmJob> = pairs
+            .into_iter()
+            .map(|(ta, tb)| GemmJob { id: ctx.fresh_id(), a: ta, b: tb, run: ctx.run })
+            .collect();
+        let results = ctx.server.submit_group(jobs)?.wait_all()?;
+        ctx.leaf_gemms += 7;
+        let mut ms = Vec::with_capacity(7);
+        for r in results {
+            anyhow::ensure!(
+                (r.c.rows, r.c.cols) == (m2, n2),
+                "leaf {} returned {}x{}, expected {m2}x{n2}",
+                r.id,
+                r.c.rows,
+                r.c.cols
+            );
+            ms.push(r.c);
+        }
+        ms
+    } else {
+        let mut ms = Vec::with_capacity(7);
+        for (ta, tb) in pairs {
+            ms.push(node(ctx, ta, tb, depth_left - 1, level + 1)?);
+        }
+        ms
+    };
+
+    let mut c = ctx.arena.take(m, n);
+    {
+        let mut cv = c.view_mut();
+        {
+            let mut c11 = cv.block_mut(0, 0, m2, n2);
+            ops::add_into(ms[0].view(), ms[3].view(), &mut c11);
+            ops::acc_sub(&mut c11, ms[4].view());
+            ops::acc_add(&mut c11, ms[6].view());
+        }
+        {
+            let mut c12 = cv.block_mut(0, n2, m2, n2);
+            ops::add_into(ms[2].view(), ms[4].view(), &mut c12);
+        }
+        {
+            let mut c21 = cv.block_mut(m2, 0, m2, n2);
+            ops::add_into(ms[1].view(), ms[3].view(), &mut c21);
+        }
+        {
+            let mut c22 = cv.block_mut(m2, n2, m2, n2);
+            ops::sub_into(ms[0].view(), ms[1].view(), &mut c22);
+            ops::acc_add(&mut c22, ms[2].view());
+            ops::acc_add(&mut c22, ms[5].view());
+        }
+    }
+    for mi in ms {
+        ctx.arena.put(mi);
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::coordinator::{NumericsEngine, ServerConfig};
+
+    fn server() -> JobServer {
+        let cfg = ServerConfig {
+            workers: 4,
+            queue_capacity: 16,
+            batch_max_tasks: 4,
+            batch_window: 4,
+            cross_job_stealing: true,
+            default_run: Some(RunConfig::square(2, 16)),
+        };
+        JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), cfg).unwrap()
+    }
+
+    fn cfg_depth(d: usize) -> StrassenConfig {
+        StrassenConfig { cutoff: Cutoff::Depth(d), run: Some(RunConfig::square(2, 16)) }
+    }
+
+    #[test]
+    fn one_level_matches_oracle_even_dims() {
+        let srv = server();
+        let a = Matrix::random(32, 24, 1);
+        let b = Matrix::random(24, 40, 2);
+        let r = multiply(&srv, &a, &b, &cfg_depth(1)).unwrap();
+        assert_eq!(r.depth, 1);
+        assert_eq!(r.leaf_gemms, 7);
+        assert_eq!(r.level_nodes, vec![1]);
+        assert!((r.fanout(0) - 7.0).abs() < 1e-12);
+        assert!(r.model.is_none(), "forced depth must not pay for the model sweep");
+        assert!(r.c.allclose(&a.matmul(&b), 1e-4));
+    }
+
+    #[test]
+    fn odd_dims_are_padded_even() {
+        let srv = server();
+        let a = Matrix::random(33, 17, 3);
+        let b = Matrix::random(17, 29, 4);
+        let r = multiply(&srv, &a, &b, &cfg_depth(1)).unwrap();
+        assert_eq!(r.padded, (34, 18, 30));
+        assert_eq!((r.c.rows, r.c.cols), (33, 29));
+        assert!(r.c.allclose(&a.matmul(&b), 1e-4));
+    }
+
+    #[test]
+    fn depth_zero_is_one_direct_job() {
+        let srv = server();
+        let a = Matrix::random(20, 12, 5);
+        let b = Matrix::random(12, 16, 6);
+        let r = multiply(&srv, &a, &b, &cfg_depth(0)).unwrap();
+        assert_eq!((r.depth, r.leaf_gemms), (0, 1));
+        assert_eq!(r.padded, (20, 12, 16));
+        assert!(r.c.allclose(&a.matmul(&b), 1e-4));
+    }
+
+    #[test]
+    fn forced_depth_clamped_by_shape() {
+        let srv = server();
+        let a = Matrix::random(3, 5, 7);
+        let b = Matrix::random(5, 2, 8);
+        // ilog2(2) = 1 caps the recursion regardless of the request.
+        let r = multiply(&srv, &a, &b, &cfg_depth(6)).unwrap();
+        assert_eq!(r.depth, 1);
+        assert!(r.c.allclose(&a.matmul(&b), 1e-4));
+        // A 1-dim shape cannot recurse at all.
+        let a1 = Matrix::random(1, 4, 9);
+        let b1 = Matrix::random(4, 4, 10);
+        let r1 = multiply(&srv, &a1, &b1, &cfg_depth(3)).unwrap();
+        assert_eq!(r1.depth, 0);
+        assert!(r1.c.allclose(&a1.matmul(&b1), 1e-4));
+    }
+
+    #[test]
+    fn model_cutoff_runs_small_problems_direct() {
+        let srv = server();
+        let a = Matrix::random(64, 64, 11);
+        let b = Matrix::random(64, 64, 12);
+        let cfg = StrassenConfig { cutoff: Cutoff::Model, run: Some(RunConfig::square(2, 16)) };
+        let r = multiply(&srv, &a, &b, &cfg).unwrap();
+        assert_eq!(r.depth, 0, "64^3 is far below the modeled crossover");
+        assert_eq!(r.model.as_ref().unwrap().depth, 0);
+        assert!(r.c.allclose(&a.matmul(&b), 1e-4));
+    }
+
+    #[test]
+    fn two_levels_recombine_and_reuse_the_arena() {
+        let srv = server();
+        let a = Matrix::random(40, 36, 13);
+        let b = Matrix::random(36, 44, 14);
+        let r = multiply(&srv, &a, &b, &cfg_depth(2)).unwrap();
+        assert_eq!(r.depth, 2);
+        assert_eq!(r.leaf_gemms, 49);
+        assert_eq!(r.level_nodes, vec![1, 7]);
+        assert_eq!(r.level_spawns, vec![7, 49]);
+        assert!(r.c.allclose(&a.matmul(&b), 1e-3));
+        assert!(r.arena.reuses > 0, "deep recursion must recycle buffers");
+    }
+
+    #[test]
+    fn mismatched_operands_rejected() {
+        let srv = server();
+        let a = Matrix::random(8, 8, 15);
+        let b = Matrix::random(9, 8, 16);
+        assert!(multiply(&srv, &a, &b, &cfg_depth(1)).is_err());
+    }
+
+    #[test]
+    fn invalid_pinned_run_rejected_before_any_submit() {
+        let srv = server();
+        let a = Matrix::random(8, 8, 17);
+        let b = Matrix::random(8, 8, 18);
+        let cfg = StrassenConfig { cutoff: Cutoff::Depth(1), run: Some(RunConfig::square(4, 256)) };
+        assert!(multiply(&srv, &a, &b, &cfg).is_err());
+    }
+}
