@@ -17,6 +17,16 @@
 //! Each mode's record carries `worker_idle_frac` (mean across samples)
 //! and `cross_job_steals` annotations; the CI gate and BENCH_serving.json
 //! consumers compare idle fractions across modes.
+//!
+//! A fourth pair measures the shared-operand pipeline on a uniform
+//! small-GEMM stream that multiplies one B (the im2col inference
+//! shape):
+//!
+//! * `serving_individual_shared_b_workload` — the N jobs submitted
+//!   individually (N private B packs);
+//! * `serving_batched_shared_b` — the same N jobs through
+//!   `submit_batched_gemm` (one B pack; `packs_avoided` annotates the
+//!   N-1 the sharing saved). This label is on the CI bench gate.
 
 use std::cell::Cell;
 
@@ -121,6 +131,69 @@ fn main() {
         bench.annotate("jobs", NJOBS as f64);
         bench.annotate("workers", WORKERS as f64);
     }
+
+    // Shared-operand pipeline: the same B under every job. Uniform mice
+    // so the win isolated is pack sharing, not scheduling.
+    let b = Matrix::random(32, 64, 4242);
+    let many_a: Vec<Matrix> =
+        (0..NJOBS).map(|j| Matrix::random(64, 32, 5000 + j as u64)).collect();
+    let shared_flops = 2 * 64 * 32 * 64 * NJOBS as u64;
+    let shared_cfg = || ServerConfig {
+        workers: WORKERS,
+        queue_capacity: NJOBS,
+        batch_max_tasks: 0,
+        batch_window: 1,
+        cross_job_stealing: true,
+        default_run: None,
+    };
+    let run = RunConfig::square(4, 64);
+
+    bench.run_throughput("serving_individual_shared_b_workload", shared_flops, || {
+        let srv = JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), shared_cfg())
+            .expect("server construction");
+        let tickets: Vec<_> = many_a
+            .iter()
+            .enumerate()
+            .map(|(id, a)| {
+                srv.submit(GemmJob {
+                    id: id as u64,
+                    a: a.clone(),
+                    b: b.clone(),
+                    run: Some(run),
+                })
+                .expect("submit")
+            })
+            .collect();
+        for t in tickets {
+            t.wait().expect("job result");
+        }
+        assert_eq!(srv.stats().b_panel_packs, NJOBS as u64);
+    });
+    bench.annotate("b_panel_packs", NJOBS as f64);
+    bench.annotate("packs_avoided", 0.0);
+
+    let packs_avoided = Cell::new(0.0f64);
+    let shared_samples = Cell::new(0u32);
+    bench.run_throughput("serving_batched_shared_b", shared_flops, || {
+        let srv = JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), shared_cfg())
+            .expect("server construction");
+        let results = srv
+            .submit_batched_gemm(b.clone(), many_a.clone(), Some(run))
+            .expect("batched submit")
+            .wait_all()
+            .expect("batched results");
+        assert_eq!(results.len(), NJOBS);
+        let stats = srv.stats();
+        assert_eq!(stats.b_panel_packs, 1, "shared B must pack once");
+        packs_avoided.set(packs_avoided.get() + stats.panels_shared as f64);
+        shared_samples.set(shared_samples.get() + 1);
+    });
+    bench.annotate("b_panel_packs", 1.0);
+    bench.annotate(
+        "packs_avoided",
+        packs_avoided.get() / shared_samples.get().max(1) as f64,
+    );
+    bench.annotate("jobs", NJOBS as f64);
 
     if let Err(e) = bench.write_json("BENCH_serving.json") {
         eprintln!("could not write BENCH_serving.json: {e}");

@@ -1,0 +1,293 @@
+//! im2col streaming front-end: lower convolution layers to the
+//! shared-operand GEMMs the serving runtime batches.
+//!
+//! The paper's Table II treats each conv layer as one GEMM via im2col
+//! (Cong & Xiao, ref. 14) with `M` = output channels, `K` =
+//! `in_channels x kh x kw`, `N` = output pixels. Under batched
+//! inference every image of the batch multiplies the *same* filter
+//! matrix, so the natural serving shape is the shared-B batch of
+//! [`crate::coordinator::JobServer::submit_batched_gemm`]: one shared
+//! B, many A. This module does the lowering in that orientation:
+//!
+//! * an input feature map is a [`Matrix`] of `in_channels` rows x
+//!   `in_hw^2` columns (channel-major, row-major pixels within a
+//!   channel);
+//! * [`im2col_patches`] turns one image into the **patch-row matrix**
+//!   `A = N x K`: row `n` is output pixel `n`'s receptive field,
+//!   flattened `(channel, ky, kx)`-major — the transpose of the
+//!   column-per-pixel im2col, chosen so the *filter* lands on the B
+//!   side;
+//! * the shared operand is `B = filters^T` (`K x M`, from the Table II
+//!   `M x K` filter matrix), packed **once** per layer per batch by the
+//!   server; each sub-result `C_i = A_i x B` is `N x M` (pixel-major
+//!   feature map, one column per output channel).
+//!
+//! [`conv_direct`] is the audit-grade sliding-window oracle the GEMM
+//! lowering is tested against, and [`conv_batch_operands`] bundles a
+//! whole batch into the `(b, many_a)` pair the server consumes.
+//! Grouped convolutions (AlexNet's two-GPU split) call this per group
+//! with the group's channel slices, exactly like Table II lists the
+//! per-group GEMM.
+
+use crate::gemm::Matrix;
+
+use super::ConvShape;
+
+/// Flattened patch index of `(channel, ky, kx)` in a `K`-vector.
+#[inline]
+fn patch_idx(shape: &ConvShape, c: usize, ky: usize, kx: usize) -> usize {
+    (c * shape.kernel + ky) * shape.kernel + kx
+}
+
+/// im2col in patch-row orientation: `input` is one image
+/// (`in_channels x in_hw^2`, channel rows, pixels row-major); the
+/// result is `N x K` with `N = out_hw^2` output pixels and
+/// `K = in_channels * kernel^2`. Padding contributes exact zeros.
+///
+/// For grouped convolution pass the per-group channel slice and a
+/// `ConvShape` whose `in_channels`/`groups` describe that group (i.e.
+/// `groups = 1` on an already-sliced input).
+pub fn im2col_patches(input: &Matrix, shape: &ConvShape) -> Matrix {
+    let channels = shape.in_channels / shape.groups;
+    let hw = shape.in_hw;
+    assert_eq!(input.rows, channels, "input channel count mismatch");
+    assert_eq!(input.cols, hw * hw, "input spatial size mismatch");
+    let out = shape.out_hw();
+    let k = channels * shape.kernel * shape.kernel;
+    let mut patches = Matrix::zeros(out * out, k);
+    for oy in 0..out {
+        for ox in 0..out {
+            let row = oy * out + ox;
+            let base = row * k;
+            for c in 0..channels {
+                let chan = input.row(c);
+                for ky in 0..shape.kernel {
+                    // Input y of this kernel row; skip rows in the pad.
+                    let iy = (oy * shape.stride + ky) as isize - shape.pad as isize;
+                    if iy < 0 || iy as usize >= hw {
+                        continue;
+                    }
+                    for kx in 0..shape.kernel {
+                        let ix = (ox * shape.stride + kx) as isize - shape.pad as isize;
+                        if ix < 0 || ix as usize >= hw {
+                            continue;
+                        }
+                        patches.data[base + patch_idx(shape, c, ky, kx)] =
+                            chan[iy as usize * hw + ix as usize];
+                    }
+                }
+            }
+        }
+    }
+    patches
+}
+
+/// Direct sliding-window convolution — the oracle the im2col lowering
+/// is verified against. `filters` is the Table II `M x K` matrix
+/// (`M` output channels, rows flattened `(channel, ky, kx)`-major);
+/// the result is `M x N` (channel-major output feature map).
+pub fn conv_direct(input: &Matrix, filters: &Matrix, shape: &ConvShape) -> Matrix {
+    let channels = shape.in_channels / shape.groups;
+    let hw = shape.in_hw;
+    assert_eq!(input.rows, channels, "input channel count mismatch");
+    assert_eq!(input.cols, hw * hw, "input spatial size mismatch");
+    let k = channels * shape.kernel * shape.kernel;
+    assert_eq!(filters.cols, k, "filter K mismatch");
+    let out = shape.out_hw();
+    let mut result = Matrix::zeros(filters.rows, out * out);
+    for m in 0..filters.rows {
+        let w = filters.row(m);
+        for oy in 0..out {
+            for ox in 0..out {
+                let mut acc = 0.0f32;
+                for c in 0..channels {
+                    let chan = input.row(c);
+                    for ky in 0..shape.kernel {
+                        let iy = (oy * shape.stride + ky) as isize - shape.pad as isize;
+                        if iy < 0 || iy as usize >= hw {
+                            continue;
+                        }
+                        for kx in 0..shape.kernel {
+                            let ix = (ox * shape.stride + kx) as isize - shape.pad as isize;
+                            if ix < 0 || ix as usize >= hw {
+                                continue;
+                            }
+                            acc += w[patch_idx(shape, c, ky, kx)]
+                                * chan[iy as usize * hw + ix as usize];
+                        }
+                    }
+                }
+                result.data[m * out * out + oy * out + ox] = acc;
+            }
+        }
+    }
+    result
+}
+
+/// Lower a whole batch through one conv layer to the server's shared-B
+/// shape: `(b, many_a)` with `b = filters^T` (`K x M`, packed once) and
+/// `many_a[i]` = image `i`'s patch rows (`N x K`). Each sub-result
+/// `C_i = A_i x b` is the `N x M` pixel-major output feature map —
+/// `C_i^T` is what [`conv_direct`] returns for the same image.
+pub fn conv_batch_operands(
+    inputs: &[Matrix],
+    filters: &Matrix,
+    shape: &ConvShape,
+) -> (Matrix, Vec<Matrix>) {
+    let b = filters.transpose();
+    let many_a = inputs.iter().map(|img| im2col_patches(img, shape)).collect();
+    (b, many_a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::alexnet_conv_shapes;
+
+    /// A small conv layer exercising stride, padding, and multiple
+    /// channels at test-friendly sizes.
+    fn small_shape() -> ConvShape {
+        ConvShape {
+            in_channels: 3,
+            in_hw: 7,
+            out_channels: 4,
+            kernel: 3,
+            stride: 2,
+            pad: 1,
+            groups: 1,
+        }
+    }
+
+    #[test]
+    fn patch_matrix_has_table2_dims() {
+        let shape = small_shape();
+        let (m, k, n) = shape.gemm_dims();
+        let img = Matrix::random(shape.in_channels, shape.in_hw * shape.in_hw, 1);
+        let p = im2col_patches(&img, &shape);
+        assert_eq!((p.rows, p.cols), (n, k));
+        let filters = Matrix::random(shape.out_channels, k, 2);
+        assert_eq!(filters.rows, m);
+    }
+
+    #[test]
+    fn im2col_gemm_equals_direct_convolution() {
+        for (shape, seed) in [
+            (small_shape(), 10u64),
+            // No padding, stride 1: pure sliding window.
+            (
+                ConvShape {
+                    in_channels: 2,
+                    in_hw: 6,
+                    out_channels: 3,
+                    kernel: 3,
+                    stride: 1,
+                    pad: 0,
+                    groups: 1,
+                },
+                11,
+            ),
+            // Kernel 1 degenerates to a per-pixel channel mix.
+            (
+                ConvShape {
+                    in_channels: 4,
+                    in_hw: 5,
+                    out_channels: 2,
+                    kernel: 1,
+                    stride: 1,
+                    pad: 0,
+                    groups: 1,
+                },
+                12,
+            ),
+        ] {
+            let (m, k, n) = shape.gemm_dims();
+            let img = Matrix::random(shape.in_channels, shape.in_hw * shape.in_hw, seed);
+            let filters = Matrix::random(shape.out_channels, k, seed + 100);
+            let direct = conv_direct(&img, &filters, &shape);
+            assert_eq!((direct.rows, direct.cols), (m, n));
+            // Pixel-major GEMM orientation: patches x filters^T.
+            let gemm = im2col_patches(&img, &shape).matmul(&filters.transpose());
+            assert!(
+                gemm.transpose().allclose(&direct, 1e-4),
+                "lowering diverged for {shape:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn padded_border_patches_are_zero() {
+        let shape = ConvShape {
+            in_channels: 1,
+            in_hw: 3,
+            out_channels: 1,
+            kernel: 3,
+            stride: 1,
+            pad: 1,
+            groups: 1,
+        };
+        let img = Matrix::from_vec(1, 9, (1..=9).map(|v| v as f32).collect());
+        let p = im2col_patches(&img, &shape);
+        // Output pixel (0,0): the top row and left column of its patch
+        // hang into the pad and must be exact zeros.
+        let row = p.row(0);
+        assert_eq!(&row[0..3], &[0.0, 0.0, 0.0]);
+        assert_eq!(row[3], 0.0);
+        assert_eq!(row[4], 1.0); // image (0,0)
+        assert_eq!(row[8], 5.0); // image (1,1)
+    }
+
+    #[test]
+    fn grouped_conv_runs_per_group_slice() {
+        // A 2-group conv: each group sees half the input channels and
+        // produces half the output channels, exactly Table II's
+        // per-group GEMM.
+        let shape = ConvShape {
+            in_channels: 4,
+            in_hw: 5,
+            out_channels: 6,
+            kernel: 3,
+            stride: 1,
+            pad: 1,
+            groups: 2,
+        };
+        let (m, k, n) = shape.gemm_dims();
+        assert_eq!((m, k), (3, 2 * 9));
+        for g in 0..shape.groups {
+            let img = Matrix::random(shape.in_channels / shape.groups, 25, 30 + g as u64);
+            let filters = Matrix::random(m, k, 40 + g as u64);
+            let direct = conv_direct(&img, &filters, &shape);
+            let gemm = im2col_patches(&img, &shape).matmul(&filters.transpose());
+            assert_eq!((gemm.rows, gemm.cols), (n, m));
+            assert!(gemm.transpose().allclose(&direct, 1e-4));
+        }
+    }
+
+    #[test]
+    fn batch_operands_share_one_b() {
+        let shape = small_shape();
+        let (m, k, n) = shape.gemm_dims();
+        let imgs: Vec<Matrix> = (0..3)
+            .map(|i| Matrix::random(shape.in_channels, 49, 50 + i))
+            .collect();
+        let filters = Matrix::random(m, k, 60);
+        let (b, many_a) = conv_batch_operands(&imgs, &filters, &shape);
+        assert_eq!((b.rows, b.cols), (k, m));
+        assert_eq!(many_a.len(), 3);
+        for (img, a) in imgs.iter().zip(&many_a) {
+            assert_eq!((a.rows, a.cols), (n, k));
+            let direct = conv_direct(img, &filters, &shape);
+            assert!(a.matmul(&b).transpose().allclose(&direct, 1e-4));
+        }
+    }
+
+    #[test]
+    fn alexnet_conv_shapes_lower_to_table2_patch_dims() {
+        // The real workload's geometry: every Table II conv layer's
+        // per-group patch matrix has (N, K) matching the listed GEMM.
+        for (name, shape) in alexnet_conv_shapes() {
+            let l = crate::cnn::layer(name).unwrap();
+            let (m, k, n) = shape.gemm_dims();
+            assert_eq!((m, k, n), (l.m, l.k, l.n), "{name}");
+        }
+    }
+}

@@ -7,9 +7,12 @@
 //! and against the Python model's `ALEXNET_GEMM_SHAPES` (via the artifact
 //! manifest) so all three layers of the stack agree on the workload.
 //!
-//! [`schedule`] extends the per-layer view to whole-network scheduling
-//! with reconfiguration costs.
+//! [`im2col`] does the actual lowering (patch-row im2col, direct-conv
+//! oracle, shared-filter batch operands) and [`schedule`] extends the
+//! per-layer view to whole-network scheduling with reconfiguration
+//! costs and batched serving through the `JobServer`.
 
+pub mod im2col;
 pub mod schedule;
 
 
@@ -53,6 +56,14 @@ impl GemmLayer {
     pub fn flops(&self) -> u64 {
         2 * self.m as u64 * self.k as u64 * self.n as u64
     }
+
+    /// Is this a convolution layer (im2col-lowered, batched serving
+    /// shares the packed filter across images)? Table II's convention:
+    /// conv layers are named `conv*`, fully-connected ones `fc*` (the
+    /// FC batch is already folded into `M`).
+    pub fn is_conv(&self) -> bool {
+        self.name.starts_with("conv")
+    }
 }
 
 /// The eight AlexNet layers exactly as Table II lists them (`M*K*N`).
@@ -77,6 +88,13 @@ pub fn alexnet_layers() -> Vec<GemmLayer> {
 
 pub fn layer(name: &str) -> Option<GemmLayer> {
     alexnet_layers().into_iter().find(|l| l.name == name)
+}
+
+/// The conv geometry behind a Table II layer name, if it is one of the
+/// known AlexNet conv layers (the serving scheduler uses this to lower
+/// a conv layer through real im2col instead of synthetic operands).
+pub fn conv_shape(name: &str) -> Option<ConvShape> {
+    alexnet_conv_shapes().into_iter().find(|(n, _)| *n == name).map(|(_, s)| s)
 }
 
 /// The conv geometries the Table II GEMMs derive from.
@@ -178,5 +196,14 @@ mod tests {
     #[test]
     fn unknown_layer_is_none() {
         assert!(layer("conv9").is_none());
+    }
+
+    #[test]
+    fn conv_and_fc_layers_classified() {
+        assert!(layer("conv2").unwrap().is_conv());
+        assert!(!layer("fc6").unwrap().is_conv());
+        assert!(conv_shape("conv3").is_some());
+        assert!(conv_shape("fc6").is_none());
+        assert!(conv_shape("conv9").is_none());
     }
 }

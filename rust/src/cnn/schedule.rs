@@ -11,7 +11,11 @@
 //! [`schedule_network_served`] routes the same layer sequence through
 //! the serving runtime ([`crate::coordinator::JobServer`]) so a
 //! whole-network run is just another job stream — real numerics per
-//! layer, same schedule accounting.
+//! layer, same schedule accounting. Conv layers take the im2col
+//! streaming front-end: a batch of images becomes one shared-B GEMM
+//! group ([`crate::coordinator::JobServer::submit_batched_gemm`]) whose
+//! packed filter matrix is built once and shared across the whole
+//! batch.
 
 use crate::accelerator::{Accelerator, SimOptions};
 use crate::config::{HardwareConfig, RunConfig};
@@ -98,56 +102,102 @@ pub fn schedule_network(
     })
 }
 
-/// Run a whole network through the serving runtime: one [`GemmJob`] per
-/// layer (deterministic random operands seeded by layer index),
-/// submitted as a stream and folded into the same [`NetworkSchedule`]
-/// shape as [`schedule_network`] — compute times come from each job's
-/// simulation report, reconfiguration stalls from consecutive config
-/// changes in layer order.
+/// How one served layer is in flight: a lone ticket (FC / dense
+/// layers) or a shared-B batch group (conv layers — one packed filter,
+/// `batch` im2col'd images).
+enum LayerHandle {
+    Single(crate::coordinator::JobTicket),
+    Batched(crate::coordinator::JobGroup),
+}
+
+/// Run a whole network through the serving runtime and fold the results
+/// into the same [`NetworkSchedule`] shape as [`schedule_network`] —
+/// compute times come from each job's simulation report,
+/// reconfiguration stalls from consecutive config changes in layer
+/// order.
+///
+/// **Conv layers stream through the shared-operand pipeline**: each is
+/// lowered via im2col ([`super::im2col`]) to `batch` patch-row GEMMs
+/// that all multiply the *same* filter matrix, and submitted with
+/// [`JobServer::submit_batched_gemm`] so the packed filter (`B =
+/// filters^T`, `K x M`) is packed exactly once per layer regardless of
+/// the batch size — the pack-traffic win `Metrics::panels_shared`
+/// counts. Known Table II conv layers get real im2col'd operands
+/// (deterministic random images); a conv layer without a known
+/// geometry falls back to synthetic patch matrices of the same GEMM
+/// shape. A conv layer's `secs` is the summed simulated time of its
+/// whole batch. Fully-connected layers keep Table II's convention (the
+/// FC batch is already folded into `M`) and run as one job each.
 ///
 /// `Policy::PerLayerOptimal` leaves jobs unpinned, so the server picks
 /// per-layer configs (its `default_run` if set, else the DSE optimum —
-/// pass a server without a default to reproduce the DSE schedule).
+/// pass a server without a default to reproduce the DSE schedule);
+/// every image of a conv batch runs under one config by construction.
 pub fn schedule_network_served(
     server: &JobServer,
     layers: &[GemmLayer],
     policy: Policy,
     reconfig_secs: f64,
+    batch: usize,
 ) -> anyhow::Result<NetworkSchedule> {
     anyhow::ensure!(!layers.is_empty(), "empty layer sequence");
-    let mut tickets = Vec::with_capacity(layers.len());
+    anyhow::ensure!(batch >= 1, "batch must be >= 1");
+    let mut handles = Vec::with_capacity(layers.len());
     for (i, l) in layers.iter().enumerate() {
         let run = match policy {
             Policy::PerLayerOptimal => None,
             Policy::Fixed(run) => Some(run),
         };
         let seed = 0x5EED ^ ((i as u64) << 8);
-        let a = Matrix::random(l.m, l.k, seed);
-        let b = Matrix::random(l.k, l.n, seed + 1);
-        tickets.push(server.submit(GemmJob { id: i as u64, a, b, run })?);
+        if l.is_conv() {
+            let (b, many_a) = conv_batch(l, batch, seed);
+            handles.push(LayerHandle::Batched(server.submit_batched_gemm(b, many_a, run)?));
+        } else {
+            let a = Matrix::random(l.m, l.k, seed);
+            let b = Matrix::random(l.k, l.n, seed + 1);
+            handles.push(LayerHandle::Single(server.submit(GemmJob {
+                id: i as u64,
+                a,
+                b,
+                run,
+            })?));
+        }
     }
     let mut out = Vec::with_capacity(layers.len());
     let mut prev: Option<RunConfig> = None;
     let mut total = 0.0;
     let mut reconfigs = 0;
     let mut flops = 0u64;
-    for (l, t) in layers.iter().zip(tickets) {
-        let r = t.wait()?;
-        let reconfigured = prev.is_some_and(|p| p != r.run);
+    for (l, h) in layers.iter().zip(handles) {
+        // (config, layer compute seconds, layer FLOPs).
+        let (run, secs, layer_flops) = match h {
+            LayerHandle::Single(t) => {
+                let r = t.wait()?;
+                (r.run, r.sim.total_secs, l.flops())
+            }
+            LayerHandle::Batched(g) => {
+                let results = g.wait_all()?;
+                let run = results[0].run;
+                debug_assert!(results.iter().all(|r| r.run == run));
+                let secs: f64 = results.iter().map(|r| r.sim.total_secs).sum();
+                (run, secs, l.flops() * results.len() as u64)
+            }
+        };
+        let reconfigured = prev.is_some_and(|p| p != run);
         if reconfigured {
             reconfigs += 1;
             total += reconfig_secs;
         }
-        total += r.sim.total_secs;
-        flops += l.flops();
+        total += secs;
+        flops += layer_flops;
         out.push(ScheduledLayer {
             name: l.name,
-            run: r.run,
-            secs: r.sim.total_secs,
-            gflops: r.sim.gflops,
+            run,
+            secs,
+            gflops: layer_flops as f64 / secs / 1e9,
             reconfigured,
         });
-        prev = Some(r.run);
+        prev = Some(run);
     }
     Ok(NetworkSchedule {
         layers: out,
@@ -155,6 +205,33 @@ pub fn schedule_network_served(
         total_secs: total,
         total_gflops: flops as f64 / total / 1e9,
     })
+}
+
+/// Build one conv layer's shared-B batch operands: real im2col over
+/// deterministic random images when the layer's geometry is known
+/// (Table II's conv1..conv5, per-group), synthetic patch matrices of
+/// the same `(N, K)` shape otherwise. Either way B is `K x M` — the
+/// transposed filter the whole batch shares.
+fn conv_batch(l: &GemmLayer, batch: usize, seed: u64) -> (Matrix, Vec<Matrix>) {
+    match crate::cnn::conv_shape(l.name) {
+        Some(shape) => {
+            let channels = shape.in_channels / shape.groups;
+            let imgs: Vec<Matrix> = (0..batch)
+                .map(|i| {
+                    Matrix::random(channels, shape.in_hw * shape.in_hw, seed + 2 + i as u64)
+                })
+                .collect();
+            let filters = Matrix::random(l.m, l.k, seed + 1);
+            super::im2col::conv_batch_operands(&imgs, &filters, &shape)
+        }
+        None => {
+            // Pre-extracted patch stream of the layer's GEMM shape.
+            let b = Matrix::random(l.k, l.m, seed + 1);
+            let many_a =
+                (0..batch).map(|i| Matrix::random(l.n, l.k, seed + 2 + i as u64)).collect();
+            (b, many_a)
+        }
+    }
 }
 
 /// The best single configuration for the whole network: evaluate every
@@ -282,7 +359,7 @@ mod tests {
         ];
         let run = RunConfig::square(2, 32);
         let served =
-            schedule_network_served(&srv, &layers, Policy::Fixed(run), 1.0).unwrap();
+            schedule_network_served(&srv, &layers, Policy::Fixed(run), 1.0, 1).unwrap();
         let simulated =
             schedule_network(&hw, &acc, &layers, Policy::Fixed(run), 1.0).unwrap();
         assert_eq!(served.reconfigs, 0);
@@ -301,7 +378,86 @@ mod tests {
             ServerConfig { workers: 2, ..ServerConfig::default() },
         )
         .unwrap();
-        assert!(schedule_network_served(&srv, &[], Policy::PerLayerOptimal, 0.0).is_err());
+        assert!(
+            schedule_network_served(&srv, &[], Policy::PerLayerOptimal, 0.0, 1).is_err()
+        );
+        let one = vec![GemmLayer { name: "l0", m: 16, k: 8, n: 16 }];
+        assert!(
+            schedule_network_served(&srv, &one, Policy::PerLayerOptimal, 0.0, 0).is_err(),
+            "batch 0 is degenerate"
+        );
+    }
+
+    #[test]
+    fn served_conv_batch_packs_filter_once() {
+        // A small conv net with an unknown-geometry conv layer (synthetic
+        // patches) and a known one would be AlexNet-sized; use a dense
+        // follower to exercise the mixed conv/FC fold. The conv layer's
+        // shared B must be packed exactly once for the whole batch.
+        use crate::coordinator::{NumericsEngine, ServerConfig};
+        let (hw, _) = setup();
+        let srv = JobServer::new(
+            hw,
+            NumericsEngine::golden(),
+            ServerConfig {
+                workers: 4,
+                queue_capacity: 16,
+                batch_max_tasks: 0,
+                batch_window: 1,
+                cross_job_stealing: true,
+                default_run: None,
+            },
+        )
+        .unwrap();
+        let layers = vec![
+            GemmLayer { name: "convX", m: 12, k: 18, n: 36 },
+            GemmLayer { name: "fcX", m: 16, k: 12, n: 20 },
+        ];
+        let run = RunConfig::square(2, 16);
+        let batch = 4;
+        let s =
+            schedule_network_served(&srv, &layers, Policy::Fixed(run), 0.0, batch).unwrap();
+        assert_eq!(s.layers.len(), 2);
+        assert!(s.layers.iter().all(|l| l.run == run));
+        let m = srv.metrics();
+        // Layer 0: one shared-B group, B packed once, batch-1 packs
+        // avoided. Layer 1: a lone dense job (one more A and B pack).
+        assert_eq!(m.shared_b_groups(), 1);
+        assert_eq!(m.b_panel_packs(), 2, "conv batch must pack its filter exactly once");
+        assert_eq!(m.panels_shared(), batch as u64 - 1);
+        assert_eq!(m.a_panel_packs(), batch as u64 + 1);
+        assert_eq!(m.jobs(), batch as u64 + 1);
+    }
+
+    #[test]
+    fn served_known_conv_layer_runs_real_im2col() {
+        // conv3 (the smallest Table II conv GEMM) through the served
+        // path with real im2col lowering: the layer completes, carries
+        // the batch's summed time, and shares one packed filter.
+        use crate::coordinator::{NumericsEngine, ServerConfig};
+        let (hw, _) = setup();
+        let srv = JobServer::new(
+            hw,
+            NumericsEngine::golden(),
+            ServerConfig {
+                workers: 4,
+                queue_capacity: 8,
+                batch_max_tasks: 0,
+                batch_window: 1,
+                cross_job_stealing: true,
+                default_run: None,
+            },
+        )
+        .unwrap();
+        let layers = vec![crate::cnn::layer("conv3").unwrap()];
+        let run = RunConfig::square(4, 64);
+        let s = schedule_network_served(&srv, &layers, Policy::Fixed(run), 0.0, 2).unwrap();
+        assert_eq!(s.reconfigs, 0);
+        assert!(s.layers[0].secs > 0.0);
+        let m = srv.metrics();
+        assert_eq!(m.b_panel_packs(), 1);
+        assert_eq!(m.panels_shared(), 1);
+        assert_eq!(m.jobs(), 2);
     }
 
     #[test]

@@ -32,6 +32,20 @@ pub struct Metrics {
     /// backend pays 2 per task (SA and SB gathers). The hotpath tests
     /// assert on it.
     panel_copies: AtomicU64,
+    /// Whole-operand A pack operations performed ([`crate::gemm::PackedA`]
+    /// built). One per sub-job on the in-process path.
+    a_panel_packs: AtomicU64,
+    /// Whole-operand B pack operations performed ([`crate::gemm::PackedB`]
+    /// built). A shared-B batch performs exactly one regardless of its
+    /// sub-job count — the conservation the batched tests assert.
+    b_panel_packs: AtomicU64,
+    /// Sub-jobs served from an *already-packed* shared operand instead
+    /// of packing their own — each increment is one whole-operand pack
+    /// avoided (the sharing win `submit_batched_gemm` exists for).
+    panels_shared: AtomicU64,
+    /// Shared-B batch groups dispatched (one per
+    /// `submit_batched_gemm` call that reached activation).
+    shared_b_groups: AtomicU64,
     latencies: Mutex<LatencyAgg>,
 }
 
@@ -83,6 +97,22 @@ impl Metrics {
         self.panel_copies.fetch_add(n, Ordering::Relaxed);
     }
 
+    pub fn add_a_panel_packs(&self, n: u64) {
+        self.a_panel_packs.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_b_panel_packs(&self, n: u64) {
+        self.b_panel_packs.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_panels_shared(&self, n: u64) {
+        self.panels_shared.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_shared_b_groups(&self, n: u64) {
+        self.shared_b_groups.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn job_done(&self, host_secs: f64, sim_secs: f64) {
         self.jobs.fetch_add(1, Ordering::Relaxed);
         let mut l = self.latencies.lock().unwrap();
@@ -132,6 +162,22 @@ impl Metrics {
 
     pub fn panel_copies(&self) -> u64 {
         self.panel_copies.load(Ordering::Relaxed)
+    }
+
+    pub fn a_panel_packs(&self) -> u64 {
+        self.a_panel_packs.load(Ordering::Relaxed)
+    }
+
+    pub fn b_panel_packs(&self) -> u64 {
+        self.b_panel_packs.load(Ordering::Relaxed)
+    }
+
+    pub fn panels_shared(&self) -> u64 {
+        self.panels_shared.load(Ordering::Relaxed)
+    }
+
+    pub fn shared_b_groups(&self) -> u64 {
+        self.shared_b_groups.load(Ordering::Relaxed)
     }
 
     /// (mean, max) host latency in seconds.
@@ -186,7 +232,8 @@ impl Metrics {
         let (mean, max) = self.host_latency();
         format!(
             "jobs={} (failed={}, batched={}) tasks={} steals={} (cross-job={}) \
-             panel_copies={} host_lat(mean/p95/max)={:.3}s/{:.3}s/{:.3}s sim(mean)={:.6}s",
+             panel_copies={} packs(a/b)={}/{} panels_shared={} \
+             host_lat(mean/p95/max)={:.3}s/{:.3}s/{:.3}s sim(mean)={:.6}s",
             self.jobs(),
             self.jobs_failed(),
             self.batched_jobs(),
@@ -194,6 +241,9 @@ impl Metrics {
             self.steals(),
             self.cross_job_steals(),
             self.panel_copies(),
+            self.a_panel_packs(),
+            self.b_panel_packs(),
+            self.panels_shared(),
             mean,
             self.host_latency_percentile(0.95),
             max,
@@ -215,6 +265,10 @@ mod tests {
         m.add_cross_job_steals(2);
         m.add_batched_jobs(4);
         m.add_panel_copies(2);
+        m.add_a_panel_packs(5);
+        m.add_b_panel_packs(1);
+        m.add_panels_shared(4);
+        m.add_shared_b_groups(1);
         m.job_done(0.5, 0.001);
         m.job_done(1.5, 0.003);
         m.job_failed();
@@ -223,6 +277,10 @@ mod tests {
         assert_eq!(m.cross_job_steals(), 2);
         assert_eq!(m.batched_jobs(), 4);
         assert_eq!(m.panel_copies(), 2);
+        assert_eq!(m.a_panel_packs(), 5);
+        assert_eq!(m.b_panel_packs(), 1);
+        assert_eq!(m.panels_shared(), 4);
+        assert_eq!(m.shared_b_groups(), 1);
         assert_eq!(m.jobs(), 2);
         assert_eq!(m.jobs_failed(), 1);
         let (mean, max) = m.host_latency();

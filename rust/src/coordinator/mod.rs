@@ -7,8 +7,13 @@
 //! zero-copy end to end:
 //!
 //! * both operand panel sets are packed **once per job** into
-//!   [`crate::gemm::PackedPanels`] (A panels transposed, the MAC's
-//!   layout fix) instead of once per task;
+//!   refcounted halves ([`crate::gemm::PackedA`] /
+//!   [`crate::gemm::PackedB`], composed as
+//!   [`crate::gemm::PackedPanels`]; A panels transposed, the MAC's
+//!   layout fix) instead of once per task — and at most once per
+//!   *batch*: a shared-B workload
+//!   ([`server::JobServer::submit_batched_gemm`]) packs B once and
+//!   shares the `Arc<PackedB>` across every sub-job;
 //! * workers pop/steal from a shared [`crate::wqm::AtomicWqm`] — one CAS
 //!   per claim on a packed `head|tail` word, no `Mutex<Wqm>`;
 //! * each worker runs the register-blocked microkernel over the packed
@@ -93,7 +98,22 @@ pub(crate) fn choose_run(
     job: &GemmJob,
     default_run: Option<RunConfig>,
 ) -> anyhow::Result<RunConfig> {
-    if let Some(run) = job.run {
+    choose_run_dims(hw, surface, job.a.rows, job.a.cols, job.b.cols, job.run, default_run)
+}
+
+/// Dims-based core of [`choose_run`] — the single copy of the
+/// pin → default → DSE cascade, also used by the server's shared-B
+/// batch planning (which picks one config for many sub-problems).
+pub(crate) fn choose_run_dims(
+    hw: &HardwareConfig,
+    surface: &crate::analytical::BandwidthSurface,
+    m: usize,
+    k: usize,
+    n: usize,
+    pinned: Option<RunConfig>,
+    default_run: Option<RunConfig>,
+) -> anyhow::Result<RunConfig> {
+    if let Some(run) = pinned {
         run.validate(hw)?;
         return Ok(run);
     }
@@ -101,7 +121,7 @@ pub(crate) fn choose_run(
         run.validate(hw)?;
         return Ok(run);
     }
-    let e = dse::explore(hw, job.a.rows, job.a.cols, job.b.cols, surface)?;
+    let e = dse::explore(hw, m, k, n, surface)?;
     Ok(e.best.run)
 }
 
@@ -156,6 +176,8 @@ impl Coordinator {
         // channel-fed PJRT backend gathers per task instead, so skip the
         // pack there.
         let packed = if self.engine.is_inprocess() {
+            self.metrics.add_a_panel_packs(1);
+            self.metrics.add_b_panel_packs(1);
             Some(PackedPanels::pack(a.view(), b.view(), &plan))
         } else {
             None

@@ -24,7 +24,16 @@
 //!   their tasks share a single WQM and fan out to per-sub-job
 //!   [`DisjointBlocks`] writers, so tiny GEMMs amortize scheduling and
 //!   still produce bit-identical results to individually-run ones
-//!   (same panels, same microkernel, same accumulation order).
+//!   (same panels, same microkernel, same accumulation order);
+//! * **shared-operand batches** ([`JobServer::submit_batched_gemm`]):
+//!   N GEMMs against one B — the CNN-inference shape, where every
+//!   image of a batch multiplies the same packed filter matrix — are
+//!   dispatched as one super-job whose sub-jobs all hold the *same*
+//!   `Arc<PackedB>`. B is packed exactly once (tracked by
+//!   `Metrics::b_panel_packs`; the N-1 avoided packs land in
+//!   `Metrics::panels_shared`), and because an operand's packed layout
+//!   depends only on its own shape and block size, every sub-result is
+//!   bit-identical to an individual submission.
 //!
 //! Completion is counter-driven: the worker that finishes a job's last
 //! task assembles the result, runs the timing simulation, records
@@ -41,12 +50,12 @@ use std::time::Instant;
 use crate::accelerator::{Accelerator, SimOptions};
 use crate::blocking::{BlockPlan, BlockTask};
 use crate::config::{HardwareConfig, RunConfig};
-use crate::gemm::{DisjointBlocks, Matrix, PackedPanels};
+use crate::gemm::{DisjointBlocks, Matrix, PackedA, PackedB, PackedPanels};
 use crate::wqm::{AtomicWqm, JobRegistry};
 
 use super::engine::NumericsEngine;
 use super::metrics::Metrics;
-use super::{choose_run, GemmJob, JobResult};
+use super::{choose_run, choose_run_dims, GemmJob, JobResult};
 
 /// Serving-runtime knobs.
 #[derive(Debug, Clone)]
@@ -184,6 +193,18 @@ pub struct ServerStats {
     pub steals: u64,
     pub cross_job_steals: u64,
     pub batched_jobs: u64,
+    /// Shared-B batch groups dispatched via
+    /// [`JobServer::submit_batched_gemm`].
+    pub shared_b_groups: u64,
+    /// Per-task operand gathers on the numerics path (0 on the packed
+    /// golden path; 2/task on the channel-fed PJRT backend).
+    pub panel_copies: u64,
+    /// Whole-operand packs performed (A side / B side).
+    pub a_panel_packs: u64,
+    pub b_panel_packs: u64,
+    /// Whole-operand packs *avoided* by sharing an already-packed B
+    /// across a batch — the figure `submit_batched_gemm` exists to grow.
+    pub panels_shared: u64,
     pub uptime_secs: f64,
     pub throughput_jobs_per_sec: f64,
     pub latency_mean_secs: f64,
@@ -201,14 +222,21 @@ impl std::fmt::Display for ServerStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "jobs={} (failed={}, batched={}) tasks={} steals={} (cross-job={}) \
-             {:.1} jobs/s lat(p50/p95/p99)={:.4}s/{:.4}s/{:.4}s idle={:.1}%",
+            "jobs={} (failed={}, batched={}, shared-b groups={}) tasks={} \
+             steals={} (cross-job={}) packs(a/b)={}/{} panels_shared={} \
+             panel_copies={} {:.1} jobs/s \
+             lat(p50/p95/p99)={:.4}s/{:.4}s/{:.4}s idle={:.1}%",
             self.jobs,
             self.jobs_failed,
             self.batched_jobs,
+            self.shared_b_groups,
             self.tasks,
             self.steals,
             self.cross_job_steals,
+            self.a_panel_packs,
+            self.b_panel_packs,
+            self.panels_shared,
+            self.panel_copies,
             self.throughput_jobs_per_sec,
             self.latency_p50_secs,
             self.latency_p95_secs,
@@ -247,9 +275,14 @@ struct SubJob {
     id: u64,
     run: RunConfig,
     a: Matrix,
-    b: Matrix,
-    /// Packed once at admission for in-process engines; `None` for the
-    /// channel-fed PJRT backend (it gathers per task).
+    /// Refcounted so a shared-B batch holds one B across all sub-jobs
+    /// (the gather-fallback path reads it per task; lone jobs just wrap
+    /// their own B).
+    b: Arc<Matrix>,
+    /// Packed once at dispatch for in-process engines; `None` for the
+    /// channel-fed PJRT backend (it gathers per task). The packed B
+    /// half inside is an `Arc<PackedB>` — one pack feeds every sub-job
+    /// of a shared-B batch.
     panels: Option<PackedPanels>,
     /// C's owned storage; taken by the finalizing worker.
     out: Mutex<Option<Matrix>>,
@@ -319,11 +352,31 @@ struct Submission {
     accepted_at: Instant,
 }
 
-/// Admission-queue element: a lone job, or an explicit group (from
-/// [`JobServer::submit_batch`]) the dispatcher coalesces as a unit.
+/// One sub-request of a shared-B batch: its own A, its own reply — B
+/// lives once on the enclosing [`SharedBatch`].
+struct SharedSub {
+    id: u64,
+    a: Matrix,
+    reply: mpsc::Sender<anyhow::Result<JobResult>>,
+    accepted_at: Instant,
+}
+
+/// An admitted [`JobServer::submit_batched_gemm`] call: one B shared by
+/// every sub-request, dispatched as a single super-job that packs B
+/// exactly once.
+struct SharedBatch {
+    b: Arc<Matrix>,
+    run: Option<RunConfig>,
+    subs: Vec<SharedSub>,
+}
+
+/// Admission-queue element: a lone job, an explicit group (from
+/// [`JobServer::submit_batch`]) the dispatcher coalesces as a unit, or
+/// a shared-B batch.
 enum QueueItem {
     One(Submission),
     Group(Vec<Submission>),
+    SharedB(SharedBatch),
 }
 
 impl QueueItem {
@@ -331,6 +384,7 @@ impl QueueItem {
         match self {
             QueueItem::One(_) => 1,
             QueueItem::Group(g) => g.len(),
+            QueueItem::SharedB(b) => b.subs.len(),
         }
     }
 }
@@ -602,6 +656,41 @@ impl JobServer {
         Ok(JobGroup { tickets: self.submit_batch(jobs)? })
     }
 
+    /// Submit a shared-operand batch: `many_a[i] x b` for every A, with
+    /// B packed **exactly once** and its `Arc<PackedB>` shared by all
+    /// sub-jobs (CNN inference's shape: one filter matrix, a batch of
+    /// im2col'd images). The whole batch is one admission unit and one
+    /// dispatched super-job; every sub-job runs with the same block
+    /// configuration (`run`, else the server default, else the DSE
+    /// optimum for the largest sub-problem — valid for all since K and
+    /// N are shared). Results come back in `many_a` order with
+    /// `JobResult::id` = the A's index, and are bit-identical to
+    /// submitting each pair individually: the packed layout of an
+    /// operand depends only on its own shape and block size, and each
+    /// C element accumulates in ascending-k order regardless of
+    /// batching. Blocks under backpressure like [`JobServer::submit`].
+    pub fn submit_batched_gemm(
+        &self,
+        b: Matrix,
+        many_a: Vec<Matrix>,
+        run: Option<RunConfig>,
+    ) -> anyhow::Result<JobGroup> {
+        anyhow::ensure!(!many_a.is_empty(), "empty shared-B batch");
+        let now = Instant::now();
+        let mut tickets = Vec::with_capacity(many_a.len());
+        let mut subs = Vec::with_capacity(many_a.len());
+        for (i, a) in many_a.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            tickets.push(JobTicket { id: i as u64, rx });
+            subs.push(SharedSub { id: i as u64, a, reply: tx, accepted_at: now });
+        }
+        let item = QueueItem::SharedB(SharedBatch { b: Arc::new(b), run, subs });
+        match self.admission.push_blocking(item) {
+            Ok(()) => Ok(JobGroup { tickets }),
+            Err(_) => Err(anyhow::anyhow!("server closed; shared-B batch rejected")),
+        }
+    }
+
     pub fn metrics(&self) -> Arc<Metrics> {
         self.shared.metrics.clone()
     }
@@ -643,6 +732,11 @@ impl JobServer {
             steals: m.steals(),
             cross_job_steals: m.cross_job_steals(),
             batched_jobs: m.batched_jobs(),
+            shared_b_groups: m.shared_b_groups(),
+            panel_copies: m.panel_copies(),
+            a_panel_packs: m.a_panel_packs(),
+            b_panel_packs: m.b_panel_packs(),
+            panels_shared: m.panels_shared(),
             uptime_secs: uptime,
             throughput_jobs_per_sec: if uptime > 0.0 { m.jobs() as f64 / uptime } else { 0.0 },
             latency_mean_secs: mean,
@@ -741,16 +835,7 @@ fn plan_one(shared: &Shared, s: Submission) -> Option<Planned> {
 /// workers)` active jobs, not by the arrival rate.
 fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
     debug_assert!(!planned.is_empty());
-    let inflight_bound = shared.cfg.queue_capacity.max(shared.cfg.workers);
-    loop {
-        let seen = shared.gate.current();
-        if shared.inflight.load(Ordering::Acquire) < inflight_bound {
-            break;
-        }
-        // Job retirement bumps the gate; workers drain independently of
-        // the dispatcher, so this always makes progress.
-        shared.gate.wait_past(seen);
-    }
+    wait_for_inflight_slot(shared);
     let batched = planned.len() > 1;
     if batched {
         shared.metrics.add_batched_jobs(planned.len() as u64);
@@ -762,31 +847,79 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
             tasks.push(SubTask { sub: i as u32, task });
         }
         let a = p.sub.job.a;
-        let b = p.sub.job.b;
+        let b = Arc::new(p.sub.job.b);
         let panels = if shared.engine.is_inprocess() {
+            shared.metrics.add_a_panel_packs(1);
+            shared.metrics.add_b_panel_packs(1);
             Some(PackedPanels::pack(a.view(), b.view(), &p.plan))
         } else {
             None
         };
-        let mut c = Matrix::zeros(a.rows, b.cols);
-        let raw = RawOut { ptr: c.data.as_mut_ptr(), rows: c.rows, cols: c.cols };
-        subs.push(SubJob {
-            id: p.sub.job.id,
-            run: p.run,
+        subs.push(build_sub(
+            p.sub.job.id,
+            p.run,
             a,
             b,
             panels,
-            pending: AtomicUsize::new(p.plan.num_tasks()),
-            out: Mutex::new(Some(c)),
-            raw,
-            error: Mutex::new(None),
-            reply: Mutex::new(Some(p.sub.reply)),
-            accepted_at: p.sub.accepted_at,
+            p.plan.num_tasks(),
+            p.sub.reply,
+            p.sub.accepted_at,
             batched,
-        });
+        ));
     }
-    // Round-robin the combined task set over the pool's queues — the
-    // same initial static partition a single job's WQM gets.
+    publish(shared, subs, tasks);
+}
+
+/// Block while the in-flight bound is reached. Job retirement bumps the
+/// gate; workers drain independently of the dispatcher, so this always
+/// makes progress.
+fn wait_for_inflight_slot(shared: &Shared) {
+    let inflight_bound = shared.cfg.queue_capacity.max(shared.cfg.workers);
+    loop {
+        let seen = shared.gate.current();
+        if shared.inflight.load(Ordering::Acquire) < inflight_bound {
+            break;
+        }
+        shared.gate.wait_past(seen);
+    }
+}
+
+/// Assemble one [`SubJob`] with its owned C storage and raw writer
+/// handle (shared by the plain and shared-B activation paths).
+#[allow(clippy::too_many_arguments)]
+fn build_sub(
+    id: u64,
+    run: RunConfig,
+    a: Matrix,
+    b: Arc<Matrix>,
+    panels: Option<PackedPanels>,
+    num_tasks: usize,
+    reply: mpsc::Sender<anyhow::Result<JobResult>>,
+    accepted_at: Instant,
+    batched: bool,
+) -> SubJob {
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    let raw = RawOut { ptr: c.data.as_mut_ptr(), rows: c.rows, cols: c.cols };
+    SubJob {
+        id,
+        run,
+        a,
+        b,
+        panels,
+        pending: AtomicUsize::new(num_tasks),
+        out: Mutex::new(Some(c)),
+        raw,
+        error: Mutex::new(None),
+        reply: Mutex::new(Some(reply)),
+        accepted_at,
+        batched,
+    }
+}
+
+/// Register one active (super-)job: round-robin the combined task set
+/// over the pool's queues — the same initial static partition a single
+/// job's WQM gets — and wake the workers.
+fn publish(shared: &Arc<Shared>, subs: Vec<SubJob>, tasks: Vec<SubTask>) {
     let mut partition: Vec<Vec<SubTask>> = vec![Vec::new(); shared.cfg.workers];
     for (i, st) in tasks.into_iter().enumerate() {
         partition[i % shared.cfg.workers].push(st);
@@ -821,6 +954,7 @@ fn dispatcher_loop(shared: Arc<Shared>, admission: Arc<Admission>) {
         };
         match item {
             Carry::Fresh(QueueItem::Group(group)) => dispatch_group(&shared, group),
+            Carry::Fresh(QueueItem::SharedB(batch)) => dispatch_shared_b(&shared, batch),
             Carry::Fresh(QueueItem::One(s)) => {
                 if let Some(p) = plan_one(&shared, s) {
                     dispatch_single(&shared, &admission, p, &mut carry);
@@ -857,8 +991,10 @@ fn dispatch_single(
                 }
                 None => {}
             },
-            Some(group @ QueueItem::Group(_)) => {
-                *carry = Some(Carry::Fresh(group));
+            // An explicit group or shared-B batch ends the coalescing
+            // run; it is dispatched as its own unit next iteration.
+            Some(other) => {
+                *carry = Some(Carry::Fresh(other));
                 break;
             }
             None => break,
@@ -886,6 +1022,126 @@ fn dispatch_group(shared: &Arc<Shared>, group: Vec<Submission>) {
     if !smalls.is_empty() {
         activate(shared, smalls);
     }
+}
+
+/// Choose the one run configuration a shared-B batch executes under:
+/// the usual pin → server-default → DSE cascade ([`choose_run_dims`],
+/// the same policy individual jobs plan with), evaluated for the
+/// *largest* sub-problem — every sub shares K and N, so a feasible
+/// config for the largest M is feasible for all.
+fn choose_shared_run(
+    shared: &Shared,
+    b: &Matrix,
+    subs: &[SharedSub],
+    run: Option<RunConfig>,
+) -> anyhow::Result<RunConfig> {
+    let m = subs.iter().map(|s| s.a.rows).max().expect("non-empty batch");
+    choose_run_dims(
+        &shared.hw,
+        shared.accelerator.surface(),
+        m,
+        b.rows,
+        b.cols,
+        run,
+        shared.cfg.default_run,
+    )
+}
+
+/// Dispatch a shared-B batch as one super-job: validate every sub
+/// against the shared B (mismatches are rejected individually through
+/// their tickets), choose one run config, pack B **once** into an
+/// `Arc<PackedB>`, pack a private [`PackedA`] per surviving sub, and
+/// publish the combined task grid. `Metrics::b_panel_packs` counts the
+/// single pack and `Metrics::panels_shared` the packs the sharing
+/// avoided.
+fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
+    let SharedBatch { b, run, subs } = batch;
+    // A degenerate B rejects every sub.
+    if b.rows == 0 || b.cols == 0 {
+        for s in subs {
+            shared.metrics.job_failed();
+            let _ = s.reply.send(Err(anyhow::anyhow!(
+                "shared-B batch rejected: degenerate B {}x{}",
+                b.rows,
+                b.cols
+            )));
+        }
+        return;
+    }
+    // Per-sub validation first (a mismatched A fails alone, not the
+    // batch), so run selection below only ever sees valid shapes.
+    let mut accepted = Vec::with_capacity(subs.len());
+    for s in subs {
+        if s.a.cols != b.rows || s.a.rows == 0 {
+            shared.metrics.job_failed();
+            let _ = s.reply.send(Err(anyhow::anyhow!(
+                "sub-job {}: A is {}x{} against shared B {}x{}",
+                s.id,
+                s.a.rows,
+                s.a.cols,
+                b.rows,
+                b.cols
+            )));
+        } else {
+            accepted.push(s);
+        }
+    }
+    if accepted.is_empty() {
+        return;
+    }
+    // One config for the whole batch; failure (bad pin, DSE error)
+    // rejects every surviving sub.
+    let run = match choose_shared_run(shared, &b, &accepted, run) {
+        Ok(r) => r,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for s in accepted {
+                shared.metrics.job_failed();
+                let _ = s.reply.send(Err(anyhow::anyhow!("shared-B batch rejected: {msg}")));
+            }
+            return;
+        }
+    };
+    wait_for_inflight_slot(shared);
+
+    let batched = accepted.len() > 1;
+    if batched {
+        shared.metrics.add_batched_jobs(accepted.len() as u64);
+    }
+    shared.metrics.add_shared_b_groups(1);
+    // Pack the shared half exactly once; every sub-job below clones the
+    // Arc, not the panels.
+    let packed_b = if shared.engine.is_inprocess() {
+        shared.metrics.add_b_panel_packs(1);
+        shared.metrics.add_panels_shared(accepted.len() as u64 - 1);
+        Some(Arc::new(PackedB::pack(b.view(), run.sj)))
+    } else {
+        None
+    };
+    let mut subs_built = Vec::with_capacity(accepted.len());
+    let mut tasks: Vec<SubTask> = Vec::new();
+    for (i, s) in accepted.into_iter().enumerate() {
+        let plan = BlockPlan::new(s.a.rows, s.a.cols, b.cols, run.si, run.sj);
+        for task in plan.tasks() {
+            tasks.push(SubTask { sub: i as u32, task });
+        }
+        let panels = packed_b.as_ref().map(|pb| {
+            shared.metrics.add_a_panel_packs(1);
+            PackedPanels::from_parts(Arc::new(PackedA::pack(s.a.view(), run.si)), pb.clone())
+        });
+        subs_built.push(build_sub(
+            s.id,
+            run,
+            s.a,
+            b.clone(),
+            panels,
+            plan.num_tasks(),
+            s.reply,
+            s.accepted_at,
+            batched,
+        ));
+    }
+    publish(shared, subs_built, tasks);
 }
 
 fn worker_loop(shared: Arc<Shared>, w: usize) {
@@ -1305,6 +1561,117 @@ mod tests {
         assert!(s.latency_p95_secs <= s.latency_p99_secs);
         assert!((0.0..=1.0).contains(&s.worker_idle_frac));
         assert!(s.to_string().contains("jobs=5"));
+    }
+
+    #[test]
+    fn batched_gemm_shares_one_b_pack() {
+        let srv = server(small_cfg());
+        let b = Matrix::random(16, 24, 900);
+        let many_a: Vec<Matrix> =
+            (0..5u64).map(|i| Matrix::random(20, 16, 910 + i)).collect();
+        let wants: Vec<Matrix> = many_a.iter().map(|a| a.matmul(&b)).collect();
+        let group = srv
+            .submit_batched_gemm(b, many_a, Some(RunConfig::square(2, 16)))
+            .unwrap();
+        let results = group.wait_all().unwrap();
+        assert_eq!(results.len(), 5);
+        for (i, (r, want)) in results.iter().zip(&wants).enumerate() {
+            assert_eq!(r.id, i as u64, "results in many_a order");
+            assert!(r.batched, "shared-B sub-jobs run as one super-job");
+            assert!(r.c.allclose(want, 1e-4));
+        }
+        // The conservation the whole refactor exists for: one B pack,
+        // four avoided, five A packs, and it is all visible in stats().
+        let s = srv.stats();
+        assert_eq!(s.b_panel_packs, 1, "shared B must be packed exactly once");
+        assert_eq!(s.panels_shared, 4);
+        assert_eq!(s.a_panel_packs, 5);
+        assert_eq!(s.shared_b_groups, 1);
+        assert_eq!(s.batched_jobs, 5);
+        assert_eq!(s.panel_copies, 0, "golden path stays gather-free");
+        assert!(s.to_string().contains("shared-b groups=1"));
+    }
+
+    #[test]
+    fn batched_gemm_single_a_is_a_plain_job() {
+        let srv = server(small_cfg());
+        let b = Matrix::random(12, 20, 920);
+        let a = Matrix::random(16, 12, 921);
+        let want = a.matmul(&b);
+        let results = srv
+            .submit_batched_gemm(b, vec![a], Some(RunConfig::square(2, 16)))
+            .unwrap()
+            .wait_all()
+            .unwrap();
+        assert_eq!(results.len(), 1);
+        assert!(!results[0].batched, "a batch of one is not a super-job");
+        assert!(results[0].c.allclose(&want, 1e-4));
+        let s = srv.stats();
+        assert_eq!((s.b_panel_packs, s.panels_shared), (1, 0));
+        assert_eq!(s.shared_b_groups, 1);
+    }
+
+    #[test]
+    fn batched_gemm_rejects_mismatched_sub_alone() {
+        let srv = server(small_cfg());
+        let b = Matrix::random(16, 16, 930);
+        let good = Matrix::random(8, 16, 931);
+        let bad = Matrix::random(8, 9, 932); // contraction mismatch
+        let want = good.matmul(&b);
+        let group = srv
+            .submit_batched_gemm(b, vec![good, bad], Some(RunConfig::square(2, 16)))
+            .unwrap();
+        let mut tickets = group.into_tickets().into_iter();
+        let ok = tickets.next().unwrap().wait().unwrap();
+        assert!(ok.c.allclose(&want, 1e-4));
+        assert!(tickets.next().unwrap().wait().is_err());
+        assert_eq!(srv.metrics().jobs_failed(), 1);
+    }
+
+    #[test]
+    fn batched_gemm_empty_and_degenerate_rejected() {
+        let srv = server(small_cfg());
+        assert!(srv
+            .submit_batched_gemm(Matrix::random(4, 4, 940), vec![], None)
+            .is_err());
+        // Degenerate B fails every sub through its ticket, and the
+        // dispatcher survives.
+        let group = srv
+            .submit_batched_gemm(
+                Matrix::zeros(0, 0),
+                vec![Matrix::random(4, 4, 941)],
+                None,
+            )
+            .unwrap();
+        assert!(group.wait_all().is_err());
+        let a = Matrix::random(16, 8, 942);
+        let b = Matrix::random(8, 16, 943);
+        let want = a.matmul(&b);
+        let r = srv
+            .submit(GemmJob { id: 1, a, b, run: Some(RunConfig::square(2, 16)) })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(r.c.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn batched_gemm_uses_dse_for_largest_sub_when_unpinned() {
+        // No pin, no server default: the batch plans once via the DSE
+        // and every sub runs under that single config.
+        let cfg = ServerConfig { default_run: None, ..small_cfg() };
+        let srv = server(cfg);
+        let b = Matrix::random(24, 32, 950);
+        let many_a: Vec<Matrix> = vec![
+            Matrix::random(8, 24, 951),
+            Matrix::random(64, 24, 952),
+        ];
+        let wants: Vec<Matrix> = many_a.iter().map(|a| a.matmul(&b)).collect();
+        let results = srv.submit_batched_gemm(b, many_a, None).unwrap().wait_all().unwrap();
+        assert_eq!(results[0].run, results[1].run, "one config for the whole batch");
+        for (r, want) in results.iter().zip(&wants) {
+            assert!(r.c.allclose(want, 1e-4));
+        }
     }
 
     #[test]

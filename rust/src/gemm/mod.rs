@@ -13,9 +13,11 @@
 //!   produce; kept as the readable reference the fast path is verified
 //!   against;
 //! * the packed pipeline — [`view`]'s borrowed [`MatrixView`] /
-//!   [`MatrixViewMut`] windows feed [`pack`]'s [`PackedPanels`] (each
-//!   operand element packed once per job, A panels transposed exactly
-//!   like the MAC's layout fix), [`microkernel`]'s register-blocked
+//!   [`MatrixViewMut`] windows feed [`pack`]'s refcounted halves
+//!   ([`PackedA`] / [`PackedB`], composed per job as [`PackedPanels`]:
+//!   each operand element packed once, A panels transposed exactly
+//!   like the MAC's layout fix, and a half shareable across jobs —
+//!   a batch with one B packs it once), [`microkernel`]'s register-blocked
 //!   `MR x NR` kernel does the FLOPs, and [`DisjointBlocks`] streams
 //!   finished blocks into C without locks. [`packed_matmul`] composes
 //!   them single-threaded; the coordinator runs the same pieces across
@@ -33,7 +35,7 @@ pub mod view;
 
 pub use matrix::Matrix;
 pub use microkernel::{micro_kernel, task_product, task_product_into, MR, NR};
-pub use pack::PackedPanels;
+pub use pack::{PackedA, PackedB, PackedPanels};
 pub use view::{DisjointBlocks, MatrixView, MatrixViewMut};
 
 use crate::blocking::BlockPlan;

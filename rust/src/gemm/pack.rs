@@ -1,11 +1,12 @@
 //! Panel packing — each operand element is touched once per *job*, not
-//! once per task.
+//! once per task, and a packed operand is a refcounted unit that can be
+//! shared across jobs.
 //!
 //! The old hot path re-copied a full `S_i x K` slice of A and a
 //! `K x S_j` slice of B out of the operands for every WQM task (so a
 //! `bi` row-panel was copied `blocks_j` times and a `bj` column-panel
-//! `blocks_i` times). [`PackedPanels`] does the copy exactly once per
-//! panel, into the layout the register-blocked microkernel streams:
+//! `blocks_i` times). [`PackedA`] / [`PackedB`] do the copy exactly once
+//! per panel, into the layout the register-blocked microkernel streams:
 //!
 //! * A's row-panel `bi` is stored as `ceil(rows/MR)` strips; within a
 //!   strip the layout is k-major with `MR` row-adjacent values per k —
@@ -18,26 +19,133 @@
 //! Ragged strips are zero-padded to the full `MR`/`NR` width so the
 //! microkernel never branches on edges; the padding contributes exact
 //! `+0.0` terms and the writer clips them on the way out.
+//!
+//! The two halves are deliberately *independent* types behind `Arc`s:
+//! a batched workload (same B, many A — CNN inference's shape) packs B
+//! once into an `Arc<PackedB>` and pairs it with a fresh [`PackedA`]
+//! per sub-job via [`PackedPanels::from_parts`]. Because the packed
+//! layout of an operand depends only on its own shape and block size —
+//! not on the other operand — a shared half is bit-identical to one
+//! packed privately, so batched results match individual runs exactly.
+
+use std::sync::Arc;
 
 use crate::blocking::BlockPlan;
 
 use super::microkernel::{MR, NR};
 use super::view::MatrixView;
 
-/// Both operands of one GEMM job, packed panel-by-panel for the
-/// microkernel. Built once per job by the coordinator (or by
-/// [`super::packed_matmul`]); shared read-only across all workers.
+/// The packed row-panels of one A operand (`M x K` at block size `si`):
+/// strip-major `[strip][k][MR]` per panel. Refcounted and immutable
+/// after packing; shareable across jobs that multiply the same A.
 #[derive(Debug, Clone)]
-pub struct PackedPanels {
+pub struct PackedA {
     k: usize,
     /// Per block-row of A: strip-major `[strip][k][MR]` packing.
-    a_panels: Vec<Vec<f32>>,
-    /// Effective (unpadded) rows per A panel.
-    a_rows: Vec<usize>,
+    panels: Vec<Vec<f32>>,
+    /// Effective (unpadded) rows per panel.
+    rows: Vec<usize>,
+}
+
+impl PackedA {
+    /// Pack `a` (`M x K`) into `ceil(M / si)` row-panels.
+    pub fn pack(a: MatrixView<'_>, si: usize) -> Self {
+        assert!(si > 0, "degenerate block size");
+        let (m, k) = (a.rows(), a.cols());
+        let blocks = m.div_ceil(si);
+        let mut panels = Vec::with_capacity(blocks);
+        let mut rows_eff = Vec::with_capacity(blocks);
+        for bi in 0..blocks {
+            let row0 = bi * si;
+            let rows = si.min(m - row0);
+            panels.push(pack_a_panel(&a, row0, rows, k));
+            rows_eff.push(rows);
+        }
+        Self { k, panels, rows: rows_eff }
+    }
+
+    /// Contraction depth K this operand was packed for.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of packed row-panels (`ceil(M / si)`).
+    pub fn num_panels(&self) -> usize {
+        self.panels.len()
+    }
+
+    /// Packed strips of row-panel `bi` and its effective row count.
+    pub fn panel(&self, bi: usize) -> (&[f32], usize) {
+        (&self.panels[bi], self.rows[bi])
+    }
+
+    /// Total packed floats (diagnostics: equals the padded operand size).
+    pub fn packed_len(&self) -> usize {
+        self.panels.iter().map(Vec::len).sum()
+    }
+}
+
+/// The packed column-panels of one B operand (`K x N` at block size
+/// `sj`): strip-major `[strip][k][NR]` per panel. Refcounted and
+/// immutable after packing — the shared half of a batched GEMM (one B,
+/// many A), where a single pack feeds every sub-job.
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    k: usize,
     /// Per block-column of B: strip-major `[strip][k][NR]` packing.
-    b_panels: Vec<Vec<f32>>,
-    /// Effective (unpadded) columns per B panel.
-    b_cols: Vec<usize>,
+    panels: Vec<Vec<f32>>,
+    /// Effective (unpadded) columns per panel.
+    cols: Vec<usize>,
+}
+
+impl PackedB {
+    /// Pack `b` (`K x N`) into `ceil(N / sj)` column-panels.
+    pub fn pack(b: MatrixView<'_>, sj: usize) -> Self {
+        assert!(sj > 0, "degenerate block size");
+        let (k, n) = (b.rows(), b.cols());
+        let blocks = n.div_ceil(sj);
+        let mut panels = Vec::with_capacity(blocks);
+        let mut cols_eff = Vec::with_capacity(blocks);
+        for bj in 0..blocks {
+            let col0 = bj * sj;
+            let cols = sj.min(n - col0);
+            panels.push(pack_b_panel(&b, col0, cols, k));
+            cols_eff.push(cols);
+        }
+        Self { k, panels, cols: cols_eff }
+    }
+
+    /// Contraction depth K this operand was packed for.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of packed column-panels (`ceil(N / sj)`).
+    pub fn num_panels(&self) -> usize {
+        self.panels.len()
+    }
+
+    /// Packed strips of column-panel `bj` and its effective column count.
+    pub fn panel(&self, bj: usize) -> (&[f32], usize) {
+        (&self.panels[bj], self.cols[bj])
+    }
+
+    /// Total packed floats (diagnostics: equals the padded operand size).
+    pub fn packed_len(&self) -> usize {
+        self.panels.iter().map(Vec::len).sum()
+    }
+}
+
+/// Both operands of one GEMM job, as refcounted packed halves. Built by
+/// the coordinator (or [`super::packed_matmul`]); shared read-only
+/// across all workers. Cloning is shallow — two clones share the same
+/// packed storage — and [`PackedPanels::from_parts`] composes a job
+/// from pre-packed halves, which is how a shared-B batch hands one
+/// `Arc<PackedB>` to every sub-job.
+#[derive(Debug, Clone)]
+pub struct PackedPanels {
+    a: Arc<PackedA>,
+    b: Arc<PackedB>,
 }
 
 impl PackedPanels {
@@ -45,46 +153,49 @@ impl PackedPanels {
     pub fn pack(a: MatrixView<'_>, b: MatrixView<'_>, plan: &BlockPlan) -> Self {
         assert_eq!((a.rows(), a.cols()), (plan.m, plan.k), "A shape mismatch");
         assert_eq!((b.rows(), b.cols()), (plan.k, plan.n), "B shape mismatch");
-        let k = plan.k;
-        let mut a_panels = Vec::with_capacity(plan.blocks_i());
-        let mut a_rows = Vec::with_capacity(plan.blocks_i());
-        for bi in 0..plan.blocks_i() {
-            let row0 = bi * plan.si;
-            let rows = plan.si.min(plan.m - row0);
-            a_panels.push(pack_a_panel(&a, row0, rows, k));
-            a_rows.push(rows);
-        }
-        let mut b_panels = Vec::with_capacity(plan.blocks_j());
-        let mut b_cols = Vec::with_capacity(plan.blocks_j());
-        for bj in 0..plan.blocks_j() {
-            let col0 = bj * plan.sj;
-            let cols = plan.sj.min(plan.n - col0);
-            b_panels.push(pack_b_panel(&b, col0, cols, k));
-            b_cols.push(cols);
-        }
-        Self { k, a_panels, a_rows, b_panels, b_cols }
+        Self::from_parts(
+            Arc::new(PackedA::pack(a, plan.si)),
+            Arc::new(PackedB::pack(b, plan.sj)),
+        )
+    }
+
+    /// Compose a job's panels from pre-packed (possibly shared) halves.
+    /// The halves must agree on K — they came from conformable operands.
+    pub fn from_parts(a: Arc<PackedA>, b: Arc<PackedB>) -> Self {
+        assert_eq!(a.k(), b.k(), "packed halves disagree on contraction depth");
+        Self { a, b }
     }
 
     /// Shared contraction depth K.
     pub fn k(&self) -> usize {
-        self.k
+        self.a.k()
+    }
+
+    /// The refcounted A half.
+    pub fn a_half(&self) -> &Arc<PackedA> {
+        &self.a
+    }
+
+    /// The refcounted B half (what a shared-B batch clones per sub-job;
+    /// `Arc::ptr_eq` on two jobs' halves observes the sharing).
+    pub fn b_half(&self) -> &Arc<PackedB> {
+        &self.b
     }
 
     /// Packed strips of A's row-panel `bi` and its effective row count.
     pub fn a_panel(&self, bi: usize) -> (&[f32], usize) {
-        (&self.a_panels[bi], self.a_rows[bi])
+        self.a.panel(bi)
     }
 
     /// Packed strips of B's column-panel `bj` and its effective column
     /// count.
     pub fn b_panel(&self, bj: usize) -> (&[f32], usize) {
-        (&self.b_panels[bj], self.b_cols[bj])
+        self.b.panel(bj)
     }
 
     /// Total packed floats (diagnostics: equals padded operand sizes).
     pub fn packed_len(&self) -> usize {
-        self.a_panels.iter().map(Vec::len).sum::<usize>()
-            + self.b_panels.iter().map(Vec::len).sum::<usize>()
+        self.a.packed_len() + self.b.packed_len()
     }
 }
 
@@ -174,10 +285,55 @@ mod tests {
         let b = Matrix::random(13, 41, 8);
         let plan = BlockPlan::new(50, 13, 41, 16, 16);
         let p = PackedPanels::pack(a.view(), b.view(), &plan);
-        assert_eq!(p.a_panels.len(), plan.blocks_i());
-        assert_eq!(p.b_panels.len(), plan.blocks_j());
-        assert_eq!(p.a_rows.iter().sum::<usize>(), 50);
-        assert_eq!(p.b_cols.iter().sum::<usize>(), 41);
+        assert_eq!(p.a_half().num_panels(), plan.blocks_i());
+        assert_eq!(p.b_half().num_panels(), plan.blocks_j());
+        assert_eq!(p.a_half().rows.iter().sum::<usize>(), 50);
+        assert_eq!(p.b_half().cols.iter().sum::<usize>(), 41);
+    }
+
+    #[test]
+    fn shared_b_half_is_bit_identical_to_private_pack() {
+        // The sharing guarantee the batched server path rests on: a B
+        // packed once and composed with any A's half equals (bit for
+        // bit) the B half of a private per-job pack.
+        let b = Matrix::random(23, 37, 9);
+        let shared = Arc::new(PackedB::pack(b.view(), 12));
+        for (m, seed) in [(17usize, 10u64), (40, 11), (3, 12)] {
+            let a = Matrix::random(m, 23, seed);
+            let plan = BlockPlan::new(m, 23, 37, 16, 12);
+            let private = PackedPanels::pack(a.view(), b.view(), &plan);
+            let composed = PackedPanels::from_parts(
+                Arc::new(PackedA::pack(a.view(), 16)),
+                shared.clone(),
+            );
+            for bj in 0..plan.blocks_j() {
+                assert_eq!(private.b_panel(bj), composed.b_panel(bj));
+            }
+            for bi in 0..plan.blocks_i() {
+                assert_eq!(private.a_panel(bi), composed.a_panel(bi));
+            }
+            assert_eq!(private.packed_len(), composed.packed_len());
+        }
+    }
+
+    #[test]
+    fn clones_share_storage_and_sharing_is_observable() {
+        let a = Matrix::random(8, 6, 20);
+        let b = Matrix::random(6, 10, 21);
+        let plan = BlockPlan::new(8, 6, 10, 4, 8);
+        let p = PackedPanels::pack(a.view(), b.view(), &plan);
+        let q = p.clone();
+        assert!(Arc::ptr_eq(p.b_half(), q.b_half()), "clone must share the packed B");
+        let r = PackedPanels::pack(a.view(), b.view(), &plan);
+        assert!(!Arc::ptr_eq(p.b_half(), r.b_half()), "independent packs must not alias");
+    }
+
+    #[test]
+    #[should_panic(expected = "disagree on contraction depth")]
+    fn from_parts_rejects_mismatched_k() {
+        let a = Arc::new(PackedA::pack(Matrix::zeros(4, 5).view(), 4));
+        let b = Arc::new(PackedB::pack(Matrix::zeros(6, 4).view(), 4));
+        PackedPanels::from_parts(a, b);
     }
 
     #[test]

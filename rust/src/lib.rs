@@ -12,9 +12,10 @@
 //! * [`config`] — bitstream (`P_m`, `P`) and run-time (`N_p`, `S_i`) knobs;
 //! * [`gemm`] — dense-matrix substrate in three layers: the oracle
 //!   [`Matrix`], the functional blocked algorithm, and the zero-copy
-//!   panel pipeline (borrowed `MatrixView`s → once-per-job
-//!   `PackedPanels` → register-blocked microkernel → lock-free
-//!   `DisjointBlocks` writes into C);
+//!   panel pipeline (borrowed `MatrixView`s → refcounted packed halves
+//!   `PackedA`/`PackedB` composed per job as `PackedPanels` — packed
+//!   once per job, shareable across jobs → register-blocked
+//!   microkernel → lock-free `DisjointBlocks` writes into C);
 //! * [`blocking`] — the blocked algorithm's task grid (`BlockPlan`,
 //!   whose exact tiling of C is what makes the disjoint writes sound);
 //! * [`ddr`] — DDR3 bank/row timing model (the Fig. 3 substrate);
@@ -30,7 +31,9 @@
 //! * [`analytical`] — Eqs. 3–9 and the `BW = f(N_p, S_i)` surface;
 //! * [`dse`] — design-space exploration for optimal `⟨N_p, S_i⟩`;
 //! * [`resources`] — Table I's post-synthesis resource model;
-//! * [`cnn`] — AlexNet-as-GEMM workloads (Table II);
+//! * [`cnn`] — AlexNet-as-GEMM workloads (Table II) plus the im2col
+//!   streaming front-end: conv layers lower to patch-row GEMMs whose
+//!   shared filter matrix is packed once per batch;
 //! * [`runtime`] — PJRT client executing the AOT-compiled JAX/Pallas
 //!   kernels (`artifacts/*.hlo.txt`) for the real numerics;
 //! * [`coordinator`] — the serving layer: GEMM jobs in, panels packed
@@ -38,15 +41,19 @@
 //!   C blocks in place, timing via the simulator. Two shapes: the
 //!   one-job-at-a-time `Coordinator`, and the multi-job `JobServer` —
 //!   a persistent pool behind a bounded admission queue with cross-job
-//!   work stealing and small-job batching, the production serving
-//!   runtime;
+//!   work stealing, small-job batching, and shared-operand batches
+//!   (`submit_batched_gemm`: one B packed once, fanned out to N
+//!   sub-jobs as a `JobGroup`, bit-identical to individual runs), the
+//!   production serving runtime;
 //! * [`strassen`] — the algorithmic layer above the serving runtime:
 //!   recursive Strassen decomposition (7 sub-products per quadrant
 //!   split instead of 8) whose per-level fan-out is submitted to the
 //!   `JobServer` as a job group and load-balanced by cross-job
 //!   stealing, with the recursion cutoff chosen by the analytical
 //!   model (`analytical::strassen_crossover`) and temporaries recycled
-//!   through a scratch arena.
+//!   through a scratch arena; `strassen::multiply_batched` runs a
+//!   whole shared-B batch through one recursion, materializing and
+//!   packing each B-side quadrant combination once for the batch.
 
 pub mod accelerator;
 pub mod analytical;

@@ -40,9 +40,13 @@ COMMANDS:
                                     Strassen-decomposed GEMM through the
                                     job server (depth: forced levels;
                                     default: model-chosen cutoff)
-  batch --file JOBS [--golden] [--artifacts DIR]
+  batch --file JOBS [--shared-b] [--workers W] [--golden] [--artifacts DIR]
                                     serve a job file (lines: M K N [NP SI]);
-                                    '-' reads stdin
+                                    '-' reads stdin. --shared-b runs the
+                                    batch (uniform K N required) against ONE
+                                    shared B both ways — individual submits
+                                    vs submit_batched_gemm — and reports the
+                                    pack-traffic win
   schedule [--reconfig-us US]       whole-AlexNet schedule: per-layer
                                     optimal (w/ reconfiguration cost) vs
                                     best fixed config
@@ -56,7 +60,7 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
-const BOOL_FLAGS: &[&str] = &["golden", "check"];
+const BOOL_FLAGS: &[&str] = &["golden", "check", "shared-b"];
 
 fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
     let mut cmd = None;
@@ -474,6 +478,10 @@ fn cmd_batch(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
     }
     anyhow::ensure!(!jobs.is_empty(), "no jobs in {file}");
 
+    if args.flags.contains_key("shared-b") {
+        return cmd_batch_shared_b(hw, args, &jobs);
+    }
+
     let engine = engine_from(args);
     println!("numerics backend: {} | {} jobs", engine.name, jobs.len());
     let co = Coordinator::new(hw.clone(), engine);
@@ -524,5 +532,92 @@ fn cmd_batch(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
         total_flops as f64 / total_sim / 1e9
     );
     println!("metrics: {}", co.metrics().summary());
+    Ok(())
+}
+
+/// Shared-B mode of `marr batch`: the whole job file is one batch
+/// multiplying a single B, run through the `JobServer` both ways —
+/// individual `submit`s (N private B packs) and one
+/// `submit_batched_gemm` (one shared pack) — so the pack-traffic win is
+/// directly observable from the printed stats.
+fn cmd_batch_shared_b(
+    hw: &HardwareConfig,
+    args: &Args,
+    jobs: &[((usize, usize, usize), Option<RunConfig>)],
+) -> anyhow::Result<()> {
+    use multi_array::coordinator::{JobServer, ServerConfig};
+
+    let ((_, k0, n0), run) = jobs[0];
+    anyhow::ensure!(
+        jobs.iter().all(|((_, k, n), _)| (*k, *n) == (k0, n0)),
+        "--shared-b needs one B: every job line must share K and N"
+    );
+    // A shared-B batch runs under ONE config; a file mixing pins would
+    // silently lose all but the first, so reject it instead.
+    anyhow::ensure!(
+        jobs.iter().all(|(_, r)| *r == run),
+        "--shared-b runs the whole batch under one config: every job \
+         line must carry the same [NP SI] (or none)"
+    );
+    let b = Matrix::random(k0, n0, 1);
+    let many_a: Vec<Matrix> = jobs
+        .iter()
+        .enumerate()
+        .map(|(id, ((m, k, _), _))| Matrix::random(*m, *k, id as u64 * 2))
+        .collect();
+
+    let server = |label: &str| -> anyhow::Result<JobServer> {
+        let engine = engine_from(args);
+        println!("{label}: numerics backend {}", engine.name);
+        let mut cfg = ServerConfig::default();
+        if let Some(w) = args.get_usize("workers")? {
+            cfg.workers = w;
+        }
+        cfg.queue_capacity = jobs.len().max(cfg.queue_capacity);
+        JobServer::new(hw.clone(), engine, cfg)
+    };
+
+    // Baseline: the same traffic, one submit per job.
+    let srv = server("individual")?;
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = many_a
+        .iter()
+        .enumerate()
+        .map(|(id, a)| {
+            srv.submit(GemmJob { id: id as u64, a: a.clone(), b: b.clone(), run })
+        })
+        .collect::<anyhow::Result<_>>()?;
+    for t in tickets {
+        t.wait()?;
+    }
+    let individual_wall = t0.elapsed().as_secs_f64();
+    let individual_stats = srv.stats();
+    srv.shutdown();
+
+    // Shared: one admission unit, one packed B for the whole batch.
+    let srv = server("shared-B")?;
+    let t0 = std::time::Instant::now();
+    let results = srv.submit_batched_gemm(b, many_a, run)?.wait_all()?;
+    let shared_wall = t0.elapsed().as_secs_f64();
+    let shared_stats = srv.stats();
+    srv.shutdown();
+
+    println!("\n{} jobs x ({k0} x {n0}) shared B:", results.len());
+    println!(
+        "  individual: {individual_wall:.3} s wall | packs(a/b)={}/{} panels_shared={}",
+        individual_stats.a_panel_packs,
+        individual_stats.b_panel_packs,
+        individual_stats.panels_shared
+    );
+    println!(
+        "  shared-B:   {shared_wall:.3} s wall | packs(a/b)={}/{} panels_shared={} \
+         ({} B packs avoided)",
+        shared_stats.a_panel_packs,
+        shared_stats.b_panel_packs,
+        shared_stats.panels_shared,
+        individual_stats.b_panel_packs.saturating_sub(shared_stats.b_panel_packs)
+    );
+    println!("  individual server: {individual_stats}");
+    println!("  shared-B server:   {shared_stats}");
     Ok(())
 }

@@ -30,9 +30,20 @@
 //! the executed depth, the measured per-level fan-out (7, vs 8 for a
 //! direct quadrant split), leaf-GEMM count, the model's crossover
 //! trace (on model-cutoff runs), and arena statistics.
+//!
+//! [`multiply_batched`] extends the planner to the shared-operand
+//! workload (one B, many A — the im2col inference stream): the 7-way
+//! fan-out repeats every B-side quadrant combination once per batch
+//! member, so each node materializes its 7 B combinations **once** and
+//! routes each through
+//! [`crate::coordinator::JobServer::submit_batched_gemm`], packing
+//! every B combination exactly once for the whole batch.
 
 mod arena;
 mod planner;
 
 pub use arena::{ArenaStats, ScratchArena};
-pub use planner::{multiply, Cutoff, StrassenConfig, StrassenReport, DIRECT_SPLIT_FANOUT};
+pub use planner::{
+    multiply, multiply_batched, BatchedStrassenReport, Cutoff, StrassenConfig, StrassenReport,
+    DIRECT_SPLIT_FANOUT,
+};

@@ -104,6 +104,9 @@ struct Ctx<'s> {
     run: Option<RunConfig>,
     next_id: u64,
     leaf_gemms: u64,
+    /// Shared-B leaf groups submitted (batched recursion only; each
+    /// packs its B combination exactly once for the whole batch).
+    leaf_groups: u64,
     level_nodes: Vec<u64>,
     level_spawns: Vec<u64>,
 }
@@ -176,6 +179,7 @@ pub fn multiply(
         run: cfg.run,
         next_id: 0,
         leaf_gemms: 0,
+        leaf_groups: 0,
         level_nodes: vec![0; depth],
         level_spawns: vec![0; depth],
     };
@@ -319,6 +323,270 @@ fn node(
     Ok(c)
 }
 
+/// What a batched Strassen run reports besides the per-member products.
+#[derive(Debug)]
+pub struct BatchedStrassenReport {
+    /// `cs[i] = a_list[i] x b`, in input order.
+    pub cs: Vec<Matrix>,
+    /// Recursion levels actually executed (0 = one direct shared-B
+    /// group).
+    pub depth: usize,
+    /// Shared-B groups submitted (`7^depth`, or 1 at depth 0) — each
+    /// packed its B combination exactly once for the whole batch.
+    pub leaf_groups: u64,
+    /// Leaf GEMMs executed (`batch · 7^depth`).
+    pub leaf_gemms: u64,
+    /// Recursion nodes per level (as in [`StrassenReport`]).
+    pub level_nodes: Vec<u64>,
+    /// Sub-multiplies spawned per level, counted at each node.
+    pub level_spawns: Vec<u64>,
+    /// Operand shapes after top-level padding (input shape at depth 0).
+    pub padded: (usize, usize, usize),
+    /// Present only under [`Cutoff::Model`].
+    pub model: Option<CrossoverPlan>,
+    pub arena: ArenaStats,
+}
+
+/// Batched Strassen over a **shared B**: `cs[i] = a_list[i] x b` for a
+/// whole batch, reusing the B-side quadrant combinations across it.
+///
+/// The 7-product fan-out repeats every B combination once per batch
+/// member — M2 of every member multiplies the *same* `B11`, M1 the same
+/// `B11 + B22`, and so on. A per-member recursion would rematerialize
+/// and repack each combination `batch` times; here each node forms its
+/// 7 B combinations **once**, pairs combination `j` with the batch's 7
+/// A-side combinations, and (at the leaf) routes each pairing through
+/// [`JobServer::submit_batched_gemm`] — one shared-B group per
+/// combination, so the packed `B` combo is built exactly once however
+/// large the batch is (`Metrics::b_panel_packs` = `7^depth` total,
+/// `Metrics::panels_shared` = `(batch-1) · 7^depth`). Above the leaf
+/// the recursion itself carries the whole batch down with the single
+/// shared B combination.
+///
+/// Every member must have the same shape (a batch of identical GEMMs —
+/// the im2col inference stream). Results are bit-identical to running
+/// [`multiply`] per member with the same `cfg`: identical combine
+/// kernels and identical leaf accumulation order, over operands whose
+/// packed layout does not depend on sharing.
+pub fn multiply_batched(
+    server: &JobServer,
+    a_list: &[Matrix],
+    b: &Matrix,
+    cfg: &StrassenConfig,
+) -> anyhow::Result<BatchedStrassenReport> {
+    anyhow::ensure!(!a_list.is_empty(), "empty batch");
+    let (m, k) = (a_list[0].rows, a_list[0].cols);
+    anyhow::ensure!(
+        a_list.iter().all(|a| (a.rows, a.cols) == (m, k)),
+        "batch members must share one shape"
+    );
+    anyhow::ensure!(k == b.rows, "contraction mismatch");
+    anyhow::ensure!(
+        m > 0 && k > 0 && b.cols > 0,
+        "degenerate problem {m}x{k}x{}",
+        b.cols
+    );
+    if let Some(run) = cfg.run {
+        run.validate(server.hw())?;
+    }
+    let n = b.cols;
+    let (model, requested) = match cfg.cutoff {
+        Cutoff::Model => {
+            let plan = strassen_crossover(server.hw(), m, k, n, server.surface())?;
+            let depth = plan.depth;
+            (Some(plan), depth)
+        }
+        Cutoff::Depth(d) => (None, d),
+    };
+    let depth = requested.min(depth_cap(m, k, n));
+
+    let mut ctx = Ctx {
+        server,
+        arena: ScratchArena::new(),
+        run: cfg.run,
+        next_id: 0,
+        leaf_gemms: 0,
+        leaf_groups: 0,
+        level_nodes: vec![0; depth],
+        level_spawns: vec![0; depth],
+    };
+
+    let (cs, padded) = if depth == 0 {
+        let group = server.submit_batched_gemm(b.clone(), a_list.to_vec(), cfg.run)?;
+        ctx.leaf_groups = 1;
+        ctx.leaf_gemms = a_list.len() as u64;
+        let cs = group.wait_all()?.into_iter().map(|r| r.c).collect();
+        (cs, (m, k, n))
+    } else {
+        let align = 1usize << depth;
+        let (mp, kp, np) =
+            (m.next_multiple_of(align), k.next_multiple_of(align), n.next_multiple_of(align));
+        let aps: Vec<Matrix> = a_list.iter().map(|a| a.pad_to(mp, kp)).collect();
+        let bp = b.pad_to(kp, np);
+        let cps = node_batched(&mut ctx, aps, bp, depth, 0)?;
+        let cs = cps
+            .into_iter()
+            .map(|cp| {
+                let c = cp.block(0, 0, m, n);
+                ctx.arena.put(cp);
+                c
+            })
+            .collect();
+        (cs, (mp, kp, np))
+    };
+
+    Ok(BatchedStrassenReport {
+        cs,
+        depth,
+        leaf_groups: ctx.leaf_groups,
+        leaf_gemms: ctx.leaf_gemms,
+        level_nodes: ctx.level_nodes,
+        level_spawns: ctx.level_spawns,
+        padded,
+        model,
+        arena: ctx.arena.stats(),
+    })
+}
+
+/// One batched recursion node: the whole batch against one B
+/// (`depth_left >= 1`; all dims even). Forms the 7 B combinations once,
+/// the 7 A combinations per member, and returns one product per member.
+fn node_batched(
+    ctx: &mut Ctx<'_>,
+    a_list: Vec<Matrix>,
+    b: Matrix,
+    depth_left: usize,
+    level: usize,
+) -> anyhow::Result<Vec<Matrix>> {
+    let batch = a_list.len();
+    let (m, k, n) = (a_list[0].rows, a_list[0].cols, b.cols);
+    debug_assert!(m % 2 == 0 && k % 2 == 0 && n % 2 == 0, "node dims must be even");
+    let (m2, k2, n2) = (m / 2, k / 2, n / 2);
+
+    // The shared half: 7 B combinations, materialized once per node
+    // however many members ride the batch.
+    let mut b_combos: Vec<Matrix> = Vec::with_capacity(7);
+    {
+        let bv = b.view();
+        let b11 = bv.block(0, 0, k2, n2);
+        let b12 = bv.block(0, n2, k2, n2);
+        let b21 = bv.block(k2, 0, k2, n2);
+        let b22 = bv.block(k2, n2, k2, n2);
+        let specs: [Combo<'_>; 7] = [
+            Combo::Add(b11, b22), // M1
+            Combo::Copy(b11),     // M2
+            Combo::Sub(b12, b22), // M3
+            Combo::Sub(b21, b11), // M4
+            Combo::Copy(b22),     // M5
+            Combo::Add(b11, b12), // M6
+            Combo::Add(b21, b22), // M7
+        ];
+        for cb in specs {
+            b_combos.push(materialize(&mut ctx.arena, k2, n2, cb));
+        }
+    }
+    ctx.arena.put(b);
+
+    // Per-member A combinations: a_combos[j] holds combination j of
+    // every member, in batch order.
+    let mut a_combos: Vec<Vec<Matrix>> =
+        (0..7).map(|_| Vec::with_capacity(batch)).collect();
+    for a in a_list {
+        {
+            let av = a.view();
+            let a11 = av.block(0, 0, m2, k2);
+            let a12 = av.block(0, k2, m2, k2);
+            let a21 = av.block(m2, 0, m2, k2);
+            let a22 = av.block(m2, k2, m2, k2);
+            let specs: [Combo<'_>; 7] = [
+                Combo::Add(a11, a22), // M1
+                Combo::Add(a21, a22), // M2
+                Combo::Copy(a11),     // M3
+                Combo::Copy(a22),     // M4
+                Combo::Add(a11, a12), // M5
+                Combo::Sub(a21, a11), // M6
+                Combo::Sub(a12, a22), // M7
+            ];
+            for (j, ca) in specs.into_iter().enumerate() {
+                a_combos[j].push(materialize(&mut ctx.arena, m2, k2, ca));
+            }
+        }
+        ctx.arena.put(a);
+    }
+    ctx.level_nodes[level] += 1;
+    ctx.level_spawns[level] += 7;
+
+    // ms[j][member] = combination j's product for that member.
+    let ms: Vec<Vec<Matrix>> = if depth_left == 1 {
+        // Submit all 7 shared-B groups before waiting on any, so the
+        // pool sees the node's whole fan-out at once.
+        let mut groups = Vec::with_capacity(7);
+        for (bc, acs) in b_combos.into_iter().zip(a_combos) {
+            groups.push(ctx.server.submit_batched_gemm(bc, acs, ctx.run)?);
+        }
+        ctx.leaf_groups += 7;
+        ctx.leaf_gemms += 7 * batch as u64;
+        let mut ms = Vec::with_capacity(7);
+        for g in groups {
+            let results = g.wait_all()?;
+            let mut per_member = Vec::with_capacity(batch);
+            for r in results {
+                anyhow::ensure!(
+                    (r.c.rows, r.c.cols) == (m2, n2),
+                    "leaf {} returned {}x{}, expected {m2}x{n2}",
+                    r.id,
+                    r.c.rows,
+                    r.c.cols
+                );
+                per_member.push(r.c);
+            }
+            ms.push(per_member);
+        }
+        ms
+    } else {
+        let mut ms = Vec::with_capacity(7);
+        for (bc, acs) in b_combos.into_iter().zip(a_combos) {
+            ms.push(node_batched(ctx, acs, bc, depth_left - 1, level + 1)?);
+        }
+        ms
+    };
+
+    let mut cs = Vec::with_capacity(batch);
+    for member in 0..batch {
+        let mut c = ctx.arena.take(m, n);
+        {
+            let mut cv = c.view_mut();
+            {
+                let mut c11 = cv.block_mut(0, 0, m2, n2);
+                ops::add_into(ms[0][member].view(), ms[3][member].view(), &mut c11);
+                ops::acc_sub(&mut c11, ms[4][member].view());
+                ops::acc_add(&mut c11, ms[6][member].view());
+            }
+            {
+                let mut c12 = cv.block_mut(0, n2, m2, n2);
+                ops::add_into(ms[2][member].view(), ms[4][member].view(), &mut c12);
+            }
+            {
+                let mut c21 = cv.block_mut(m2, 0, m2, n2);
+                ops::add_into(ms[1][member].view(), ms[3][member].view(), &mut c21);
+            }
+            {
+                let mut c22 = cv.block_mut(m2, n2, m2, n2);
+                ops::sub_into(ms[0][member].view(), ms[1][member].view(), &mut c22);
+                ops::acc_add(&mut c22, ms[2][member].view());
+                ops::acc_add(&mut c22, ms[5][member].view());
+            }
+        }
+        cs.push(c);
+    }
+    for per_combo in ms {
+        for mi in per_combo {
+            ctx.arena.put(mi);
+        }
+    }
+    Ok(cs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -426,6 +694,87 @@ mod tests {
         let a = Matrix::random(8, 8, 15);
         let b = Matrix::random(9, 8, 16);
         assert!(multiply(&srv, &a, &b, &cfg_depth(1)).is_err());
+    }
+
+    #[test]
+    fn batched_depth1_packs_each_b_combo_once() {
+        let srv = server();
+        let b = Matrix::random(24, 40, 100);
+        let a_list: Vec<Matrix> = (0..3u64).map(|i| Matrix::random(32, 24, 101 + i)).collect();
+        let r = multiply_batched(&srv, &a_list, &b, &cfg_depth(1)).unwrap();
+        assert_eq!(r.depth, 1);
+        assert_eq!(r.leaf_groups, 7, "one shared-B group per combination");
+        assert_eq!(r.leaf_gemms, 21);
+        assert_eq!(r.level_nodes, vec![1]);
+        for (a, c) in a_list.iter().zip(&r.cs) {
+            assert!(c.allclose(&a.matmul(&b), 1e-4));
+        }
+        // The reuse the batched recursion exists for: each of the 7 B
+        // combinations packed once, (batch-1) packs avoided apiece.
+        let m = srv.metrics();
+        assert_eq!(m.b_panel_packs(), 7);
+        assert_eq!(m.panels_shared(), 7 * (3 - 1));
+        assert_eq!(m.a_panel_packs(), 21);
+        assert_eq!(m.shared_b_groups(), 7);
+    }
+
+    #[test]
+    fn batched_matches_single_member_multiply_bit_for_bit() {
+        // Same combos, same combine kernels, same leaf accumulation
+        // order: the shared-B recursion must agree with the per-member
+        // planner exactly, not just approximately.
+        let srv = server();
+        let b = Matrix::random(36, 44, 110);
+        let a_list: Vec<Matrix> = (0..2u64).map(|i| Matrix::random(40, 36, 111 + i)).collect();
+        let batched = multiply_batched(&srv, &a_list, &b, &cfg_depth(2)).unwrap();
+        assert_eq!(batched.depth, 2);
+        assert_eq!(batched.leaf_groups, 49);
+        assert_eq!(batched.level_nodes, vec![1, 7]);
+        assert_eq!(batched.level_spawns, vec![7, 49]);
+        for (a, c) in a_list.iter().zip(&batched.cs) {
+            let single = multiply(&srv, a, &b, &cfg_depth(2)).unwrap();
+            assert_eq!(c.data, single.c.data, "batched member diverged from single run");
+        }
+        assert!(batched.arena.reuses > 0);
+    }
+
+    #[test]
+    fn batched_depth0_is_one_shared_group() {
+        let srv = server();
+        let b = Matrix::random(12, 16, 120);
+        let a_list: Vec<Matrix> = (0..4u64).map(|i| Matrix::random(20, 12, 121 + i)).collect();
+        let r = multiply_batched(&srv, &a_list, &b, &cfg_depth(0)).unwrap();
+        assert_eq!((r.depth, r.leaf_groups, r.leaf_gemms), (0, 1, 4));
+        assert_eq!(r.padded, (20, 12, 16));
+        for (a, c) in a_list.iter().zip(&r.cs) {
+            assert!(c.allclose(&a.matmul(&b), 1e-4));
+        }
+        assert_eq!(srv.metrics().b_panel_packs(), 1);
+        assert_eq!(srv.metrics().panels_shared(), 3);
+    }
+
+    #[test]
+    fn batched_odd_dims_padded_and_clipped() {
+        let srv = server();
+        let b = Matrix::random(17, 29, 130);
+        let a_list: Vec<Matrix> = (0..2u64).map(|i| Matrix::random(33, 17, 131 + i)).collect();
+        let r = multiply_batched(&srv, &a_list, &b, &cfg_depth(1)).unwrap();
+        assert_eq!(r.padded, (34, 18, 30));
+        for (a, c) in a_list.iter().zip(&r.cs) {
+            assert_eq!((c.rows, c.cols), (33, 29));
+            assert!(c.allclose(&a.matmul(&b), 1e-4));
+        }
+    }
+
+    #[test]
+    fn batched_rejects_ragged_batches_and_mismatches() {
+        let srv = server();
+        let b = Matrix::random(8, 8, 140);
+        assert!(multiply_batched(&srv, &[], &b, &cfg_depth(1)).is_err());
+        let ragged = vec![Matrix::random(8, 8, 141), Matrix::random(10, 8, 142)];
+        assert!(multiply_batched(&srv, &ragged, &b, &cfg_depth(1)).is_err());
+        let mismatched = vec![Matrix::random(8, 9, 143)];
+        assert!(multiply_batched(&srv, &mismatched, &b, &cfg_depth(1)).is_err());
     }
 
     #[test]

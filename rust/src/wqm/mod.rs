@@ -22,7 +22,12 @@
 //! [`registry::JobRegistry`] extends the stealing scope from arrays to
 //! *jobs*: an epoch-tagged table of live per-job `AtomicWqm`s that the
 //! serving runtime's persistent workers scan, so an idle worker can
-//! steal from the fullest queue of any live job, not just its own.
+//! steal from the fullest queue of any live job, not just its own. The
+//! registered job state carries each sub-job's packed operands as
+//! refcounted halves (`Arc<PackedA>` / `Arc<PackedB>`): a worker's
+//! table snapshot pins at most one `Arc` per live job, and a shared-B
+//! batch publishes one packed B across its whole task fan-out instead
+//! of one per sub-job.
 
 pub mod atomic;
 pub mod registry;

@@ -5,7 +5,8 @@
 //! serving runtime must also equalize load *between jobs*. The registry
 //! is the shared table the server's persistent workers scan for live
 //! jobs: each entry is an `Arc` to a job (in practice a job's
-//! [`super::AtomicWqm`] plus its execution context) tagged with the
+//! [`super::AtomicWqm`] plus its execution context — operands and the
+//! refcounted packed-panel halves its sub-jobs share) tagged with the
 //! epoch at which it was registered.
 //!
 //! Concurrency design: membership changes (register/unregister) are rare

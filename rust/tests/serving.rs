@@ -181,6 +181,112 @@ fn batched_small_jobs_bit_identical_to_individual_runs() {
 }
 
 #[test]
+fn batched_gemm_bit_identical_across_ragged_shapes() {
+    // The acceptance gate for the shared-operand pipeline: for ragged
+    // prime/odd shapes, `submit_batched_gemm` must produce bit-identical
+    // results to N individual `submit` calls — same packed layout, same
+    // microkernel, same per-element ascending-k accumulation, shared or
+    // not. (M, K, N) triples deliberately hit every edge: rows % MR,
+    // cols % NR, blocks clipping at both matrix edges.
+    let run = RunConfig::square(2, 16);
+    for (k, n, ms, seed) in [
+        (13usize, 29usize, vec![7usize, 31, 1, 17], 600u64),
+        (23, 17, vec![19, 3, 41], 700),
+        (5, 53, vec![37, 11, 13, 9, 2], 800),
+    ] {
+        let b = Matrix::random(k, n, seed);
+        let many_a: Vec<Matrix> = ms
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| Matrix::random(m, k, seed + 1 + i as u64))
+            .collect();
+
+        // Individual submissions on their own server.
+        let individual = server(cfg(4, 16));
+        let singles: Vec<Matrix> = many_a
+            .iter()
+            .enumerate()
+            .map(|(i, a)| {
+                individual
+                    .submit(GemmJob {
+                        id: i as u64,
+                        a: a.clone(),
+                        b: b.clone(),
+                        run: Some(run),
+                    })
+                    .unwrap()
+                    .wait()
+                    .unwrap()
+                    .c
+            })
+            .collect();
+
+        // The same jobs as one shared-B batch.
+        let batched = server(cfg(4, 16));
+        let results = batched
+            .submit_batched_gemm(b.clone(), many_a.clone(), Some(run))
+            .unwrap()
+            .wait_all()
+            .unwrap();
+        assert_eq!(results.len(), singles.len());
+        for ((i, r), (single, a)) in
+            results.iter().enumerate().zip(singles.iter().zip(&many_a))
+        {
+            assert_eq!(r.id, i as u64, "results in many_a order");
+            assert_eq!(
+                r.c.data, single.data,
+                "shared-B result {i} ({}x{k}x{n}) not bit-identical",
+                a.rows
+            );
+            // And both agree with the oracle (not just with each other).
+            assert!(r.c.allclose(&a.matmul(&b), 1e-4));
+        }
+    }
+}
+
+#[test]
+fn batched_gemm_conserves_one_b_pack() {
+    // Pack conservation, metrics-asserted: N sub-jobs against one B
+    // perform exactly one B pack and N A packs; the N-1 avoided packs
+    // are recorded as panels_shared; individual submission of the same
+    // workload pays N B packs.
+    let run = RunConfig::square(2, 16);
+    let n_jobs = 6u64;
+    let b = Matrix::random(19, 27, 1000);
+    let many_a: Vec<Matrix> =
+        (0..n_jobs).map(|i| Matrix::random(21, 19, 1001 + i)).collect();
+
+    let batched = server(cfg(4, 16));
+    batched
+        .submit_batched_gemm(b.clone(), many_a.clone(), Some(run))
+        .unwrap()
+        .wait_all()
+        .unwrap();
+    let m = batched.metrics();
+    assert_eq!(m.b_panel_packs(), 1, "shared B must be packed exactly once");
+    assert_eq!(m.a_panel_packs(), n_jobs);
+    assert_eq!(m.panels_shared(), n_jobs - 1);
+    assert_eq!(m.panel_copies(), 0, "no per-task gathers on the golden path");
+    let stats = batched.stats();
+    assert_eq!(stats.b_panel_packs, 1);
+    assert_eq!(stats.panels_shared, n_jobs - 1);
+    assert_eq!(stats.shared_b_groups, 1);
+    assert_eq!(stats.batched_jobs, n_jobs);
+
+    // Baseline: the same traffic submitted individually packs B per job.
+    let individual = server(cfg(4, 16));
+    for (i, a) in many_a.into_iter().enumerate() {
+        individual
+            .submit(GemmJob { id: i as u64, a, b: b.clone(), run: Some(run) })
+            .unwrap()
+            .wait()
+            .unwrap();
+    }
+    assert_eq!(individual.metrics().b_panel_packs(), n_jobs);
+    assert_eq!(individual.metrics().panels_shared(), 0);
+}
+
+#[test]
 fn try_submit_sheds_load_without_losing_jobs() {
     // try_submit either admits a job (which must then complete
     // correctly) or hands it back intact — never silently drops it.
