@@ -27,7 +27,7 @@ fn burst(srv: &JobServer, njobs: usize) -> anyhow::Result<()> {
         tickets.push(srv.submit(GemmJob {
             id: seed,
             a,
-            b,
+            b: b.into(),
             run: Some(RunConfig::square(4, 64)),
         })?);
     }
@@ -56,6 +56,7 @@ fn main() -> anyhow::Result<()> {
             batch_window: if batching { 8 } else { 1 },
             cross_job_stealing: cross,
             default_run: None,
+            ..ServerConfig::default()
         };
         let srv = JobServer::new(hw.clone(), NumericsEngine::golden(), cfg)?;
         let t0 = std::time::Instant::now();

@@ -26,7 +26,11 @@
 //!   individually (N private B packs);
 //! * `serving_batched_shared_b` — the same N jobs through
 //!   `submit_batched_gemm` (one B pack; `packs_avoided` annotates the
-//!   N-1 the sharing saved). This label is on the CI bench gate.
+//!   N-1 the sharing saved). This label is on the CI bench gate;
+//! * `serving_registered_weights` — the same batch through one
+//!   registered `WeightHandle` on a long-lived server: the warmup pass
+//!   is the cold miss that packs, every timed sample is a warm cache
+//!   hit (`cache_hits`/`cache_misses` annotations). Also CI-gated.
 
 use std::cell::Cell;
 
@@ -82,6 +86,7 @@ fn serve_once(
         batch_window: if batching { 8 } else { 1 },
         cross_job_stealing,
         default_run: None,
+        ..ServerConfig::default()
     };
     let srv = JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), cfg)
         .expect("server construction");
@@ -92,7 +97,7 @@ fn serve_once(
             srv.submit(GemmJob {
                 id: id as u64,
                 a: a.clone(),
-                b: b.clone(),
+                b: b.clone().into(),
                 run: Some(*run),
             })
             .expect("submit")
@@ -145,6 +150,7 @@ fn main() {
         batch_window: 1,
         cross_job_stealing: true,
         default_run: None,
+        ..ServerConfig::default()
     };
     let run = RunConfig::square(4, 64);
 
@@ -158,7 +164,7 @@ fn main() {
                 srv.submit(GemmJob {
                     id: id as u64,
                     a: a.clone(),
-                    b: b.clone(),
+                    b: b.clone().into(),
                     run: Some(run),
                 })
                 .expect("submit")
@@ -194,6 +200,31 @@ fn main() {
         packs_avoided.get() / shared_samples.get().max(1) as f64,
     );
     bench.annotate("jobs", NJOBS as f64);
+
+    // Registered weights: the same shared-B workload through one
+    // registered WeightHandle on a single long-lived server — the
+    // cross-call operand cache. The warmup pass packs once (the cold
+    // miss); every timed sample resolves the cached pack (warm hits),
+    // so this label measures the serving path with B pack traffic
+    // eliminated entirely. CI-gated.
+    let srv = JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), shared_cfg())
+        .expect("server construction");
+    let handle = srv.register_b(b.clone()).expect("register weight");
+    bench.run_throughput("serving_registered_weights", shared_flops, || {
+        let results = srv
+            .submit_batched_gemm(handle, many_a.clone(), Some(run))
+            .expect("registered submit")
+            .wait_all()
+            .expect("registered results");
+        assert_eq!(results.len(), NJOBS);
+    });
+    let stats = srv.stats();
+    assert_eq!(stats.b_panel_packs, 1, "registered weight packs once per process");
+    bench.annotate("b_panel_packs", stats.b_panel_packs as f64);
+    bench.annotate("cache_hits", stats.registry_hits as f64);
+    bench.annotate("cache_misses", stats.registry_misses as f64);
+    bench.annotate("jobs", NJOBS as f64);
+    srv.shutdown();
 
     if let Err(e) = bench.write_json("BENCH_serving.json") {
         eprintln!("could not write BENCH_serving.json: {e}");

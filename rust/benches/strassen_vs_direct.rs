@@ -40,6 +40,7 @@ fn main() {
             batch_window: 1,
             cross_job_stealing: true,
             default_run: Some(run),
+            ..ServerConfig::default()
         },
     )
     .expect("server construction");
@@ -49,7 +50,7 @@ fn main() {
     let flops = 2 * (DIM as u64).pow(3);
 
     bench.run_throughput("direct_server_256", flops, || {
-        let job = GemmJob { id: 0, a: a.clone(), b: b.clone(), run: Some(run) };
+        let job = GemmJob { id: 0, a: a.clone(), b: b.clone().into(), run: Some(run) };
         srv.submit(job).expect("submit").wait().expect("direct job")
     });
 

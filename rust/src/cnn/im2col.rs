@@ -124,17 +124,26 @@ pub fn conv_direct(input: &Matrix, filters: &Matrix, shape: &ConvShape) -> Matri
     result
 }
 
+/// The shared B operand of one conv layer: `filters^T` (`K x M`, from
+/// the Table II `M x K` filter matrix). This is the matrix a serving
+/// deployment registers **once** with the job server's operand registry
+/// ([`crate::coordinator::JobServer::register_b`]) so every batch of
+/// every epoch resolves the same cached pack instead of repacking.
+pub fn filter_operand(filters: &Matrix) -> Matrix {
+    filters.transpose()
+}
+
 /// Lower a whole batch through one conv layer to the server's shared-B
-/// shape: `(b, many_a)` with `b = filters^T` (`K x M`, packed once) and
-/// `many_a[i]` = image `i`'s patch rows (`N x K`). Each sub-result
-/// `C_i = A_i x b` is the `N x M` pixel-major output feature map —
-/// `C_i^T` is what [`conv_direct`] returns for the same image.
+/// shape: `(b, many_a)` with `b` = [`filter_operand`] (`K x M`, packed
+/// once) and `many_a[i]` = image `i`'s patch rows (`N x K`). Each
+/// sub-result `C_i = A_i x b` is the `N x M` pixel-major output feature
+/// map — `C_i^T` is what [`conv_direct`] returns for the same image.
 pub fn conv_batch_operands(
     inputs: &[Matrix],
     filters: &Matrix,
     shape: &ConvShape,
 ) -> (Matrix, Vec<Matrix>) {
-    let b = filters.transpose();
+    let b = filter_operand(filters);
     let many_a = inputs.iter().map(|img| im2col_patches(img, shape)).collect();
     (b, many_a)
 }

@@ -11,15 +11,22 @@
 //! [`schedule_network_served`] routes the same layer sequence through
 //! the serving runtime ([`crate::coordinator::JobServer`]) so a
 //! whole-network run is just another job stream — real numerics per
-//! layer, same schedule accounting. Conv layers take the im2col
-//! streaming front-end: a batch of images becomes one shared-B GEMM
-//! group ([`crate::coordinator::JobServer::submit_batched_gemm`]) whose
-//! packed filter matrix is built once and shared across the whole
-//! batch.
+//! layer, same schedule accounting. Weights are **registered state**,
+//! not per-call traffic: [`NetworkWeights::register`] loads every
+//! layer's B operand (conv filters via im2col's transposed
+//! [`super::im2col::filter_operand`], FC weight matrices as-is) into
+//! the server's operand registry once, and every batch/epoch streamed
+//! through [`schedule_network_served_with`] submits by
+//! [`crate::coordinator::WeightHandle`] — a filter reused by N batches
+//! packs exactly once per process, with repeat runs resolving the
+//! cached pack (registry hits) instead of repacking. Conv layers still
+//! ride the shared-B group shape
+//! ([`crate::coordinator::JobServer::submit_batched_gemm`]) so the
+//! within-call sharing composes with the cross-call cache.
 
 use crate::accelerator::{Accelerator, SimOptions};
 use crate::config::{HardwareConfig, RunConfig};
-use crate::coordinator::{GemmJob, JobServer};
+use crate::coordinator::{GemmJob, JobServer, WeightHandle};
 use crate::dse;
 use crate::gemm::Matrix;
 
@@ -110,29 +117,97 @@ enum LayerHandle {
     Batched(crate::coordinator::JobGroup),
 }
 
-/// Run a whole network through the serving runtime and fold the results
-/// into the same [`NetworkSchedule`] shape as [`schedule_network`] —
-/// compute times come from each job's simulation report,
-/// reconfiguration stalls from consecutive config changes in layer
-/// order.
-///
-/// **Conv layers stream through the shared-operand pipeline**: each is
-/// lowered via im2col ([`super::im2col`]) to `batch` patch-row GEMMs
-/// that all multiply the *same* filter matrix, and submitted with
-/// [`JobServer::submit_batched_gemm`] so the packed filter (`B =
-/// filters^T`, `K x M`) is packed exactly once per layer regardless of
-/// the batch size — the pack-traffic win `Metrics::panels_shared`
-/// counts. Known Table II conv layers get real im2col'd operands
-/// (deterministic random images); a conv layer without a known
-/// geometry falls back to synthetic patch matrices of the same GEMM
-/// shape. A conv layer's `secs` is the summed simulated time of its
-/// whole batch. Fully-connected layers keep Table II's convention (the
-/// FC batch is already folded into `M`) and run as one job each.
-///
-/// `Policy::PerLayerOptimal` leaves jobs unpinned, so the server picks
-/// per-layer configs (its `default_run` if set, else the DSE optimum —
-/// pass a server without a default to reproduce the DSE schedule);
-/// every image of a conv batch runs under one config by construction.
+/// A network's weights as server-resident state: one registered
+/// [`WeightHandle`] per layer. Built once
+/// ([`NetworkWeights::register`]), streamed through any number of
+/// [`schedule_network_served_with`] runs — each layer's operand packs
+/// at most once per process however many batches and epochs reuse it.
+pub struct NetworkWeights {
+    handles: Vec<WeightHandle>,
+}
+
+impl NetworkWeights {
+    /// Register every layer's B operand with `server` (the model-load
+    /// step): conv filters as the transposed
+    /// [`super::im2col::filter_operand`] (`K x M`), synthetic `K x M`
+    /// operands for conv layers without a known Table II geometry, and
+    /// `K x N` weight matrices for FC layers. Deterministic per-layer
+    /// seeds, so repeated registrations reproduce the same network.
+    pub fn register(server: &JobServer, layers: &[GemmLayer]) -> anyhow::Result<Self> {
+        let mut handles = Vec::with_capacity(layers.len());
+        for (i, l) in layers.iter().enumerate() {
+            match server.register_b(layer_weight(l, layer_seed(i))) {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // A half-registered network must not leak into a
+                    // long-lived server: release what was registered
+                    // before surfacing the failure.
+                    let _ = server.unregister_all(handles);
+                    return Err(e.context(format!("registering weight for layer {}", l.name)));
+                }
+            }
+        }
+        Ok(Self { handles })
+    }
+
+    /// The per-layer handles, in layer order.
+    pub fn handles(&self) -> &[WeightHandle] {
+        &self.handles
+    }
+
+    /// Drop every registered weight (cached packs freed; in-flight
+    /// work is unaffected). Sweeps the whole list even when one handle
+    /// fails (e.g. already unregistered directly), so a partial failure
+    /// never leaks the remaining weights.
+    pub fn unregister(self, server: &JobServer) -> anyhow::Result<()> {
+        server.unregister_all(self.handles)
+    }
+}
+
+/// Deterministic per-layer operand seed (stable across registration
+/// and activation building).
+fn layer_seed(i: usize) -> u64 {
+    0x5EED ^ ((i as u64) << 8)
+}
+
+/// One layer's deterministic B operand — what
+/// [`NetworkWeights::register`] loads into the server.
+fn layer_weight(l: &GemmLayer, seed: u64) -> Matrix {
+    if l.is_conv() {
+        match crate::cnn::conv_shape(l.name) {
+            Some(_) => super::im2col::filter_operand(&Matrix::random(l.m, l.k, seed + 1)),
+            None => Matrix::random(l.k, l.m, seed + 1),
+        }
+    } else {
+        Matrix::random(l.k, l.n, seed + 1)
+    }
+}
+
+/// One conv layer's batch of A operands: real im2col patch rows over
+/// deterministic random images when the geometry is known (Table II's
+/// conv1..conv5, per-group), synthetic patch matrices of the same
+/// `(N, K)` shape otherwise.
+fn conv_activations(l: &GemmLayer, batch: usize, seed: u64) -> Vec<Matrix> {
+    match crate::cnn::conv_shape(l.name) {
+        Some(shape) => {
+            let channels = shape.in_channels / shape.groups;
+            (0..batch)
+                .map(|i| {
+                    let img =
+                        Matrix::random(channels, shape.in_hw * shape.in_hw, seed + 2 + i as u64);
+                    super::im2col::im2col_patches(&img, &shape)
+                })
+                .collect()
+        }
+        None => (0..batch).map(|i| Matrix::random(l.n, l.k, seed + 2 + i as u64)).collect(),
+    }
+}
+
+/// [`schedule_network_served_with`] plus the weight lifecycle: register
+/// every layer's operand, stream one run, unregister. For repeated
+/// inference over the same network — where the registry's cross-call
+/// reuse pays off — register once with [`NetworkWeights::register`] and
+/// call [`schedule_network_served_with`] per batch/epoch instead.
 pub fn schedule_network_served(
     server: &JobServer,
     layers: &[GemmLayer],
@@ -142,23 +217,74 @@ pub fn schedule_network_served(
 ) -> anyhow::Result<NetworkSchedule> {
     anyhow::ensure!(!layers.is_empty(), "empty layer sequence");
     anyhow::ensure!(batch >= 1, "batch must be >= 1");
+    let weights = NetworkWeights::register(server, layers)?;
+    // Unregister before surfacing any run failure (a failed schedule
+    // must not leak the layer weights), and let a run error outrank an
+    // unregister error.
+    let schedule =
+        schedule_network_served_with(server, layers, &weights, policy, reconfig_secs, batch);
+    let unregistered = weights.unregister(server);
+    let schedule = schedule?;
+    unregistered?;
+    Ok(schedule)
+}
+
+/// Run a whole network through the serving runtime against
+/// pre-registered weights and fold the results into the same
+/// [`NetworkSchedule`] shape as [`schedule_network`] — compute times
+/// come from each job's simulation report, reconfiguration stalls from
+/// consecutive config changes in layer order.
+///
+/// **Every layer streams through its registered handle.** Conv layers
+/// are lowered via im2col ([`super::im2col`]) to `batch` patch-row
+/// GEMMs submitted as one shared-B group
+/// ([`JobServer::submit_batched_gemm`]) under the layer's
+/// [`WeightHandle`]: the packed filter is resolved from the operand
+/// registry — packed on first use, a cache hit ever after — so a
+/// filter reused by N batches across any number of calls packs exactly
+/// once per process. A conv layer's `secs` is the summed simulated
+/// time of its whole batch. Fully-connected layers keep Table II's
+/// convention (the FC batch is already folded into `M`) and run as one
+/// handle-carrying job each.
+///
+/// `Policy::PerLayerOptimal` leaves jobs unpinned, so the server picks
+/// per-layer configs (its `default_run` if set, else the DSE optimum —
+/// pass a server without a default to reproduce the DSE schedule);
+/// every image of a conv batch runs under one config by construction.
+pub fn schedule_network_served_with(
+    server: &JobServer,
+    layers: &[GemmLayer],
+    weights: &NetworkWeights,
+    policy: Policy,
+    reconfig_secs: f64,
+    batch: usize,
+) -> anyhow::Result<NetworkSchedule> {
+    anyhow::ensure!(!layers.is_empty(), "empty layer sequence");
+    anyhow::ensure!(batch >= 1, "batch must be >= 1");
+    anyhow::ensure!(
+        weights.handles.len() == layers.len(),
+        "weights registered for {} layers, schedule has {}",
+        weights.handles.len(),
+        layers.len()
+    );
     let mut handles = Vec::with_capacity(layers.len());
     for (i, l) in layers.iter().enumerate() {
         let run = match policy {
             Policy::PerLayerOptimal => None,
             Policy::Fixed(run) => Some(run),
         };
-        let seed = 0x5EED ^ ((i as u64) << 8);
+        let seed = layer_seed(i);
+        let weight = weights.handles[i];
         if l.is_conv() {
-            let (b, many_a) = conv_batch(l, batch, seed);
-            handles.push(LayerHandle::Batched(server.submit_batched_gemm(b, many_a, run)?));
+            let many_a = conv_activations(l, batch, seed);
+            handles
+                .push(LayerHandle::Batched(server.submit_batched_gemm(weight, many_a, run)?));
         } else {
             let a = Matrix::random(l.m, l.k, seed);
-            let b = Matrix::random(l.k, l.n, seed + 1);
             handles.push(LayerHandle::Single(server.submit(GemmJob {
                 id: i as u64,
                 a,
-                b,
+                b: weight.into(),
                 run,
             })?));
         }
@@ -205,33 +331,6 @@ pub fn schedule_network_served(
         total_secs: total,
         total_gflops: flops as f64 / total / 1e9,
     })
-}
-
-/// Build one conv layer's shared-B batch operands: real im2col over
-/// deterministic random images when the layer's geometry is known
-/// (Table II's conv1..conv5, per-group), synthetic patch matrices of
-/// the same `(N, K)` shape otherwise. Either way B is `K x M` — the
-/// transposed filter the whole batch shares.
-fn conv_batch(l: &GemmLayer, batch: usize, seed: u64) -> (Matrix, Vec<Matrix>) {
-    match crate::cnn::conv_shape(l.name) {
-        Some(shape) => {
-            let channels = shape.in_channels / shape.groups;
-            let imgs: Vec<Matrix> = (0..batch)
-                .map(|i| {
-                    Matrix::random(channels, shape.in_hw * shape.in_hw, seed + 2 + i as u64)
-                })
-                .collect();
-            let filters = Matrix::random(l.m, l.k, seed + 1);
-            super::im2col::conv_batch_operands(&imgs, &filters, &shape)
-        }
-        None => {
-            // Pre-extracted patch stream of the layer's GEMM shape.
-            let b = Matrix::random(l.k, l.m, seed + 1);
-            let many_a =
-                (0..batch).map(|i| Matrix::random(l.n, l.k, seed + 2 + i as u64)).collect();
-            (b, many_a)
-        }
-    }
 }
 
 /// The best single configuration for the whole network: evaluate every
@@ -350,6 +449,7 @@ mod tests {
                 batch_window: 1,
                 cross_job_stealing: true,
                 default_run: None,
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -406,6 +506,7 @@ mod tests {
                 batch_window: 1,
                 cross_job_stealing: true,
                 default_run: None,
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -446,6 +547,7 @@ mod tests {
                 batch_window: 1,
                 cross_job_stealing: true,
                 default_run: None,
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -458,6 +560,73 @@ mod tests {
         assert_eq!(m.b_panel_packs(), 1);
         assert_eq!(m.panels_shared(), 1);
         assert_eq!(m.jobs(), 2);
+    }
+
+    #[test]
+    fn repeated_runs_reuse_registered_weights() {
+        // The cross-call guarantee the registry exists for: register
+        // once, stream several batches — each layer's operand packs
+        // exactly once per process, later runs hit the cached pack.
+        use crate::coordinator::{NumericsEngine, ServerConfig};
+        let (hw, _) = setup();
+        let srv = JobServer::new(
+            hw,
+            NumericsEngine::golden(),
+            ServerConfig {
+                workers: 4,
+                queue_capacity: 16,
+                batch_max_tasks: 0,
+                batch_window: 1,
+                cross_job_stealing: true,
+                default_run: None,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        let layers = vec![
+            GemmLayer { name: "convX", m: 12, k: 18, n: 36 },
+            GemmLayer { name: "fcX", m: 16, k: 12, n: 20 },
+        ];
+        let run = RunConfig::square(2, 16);
+        let weights = NetworkWeights::register(&srv, &layers).unwrap();
+        assert_eq!(weights.handles().len(), 2);
+        let batch = 3;
+        for _ in 0..3 {
+            let s = schedule_network_served_with(
+                &srv,
+                &layers,
+                &weights,
+                Policy::Fixed(run),
+                0.0,
+                batch,
+            )
+            .unwrap();
+            assert_eq!(s.layers.len(), 2);
+        }
+        let m = srv.metrics();
+        // 2 operands x 3 runs: packed once apiece, hit twice apiece.
+        assert_eq!(m.b_panel_packs(), 2, "weights pack once per process, not per run");
+        assert_eq!(m.registry_misses(), 2);
+        assert_eq!(m.registry_hits(), 4);
+        assert_eq!(m.jobs(), 3 * (batch as u64 + 1));
+        weights.unregister(&srv).unwrap();
+        assert_eq!(srv.stats().registered_weights, 0);
+    }
+
+    #[test]
+    fn partial_registration_failure_leaks_nothing() {
+        // A layer whose operand cannot register (degenerate K) must
+        // roll back the layers registered before it.
+        use crate::coordinator::{NumericsEngine, ServerConfig};
+        let (hw, _) = setup();
+        let srv =
+            JobServer::new(hw, NumericsEngine::golden(), ServerConfig::default()).unwrap();
+        let layers = vec![
+            GemmLayer { name: "fc_ok", m: 16, k: 8, n: 16 },
+            GemmLayer { name: "fc_bad", m: 16, k: 0, n: 16 },
+        ];
+        assert!(NetworkWeights::register(&srv, &layers).is_err());
+        assert_eq!(srv.stats().registered_weights, 0, "failed registration must not leak");
     }
 
     #[test]

@@ -46,6 +46,19 @@ pub struct Metrics {
     /// Shared-B batch groups dispatched (one per
     /// `submit_batched_gemm` call that reached activation).
     shared_b_groups: AtomicU64,
+    /// Operand-registry resolutions served from an already-cached pack
+    /// — each hit is one whole-operand pack avoided *across* calls,
+    /// the cross-call extension of `panels_shared`.
+    registry_hits: AtomicU64,
+    /// Registry resolutions that had to pack (first use of a
+    /// `(handle, S_j)` key, or re-use after eviction).
+    registry_misses: AtomicU64,
+    /// Cached packs evicted by the registry's refcount-pinned LRU to
+    /// hold its byte budget.
+    registry_evictions: AtomicU64,
+    /// Gauge: bytes of packed data currently resident in the operand
+    /// registry (set, not accumulated).
+    registry_resident_bytes: AtomicU64,
     latencies: Mutex<LatencyAgg>,
 }
 
@@ -111,6 +124,22 @@ impl Metrics {
 
     pub fn add_shared_b_groups(&self, n: u64) {
         self.shared_b_groups.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_registry_hits(&self, n: u64) {
+        self.registry_hits.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_registry_misses(&self, n: u64) {
+        self.registry_misses.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_registry_evictions(&self, n: u64) {
+        self.registry_evictions.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn set_registry_resident_bytes(&self, bytes: u64) {
+        self.registry_resident_bytes.store(bytes, Ordering::Relaxed);
     }
 
     pub fn job_done(&self, host_secs: f64, sim_secs: f64) {
@@ -180,6 +209,22 @@ impl Metrics {
         self.shared_b_groups.load(Ordering::Relaxed)
     }
 
+    pub fn registry_hits(&self) -> u64 {
+        self.registry_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn registry_misses(&self) -> u64 {
+        self.registry_misses.load(Ordering::Relaxed)
+    }
+
+    pub fn registry_evictions(&self) -> u64 {
+        self.registry_evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn registry_resident_bytes(&self) -> u64 {
+        self.registry_resident_bytes.load(Ordering::Relaxed)
+    }
+
     /// (mean, max) host latency in seconds.
     pub fn host_latency(&self) -> (f64, f64) {
         let l = self.latencies.lock().unwrap();
@@ -233,6 +278,7 @@ impl Metrics {
         format!(
             "jobs={} (failed={}, batched={}) tasks={} steals={} (cross-job={}) \
              panel_copies={} packs(a/b)={}/{} panels_shared={} \
+             registry(hit/miss/evict)={}/{}/{} \
              host_lat(mean/p95/max)={:.3}s/{:.3}s/{:.3}s sim(mean)={:.6}s",
             self.jobs(),
             self.jobs_failed(),
@@ -244,6 +290,9 @@ impl Metrics {
             self.a_panel_packs(),
             self.b_panel_packs(),
             self.panels_shared(),
+            self.registry_hits(),
+            self.registry_misses(),
+            self.registry_evictions(),
             mean,
             self.host_latency_percentile(0.95),
             max,
@@ -269,6 +318,11 @@ mod tests {
         m.add_b_panel_packs(1);
         m.add_panels_shared(4);
         m.add_shared_b_groups(1);
+        m.add_registry_hits(3);
+        m.add_registry_misses(2);
+        m.add_registry_evictions(1);
+        m.set_registry_resident_bytes(4096);
+        m.set_registry_resident_bytes(2048); // gauge: set, not summed
         m.job_done(0.5, 0.001);
         m.job_done(1.5, 0.003);
         m.job_failed();
@@ -281,6 +335,10 @@ mod tests {
         assert_eq!(m.b_panel_packs(), 1);
         assert_eq!(m.panels_shared(), 4);
         assert_eq!(m.shared_b_groups(), 1);
+        assert_eq!(m.registry_hits(), 3);
+        assert_eq!(m.registry_misses(), 2);
+        assert_eq!(m.registry_evictions(), 1);
+        assert_eq!(m.registry_resident_bytes(), 2048);
         assert_eq!(m.jobs(), 2);
         assert_eq!(m.jobs_failed(), 1);
         let (mean, max) = m.host_latency();

@@ -13,7 +13,13 @@
 //!   layout fix) instead of once per task — and at most once per
 //!   *batch*: a shared-B workload
 //!   ([`server::JobServer::submit_batched_gemm`]) packs B once and
-//!   shares the `Arc<PackedB>` across every sub-job;
+//!   shares the `Arc<PackedB>` across every sub-job — and at most once
+//!   per *process* for weights registered in the server's
+//!   [`registry::OperandRegistry`] ([`server::JobServer::register_b`]):
+//!   submissions whose [`BOperand`] carries a [`WeightHandle`] resolve
+//!   to the cached pack, so successive batches, epochs, and layers
+//!   reusing a filter never repack it (refcount-pinned LRU eviction
+//!   under a byte budget keeps residency bounded);
 //! * workers pop/steal from a shared [`crate::wqm::AtomicWqm`] — one CAS
 //!   per claim on a packed `head|tail` word, no `Mutex<Wqm>`;
 //! * each worker runs the register-blocked microkernel over the packed
@@ -47,11 +53,16 @@
 
 pub mod engine;
 pub mod metrics;
+pub mod registry;
 pub mod server;
 
 pub use engine::NumericsEngine;
 pub use metrics::Metrics;
-pub use server::{JobGroup, JobServer, JobTicket, ServerConfig, ServerStats, TrySubmitError};
+pub use registry::{BOperand, OperandRegistry, WeightHandle};
+pub use server::{
+    JobGroup, JobServer, JobTicket, ServerConfig, ServerStats, TrySubmitBatchedError,
+    TrySubmitError,
+};
 
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
@@ -63,12 +74,15 @@ use crate::dse;
 use crate::gemm::{DisjointBlocks, Matrix, PackedPanels};
 use crate::wqm::AtomicWqm;
 
-/// One GEMM request.
+/// One GEMM request. The B side is a [`BOperand`]: an inline matrix
+/// (packed per job, the classic shape) or a [`WeightHandle`] registered
+/// with a [`JobServer`]'s operand registry, resolved at dispatch to the
+/// server-resident cached pack so repeated submissions never repack.
 #[derive(Debug, Clone)]
 pub struct GemmJob {
     pub id: u64,
     pub a: Matrix,
-    pub b: Matrix,
+    pub b: BOperand,
     /// Pin a config, or let the DSE choose.
     pub run: Option<RunConfig>,
 }
@@ -90,20 +104,11 @@ pub struct JobResult {
     pub batched: bool,
 }
 
-/// Shared planning policy: a job's pinned config wins, then the caller's
-/// default (the server's serving fast path), then the DSE optimum.
-pub(crate) fn choose_run(
-    hw: &HardwareConfig,
-    surface: &crate::analytical::BandwidthSurface,
-    job: &GemmJob,
-    default_run: Option<RunConfig>,
-) -> anyhow::Result<RunConfig> {
-    choose_run_dims(hw, surface, job.a.rows, job.a.cols, job.b.cols, job.run, default_run)
-}
-
-/// Dims-based core of [`choose_run`] — the single copy of the
-/// pin → default → DSE cascade, also used by the server's shared-B
-/// batch planning (which picks one config for many sub-problems).
+/// The single copy of the pin → default → DSE planning cascade: a job's
+/// pinned config wins, then the caller's default (the server's serving
+/// fast path), then the DSE optimum. Dims-based so callers whose B is a
+/// registered handle (resolved in the server's registry) plan the same
+/// way as inline jobs.
 pub(crate) fn choose_run_dims(
     hw: &HardwareConfig,
     surface: &crate::analytical::BandwidthSurface,
@@ -151,9 +156,25 @@ impl Coordinator {
         &self.accelerator
     }
 
-    /// Choose the run config for a job: pinned, or DSE-optimal.
+    /// Choose the run config for a job: pinned, or DSE-optimal. The
+    /// one-shot coordinator has no operand registry, so the job's B
+    /// must be inline ([`JobServer`] submissions resolve handles).
     pub fn plan_job(&self, job: &GemmJob) -> anyhow::Result<RunConfig> {
-        choose_run(&self.hw, self.accelerator.surface(), job, None)
+        let (_, b_cols) = job.b.inline_dims().ok_or_else(|| {
+            anyhow::anyhow!(
+                "registered weight handles resolve inside a JobServer; \
+                 Coordinator jobs need an inline B"
+            )
+        })?;
+        choose_run_dims(
+            &self.hw,
+            self.accelerator.surface(),
+            job.a.rows,
+            job.a.cols,
+            b_cols,
+            job.run,
+            None,
+        )
     }
 
     /// Execute one job: numerics through `N_p` work-stealing workers on
@@ -164,12 +185,14 @@ impl Coordinator {
     /// blocks through a shared [`DisjointBlocks`] writer — no global
     /// lock is taken between the first pop and the last write-back.
     pub fn run_job(&self, job: GemmJob) -> anyhow::Result<JobResult> {
-        anyhow::ensure!(job.a.cols == job.b.rows, "contraction mismatch");
         let run = self.plan_job(&job)?;
+        let GemmJob { id, a, b, .. } = job;
+        let b = b.into_inline().expect("plan_job already required an inline B");
+        anyhow::ensure!(a.cols == b.rows, "contraction mismatch");
         let start = Instant::now();
 
-        let a = &job.a;
-        let b = &job.b;
+        let a = &a;
+        let b = &b;
         let plan = BlockPlan::new(a.rows, a.cols, b.cols, run.si, run.sj);
         let wqm = AtomicWqm::from_partition(plan.partition(run.np));
         // In-process backends consume the packed panels zero-copy; the
@@ -228,7 +251,7 @@ impl Coordinator {
         let host_latency_secs = start.elapsed().as_secs_f64();
         self.metrics.job_done(host_latency_secs, sim.total_secs);
 
-        Ok(JobResult { id: job.id, c, run, sim, host_latency_secs, batched: false })
+        Ok(JobResult { id, c, run, sim, host_latency_secs, batched: false })
     }
 
     /// Serve a stream of jobs, replying on per-job channels. Jobs run
@@ -263,7 +286,7 @@ mod tests {
         let a = Matrix::random(100, 50, 1);
         let b = Matrix::random(50, 80, 2);
         let want = a.matmul(&b);
-        let job = GemmJob { id: 1, a, b, run: Some(RunConfig::square(2, 32)) };
+        let job = GemmJob { id: 1, a, b: b.into(), run: Some(RunConfig::square(2, 32)) };
         let r = co.run_job(job).unwrap();
         assert!(r.c.allclose(&want, 1e-4));
         assert_eq!(r.run, RunConfig::square(2, 32));
@@ -276,7 +299,7 @@ mod tests {
         let a = Matrix::random(128, 64, 3);
         let b = Matrix::random(64, 128, 4);
         let want = a.matmul(&b);
-        let r = co.run_job(GemmJob { id: 2, a, b, run: None }).unwrap();
+        let r = co.run_job(GemmJob { id: 2, a, b: b.into(), run: None }).unwrap();
         assert!(r.c.allclose(&want, 1e-4));
         assert!(r.run.validate(&co.hw).is_ok());
     }
@@ -286,7 +309,7 @@ mod tests {
         let co = coordinator();
         let a = Matrix::random(8, 8, 5);
         let b = Matrix::random(8, 8, 6);
-        let job = GemmJob { id: 3, a, b, run: Some(RunConfig::square(4, 256)) };
+        let job = GemmJob { id: 3, a, b: b.into(), run: Some(RunConfig::square(4, 256)) };
         assert!(co.run_job(job).is_err());
     }
 
@@ -296,7 +319,7 @@ mod tests {
         let job = GemmJob {
             id: 4,
             a: Matrix::random(8, 8, 7),
-            b: Matrix::random(9, 8, 8),
+            b: Matrix::random(9, 8, 8).into(),
             run: None,
         };
         assert!(co.run_job(job).is_err());
@@ -307,7 +330,7 @@ mod tests {
         let co = coordinator();
         let a = Matrix::random(64, 32, 9);
         let b = Matrix::random(32, 64, 10);
-        let job = GemmJob { id: 5, a, b, run: Some(RunConfig::square(4, 16)) };
+        let job = GemmJob { id: 5, a, b: b.into(), run: Some(RunConfig::square(4, 16)) };
         co.run_job(job).unwrap();
         let m = co.metrics();
         assert_eq!(m.jobs(), 1);
@@ -322,7 +345,7 @@ mod tests {
         let a = Matrix::random(100, 40, 21);
         let b = Matrix::random(40, 90, 22);
         let want = a.matmul(&b);
-        let job = GemmJob { id: 9, a, b, run: Some(RunConfig::square(4, 16)) };
+        let job = GemmJob { id: 9, a, b: b.into(), run: Some(RunConfig::square(4, 16)) };
         let r = co.run_job(job).unwrap();
         assert!(r.c.allclose(&want, 1e-4));
         assert_eq!(co.metrics().panel_copies(), 0);
@@ -337,7 +360,7 @@ mod tests {
         let a = Matrix::random(10, 8, 23);
         let b = Matrix::random(8, 12, 24);
         let want = a.matmul(&b);
-        let job = GemmJob { id: 10, a, b, run: Some(RunConfig::square(4, 16)) };
+        let job = GemmJob { id: 10, a, b: b.into(), run: Some(RunConfig::square(4, 16)) };
         let r = co.run_job(job).unwrap();
         assert!(r.c.allclose(&want, 1e-5));
         assert_eq!(co.metrics().tasks(), 1);
@@ -351,7 +374,7 @@ mod tests {
         let a = Matrix::random(32, 16, 11);
         let b = Matrix::random(16, 32, 12);
         let want = a.matmul(&b);
-        tx.send((GemmJob { id: 6, a, b, run: Some(RunConfig::square(2, 16)) }, rtx))
+        tx.send((GemmJob { id: 6, a, b: b.into(), run: Some(RunConfig::square(2, 16)) }, rtx))
             .unwrap();
         drop(tx);
         co.serve(rx);
@@ -374,7 +397,7 @@ mod tests {
                         .run_job(GemmJob {
                             id: t,
                             a,
-                            b,
+                            b: b.into(),
                             run: Some(RunConfig::square(2, 16)),
                         })
                         .unwrap();

@@ -1,0 +1,476 @@
+//! Server-resident packed-operand registry: register a weight once,
+//! never repack it across calls.
+//!
+//! PR 4's shared-B batches made a packed B shareable *within* one
+//! [`super::JobServer::submit_batched_gemm`] call; successive batches,
+//! epochs, and layers that reuse the same weight still repacked it per
+//! call. Inference servers solve this with an explicit model-load step
+//! — weights are stationary state, activations are traffic — and the
+//! related multi-array literature (Strassen Multisystolic Arrays,
+//! ArrayFlex) likewise preloads stationary operands. [`OperandRegistry`]
+//! is that model-load step for this serving runtime:
+//!
+//! * [`super::JobServer::register_b`] stores the operand once behind an
+//!   `Arc<Matrix>` and returns an opaque [`WeightHandle`];
+//! * submissions carry a [`BOperand`] — `Inline(Matrix)` keeps the old
+//!   per-call semantics, `Registered(WeightHandle)` resolves inside the
+//!   dispatcher to the cached [`PackedB`];
+//! * the pack cache is keyed by `(handle, sj)`: a handle resolved under
+//!   one block size reuses its pack on every later call (a *hit*),
+//!   while a different `S_j` re-derives a per-shape variant once (a
+//!   *miss* that packs and caches). The one-pack guarantee therefore
+//!   holds **across** calls, not just within one;
+//! * eviction is refcount-pinned LRU under a configurable byte budget
+//!   (`ServerConfig::registry_budget_bytes`): least-recently-used packs
+//!   leave first, but a pack still referenced outside the registry (an
+//!   in-flight job holds its `Arc`) is pinned and survives — the
+//!   registry may transiently exceed its budget rather than invalidate
+//!   live work. Evicting a pack never invalidates its handle: the next
+//!   resolution repacks from the retained matrix (a miss, not an error).
+//!
+//! Hit/miss/evict counters and the resident-bytes gauge land in
+//! [`Metrics`] next to `panels_shared`, so the cross-call win is as
+//! observable as PR 4's within-call sharing.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::gemm::{Matrix, PackedB};
+
+use super::metrics::Metrics;
+
+/// Process-unique registry ids, so a handle minted by one server can
+/// never silently resolve against another server's registry.
+static NEXT_REGISTRY_NONCE: AtomicU64 = AtomicU64::new(1);
+
+/// Opaque, copyable handle to a registered B operand. Obtained from
+/// [`super::JobServer::register_b`]; valid until the matching
+/// `unregister_b`. Submitting an unknown, unregistered, or
+/// foreign-server handle fails that job through its ticket, never the
+/// server — the handle carries its registry's nonce, so crossing two
+/// servers' handles is an error, not silently wrong numerics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WeightHandle {
+    registry: u64,
+    id: u64,
+}
+
+impl WeightHandle {
+    /// The raw per-registry id (diagnostics / logging).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl std::fmt::Display for WeightHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "weight#{}", self.id)
+    }
+}
+
+/// The B side of a submission: a one-shot inline matrix (packed per
+/// call, exactly the pre-registry behavior) or a registered weight
+/// resolved from the server's [`OperandRegistry`].
+#[derive(Debug, Clone)]
+pub enum BOperand {
+    /// Caller-owned operand; packed once for this call.
+    Inline(Matrix),
+    /// Server-resident weight; packed at most once per `(handle, S_j)`
+    /// for the whole process.
+    Registered(WeightHandle),
+}
+
+impl BOperand {
+    /// `(rows, cols)` when the operand is inline; `None` for a handle
+    /// (its dims live in the server's registry).
+    pub fn inline_dims(&self) -> Option<(usize, usize)> {
+        match self {
+            BOperand::Inline(m) => Some((m.rows, m.cols)),
+            BOperand::Registered(_) => None,
+        }
+    }
+
+    /// Borrow the inline matrix, if any.
+    pub fn as_inline(&self) -> Option<&Matrix> {
+        match self {
+            BOperand::Inline(m) => Some(m),
+            BOperand::Registered(_) => None,
+        }
+    }
+
+    /// Take the inline matrix back out, if any.
+    pub fn into_inline(self) -> Option<Matrix> {
+        match self {
+            BOperand::Inline(m) => Some(m),
+            BOperand::Registered(_) => None,
+        }
+    }
+
+    /// The registered handle, if any.
+    pub fn handle(&self) -> Option<WeightHandle> {
+        match self {
+            BOperand::Inline(_) => None,
+            BOperand::Registered(h) => Some(*h),
+        }
+    }
+}
+
+impl From<Matrix> for BOperand {
+    fn from(m: Matrix) -> Self {
+        BOperand::Inline(m)
+    }
+}
+
+impl From<WeightHandle> for BOperand {
+    fn from(h: WeightHandle) -> Self {
+        BOperand::Registered(h)
+    }
+}
+
+/// One cached pack variant of a registered operand.
+struct PackSlot {
+    pack: Arc<PackedB>,
+    bytes: u64,
+    /// Logical LRU timestamp; bumped on every hit.
+    stamp: u64,
+}
+
+/// One registered operand: the retained matrix plus its per-`sj` pack
+/// variants.
+struct Entry {
+    matrix: Arc<Matrix>,
+    packs: HashMap<usize, PackSlot>,
+}
+
+struct State {
+    entries: HashMap<u64, Entry>,
+    next_handle: u64,
+    /// LRU clock; bumped on every resolution.
+    clock: u64,
+    /// Bytes of packed data currently held by the registry (cached
+    /// packs only — retained matrices and in-flight clones the registry
+    /// no longer holds are not counted).
+    resident_bytes: u64,
+}
+
+/// The server-resident weight cache. Owned by the `JobServer`'s shared
+/// state; clients reach it through `register_b` / `unregister_b`, the
+/// dispatcher through [`OperandRegistry::resolve_pack`].
+pub struct OperandRegistry {
+    nonce: u64,
+    budget_bytes: u64,
+    metrics: Arc<Metrics>,
+    state: Mutex<State>,
+}
+
+impl OperandRegistry {
+    pub(crate) fn new(budget_bytes: u64, metrics: Arc<Metrics>) -> Self {
+        Self {
+            nonce: NEXT_REGISTRY_NONCE.fetch_add(1, Ordering::Relaxed),
+            budget_bytes,
+            metrics,
+            state: Mutex::new(State {
+                entries: HashMap::new(),
+                next_handle: 0,
+                clock: 0,
+                resident_bytes: 0,
+            }),
+        }
+    }
+
+    /// The entry key for `h`, or `None` for a handle minted by a
+    /// different registry (another server's handle must never resolve
+    /// here — it would be silently wrong numerics, not a cache miss).
+    fn key(&self, h: WeightHandle) -> Option<u64> {
+        (h.registry == self.nonce).then_some(h.id)
+    }
+
+    /// Register one B operand; packing is lazy (first resolution per
+    /// block size), so the handle is cheap to create and never packs at
+    /// a block size no job asks for.
+    pub fn register(&self, b: Matrix) -> anyhow::Result<WeightHandle> {
+        anyhow::ensure!(
+            b.rows > 0 && b.cols > 0,
+            "cannot register degenerate operand {}x{}",
+            b.rows,
+            b.cols
+        );
+        let mut st = self.state.lock().unwrap();
+        let h = WeightHandle { registry: self.nonce, id: st.next_handle };
+        st.next_handle += 1;
+        st.entries.insert(h.id, Entry { matrix: Arc::new(b), packs: HashMap::new() });
+        Ok(h)
+    }
+
+    /// Drop a registered operand and its cached packs. In-flight jobs
+    /// keep their `Arc` clones, so running work is unaffected; later
+    /// submissions under this handle fail through their tickets.
+    pub fn unregister(&self, h: WeightHandle) -> anyhow::Result<()> {
+        let key = self
+            .key(h)
+            .ok_or_else(|| anyhow::anyhow!("{h} belongs to a different server's registry"))?;
+        let mut st = self.state.lock().unwrap();
+        let entry = st
+            .entries
+            .remove(&key)
+            .ok_or_else(|| anyhow::anyhow!("{h} is not registered (double unregister?)"))?;
+        let freed: u64 = entry.packs.values().map(|s| s.bytes).sum();
+        st.resident_bytes -= freed;
+        self.metrics.set_registry_resident_bytes(st.resident_bytes);
+        Ok(())
+    }
+
+    /// `(rows, cols)` of a registered operand; `None` once unregistered
+    /// (or for another registry's handle).
+    pub fn dims(&self, h: WeightHandle) -> Option<(usize, usize)> {
+        let key = self.key(h)?;
+        let st = self.state.lock().unwrap();
+        st.entries.get(&key).map(|e| (e.matrix.rows, e.matrix.cols))
+    }
+
+    /// The retained operand matrix; `None` once unregistered (or for
+    /// another registry's handle).
+    pub fn matrix(&self, h: WeightHandle) -> Option<Arc<Matrix>> {
+        let key = self.key(h)?;
+        let st = self.state.lock().unwrap();
+        st.entries.get(&key).map(|e| e.matrix.clone())
+    }
+
+    /// Resolve the packed form of `h` at block size `sj`: a cached
+    /// variant is a **hit**; otherwise pack once (off the lock), cache
+    /// the result, and evict LRU-unpinned packs past the byte budget.
+    /// The returned `Arc` pins its pack against eviction for as long as
+    /// the caller (an in-flight job) holds it.
+    pub fn resolve_pack(&self, h: WeightHandle, sj: usize) -> anyhow::Result<Arc<PackedB>> {
+        let key = self
+            .key(h)
+            .ok_or_else(|| anyhow::anyhow!("{h} belongs to a different server's registry"))?;
+        let matrix = {
+            let mut st = self.state.lock().unwrap();
+            st.clock += 1;
+            let clock = st.clock;
+            let entry = st
+                .entries
+                .get_mut(&key)
+                .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?;
+            if let Some(slot) = entry.packs.get_mut(&sj) {
+                slot.stamp = clock;
+                self.metrics.add_registry_hits(1);
+                return Ok(slot.pack.clone());
+            }
+            entry.matrix.clone()
+        };
+        // Miss: pack outside the lock (packing a large weight must not
+        // stall concurrent register/stats calls), then publish. A
+        // concurrent unregister simply skips the caching, and a
+        // concurrent resolver that won the same-(handle, sj) race has
+        // its slot replaced — with its bytes returned to the ledger, so
+        // resident accounting survives the race exactly.
+        self.metrics.add_registry_misses(1);
+        self.metrics.add_b_panel_packs(1);
+        let pack = Arc::new(PackedB::pack(matrix.view(), sj));
+        let bytes = pack.packed_bytes();
+        let mut st = self.state.lock().unwrap();
+        st.clock += 1;
+        let stamp = st.clock;
+        if let Some(entry) = st.entries.get_mut(&key) {
+            if let Some(old) = entry.packs.insert(sj, PackSlot { pack: pack.clone(), bytes, stamp })
+            {
+                st.resident_bytes -= old.bytes;
+            }
+            st.resident_bytes += bytes;
+            self.evict_lru(&mut st);
+            self.metrics.set_registry_resident_bytes(st.resident_bytes);
+        }
+        Ok(pack)
+    }
+
+    /// Evict least-recently-used packs until the budget holds, skipping
+    /// pinned ones (`Arc` held outside the registry — an in-flight
+    /// job). With everything pinned the registry overshoots its budget
+    /// transiently instead of invalidating live work.
+    fn evict_lru(&self, st: &mut State) {
+        while st.resident_bytes > self.budget_bytes {
+            let victim = st
+                .entries
+                .iter()
+                .flat_map(|(id, e)| {
+                    e.packs
+                        .iter()
+                        .filter(|(_, slot)| Arc::strong_count(&slot.pack) == 1)
+                        .map(move |(sj, slot)| (slot.stamp, *id, *sj))
+                })
+                .min();
+            let Some((_, id, sj)) = victim else { break };
+            let slot = st
+                .entries
+                .get_mut(&id)
+                .expect("victim entry vanished under the lock")
+                .packs
+                .remove(&sj)
+                .expect("victim slot vanished under the lock");
+            st.resident_bytes -= slot.bytes;
+            self.metrics.add_registry_evictions(1);
+        }
+    }
+
+    /// Registered operands currently alive.
+    pub fn registered_weights(&self) -> usize {
+        self.state.lock().unwrap().entries.len()
+    }
+
+    /// Bytes of packed data the registry currently holds.
+    pub fn resident_bytes(&self) -> u64 {
+        self.state.lock().unwrap().resident_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry(budget: u64) -> (OperandRegistry, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::default());
+        (OperandRegistry::new(budget, metrics.clone()), metrics)
+    }
+
+    #[test]
+    fn register_resolve_hit_miss_counters() {
+        let (reg, m) = registry(u64::MAX);
+        let h = reg.register(Matrix::random(13, 29, 1)).unwrap();
+        assert_eq!(reg.dims(h), Some((13, 29)));
+        assert_eq!(reg.registered_weights(), 1);
+
+        let p1 = reg.resolve_pack(h, 16).unwrap();
+        assert_eq!((m.registry_hits(), m.registry_misses()), (0, 1));
+        assert_eq!(m.b_panel_packs(), 1, "a miss is one whole-operand pack");
+        let p2 = reg.resolve_pack(h, 16).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "a hit returns the cached pack");
+        assert_eq!((m.registry_hits(), m.registry_misses()), (1, 1));
+        assert_eq!(m.b_panel_packs(), 1, "hits never repack");
+
+        // A different block size is a per-shape variant: one more miss,
+        // cached under its own (handle, sj) key.
+        let p3 = reg.resolve_pack(h, 8).unwrap();
+        assert!(!Arc::ptr_eq(&p1, &p3));
+        assert_eq!((m.registry_hits(), m.registry_misses()), (1, 2));
+        assert_eq!(m.b_panel_packs(), 2);
+        assert_eq!(m.registry_resident_bytes(), reg.resident_bytes());
+        assert!(reg.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn resolved_pack_is_bit_identical_to_private_pack() {
+        let (reg, _) = registry(u64::MAX);
+        let b = Matrix::random(23, 37, 7);
+        let h = reg.register(b.clone()).unwrap();
+        let cached = reg.resolve_pack(h, 12).unwrap();
+        let private = PackedB::pack(b.view(), 12);
+        assert_eq!(cached.num_panels(), private.num_panels());
+        for bj in 0..private.num_panels() {
+            assert_eq!(cached.panel(bj), private.panel(bj));
+        }
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_order() {
+        // Budget fits exactly one of the two packs; resolving the
+        // second must evict the first (older stamp), and re-resolving
+        // the first is a miss again (repacked from the retained matrix,
+        // never an error).
+        let (reg, m) = registry(1);
+        let h1 = reg.register(Matrix::random(8, 8, 1)).unwrap();
+        let h2 = reg.register(Matrix::random(8, 8, 2)).unwrap();
+        let p1 = reg.resolve_pack(h1, 8).unwrap();
+        drop(p1); // unpin
+        let p2 = reg.resolve_pack(h2, 8).unwrap();
+        assert_eq!(m.registry_evictions(), 1, "older pack evicted");
+        drop(p2);
+        let _p1_again = reg.resolve_pack(h1, 8).unwrap();
+        assert_eq!(m.registry_misses(), 3, "evicted pack resolves as a fresh miss");
+        assert_eq!(m.registry_evictions(), 2);
+        assert_eq!(m.registry_hits(), 0);
+    }
+
+    #[test]
+    fn inflight_pack_is_pinned_against_eviction() {
+        // The refcount pin: a pack whose Arc is held outside the
+        // registry (an in-flight job) survives eviction even when the
+        // budget is blown; the registry overshoots instead.
+        let (reg, m) = registry(1);
+        let h1 = reg.register(Matrix::random(8, 8, 1)).unwrap();
+        let h2 = reg.register(Matrix::random(8, 8, 2)).unwrap();
+        let pinned = reg.resolve_pack(h1, 8).unwrap(); // held: strong_count 2
+        let bytes_one = reg.resident_bytes();
+        let also_pinned = reg.resolve_pack(h2, 8).unwrap();
+        assert_eq!(m.registry_evictions(), 0, "both packs pinned, none evictable");
+        assert_eq!(reg.resident_bytes(), 2 * bytes_one, "budget transiently exceeded");
+        // Releasing the pins makes them evictable on the next pressure.
+        drop(pinned);
+        drop(also_pinned);
+        let h3 = reg.register(Matrix::random(8, 8, 3)).unwrap();
+        let _p3 = reg.resolve_pack(h3, 8).unwrap();
+        assert!(m.registry_evictions() >= 2, "released packs evicted under pressure");
+        assert_eq!(reg.resident_bytes(), bytes_one, "only the fresh pinned pack remains");
+    }
+
+    #[test]
+    fn unregister_frees_and_invalidates() {
+        let (reg, m) = registry(u64::MAX);
+        let h = reg.register(Matrix::random(8, 8, 1)).unwrap();
+        let held = reg.resolve_pack(h, 8).unwrap();
+        assert!(reg.resident_bytes() > 0);
+        reg.unregister(h).unwrap();
+        assert_eq!(reg.resident_bytes(), 0);
+        assert_eq!(m.registry_resident_bytes(), 0);
+        assert_eq!(reg.registered_weights(), 0);
+        assert!(reg.dims(h).is_none());
+        assert!(reg.matrix(h).is_none());
+        assert!(reg.resolve_pack(h, 8).is_err(), "handle dead after unregister");
+        assert!(reg.unregister(h).is_err(), "double unregister is an error");
+        // The in-flight clone stays valid — unregistering never yanks
+        // data out from under running work.
+        assert!(held.num_panels() > 0);
+    }
+
+    #[test]
+    fn degenerate_register_rejected() {
+        let (reg, _) = registry(u64::MAX);
+        assert!(reg.register(Matrix::zeros(0, 4)).is_err());
+        assert!(reg.register(Matrix::zeros(4, 0)).is_err());
+    }
+
+    #[test]
+    fn boperand_conversions() {
+        let m = Matrix::random(3, 4, 9);
+        let inline: BOperand = m.clone().into();
+        assert_eq!(inline.inline_dims(), Some((3, 4)));
+        assert!(inline.handle().is_none());
+        assert_eq!(inline.into_inline().unwrap().data, m.data);
+        let h = WeightHandle { registry: 0, id: 42 };
+        let reg: BOperand = h.into();
+        assert!(reg.inline_dims().is_none());
+        assert!(reg.as_inline().is_none());
+        assert_eq!(reg.handle(), Some(h));
+        assert_eq!(h.to_string(), "weight#42");
+    }
+
+    #[test]
+    fn foreign_handle_never_resolves() {
+        // A handle minted by one registry must be an error — not a
+        // lookup into same-numbered state — on any other registry.
+        let (r1, _) = registry(u64::MAX);
+        let (r2, _) = registry(u64::MAX);
+        let h1 = r1.register(Matrix::random(4, 4, 1)).unwrap();
+        let h2 = r2.register(Matrix::random(6, 6, 2)).unwrap();
+        assert_eq!((h1.id(), h2.id()), (0, 0), "same raw id, different registries");
+        assert_ne!(h1, h2, "nonce distinguishes the handles");
+        assert!(r2.dims(h1).is_none());
+        assert!(r2.matrix(h1).is_none());
+        assert!(r2.resolve_pack(h1, 8).is_err());
+        assert!(r2.unregister(h1).is_err());
+        assert_eq!(r2.registered_weights(), 1, "foreign unregister must not evict");
+        assert!(r1.resolve_pack(h1, 8).is_ok());
+    }
+}

@@ -33,7 +33,15 @@
 //!   `Metrics::b_panel_packs`; the N-1 avoided packs land in
 //!   `Metrics::panels_shared`), and because an operand's packed layout
 //!   depends only on its own shape and block size, every sub-result is
-//!   bit-identical to an individual submission.
+//!   bit-identical to an individual submission;
+//! * **registered weights** ([`JobServer::register_b`]): the B side of
+//!   any submission is a [`BOperand`] — inline, or a [`WeightHandle`]
+//!   into the server-resident [`OperandRegistry`]. A registered weight
+//!   is packed at most once per `(handle, S_j)` for the whole process,
+//!   so the one-pack guarantee extends *across* calls: successive
+//!   batches, epochs, and layers reusing a filter resolve to the cached
+//!   `Arc<PackedB>` (a registry *hit*) instead of repacking. Eviction
+//!   is refcount-pinned LRU under `ServerConfig::registry_budget_bytes`.
 //!
 //! Completion is counter-driven: the worker that finishes a job's last
 //! task assembles the result, runs the timing simulation, records
@@ -55,7 +63,8 @@ use crate::wqm::{AtomicWqm, JobRegistry};
 
 use super::engine::NumericsEngine;
 use super::metrics::Metrics;
-use super::{choose_run, choose_run_dims, GemmJob, JobResult};
+use super::registry::{BOperand, OperandRegistry, WeightHandle};
+use super::{choose_run_dims, GemmJob, JobResult};
 
 /// Serving-runtime knobs.
 #[derive(Debug, Clone)]
@@ -79,6 +88,11 @@ pub struct ServerConfig {
     /// Used for unpinned jobs instead of running the DSE per job (the
     /// serving fast path). `None` = explore per job.
     pub default_run: Option<RunConfig>,
+    /// Byte budget of the operand registry's pack cache
+    /// ([`JobServer::register_b`]). Least-recently-used packs are
+    /// evicted past this figure unless pinned by an in-flight job;
+    /// evicted packs transparently repack on next use.
+    pub registry_budget_bytes: u64,
 }
 
 impl Default for ServerConfig {
@@ -91,6 +105,7 @@ impl Default for ServerConfig {
             batch_window: 8,
             cross_job_stealing: true,
             default_run: None,
+            registry_budget_bytes: 256 << 20,
         }
     }
 }
@@ -184,6 +199,20 @@ pub enum TrySubmitError {
     Closed(GemmJob),
 }
 
+/// Why [`JobServer::try_submit_batched_gemm`] rejected a batch; the
+/// shed variants hand every operand back so the caller can retry,
+/// spill, or route elsewhere — the same never-silently-drop contract as
+/// [`TrySubmitError`].
+#[derive(Debug)]
+pub enum TrySubmitBatchedError {
+    /// The batch had no A operands — nothing to run.
+    Empty,
+    /// Admission queue at capacity (backpressure); operands returned.
+    Full { b: BOperand, many_a: Vec<Matrix> },
+    /// Server is shutting down; operands returned.
+    Closed { b: BOperand, many_a: Vec<Matrix> },
+}
+
 /// Server-level snapshot: throughput, tail latency, pool utilization.
 #[derive(Debug, Clone)]
 pub struct ServerStats {
@@ -196,6 +225,18 @@ pub struct ServerStats {
     /// Shared-B batch groups dispatched via
     /// [`JobServer::submit_batched_gemm`].
     pub shared_b_groups: u64,
+    /// Operand-registry resolutions served from an already-cached pack
+    /// — whole-operand packs avoided *across* calls.
+    pub registry_hits: u64,
+    /// Registry resolutions that packed (first use per `(handle, S_j)`,
+    /// or re-use after eviction).
+    pub registry_misses: u64,
+    /// Cached packs evicted to hold the registry byte budget.
+    pub registry_evictions: u64,
+    /// Bytes of packed data resident in the operand registry right now.
+    pub registry_resident_bytes: u64,
+    /// Weights currently registered ([`JobServer::register_b`]).
+    pub registered_weights: u64,
     /// Per-task operand gathers on the numerics path (0 on the packed
     /// golden path; 2/task on the channel-fed PJRT backend).
     pub panel_copies: u64,
@@ -224,6 +265,7 @@ impl std::fmt::Display for ServerStats {
             f,
             "jobs={} (failed={}, batched={}, shared-b groups={}) tasks={} \
              steals={} (cross-job={}) packs(a/b)={}/{} panels_shared={} \
+             registry(hit/miss/evict)={}/{}/{} weights={} resident={}B \
              panel_copies={} {:.1} jobs/s \
              lat(p50/p95/p99)={:.4}s/{:.4}s/{:.4}s idle={:.1}%",
             self.jobs,
@@ -236,6 +278,11 @@ impl std::fmt::Display for ServerStats {
             self.a_panel_packs,
             self.b_panel_packs,
             self.panels_shared,
+            self.registry_hits,
+            self.registry_misses,
+            self.registry_evictions,
+            self.registered_weights,
+            self.registry_resident_bytes,
             self.panel_copies,
             self.throughput_jobs_per_sec,
             self.latency_p50_secs,
@@ -361,13 +408,28 @@ struct SharedSub {
     accepted_at: Instant,
 }
 
-/// An admitted [`JobServer::submit_batched_gemm`] call: one B shared by
-/// every sub-request, dispatched as a single super-job that packs B
-/// exactly once.
+/// An admitted [`JobServer::submit_batched_gemm`] call: one B (inline,
+/// or a registered weight handle) shared by every sub-request,
+/// dispatched as a single super-job that packs B at most once — and
+/// not at all when a registered handle hits the operand registry.
 struct SharedBatch {
-    b: Arc<Matrix>,
+    b: BOperand,
     run: Option<RunConfig>,
     subs: Vec<SharedSub>,
+}
+
+/// Split a shared batch's A operands into per-sub tickets and
+/// submissions (shared by the blocking and load-shedding entry points).
+fn shared_batch_parts(many_a: Vec<Matrix>) -> (Vec<JobTicket>, Vec<SharedSub>) {
+    let now = Instant::now();
+    let mut tickets = Vec::with_capacity(many_a.len());
+    let mut subs = Vec::with_capacity(many_a.len());
+    for (i, a) in many_a.into_iter().enumerate() {
+        let (tx, rx) = mpsc::channel();
+        tickets.push(JobTicket { id: i as u64, rx });
+        subs.push(SharedSub { id: i as u64, a, reply: tx, accepted_at: now });
+    }
+    (tickets, subs)
 }
 
 /// Admission-queue element: a lone job, an explicit group (from
@@ -518,6 +580,8 @@ struct Shared {
     accelerator: Accelerator,
     engine: NumericsEngine,
     metrics: Arc<Metrics>,
+    /// Server-resident packed-operand cache (registered weights).
+    operands: OperandRegistry,
     registry: JobRegistry<ActiveJob>,
     gate: WorkGate,
     stop: AtomicBool,
@@ -557,11 +621,13 @@ impl JobServer {
         if let Some(run) = cfg.default_run {
             run.validate(&hw)?;
         }
+        let metrics = Arc::new(Metrics::default());
         let shared = Arc::new(Shared {
             accelerator: Accelerator::new(hw.clone()),
             hw,
             engine,
-            metrics: Arc::new(Metrics::default()),
+            operands: OperandRegistry::new(cfg.registry_budget_bytes, metrics.clone()),
+            metrics,
             registry: JobRegistry::new(),
             gate: WorkGate::new(),
             stop: AtomicBool::new(false),
@@ -657,38 +723,116 @@ impl JobServer {
     }
 
     /// Submit a shared-operand batch: `many_a[i] x b` for every A, with
-    /// B packed **exactly once** and its `Arc<PackedB>` shared by all
+    /// B packed **at most once** and its `Arc<PackedB>` shared by all
     /// sub-jobs (CNN inference's shape: one filter matrix, a batch of
-    /// im2col'd images). The whole batch is one admission unit and one
-    /// dispatched super-job; every sub-job runs with the same block
-    /// configuration (`run`, else the server default, else the DSE
-    /// optimum for the largest sub-problem — valid for all since K and
-    /// N are shared). Results come back in `many_a` order with
-    /// `JobResult::id` = the A's index, and are bit-identical to
-    /// submitting each pair individually: the packed layout of an
-    /// operand depends only on its own shape and block size, and each
-    /// C element accumulates in ascending-k order regardless of
-    /// batching. Blocks under backpressure like [`JobServer::submit`].
+    /// im2col'd images). `b` is any [`BOperand`]: an inline `Matrix`
+    /// packs once for this call; a [`WeightHandle`] resolves through
+    /// the operand registry, so a repeat call under the same handle
+    /// packs **zero** times (a registry hit). The whole batch is one
+    /// admission unit and one dispatched super-job; every sub-job runs
+    /// with the same block configuration (`run`, else the server
+    /// default, else the DSE optimum for the largest sub-problem —
+    /// valid for all since K and N are shared). Results come back in
+    /// `many_a` order with `JobResult::id` = the A's index, and are
+    /// bit-identical to submitting each pair individually: the packed
+    /// layout of an operand depends only on its own shape and block
+    /// size, and each C element accumulates in ascending-k order
+    /// regardless of batching. Blocks under backpressure like
+    /// [`JobServer::submit`].
     pub fn submit_batched_gemm(
         &self,
-        b: Matrix,
+        b: impl Into<BOperand>,
         many_a: Vec<Matrix>,
         run: Option<RunConfig>,
     ) -> anyhow::Result<JobGroup> {
         anyhow::ensure!(!many_a.is_empty(), "empty shared-B batch");
-        let now = Instant::now();
-        let mut tickets = Vec::with_capacity(many_a.len());
-        let mut subs = Vec::with_capacity(many_a.len());
-        for (i, a) in many_a.into_iter().enumerate() {
-            let (tx, rx) = mpsc::channel();
-            tickets.push(JobTicket { id: i as u64, rx });
-            subs.push(SharedSub { id: i as u64, a, reply: tx, accepted_at: now });
-        }
-        let item = QueueItem::SharedB(SharedBatch { b: Arc::new(b), run, subs });
+        let (tickets, subs) = shared_batch_parts(many_a);
+        let item = QueueItem::SharedB(SharedBatch { b: b.into(), run, subs });
         match self.admission.push_blocking(item) {
             Ok(()) => Ok(JobGroup { tickets }),
             Err(_) => Err(anyhow::anyhow!("server closed; shared-B batch rejected")),
         }
+    }
+
+    /// Non-blocking [`JobServer::submit_batched_gemm`]: rejects with
+    /// **all operands handed back** when the admission queue is full
+    /// (shed load) or the server is closed, so shared-B traffic
+    /// respects the same backpressure contract as
+    /// [`JobServer::try_submit`].
+    pub fn try_submit_batched_gemm(
+        &self,
+        b: impl Into<BOperand>,
+        many_a: Vec<Matrix>,
+        run: Option<RunConfig>,
+    ) -> Result<JobGroup, TrySubmitBatchedError> {
+        let b = b.into();
+        if many_a.is_empty() {
+            return Err(TrySubmitBatchedError::Empty);
+        }
+        let (tickets, subs) = shared_batch_parts(many_a);
+        let item = QueueItem::SharedB(SharedBatch { b, run, subs });
+        match self.admission.try_push(item) {
+            Ok(()) => Ok(JobGroup { tickets }),
+            Err(e) => {
+                let (full, item) = match e {
+                    TryPushError::Full(item) => (true, item),
+                    TryPushError::Closed(item) => (false, item),
+                };
+                let QueueItem::SharedB(SharedBatch { b, subs, .. }) = item else {
+                    unreachable!("shared-B batch came back as another item kind")
+                };
+                let many_a = subs.into_iter().map(|s| s.a).collect();
+                Err(if full {
+                    TrySubmitBatchedError::Full { b, many_a }
+                } else {
+                    TrySubmitBatchedError::Closed { b, many_a }
+                })
+            }
+        }
+    }
+
+    /// Register a B operand as server-resident weight state — the
+    /// inference-server model-load step. The matrix is stored once;
+    /// its packed form is built lazily, at most once per block size,
+    /// and reused by every submission whose [`BOperand`] carries the
+    /// returned handle. See [`OperandRegistry`] for eviction semantics.
+    pub fn register_b(&self, b: Matrix) -> anyhow::Result<WeightHandle> {
+        self.shared.operands.register(b)
+    }
+
+    /// Drop a registered weight and its cached packs. In-flight jobs
+    /// holding the pack finish unaffected; later submissions under the
+    /// handle fail through their tickets.
+    pub fn unregister_b(&self, h: WeightHandle) -> anyhow::Result<()> {
+        self.shared.operands.unregister(h)
+    }
+
+    /// Unregister a whole set of weights, continuing through individual
+    /// failures (e.g. a handle already dropped directly) so a partial
+    /// error never leaks the remaining registrations; the first error
+    /// is reported after the sweep. The weight-set owners
+    /// (`cnn::schedule::NetworkWeights`, `strassen::StrassenWeights`)
+    /// release through this.
+    pub fn unregister_all(
+        &self,
+        handles: impl IntoIterator<Item = WeightHandle>,
+    ) -> anyhow::Result<()> {
+        let mut first_err = None;
+        for h in handles {
+            if let Err(e) = self.unregister_b(h) {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// The server-resident operand registry (resident bytes, live
+    /// weight count — the cache the dispatcher resolves handles in).
+    pub fn operand_registry(&self) -> &OperandRegistry {
+        &self.shared.operands
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
@@ -733,6 +877,11 @@ impl JobServer {
             cross_job_steals: m.cross_job_steals(),
             batched_jobs: m.batched_jobs(),
             shared_b_groups: m.shared_b_groups(),
+            registry_hits: m.registry_hits(),
+            registry_misses: m.registry_misses(),
+            registry_evictions: m.registry_evictions(),
+            registry_resident_bytes: m.registry_resident_bytes(),
+            registered_weights: self.shared.operands.registered_weights() as u64,
             panel_copies: m.panel_copies(),
             a_panel_packs: m.a_panel_packs(),
             b_panel_packs: m.b_panel_packs(),
@@ -792,23 +941,35 @@ impl Drop for JobServer {
 /// `None` comes back.
 fn plan_one(shared: &Shared, s: Submission) -> Option<Planned> {
     let planned = (|| -> anyhow::Result<(RunConfig, BlockPlan)> {
-        anyhow::ensure!(s.job.a.cols == s.job.b.rows, "contraction mismatch");
+        // A registered B plans from the registry's recorded dims; the
+        // pack itself resolves at activation.
+        let (b_rows, b_cols) = match &s.job.b {
+            BOperand::Inline(m) => (m.rows, m.cols),
+            BOperand::Registered(h) => shared
+                .operands
+                .dims(*h)
+                .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?,
+        };
+        anyhow::ensure!(s.job.a.cols == b_rows, "contraction mismatch");
         // BlockPlan::new panics on zero dims; in a server that would
         // take the dispatcher thread down — reject the job instead.
         anyhow::ensure!(
-            s.job.a.rows > 0 && s.job.a.cols > 0 && s.job.b.cols > 0,
+            s.job.a.rows > 0 && s.job.a.cols > 0 && b_cols > 0,
             "degenerate problem {}x{}x{}",
             s.job.a.rows,
             s.job.a.cols,
-            s.job.b.cols
+            b_cols
         );
-        let run = choose_run(
+        let run = choose_run_dims(
             &shared.hw,
             shared.accelerator.surface(),
-            &s.job,
+            s.job.a.rows,
+            s.job.a.cols,
+            b_cols,
+            s.job.run,
             shared.cfg.default_run,
         )?;
-        let plan = BlockPlan::new(s.job.a.rows, s.job.a.cols, s.job.b.cols, run.si, run.sj);
+        let plan = BlockPlan::new(s.job.a.rows, s.job.a.cols, b_cols, run.si, run.sj);
         Ok((run, plan))
     })();
     match planned {
@@ -836,34 +997,86 @@ fn plan_one(shared: &Shared, s: Submission) -> Option<Planned> {
 fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
     debug_assert!(!planned.is_empty());
     wait_for_inflight_slot(shared);
-    let batched = planned.len() > 1;
-    if batched {
-        shared.metrics.add_batched_jobs(planned.len() as u64);
+    // Resolve every sub's B first: an inline B wraps (and packs) here,
+    // a registered handle resolves through the operand registry — and a
+    // handle unregistered since planning fails that sub alone through
+    // its ticket while the rest of the batch proceeds.
+    struct Build {
+        id: u64,
+        run: RunConfig,
+        plan: BlockPlan,
+        a: Matrix,
+        b: Arc<Matrix>,
+        packed_b: Option<Arc<PackedB>>,
+        reply: mpsc::Sender<anyhow::Result<JobResult>>,
+        accepted_at: Instant,
     }
-    let mut subs = Vec::with_capacity(planned.len());
+    let inprocess = shared.engine.is_inprocess();
+    let mut builds: Vec<Build> = Vec::with_capacity(planned.len());
+    for p in planned {
+        let Planned { sub, run, plan, .. } = p;
+        let Submission { job, reply, accepted_at } = sub;
+        let GemmJob { id, a, b, .. } = job;
+        let resolved: anyhow::Result<(Arc<Matrix>, Option<Arc<PackedB>>)> = match b {
+            BOperand::Inline(m) => {
+                let m = Arc::new(m);
+                let packed = if inprocess {
+                    shared.metrics.add_b_panel_packs(1);
+                    Some(Arc::new(PackedB::pack(m.view(), run.sj)))
+                } else {
+                    None
+                };
+                Ok((m, packed))
+            }
+            BOperand::Registered(h) => (|| {
+                let m = shared
+                    .operands
+                    .matrix(h)
+                    .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?;
+                let packed = if inprocess {
+                    Some(shared.operands.resolve_pack(h, run.sj)?)
+                } else {
+                    None
+                };
+                Ok((m, packed))
+            })(),
+        };
+        match resolved {
+            Ok((b, packed_b)) => {
+                builds.push(Build { id, run, plan, a, b, packed_b, reply, accepted_at })
+            }
+            Err(e) => {
+                shared.metrics.job_failed();
+                let _ = reply.send(Err(e));
+            }
+        }
+    }
+    if builds.is_empty() {
+        return;
+    }
+    let batched = builds.len() > 1;
+    if batched {
+        shared.metrics.add_batched_jobs(builds.len() as u64);
+    }
+    let mut subs = Vec::with_capacity(builds.len());
     let mut tasks: Vec<SubTask> = Vec::new();
-    for (i, p) in planned.into_iter().enumerate() {
-        for task in p.plan.tasks() {
+    for (i, build) in builds.into_iter().enumerate() {
+        for task in build.plan.tasks() {
             tasks.push(SubTask { sub: i as u32, task });
         }
-        let a = p.sub.job.a;
-        let b = Arc::new(p.sub.job.b);
-        let panels = if shared.engine.is_inprocess() {
+        let panels = build.packed_b.map(|pb| {
             shared.metrics.add_a_panel_packs(1);
-            shared.metrics.add_b_panel_packs(1);
-            Some(PackedPanels::pack(a.view(), b.view(), &p.plan))
-        } else {
-            None
-        };
+            PackedPanels::from_parts(Arc::new(PackedA::pack(build.a.view(), build.run.si)), pb)
+        });
         subs.push(build_sub(
-            p.sub.job.id,
-            p.run,
-            a,
-            b,
+            build.id,
+            build.run,
+            build.a,
+            build.b,
             panels,
-            p.plan.num_tasks(),
-            p.sub.reply,
-            p.sub.accepted_at,
+            build.plan.num_tasks(),
+            build.reply,
+            build.accepted_at,
             batched,
         ));
     }
@@ -1047,25 +1260,37 @@ fn choose_shared_run(
     )
 }
 
-/// Dispatch a shared-B batch as one super-job: validate every sub
-/// against the shared B (mismatches are rejected individually through
-/// their tickets), choose one run config, pack B **once** into an
-/// `Arc<PackedB>`, pack a private [`PackedA`] per surviving sub, and
-/// publish the combined task grid. `Metrics::b_panel_packs` counts the
-/// single pack and `Metrics::panels_shared` the packs the sharing
-/// avoided.
+/// Dispatch a shared-B batch as one super-job: resolve the shared
+/// operand (inline, or a registered handle looked up in the operand
+/// registry), validate every sub against it (mismatches are rejected
+/// individually through their tickets), choose one run config, obtain
+/// the packed B **at most once** — an inline B packs here, a registered
+/// one resolves from the cache (zero packs on a hit) — pack a private
+/// [`PackedA`] per surviving sub, and publish the combined task grid.
+/// `Metrics::b_panel_packs` counts actual packs and
+/// `Metrics::panels_shared` the within-call packs the sharing avoided.
 fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
     let SharedBatch { b, run, subs } = batch;
-    // A degenerate B rejects every sub.
-    if b.rows == 0 || b.cols == 0 {
+    let reject_all = |subs: Vec<SharedSub>, msg: String| {
         for s in subs {
             shared.metrics.job_failed();
-            let _ = s.reply.send(Err(anyhow::anyhow!(
-                "shared-B batch rejected: degenerate B {}x{}",
-                b.rows,
-                b.cols
-            )));
+            let _ = s.reply.send(Err(anyhow::anyhow!("shared-B batch rejected: {msg}")));
         }
+    };
+    // Resolve the shared operand up front: a dead handle or a
+    // degenerate inline B rejects every sub.
+    let (b, handle): (Arc<Matrix>, Option<WeightHandle>) = match b {
+        BOperand::Inline(m) => (Arc::new(m), None),
+        BOperand::Registered(h) => match shared.operands.matrix(h) {
+            Some(m) => (m, Some(h)),
+            None => {
+                reject_all(subs, format!("{h} is not registered"));
+                return;
+            }
+        },
+    };
+    if b.rows == 0 || b.cols == 0 {
+        reject_all(subs, format!("degenerate B {}x{}", b.rows, b.cols));
         return;
     }
     // Per-sub validation first (a mismatched A fails alone, not the
@@ -1104,20 +1329,35 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
     };
     wait_for_inflight_slot(shared);
 
+    // Obtain the shared packed half at most once: an inline B packs
+    // here; a registered one resolves through the operand registry —
+    // zero packs on a hit, and a handle unregistered mid-flight rejects
+    // the batch instead of wedging the dispatcher. Every sub-job below
+    // clones the Arc, not the panels.
+    let packed_b = if shared.engine.is_inprocess() {
+        let pb = match handle {
+            None => {
+                shared.metrics.add_b_panel_packs(1);
+                Arc::new(PackedB::pack(b.view(), run.sj))
+            }
+            Some(h) => match shared.operands.resolve_pack(h, run.sj) {
+                Ok(pb) => pb,
+                Err(e) => {
+                    reject_all(accepted, format!("{e:#}"));
+                    return;
+                }
+            },
+        };
+        shared.metrics.add_panels_shared(accepted.len() as u64 - 1);
+        Some(pb)
+    } else {
+        None
+    };
     let batched = accepted.len() > 1;
     if batched {
         shared.metrics.add_batched_jobs(accepted.len() as u64);
     }
     shared.metrics.add_shared_b_groups(1);
-    // Pack the shared half exactly once; every sub-job below clones the
-    // Arc, not the panels.
-    let packed_b = if shared.engine.is_inprocess() {
-        shared.metrics.add_b_panel_packs(1);
-        shared.metrics.add_panels_shared(accepted.len() as u64 - 1);
-        Some(Arc::new(PackedB::pack(b.view(), run.sj)))
-    } else {
-        None
-    };
     let mut subs_built = Vec::with_capacity(accepted.len());
     let mut tasks: Vec<SubTask> = Vec::new();
     for (i, s) in accepted.into_iter().enumerate() {
@@ -1355,6 +1595,7 @@ mod tests {
             batch_window: 4,
             cross_job_stealing: true,
             default_run: Some(RunConfig::square(2, 16)),
+            ..ServerConfig::default()
         }
     }
 
@@ -1365,7 +1606,7 @@ mod tests {
         let b = Matrix::random(24, 40, 2);
         let want = a.matmul(&b);
         let t = srv
-            .submit(GemmJob { id: 7, a, b, run: Some(RunConfig::square(2, 16)) })
+            .submit(GemmJob { id: 7, a, b: b.into(), run: Some(RunConfig::square(2, 16)) })
             .unwrap();
         let r = t.wait().unwrap();
         assert_eq!(r.id, 7);
@@ -1380,7 +1621,7 @@ mod tests {
         let a = Matrix::random(40, 20, 3);
         let b = Matrix::random(20, 40, 4);
         let want = a.matmul(&b);
-        let r = srv.submit(GemmJob { id: 1, a, b, run: None }).unwrap().wait().unwrap();
+        let r = srv.submit(GemmJob { id: 1, a, b: b.into(), run: None }).unwrap().wait().unwrap();
         assert_eq!(r.run, RunConfig::square(2, 16));
         assert!(r.c.allclose(&want, 1e-4));
     }
@@ -1391,7 +1632,7 @@ mod tests {
         let job = GemmJob {
             id: 2,
             a: Matrix::random(8, 8, 5),
-            b: Matrix::random(9, 8, 6),
+            b: Matrix::random(9, 8, 6).into(),
             run: None,
         };
         assert!(srv.submit(job).unwrap().wait().is_err());
@@ -1404,7 +1645,7 @@ mod tests {
         let bad = GemmJob {
             id: 4,
             a: Matrix::zeros(0, 0),
-            b: Matrix::zeros(0, 8),
+            b: Matrix::zeros(0, 8).into(),
             run: None,
         };
         assert!(srv.submit(bad).unwrap().wait().is_err());
@@ -1413,7 +1654,7 @@ mod tests {
         let b = Matrix::random(8, 16, 32);
         let want = a.matmul(&b);
         let r = srv
-            .submit(GemmJob { id: 5, a, b, run: Some(RunConfig::square(2, 16)) })
+            .submit(GemmJob { id: 5, a, b: b.into(), run: Some(RunConfig::square(2, 16)) })
             .unwrap()
             .wait()
             .unwrap();
@@ -1426,7 +1667,7 @@ mod tests {
         let job = GemmJob {
             id: 3,
             a: Matrix::random(8, 8, 7),
-            b: Matrix::random(8, 8, 8),
+            b: Matrix::random(8, 8, 8).into(),
             run: Some(RunConfig::square(4, 256)),
         };
         assert!(srv.submit(job).unwrap().wait().is_err());
@@ -1441,7 +1682,7 @@ mod tests {
             let a = Matrix::random(20, 12, 100 + i);
             let b = Matrix::random(12, 24, 200 + i);
             wants.push(crate::gemm::packed_matmul(&a, &b, 16, 16));
-            jobs.push(GemmJob { id: i, a, b, run: Some(RunConfig::square(2, 16)) });
+            jobs.push(GemmJob { id: i, a, b: b.into(), run: Some(RunConfig::square(2, 16)) });
         }
         let tickets = srv.submit_batch(jobs).unwrap();
         for (t, want) in tickets.into_iter().zip(&wants) {
@@ -1462,7 +1703,7 @@ mod tests {
             let a = Matrix::random(24, 16, 700 + i);
             let b = Matrix::random(16, 20, 800 + i);
             wants.push(a.matmul(&b));
-            jobs.push(GemmJob { id: i, a, b, run: Some(RunConfig::square(2, 16)) });
+            jobs.push(GemmJob { id: i, a, b: b.into(), run: Some(RunConfig::square(2, 16)) });
         }
         let group = srv.submit_group(jobs).unwrap();
         assert_eq!(group.len(), 7);
@@ -1480,9 +1721,14 @@ mod tests {
         let good_a = Matrix::random(16, 8, 41);
         let good_b = Matrix::random(8, 16, 42);
         let jobs = vec![
-            GemmJob { id: 0, a: good_a, b: good_b, run: Some(RunConfig::square(2, 16)) },
+            GemmJob { id: 0, a: good_a, b: good_b.into(), run: Some(RunConfig::square(2, 16)) },
             // Contraction mismatch: rejected at planning.
-            GemmJob { id: 1, a: Matrix::random(8, 8, 43), b: Matrix::random(9, 8, 44), run: None },
+            GemmJob {
+                id: 1,
+                a: Matrix::random(8, 8, 43),
+                b: Matrix::random(9, 8, 44).into(),
+                run: None,
+            },
         ];
         let err = srv.submit_group(jobs).unwrap().wait_all().unwrap_err();
         assert!(format!("{err:#}").contains("job 1"), "got: {err:#}");
@@ -1499,7 +1745,12 @@ mod tests {
         let want = a.matmul(&b);
         // 6x6 = 36 tasks at si=16 — far above batch_max_tasks.
         let tickets = srv
-            .submit_batch(vec![GemmJob { id: 0, a, b, run: Some(RunConfig::square(2, 16)) }])
+            .submit_batch(vec![GemmJob {
+                id: 0,
+                a,
+                b: b.into(),
+                run: Some(RunConfig::square(2, 16)),
+            }])
             .unwrap();
         let r = tickets.into_iter().next().unwrap().wait().unwrap();
         assert!(!r.batched);
@@ -1519,7 +1770,7 @@ mod tests {
             let b = Matrix::random(16, n, 400 + i);
             let want = a.matmul(&b);
             let t = srv
-                .submit(GemmJob { id: i, a, b, run: Some(RunConfig::square(2, 16)) })
+                .submit(GemmJob { id: i, a, b: b.into(), run: Some(RunConfig::square(2, 16)) })
                 .unwrap();
             pending.push((t, want));
         }
@@ -1536,7 +1787,7 @@ mod tests {
         let b = Matrix::random(32, 64, 22);
         let want = a.matmul(&b);
         let t = srv
-            .submit(GemmJob { id: 9, a, b, run: Some(RunConfig::square(2, 16)) })
+            .submit(GemmJob { id: 9, a, b: b.into(), run: Some(RunConfig::square(2, 16)) })
             .unwrap();
         srv.shutdown();
         assert!(t.wait().unwrap().c.allclose(&want, 1e-4));
@@ -1548,7 +1799,7 @@ mod tests {
         for i in 0..5u64 {
             let a = Matrix::random(32, 16, i);
             let b = Matrix::random(16, 32, i + 50);
-            srv.submit(GemmJob { id: i, a, b, run: Some(RunConfig::square(2, 16)) })
+            srv.submit(GemmJob { id: i, a, b: b.into(), run: Some(RunConfig::square(2, 16)) })
                 .unwrap()
                 .wait()
                 .unwrap();
@@ -1648,7 +1899,7 @@ mod tests {
         let b = Matrix::random(8, 16, 943);
         let want = a.matmul(&b);
         let r = srv
-            .submit(GemmJob { id: 1, a, b, run: Some(RunConfig::square(2, 16)) })
+            .submit(GemmJob { id: 1, a, b: b.into(), run: Some(RunConfig::square(2, 16)) })
             .unwrap()
             .wait()
             .unwrap();
@@ -1675,6 +1926,158 @@ mod tests {
     }
 
     #[test]
+    fn registered_handle_roundtrip_and_per_shape_variants() {
+        let srv = server(small_cfg());
+        let b = Matrix::random(16, 24, 960);
+        let h = srv.register_b(b.clone()).unwrap();
+        let a1 = Matrix::random(20, 16, 961);
+        let want1 = a1.matmul(&b);
+        let r1 = srv
+            .submit(GemmJob { id: 0, a: a1, b: h.into(), run: Some(RunConfig::square(2, 16)) })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(r1.c.allclose(&want1, 1e-4));
+        // Same handle, same block size: a registry hit, no new pack.
+        let a2 = Matrix::random(12, 16, 962);
+        let want2 = a2.matmul(&b);
+        let r2 = srv
+            .submit(GemmJob { id: 1, a: a2, b: h.into(), run: Some(RunConfig::square(2, 16)) })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(r2.c.allclose(&want2, 1e-4));
+        // A different block size re-derives a per-shape variant once,
+        // cached under its own (handle, sj) key.
+        let a3 = Matrix::random(20, 16, 963);
+        let want3 = a3.matmul(&b);
+        let r3 = srv
+            .submit(GemmJob { id: 2, a: a3, b: h.into(), run: Some(RunConfig::square(2, 32)) })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(r3.c.allclose(&want3, 1e-4));
+        let s = srv.stats();
+        assert_eq!(s.b_panel_packs, 2, "one pack per (handle, sj) variant");
+        assert_eq!((s.registry_hits, s.registry_misses), (1, 2));
+        assert_eq!(s.registered_weights, 1);
+        assert!(s.registry_resident_bytes > 0);
+        assert!(s.to_string().contains("registry(hit/miss/evict)=1/2/0"));
+    }
+
+    #[test]
+    fn batched_gemm_with_handle_packs_once_across_calls() {
+        // The acceptance gate for the registry: three successive
+        // batched calls reusing one handle perform exactly ONE B pack
+        // total — the one-pack guarantee now holds across calls.
+        let srv = server(small_cfg());
+        let b = Matrix::random(16, 24, 970);
+        let h = srv.register_b(b.clone()).unwrap();
+        let run = Some(RunConfig::square(2, 16));
+        for call in 0..3u64 {
+            let many_a: Vec<Matrix> =
+                (0..4u64).map(|i| Matrix::random(20, 16, 971 + 10 * call + i)).collect();
+            let wants: Vec<Matrix> = many_a.iter().map(|a| a.matmul(&b)).collect();
+            let results =
+                srv.submit_batched_gemm(h, many_a, run).unwrap().wait_all().unwrap();
+            for (r, want) in results.iter().zip(&wants) {
+                assert!(r.c.allclose(want, 1e-4));
+            }
+        }
+        let s = srv.stats();
+        assert_eq!(s.b_panel_packs, 1, "one pack across all three calls");
+        assert_eq!((s.registry_hits, s.registry_misses), (2, 1));
+        assert_eq!(s.shared_b_groups, 3);
+        assert_eq!(s.panels_shared, 3 * 3, "within-call sharing still counted");
+    }
+
+    #[test]
+    fn handle_after_unregister_fails_through_tickets() {
+        let srv = server(small_cfg());
+        let h = srv.register_b(Matrix::random(16, 16, 980)).unwrap();
+        srv.unregister_b(h).unwrap();
+        assert!(srv.unregister_b(h).is_err(), "double unregister rejected");
+        // A lone submit and a shared batch both fail through their
+        // tickets, never the dispatcher.
+        let err = srv
+            .submit(GemmJob { id: 0, a: Matrix::random(8, 16, 981), b: h.into(), run: None })
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("not registered"), "got: {err:#}");
+        assert!(srv
+            .submit_batched_gemm(h, vec![Matrix::random(8, 16, 982)], None)
+            .unwrap()
+            .wait_all()
+            .is_err());
+        assert_eq!(srv.metrics().jobs_failed(), 2);
+        // The dispatcher survives to serve real work.
+        let a = Matrix::random(16, 8, 983);
+        let b = Matrix::random(8, 16, 984);
+        let want = a.matmul(&b);
+        let r = srv
+            .submit(GemmJob {
+                id: 1,
+                a,
+                b: b.clone().into(),
+                run: Some(RunConfig::square(2, 16)),
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(r.c.allclose(&want, 1e-4));
+    }
+
+    #[test]
+    fn try_submit_batched_gemm_empty_rejected() {
+        let srv = server(small_cfg());
+        assert!(matches!(
+            srv.try_submit_batched_gemm(Matrix::random(4, 4, 990), vec![], None),
+            Err(TrySubmitBatchedError::Empty)
+        ));
+    }
+
+    #[test]
+    fn admission_hands_back_shared_batch_intact() {
+        // The recovery path try_submit_batched_gemm builds on: a shed
+        // shared-B batch comes back with every operand intact.
+        let adm = Admission::new(1);
+        let (tx, _rx) = mpsc::channel::<anyhow::Result<JobResult>>();
+        adm.try_push(QueueItem::One(Submission {
+            job: GemmJob {
+                id: 0,
+                a: Matrix::zeros(1, 1),
+                b: Matrix::zeros(1, 1).into(),
+                run: None,
+            },
+            reply: tx.clone(),
+            accepted_at: Instant::now(),
+        }))
+        .map_err(|_| ())
+        .unwrap();
+        let batch = QueueItem::SharedB(SharedBatch {
+            b: Matrix::random(5, 7, 991).into(),
+            run: None,
+            subs: (0..2)
+                .map(|i| SharedSub {
+                    id: i,
+                    a: Matrix::random(3, 5, 992 + i),
+                    reply: tx.clone(),
+                    accepted_at: Instant::now(),
+                })
+                .collect(),
+        });
+        match adm.try_push(batch) {
+            Err(TryPushError::Full(QueueItem::SharedB(SharedBatch { b, subs, .. }))) => {
+                assert_eq!(b.inline_dims(), Some((5, 7)));
+                assert_eq!(subs.len(), 2);
+                assert!(subs.iter().all(|s| (s.a.rows, s.a.cols) == (3, 5)));
+            }
+            other => panic!("expected Full(SharedB), got {:?}", other.is_ok()),
+        }
+    }
+
+    #[test]
     fn admission_try_push_full_and_closed() {
         let adm = Admission::new(1);
         let (tx, _rx) = mpsc::channel();
@@ -1683,7 +2086,7 @@ mod tests {
                 job: GemmJob {
                     id: 0,
                     a: Matrix::zeros(1, 1),
-                    b: Matrix::zeros(1, 1),
+                    b: Matrix::zeros(1, 1).into(),
                     run: None,
                 },
                 reply: tx.clone(),
@@ -1712,7 +2115,7 @@ mod tests {
                     job: GemmJob {
                         id: i,
                         a: Matrix::zeros(1, 1),
-                        b: Matrix::zeros(1, 1),
+                        b: Matrix::zeros(1, 1).into(),
                         run: None,
                     },
                     reply: tx.clone(),

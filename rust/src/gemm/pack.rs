@@ -27,6 +27,11 @@
 //! layout of an operand depends only on its own shape and block size —
 //! not on the other operand — a shared half is bit-identical to one
 //! packed privately, so batched results match individual runs exactly.
+//! The server's operand registry
+//! ([`crate::coordinator::OperandRegistry`]) stretches the same
+//! guarantee across *calls*: a registered weight's `Arc<PackedB>` is
+//! cached per block size, so successive batches reusing it never
+//! repack.
 
 use std::sync::Arc;
 
@@ -133,6 +138,12 @@ impl PackedB {
     /// Total packed floats (diagnostics: equals the padded operand size).
     pub fn packed_len(&self) -> usize {
         self.panels.iter().map(Vec::len).sum()
+    }
+
+    /// Packed payload size in bytes — what a cached pack costs the
+    /// operand registry's byte budget.
+    pub fn packed_bytes(&self) -> u64 {
+        (self.packed_len() * std::mem::size_of::<f32>()) as u64
     }
 }
 

@@ -41,10 +41,13 @@
 //!   C blocks in place, timing via the simulator. Two shapes: the
 //!   one-job-at-a-time `Coordinator`, and the multi-job `JobServer` —
 //!   a persistent pool behind a bounded admission queue with cross-job
-//!   work stealing, small-job batching, and shared-operand batches
+//!   work stealing, small-job batching, shared-operand batches
 //!   (`submit_batched_gemm`: one B packed once, fanned out to N
-//!   sub-jobs as a `JobGroup`, bit-identical to individual runs), the
-//!   production serving runtime;
+//!   sub-jobs as a `JobGroup`, bit-identical to individual runs), and
+//!   a server-resident operand registry (`register_b` → `WeightHandle`:
+//!   weights packed at most once per process, resolved from cache by
+//!   every submission carrying the handle, refcount-pinned LRU
+//!   eviction under a byte budget), the production serving runtime;
 //! * [`strassen`] — the algorithmic layer above the serving runtime:
 //!   recursive Strassen decomposition (7 sub-products per quadrant
 //!   split instead of 8) whose per-level fan-out is submitted to the
@@ -73,5 +76,5 @@ pub mod util;
 pub mod wqm;
 
 pub use config::{HardwareConfig, RunConfig};
-pub use coordinator::{GemmJob, JobServer, ServerConfig};
+pub use coordinator::{BOperand, GemmJob, JobServer, ServerConfig, WeightHandle};
 pub use gemm::Matrix;

@@ -40,13 +40,18 @@ COMMANDS:
                                     Strassen-decomposed GEMM through the
                                     job server (depth: forced levels;
                                     default: model-chosen cutoff)
-  batch --file JOBS [--shared-b] [--workers W] [--golden] [--artifacts DIR]
+  batch --file JOBS [--shared-b | --register-weights [--repeat R]]
+        [--workers W] [--golden] [--artifacts DIR]
                                     serve a job file (lines: M K N [NP SI]);
                                     '-' reads stdin. --shared-b runs the
                                     batch (uniform K N required) against ONE
                                     shared B both ways — individual submits
                                     vs submit_batched_gemm — and reports the
-                                    pack-traffic win
+                                    pack-traffic win. --register-weights
+                                    runs the batch R times (default 3)
+                                    inline vs through one registered
+                                    WeightHandle and reports the repacks
+                                    avoided across runs
   schedule [--reconfig-us US]       whole-AlexNet schedule: per-layer
                                     optimal (w/ reconfiguration cost) vs
                                     best fixed config
@@ -60,7 +65,7 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
-const BOOL_FLAGS: &[&str] = &["golden", "check", "shared-b"];
+const BOOL_FLAGS: &[&str] = &["golden", "check", "shared-b", "register-weights"];
 
 fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
     let mut cmd = None;
@@ -282,7 +287,7 @@ fn cmd_run(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
     let b = Matrix::random(k, n, 43);
     let want = a.matmul(&b);
 
-    let result = co.run_job(GemmJob { id: 0, a, b, run })?;
+    let result = co.run_job(GemmJob { id: 0, a, b: b.into(), run })?;
 
     let err = result.c.max_abs_diff(&want);
     println!("config: {}", result.run);
@@ -481,6 +486,9 @@ fn cmd_batch(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
     if args.flags.contains_key("shared-b") {
         return cmd_batch_shared_b(hw, args, &jobs);
     }
+    if args.flags.contains_key("register-weights") {
+        return cmd_batch_register_weights(hw, args, &jobs);
+    }
 
     let engine = engine_from(args);
     println!("numerics backend: {} | {} jobs", engine.name, jobs.len());
@@ -494,7 +502,7 @@ fn cmd_batch(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
             let (rtx, rrx) = std::sync::mpsc::channel();
             let a = Matrix::random(*m, *k, id as u64 * 2);
             let b = Matrix::random(*k, *n, id as u64 * 2 + 1);
-            jtx.send((GemmJob { id: id as u64, a, b, run: *run }, rtx)).unwrap();
+            jtx.send((GemmJob { id: id as u64, a, b: b.into(), run: *run }, rtx)).unwrap();
             rrx
         })
         .collect();
@@ -535,6 +543,62 @@ fn cmd_batch(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The operands of a one-shared-B job file: what both the `--shared-b`
+/// and `--register-weights` batch modes run.
+struct SharedBWorkload {
+    b: Matrix,
+    many_a: Vec<Matrix>,
+    run: Option<RunConfig>,
+    k0: usize,
+    n0: usize,
+}
+
+/// Shared prelude of the shared-B batch modes: validate that the job
+/// file describes ONE B (uniform K and N) under ONE config, then
+/// synthesize the deterministic operands.
+fn shared_b_workload(
+    mode: &str,
+    jobs: &[((usize, usize, usize), Option<RunConfig>)],
+) -> anyhow::Result<SharedBWorkload> {
+    let ((_, k0, n0), run) = jobs[0];
+    anyhow::ensure!(
+        jobs.iter().all(|((_, k, n), _)| (*k, *n) == (k0, n0)),
+        "{mode} needs one B: every job line must share K and N"
+    );
+    // These modes run under ONE config; a file mixing pins would
+    // silently lose all but the first, so reject it instead.
+    anyhow::ensure!(
+        jobs.iter().all(|(_, r)| *r == run),
+        "{mode} runs the whole batch under one config: every job \
+         line must carry the same [NP SI] (or none)"
+    );
+    let b = Matrix::random(k0, n0, 1);
+    let many_a = jobs
+        .iter()
+        .enumerate()
+        .map(|(id, ((m, k, _), _))| Matrix::random(*m, *k, id as u64 * 2))
+        .collect();
+    Ok(SharedBWorkload { b, many_a, run, k0, n0 })
+}
+
+/// One `JobServer` for a batch mode, sized to admit the whole file.
+fn batch_server(
+    hw: &HardwareConfig,
+    args: &Args,
+    njobs: usize,
+    label: &str,
+) -> anyhow::Result<multi_array::coordinator::JobServer> {
+    use multi_array::coordinator::{JobServer, ServerConfig};
+    let engine = engine_from(args);
+    println!("{label}: numerics backend {}", engine.name);
+    let mut cfg = ServerConfig::default();
+    if let Some(w) = args.get_usize("workers")? {
+        cfg.workers = w;
+    }
+    cfg.queue_capacity = njobs.max(cfg.queue_capacity);
+    JobServer::new(hw.clone(), engine, cfg)
+}
+
 /// Shared-B mode of `marr batch`: the whole job file is one batch
 /// multiplying a single B, run through the `JobServer` both ways —
 /// individual `submit`s (N private B packs) and one
@@ -545,46 +609,16 @@ fn cmd_batch_shared_b(
     args: &Args,
     jobs: &[((usize, usize, usize), Option<RunConfig>)],
 ) -> anyhow::Result<()> {
-    use multi_array::coordinator::{JobServer, ServerConfig};
-
-    let ((_, k0, n0), run) = jobs[0];
-    anyhow::ensure!(
-        jobs.iter().all(|((_, k, n), _)| (*k, *n) == (k0, n0)),
-        "--shared-b needs one B: every job line must share K and N"
-    );
-    // A shared-B batch runs under ONE config; a file mixing pins would
-    // silently lose all but the first, so reject it instead.
-    anyhow::ensure!(
-        jobs.iter().all(|(_, r)| *r == run),
-        "--shared-b runs the whole batch under one config: every job \
-         line must carry the same [NP SI] (or none)"
-    );
-    let b = Matrix::random(k0, n0, 1);
-    let many_a: Vec<Matrix> = jobs
-        .iter()
-        .enumerate()
-        .map(|(id, ((m, k, _), _))| Matrix::random(*m, *k, id as u64 * 2))
-        .collect();
-
-    let server = |label: &str| -> anyhow::Result<JobServer> {
-        let engine = engine_from(args);
-        println!("{label}: numerics backend {}", engine.name);
-        let mut cfg = ServerConfig::default();
-        if let Some(w) = args.get_usize("workers")? {
-            cfg.workers = w;
-        }
-        cfg.queue_capacity = jobs.len().max(cfg.queue_capacity);
-        JobServer::new(hw.clone(), engine, cfg)
-    };
+    let SharedBWorkload { b, many_a, run, k0, n0 } = shared_b_workload("--shared-b", jobs)?;
 
     // Baseline: the same traffic, one submit per job.
-    let srv = server("individual")?;
+    let srv = batch_server(hw, args, jobs.len(), "individual")?;
     let t0 = std::time::Instant::now();
     let tickets: Vec<_> = many_a
         .iter()
         .enumerate()
         .map(|(id, a)| {
-            srv.submit(GemmJob { id: id as u64, a: a.clone(), b: b.clone(), run })
+            srv.submit(GemmJob { id: id as u64, a: a.clone(), b: b.clone().into(), run })
         })
         .collect::<anyhow::Result<_>>()?;
     for t in tickets {
@@ -595,7 +629,7 @@ fn cmd_batch_shared_b(
     srv.shutdown();
 
     // Shared: one admission unit, one packed B for the whole batch.
-    let srv = server("shared-B")?;
+    let srv = batch_server(hw, args, jobs.len(), "shared-B")?;
     let t0 = std::time::Instant::now();
     let results = srv.submit_batched_gemm(b, many_a, run)?.wait_all()?;
     let shared_wall = t0.elapsed().as_secs_f64();
@@ -619,5 +653,61 @@ fn cmd_batch_shared_b(
     );
     println!("  individual server: {individual_stats}");
     println!("  shared-B server:   {shared_stats}");
+    Ok(())
+}
+
+/// Registered-weights mode of `marr batch`: the whole job file is one
+/// shared-B batch run `--repeat` times through the `JobServer` both
+/// ways — inline B per call (one pack per run) and through one
+/// registered `WeightHandle` (one pack per *process*, later runs are
+/// registry hits) — so the cross-call repack traffic the operand
+/// registry eliminates is directly observable from the printed stats.
+fn cmd_batch_register_weights(
+    hw: &HardwareConfig,
+    args: &Args,
+    jobs: &[((usize, usize, usize), Option<RunConfig>)],
+) -> anyhow::Result<()> {
+    let SharedBWorkload { b, many_a, run, k0, n0 } =
+        shared_b_workload("--register-weights", jobs)?;
+    let repeat = args.get_usize("repeat")?.unwrap_or(3).max(1);
+
+    // Baseline: the same traffic, inline B every run (repacks per run).
+    let srv = batch_server(hw, args, jobs.len(), "inline")?;
+    let t0 = std::time::Instant::now();
+    for _ in 0..repeat {
+        srv.submit_batched_gemm(b.clone(), many_a.clone(), run)?.wait_all()?;
+    }
+    let inline_wall = t0.elapsed().as_secs_f64();
+    let inline_stats = srv.stats();
+    srv.shutdown();
+
+    // Registered: one model-load, every run resolves the cached pack.
+    let srv = batch_server(hw, args, jobs.len(), "registered")?;
+    let handle = srv.register_b(b)?;
+    let t0 = std::time::Instant::now();
+    for _ in 0..repeat {
+        srv.submit_batched_gemm(handle, many_a.clone(), run)?.wait_all()?;
+    }
+    let registered_wall = t0.elapsed().as_secs_f64();
+    let registered_stats = srv.stats();
+    srv.shutdown();
+
+    println!(
+        "\n{} jobs x ({k0} x {n0}) shared B, {repeat} repeated runs:",
+        many_a.len()
+    );
+    println!(
+        "  inline:     {inline_wall:.3} s wall | b_panel_packs={} (one per run)",
+        inline_stats.b_panel_packs
+    );
+    println!(
+        "  registered: {registered_wall:.3} s wall | b_panel_packs={} \
+         cache_hits={} ({} repacks avoided across runs)",
+        registered_stats.b_panel_packs,
+        registered_stats.registry_hits,
+        inline_stats.b_panel_packs.saturating_sub(registered_stats.b_panel_packs)
+    );
+    println!("  inline server:     {inline_stats}");
+    println!("  registered server: {registered_stats}");
     Ok(())
 }

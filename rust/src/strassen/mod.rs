@@ -34,16 +34,22 @@
 //! [`multiply_batched`] extends the planner to the shared-operand
 //! workload (one B, many A — the im2col inference stream): the 7-way
 //! fan-out repeats every B-side quadrant combination once per batch
-//! member, so each node materializes its 7 B combinations **once** and
-//! routes each through
-//! [`crate::coordinator::JobServer::submit_batched_gemm`], packing
-//! every B combination exactly once for the whole batch.
+//! member, so the combinations are **registered with the server's
+//! operand registry** ([`register_weights`] → [`StrassenWeights`],
+//! `7^depth` handles in recursion order) and each leaf pairing streams
+//! through [`crate::coordinator::JobServer::submit_batched_gemm`] under
+//! its handle — every B combination packed exactly once for the whole
+//! batch. Repeated inference over the same weights should hold the
+//! [`StrassenWeights`] and call [`multiply_batched_registered`] per
+//! batch: later recursions resolve every combination from the cache
+//! (registry hits) instead of re-forming `7^depth` packs per call.
 
 mod arena;
 mod planner;
 
 pub use arena::{ArenaStats, ScratchArena};
 pub use planner::{
-    multiply, multiply_batched, BatchedStrassenReport, Cutoff, StrassenConfig, StrassenReport,
+    multiply, multiply_batched, multiply_batched_registered, register_weights,
+    BatchedStrassenReport, Cutoff, StrassenConfig, StrassenReport, StrassenWeights,
     DIRECT_SPLIT_FANOUT,
 };

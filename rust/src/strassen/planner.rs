@@ -22,7 +22,7 @@
 
 use crate::analytical::{strassen_crossover, CrossoverPlan};
 use crate::config::RunConfig;
-use crate::coordinator::{GemmJob, JobServer};
+use crate::coordinator::{GemmJob, JobServer, WeightHandle};
 use crate::gemm::{ops, Matrix, MatrixView};
 
 use super::arena::{ArenaStats, ScratchArena};
@@ -127,16 +127,21 @@ enum Combo<'v> {
     Sub(MatrixView<'v>, MatrixView<'v>),
 }
 
+/// Stream one operand combination into `ov` — the single copy of the
+/// `Combo` → add/sub/copy kernel dispatch (the in-recursion
+/// [`materialize`] and the registration-time [`collect_b_combos`] must
+/// form bit-identical values, so they share it).
+fn fill_combo(ov: &mut crate::gemm::MatrixViewMut<'_>, combo: Combo<'_>) {
+    match combo {
+        Combo::Copy(x) => ops::copy_into(x, ov),
+        Combo::Add(x, y) => ops::add_into(x, y, ov),
+        Combo::Sub(x, y) => ops::sub_into(x, y, ov),
+    }
+}
+
 fn materialize(arena: &mut ScratchArena, rows: usize, cols: usize, combo: Combo<'_>) -> Matrix {
     let mut out = arena.take(rows, cols);
-    {
-        let mut ov = out.view_mut();
-        match combo {
-            Combo::Copy(x) => ops::copy_into(x, &mut ov),
-            Combo::Add(x, y) => ops::add_into(x, y, &mut ov),
-            Combo::Sub(x, y) => ops::sub_into(x, y, &mut ov),
-        }
-    }
+    fill_combo(&mut out.view_mut(), combo);
     out
 }
 
@@ -185,7 +190,8 @@ pub fn multiply(
     };
 
     let (c, padded) = if depth == 0 {
-        let job = GemmJob { id: ctx.fresh_id(), a: a.clone(), b: b.clone(), run: cfg.run };
+        let job =
+            GemmJob { id: ctx.fresh_id(), a: a.clone(), b: b.clone().into(), run: cfg.run };
         let r = server.submit(job)?.wait()?;
         ctx.leaf_gemms = 1;
         (r.c, (m, k, n))
@@ -269,7 +275,7 @@ fn node(
         // pool.
         let jobs: Vec<GemmJob> = pairs
             .into_iter()
-            .map(|(ta, tb)| GemmJob { id: ctx.fresh_id(), a: ta, b: tb, run: ctx.run })
+            .map(|(ta, tb)| GemmJob { id: ctx.fresh_id(), a: ta, b: tb.into(), run: ctx.run })
             .collect();
         let results = ctx.server.submit_group(jobs)?.wait_all()?;
         ctx.leaf_gemms += 7;
@@ -347,21 +353,139 @@ pub struct BatchedStrassenReport {
     pub arena: ArenaStats,
 }
 
+/// The B side of a batched Strassen recursion registered as
+/// server-resident weights: every **leaf-level B quadrant combination**
+/// (`7^depth` of them, in the recursion's visit order) lives in the
+/// server's operand registry under a [`WeightHandle`]. Build once with
+/// [`register_weights`], run any number of batched recursions with
+/// [`multiply_batched_registered`] — repeated inference over the same
+/// weight matrix resolves every combination from the cache (registry
+/// hits) instead of re-forming and repacking `7^depth` operands per
+/// call.
+pub struct StrassenWeights {
+    /// Leaf combinations in recursion (pre-order, M1..M7 per node)
+    /// visit order.
+    handles: Vec<WeightHandle>,
+    depth: usize,
+    /// Original B dims.
+    k: usize,
+    n: usize,
+    /// B dims after top-level padding to a multiple of `2^depth`.
+    padded_k: usize,
+    padded_n: usize,
+}
+
+impl StrassenWeights {
+    /// The recursion depth the combinations were registered for.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// The registered leaf-combination handles (`7^depth`, or 1 at
+    /// depth 0), in recursion visit order.
+    pub fn leaf_handles(&self) -> &[WeightHandle] {
+        &self.handles
+    }
+
+    /// Drop every registered combination (cached packs freed; in-flight
+    /// work is unaffected). Sweeps the whole list even when one handle
+    /// fails, so a partial failure never leaks the remainder.
+    pub fn unregister(self, server: &JobServer) -> anyhow::Result<()> {
+        server.unregister_all(self.handles)
+    }
+}
+
+/// Form and register the B-side quadrant-combination tree of `b` at
+/// `depth` — the Strassen model-load step. The combinations are built
+/// with the same row-streamed add/sub kernels the recursion uses, so a
+/// registered run is bit-identical to an inline one. `depth = 0`
+/// registers `b` itself as a single shared operand.
+pub fn register_weights(
+    server: &JobServer,
+    b: &Matrix,
+    depth: usize,
+) -> anyhow::Result<StrassenWeights> {
+    let (k, n) = (b.rows, b.cols);
+    anyhow::ensure!(k > 0 && n > 0, "degenerate B {k}x{n}");
+    anyhow::ensure!(
+        depth <= (k.ilog2().min(n.ilog2())) as usize,
+        "depth {depth} too deep for a {k}x{n} B (each level halves both dims)"
+    );
+    let mut handles = Vec::new();
+    let (padded_k, padded_n) = if depth == 0 {
+        handles.push(server.register_b(b.clone())?);
+        (k, n)
+    } else {
+        let align = 1usize << depth;
+        let (kp, np) = (k.next_multiple_of(align), n.next_multiple_of(align));
+        let bp = b.pad_to(kp, np);
+        collect_b_combos(server, &bp, depth, &mut handles)?;
+        (kp, np)
+    };
+    Ok(StrassenWeights { handles, depth, k, n, padded_k, padded_n })
+}
+
+/// Register the `7^depth_left` leaf combinations under `b`, pre-order
+/// (combination j's subtree fully before combination j+1's) — exactly
+/// the order [`node_batched_registered`] consumes them in.
+fn collect_b_combos(
+    server: &JobServer,
+    b: &Matrix,
+    depth_left: usize,
+    handles: &mut Vec<WeightHandle>,
+) -> anyhow::Result<()> {
+    let (k, n) = (b.rows, b.cols);
+    debug_assert!(k % 2 == 0 && n % 2 == 0, "combo dims must be even");
+    let (k2, n2) = (k / 2, n / 2);
+    let mut combos: Vec<Matrix> = Vec::with_capacity(7);
+    {
+        let bv = b.view();
+        let b11 = bv.block(0, 0, k2, n2);
+        let b12 = bv.block(0, n2, k2, n2);
+        let b21 = bv.block(k2, 0, k2, n2);
+        let b22 = bv.block(k2, n2, k2, n2);
+        let specs: [Combo<'_>; 7] = [
+            Combo::Add(b11, b22), // M1
+            Combo::Copy(b11),     // M2
+            Combo::Sub(b12, b22), // M3
+            Combo::Sub(b21, b11), // M4
+            Combo::Copy(b22),     // M5
+            Combo::Add(b11, b12), // M6
+            Combo::Add(b21, b22), // M7
+        ];
+        for cb in specs {
+            let mut combo = Matrix::zeros(k2, n2);
+            fill_combo(&mut combo.view_mut(), cb);
+            combos.push(combo);
+        }
+    }
+    for combo in combos {
+        if depth_left == 1 {
+            handles.push(server.register_b(combo)?);
+        } else {
+            collect_b_combos(server, &combo, depth_left - 1, handles)?;
+        }
+    }
+    Ok(())
+}
+
 /// Batched Strassen over a **shared B**: `cs[i] = a_list[i] x b` for a
 /// whole batch, reusing the B-side quadrant combinations across it.
 ///
 /// The 7-product fan-out repeats every B combination once per batch
 /// member — M2 of every member multiplies the *same* `B11`, M1 the same
 /// `B11 + B22`, and so on. A per-member recursion would rematerialize
-/// and repack each combination `batch` times; here each node forms its
-/// 7 B combinations **once**, pairs combination `j` with the batch's 7
-/// A-side combinations, and (at the leaf) routes each pairing through
-/// [`JobServer::submit_batched_gemm`] — one shared-B group per
-/// combination, so the packed `B` combo is built exactly once however
-/// large the batch is (`Metrics::b_panel_packs` = `7^depth` total,
-/// `Metrics::panels_shared` = `(batch-1) · 7^depth`). Above the leaf
-/// the recursion itself carries the whole batch down with the single
-/// shared B combination.
+/// and repack each combination `batch` times; here the combinations are
+/// **registered with the server's operand registry**
+/// ([`register_weights`]) and every leaf pairing streams through
+/// [`JobServer::submit_batched_gemm`] under its [`WeightHandle`] — one
+/// shared-B group per combination, the packed combo built exactly once
+/// however large the batch is (`Metrics::b_panel_packs` = `7^depth`
+/// total, `Metrics::panels_shared` = `(batch-1) · 7^depth`). This
+/// convenience wrapper registers, runs once, and unregisters; repeated
+/// recursions over the same `b` should hold a [`StrassenWeights`] and
+/// call [`multiply_batched_registered`] per batch so later runs hit
+/// the cache instead of re-forming `7^depth` packs.
 ///
 /// Every member must have the same shape (a batch of identical GEMMs —
 /// the im2col inference stream). Results are bit-identical to running
@@ -400,10 +524,71 @@ pub fn multiply_batched(
     };
     let depth = requested.min(depth_cap(m, k, n));
 
+    if depth == 0 {
+        // One direct shared-B group; nothing worth registering.
+        let group = server.submit_batched_gemm(b.clone(), a_list.to_vec(), cfg.run)?;
+        let cs = group.wait_all()?.into_iter().map(|r| r.c).collect();
+        return Ok(BatchedStrassenReport {
+            cs,
+            depth: 0,
+            leaf_groups: 1,
+            leaf_gemms: a_list.len() as u64,
+            level_nodes: Vec::new(),
+            level_spawns: Vec::new(),
+            padded: (m, k, n),
+            model,
+            arena: ScratchArena::new().stats(),
+        });
+    }
+    let weights = register_weights(server, b, depth)?;
+    // Unregister before surfacing any run failure: a failed recursion
+    // must not leak 7^depth registrations into a long-lived server.
+    let result = multiply_batched_registered(server, a_list, &weights, cfg.run);
+    let unregistered = weights.unregister(server);
+    let mut report = result?;
+    unregistered?;
+    report.model = model;
+    Ok(report)
+}
+
+/// Batched Strassen against **pre-registered** B-side combinations: the
+/// recursion carries only the A side — every leaf submits its shared-B
+/// group by [`WeightHandle`], so a run over weights already resolved
+/// once performs **zero** B-side forming or packing (pure registry
+/// hits). The recursion depth is `weights.depth()`; the report's
+/// `model` is `None` (register at the model's depth to combine both).
+pub fn multiply_batched_registered(
+    server: &JobServer,
+    a_list: &[Matrix],
+    weights: &StrassenWeights,
+    run: Option<RunConfig>,
+) -> anyhow::Result<BatchedStrassenReport> {
+    anyhow::ensure!(!a_list.is_empty(), "empty batch");
+    let (m, k) = (a_list[0].rows, a_list[0].cols);
+    anyhow::ensure!(
+        a_list.iter().all(|a| (a.rows, a.cols) == (m, k)),
+        "batch members must share one shape"
+    );
+    anyhow::ensure!(
+        k == weights.k,
+        "contraction mismatch: batch K = {k}, registered B K = {}",
+        weights.k
+    );
+    anyhow::ensure!(m > 0 && k > 0, "degenerate problem {m}x{k}x{}", weights.n);
+    if let Some(run) = run {
+        run.validate(server.hw())?;
+    }
+    let depth = weights.depth;
+    anyhow::ensure!(
+        depth <= depth_cap(m, k, weights.n),
+        "registered depth {depth} too deep for batch M = {m}; \
+         register shallower weights for this problem"
+    );
+
     let mut ctx = Ctx {
         server,
         arena: ScratchArena::new(),
-        run: cfg.run,
+        run,
         next_id: 0,
         leaf_gemms: 0,
         leaf_groups: 0,
@@ -412,22 +597,23 @@ pub fn multiply_batched(
     };
 
     let (cs, padded) = if depth == 0 {
-        let group = server.submit_batched_gemm(b.clone(), a_list.to_vec(), cfg.run)?;
+        let group = server.submit_batched_gemm(weights.handles[0], a_list.to_vec(), run)?;
         ctx.leaf_groups = 1;
         ctx.leaf_gemms = a_list.len() as u64;
         let cs = group.wait_all()?.into_iter().map(|r| r.c).collect();
-        (cs, (m, k, n))
+        (cs, (m, k, weights.n))
     } else {
         let align = 1usize << depth;
-        let (mp, kp, np) =
-            (m.next_multiple_of(align), k.next_multiple_of(align), n.next_multiple_of(align));
+        let mp = m.next_multiple_of(align);
+        let (kp, np) = (weights.padded_k, weights.padded_n);
         let aps: Vec<Matrix> = a_list.iter().map(|a| a.pad_to(mp, kp)).collect();
-        let bp = b.pad_to(kp, np);
-        let cps = node_batched(&mut ctx, aps, bp, depth, 0)?;
+        let mut cursor = 0usize;
+        let cps = node_batched_registered(&mut ctx, aps, np, depth, 0, weights, &mut cursor)?;
+        debug_assert_eq!(cursor, weights.handles.len(), "every leaf combo consumed");
         let cs = cps
             .into_iter()
             .map(|cp| {
-                let c = cp.block(0, 0, m, n);
+                let c = cp.block(0, 0, m, weights.n);
                 ctx.arena.put(cp);
                 c
             })
@@ -443,49 +629,28 @@ pub fn multiply_batched(
         level_nodes: ctx.level_nodes,
         level_spawns: ctx.level_spawns,
         padded,
-        model,
+        model: None,
         arena: ctx.arena.stats(),
     })
 }
 
-/// One batched recursion node: the whole batch against one B
-/// (`depth_left >= 1`; all dims even). Forms the 7 B combinations once,
-/// the 7 A combinations per member, and returns one product per member.
-fn node_batched(
+/// One batched recursion node against registered B combinations
+/// (`depth_left >= 1`; all dims even, `n` = this node's B columns).
+/// Forms the 7 A combinations per member; the B side is consumed as
+/// handles from `weights` in registration (pre-)order via `cursor`.
+fn node_batched_registered(
     ctx: &mut Ctx<'_>,
     a_list: Vec<Matrix>,
-    b: Matrix,
+    n: usize,
     depth_left: usize,
     level: usize,
+    weights: &StrassenWeights,
+    cursor: &mut usize,
 ) -> anyhow::Result<Vec<Matrix>> {
     let batch = a_list.len();
-    let (m, k, n) = (a_list[0].rows, a_list[0].cols, b.cols);
+    let (m, k) = (a_list[0].rows, a_list[0].cols);
     debug_assert!(m % 2 == 0 && k % 2 == 0 && n % 2 == 0, "node dims must be even");
     let (m2, k2, n2) = (m / 2, k / 2, n / 2);
-
-    // The shared half: 7 B combinations, materialized once per node
-    // however many members ride the batch.
-    let mut b_combos: Vec<Matrix> = Vec::with_capacity(7);
-    {
-        let bv = b.view();
-        let b11 = bv.block(0, 0, k2, n2);
-        let b12 = bv.block(0, n2, k2, n2);
-        let b21 = bv.block(k2, 0, k2, n2);
-        let b22 = bv.block(k2, n2, k2, n2);
-        let specs: [Combo<'_>; 7] = [
-            Combo::Add(b11, b22), // M1
-            Combo::Copy(b11),     // M2
-            Combo::Sub(b12, b22), // M3
-            Combo::Sub(b21, b11), // M4
-            Combo::Copy(b22),     // M5
-            Combo::Add(b11, b12), // M6
-            Combo::Add(b21, b22), // M7
-        ];
-        for cb in specs {
-            b_combos.push(materialize(&mut ctx.arena, k2, n2, cb));
-        }
-    }
-    ctx.arena.put(b);
 
     // Per-member A combinations: a_combos[j] holds combination j of
     // every member, in batch order.
@@ -519,10 +684,13 @@ fn node_batched(
     // ms[j][member] = combination j's product for that member.
     let ms: Vec<Vec<Matrix>> = if depth_left == 1 {
         // Submit all 7 shared-B groups before waiting on any, so the
-        // pool sees the node's whole fan-out at once.
+        // pool sees the node's whole fan-out at once. Each group's B is
+        // a registered handle: resolved from the cache, never re-formed.
         let mut groups = Vec::with_capacity(7);
-        for (bc, acs) in b_combos.into_iter().zip(a_combos) {
-            groups.push(ctx.server.submit_batched_gemm(bc, acs, ctx.run)?);
+        for acs in a_combos {
+            let h = weights.handles[*cursor];
+            *cursor += 1;
+            groups.push(ctx.server.submit_batched_gemm(h, acs, ctx.run)?);
         }
         ctx.leaf_groups += 7;
         ctx.leaf_gemms += 7 * batch as u64;
@@ -545,8 +713,16 @@ fn node_batched(
         ms
     } else {
         let mut ms = Vec::with_capacity(7);
-        for (bc, acs) in b_combos.into_iter().zip(a_combos) {
-            ms.push(node_batched(ctx, acs, bc, depth_left - 1, level + 1)?);
+        for acs in a_combos {
+            ms.push(node_batched_registered(
+                ctx,
+                acs,
+                n2,
+                depth_left - 1,
+                level + 1,
+                weights,
+                cursor,
+            )?);
         }
         ms
     };
@@ -601,6 +777,7 @@ mod tests {
             batch_window: 4,
             cross_job_stealing: true,
             default_run: Some(RunConfig::square(2, 16)),
+            ..ServerConfig::default()
         };
         JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), cfg).unwrap()
     }
@@ -764,6 +941,43 @@ mod tests {
             assert_eq!((c.rows, c.cols), (33, 29));
             assert!(c.allclose(&a.matmul(&b), 1e-4));
         }
+    }
+
+    #[test]
+    fn registered_weights_reused_across_recursions() {
+        // Repeated batched recursions over one registered B: the 7
+        // combos pack once on the first run and are pure cache hits on
+        // every later one — and repeat results stay bit-identical.
+        let srv = server();
+        let b = Matrix::random(24, 40, 150);
+        let a_list: Vec<Matrix> =
+            (0..2u64).map(|i| Matrix::random(32, 24, 151 + i)).collect();
+        let weights = register_weights(&srv, &b, 1).unwrap();
+        assert_eq!(weights.depth(), 1);
+        assert_eq!(weights.leaf_handles().len(), 7);
+        let run = Some(RunConfig::square(2, 16));
+        let first = multiply_batched_registered(&srv, &a_list, &weights, run).unwrap();
+        assert!(first.model.is_none());
+        assert_eq!((first.depth, first.leaf_groups, first.leaf_gemms), (1, 7, 14));
+        let second = multiply_batched_registered(&srv, &a_list, &weights, run).unwrap();
+        for ((a, c1), c2) in a_list.iter().zip(&first.cs).zip(&second.cs) {
+            assert!(c1.allclose(&a.matmul(&b), 1e-4));
+            assert_eq!(c1.data, c2.data, "repeat run must be bit-identical");
+        }
+        let m = srv.metrics();
+        assert_eq!(m.b_panel_packs(), 7, "7 combos packed once across both runs");
+        assert_eq!(m.registry_misses(), 7);
+        assert_eq!(m.registry_hits(), 7, "second run is pure cache hits");
+        weights.unregister(&srv).unwrap();
+        assert_eq!(srv.stats().registered_weights, 0);
+        // Depth guard: weights registered at depth 1 reject a batch
+        // whose M cannot halve.
+        let tiny = vec![Matrix::random(1, 24, 160)];
+        let w1 = register_weights(&srv, &b, 1).unwrap();
+        assert!(multiply_batched_registered(&srv, &tiny, &w1, None).is_err());
+        w1.unregister(&srv).unwrap();
+        // And registration itself rejects depths B cannot halve to.
+        assert!(register_weights(&srv, &Matrix::random(2, 2, 161), 2).is_err());
     }
 
     #[test]

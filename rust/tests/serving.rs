@@ -6,7 +6,8 @@
 use multi_array::blocking::BlockPlan;
 use multi_array::config::{HardwareConfig, RunConfig};
 use multi_array::coordinator::{
-    Coordinator, GemmJob, JobServer, NumericsEngine, ServerConfig, TrySubmitError,
+    Coordinator, GemmJob, JobServer, NumericsEngine, ServerConfig, TrySubmitBatchedError,
+    TrySubmitError,
 };
 use multi_array::gemm::Matrix;
 
@@ -22,6 +23,7 @@ fn cfg(workers: usize, capacity: usize) -> ServerConfig {
         batch_window: 4,
         cross_job_stealing: true,
         default_run: None,
+        ..ServerConfig::default()
     }
 }
 
@@ -57,7 +59,7 @@ fn stress_concurrent_mixed_size_submitters() {
                     let b = Matrix::random(k, n, seed + 500);
                     let want = a.matmul(&b);
                     let ticket = srv
-                        .submit(GemmJob { id: seed, a, b, run: Some(run) })
+                        .submit(GemmJob { id: seed, a, b: b.into(), run: Some(run) })
                         .unwrap();
                     let r = ticket.wait().unwrap();
                     assert_eq!(r.id, seed);
@@ -101,7 +103,7 @@ fn sixty_four_concurrent_mixed_jobs_with_cross_job_stealing() {
         let b = Matrix::random(k, n, seed + 1000);
         let want = a.matmul(&b);
         let ticket = srv
-            .submit(GemmJob { id: seed, a, b, run: Some(run) })
+            .submit(GemmJob { id: seed, a, b: b.into(), run: Some(run) })
             .unwrap();
         pending.push((ticket, want));
     }
@@ -151,7 +153,7 @@ fn batched_small_jobs_bit_identical_to_individual_runs() {
                 .map(|(i, (a, b))| GemmJob {
                     id: i as u64,
                     a: a.clone(),
-                    b: b.clone(),
+                    b: b.clone().into(),
                     run: Some(run),
                 })
                 .collect(),
@@ -167,7 +169,7 @@ fn batched_small_jobs_bit_identical_to_individual_runs() {
             .run_job(GemmJob {
                 id: r.id,
                 a: a.clone(),
-                b: b.clone(),
+                b: b.clone().into(),
                 run: Some(run),
             })
             .unwrap();
@@ -211,7 +213,7 @@ fn batched_gemm_bit_identical_across_ragged_shapes() {
                     .submit(GemmJob {
                         id: i as u64,
                         a: a.clone(),
-                        b: b.clone(),
+                        b: b.clone().into(),
                         run: Some(run),
                     })
                     .unwrap()
@@ -277,13 +279,197 @@ fn batched_gemm_conserves_one_b_pack() {
     let individual = server(cfg(4, 16));
     for (i, a) in many_a.into_iter().enumerate() {
         individual
-            .submit(GemmJob { id: i as u64, a, b: b.clone(), run: Some(run) })
+            .submit(GemmJob { id: i as u64, a, b: b.clone().into(), run: Some(run) })
             .unwrap()
             .wait()
             .unwrap();
     }
     assert_eq!(individual.metrics().b_panel_packs(), n_jobs);
     assert_eq!(individual.metrics().panels_shared(), 0);
+}
+
+#[test]
+fn registered_b_bit_identical_to_inline_across_ragged_shapes() {
+    // The registry acceptance gate: submissions through a registered
+    // WeightHandle must be bit-identical to inline submissions — the
+    // cached pack IS the pack an inline call would build, for ragged
+    // prime/odd shapes hitting every packing edge, on the batched and
+    // the lone-job path alike, across repeated cache-hitting calls.
+    let run = RunConfig::square(2, 16);
+    for (k, n, ms, seed) in [
+        (13usize, 29usize, vec![7usize, 31, 1, 17], 2600u64),
+        (23, 17, vec![19, 3, 41], 2700),
+        (5, 53, vec![37, 11, 13, 9, 2], 2800),
+    ] {
+        let b = Matrix::random(k, n, seed);
+        let many_a: Vec<Matrix> = ms
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| Matrix::random(m, k, seed + 1 + i as u64))
+            .collect();
+
+        // Inline shared batch on its own server — the baseline bits.
+        let inline = server(cfg(4, 16));
+        let inline_results = inline
+            .submit_batched_gemm(b.clone(), many_a.clone(), Some(run))
+            .unwrap()
+            .wait_all()
+            .unwrap();
+
+        // The same batch through a registered handle, twice: the
+        // second call resolves from cache and must not perturb a bit.
+        let registered = server(cfg(4, 16));
+        let h = registered.register_b(b.clone()).unwrap();
+        for call in 0..2 {
+            let results = registered
+                .submit_batched_gemm(h, many_a.clone(), Some(run))
+                .unwrap()
+                .wait_all()
+                .unwrap();
+            for ((r, want), a) in results.iter().zip(&inline_results).zip(&many_a) {
+                assert_eq!(
+                    r.c.data, want.c.data,
+                    "call {call}: registered result for {}x{k}x{n} diverged",
+                    a.rows
+                );
+            }
+        }
+        assert_eq!(registered.metrics().b_panel_packs(), 1);
+        assert_eq!(registered.metrics().registry_hits(), 1);
+        // Lone registered submits reuse the same cached pack and agree.
+        for (i, (a, want)) in many_a.iter().zip(&inline_results).enumerate() {
+            let r = registered
+                .submit(GemmJob { id: i as u64, a: a.clone(), b: h.into(), run: Some(run) })
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(r.c.data, want.c.data);
+            // And both agree with the oracle (not just with each other).
+            assert!(r.c.allclose(&a.matmul(&b), 1e-4));
+        }
+        assert_eq!(
+            registered.metrics().b_panel_packs(),
+            1,
+            "lone submits reuse the same cached pack"
+        );
+    }
+}
+
+#[test]
+fn registered_calls_conserve_one_pack_vs_inline_baseline() {
+    // Pack conservation across CALLS, metrics-asserted: four successive
+    // batched calls under one handle perform exactly one B pack; the
+    // same four calls with an inline B pack four times.
+    let run = Some(RunConfig::square(2, 16));
+    let b = Matrix::random(19, 27, 5000);
+    let calls = 4u64;
+
+    let registered = server(cfg(4, 16));
+    let h = registered.register_b(b.clone()).unwrap();
+    for call in 0..calls {
+        let many_a: Vec<Matrix> =
+            (0..3u64).map(|i| Matrix::random(21, 19, 5001 + 10 * call + i)).collect();
+        let wants: Vec<Matrix> = many_a.iter().map(|a| a.matmul(&b)).collect();
+        let results =
+            registered.submit_batched_gemm(h, many_a, run).unwrap().wait_all().unwrap();
+        for (r, want) in results.iter().zip(&wants) {
+            assert!(r.c.allclose(want, 1e-4));
+        }
+    }
+    let m = registered.metrics();
+    assert_eq!(m.b_panel_packs(), 1, "one pack across all four calls");
+    assert_eq!(m.registry_misses(), 1);
+    assert_eq!(m.registry_hits(), calls - 1);
+
+    // Inline baseline: the identical traffic repacks per call.
+    let inline = server(cfg(4, 16));
+    for call in 0..calls {
+        let many_a: Vec<Matrix> =
+            (0..3u64).map(|i| Matrix::random(21, 19, 5001 + 10 * call + i)).collect();
+        inline.submit_batched_gemm(b.clone(), many_a, run).unwrap().wait_all().unwrap();
+    }
+    assert_eq!(inline.metrics().b_panel_packs(), calls, "inline packs once per call");
+    assert_eq!(inline.metrics().registry_hits(), 0);
+}
+
+#[test]
+fn registry_eviction_under_tight_budget_keeps_results_correct() {
+    // A 1-byte budget forces every resolution over budget: unpinned
+    // packs evict, handles stay valid (evicted packs transparently
+    // repack), and results stay correct throughout.
+    let mut c = cfg(4, 16);
+    c.registry_budget_bytes = 1;
+    let srv = server(c);
+    let b1 = Matrix::random(16, 24, 3100);
+    let b2 = Matrix::random(16, 24, 3101);
+    let h1 = srv.register_b(b1.clone()).unwrap();
+    let h2 = srv.register_b(b2.clone()).unwrap();
+    let run = Some(RunConfig::square(2, 16));
+    for round in 0..3u64 {
+        for (j, (h, b)) in [(h1, &b1), (h2, &b2)].into_iter().enumerate() {
+            let a = Matrix::random(20, 16, 3200 + 10 * round + j as u64);
+            let want = a.matmul(b);
+            let r = srv
+                .submit(GemmJob { id: round, a, b: h.into(), run })
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert!(r.c.allclose(&want, 1e-4), "round {round} handle {j}");
+        }
+    }
+    assert_eq!(srv.metrics().jobs(), 6);
+    // Deterministic pressure on the registry surface itself: a fresh
+    // block-size variant is a guaranteed miss, and once its Arc is
+    // dropped it is unpinned — the next insert must evict it (and any
+    // other unpinned pack) to chase the 1-byte budget.
+    let reg = srv.operand_registry();
+    drop(reg.resolve_pack(h1, 8).unwrap());
+    let before = srv.metrics().registry_evictions();
+    drop(reg.resolve_pack(h2, 8).unwrap());
+    assert!(
+        srv.metrics().registry_evictions() > before,
+        "unpinned LRU pack must evict under a 1-byte budget"
+    );
+    // Both weights survived every eviction (packs evict, matrices stay).
+    assert_eq!(srv.stats().registered_weights, 2);
+}
+
+#[test]
+fn try_submit_batched_gemm_sheds_with_operands_returned() {
+    // The load-shedding contract extended to shared-B groups: a shed
+    // batch hands every operand back intact; an admitted batch must
+    // complete correctly. Nothing is ever silently dropped.
+    let srv = server(cfg(2, 2));
+    let run = Some(RunConfig::square(2, 16));
+    let b = Matrix::random(16, 32, 4000);
+    let mut admitted = Vec::new();
+    let mut shed = 0usize;
+    let batches = 60u64;
+    for j in 0..batches {
+        let many_a: Vec<Matrix> =
+            (0..2u64).map(|i| Matrix::random(24, 16, 4100 + 10 * j + i)).collect();
+        let wants: Vec<Matrix> = many_a.iter().map(|a| a.matmul(&b)).collect();
+        match srv.try_submit_batched_gemm(b.clone(), many_a, run) {
+            Ok(group) => admitted.push((group, wants)),
+            Err(TrySubmitBatchedError::Full { b: back, many_a }) => {
+                assert_eq!(back.inline_dims(), Some((16, 32)), "B must come back intact");
+                assert_eq!(many_a.len(), 2);
+                assert!(many_a.iter().all(|a| (a.rows, a.cols) == (24, 16)));
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected rejection: {e:?}"),
+        }
+    }
+    assert!(!admitted.is_empty());
+    let mut completed = 0usize;
+    for (group, wants) in admitted {
+        for (r, want) in group.wait_all().unwrap().iter().zip(&wants) {
+            assert!(r.c.allclose(want, 1e-4));
+            completed += 1;
+        }
+    }
+    assert_eq!(srv.metrics().jobs() as usize, completed);
+    assert_eq!(completed / 2 + shed, batches as usize, "admitted + shed covers every batch");
 }
 
 #[test]
@@ -298,11 +484,11 @@ fn try_submit_sheds_load_without_losing_jobs() {
         let a = Matrix::random(32, 16, j);
         let b = Matrix::random(16, 32, j + 200);
         let want = a.matmul(&b);
-        match srv.try_submit(GemmJob { id: j, a, b, run: Some(run) }) {
+        match srv.try_submit(GemmJob { id: j, a, b: b.into(), run: Some(run) }) {
             Ok(t) => admitted.push((t, want)),
             Err(TrySubmitError::Full(job)) => {
                 assert_eq!(job.id, j, "rejected job must come back intact");
-                assert_eq!((job.a.rows, job.b.cols), (32, 32));
+                assert_eq!((job.a.rows, job.b.as_inline().unwrap().cols), (32, 32));
                 rejected += 1;
             }
             Err(TrySubmitError::Closed(_)) => panic!("server is not closed"),
@@ -328,7 +514,7 @@ fn steals_balance_and_zero_copy_hold_under_serving() {
         let b = Matrix::random(24, 64, j + 77);
         let want = a.matmul(&b);
         pending.push((
-            srv.submit(GemmJob { id: j, a, b, run: Some(run) }).unwrap(),
+            srv.submit(GemmJob { id: j, a, b: b.into(), run: Some(run) }).unwrap(),
             want,
         ));
     }

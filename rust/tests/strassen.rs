@@ -64,6 +64,7 @@ fn server() -> JobServer {
         batch_window: 4,
         cross_job_stealing: true,
         default_run: Some(RunConfig::square(2, 16)),
+        ..ServerConfig::default()
     };
     JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), cfg).unwrap()
 }
