@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         let want = a.matmul(&b);
 
         // Optimal config via DSE; run the real job with it.
-        let r = co.run_job(GemmJob { id: idx as u64, a, b: b.into(), run: None })?;
+        let r = co.run_job(GemmJob { id: idx as u64, a: a.into(), b: b.into(), run: None })?;
         let err = r.c.max_abs_diff(&want);
         assert!(r.c.allclose(&want, 1e-3), "{}: numerics mismatch {err}", l.name);
 

@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let a = Matrix::random(512, 512, 1);
     let b = Matrix::random(512, 512, 2);
     let want = a.matmul(&b);
-    let job = GemmJob { id: 0, a, b: b.into(), run: Some(RunConfig::square(2, 128)) };
+    let job = GemmJob { id: 0, a: a.into(), b: b.into(), run: Some(RunConfig::square(2, 128)) };
     let r = co.run_job(job)?;
 
     println!("config used: {}", r.run);

@@ -26,7 +26,7 @@ fn burst(srv: &JobServer, njobs: usize) -> anyhow::Result<()> {
         };
         tickets.push(srv.submit(GemmJob {
             id: seed,
-            a,
+            a: a.into(),
             b: b.into(),
             run: Some(RunConfig::square(4, 64)),
         })?);

@@ -30,7 +30,13 @@
 //! * `serving_registered_weights` — the same batch through one
 //!   registered `WeightHandle` on a long-lived server: the warmup pass
 //!   is the cold miss that packs, every timed sample is a warm cache
-//!   hit (`cache_hits`/`cache_misses` annotations). Also CI-gated.
+//!   hit (`cache_hits`/`cache_misses` annotations). Also CI-gated;
+//! * `serving_registered_attention` — the symmetric-residency flagship:
+//!   a transformer attention block re-run over one registered
+//!   activation batch (`ActivationBatch`, A side) against registered
+//!   Q/K/V/O weights (B side) — after warmup, repeated runs pack
+//!   nothing on either side (`a_cache_hits`/`b_cache_hits`
+//!   annotations). Also CI-gated.
 
 use std::cell::Cell;
 
@@ -96,7 +102,7 @@ fn serve_once(
         .map(|(id, (a, b, run))| {
             srv.submit(GemmJob {
                 id: id as u64,
-                a: a.clone(),
+                a: a.clone().into(),
                 b: b.clone().into(),
                 run: Some(*run),
             })
@@ -163,7 +169,7 @@ fn main() {
             .map(|(id, a)| {
                 srv.submit(GemmJob {
                     id: id as u64,
-                    a: a.clone(),
+                    a: a.clone().into(),
                     b: b.clone().into(),
                     run: Some(run),
                 })
@@ -225,6 +231,51 @@ fn main() {
     bench.annotate("cache_misses", stats.registry_misses as f64);
     bench.annotate("jobs", NJOBS as f64);
     srv.shutdown();
+
+    // Registered attention: the flagship symmetric-residency workload —
+    // one transformer block (Q/K/V/O projections, QK^T, softmax, AV)
+    // re-run over one registered activation batch against registered
+    // weights on a long-lived server. The warmup pass is the only one
+    // that packs either side; every timed sample resolves all four
+    // weights and every projection's activation from the cache. CI-gated.
+    {
+        use multi_array::attention::{
+            attention_block_registered, ActivationBatch, AttentionWeights,
+        };
+        const D_MODEL: usize = 64;
+        const SEQ: usize = 48;
+        const BATCH: usize = 4;
+        let xs: Vec<Matrix> =
+            (0..BATCH as u64).map(|i| Matrix::random(SEQ, D_MODEL, 7000 + i)).collect();
+        // Per member: 4 d_model-square projections + QK^T + PV.
+        let attn_flops = (BATCH
+            * (4 * 2 * SEQ * D_MODEL * D_MODEL + 2 * 2 * SEQ * SEQ * D_MODEL))
+            as u64;
+        let srv = JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), shared_cfg())
+            .expect("server construction");
+        let weights = AttentionWeights::random(&srv, D_MODEL, 7100).expect("register weights");
+        let abatch = ActivationBatch::register(&srv, &xs).expect("register activations");
+        let attn_run = RunConfig::square(4, 48);
+        bench.run_throughput("serving_registered_attention", attn_flops, || {
+            let outs = attention_block_registered(&srv, &abatch, &weights, Some(attn_run))
+                .expect("attention block");
+            assert_eq!(outs.len(), BATCH);
+        });
+        let stats = srv.stats();
+        assert_eq!(
+            stats.registry_a_misses, BATCH as u64,
+            "each activation packs once, ever"
+        );
+        bench.annotate("a_cache_hits", stats.registry_a_hits as f64);
+        bench.annotate("a_cache_misses", stats.registry_a_misses as f64);
+        bench.annotate("b_cache_hits", stats.registry_hits as f64);
+        bench.annotate("batch", BATCH as f64);
+        bench.annotate("seq", SEQ as f64);
+        bench.annotate("d_model", D_MODEL as f64);
+        abatch.unregister(&srv).expect("unregister activations");
+        weights.unregister(&srv).expect("unregister weights");
+        srv.shutdown();
+    }
 
     if let Err(e) = bench.write_json("BENCH_serving.json") {
         eprintln!("could not write BENCH_serving.json: {e}");

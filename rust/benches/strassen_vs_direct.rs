@@ -50,7 +50,7 @@ fn main() {
     let flops = 2 * (DIM as u64).pow(3);
 
     bench.run_throughput("direct_server_256", flops, || {
-        let job = GemmJob { id: 0, a: a.clone(), b: b.clone().into(), run: Some(run) };
+        let job = GemmJob { id: 0, a: a.clone().into(), b: b.clone().into(), run: Some(run) };
         srv.submit(job).expect("submit").wait().expect("direct job")
     });
 

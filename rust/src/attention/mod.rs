@@ -1,0 +1,485 @@
+//! Transformer-block attention served through registered operands —
+//! the flagship cache-hot workload for the symmetric operand registry.
+//!
+//! A decoder block's GEMM traffic has two stable halves:
+//!
+//! * **weights** (`W_q`, `W_k`, `W_v`, `W_o`) are fixed across every
+//!   request — the classic B-side registry case
+//!   ([`AttentionWeights`], one [`WeightHandle`] per projection);
+//! * **activations** (the token batch `X`) are fixed across the many
+//!   GEMMs *inside* one serving step — `X` feeds the Q, K and V
+//!   projections, so an inline path re-packs the very same matrix
+//!   three times per member per run. [`ActivationBatch`] registers
+//!   each member once on the A side ([`ActivationHandle`]) and every
+//!   projection resolves it from the pack cache.
+//!
+//! [`attention_block_registered`] runs the whole block — batched
+//! Q/K/V projections (shared-B groups over registered activations),
+//! per-member scaled `Q·Kᵀ`, a numerically stable host-side softmax,
+//! per-member `P·V`, and a batched O-projection — with **zero operand
+//! packing after warmup**: N repeated runs over one registered batch
+//! perform exactly one A-pack per `(member, S_i)` variant and one
+//! B-pack per weight variant, where the inline path
+//! ([`attention_block_inline`]) packs every operand on every run.
+//! Both paths drive identical kernels over identical packed layouts,
+//! so their outputs are **bit-identical**; [`attention_block_oracle`]
+//! is the scalar reference for end-to-end `allclose` checks
+//! (`marr attention --check`).
+
+use crate::config::RunConfig;
+use crate::coordinator::{
+    ActivationHandle, AOperand, BOperand, GemmJob, JobServer, WeightHandle,
+};
+use crate::gemm::Matrix;
+
+/// One attention block's projection weights as server-resident state:
+/// `W_q`, `W_k`, `W_v`, `W_o`, each `d_model x d_model`, registered
+/// once and resolved from the registry by every serving step.
+pub struct AttentionWeights {
+    wq: WeightHandle,
+    wk: WeightHandle,
+    wv: WeightHandle,
+    wo: WeightHandle,
+    d_model: usize,
+}
+
+impl AttentionWeights {
+    /// Register the four projection matrices (the model-load step).
+    /// All must be square `d_model x d_model`. On a partial failure the
+    /// already-registered handles are released before the error
+    /// surfaces, so a half-loaded block never leaks into the server.
+    pub fn register(
+        server: &JobServer,
+        wq: Matrix,
+        wk: Matrix,
+        wv: Matrix,
+        wo: Matrix,
+    ) -> anyhow::Result<Self> {
+        let d_model = wq.rows;
+        anyhow::ensure!(d_model > 0, "degenerate d_model 0");
+        for (name, w) in [("W_q", &wq), ("W_k", &wk), ("W_v", &wv), ("W_o", &wo)] {
+            anyhow::ensure!(
+                (w.rows, w.cols) == (d_model, d_model),
+                "{name} is {}x{}, expected {d_model}x{d_model}",
+                w.rows,
+                w.cols
+            );
+        }
+        let mut handles = Vec::with_capacity(4);
+        for (name, w) in [("W_q", wq), ("W_k", wk), ("W_v", wv), ("W_o", wo)] {
+            match server.register_b(w) {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    let e = e.context(format!("registering {name}"));
+                    return Err(match server.unregister_all(handles) {
+                        Ok(()) => e,
+                        Err(cleanup) => e.context(format!(
+                            "cleanup of partially registered block also failed: {cleanup:#}"
+                        )),
+                    });
+                }
+            }
+        }
+        let (wq, wk, wv, wo) = (handles[0], handles[1], handles[2], handles[3]);
+        Ok(Self { wq, wk, wv, wo, d_model })
+    }
+
+    /// Deterministic random weights — the demo/bench model.
+    pub fn random(server: &JobServer, d_model: usize, seed: u64) -> anyhow::Result<Self> {
+        Self::register(
+            server,
+            Matrix::random(d_model, d_model, seed),
+            Matrix::random(d_model, d_model, seed + 1),
+            Matrix::random(d_model, d_model, seed + 2),
+            Matrix::random(d_model, d_model, seed + 3),
+        )
+    }
+
+    /// The block's model width.
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    /// The four registered handles, in `[W_q, W_k, W_v, W_o]` order.
+    pub fn handles(&self) -> [WeightHandle; 4] {
+        [self.wq, self.wk, self.wv, self.wo]
+    }
+
+    /// Drop all four registered weights (cached packs freed). Sweeps
+    /// the whole set even when one handle fails.
+    pub fn unregister(self, server: &JobServer) -> anyhow::Result<()> {
+        server.unregister_all([self.wq, self.wk, self.wv, self.wo])
+    }
+}
+
+/// A token batch registered on the A side: each member (one sequence's
+/// `seq x d_model` activation matrix) held under an
+/// [`ActivationHandle`], packed at most once per `(member, S_i)`
+/// variant however many projections and serving steps consume it.
+pub struct ActivationBatch {
+    handles: Vec<ActivationHandle>,
+    seq: usize,
+    d_model: usize,
+}
+
+impl ActivationBatch {
+    /// Register every member of the batch. All members must share one
+    /// `seq x d_model` shape; a partial failure releases what was
+    /// registered before surfacing.
+    pub fn register(server: &JobServer, xs: &[Matrix]) -> anyhow::Result<Self> {
+        anyhow::ensure!(!xs.is_empty(), "empty batch");
+        let (seq, d_model) = (xs[0].rows, xs[0].cols);
+        anyhow::ensure!(seq > 0 && d_model > 0, "degenerate member {seq}x{d_model}");
+        anyhow::ensure!(
+            xs.iter().all(|x| (x.rows, x.cols) == (seq, d_model)),
+            "batch members must share one shape"
+        );
+        let mut handles = Vec::with_capacity(xs.len());
+        for (i, x) in xs.iter().enumerate() {
+            match server.register_a(x.clone()) {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    let e = e.context(format!("registering batch member {i}"));
+                    return Err(match server.unregister_all_a(handles) {
+                        Ok(()) => e,
+                        Err(cleanup) => e.context(format!(
+                            "cleanup of partially registered batch also failed: {cleanup:#}"
+                        )),
+                    });
+                }
+            }
+        }
+        Ok(Self { handles, seq, d_model })
+    }
+
+    /// Batch size.
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// True iff the batch has no members (unreachable via
+    /// [`ActivationBatch::register`], which rejects empty input).
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Tokens per member.
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// Model width.
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    /// The per-member handles, in batch order.
+    pub fn handles(&self) -> &[ActivationHandle] {
+        &self.handles
+    }
+
+    /// Drop every member's registration (cached packs freed). Sweeps
+    /// the whole list even when one handle fails.
+    pub fn unregister(self, server: &JobServer) -> anyhow::Result<()> {
+        server.unregister_all_a(self.handles)
+    }
+}
+
+/// Run one attention block over a **registered** batch: every
+/// projection resolves both sides from the operand registry. Returns
+/// the per-member `seq x d_model` block outputs, in batch order.
+pub fn attention_block_registered(
+    server: &JobServer,
+    batch: &ActivationBatch,
+    weights: &AttentionWeights,
+    run: Option<RunConfig>,
+) -> anyhow::Result<Vec<Matrix>> {
+    anyhow::ensure!(
+        batch.d_model == weights.d_model,
+        "width mismatch: batch d_model = {}, weights d_model = {}",
+        batch.d_model,
+        weights.d_model
+    );
+    let xs =
+        || -> Vec<AOperand> { batch.handles.iter().map(|&h| AOperand::from(h)).collect() };
+    block_core(server, &xs, weights.handles().map(BOperand::from), batch.d_model, run)
+}
+
+/// The inline baseline: the same block over raw matrices — every
+/// operand is re-packed on every call. Bit-identical to
+/// [`attention_block_registered`] over the same inputs (identical
+/// kernels over identical packed layouts; residency never changes
+/// numerics).
+pub fn attention_block_inline(
+    server: &JobServer,
+    xs: &[Matrix],
+    wq: &Matrix,
+    wk: &Matrix,
+    wv: &Matrix,
+    wo: &Matrix,
+    run: Option<RunConfig>,
+) -> anyhow::Result<Vec<Matrix>> {
+    anyhow::ensure!(!xs.is_empty(), "empty batch");
+    let (seq, d_model) = (xs[0].rows, xs[0].cols);
+    anyhow::ensure!(seq > 0 && d_model > 0, "degenerate member {seq}x{d_model}");
+    anyhow::ensure!(
+        xs.iter().all(|x| (x.rows, x.cols) == (seq, d_model)),
+        "batch members must share one shape"
+    );
+    for (name, w) in [("W_q", wq), ("W_k", wk), ("W_v", wv), ("W_o", wo)] {
+        anyhow::ensure!(
+            (w.rows, w.cols) == (d_model, d_model),
+            "{name} is {}x{}, expected {d_model}x{d_model}",
+            w.rows,
+            w.cols
+        );
+    }
+    let make_xs =
+        || -> Vec<AOperand> { xs.iter().map(|x| AOperand::from(x.clone())).collect() };
+    let ws = [wq, wk, wv, wo].map(|w| BOperand::from(w.clone()));
+    block_core(server, &make_xs, ws, d_model, run)
+}
+
+/// The shared block body: batched Q/K/V projections, per-member scaled
+/// `Q·Kᵀ`, host softmax, per-member `P·V`, batched O-projection.
+/// `ws` is `[W_q, W_k, W_v, W_o]`, inline or registered.
+fn block_core(
+    server: &JobServer,
+    make_xs: &dyn Fn() -> Vec<AOperand>,
+    ws: [BOperand; 4],
+    d_model: usize,
+    run: Option<RunConfig>,
+) -> anyhow::Result<Vec<Matrix>> {
+    let [wq, wk, wv, wo] = ws;
+
+    // Q/K/V: three shared-B groups over the same activation batch,
+    // all in flight before the first wait so the pool sees the whole
+    // fan-out at once.
+    let gq = server.submit_batched_gemm_operands(wq, make_xs(), run)?;
+    let gk = server.submit_batched_gemm_operands(wk, make_xs(), run)?;
+    let gv = server.submit_batched_gemm_operands(wv, make_xs(), run)?;
+    let qs: Vec<Matrix> = gq.wait_all()?.into_iter().map(|r| r.c).collect();
+    let ks: Vec<Matrix> = gk.wait_all()?.into_iter().map(|r| r.c).collect();
+    let vs: Vec<Matrix> = gv.wait_all()?.into_iter().map(|r| r.c).collect();
+
+    // Scores: one Q·Kᵀ job per member, submitted as a single group
+    // (K differs per member, so there is no shared side to register).
+    let score_jobs: Vec<GemmJob> = qs
+        .iter()
+        .zip(&ks)
+        .enumerate()
+        .map(|(i, (q, k))| GemmJob {
+            id: i as u64,
+            a: q.clone().into(),
+            b: k.transpose().into(),
+            run,
+        })
+        .collect();
+    let scores: Vec<Matrix> =
+        server.submit_group(score_jobs)?.wait_all()?.into_iter().map(|r| r.c).collect();
+
+    // Attention probabilities: numerically stable scaled softmax on
+    // the host (elementwise, O(seq²) — not GEMM traffic).
+    let probs: Vec<Matrix> =
+        scores.into_iter().map(|s| scaled_softmax_rows(s, d_model)).collect();
+
+    // Context: one P·V job per member.
+    let ctx_jobs: Vec<GemmJob> = probs
+        .into_iter()
+        .zip(vs)
+        .enumerate()
+        .map(|(i, (p, v))| GemmJob { id: i as u64, a: p.into(), b: v.into(), run })
+        .collect();
+    let ctxs: Vec<Matrix> =
+        server.submit_group(ctx_jobs)?.wait_all()?.into_iter().map(|r| r.c).collect();
+
+    // Output projection: one shared-B group over the fresh contexts.
+    let go = server
+        .submit_batched_gemm_operands(wo, ctxs.into_iter().map(AOperand::from).collect(), run)?;
+    Ok(go.wait_all()?.into_iter().map(|r| r.c).collect())
+}
+
+/// Row-wise softmax of `scores / sqrt(d_model)`, max-subtracted for
+/// stability (the standard online-safe formulation; every row sums to
+/// 1 even when logits are large).
+fn scaled_softmax_rows(mut scores: Matrix, d_model: usize) -> Matrix {
+    let scale = 1.0 / (d_model as f32).sqrt();
+    let cols = scores.cols;
+    for row in scores.data.chunks_mut(cols) {
+        let mut max = f32::NEG_INFINITY;
+        for v in row.iter_mut() {
+            *v *= scale;
+            max = max.max(*v);
+        }
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    scores
+}
+
+/// Scalar reference for the whole block (host [`Matrix::matmul`] plus
+/// the same softmax) — the `--check` oracle. Panics on shape mismatch;
+/// validate through the serving entry points first.
+pub fn attention_block_oracle(
+    xs: &[Matrix],
+    wq: &Matrix,
+    wk: &Matrix,
+    wv: &Matrix,
+    wo: &Matrix,
+) -> Vec<Matrix> {
+    xs.iter()
+        .map(|x| {
+            let q = x.matmul(wq);
+            let k = x.matmul(wk);
+            let v = x.matmul(wv);
+            let p = scaled_softmax_rows(q.matmul(&k.transpose()), wq.rows);
+            p.matmul(&v).matmul(wo)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::coordinator::{NumericsEngine, ServerConfig};
+
+    fn server() -> JobServer {
+        let cfg = ServerConfig {
+            workers: 4,
+            queue_capacity: 16,
+            batch_max_tasks: 4,
+            batch_window: 4,
+            cross_job_stealing: true,
+            default_run: Some(RunConfig::square(2, 16)),
+            ..ServerConfig::default()
+        };
+        JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), cfg).unwrap()
+    }
+
+    fn token_batch(batch: usize, seq: usize, d_model: usize, seed: u64) -> Vec<Matrix> {
+        (0..batch as u64).map(|i| Matrix::random(seq, d_model, seed + i)).collect()
+    }
+
+    #[test]
+    fn registered_block_is_bit_identical_to_inline_and_oracle_close() {
+        let srv = server();
+        let (d, seq) = (16, 13);
+        let xs = token_batch(2, seq, d, 700);
+        let wq = Matrix::random(d, d, 710);
+        let wk = Matrix::random(d, d, 711);
+        let wv = Matrix::random(d, d, 712);
+        let wo = Matrix::random(d, d, 713);
+        let run = Some(RunConfig::square(2, 16));
+        let inline =
+            attention_block_inline(&srv, &xs, &wq, &wk, &wv, &wo, run).unwrap();
+        let weights = AttentionWeights::register(
+            &srv,
+            wq.clone(),
+            wk.clone(),
+            wv.clone(),
+            wo.clone(),
+        )
+        .unwrap();
+        let batch = ActivationBatch::register(&srv, &xs).unwrap();
+        let reg = attention_block_registered(&srv, &batch, &weights, run).unwrap();
+        assert_eq!(inline.len(), reg.len());
+        for (a, b) in inline.iter().zip(&reg) {
+            assert_eq!((b.rows, b.cols), (seq, d));
+            assert_eq!(a.data, b.data, "residency must not change numerics");
+        }
+        let oracle = attention_block_oracle(&xs, &wq, &wk, &wv, &wo);
+        for (o, b) in oracle.iter().zip(&reg) {
+            assert!(o.allclose(b, 1e-3), "served block must match the scalar oracle");
+        }
+        batch.unregister(&srv).unwrap();
+        weights.unregister(&srv).unwrap();
+    }
+
+    #[test]
+    fn repeated_registered_runs_pack_each_operand_exactly_once() {
+        // The ISSUE's acceptance criterion: N runs over one registered
+        // batch = 1 A-pack per (member, S_i) variant and 1 B-pack per
+        // weight variant, while the inline baseline re-packs every
+        // operand every run.
+        let srv = server();
+        let (d, seq, members) = (16, 12, 3);
+        let xs = token_batch(members, seq, d, 720);
+        let weights = AttentionWeights::random(&srv, d, 730).unwrap();
+        let batch = ActivationBatch::register(&srv, &xs).unwrap();
+        let run = Some(RunConfig::square(2, 16));
+        let n_runs = 3;
+        let mut outs = Vec::new();
+        for _ in 0..n_runs {
+            outs.push(attention_block_registered(&srv, &batch, &weights, run).unwrap());
+        }
+        for later in &outs[1..] {
+            for (a, b) in outs[0].iter().zip(later) {
+                assert_eq!(a.data, b.data, "repeat runs must be bit-identical");
+            }
+        }
+        let m = srv.metrics();
+        // A side: each member packs once for the X·W projections (all
+        // three resolve the same (handle, S_i) pack). The per-run
+        // Q·Kᵀ / P·V / O-projection A operands are fresh matrices and
+        // pack privately: 3 members x 3 ephemeral GEMM stages x runs.
+        assert_eq!(m.registry_a_misses(), members as u64, "one A-pack per member, ever");
+        assert_eq!(
+            m.registry_a_hits(),
+            (3 * n_runs - 1) as u64 * members as u64,
+            "every later projection is a cache hit"
+        );
+        assert_eq!(
+            m.a_panel_packs(),
+            (members + members * 3 * n_runs) as u64,
+            "registered packs + per-run ephemeral (scores/ctx/O) packs only"
+        );
+        // B side: the four weights pack once ever; the per-run Kᵀ and
+        // V leaf operands are fresh each run.
+        assert_eq!(m.registry_misses(), (members + 4) as u64);
+        let stats = srv.stats();
+        assert_eq!(stats.registered_weights, 4);
+        assert_eq!(stats.registered_activations, members);
+        assert!(stats.registry_a_resident_bytes > 0);
+        batch.unregister(&srv).unwrap();
+        weights.unregister(&srv).unwrap();
+        let after = srv.stats();
+        assert_eq!((after.registered_weights, after.registered_activations), (0, 0));
+        assert_eq!(after.registry_a_resident_bytes, 0);
+    }
+
+    #[test]
+    fn shape_validation_rejects_mismatches() {
+        let srv = server();
+        // Non-square / mismatched weights.
+        assert!(AttentionWeights::register(
+            &srv,
+            Matrix::random(8, 8, 1),
+            Matrix::random(8, 8, 2),
+            Matrix::random(8, 4, 3),
+            Matrix::random(8, 8, 4),
+        )
+        .is_err());
+        assert_eq!(srv.stats().registered_weights, 0, "partial failure must not leak");
+        // Ragged / empty activation batches.
+        assert!(ActivationBatch::register(&srv, &[]).is_err());
+        let ragged = vec![Matrix::random(4, 8, 5), Matrix::random(5, 8, 6)];
+        assert!(ActivationBatch::register(&srv, &ragged).is_err());
+        // Width mismatch between a valid batch and valid weights.
+        let weights = AttentionWeights::random(&srv, 8, 7).unwrap();
+        let batch =
+            ActivationBatch::register(&srv, &token_batch(1, 4, 16, 8)).unwrap();
+        assert!(attention_block_registered(&srv, &batch, &weights, None).is_err());
+        batch.unregister(&srv).unwrap();
+        weights.unregister(&srv).unwrap();
+        // Inline path validates too.
+        let w = Matrix::random(8, 8, 9);
+        assert!(attention_block_inline(&srv, &[], &w, &w, &w, &w, None).is_err());
+    }
+}

@@ -141,9 +141,17 @@ impl NetworkWeights {
                 Err(e) => {
                     // A half-registered network must not leak into a
                     // long-lived server: release what was registered
-                    // before surfacing the failure.
-                    let _ = server.unregister_all(handles);
-                    return Err(e.context(format!("registering weight for layer {}", l.name)));
+                    // before surfacing the failure. A cleanup failure
+                    // is counted by the server (`unregister_failures`)
+                    // and chained onto the primary error instead of
+                    // being dropped.
+                    let e = e.context(format!("registering weight for layer {}", l.name));
+                    return Err(match server.unregister_all(handles) {
+                        Ok(()) => e,
+                        Err(cleanup) => e.context(format!(
+                            "cleanup of partially registered network also failed: {cleanup:#}"
+                        )),
+                    });
                 }
             }
         }
@@ -283,7 +291,7 @@ pub fn schedule_network_served_with(
             let a = Matrix::random(l.m, l.k, seed);
             handles.push(LayerHandle::Single(server.submit(GemmJob {
                 id: i as u64,
-                a,
+                a: a.into(),
                 b: weight.into(),
                 run,
             })?));
@@ -422,6 +430,28 @@ mod tests {
         .unwrap();
         assert_eq!(s.reconfigs, 0);
         assert!(s.layers.iter().all(|l| l.run == RunConfig::square(2, 128)));
+    }
+
+    #[test]
+    fn stale_network_unregister_fails_loudly_and_is_counted() {
+        // A handle dropped out from under a NetworkWeights sweep must
+        // surface as an error AND a counted `unregister_failures` —
+        // never a silent `let _ =` drop.
+        use crate::coordinator::{NumericsEngine, ServerConfig};
+        let hw = HardwareConfig::paper();
+        let srv = JobServer::new(
+            hw,
+            NumericsEngine::golden(),
+            ServerConfig { workers: 2, queue_capacity: 4, ..ServerConfig::default() },
+        )
+        .unwrap();
+        let layers: Vec<GemmLayer> = alexnet_layers().into_iter().take(2).collect();
+        let weights = NetworkWeights::register(&srv, &layers).unwrap();
+        srv.unregister_b(weights.handles()[0]).unwrap();
+        assert!(weights.unregister(&srv).is_err());
+        let stats = srv.stats();
+        assert_eq!(stats.unregister_failures, 1);
+        assert_eq!(stats.registered_weights, 0, "sweep still released the rest");
     }
 
     #[test]

@@ -48,17 +48,35 @@ pub struct Metrics {
     shared_b_groups: AtomicU64,
     /// Operand-registry resolutions served from an already-cached pack
     /// — each hit is one whole-operand pack avoided *across* calls,
-    /// the cross-call extension of `panels_shared`.
+    /// the cross-call extension of `panels_shared`. Shared by both
+    /// registry sides; the A-side share is split out below.
     registry_hits: AtomicU64,
     /// Registry resolutions that had to pack (first use of a
-    /// `(handle, S_j)` key, or re-use after eviction).
+    /// `(handle, side, s_param)` key, or re-use after eviction). Both
+    /// sides.
     registry_misses: AtomicU64,
-    /// Cached packs evicted by the registry's refcount-pinned LRU to
-    /// hold its byte budget.
+    /// Cached packs of either side evicted by the registry's
+    /// refcount-pinned LRU to hold its shared byte budget.
     registry_evictions: AtomicU64,
+    /// A-side (activation) share of `registry_hits`.
+    registry_a_hits: AtomicU64,
+    /// A-side share of `registry_misses`.
+    registry_a_misses: AtomicU64,
+    /// A-side share of `registry_evictions`.
+    registry_a_evictions: AtomicU64,
     /// Gauge: bytes of packed data currently resident in the operand
-    /// registry (set, not accumulated).
+    /// registry, both sides (set, not accumulated).
     registry_resident_bytes: AtomicU64,
+    /// Gauge: the A-side (activation-panel) share of
+    /// `registry_resident_bytes`.
+    registry_a_resident_bytes: AtomicU64,
+    /// Planner selections steered to an already-resident `(S_i, S_j)`
+    /// variant instead of the config the pre-residency cascade would
+    /// have chosen — each one is a repack turned into a cache hit.
+    plan_residency_hits: AtomicU64,
+    /// Registry unregister calls that failed (dead or foreign handle) —
+    /// nonzero means a handle leak or a double-free somewhere upstream.
+    unregister_failures: AtomicU64,
     latencies: Mutex<LatencyAgg>,
 }
 
@@ -138,8 +156,32 @@ impl Metrics {
         self.registry_evictions.fetch_add(n, Ordering::Relaxed);
     }
 
+    pub fn add_registry_a_hits(&self, n: u64) {
+        self.registry_a_hits.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_registry_a_misses(&self, n: u64) {
+        self.registry_a_misses.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_registry_a_evictions(&self, n: u64) {
+        self.registry_a_evictions.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn set_registry_resident_bytes(&self, bytes: u64) {
         self.registry_resident_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    pub fn set_registry_a_resident_bytes(&self, bytes: u64) {
+        self.registry_a_resident_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_plan_residency_hits(&self, n: u64) {
+        self.plan_residency_hits.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_unregister_failures(&self, n: u64) {
+        self.unregister_failures.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn job_done(&self, host_secs: f64, sim_secs: f64) {
@@ -221,8 +263,32 @@ impl Metrics {
         self.registry_evictions.load(Ordering::Relaxed)
     }
 
+    pub fn registry_a_hits(&self) -> u64 {
+        self.registry_a_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn registry_a_misses(&self) -> u64 {
+        self.registry_a_misses.load(Ordering::Relaxed)
+    }
+
+    pub fn registry_a_evictions(&self) -> u64 {
+        self.registry_a_evictions.load(Ordering::Relaxed)
+    }
+
     pub fn registry_resident_bytes(&self) -> u64 {
         self.registry_resident_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn registry_a_resident_bytes(&self) -> u64 {
+        self.registry_a_resident_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn plan_residency_hits(&self) -> u64 {
+        self.plan_residency_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn unregister_failures(&self) -> u64 {
+        self.unregister_failures.load(Ordering::Relaxed)
     }
 
     /// (mean, max) host latency in seconds.
@@ -279,6 +345,7 @@ impl Metrics {
             "jobs={} (failed={}, batched={}) tasks={} steals={} (cross-job={}) \
              panel_copies={} packs(a/b)={}/{} panels_shared={} \
              registry(hit/miss/evict)={}/{}/{} \
+             a_panel(hit/miss/evict)={}/{}/{} plan_residency_hits={} \
              host_lat(mean/p95/max)={:.3}s/{:.3}s/{:.3}s sim(mean)={:.6}s",
             self.jobs(),
             self.jobs_failed(),
@@ -293,6 +360,10 @@ impl Metrics {
             self.registry_hits(),
             self.registry_misses(),
             self.registry_evictions(),
+            self.registry_a_hits(),
+            self.registry_a_misses(),
+            self.registry_a_evictions(),
+            self.plan_residency_hits(),
             mean,
             self.host_latency_percentile(0.95),
             max,
@@ -321,8 +392,15 @@ mod tests {
         m.add_registry_hits(3);
         m.add_registry_misses(2);
         m.add_registry_evictions(1);
+        m.add_registry_a_hits(2);
+        m.add_registry_a_misses(1);
+        m.add_registry_a_evictions(1);
+        m.add_plan_residency_hits(1);
+        m.add_unregister_failures(1);
         m.set_registry_resident_bytes(4096);
         m.set_registry_resident_bytes(2048); // gauge: set, not summed
+        m.set_registry_a_resident_bytes(512);
+        m.set_registry_a_resident_bytes(256);
         m.job_done(0.5, 0.001);
         m.job_done(1.5, 0.003);
         m.job_failed();
@@ -338,7 +416,13 @@ mod tests {
         assert_eq!(m.registry_hits(), 3);
         assert_eq!(m.registry_misses(), 2);
         assert_eq!(m.registry_evictions(), 1);
+        assert_eq!(m.registry_a_hits(), 2);
+        assert_eq!(m.registry_a_misses(), 1);
+        assert_eq!(m.registry_a_evictions(), 1);
+        assert_eq!(m.plan_residency_hits(), 1);
+        assert_eq!(m.unregister_failures(), 1);
         assert_eq!(m.registry_resident_bytes(), 2048);
+        assert_eq!(m.registry_a_resident_bytes(), 256);
         assert_eq!(m.jobs(), 2);
         assert_eq!(m.jobs_failed(), 1);
         let (mean, max) = m.host_latency();
@@ -399,5 +483,7 @@ mod tests {
         m.job_done(0.1, 0.01);
         assert!(m.summary().contains("jobs=1"));
         assert!(m.summary().contains("cross-job=0"));
+        assert!(m.summary().contains("a_panel(hit/miss/evict)=0/0/0"));
+        assert!(m.summary().contains("plan_residency_hits=0"));
     }
 }

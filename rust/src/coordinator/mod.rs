@@ -14,12 +14,17 @@
 //!   *batch*: a shared-B workload
 //!   ([`server::JobServer::submit_batched_gemm`]) packs B once and
 //!   shares the `Arc<PackedB>` across every sub-job — and at most once
-//!   per *process* for weights registered in the server's
-//!   [`registry::OperandRegistry`] ([`server::JobServer::register_b`]):
-//!   submissions whose [`BOperand`] carries a [`WeightHandle`] resolve
-//!   to the cached pack, so successive batches, epochs, and layers
-//!   reusing a filter never repack it (refcount-pinned LRU eviction
-//!   under a byte budget keeps residency bounded);
+//!   per *process* for operands registered in the server's
+//!   [`registry::OperandRegistry`] ([`server::JobServer::register_b`]
+//!   for weights, [`server::JobServer::register_a`] for activations):
+//!   submissions whose [`BOperand`] / [`AOperand`] carries a
+//!   [`WeightHandle`] / [`ActivationHandle`] resolve to the cached
+//!   pack, so successive batches, epochs, and layers reusing either
+//!   operand never repack it (one refcount-pinned LRU across both
+//!   sides, under a shared byte budget, keeps residency bounded), and
+//!   the server's planner steers unpinned jobs toward `(S_i, S_j)`
+//!   variants already resident — within a predicted-cost slack — so
+//!   mixed-shape traffic turns repacks into cache hits;
 //! * workers pop/steal from a shared [`crate::wqm::AtomicWqm`] — one CAS
 //!   per claim on a packed `head|tail` word, no `Mutex<Wqm>`;
 //! * each worker runs the register-blocked microkernel over the packed
@@ -58,7 +63,7 @@ pub mod server;
 
 pub use engine::NumericsEngine;
 pub use metrics::Metrics;
-pub use registry::{BOperand, OperandRegistry, WeightHandle};
+pub use registry::{ActivationHandle, AOperand, BOperand, OperandRegistry, WeightHandle};
 pub use server::{
     JobGroup, JobServer, JobTicket, ServerConfig, ServerStats, TrySubmitBatchedError,
     TrySubmitError,
@@ -74,14 +79,16 @@ use crate::dse;
 use crate::gemm::{DisjointBlocks, Matrix, PackedPanels};
 use crate::wqm::AtomicWqm;
 
-/// One GEMM request. The B side is a [`BOperand`]: an inline matrix
-/// (packed per job, the classic shape) or a [`WeightHandle`] registered
-/// with a [`JobServer`]'s operand registry, resolved at dispatch to the
-/// server-resident cached pack so repeated submissions never repack.
+/// One GEMM request. Each side is an operand enum — [`AOperand`] for
+/// A, [`BOperand`] for B: an inline matrix (packed per job, the classic
+/// shape) or a handle registered with a [`JobServer`]'s operand
+/// registry ([`ActivationHandle`] / [`WeightHandle`]), resolved at
+/// dispatch to the server-resident cached pack so repeated submissions
+/// never repack. `Matrix` converts into either operand via `.into()`.
 #[derive(Debug, Clone)]
 pub struct GemmJob {
     pub id: u64,
-    pub a: Matrix,
+    pub a: AOperand,
     pub b: BOperand,
     /// Pin a config, or let the DSE choose.
     pub run: Option<RunConfig>,
@@ -157,9 +164,16 @@ impl Coordinator {
     }
 
     /// Choose the run config for a job: pinned, or DSE-optimal. The
-    /// one-shot coordinator has no operand registry, so the job's B
-    /// must be inline ([`JobServer`] submissions resolve handles).
+    /// one-shot coordinator has no operand registry, so both of the
+    /// job's operands must be inline ([`JobServer`] submissions resolve
+    /// handles).
     pub fn plan_job(&self, job: &GemmJob) -> anyhow::Result<RunConfig> {
+        let (a_rows, a_cols) = job.a.inline_dims().ok_or_else(|| {
+            anyhow::anyhow!(
+                "registered activation handles resolve inside a JobServer; \
+                 Coordinator jobs need an inline A"
+            )
+        })?;
         let (_, b_cols) = job.b.inline_dims().ok_or_else(|| {
             anyhow::anyhow!(
                 "registered weight handles resolve inside a JobServer; \
@@ -169,8 +183,8 @@ impl Coordinator {
         choose_run_dims(
             &self.hw,
             self.accelerator.surface(),
-            job.a.rows,
-            job.a.cols,
+            a_rows,
+            a_cols,
             b_cols,
             job.run,
             None,
@@ -187,6 +201,7 @@ impl Coordinator {
     pub fn run_job(&self, job: GemmJob) -> anyhow::Result<JobResult> {
         let run = self.plan_job(&job)?;
         let GemmJob { id, a, b, .. } = job;
+        let a = a.into_inline().expect("plan_job already required an inline A");
         let b = b.into_inline().expect("plan_job already required an inline B");
         anyhow::ensure!(a.cols == b.rows, "contraction mismatch");
         let start = Instant::now();
@@ -286,7 +301,7 @@ mod tests {
         let a = Matrix::random(100, 50, 1);
         let b = Matrix::random(50, 80, 2);
         let want = a.matmul(&b);
-        let job = GemmJob { id: 1, a, b: b.into(), run: Some(RunConfig::square(2, 32)) };
+        let job = GemmJob { id: 1, a: a.into(), b: b.into(), run: Some(RunConfig::square(2, 32)) };
         let r = co.run_job(job).unwrap();
         assert!(r.c.allclose(&want, 1e-4));
         assert_eq!(r.run, RunConfig::square(2, 32));
@@ -299,7 +314,7 @@ mod tests {
         let a = Matrix::random(128, 64, 3);
         let b = Matrix::random(64, 128, 4);
         let want = a.matmul(&b);
-        let r = co.run_job(GemmJob { id: 2, a, b: b.into(), run: None }).unwrap();
+        let r = co.run_job(GemmJob { id: 2, a: a.into(), b: b.into(), run: None }).unwrap();
         assert!(r.c.allclose(&want, 1e-4));
         assert!(r.run.validate(&co.hw).is_ok());
     }
@@ -309,7 +324,7 @@ mod tests {
         let co = coordinator();
         let a = Matrix::random(8, 8, 5);
         let b = Matrix::random(8, 8, 6);
-        let job = GemmJob { id: 3, a, b: b.into(), run: Some(RunConfig::square(4, 256)) };
+        let job = GemmJob { id: 3, a: a.into(), b: b.into(), run: Some(RunConfig::square(4, 256)) };
         assert!(co.run_job(job).is_err());
     }
 
@@ -318,7 +333,7 @@ mod tests {
         let co = coordinator();
         let job = GemmJob {
             id: 4,
-            a: Matrix::random(8, 8, 7),
+            a: Matrix::random(8, 8, 7).into(),
             b: Matrix::random(9, 8, 8).into(),
             run: None,
         };
@@ -330,7 +345,7 @@ mod tests {
         let co = coordinator();
         let a = Matrix::random(64, 32, 9);
         let b = Matrix::random(32, 64, 10);
-        let job = GemmJob { id: 5, a, b: b.into(), run: Some(RunConfig::square(4, 16)) };
+        let job = GemmJob { id: 5, a: a.into(), b: b.into(), run: Some(RunConfig::square(4, 16)) };
         co.run_job(job).unwrap();
         let m = co.metrics();
         assert_eq!(m.jobs(), 1);
@@ -345,7 +360,7 @@ mod tests {
         let a = Matrix::random(100, 40, 21);
         let b = Matrix::random(40, 90, 22);
         let want = a.matmul(&b);
-        let job = GemmJob { id: 9, a, b: b.into(), run: Some(RunConfig::square(4, 16)) };
+        let job = GemmJob { id: 9, a: a.into(), b: b.into(), run: Some(RunConfig::square(4, 16)) };
         let r = co.run_job(job).unwrap();
         assert!(r.c.allclose(&want, 1e-4));
         assert_eq!(co.metrics().panel_copies(), 0);
@@ -360,7 +375,7 @@ mod tests {
         let a = Matrix::random(10, 8, 23);
         let b = Matrix::random(8, 12, 24);
         let want = a.matmul(&b);
-        let job = GemmJob { id: 10, a, b: b.into(), run: Some(RunConfig::square(4, 16)) };
+        let job = GemmJob { id: 10, a: a.into(), b: b.into(), run: Some(RunConfig::square(4, 16)) };
         let r = co.run_job(job).unwrap();
         assert!(r.c.allclose(&want, 1e-5));
         assert_eq!(co.metrics().tasks(), 1);
@@ -374,7 +389,7 @@ mod tests {
         let a = Matrix::random(32, 16, 11);
         let b = Matrix::random(16, 32, 12);
         let want = a.matmul(&b);
-        tx.send((GemmJob { id: 6, a, b: b.into(), run: Some(RunConfig::square(2, 16)) }, rtx))
+        tx.send((GemmJob { id: 6, a: a.into(), b: b.into(), run: Some(RunConfig::square(2, 16)) }, rtx))
             .unwrap();
         drop(tx);
         co.serve(rx);
@@ -396,7 +411,7 @@ mod tests {
                     let r = co
                         .run_job(GemmJob {
                             id: t,
-                            a,
+                            a: a.into(),
                             b: b.into(),
                             run: Some(RunConfig::square(2, 16)),
                         })

@@ -1,5 +1,5 @@
-//! Server-resident packed-operand registry: register a weight once,
-//! never repack it across calls.
+//! Server-resident packed-operand registry: register an operand once,
+//! never repack it across calls — on **either** side of the GEMM.
 //!
 //! PR 4's shared-B batches made a packed B shareable *within* one
 //! [`super::JobServer::submit_batched_gemm`] call; successive batches,
@@ -8,35 +8,45 @@
 //! — weights are stationary state, activations are traffic — and the
 //! related multi-array literature (Strassen Multisystolic Arrays,
 //! ArrayFlex) likewise preloads stationary operands. [`OperandRegistry`]
-//! is that model-load step for this serving runtime:
+//! is that model-load step for this serving runtime. PR 6 makes it
+//! symmetric: attention-style traffic multiplies one *activation* batch
+//! against several weight sets (Q/K/V/O), so the A side reuses panels
+//! just as heavily as B does.
 //!
-//! * [`super::JobServer::register_b`] stores the operand once behind an
+//! * [`super::JobServer::register_b`] stores a weight once behind an
 //!   `Arc<Matrix>` and returns an opaque [`WeightHandle`];
-//! * submissions carry a [`BOperand`] — `Inline(Matrix)` keeps the old
-//!   per-call semantics, `Registered(WeightHandle)` resolves inside the
-//!   dispatcher to the cached [`PackedB`];
-//! * the pack cache is keyed by `(handle, sj)`: a handle resolved under
-//!   one block size reuses its pack on every later call (a *hit*),
-//!   while a different `S_j` re-derives a per-shape variant once (a
+//!   [`super::JobServer::register_a`] does the same for an activation
+//!   and returns an [`ActivationHandle`];
+//! * submissions carry a [`BOperand`] / [`AOperand`] —
+//!   `Inline(Matrix)` keeps the old per-call semantics, `Registered(_)`
+//!   resolves inside the dispatcher to the cached [`PackedB`] /
+//!   [`PackedA`];
+//! * the pack cache is side-tagged and keyed by `(handle, side,
+//!   s_param)`: a handle resolved under one block size (`S_j` for B,
+//!   `S_i` for A) reuses its pack on every later call (a *hit*), while
+//!   a different block size re-derives a per-shape variant once (a
 //!   *miss* that packs and caches). The one-pack guarantee therefore
 //!   holds **across** calls, not just within one;
-//! * eviction is refcount-pinned LRU under a configurable byte budget
+//! * both sides share one byte budget and one refcount-pinned LRU
 //!   (`ServerConfig::registry_budget_bytes`): least-recently-used packs
-//!   leave first, but a pack still referenced outside the registry (an
-//!   in-flight job holds its `Arc`) is pinned and survives — the
-//!   registry may transiently exceed its budget rather than invalidate
-//!   live work. Evicting a pack never invalidates its handle: the next
-//!   resolution repacks from the retained matrix (a miss, not an error).
+//!   of either side leave first, but a pack still referenced outside
+//!   the registry (an in-flight job holds its `Arc`) is pinned and
+//!   survives — the registry may transiently exceed its budget rather
+//!   than invalidate live work. Evicting a pack never invalidates its
+//!   handle: the next resolution repacks from the retained matrix (a
+//!   miss, not an error).
 //!
-//! Hit/miss/evict counters and the resident-bytes gauge land in
-//! [`Metrics`] next to `panels_shared`, so the cross-call win is as
-//! observable as PR 4's within-call sharing.
+//! Hit/miss/evict counters are shared across sides (the A-side share is
+//! additionally split out as `registry_a_*`), and resident-bytes gauges
+//! — total and A-side — land in [`Metrics`] next to `panels_shared`,
+//! so the cross-call win is as observable as PR 4's within-call
+//! sharing.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::gemm::{Matrix, PackedB};
+use crate::gemm::{Matrix, PackedA, PackedB};
 
 use super::metrics::Metrics;
 
@@ -66,6 +76,30 @@ impl WeightHandle {
 impl std::fmt::Display for WeightHandle {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "weight#{}", self.id)
+    }
+}
+
+/// Opaque, copyable handle to a registered A operand (an activation
+/// batch member). Obtained from [`super::JobServer::register_a`]; valid
+/// until the matching `unregister_a`. Same nonce discipline as
+/// [`WeightHandle`]: a foreign handle is an error, never a silent
+/// lookup into same-numbered state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ActivationHandle {
+    registry: u64,
+    id: u64,
+}
+
+impl ActivationHandle {
+    /// The raw per-registry id (diagnostics / logging).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl std::fmt::Display for ActivationHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "act#{}", self.id)
     }
 }
 
@@ -128,35 +162,125 @@ impl From<WeightHandle> for BOperand {
     }
 }
 
-/// One cached pack variant of a registered operand.
+/// The A side of a submission, mirroring [`BOperand`]: a one-shot
+/// inline matrix or a registered activation resolved from the server's
+/// [`OperandRegistry`].
+#[derive(Debug, Clone)]
+pub enum AOperand {
+    /// Caller-owned operand; packed once for this call.
+    Inline(Matrix),
+    /// Server-resident activation; packed at most once per
+    /// `(handle, S_i)` for the whole process.
+    Registered(ActivationHandle),
+}
+
+impl AOperand {
+    /// `(rows, cols)` when the operand is inline; `None` for a handle
+    /// (its dims live in the server's registry).
+    pub fn inline_dims(&self) -> Option<(usize, usize)> {
+        match self {
+            AOperand::Inline(m) => Some((m.rows, m.cols)),
+            AOperand::Registered(_) => None,
+        }
+    }
+
+    /// Borrow the inline matrix, if any.
+    pub fn as_inline(&self) -> Option<&Matrix> {
+        match self {
+            AOperand::Inline(m) => Some(m),
+            AOperand::Registered(_) => None,
+        }
+    }
+
+    /// Take the inline matrix back out, if any.
+    pub fn into_inline(self) -> Option<Matrix> {
+        match self {
+            AOperand::Inline(m) => Some(m),
+            AOperand::Registered(_) => None,
+        }
+    }
+
+    /// The registered handle, if any.
+    pub fn handle(&self) -> Option<ActivationHandle> {
+        match self {
+            AOperand::Inline(_) => None,
+            AOperand::Registered(h) => Some(*h),
+        }
+    }
+}
+
+impl From<Matrix> for AOperand {
+    fn from(m: Matrix) -> Self {
+        AOperand::Inline(m)
+    }
+}
+
+impl From<ActivationHandle> for AOperand {
+    fn from(h: ActivationHandle) -> Self {
+        AOperand::Registered(h)
+    }
+}
+
+/// Which GEMM operand an entry (and its packs) belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Side {
+    A,
+    B,
+}
+
+/// One cached pack variant of a registered operand — the side tag
+/// lives in the pack itself, so one LRU walks both sides.
+enum AnyPack {
+    A(Arc<PackedA>),
+    B(Arc<PackedB>),
+}
+
+impl AnyPack {
+    /// Outstanding references to the underlying pack — `1` means only
+    /// the registry holds it (evictable), more means an in-flight job
+    /// pins it.
+    fn strong_count(&self) -> usize {
+        match self {
+            AnyPack::A(p) => Arc::strong_count(p),
+            AnyPack::B(p) => Arc::strong_count(p),
+        }
+    }
+}
+
 struct PackSlot {
-    pack: Arc<PackedB>,
+    pack: AnyPack,
     bytes: u64,
     /// Logical LRU timestamp; bumped on every hit.
     stamp: u64,
 }
 
-/// One registered operand: the retained matrix plus its per-`sj` pack
-/// variants.
+/// One registered operand: the retained matrix, its side, and its
+/// per-block-size pack variants (`sj` keys for B entries, `si` for A).
 struct Entry {
     matrix: Arc<Matrix>,
+    side: Side,
     packs: HashMap<usize, PackSlot>,
 }
 
 struct State {
     entries: HashMap<u64, Entry>,
+    /// Shared id space across sides — an A handle's id never collides
+    /// with a B entry's.
     next_handle: u64,
-    /// LRU clock; bumped on every resolution.
+    /// LRU clock; bumped on every resolution, shared by both sides.
     clock: u64,
     /// Bytes of packed data currently held by the registry (cached
-    /// packs only — retained matrices and in-flight clones the registry
-    /// no longer holds are not counted).
+    /// packs of both sides — retained matrices and in-flight clones the
+    /// registry no longer holds are not counted).
     resident_bytes: u64,
+    /// The A-side share of `resident_bytes`.
+    a_resident_bytes: u64,
 }
 
-/// The server-resident weight cache. Owned by the `JobServer`'s shared
-/// state; clients reach it through `register_b` / `unregister_b`, the
-/// dispatcher through [`OperandRegistry::resolve_pack`].
+/// The server-resident operand cache. Owned by the `JobServer`'s shared
+/// state; clients reach it through `register_a` / `register_b` (and the
+/// matching unregisters), the dispatcher through
+/// [`OperandRegistry::resolve_pack`] / [`OperandRegistry::resolve_pack_a`].
 pub struct OperandRegistry {
     nonce: u64,
     budget_bytes: u64,
@@ -175,6 +299,7 @@ impl OperandRegistry {
                 next_handle: 0,
                 clock: 0,
                 resident_bytes: 0,
+                a_resident_bytes: 0,
             }),
         }
     }
@@ -186,55 +311,108 @@ impl OperandRegistry {
         (h.registry == self.nonce).then_some(h.id)
     }
 
+    /// [`OperandRegistry::key`], A side.
+    fn key_a(&self, h: ActivationHandle) -> Option<u64> {
+        (h.registry == self.nonce).then_some(h.id)
+    }
+
+    fn register_side(&self, m: Matrix, side: Side) -> anyhow::Result<u64> {
+        anyhow::ensure!(
+            m.rows > 0 && m.cols > 0,
+            "cannot register degenerate operand {}x{}",
+            m.rows,
+            m.cols
+        );
+        let mut st = self.state.lock().unwrap();
+        let id = st.next_handle;
+        st.next_handle += 1;
+        st.entries.insert(id, Entry { matrix: Arc::new(m), side, packs: HashMap::new() });
+        Ok(id)
+    }
+
     /// Register one B operand; packing is lazy (first resolution per
     /// block size), so the handle is cheap to create and never packs at
     /// a block size no job asks for.
     pub fn register(&self, b: Matrix) -> anyhow::Result<WeightHandle> {
-        anyhow::ensure!(
-            b.rows > 0 && b.cols > 0,
-            "cannot register degenerate operand {}x{}",
-            b.rows,
-            b.cols
-        );
-        let mut st = self.state.lock().unwrap();
-        let h = WeightHandle { registry: self.nonce, id: st.next_handle };
-        st.next_handle += 1;
-        st.entries.insert(h.id, Entry { matrix: Arc::new(b), packs: HashMap::new() });
-        Ok(h)
+        let id = self.register_side(b, Side::B)?;
+        Ok(WeightHandle { registry: self.nonce, id })
     }
 
-    /// Drop a registered operand and its cached packs. In-flight jobs
+    /// Register one A operand (same lazy-packing contract as
+    /// [`OperandRegistry::register`], keyed by `S_i` instead of `S_j`).
+    pub fn register_a(&self, a: Matrix) -> anyhow::Result<ActivationHandle> {
+        let id = self.register_side(a, Side::A)?;
+        Ok(ActivationHandle { registry: self.nonce, id })
+    }
+
+    fn unregister_key(&self, key: u64, side: Side, label: &dyn std::fmt::Display) -> anyhow::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        match st.entries.get(&key) {
+            Some(e) if e.side == side => {}
+            _ => anyhow::bail!("{label} is not registered (double unregister?)"),
+        }
+        let entry = st.entries.remove(&key).unwrap();
+        let freed: u64 = entry.packs.values().map(|s| s.bytes).sum();
+        st.resident_bytes -= freed;
+        if side == Side::A {
+            st.a_resident_bytes -= freed;
+        }
+        self.metrics.set_registry_resident_bytes(st.resident_bytes);
+        self.metrics.set_registry_a_resident_bytes(st.a_resident_bytes);
+        Ok(())
+    }
+
+    /// Drop a registered weight and its cached packs. In-flight jobs
     /// keep their `Arc` clones, so running work is unaffected; later
     /// submissions under this handle fail through their tickets.
     pub fn unregister(&self, h: WeightHandle) -> anyhow::Result<()> {
         let key = self
             .key(h)
             .ok_or_else(|| anyhow::anyhow!("{h} belongs to a different server's registry"))?;
-        let mut st = self.state.lock().unwrap();
-        let entry = st
-            .entries
-            .remove(&key)
-            .ok_or_else(|| anyhow::anyhow!("{h} is not registered (double unregister?)"))?;
-        let freed: u64 = entry.packs.values().map(|s| s.bytes).sum();
-        st.resident_bytes -= freed;
-        self.metrics.set_registry_resident_bytes(st.resident_bytes);
-        Ok(())
+        self.unregister_key(key, Side::B, &h)
     }
 
-    /// `(rows, cols)` of a registered operand; `None` once unregistered
+    /// [`OperandRegistry::unregister`], A side.
+    pub fn unregister_a(&self, h: ActivationHandle) -> anyhow::Result<()> {
+        let key = self
+            .key_a(h)
+            .ok_or_else(|| anyhow::anyhow!("{h} belongs to a different server's registry"))?;
+        self.unregister_key(key, Side::A, &h)
+    }
+
+    fn dims_key(&self, key: u64, side: Side) -> Option<(usize, usize)> {
+        let st = self.state.lock().unwrap();
+        st.entries
+            .get(&key)
+            .filter(|e| e.side == side)
+            .map(|e| (e.matrix.rows, e.matrix.cols))
+    }
+
+    /// `(rows, cols)` of a registered weight; `None` once unregistered
     /// (or for another registry's handle).
     pub fn dims(&self, h: WeightHandle) -> Option<(usize, usize)> {
-        let key = self.key(h)?;
-        let st = self.state.lock().unwrap();
-        st.entries.get(&key).map(|e| (e.matrix.rows, e.matrix.cols))
+        self.dims_key(self.key(h)?, Side::B)
     }
 
-    /// The retained operand matrix; `None` once unregistered (or for
+    /// [`OperandRegistry::dims`], A side.
+    pub fn dims_a(&self, h: ActivationHandle) -> Option<(usize, usize)> {
+        self.dims_key(self.key_a(h)?, Side::A)
+    }
+
+    fn matrix_key(&self, key: u64, side: Side) -> Option<Arc<Matrix>> {
+        let st = self.state.lock().unwrap();
+        st.entries.get(&key).filter(|e| e.side == side).map(|e| e.matrix.clone())
+    }
+
+    /// The retained weight matrix; `None` once unregistered (or for
     /// another registry's handle).
     pub fn matrix(&self, h: WeightHandle) -> Option<Arc<Matrix>> {
-        let key = self.key(h)?;
-        let st = self.state.lock().unwrap();
-        st.entries.get(&key).map(|e| e.matrix.clone())
+        self.matrix_key(self.key(h)?, Side::B)
+    }
+
+    /// [`OperandRegistry::matrix`], A side.
+    pub fn matrix_a(&self, h: ActivationHandle) -> Option<Arc<Matrix>> {
+        self.matrix_key(self.key_a(h)?, Side::A)
     }
 
     /// Resolve the packed form of `h` at block size `sj`: a cached
@@ -253,11 +431,15 @@ impl OperandRegistry {
             let entry = st
                 .entries
                 .get_mut(&key)
+                .filter(|e| e.side == Side::B)
                 .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?;
             if let Some(slot) = entry.packs.get_mut(&sj) {
                 slot.stamp = clock;
                 self.metrics.add_registry_hits(1);
-                return Ok(slot.pack.clone());
+                match &slot.pack {
+                    AnyPack::B(p) => return Ok(p.clone()),
+                    AnyPack::A(_) => unreachable!("B entry holds an A pack"),
+                }
             }
             entry.matrix.clone()
         };
@@ -271,25 +453,73 @@ impl OperandRegistry {
         self.metrics.add_b_panel_packs(1);
         let pack = Arc::new(PackedB::pack(matrix.view(), sj));
         let bytes = pack.packed_bytes();
+        self.publish(key, sj, AnyPack::B(pack.clone()), bytes, Side::B);
+        Ok(pack)
+    }
+
+    /// [`OperandRegistry::resolve_pack`], A side: the cache key is the
+    /// row block size `S_i` and the cached unit is an `Arc<PackedA>`.
+    pub fn resolve_pack_a(&self, h: ActivationHandle, si: usize) -> anyhow::Result<Arc<PackedA>> {
+        let key = self
+            .key_a(h)
+            .ok_or_else(|| anyhow::anyhow!("{h} belongs to a different server's registry"))?;
+        let matrix = {
+            let mut st = self.state.lock().unwrap();
+            st.clock += 1;
+            let clock = st.clock;
+            let entry = st
+                .entries
+                .get_mut(&key)
+                .filter(|e| e.side == Side::A)
+                .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?;
+            if let Some(slot) = entry.packs.get_mut(&si) {
+                slot.stamp = clock;
+                self.metrics.add_registry_hits(1);
+                self.metrics.add_registry_a_hits(1);
+                match &slot.pack {
+                    AnyPack::A(p) => return Ok(p.clone()),
+                    AnyPack::B(_) => unreachable!("A entry holds a B pack"),
+                }
+            }
+            entry.matrix.clone()
+        };
+        self.metrics.add_registry_misses(1);
+        self.metrics.add_registry_a_misses(1);
+        self.metrics.add_a_panel_packs(1);
+        let pack = Arc::new(PackedA::pack(matrix.view(), si));
+        let bytes = pack.packed_bytes();
+        self.publish(key, si, AnyPack::A(pack.clone()), bytes, Side::A);
+        Ok(pack)
+    }
+
+    /// Publish a freshly packed variant into the cache, settle the byte
+    /// ledger (replacement race included), and run eviction.
+    fn publish(&self, key: u64, s_param: usize, pack: AnyPack, bytes: u64, side: Side) {
         let mut st = self.state.lock().unwrap();
         st.clock += 1;
         let stamp = st.clock;
         if let Some(entry) = st.entries.get_mut(&key) {
-            if let Some(old) = entry.packs.insert(sj, PackSlot { pack: pack.clone(), bytes, stamp })
-            {
+            if let Some(old) = entry.packs.insert(s_param, PackSlot { pack, bytes, stamp }) {
                 st.resident_bytes -= old.bytes;
+                if side == Side::A {
+                    st.a_resident_bytes -= old.bytes;
+                }
             }
             st.resident_bytes += bytes;
+            if side == Side::A {
+                st.a_resident_bytes += bytes;
+            }
             self.evict_lru(&mut st);
             self.metrics.set_registry_resident_bytes(st.resident_bytes);
+            self.metrics.set_registry_a_resident_bytes(st.a_resident_bytes);
         }
-        Ok(pack)
     }
 
-    /// Evict least-recently-used packs until the budget holds, skipping
-    /// pinned ones (`Arc` held outside the registry — an in-flight
-    /// job). With everything pinned the registry overshoots its budget
-    /// transiently instead of invalidating live work.
+    /// Evict least-recently-used packs — of either side, one shared LRU
+    /// — until the budget holds, skipping pinned ones (`Arc` held
+    /// outside the registry — an in-flight job). With everything pinned
+    /// the registry overshoots its budget transiently instead of
+    /// invalidating live work.
     fn evict_lru(&self, st: &mut State) {
         while st.resident_bytes > self.budget_bytes {
             let victim = st
@@ -298,31 +528,79 @@ impl OperandRegistry {
                 .flat_map(|(id, e)| {
                     e.packs
                         .iter()
-                        .filter(|(_, slot)| Arc::strong_count(&slot.pack) == 1)
-                        .map(move |(sj, slot)| (slot.stamp, *id, *sj))
+                        .filter(|(_, slot)| slot.pack.strong_count() == 1)
+                        .map(move |(s_param, slot)| (slot.stamp, *id, *s_param, e.side))
                 })
-                .min();
-            let Some((_, id, sj)) = victim else { break };
+                .min_by_key(|(stamp, id, s_param, _)| (*stamp, *id, *s_param));
+            let Some((_, id, s_param, side)) = victim else { break };
             let slot = st
                 .entries
                 .get_mut(&id)
                 .expect("victim entry vanished under the lock")
                 .packs
-                .remove(&sj)
+                .remove(&s_param)
                 .expect("victim slot vanished under the lock");
             st.resident_bytes -= slot.bytes;
             self.metrics.add_registry_evictions(1);
+            if side == Side::A {
+                st.a_resident_bytes -= slot.bytes;
+                self.metrics.add_registry_a_evictions(1);
+            }
         }
     }
 
-    /// Registered operands currently alive.
-    pub fn registered_weights(&self) -> usize {
-        self.state.lock().unwrap().entries.len()
+    /// The `S_j` variants of `h` currently resident (sorted). Racy by
+    /// nature — a variant can be evicted between this call and the next
+    /// resolution — so callers (the registry-aware planner) treat it as
+    /// a hint, never a guarantee.
+    pub fn resident_b_sjs(&self, h: WeightHandle) -> Vec<usize> {
+        let Some(key) = self.key(h) else { return Vec::new() };
+        let st = self.state.lock().unwrap();
+        let mut sjs: Vec<usize> = st
+            .entries
+            .get(&key)
+            .filter(|e| e.side == Side::B)
+            .map(|e| e.packs.keys().copied().collect())
+            .unwrap_or_default();
+        sjs.sort_unstable();
+        sjs
     }
 
-    /// Bytes of packed data the registry currently holds.
+    /// [`OperandRegistry::resident_b_sjs`], A side: resident `S_i`
+    /// variants.
+    pub fn resident_a_sis(&self, h: ActivationHandle) -> Vec<usize> {
+        let Some(key) = self.key_a(h) else { return Vec::new() };
+        let st = self.state.lock().unwrap();
+        let mut sis: Vec<usize> = st
+            .entries
+            .get(&key)
+            .filter(|e| e.side == Side::A)
+            .map(|e| e.packs.keys().copied().collect())
+            .unwrap_or_default();
+        sis.sort_unstable();
+        sis
+    }
+
+    /// Registered B operands currently alive.
+    pub fn registered_weights(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.entries.values().filter(|e| e.side == Side::B).count()
+    }
+
+    /// Registered A operands currently alive.
+    pub fn registered_activations(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.entries.values().filter(|e| e.side == Side::A).count()
+    }
+
+    /// Bytes of packed data the registry currently holds (both sides).
     pub fn resident_bytes(&self) -> u64 {
         self.state.lock().unwrap().resident_bytes
+    }
+
+    /// The A-side share of [`OperandRegistry::resident_bytes`].
+    pub fn a_resident_bytes(&self) -> u64 {
+        self.state.lock().unwrap().a_resident_bytes
     }
 }
 
@@ -358,6 +636,36 @@ mod tests {
         assert_eq!(m.b_panel_packs(), 2);
         assert_eq!(m.registry_resident_bytes(), reg.resident_bytes());
         assert!(reg.resident_bytes() > 0);
+        assert_eq!(reg.resident_b_sjs(h), vec![8, 16]);
+        // Pure-B workload: the A-side split stays at zero.
+        assert_eq!((m.registry_a_hits(), m.registry_a_misses()), (0, 0));
+        assert_eq!(reg.a_resident_bytes(), 0);
+    }
+
+    #[test]
+    fn register_a_resolve_hit_miss_counters() {
+        let (reg, m) = registry(u64::MAX);
+        let h = reg.register_a(Matrix::random(29, 13, 2)).unwrap();
+        assert_eq!(reg.dims_a(h), Some((29, 13)));
+        assert_eq!(reg.registered_activations(), 1);
+        assert_eq!(reg.registered_weights(), 0, "A entries are not weights");
+
+        let p1 = reg.resolve_pack_a(h, 16).unwrap();
+        assert_eq!((m.registry_hits(), m.registry_misses()), (0, 1), "shared counters");
+        assert_eq!((m.registry_a_hits(), m.registry_a_misses()), (0, 1), "A-side split");
+        assert_eq!(m.a_panel_packs(), 1, "an A miss is one whole-operand A pack");
+        let p2 = reg.resolve_pack_a(h, 16).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "a hit returns the cached pack");
+        assert_eq!((m.registry_a_hits(), m.registry_a_misses()), (1, 1));
+        assert_eq!(m.a_panel_packs(), 1, "hits never repack");
+
+        let p3 = reg.resolve_pack_a(h, 8).unwrap();
+        assert!(!Arc::ptr_eq(&p1, &p3));
+        assert_eq!((m.registry_a_hits(), m.registry_a_misses()), (1, 2));
+        assert_eq!(reg.resident_a_sis(h), vec![8, 16]);
+        assert_eq!(reg.a_resident_bytes(), reg.resident_bytes(), "pure-A workload");
+        assert_eq!(m.registry_a_resident_bytes(), reg.a_resident_bytes());
+        assert_eq!(m.b_panel_packs(), 0, "A packs never count as B packs");
     }
 
     #[test]
@@ -370,6 +678,19 @@ mod tests {
         assert_eq!(cached.num_panels(), private.num_panels());
         for bj in 0..private.num_panels() {
             assert_eq!(cached.panel(bj), private.panel(bj));
+        }
+    }
+
+    #[test]
+    fn resolved_a_pack_is_bit_identical_to_private_pack() {
+        let (reg, _) = registry(u64::MAX);
+        let a = Matrix::random(37, 23, 8);
+        let h = reg.register_a(a.clone()).unwrap();
+        let cached = reg.resolve_pack_a(h, 12).unwrap();
+        let private = PackedA::pack(a.view(), 12);
+        assert_eq!(cached.num_panels(), private.num_panels());
+        for bi in 0..private.num_panels() {
+            assert_eq!(cached.panel(bi), private.panel(bi));
         }
     }
 
@@ -391,6 +712,46 @@ mod tests {
         assert_eq!(m.registry_misses(), 3, "evicted pack resolves as a fresh miss");
         assert_eq!(m.registry_evictions(), 2);
         assert_eq!(m.registry_hits(), 0);
+    }
+
+    #[test]
+    fn mixed_side_lru_shares_budget_and_respects_pins() {
+        // The satellite eviction scenario: A and B packs in one LRU
+        // under a budget that holds nothing, with refcount pins on one
+        // pack of each side. The pinned packs of *either* side survive;
+        // the unpinned ones (older stamps first) are evicted across
+        // sides.
+        let (reg, m) = registry(1);
+        let ha_pin = reg.register_a(Matrix::random(8, 8, 1)).unwrap();
+        let hb_pin = reg.register(Matrix::random(8, 8, 2)).unwrap();
+        let ha_cold = reg.register_a(Matrix::random(8, 8, 3)).unwrap();
+        let hb_cold = reg.register(Matrix::random(8, 8, 4)).unwrap();
+
+        let pin_a = reg.resolve_pack_a(ha_pin, 8).unwrap(); // held → pinned
+        let pin_b = reg.resolve_pack(hb_pin, 8).unwrap(); // held → pinned
+        let bytes_each = reg.resident_bytes() / 2;
+        assert_eq!(m.registry_evictions(), 0, "both resident packs are pinned");
+
+        // Unpinned resolutions on both sides: each lands, then is the
+        // only evictable pack, so the next pressure removes it — the
+        // pinned A and B packs survive every round.
+        let cold_a = reg.resolve_pack_a(ha_cold, 8).unwrap();
+        drop(cold_a);
+        let cold_b = reg.resolve_pack(hb_cold, 8).unwrap();
+        assert_eq!(m.registry_evictions(), 1, "unpinned A pack evicted, pins survive");
+        assert_eq!(m.registry_a_evictions(), 1, "the victim was the A-side pack");
+        drop(cold_b);
+        let _cold_a2 = reg.resolve_pack_a(ha_cold, 8).unwrap();
+        assert_eq!(m.registry_evictions(), 2, "unpinned B pack evicted next (older stamp)");
+        assert_eq!(m.registry_a_evictions(), 1, "second victim was the B-side pack");
+
+        // Pinned packs never left: resolving them is a hit, not a miss.
+        let before = m.registry_misses();
+        let again_a = reg.resolve_pack_a(ha_pin, 8).unwrap();
+        let again_b = reg.resolve_pack(hb_pin, 8).unwrap();
+        assert!(Arc::ptr_eq(&pin_a, &again_a), "pinned A pack survived the churn");
+        assert!(Arc::ptr_eq(&pin_b, &again_b), "pinned B pack survived the churn");
+        assert_eq!(m.registry_misses(), before, "both were hits");
     }
 
     #[test]
@@ -435,10 +796,30 @@ mod tests {
     }
 
     #[test]
+    fn unregister_a_frees_and_invalidates() {
+        let (reg, m) = registry(u64::MAX);
+        let h = reg.register_a(Matrix::random(8, 8, 1)).unwrap();
+        let held = reg.resolve_pack_a(h, 8).unwrap();
+        assert!(reg.a_resident_bytes() > 0);
+        reg.unregister_a(h).unwrap();
+        assert_eq!(reg.resident_bytes(), 0);
+        assert_eq!(reg.a_resident_bytes(), 0);
+        assert_eq!(m.registry_a_resident_bytes(), 0);
+        assert_eq!(reg.registered_activations(), 0);
+        assert!(reg.dims_a(h).is_none());
+        assert!(reg.matrix_a(h).is_none());
+        assert!(reg.resolve_pack_a(h, 8).is_err(), "handle dead after unregister");
+        assert!(reg.unregister_a(h).is_err(), "double unregister is an error");
+        assert!(held.num_panels() > 0);
+    }
+
+    #[test]
     fn degenerate_register_rejected() {
         let (reg, _) = registry(u64::MAX);
         assert!(reg.register(Matrix::zeros(0, 4)).is_err());
         assert!(reg.register(Matrix::zeros(4, 0)).is_err());
+        assert!(reg.register_a(Matrix::zeros(0, 4)).is_err());
+        assert!(reg.register_a(Matrix::zeros(4, 0)).is_err());
     }
 
     #[test]
@@ -457,6 +838,22 @@ mod tests {
     }
 
     #[test]
+    fn aoperand_conversions() {
+        let m = Matrix::random(3, 4, 9);
+        let inline: AOperand = m.clone().into();
+        assert_eq!(inline.inline_dims(), Some((3, 4)));
+        assert!(inline.handle().is_none());
+        assert_eq!(inline.into_inline().unwrap().data, m.data);
+        let h = ActivationHandle { registry: 0, id: 7 };
+        let reg: AOperand = h.into();
+        assert!(reg.inline_dims().is_none());
+        assert!(reg.as_inline().is_none());
+        assert!(reg.into_inline().is_none());
+        assert_eq!(AOperand::Registered(h).handle(), Some(h));
+        assert_eq!(h.to_string(), "act#7");
+    }
+
+    #[test]
     fn foreign_handle_never_resolves() {
         // A handle minted by one registry must be an error — not a
         // lookup into same-numbered state — on any other registry.
@@ -472,5 +869,18 @@ mod tests {
         assert!(r2.unregister(h1).is_err());
         assert_eq!(r2.registered_weights(), 1, "foreign unregister must not evict");
         assert!(r1.resolve_pack(h1, 8).is_ok());
+    }
+
+    #[test]
+    fn foreign_activation_handle_never_resolves() {
+        let (r1, _) = registry(u64::MAX);
+        let (r2, _) = registry(u64::MAX);
+        let h1 = r1.register_a(Matrix::random(4, 4, 1)).unwrap();
+        assert!(r2.dims_a(h1).is_none());
+        assert!(r2.matrix_a(h1).is_none());
+        assert!(r2.resolve_pack_a(h1, 8).is_err());
+        assert!(r2.unregister_a(h1).is_err());
+        assert!(r2.resident_a_sis(h1).is_empty());
+        assert!(r1.resolve_pack_a(h1, 8).is_ok());
     }
 }

@@ -34,14 +34,25 @@
 //!   `Metrics::panels_shared`), and because an operand's packed layout
 //!   depends only on its own shape and block size, every sub-result is
 //!   bit-identical to an individual submission;
-//! * **registered weights** ([`JobServer::register_b`]): the B side of
-//!   any submission is a [`BOperand`] — inline, or a [`WeightHandle`]
-//!   into the server-resident [`OperandRegistry`]. A registered weight
-//!   is packed at most once per `(handle, S_j)` for the whole process,
-//!   so the one-pack guarantee extends *across* calls: successive
-//!   batches, epochs, and layers reusing a filter resolve to the cached
-//!   `Arc<PackedB>` (a registry *hit*) instead of repacking. Eviction
-//!   is refcount-pinned LRU under `ServerConfig::registry_budget_bytes`.
+//! * **registered operands** ([`JobServer::register_b`],
+//!   [`JobServer::register_a`]): either side of any submission may be a
+//!   handle into the server-resident [`OperandRegistry`] — the B side
+//!   as a [`BOperand`]/[`WeightHandle`], the A side as an
+//!   [`AOperand`]/[`ActivationHandle`]. A registered operand is packed
+//!   at most once per `(handle, side, S)` for the whole process, so the
+//!   one-pack guarantee extends *across* calls on both sides:
+//!   successive batches reusing a filter resolve the cached
+//!   `Arc<PackedB>`, and an activation batch multiplied against a whole
+//!   weight set (attention's Q/K/V/O shape) resolves one cached
+//!   `Arc<PackedA>` instead of repacking per weight. Both sides share
+//!   one byte budget under refcount-pinned LRU
+//!   (`ServerConfig::registry_budget_bytes`);
+//! * **registry-aware planning**: when a submission's registered
+//!   operands already hold packed variants, the planner steers the
+//!   chosen `(S_i, S_j)` toward an already-resident one (turning repack
+//!   misses into cache hits, counted in `Metrics::plan_residency_hits`)
+//!   unless the analytical model prices every resident candidate worse
+//!   than the baseline by more than `ServerConfig::plan_residency_slack`.
 //!
 //! Completion is counter-driven: the worker that finishes a job's last
 //! task assembles the result, runs the timing simulation, records
@@ -63,7 +74,7 @@ use crate::wqm::{AtomicWqm, JobRegistry};
 
 use super::engine::NumericsEngine;
 use super::metrics::Metrics;
-use super::registry::{BOperand, OperandRegistry, WeightHandle};
+use super::registry::{ActivationHandle, AOperand, BOperand, OperandRegistry, WeightHandle};
 use super::{choose_run_dims, GemmJob, JobResult};
 
 /// Serving-runtime knobs.
@@ -93,6 +104,13 @@ pub struct ServerConfig {
     /// evicted past this figure unless pinned by an in-flight job;
     /// evicted packs transparently repack on next use.
     pub registry_budget_bytes: u64,
+    /// Registry-aware planning slack: a block config already resident
+    /// for a submission's registered operands is preferred over the
+    /// planner's baseline as long as its predicted time is within
+    /// `baseline * (1 + slack)` — a repack miss traded against a
+    /// bounded compute penalty. Negative disables the refinement
+    /// entirely (the planner ignores residency).
+    pub plan_residency_slack: f64,
 }
 
 impl Default for ServerConfig {
@@ -106,6 +124,7 @@ impl Default for ServerConfig {
             cross_job_stealing: true,
             default_run: None,
             registry_budget_bytes: 256 << 20,
+            plan_residency_slack: 0.05,
         }
     }
 }
@@ -233,10 +252,27 @@ pub struct ServerStats {
     pub registry_misses: u64,
     /// Cached packs evicted to hold the registry byte budget.
     pub registry_evictions: u64,
+    /// A-side split of the registry figures above: resolutions of
+    /// registered *activations* ([`JobServer::register_a`]) served from
+    /// cache, packed fresh, and evicted. (The unsplit counters total
+    /// both sides.)
+    pub registry_a_hits: u64,
+    pub registry_a_misses: u64,
+    pub registry_a_evictions: u64,
     /// Bytes of packed data resident in the operand registry right now.
     pub registry_resident_bytes: u64,
+    /// A-side share of `registry_resident_bytes`.
+    pub registry_a_resident_bytes: u64,
     /// Weights currently registered ([`JobServer::register_b`]).
     pub registered_weights: u64,
+    /// Activations currently registered ([`JobServer::register_a`]).
+    pub registered_activations: u64,
+    /// Planning decisions steered to an already-resident block config
+    /// instead of the cascade baseline (registry-aware planning).
+    pub plan_residency_hits: u64,
+    /// Individual unregister failures swallowed-but-counted by the
+    /// `unregister_all*` sweeps — nonzero means handles leaked.
+    pub unregister_failures: u64,
     /// Per-task operand gathers on the numerics path (0 on the packed
     /// golden path; 2/task on the channel-fed PJRT backend).
     pub panel_copies: u64,
@@ -266,7 +302,8 @@ impl std::fmt::Display for ServerStats {
             "jobs={} (failed={}, batched={}, shared-b groups={}) tasks={} \
              steals={} (cross-job={}) packs(a/b)={}/{} panels_shared={} \
              registry(hit/miss/evict)={}/{}/{} weights={} resident={}B \
-             panel_copies={} {:.1} jobs/s \
+             a_panel(hit/miss/evict)={}/{}/{} activations={} a_resident={}B \
+             plan_residency_hits={} panel_copies={} {:.1} jobs/s \
              lat(p50/p95/p99)={:.4}s/{:.4}s/{:.4}s idle={:.1}%",
             self.jobs,
             self.jobs_failed,
@@ -283,6 +320,12 @@ impl std::fmt::Display for ServerStats {
             self.registry_evictions,
             self.registered_weights,
             self.registry_resident_bytes,
+            self.registry_a_hits,
+            self.registry_a_misses,
+            self.registry_a_evictions,
+            self.registered_activations,
+            self.registry_a_resident_bytes,
+            self.plan_residency_hits,
             self.panel_copies,
             self.throughput_jobs_per_sec,
             self.latency_p50_secs,
@@ -321,10 +364,11 @@ unsafe impl Sync for RawOut {}
 struct SubJob {
     id: u64,
     run: RunConfig,
-    a: Matrix,
-    /// Refcounted so a shared-B batch holds one B across all sub-jobs
-    /// (the gather-fallback path reads it per task; lone jobs just wrap
-    /// their own B).
+    /// Refcounted on both sides: a registered operand's matrix is the
+    /// registry's own `Arc` (never cloned per job), an inline one is
+    /// wrapped at dispatch. The gather-fallback path reads these per
+    /// task; a shared-B batch holds one B across all sub-jobs.
+    a: Arc<Matrix>,
     b: Arc<Matrix>,
     /// Packed once at dispatch for in-process engines; `None` for the
     /// channel-fed PJRT backend (it gathers per task). The packed B
@@ -399,11 +443,12 @@ struct Submission {
     accepted_at: Instant,
 }
 
-/// One sub-request of a shared-B batch: its own A, its own reply — B
-/// lives once on the enclosing [`SharedBatch`].
+/// One sub-request of a shared-B batch: its own A (inline, or a
+/// registered activation handle), its own reply — B lives once on the
+/// enclosing [`SharedBatch`].
 struct SharedSub {
     id: u64,
-    a: Matrix,
+    a: AOperand,
     reply: mpsc::Sender<anyhow::Result<JobResult>>,
     accepted_at: Instant,
 }
@@ -420,7 +465,7 @@ struct SharedBatch {
 
 /// Split a shared batch's A operands into per-sub tickets and
 /// submissions (shared by the blocking and load-shedding entry points).
-fn shared_batch_parts(many_a: Vec<Matrix>) -> (Vec<JobTicket>, Vec<SharedSub>) {
+fn shared_batch_parts(many_a: Vec<AOperand>) -> (Vec<JobTicket>, Vec<SharedSub>) {
     let now = Instant::now();
     let mut tickets = Vec::with_capacity(many_a.len());
     let mut subs = Vec::with_capacity(many_a.len());
@@ -745,6 +790,28 @@ impl JobServer {
         many_a: Vec<Matrix>,
         run: Option<RunConfig>,
     ) -> anyhow::Result<JobGroup> {
+        self.submit_batched_gemm_operands(
+            b,
+            many_a.into_iter().map(AOperand::from).collect(),
+            run,
+        )
+    }
+
+    /// [`JobServer::submit_batched_gemm`] generalized to [`AOperand`]s:
+    /// each member of `many_a` is inline, or a registered activation
+    /// handle whose cached `Arc<PackedA>` resolves at dispatch — one A
+    /// pack per `(handle, S_i)` across *calls*, so a fully-registered
+    /// workload (attention: one activation batch against Q/K/V/O weight
+    /// handles) packs nothing at steady state. Semantics otherwise
+    /// identical, including bit-identical results to inline submission:
+    /// a cached pack holds the same bytes a private pack of the same
+    /// matrix would.
+    pub fn submit_batched_gemm_operands(
+        &self,
+        b: impl Into<BOperand>,
+        many_a: Vec<AOperand>,
+        run: Option<RunConfig>,
+    ) -> anyhow::Result<JobGroup> {
         anyhow::ensure!(!many_a.is_empty(), "empty shared-B batch");
         let (tickets, subs) = shared_batch_parts(many_a);
         let item = QueueItem::SharedB(SharedBatch { b: b.into(), run, subs });
@@ -769,7 +836,8 @@ impl JobServer {
         if many_a.is_empty() {
             return Err(TrySubmitBatchedError::Empty);
         }
-        let (tickets, subs) = shared_batch_parts(many_a);
+        let (tickets, subs) =
+            shared_batch_parts(many_a.into_iter().map(AOperand::from).collect());
         let item = QueueItem::SharedB(SharedBatch { b, run, subs });
         match self.admission.try_push(item) {
             Ok(()) => Ok(JobGroup { tickets }),
@@ -781,7 +849,12 @@ impl JobServer {
                 let QueueItem::SharedB(SharedBatch { b, subs, .. }) = item else {
                     unreachable!("shared-B batch came back as another item kind")
                 };
-                let many_a = subs.into_iter().map(|s| s.a).collect();
+                // This entry point only ever builds inline subs, so the
+                // hand-back unwrap cannot miss.
+                let many_a = subs
+                    .into_iter()
+                    .map(|s| s.a.into_inline().expect("try-submit subs are inline"))
+                    .collect();
                 Err(if full {
                     TrySubmitBatchedError::Full { b, many_a }
                 } else {
@@ -820,6 +893,45 @@ impl JobServer {
         let mut first_err = None;
         for h in handles {
             if let Err(e) = self.unregister_b(h) {
+                self.shared.metrics.add_unregister_failures(1);
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Register an A operand as server-resident activation state — the
+    /// symmetric twin of [`JobServer::register_b`], for traffic that
+    /// reuses the *A* side (attention: one activation batch multiplied
+    /// against the whole Q/K/V/O weight set). The matrix is stored
+    /// once; its packed form builds lazily, at most once per
+    /// `(handle, S_i)`, in the same byte-budgeted, refcount-pinned LRU
+    /// cache the B side uses.
+    pub fn register_a(&self, a: Matrix) -> anyhow::Result<ActivationHandle> {
+        self.shared.operands.register_a(a)
+    }
+
+    /// Drop a registered activation and its cached packs. In-flight
+    /// jobs holding a pack finish unaffected; later submissions under
+    /// the handle fail through their tickets.
+    pub fn unregister_a(&self, h: ActivationHandle) -> anyhow::Result<()> {
+        self.shared.operands.unregister_a(h)
+    }
+
+    /// Unregister a whole set of activations with the same
+    /// sweep-then-report contract as [`JobServer::unregister_all`];
+    /// individual failures are counted in `Metrics::unregister_failures`.
+    pub fn unregister_all_a(
+        &self,
+        handles: impl IntoIterator<Item = ActivationHandle>,
+    ) -> anyhow::Result<()> {
+        let mut first_err = None;
+        for h in handles {
+            if let Err(e) = self.unregister_a(h) {
+                self.shared.metrics.add_unregister_failures(1);
                 first_err.get_or_insert(e);
             }
         }
@@ -880,8 +992,15 @@ impl JobServer {
             registry_hits: m.registry_hits(),
             registry_misses: m.registry_misses(),
             registry_evictions: m.registry_evictions(),
+            registry_a_hits: m.registry_a_hits(),
+            registry_a_misses: m.registry_a_misses(),
+            registry_a_evictions: m.registry_a_evictions(),
             registry_resident_bytes: m.registry_resident_bytes(),
+            registry_a_resident_bytes: m.registry_a_resident_bytes(),
             registered_weights: self.shared.operands.registered_weights() as u64,
+            registered_activations: self.shared.operands.registered_activations() as u64,
+            plan_residency_hits: m.plan_residency_hits(),
+            unregister_failures: m.unregister_failures(),
             panel_copies: m.panel_copies(),
             a_panel_packs: m.a_panel_packs(),
             b_panel_packs: m.b_panel_packs(),
@@ -941,8 +1060,15 @@ impl Drop for JobServer {
 /// `None` comes back.
 fn plan_one(shared: &Shared, s: Submission) -> Option<Planned> {
     let planned = (|| -> anyhow::Result<(RunConfig, BlockPlan)> {
-        // A registered B plans from the registry's recorded dims; the
-        // pack itself resolves at activation.
+        // A registered operand plans from the registry's recorded dims;
+        // the pack itself resolves at activation.
+        let (a_rows, a_cols) = match &s.job.a {
+            AOperand::Inline(m) => (m.rows, m.cols),
+            AOperand::Registered(h) => shared
+                .operands
+                .dims_a(*h)
+                .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?,
+        };
         let (b_rows, b_cols) = match &s.job.b {
             BOperand::Inline(m) => (m.rows, m.cols),
             BOperand::Registered(h) => shared
@@ -950,26 +1076,34 @@ fn plan_one(shared: &Shared, s: Submission) -> Option<Planned> {
                 .dims(*h)
                 .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?,
         };
-        anyhow::ensure!(s.job.a.cols == b_rows, "contraction mismatch");
+        anyhow::ensure!(a_cols == b_rows, "contraction mismatch");
         // BlockPlan::new panics on zero dims; in a server that would
         // take the dispatcher thread down — reject the job instead.
         anyhow::ensure!(
-            s.job.a.rows > 0 && s.job.a.cols > 0 && b_cols > 0,
-            "degenerate problem {}x{}x{}",
-            s.job.a.rows,
-            s.job.a.cols,
-            b_cols
+            a_rows > 0 && a_cols > 0 && b_cols > 0,
+            "degenerate problem {a_rows}x{a_cols}x{b_cols}",
         );
         let run = choose_run_dims(
             &shared.hw,
             shared.accelerator.surface(),
-            s.job.a.rows,
-            s.job.a.cols,
+            a_rows,
+            a_cols,
             b_cols,
             s.job.run,
             shared.cfg.default_run,
         )?;
-        let plan = BlockPlan::new(s.job.a.rows, s.job.a.cols, b_cols, run.si, run.sj);
+        let a_sis = s.job.a.handle().map(|h| shared.operands.resident_a_sis(h));
+        let b_sjs = s.job.b.handle().map(|h| shared.operands.resident_b_sjs(h));
+        let run = refine_run_for_residency(
+            shared,
+            run,
+            a_sis.as_deref(),
+            b_sjs.as_deref(),
+            a_rows,
+            a_cols,
+            b_cols,
+        );
+        let plan = BlockPlan::new(a_rows, a_cols, b_cols, run.si, run.sj);
         Ok((run, plan))
     })();
     match planned {
@@ -985,6 +1119,82 @@ fn plan_one(shared: &Shared, s: Submission) -> Option<Planned> {
     }
 }
 
+/// Registry-aware run refinement: when a submission's registered
+/// operands already hold packed variants for some block sizes, steer
+/// the planner's baseline toward an `(S_i, S_j)` that is resident —
+/// turning a would-be repack miss into a cache hit — as long as the
+/// analytical model prices the switch within
+/// `ServerConfig::plan_residency_slack` of the baseline. A side passes
+/// `None` when unregistered (its baseline parameter is kept) and its
+/// resident block sizes otherwise; an empty set also keeps that side's
+/// baseline parameter (nothing resident means every choice repacks
+/// there, but the *other* side may still be steerable). A switch away
+/// from the baseline counts in `Metrics::plan_residency_hits`.
+fn refine_run_for_residency(
+    shared: &Shared,
+    baseline: RunConfig,
+    resident_sis: Option<&[usize]>,
+    resident_sjs: Option<&[usize]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> RunConfig {
+    let slack = shared.cfg.plan_residency_slack;
+    if slack < 0.0 || (resident_sis.is_none() && resident_sjs.is_none()) {
+        return baseline;
+    }
+    // A side is satisfied when unregistered, or when its resident set
+    // already holds the baseline block size. Fully satisfied means the
+    // baseline repacks nothing residency could save — keep it without
+    // consulting the cost model.
+    let si_satisfied = resident_sis.is_none_or(|v| v.contains(&baseline.si));
+    let sj_satisfied = resident_sjs.is_none_or(|v| v.contains(&baseline.sj));
+    if si_satisfied && sj_satisfied {
+        return baseline;
+    }
+    let sis: Vec<usize> = match resident_sis {
+        Some(v) if !v.is_empty() => v.to_vec(),
+        _ => vec![baseline.si],
+    };
+    let sjs: Vec<usize> = match resident_sjs {
+        Some(v) if !v.is_empty() => v.to_vec(),
+        _ => vec![baseline.sj],
+    };
+    let surface = shared.accelerator.surface();
+    let Ok(base_cost) =
+        crate::analytical::predict(&shared.hw, &baseline, m, k, n, surface).map(|p| p.t_overlap())
+    else {
+        return baseline;
+    };
+    let mut best: Option<(f64, RunConfig)> = None;
+    for &si in &sis {
+        for &sj in &sjs {
+            // Keep the baseline's array split when it stays feasible
+            // for the candidate block sizes; fall back to the first
+            // feasible split otherwise (residency is about S, not N_p).
+            let candidate = std::iter::once(baseline.np)
+                .chain(crate::analytical::feasible_nps(&shared.hw, si))
+                .map(|np| RunConfig::new(np, si, sj))
+                .find(|run| run.validate(&shared.hw).is_ok());
+            let Some(run) = candidate else { continue };
+            let Ok(p) = crate::analytical::predict(&shared.hw, &run, m, k, n, surface) else {
+                continue;
+            };
+            let cost = p.t_overlap();
+            if best.as_ref().is_none_or(|(c, _)| cost < *c) {
+                best = Some((cost, run));
+            }
+        }
+    }
+    match best {
+        Some((cost, run)) if run != baseline && cost <= base_cost * (1.0 + slack) => {
+            shared.metrics.add_plan_residency_hits(1);
+            run
+        }
+        _ => baseline,
+    }
+}
+
 /// Build the active job for `planned` (one sub = a plain job, several =
 /// a batched super-job), pack panels, publish the combined task set into
 /// a fresh per-job WQM, and register it for the workers.
@@ -997,15 +1207,17 @@ fn plan_one(shared: &Shared, s: Submission) -> Option<Planned> {
 fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
     debug_assert!(!planned.is_empty());
     wait_for_inflight_slot(shared);
-    // Resolve every sub's B first: an inline B wraps (and packs) here,
-    // a registered handle resolves through the operand registry — and a
-    // handle unregistered since planning fails that sub alone through
-    // its ticket while the rest of the batch proceeds.
+    // Resolve every sub's operands first: an inline side wraps (and
+    // packs) here, a registered handle resolves through the operand
+    // registry — and a handle unregistered since planning fails that
+    // sub alone through its ticket while the rest of the batch
+    // proceeds.
     struct Build {
         id: u64,
         run: RunConfig,
         plan: BlockPlan,
-        a: Matrix,
+        a: Arc<Matrix>,
+        packed_a: Option<Arc<PackedA>>,
         b: Arc<Matrix>,
         packed_b: Option<Arc<PackedB>>,
         reply: mpsc::Sender<anyhow::Result<JobResult>>,
@@ -1017,33 +1229,37 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
         let Planned { sub, run, plan, .. } = p;
         let Submission { job, reply, accepted_at } = sub;
         let GemmJob { id, a, b, .. } = job;
-        let resolved: anyhow::Result<(Arc<Matrix>, Option<Arc<PackedB>>)> = match b {
-            BOperand::Inline(m) => {
-                let m = Arc::new(m);
-                let packed = if inprocess {
-                    shared.metrics.add_b_panel_packs(1);
-                    Some(Arc::new(PackedB::pack(m.view(), run.sj)))
-                } else {
-                    None
-                };
-                Ok((m, packed))
-            }
-            BOperand::Registered(h) => (|| {
-                let m = shared
-                    .operands
-                    .matrix(h)
-                    .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?;
-                let packed = if inprocess {
-                    Some(shared.operands.resolve_pack(h, run.sj)?)
-                } else {
-                    None
-                };
-                Ok((m, packed))
-            })(),
-        };
+        let resolved = (|| -> anyhow::Result<_> {
+            let (a, packed_a) = resolve_a_operand(shared, a, run.si, inprocess)?;
+            let (b, packed_b) = match b {
+                BOperand::Inline(m) => {
+                    let m = Arc::new(m);
+                    let packed = if inprocess {
+                        shared.metrics.add_b_panel_packs(1);
+                        Some(Arc::new(PackedB::pack(m.view(), run.sj)))
+                    } else {
+                        None
+                    };
+                    (m, packed)
+                }
+                BOperand::Registered(h) => {
+                    let m = shared
+                        .operands
+                        .matrix(h)
+                        .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?;
+                    let packed = if inprocess {
+                        Some(shared.operands.resolve_pack(h, run.sj)?)
+                    } else {
+                        None
+                    };
+                    (m, packed)
+                }
+            };
+            Ok((a, packed_a, b, packed_b))
+        })();
         match resolved {
-            Ok((b, packed_b)) => {
-                builds.push(Build { id, run, plan, a, b, packed_b, reply, accepted_at })
+            Ok((a, packed_a, b, packed_b)) => {
+                builds.push(Build { id, run, plan, a, packed_a, b, packed_b, reply, accepted_at })
             }
             Err(e) => {
                 shared.metrics.job_failed();
@@ -1064,10 +1280,10 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
         for task in build.plan.tasks() {
             tasks.push(SubTask { sub: i as u32, task });
         }
-        let panels = build.packed_b.map(|pb| {
-            shared.metrics.add_a_panel_packs(1);
-            PackedPanels::from_parts(Arc::new(PackedA::pack(build.a.view(), build.run.si)), pb)
-        });
+        let panels = match (build.packed_a, build.packed_b) {
+            (Some(pa), Some(pb)) => Some(PackedPanels::from_parts(pa, pb)),
+            _ => None,
+        };
         subs.push(build_sub(
             build.id,
             build.run,
@@ -1081,6 +1297,39 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
         ));
     }
     publish(shared, subs, tasks);
+}
+
+/// Resolve one A operand for execution under block size `si`: an inline
+/// matrix wraps and (on in-process engines) packs privately; a
+/// registered activation borrows the registry's `Arc<Matrix>` and
+/// resolves its cached `Arc<PackedA>` — a registry hit packs nothing.
+fn resolve_a_operand(
+    shared: &Shared,
+    a: AOperand,
+    si: usize,
+    inprocess: bool,
+) -> anyhow::Result<(Arc<Matrix>, Option<Arc<PackedA>>)> {
+    match a {
+        AOperand::Inline(m) => {
+            let m = Arc::new(m);
+            let packed = if inprocess {
+                shared.metrics.add_a_panel_packs(1);
+                Some(Arc::new(PackedA::pack(m.view(), si)))
+            } else {
+                None
+            };
+            Ok((m, packed))
+        }
+        AOperand::Registered(h) => {
+            let m = shared
+                .operands
+                .matrix_a(h)
+                .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?;
+            let packed =
+                if inprocess { Some(shared.operands.resolve_pack_a(h, si)?) } else { None };
+            Ok((m, packed))
+        }
+    }
 }
 
 /// Block while the in-flight bound is reached. Job retirement bumps the
@@ -1103,7 +1352,7 @@ fn wait_for_inflight_slot(shared: &Shared) {
 fn build_sub(
     id: u64,
     run: RunConfig,
-    a: Matrix,
+    a: Arc<Matrix>,
     b: Arc<Matrix>,
     panels: Option<PackedPanels>,
     num_tasks: usize,
@@ -1241,15 +1490,21 @@ fn dispatch_group(shared: &Arc<Shared>, group: Vec<Submission>) {
 /// the usual pin → server-default → DSE cascade ([`choose_run_dims`],
 /// the same policy individual jobs plan with), evaluated for the
 /// *largest* sub-problem — every sub shares K and N, so a feasible
-/// config for the largest M is feasible for all.
+/// config for the largest M is feasible for all. The baseline is then
+/// residency-refined: the B side by the shared handle's resident
+/// variants, the A side only when *every* sub is a registered
+/// activation (the batch runs under one `S_i`, so a block size is only
+/// resident for the group if each member already holds it — the
+/// intersection of their resident sets).
 fn choose_shared_run(
     shared: &Shared,
     b: &Matrix,
-    subs: &[SharedSub],
+    b_handle: Option<WeightHandle>,
+    subs: &[(SharedSub, (usize, usize))],
     run: Option<RunConfig>,
 ) -> anyhow::Result<RunConfig> {
-    let m = subs.iter().map(|s| s.a.rows).max().expect("non-empty batch");
-    choose_run_dims(
+    let m = subs.iter().map(|(_, (rows, _))| *rows).max().expect("non-empty batch");
+    let baseline = choose_run_dims(
         &shared.hw,
         shared.accelerator.surface(),
         m,
@@ -1257,7 +1512,25 @@ fn choose_shared_run(
         b.cols,
         run,
         shared.cfg.default_run,
-    )
+    )?;
+    let all_a_handles: Option<Vec<ActivationHandle>> =
+        subs.iter().map(|(s, _)| s.a.handle()).collect();
+    let a_sis: Option<Vec<usize>> = all_a_handles.map(|hs| {
+        let mut sets = hs.iter().map(|&h| shared.operands.resident_a_sis(h));
+        let first = sets.next().unwrap_or_default();
+        let rest: Vec<Vec<usize>> = sets.collect();
+        first.into_iter().filter(|si| rest.iter().all(|set| set.contains(si))).collect()
+    });
+    let b_sjs = b_handle.map(|h| shared.operands.resident_b_sjs(h));
+    Ok(refine_run_for_residency(
+        shared,
+        baseline,
+        a_sis.as_deref(),
+        b_sjs.as_deref(),
+        m,
+        b.rows,
+        b.cols,
+    ))
 }
 
 /// Dispatch a shared-B batch as one super-job: resolve the shared
@@ -1265,8 +1538,10 @@ fn choose_shared_run(
 /// registry), validate every sub against it (mismatches are rejected
 /// individually through their tickets), choose one run config, obtain
 /// the packed B **at most once** — an inline B packs here, a registered
-/// one resolves from the cache (zero packs on a hit) — pack a private
-/// [`PackedA`] per surviving sub, and publish the combined task grid.
+/// one resolves from the cache (zero packs on a hit) — obtain each
+/// surviving sub's [`PackedA`] (private pack for inline A, cached
+/// registry pack for a registered activation), and publish the
+/// combined task grid.
 /// `Metrics::b_panel_packs` counts actual packs and
 /// `Metrics::panels_shared` the within-call packs the sharing avoided.
 fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
@@ -1293,22 +1568,36 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
         reject_all(subs, format!("degenerate B {}x{}", b.rows, b.cols));
         return;
     }
-    // Per-sub validation first (a mismatched A fails alone, not the
-    // batch), so run selection below only ever sees valid shapes.
-    let mut accepted = Vec::with_capacity(subs.len());
+    // Per-sub validation first (a mismatched or dead-handle A fails
+    // alone, not the batch), so run selection below only ever sees
+    // valid shapes. Registered activations validate against the
+    // registry's recorded dims.
+    let mut accepted: Vec<(SharedSub, (usize, usize))> = Vec::with_capacity(subs.len());
     for s in subs {
-        if s.a.cols != b.rows || s.a.rows == 0 {
-            shared.metrics.job_failed();
-            let _ = s.reply.send(Err(anyhow::anyhow!(
-                "sub-job {}: A is {}x{} against shared B {}x{}",
-                s.id,
-                s.a.rows,
-                s.a.cols,
-                b.rows,
-                b.cols
-            )));
-        } else {
-            accepted.push(s);
+        let dims = match &s.a {
+            AOperand::Inline(m) => Ok((m.rows, m.cols)),
+            AOperand::Registered(h) => shared
+                .operands
+                .dims_a(*h)
+                .ok_or_else(|| anyhow::anyhow!("sub-job {}: {h} is not registered", s.id)),
+        };
+        match dims {
+            Ok((rows, cols)) if cols == b.rows && rows > 0 => accepted.push((s, (rows, cols))),
+            Ok((rows, cols)) => {
+                shared.metrics.job_failed();
+                let _ = s.reply.send(Err(anyhow::anyhow!(
+                    "sub-job {}: A is {}x{} against shared B {}x{}",
+                    s.id,
+                    rows,
+                    cols,
+                    b.rows,
+                    b.cols
+                )));
+            }
+            Err(e) => {
+                shared.metrics.job_failed();
+                let _ = s.reply.send(Err(e));
+            }
         }
     }
     if accepted.is_empty() {
@@ -1316,11 +1605,11 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
     }
     // One config for the whole batch; failure (bad pin, DSE error)
     // rejects every surviving sub.
-    let run = match choose_shared_run(shared, &b, &accepted, run) {
+    let run = match choose_shared_run(shared, &b, handle, &accepted, run) {
         Ok(r) => r,
         Err(e) => {
             let msg = format!("{e:#}");
-            for s in accepted {
+            for (s, _) in accepted {
                 shared.metrics.job_failed();
                 let _ = s.reply.send(Err(anyhow::anyhow!("shared-B batch rejected: {msg}")));
             }
@@ -1334,7 +1623,8 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
     // zero packs on a hit, and a handle unregistered mid-flight rejects
     // the batch instead of wedging the dispatcher. Every sub-job below
     // clones the Arc, not the panels.
-    let packed_b = if shared.engine.is_inprocess() {
+    let inprocess = shared.engine.is_inprocess();
+    let packed_b = if inprocess {
         let pb = match handle {
             None => {
                 shared.metrics.add_b_panel_packs(1);
@@ -1343,7 +1633,7 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
             Some(h) => match shared.operands.resolve_pack(h, run.sj) {
                 Ok(pb) => pb,
                 Err(e) => {
-                    reject_all(accepted, format!("{e:#}"));
+                    reject_all(accepted.into_iter().map(|(s, _)| s).collect(), format!("{e:#}"));
                     return;
                 }
             },
@@ -1360,19 +1650,31 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
     shared.metrics.add_shared_b_groups(1);
     let mut subs_built = Vec::with_capacity(accepted.len());
     let mut tasks: Vec<SubTask> = Vec::new();
-    for (i, s) in accepted.into_iter().enumerate() {
-        let plan = BlockPlan::new(s.a.rows, s.a.cols, b.cols, run.si, run.sj);
+    for (s, (rows, cols)) in accepted {
+        // Resolve this sub's A: inline packs privately, a registered
+        // activation resolves its cached pack — a handle that died
+        // since validation fails this sub alone.
+        let (a, packed_a) = match resolve_a_operand(shared, s.a, run.si, inprocess) {
+            Ok(resolved) => resolved,
+            Err(e) => {
+                shared.metrics.job_failed();
+                let _ = s.reply.send(Err(e));
+                continue;
+            }
+        };
+        let plan = BlockPlan::new(rows, cols, b.cols, run.si, run.sj);
+        let idx = subs_built.len() as u32;
         for task in plan.tasks() {
-            tasks.push(SubTask { sub: i as u32, task });
+            tasks.push(SubTask { sub: idx, task });
         }
-        let panels = packed_b.as_ref().map(|pb| {
-            shared.metrics.add_a_panel_packs(1);
-            PackedPanels::from_parts(Arc::new(PackedA::pack(s.a.view(), run.si)), pb.clone())
-        });
+        let panels = match (packed_a, packed_b.as_ref()) {
+            (Some(pa), Some(pb)) => Some(PackedPanels::from_parts(pa, pb.clone())),
+            _ => None,
+        };
         subs_built.push(build_sub(
             s.id,
             run,
-            s.a,
+            a,
             b.clone(),
             panels,
             plan.num_tasks(),
@@ -1380,6 +1682,9 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
             s.accepted_at,
             batched,
         ));
+    }
+    if subs_built.is_empty() {
+        return;
     }
     publish(shared, subs_built, tasks);
 }
@@ -1606,7 +1911,7 @@ mod tests {
         let b = Matrix::random(24, 40, 2);
         let want = a.matmul(&b);
         let t = srv
-            .submit(GemmJob { id: 7, a, b: b.into(), run: Some(RunConfig::square(2, 16)) })
+            .submit(GemmJob { id: 7, a: a.into(), b: b.into(), run: Some(RunConfig::square(2, 16)) })
             .unwrap();
         let r = t.wait().unwrap();
         assert_eq!(r.id, 7);
@@ -1621,7 +1926,7 @@ mod tests {
         let a = Matrix::random(40, 20, 3);
         let b = Matrix::random(20, 40, 4);
         let want = a.matmul(&b);
-        let r = srv.submit(GemmJob { id: 1, a, b: b.into(), run: None }).unwrap().wait().unwrap();
+        let r = srv.submit(GemmJob { id: 1, a: a.into(), b: b.into(), run: None }).unwrap().wait().unwrap();
         assert_eq!(r.run, RunConfig::square(2, 16));
         assert!(r.c.allclose(&want, 1e-4));
     }
@@ -1631,7 +1936,7 @@ mod tests {
         let srv = server(small_cfg());
         let job = GemmJob {
             id: 2,
-            a: Matrix::random(8, 8, 5),
+            a: Matrix::random(8, 8, 5).into(),
             b: Matrix::random(9, 8, 6).into(),
             run: None,
         };
@@ -1644,7 +1949,7 @@ mod tests {
         let srv = server(small_cfg());
         let bad = GemmJob {
             id: 4,
-            a: Matrix::zeros(0, 0),
+            a: Matrix::zeros(0, 0).into(),
             b: Matrix::zeros(0, 8).into(),
             run: None,
         };
@@ -1654,7 +1959,7 @@ mod tests {
         let b = Matrix::random(8, 16, 32);
         let want = a.matmul(&b);
         let r = srv
-            .submit(GemmJob { id: 5, a, b: b.into(), run: Some(RunConfig::square(2, 16)) })
+            .submit(GemmJob { id: 5, a: a.into(), b: b.into(), run: Some(RunConfig::square(2, 16)) })
             .unwrap()
             .wait()
             .unwrap();
@@ -1666,7 +1971,7 @@ mod tests {
         let srv = server(small_cfg());
         let job = GemmJob {
             id: 3,
-            a: Matrix::random(8, 8, 7),
+            a: Matrix::random(8, 8, 7).into(),
             b: Matrix::random(8, 8, 8).into(),
             run: Some(RunConfig::square(4, 256)),
         };
@@ -1682,7 +1987,7 @@ mod tests {
             let a = Matrix::random(20, 12, 100 + i);
             let b = Matrix::random(12, 24, 200 + i);
             wants.push(crate::gemm::packed_matmul(&a, &b, 16, 16));
-            jobs.push(GemmJob { id: i, a, b: b.into(), run: Some(RunConfig::square(2, 16)) });
+            jobs.push(GemmJob { id: i, a: a.into(), b: b.into(), run: Some(RunConfig::square(2, 16)) });
         }
         let tickets = srv.submit_batch(jobs).unwrap();
         for (t, want) in tickets.into_iter().zip(&wants) {
@@ -1703,7 +2008,7 @@ mod tests {
             let a = Matrix::random(24, 16, 700 + i);
             let b = Matrix::random(16, 20, 800 + i);
             wants.push(a.matmul(&b));
-            jobs.push(GemmJob { id: i, a, b: b.into(), run: Some(RunConfig::square(2, 16)) });
+            jobs.push(GemmJob { id: i, a: a.into(), b: b.into(), run: Some(RunConfig::square(2, 16)) });
         }
         let group = srv.submit_group(jobs).unwrap();
         assert_eq!(group.len(), 7);
@@ -1721,11 +2026,16 @@ mod tests {
         let good_a = Matrix::random(16, 8, 41);
         let good_b = Matrix::random(8, 16, 42);
         let jobs = vec![
-            GemmJob { id: 0, a: good_a, b: good_b.into(), run: Some(RunConfig::square(2, 16)) },
+            GemmJob {
+                id: 0,
+                a: good_a.into(),
+                b: good_b.into(),
+                run: Some(RunConfig::square(2, 16)),
+            },
             // Contraction mismatch: rejected at planning.
             GemmJob {
                 id: 1,
-                a: Matrix::random(8, 8, 43),
+                a: Matrix::random(8, 8, 43).into(),
                 b: Matrix::random(9, 8, 44).into(),
                 run: None,
             },
@@ -1747,7 +2057,7 @@ mod tests {
         let tickets = srv
             .submit_batch(vec![GemmJob {
                 id: 0,
-                a,
+                a: a.into(),
                 b: b.into(),
                 run: Some(RunConfig::square(2, 16)),
             }])
@@ -1770,7 +2080,7 @@ mod tests {
             let b = Matrix::random(16, n, 400 + i);
             let want = a.matmul(&b);
             let t = srv
-                .submit(GemmJob { id: i, a, b: b.into(), run: Some(RunConfig::square(2, 16)) })
+                .submit(GemmJob { id: i, a: a.into(), b: b.into(), run: Some(RunConfig::square(2, 16)) })
                 .unwrap();
             pending.push((t, want));
         }
@@ -1787,7 +2097,7 @@ mod tests {
         let b = Matrix::random(32, 64, 22);
         let want = a.matmul(&b);
         let t = srv
-            .submit(GemmJob { id: 9, a, b: b.into(), run: Some(RunConfig::square(2, 16)) })
+            .submit(GemmJob { id: 9, a: a.into(), b: b.into(), run: Some(RunConfig::square(2, 16)) })
             .unwrap();
         srv.shutdown();
         assert!(t.wait().unwrap().c.allclose(&want, 1e-4));
@@ -1799,7 +2109,7 @@ mod tests {
         for i in 0..5u64 {
             let a = Matrix::random(32, 16, i);
             let b = Matrix::random(16, 32, i + 50);
-            srv.submit(GemmJob { id: i, a, b: b.into(), run: Some(RunConfig::square(2, 16)) })
+            srv.submit(GemmJob { id: i, a: a.into(), b: b.into(), run: Some(RunConfig::square(2, 16)) })
                 .unwrap()
                 .wait()
                 .unwrap();
@@ -1899,7 +2209,7 @@ mod tests {
         let b = Matrix::random(8, 16, 943);
         let want = a.matmul(&b);
         let r = srv
-            .submit(GemmJob { id: 1, a, b: b.into(), run: Some(RunConfig::square(2, 16)) })
+            .submit(GemmJob { id: 1, a: a.into(), b: b.into(), run: Some(RunConfig::square(2, 16)) })
             .unwrap()
             .wait()
             .unwrap();
@@ -1927,13 +2237,18 @@ mod tests {
 
     #[test]
     fn registered_handle_roundtrip_and_per_shape_variants() {
-        let srv = server(small_cfg());
+        // Residency refinement disabled: this test deliberately pins a
+        // *non-resident* sj for its third job to prove per-shape
+        // variants are cached independently — the refiner would
+        // otherwise be free to steer that pin back to the resident one.
+        let cfg = ServerConfig { plan_residency_slack: -1.0, ..small_cfg() };
+        let srv = server(cfg);
         let b = Matrix::random(16, 24, 960);
         let h = srv.register_b(b.clone()).unwrap();
         let a1 = Matrix::random(20, 16, 961);
         let want1 = a1.matmul(&b);
         let r1 = srv
-            .submit(GemmJob { id: 0, a: a1, b: h.into(), run: Some(RunConfig::square(2, 16)) })
+            .submit(GemmJob { id: 0, a: a1.into(), b: h.into(), run: Some(RunConfig::square(2, 16)) })
             .unwrap()
             .wait()
             .unwrap();
@@ -1942,7 +2257,7 @@ mod tests {
         let a2 = Matrix::random(12, 16, 962);
         let want2 = a2.matmul(&b);
         let r2 = srv
-            .submit(GemmJob { id: 1, a: a2, b: h.into(), run: Some(RunConfig::square(2, 16)) })
+            .submit(GemmJob { id: 1, a: a2.into(), b: h.into(), run: Some(RunConfig::square(2, 16)) })
             .unwrap()
             .wait()
             .unwrap();
@@ -1952,7 +2267,7 @@ mod tests {
         let a3 = Matrix::random(20, 16, 963);
         let want3 = a3.matmul(&b);
         let r3 = srv
-            .submit(GemmJob { id: 2, a: a3, b: h.into(), run: Some(RunConfig::square(2, 32)) })
+            .submit(GemmJob { id: 2, a: a3.into(), b: h.into(), run: Some(RunConfig::square(2, 32)) })
             .unwrap()
             .wait()
             .unwrap();
@@ -2000,7 +2315,7 @@ mod tests {
         // A lone submit and a shared batch both fail through their
         // tickets, never the dispatcher.
         let err = srv
-            .submit(GemmJob { id: 0, a: Matrix::random(8, 16, 981), b: h.into(), run: None })
+            .submit(GemmJob { id: 0, a: Matrix::random(8, 16, 981).into(), b: h.into(), run: None })
             .unwrap()
             .wait()
             .unwrap_err();
@@ -2018,7 +2333,7 @@ mod tests {
         let r = srv
             .submit(GemmJob {
                 id: 1,
-                a,
+                a: a.into(),
                 b: b.clone().into(),
                 run: Some(RunConfig::square(2, 16)),
             })
@@ -2046,7 +2361,7 @@ mod tests {
         adm.try_push(QueueItem::One(Submission {
             job: GemmJob {
                 id: 0,
-                a: Matrix::zeros(1, 1),
+                a: Matrix::zeros(1, 1).into(),
                 b: Matrix::zeros(1, 1).into(),
                 run: None,
             },
@@ -2061,7 +2376,7 @@ mod tests {
             subs: (0..2)
                 .map(|i| SharedSub {
                     id: i,
-                    a: Matrix::random(3, 5, 992 + i),
+                    a: Matrix::random(3, 5, 992 + i).into(),
                     reply: tx.clone(),
                     accepted_at: Instant::now(),
                 })
@@ -2071,7 +2386,7 @@ mod tests {
             Err(TryPushError::Full(QueueItem::SharedB(SharedBatch { b, subs, .. }))) => {
                 assert_eq!(b.inline_dims(), Some((5, 7)));
                 assert_eq!(subs.len(), 2);
-                assert!(subs.iter().all(|s| (s.a.rows, s.a.cols) == (3, 5)));
+                assert!(subs.iter().all(|s| s.a.inline_dims() == Some((3, 5))));
             }
             other => panic!("expected Full(SharedB), got {:?}", other.is_ok()),
         }
@@ -2085,7 +2400,7 @@ mod tests {
             QueueItem::One(Submission {
                 job: GemmJob {
                     id: 0,
-                    a: Matrix::zeros(1, 1),
+                    a: Matrix::zeros(1, 1).into(),
                     b: Matrix::zeros(1, 1).into(),
                     run: None,
                 },
@@ -2114,7 +2429,7 @@ mod tests {
                 .map(|i| Submission {
                     job: GemmJob {
                         id: i,
-                        a: Matrix::zeros(1, 1),
+                        a: Matrix::zeros(1, 1).into(),
                         b: Matrix::zeros(1, 1).into(),
                         run: None,
                     },
@@ -2125,5 +2440,181 @@ mod tests {
         );
         assert!(adm.try_push(group).is_ok());
         assert_eq!(adm.len(), 5);
+    }
+
+    #[test]
+    fn registered_a_bit_identity_lone_and_repeat() {
+        // Ragged prime/odd shapes (nothing divides the block size): a
+        // registered activation must produce the same bits as inline
+        // submission — cached pack, private pack, same bytes — and a
+        // repeat under the handle must resolve as a hit, not a repack.
+        let srv = server(small_cfg());
+        let run = Some(RunConfig::square(2, 16));
+        for (i, &(m, k, n)) in [(13usize, 7usize, 11usize), (23, 5, 9), (3, 17, 29)]
+            .iter()
+            .enumerate()
+        {
+            let a = Matrix::random(m, k, 600 + i as u64);
+            let b = Matrix::random(k, n, 640 + i as u64);
+            let inline = srv
+                .submit(GemmJob { id: 0, a: a.clone().into(), b: b.clone().into(), run })
+                .unwrap()
+                .wait()
+                .unwrap();
+            let h = srv.register_a(a).unwrap();
+            let reg = srv
+                .submit(GemmJob { id: 1, a: h.into(), b: b.clone().into(), run })
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(reg.c.data, inline.c.data, "registered A must be bit-identical");
+            let again = srv
+                .submit(GemmJob { id: 2, a: h.into(), b: b.into(), run })
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(again.c.data, inline.c.data, "repeat hit must be bit-identical");
+        }
+        let s = srv.stats();
+        assert_eq!((s.registry_a_hits, s.registry_a_misses), (3, 3));
+        assert_eq!(s.a_panel_packs, 6, "3 inline + 3 first-use packs; repeats pack nothing");
+        assert_eq!(s.registered_activations, 3);
+        assert!(s.registry_a_resident_bytes > 0);
+    }
+
+    #[test]
+    fn registered_a_batched_bit_identity_and_repeat_hits() {
+        // submit_batched_gemm_operands with registered activations is
+        // bit-identical to the inline batched call, and a second call
+        // under the same handles packs nothing on the A side.
+        let srv = server(small_cfg());
+        let run = Some(RunConfig::square(2, 16));
+        let b = Matrix::random(7, 19, 660);
+        let many: Vec<Matrix> = [(13usize, 7usize), (21, 7), (5, 7)]
+            .iter()
+            .enumerate()
+            .map(|(i, &(m, k))| Matrix::random(m, k, 670 + i as u64))
+            .collect();
+        let inline = srv
+            .submit_batched_gemm(b.clone(), many.clone(), run)
+            .unwrap()
+            .wait_all()
+            .unwrap();
+        let handles: Vec<_> =
+            many.into_iter().map(|a| srv.register_a(a).unwrap()).collect();
+        for call in 0..2 {
+            let ops: Vec<AOperand> = handles.iter().map(|&h| h.into()).collect();
+            let reg = srv
+                .submit_batched_gemm_operands(b.clone(), ops, run)
+                .unwrap()
+                .wait_all()
+                .unwrap();
+            for (r, want) in reg.iter().zip(&inline) {
+                assert_eq!(r.c.data, want.c.data, "call {call}: bit-identical to inline");
+            }
+        }
+        let s = srv.stats();
+        assert_eq!((s.registry_a_hits, s.registry_a_misses), (3, 3));
+        assert_eq!(s.a_panel_packs, 6, "3 inline + 3 first-call packs; the repeat packs 0");
+    }
+
+    #[test]
+    fn plan_residency_steers_pinned_config_to_resident_b() {
+        // Mixed-config traffic against one registered weight: the
+        // second pin would have repacked at sj=32 before registry-aware
+        // planning; with slack the planner steers it to the resident
+        // sj=16 variant and the repack becomes a registry hit.
+        let cfg = ServerConfig { plan_residency_slack: 10.0, ..small_cfg() };
+        let srv = server(cfg);
+        let b = Matrix::random(16, 24, 700);
+        let h = srv.register_b(b.clone()).unwrap();
+        let a1 = Matrix::random(20, 16, 701);
+        let want1 = a1.matmul(&b);
+        let r1 = srv
+            .submit(GemmJob { id: 0, a: a1.into(), b: h.into(), run: Some(RunConfig::square(2, 16)) })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(r1.c.allclose(&want1, 1e-4));
+        let a2 = Matrix::random(20, 16, 702);
+        let want2 = a2.matmul(&b);
+        let r2 = srv
+            .submit(GemmJob { id: 1, a: a2.into(), b: h.into(), run: Some(RunConfig::square(2, 32)) })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(r2.c.allclose(&want2, 1e-4));
+        assert_eq!(r2.run.sj, 16, "steered to the resident B variant");
+        let s = srv.stats();
+        assert_eq!(s.plan_residency_hits, 1);
+        assert_eq!(s.b_panel_packs, 1, "the would-be repack became a hit");
+        assert_eq!((s.registry_hits, s.registry_misses), (1, 1));
+    }
+
+    #[test]
+    fn plan_residency_steers_pinned_config_to_resident_a() {
+        // Same steering on the A side: one registered activation served
+        // under mixed pins resolves one cached pack instead of two.
+        let cfg = ServerConfig { plan_residency_slack: 10.0, ..small_cfg() };
+        let srv = server(cfg);
+        let a = Matrix::random(40, 16, 710);
+        let h = srv.register_a(a.clone()).unwrap();
+        let b1 = Matrix::random(16, 24, 711);
+        let want1 = a.matmul(&b1);
+        let r1 = srv
+            .submit(GemmJob { id: 0, a: h.into(), b: b1.into(), run: Some(RunConfig::square(2, 16)) })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(r1.c.allclose(&want1, 1e-4));
+        let b2 = Matrix::random(16, 24, 712);
+        let want2 = a.matmul(&b2);
+        let r2 = srv
+            .submit(GemmJob { id: 1, a: h.into(), b: b2.into(), run: Some(RunConfig::square(2, 32)) })
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(r2.c.allclose(&want2, 1e-4));
+        assert_eq!(r2.run.si, 16, "steered to the resident A variant");
+        let s = srv.stats();
+        assert_eq!(s.plan_residency_hits, 1);
+        assert_eq!((s.registry_a_hits, s.registry_a_misses), (1, 1));
+        assert_eq!(s.a_panel_packs, 1, "one A pack across both pins");
+        assert!(s.to_string().contains("plan_residency_hits=1"));
+    }
+
+    #[test]
+    fn tight_budget_evicts_across_sides_through_server() {
+        // A one-byte budget makes every published pack over-budget, so
+        // each fresh variant evicts whatever unpinned packs remain — of
+        // EITHER side. Results stay correct: eviction only drops cache.
+        let cfg = ServerConfig {
+            registry_budget_bytes: 1,
+            plan_residency_slack: -1.0,
+            ..small_cfg()
+        };
+        let srv = server(cfg);
+        let a = Matrix::random(20, 16, 720);
+        let b = Matrix::random(16, 24, 721);
+        let ha = srv.register_a(a.clone()).unwrap();
+        let hb = srv.register_b(b.clone()).unwrap();
+        let want = a.matmul(&b);
+        for (id, si) in [(0u64, 16usize), (1, 32)] {
+            let r = srv
+                .submit(GemmJob {
+                    id,
+                    a: ha.into(),
+                    b: hb.into(),
+                    run: Some(RunConfig::square(2, si)),
+                })
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert!(r.c.allclose(&want, 1e-4));
+        }
+        let s = srv.stats();
+        assert_eq!((s.registry_hits, s.registry_misses), (0, 4), "every variant packed fresh");
+        assert!(s.registry_evictions >= 2, "unpinned packs evicted past the budget");
+        assert!(s.registry_a_evictions >= 1, "the A side participated in cross-side LRU");
     }
 }

@@ -6,6 +6,14 @@
 //! explorer ranks by the overlap estimate `max(T_compute, T_trans)` with
 //! the Eq. 7 upper bound as tie-break — the candidate that is fastest
 //! when double buffering works and degrades least when it doesn't.
+//!
+//! The serving layer adds one refinement on top of this search: when a
+//! job's operands are registered with the
+//! [`crate::coordinator::OperandRegistry`], the `JobServer` may steer
+//! the DSE'd (or pinned) config toward an `(S_i, S_j)` variant whose
+//! packs are already resident, whenever this model prices the variant
+//! within `ServerConfig::plan_residency_slack` of the baseline — see
+//! `refine_run_for_residency` in the coordinator.
 
 
 use crate::analytical::{self, BandwidthSurface, Prediction};

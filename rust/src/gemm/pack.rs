@@ -29,9 +29,10 @@
 //! packed privately, so batched results match individual runs exactly.
 //! The server's operand registry
 //! ([`crate::coordinator::OperandRegistry`]) stretches the same
-//! guarantee across *calls*: a registered weight's `Arc<PackedB>` is
-//! cached per block size, so successive batches reusing it never
-//! repack.
+//! guarantee across *calls*, on both sides: a registered weight's
+//! `Arc<PackedB>` is cached per `S_j` and a registered activation's
+//! `Arc<PackedA>` per `S_i`, so successive submissions reusing either
+//! handle never repack.
 
 use std::sync::Arc;
 
@@ -87,6 +88,12 @@ impl PackedA {
     /// Total packed floats (diagnostics: equals the padded operand size).
     pub fn packed_len(&self) -> usize {
         self.panels.iter().map(Vec::len).sum()
+    }
+
+    /// Packed payload size in bytes — what a cached pack costs the
+    /// operand registry's byte budget.
+    pub fn packed_bytes(&self) -> u64 {
+        (self.packed_len() * std::mem::size_of::<f32>()) as u64
     }
 }
 

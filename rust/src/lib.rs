@@ -44,10 +44,20 @@
 //!   work stealing, small-job batching, shared-operand batches
 //!   (`submit_batched_gemm`: one B packed once, fanned out to N
 //!   sub-jobs as a `JobGroup`, bit-identical to individual runs), and
-//!   a server-resident operand registry (`register_b` → `WeightHandle`:
-//!   weights packed at most once per process, resolved from cache by
-//!   every submission carrying the handle, refcount-pinned LRU
-//!   eviction under a byte budget), the production serving runtime;
+//!   a server-resident operand registry symmetric over both sides
+//!   (`register_b` → `WeightHandle`, `register_a` →
+//!   `ActivationHandle`: operands packed at most once per
+//!   `(handle, side, S)` for the whole process, resolved from cache by
+//!   every submission carrying a handle, one shared byte budget with
+//!   refcount-pinned cross-side LRU eviction) plus registry-aware
+//!   planning (a pinned or DSE'd config is steered to an
+//!   already-resident block-size variant within a cost slack), the
+//!   production serving runtime;
+//! * [`attention`] — the flagship registered-operand workload: a
+//!   transformer block (Q/K/V/O projections, QKᵀ, softmax, AV) served
+//!   entirely through registered operands — activations registered
+//!   once per batch on the A side, weights held as `WeightHandle`s —
+//!   so repeated runs over one batch pack nothing;
 //! * [`strassen`] — the algorithmic layer above the serving runtime:
 //!   recursive Strassen decomposition (7 sub-products per quadrant
 //!   split instead of 8) whose per-level fan-out is submitted to the
@@ -60,6 +70,7 @@
 
 pub mod accelerator;
 pub mod analytical;
+pub mod attention;
 pub mod blocking;
 pub mod cnn;
 pub mod config;
@@ -76,5 +87,7 @@ pub mod util;
 pub mod wqm;
 
 pub use config::{HardwareConfig, RunConfig};
-pub use coordinator::{BOperand, GemmJob, JobServer, ServerConfig, WeightHandle};
+pub use coordinator::{
+    ActivationHandle, AOperand, BOperand, GemmJob, JobServer, ServerConfig, WeightHandle,
+};
 pub use gemm::Matrix;

@@ -55,6 +55,15 @@ COMMANDS:
   schedule [--reconfig-us US]       whole-AlexNet schedule: per-layer
                                     optimal (w/ reconfiguration cost) vs
                                     best fixed config
+  attention [--d-model D --seq S --batch B] [--repeat R] [--np NP --si SI]
+            [--check] [--workers W] [--golden] [--artifacts DIR]
+                                    transformer attention block (Q/K/V/O
+                                    projections, QK^T, softmax, AV) served
+                                    R times inline vs through registered
+                                    weights + a registered activation
+                                    batch; prints the packs avoided.
+                                    --check verifies against the scalar
+                                    oracle
   help                              this message
 ";
 
@@ -132,6 +141,7 @@ fn main() -> anyhow::Result<()> {
         "strassen" => cmd_strassen(&hw, &args),
         "batch" => cmd_batch(&hw, &args),
         "schedule" => cmd_schedule(&hw, &args),
+        "attention" => cmd_attention(&hw, &args),
         "help" | "-h" | "--help" => {
             print!("{USAGE}");
             Ok(())
@@ -287,7 +297,7 @@ fn cmd_run(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
     let b = Matrix::random(k, n, 43);
     let want = a.matmul(&b);
 
-    let result = co.run_job(GemmJob { id: 0, a, b: b.into(), run })?;
+    let result = co.run_job(GemmJob { id: 0, a: a.into(), b: b.into(), run })?;
 
     let err = result.c.max_abs_diff(&want);
     println!("config: {}", result.run);
@@ -502,7 +512,8 @@ fn cmd_batch(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
             let (rtx, rrx) = std::sync::mpsc::channel();
             let a = Matrix::random(*m, *k, id as u64 * 2);
             let b = Matrix::random(*k, *n, id as u64 * 2 + 1);
-            jtx.send((GemmJob { id: id as u64, a, b: b.into(), run: *run }, rtx)).unwrap();
+            jtx.send((GemmJob { id: id as u64, a: a.into(), b: b.into(), run: *run }, rtx))
+                .unwrap();
             rrx
         })
         .collect();
@@ -618,7 +629,7 @@ fn cmd_batch_shared_b(
         .iter()
         .enumerate()
         .map(|(id, a)| {
-            srv.submit(GemmJob { id: id as u64, a: a.clone(), b: b.clone().into(), run })
+            srv.submit(GemmJob { id: id as u64, a: a.clone().into(), b: b.clone().into(), run })
         })
         .collect::<anyhow::Result<_>>()?;
     for t in tickets {
@@ -709,5 +720,106 @@ fn cmd_batch_register_weights(
     );
     println!("  inline server:     {inline_stats}");
     println!("  registered server: {registered_stats}");
+    Ok(())
+}
+
+/// `marr attention`: one transformer attention block served `--repeat`
+/// times both ways — inline (every operand repacked every run) and
+/// through the symmetric operand registry (`AttentionWeights` on the B
+/// side, `ActivationBatch` on the A side: after warmup, repeated runs
+/// pack nothing). Outputs are checked bit-identical across the two
+/// paths; `--check` additionally verifies against the scalar oracle.
+fn cmd_attention(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
+    use multi_array::attention::{
+        attention_block_inline, attention_block_oracle, attention_block_registered,
+        ActivationBatch, AttentionWeights,
+    };
+
+    let d_model = args.get_usize("d-model")?.unwrap_or(64);
+    let seq = args.get_usize("seq")?.unwrap_or(48);
+    let batch = args.get_usize("batch")?.unwrap_or(4);
+    let repeat = args.get_usize("repeat")?.unwrap_or(3).max(1);
+    let run = match (args.get_usize("np")?, args.get_usize("si")?) {
+        (Some(np), Some(si)) => Some(RunConfig::square(np, si)),
+        (None, None) => None,
+        _ => anyhow::bail!("--np and --si must be given together"),
+    };
+    let xs: Vec<Matrix> =
+        (0..batch as u64).map(|i| Matrix::random(seq, d_model, 900 + i)).collect();
+    let wq = Matrix::random(d_model, d_model, 910);
+    let wk = Matrix::random(d_model, d_model, 911);
+    let wv = Matrix::random(d_model, d_model, 912);
+    let wo = Matrix::random(d_model, d_model, 913);
+
+    // Baseline: every run re-packs all four weights and every
+    // activation (three projections each) from scratch.
+    let srv = batch_server(hw, args, batch.max(8), "inline")?;
+    let t0 = std::time::Instant::now();
+    let mut inline_out = Vec::new();
+    for _ in 0..repeat {
+        inline_out = attention_block_inline(&srv, &xs, &wq, &wk, &wv, &wo, run)?;
+    }
+    let inline_wall = t0.elapsed().as_secs_f64();
+    let inline_stats = srv.stats();
+    srv.shutdown();
+
+    // Registered: one model-load + one batch-load, then every run
+    // resolves both sides from the pack cache.
+    let srv = batch_server(hw, args, batch.max(8), "registered")?;
+    let weights =
+        AttentionWeights::register(&srv, wq.clone(), wk.clone(), wv.clone(), wo.clone())?;
+    let abatch = ActivationBatch::register(&srv, &xs)?;
+    let t0 = std::time::Instant::now();
+    let mut reg_out = Vec::new();
+    for _ in 0..repeat {
+        reg_out = attention_block_registered(&srv, &abatch, &weights, run)?;
+    }
+    let registered_wall = t0.elapsed().as_secs_f64();
+    let registered_stats = srv.stats();
+    abatch.unregister(&srv)?;
+    weights.unregister(&srv)?;
+    srv.shutdown();
+
+    for (i, (a, b)) in inline_out.iter().zip(&reg_out).enumerate() {
+        anyhow::ensure!(
+            a.data == b.data,
+            "member {i}: registered output differs from inline — residency changed numerics"
+        );
+    }
+
+    println!(
+        "\nattention block: d_model={d_model} seq={seq} batch={batch}, {repeat} repeated runs:"
+    );
+    println!(
+        "  inline:     {inline_wall:.3} s wall | packs(a/b)={}/{}",
+        inline_stats.a_panel_packs, inline_stats.b_panel_packs
+    );
+    println!(
+        "  registered: {registered_wall:.3} s wall | packs(a/b)={}/{} \
+         cache hits(a/b)={}/{} ({} repacks avoided)",
+        registered_stats.a_panel_packs,
+        registered_stats.b_panel_packs,
+        registered_stats.registry_a_hits,
+        registered_stats.registry_hits,
+        (inline_stats.a_panel_packs + inline_stats.b_panel_packs)
+            .saturating_sub(registered_stats.a_panel_packs + registered_stats.b_panel_packs)
+    );
+    println!("  outputs bit-identical across both paths");
+    println!("  inline server:     {inline_stats}");
+    println!("  registered server: {registered_stats}");
+
+    if args.flags.contains_key("check") {
+        let oracle = attention_block_oracle(&xs, &wq, &wk, &wv, &wo);
+        let mut max_err = 0.0f32;
+        for (i, (o, c)) in oracle.iter().zip(&reg_out).enumerate() {
+            let err = o.max_abs_diff(c);
+            max_err = max_err.max(err);
+            anyhow::ensure!(
+                o.allclose(c, 1e-3),
+                "member {i}: served block disagrees with the scalar oracle (|err| = {err:.3e})"
+            );
+        }
+        println!("  check vs scalar oracle: max |err| = {max_err:.3e} — OK");
+    }
     Ok(())
 }

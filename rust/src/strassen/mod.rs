@@ -43,13 +43,20 @@
 //! [`StrassenWeights`] and call [`multiply_batched_registered`] per
 //! batch: later recursions resolve every combination from the cache
 //! (registry hits) instead of re-forming `7^depth` packs per call.
+//!
+//! The A side has the symmetric lever for serving loops that re-run
+//! one **activation batch**: [`register_activations`] →
+//! [`StrassenActivations`] registers every leaf A combination of every
+//! member, and [`multiply_batched_bi_registered`] runs the recursion
+//! with **both** sides resolved from the registry — once warm, a
+//! repeat run forms and packs nothing on either side.
 
 mod arena;
 mod planner;
 
 pub use arena::{ArenaStats, ScratchArena};
 pub use planner::{
-    multiply, multiply_batched, multiply_batched_registered, register_weights,
-    BatchedStrassenReport, Cutoff, StrassenConfig, StrassenReport, StrassenWeights,
-    DIRECT_SPLIT_FANOUT,
+    multiply, multiply_batched, multiply_batched_bi_registered, multiply_batched_registered,
+    register_activations, register_weights, BatchedStrassenReport, Cutoff, StrassenActivations,
+    StrassenConfig, StrassenReport, StrassenWeights, DIRECT_SPLIT_FANOUT,
 };

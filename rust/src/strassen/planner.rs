@@ -22,7 +22,7 @@
 
 use crate::analytical::{strassen_crossover, CrossoverPlan};
 use crate::config::RunConfig;
-use crate::coordinator::{GemmJob, JobServer, WeightHandle};
+use crate::coordinator::{ActivationHandle, AOperand, GemmJob, JobServer, WeightHandle};
 use crate::gemm::{ops, Matrix, MatrixView};
 
 use super::arena::{ArenaStats, ScratchArena};
@@ -191,7 +191,7 @@ pub fn multiply(
 
     let (c, padded) = if depth == 0 {
         let job =
-            GemmJob { id: ctx.fresh_id(), a: a.clone(), b: b.clone().into(), run: cfg.run };
+            GemmJob { id: ctx.fresh_id(), a: a.clone().into(), b: b.clone().into(), run: cfg.run };
         let r = server.submit(job)?.wait()?;
         ctx.leaf_gemms = 1;
         (r.c, (m, k, n))
@@ -275,7 +275,7 @@ fn node(
         // pool.
         let jobs: Vec<GemmJob> = pairs
             .into_iter()
-            .map(|(ta, tb)| GemmJob { id: ctx.fresh_id(), a: ta, b: tb.into(), run: ctx.run })
+            .map(|(ta, tb)| GemmJob { id: ctx.fresh_id(), a: ta.into(), b: tb.into(), run: ctx.run })
             .collect();
         let results = ctx.server.submit_group(jobs)?.wait_all()?;
         ctx.leaf_gemms += 7;
@@ -727,6 +727,21 @@ fn node_batched_registered(
         ms
     };
 
+    Ok(combine_members(ctx, ms, batch, m, n))
+}
+
+/// The per-member Strassen combine for one batched node: fold each
+/// member's 7 sub-products `ms[j][member]` into its `m x n` C, recycling
+/// the sub-products through the arena. Shared by every batched recursion
+/// variant so registered and inline runs combine bit-identically.
+fn combine_members(
+    ctx: &mut Ctx<'_>,
+    ms: Vec<Vec<Matrix>>,
+    batch: usize,
+    m: usize,
+    n: usize,
+) -> Vec<Matrix> {
+    let (m2, n2) = (m / 2, n / 2);
     let mut cs = Vec::with_capacity(batch);
     for member in 0..batch {
         let mut c = ctx.arena.take(m, n);
@@ -760,7 +775,308 @@ fn node_batched_registered(
             ctx.arena.put(mi);
         }
     }
-    Ok(cs)
+    cs
+}
+
+/// The A side of a batched Strassen recursion registered as
+/// server-resident activations: every **leaf-level A quadrant
+/// combination of every batch member** (`7^depth` combinations x
+/// `batch` members, in the recursion's visit order) lives in the
+/// server's operand registry under an [`ActivationHandle`]. The
+/// dual of [`StrassenWeights`] for serving loops that re-run the same
+/// activation batch against one or more weight sets — build once with
+/// [`register_activations`], then [`multiply_batched_bi_registered`]
+/// resolves *both* sides of every leaf GEMM from the pack cache.
+pub struct StrassenActivations {
+    /// `handles[leaf][member]`: leaf combinations in recursion
+    /// (pre-order, M1..M7 per node) visit order — the same order
+    /// [`StrassenWeights`] registers the B side in, so one cursor
+    /// walks both.
+    handles: Vec<Vec<ActivationHandle>>,
+    depth: usize,
+    batch: usize,
+    /// Original per-member A dims.
+    m: usize,
+    k: usize,
+    /// A dims after top-level padding to a multiple of `2^depth`.
+    padded_m: usize,
+    padded_k: usize,
+}
+
+impl StrassenActivations {
+    /// The recursion depth the combinations were registered for.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Batch members per leaf combination.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// The registered leaf combinations (`7^depth` groups of `batch`
+    /// handles, or 1 group at depth 0), in recursion visit order.
+    pub fn leaf_handles(&self) -> &[Vec<ActivationHandle>] {
+        &self.handles
+    }
+
+    /// Drop every registered combination (cached packs freed; in-flight
+    /// work is unaffected). Sweeps the whole list even when one handle
+    /// fails, so a partial failure never leaks the remainder.
+    pub fn unregister(self, server: &JobServer) -> anyhow::Result<()> {
+        server.unregister_all_a(self.handles.into_iter().flatten())
+    }
+}
+
+/// Form and register the A-side quadrant-combination tree of a whole
+/// batch at `depth` — the Strassen activation-load step, dual to
+/// [`register_weights`]. The combinations are built with the same
+/// row-streamed add/sub kernels the recursion uses, so a registered run
+/// is bit-identical to an inline one. `depth = 0` registers each member
+/// itself.
+pub fn register_activations(
+    server: &JobServer,
+    a_list: &[Matrix],
+    depth: usize,
+) -> anyhow::Result<StrassenActivations> {
+    anyhow::ensure!(!a_list.is_empty(), "empty batch");
+    let (m, k) = (a_list[0].rows, a_list[0].cols);
+    anyhow::ensure!(
+        a_list.iter().all(|a| (a.rows, a.cols) == (m, k)),
+        "batch members must share one shape"
+    );
+    anyhow::ensure!(m > 0 && k > 0, "degenerate A {m}x{k}");
+    anyhow::ensure!(
+        depth <= (m.ilog2().min(k.ilog2())) as usize,
+        "depth {depth} too deep for a {m}x{k} A (each level halves both dims)"
+    );
+    let mut handles = Vec::new();
+    let (padded_m, padded_k) = if depth == 0 {
+        let group = a_list
+            .iter()
+            .map(|a| server.register_a(a.clone()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        handles.push(group);
+        (m, k)
+    } else {
+        let align = 1usize << depth;
+        let (mp, kp) = (m.next_multiple_of(align), k.next_multiple_of(align));
+        let aps: Vec<Matrix> = a_list.iter().map(|a| a.pad_to(mp, kp)).collect();
+        collect_a_combos(server, &aps, depth, &mut handles)?;
+        (mp, kp)
+    };
+    Ok(StrassenActivations {
+        handles,
+        depth,
+        batch: a_list.len(),
+        m,
+        k,
+        padded_m,
+        padded_k,
+    })
+}
+
+/// Register the `7^depth_left` leaf combinations of every member under
+/// `a_list`, pre-order (combination j's subtree fully before
+/// combination j+1's) — exactly the order [`collect_b_combos`] uses, so
+/// [`node_bi_registered`] walks both lists with one cursor.
+fn collect_a_combos(
+    server: &JobServer,
+    a_list: &[Matrix],
+    depth_left: usize,
+    handles: &mut Vec<Vec<ActivationHandle>>,
+) -> anyhow::Result<()> {
+    let (m, k) = (a_list[0].rows, a_list[0].cols);
+    debug_assert!(m % 2 == 0 && k % 2 == 0, "combo dims must be even");
+    let (m2, k2) = (m / 2, k / 2);
+    let mut combos: Vec<Vec<Matrix>> = (0..7).map(|_| Vec::with_capacity(a_list.len())).collect();
+    for a in a_list {
+        let av = a.view();
+        let a11 = av.block(0, 0, m2, k2);
+        let a12 = av.block(0, k2, m2, k2);
+        let a21 = av.block(m2, 0, m2, k2);
+        let a22 = av.block(m2, k2, m2, k2);
+        let specs: [Combo<'_>; 7] = [
+            Combo::Add(a11, a22), // M1
+            Combo::Add(a21, a22), // M2
+            Combo::Copy(a11),     // M3
+            Combo::Copy(a22),     // M4
+            Combo::Add(a11, a12), // M5
+            Combo::Sub(a21, a11), // M6
+            Combo::Sub(a12, a22), // M7
+        ];
+        for (j, ca) in specs.into_iter().enumerate() {
+            let mut combo = Matrix::zeros(m2, k2);
+            fill_combo(&mut combo.view_mut(), ca);
+            combos[j].push(combo);
+        }
+    }
+    for group in combos {
+        if depth_left == 1 {
+            let hs = group
+                .into_iter()
+                .map(|g| server.register_a(g))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            handles.push(hs);
+        } else {
+            collect_a_combos(server, &group, depth_left - 1, handles)?;
+        }
+    }
+    Ok(())
+}
+
+/// Batched Strassen with **both sides pre-registered**: every leaf GEMM
+/// pairs a registered A combination ([`StrassenActivations`]) with its
+/// registered B combination ([`StrassenWeights`]) — the recursion forms
+/// no operands and, once each `(handle, S)` variant is warm, packs
+/// nothing on either side. This is the cache-hot serving shape for
+/// re-running one activation batch (an attention block's token batch,
+/// an im2col window set) against resident weights.
+///
+/// Results are bit-identical to [`multiply_batched_registered`] over the
+/// same `a_list`: the registered combinations were built by the same
+/// combine kernels, and packed layout does not depend on residency.
+pub fn multiply_batched_bi_registered(
+    server: &JobServer,
+    acts: &StrassenActivations,
+    weights: &StrassenWeights,
+    run: Option<RunConfig>,
+) -> anyhow::Result<BatchedStrassenReport> {
+    anyhow::ensure!(
+        acts.depth == weights.depth,
+        "depth mismatch: activations registered at {}, weights at {}",
+        acts.depth,
+        weights.depth
+    );
+    anyhow::ensure!(
+        acts.k == weights.k,
+        "contraction mismatch: registered A K = {}, registered B K = {}",
+        acts.k,
+        weights.k
+    );
+    if let Some(run) = run {
+        run.validate(server.hw())?;
+    }
+    let depth = acts.depth;
+
+    let mut ctx = Ctx {
+        server,
+        arena: ScratchArena::new(),
+        run,
+        next_id: 0,
+        leaf_gemms: 0,
+        leaf_groups: 0,
+        level_nodes: vec![0; depth],
+        level_spawns: vec![0; depth],
+    };
+
+    let (cs, padded) = if depth == 0 {
+        let many_a: Vec<AOperand> =
+            acts.handles[0].iter().map(|&h| AOperand::from(h)).collect();
+        let group = server.submit_batched_gemm_operands(weights.handles[0], many_a, run)?;
+        ctx.leaf_groups = 1;
+        ctx.leaf_gemms = acts.batch as u64;
+        let cs = group.wait_all()?.into_iter().map(|r| r.c).collect();
+        (cs, (acts.m, acts.k, weights.n))
+    } else {
+        let (mp, kp, np) = (acts.padded_m, acts.padded_k, weights.padded_n);
+        debug_assert_eq!(kp, weights.padded_k, "equal K and depth pad identically");
+        let mut cursor = 0usize;
+        let cps = node_bi_registered(&mut ctx, mp, np, depth, 0, acts, weights, &mut cursor)?;
+        debug_assert_eq!(cursor, weights.handles.len(), "every leaf combo consumed");
+        let cs = cps
+            .into_iter()
+            .map(|cp| {
+                let c = cp.block(0, 0, acts.m, weights.n);
+                ctx.arena.put(cp);
+                c
+            })
+            .collect();
+        (cs, (mp, kp, np))
+    };
+
+    Ok(BatchedStrassenReport {
+        cs,
+        depth,
+        leaf_groups: ctx.leaf_groups,
+        leaf_gemms: ctx.leaf_gemms,
+        level_nodes: ctx.level_nodes,
+        level_spawns: ctx.level_spawns,
+        padded,
+        model: None,
+        arena: ctx.arena.stats(),
+    })
+}
+
+/// One batched recursion node with both sides registered
+/// (`depth_left >= 1`; `m`/`n` = this node's C dims, both even). The
+/// node carries no operand data at all — both sides are consumed as
+/// handles in registration (pre-)order via the shared `cursor`.
+#[allow(clippy::too_many_arguments)]
+fn node_bi_registered(
+    ctx: &mut Ctx<'_>,
+    m: usize,
+    n: usize,
+    depth_left: usize,
+    level: usize,
+    acts: &StrassenActivations,
+    weights: &StrassenWeights,
+    cursor: &mut usize,
+) -> anyhow::Result<Vec<Matrix>> {
+    let batch = acts.batch;
+    debug_assert!(m % 2 == 0 && n % 2 == 0, "node dims must be even");
+    let (m2, n2) = (m / 2, n / 2);
+    ctx.level_nodes[level] += 1;
+    ctx.level_spawns[level] += 7;
+
+    // ms[j][member] = combination j's product for that member.
+    let ms: Vec<Vec<Matrix>> = if depth_left == 1 {
+        // Submit all 7 fully-registered groups before waiting on any.
+        let mut groups = Vec::with_capacity(7);
+        for _ in 0..7 {
+            let wh = weights.handles[*cursor];
+            let many_a: Vec<AOperand> =
+                acts.handles[*cursor].iter().map(|&h| AOperand::from(h)).collect();
+            *cursor += 1;
+            groups.push(ctx.server.submit_batched_gemm_operands(wh, many_a, ctx.run)?);
+        }
+        ctx.leaf_groups += 7;
+        ctx.leaf_gemms += 7 * batch as u64;
+        let mut ms = Vec::with_capacity(7);
+        for g in groups {
+            let results = g.wait_all()?;
+            let mut per_member = Vec::with_capacity(batch);
+            for r in results {
+                anyhow::ensure!(
+                    (r.c.rows, r.c.cols) == (m2, n2),
+                    "leaf {} returned {}x{}, expected {m2}x{n2}",
+                    r.id,
+                    r.c.rows,
+                    r.c.cols
+                );
+                per_member.push(r.c);
+            }
+            ms.push(per_member);
+        }
+        ms
+    } else {
+        let mut ms = Vec::with_capacity(7);
+        for _ in 0..7 {
+            ms.push(node_bi_registered(
+                ctx,
+                m2,
+                n2,
+                depth_left - 1,
+                level + 1,
+                acts,
+                weights,
+                cursor,
+            )?);
+        }
+        ms
+    };
+
+    Ok(combine_members(ctx, ms, batch, m, n))
 }
 
 #[cfg(test)]
@@ -978,6 +1294,79 @@ mod tests {
         w1.unregister(&srv).unwrap();
         // And registration itself rejects depths B cannot halve to.
         assert!(register_weights(&srv, &Matrix::random(2, 2, 161), 2).is_err());
+    }
+
+    #[test]
+    fn bi_registered_leaves_reuse_activation_packs() {
+        // Registering the A side too: the 7 x batch activation combos
+        // pack once on the first bi-registered run, and a repeat run
+        // packs nothing on either side — bit-identical throughout.
+        let srv = server();
+        let b = Matrix::random(24, 40, 170);
+        let a_list: Vec<Matrix> =
+            (0..2u64).map(|i| Matrix::random(32, 24, 171 + i)).collect();
+        let weights = register_weights(&srv, &b, 1).unwrap();
+        let run = Some(RunConfig::square(2, 16));
+        let inline = multiply_batched_registered(&srv, &a_list, &weights, run).unwrap();
+        let acts = register_activations(&srv, &a_list, 1).unwrap();
+        assert_eq!((acts.depth(), acts.batch()), (1, 2));
+        assert_eq!(acts.leaf_handles().len(), 7);
+        let m = srv.metrics();
+        let packs_before = m.a_panel_packs();
+        assert_eq!(packs_before, 14, "inline run packed A privately per leaf GEMM");
+        let first = multiply_batched_bi_registered(&srv, &acts, &weights, run).unwrap();
+        assert_eq!((first.depth, first.leaf_groups, first.leaf_gemms), (1, 7, 14));
+        for (c1, c2) in inline.cs.iter().zip(&first.cs) {
+            assert_eq!(c1.data, c2.data, "registered-A leaves must be bit-identical");
+        }
+        assert_eq!(m.a_panel_packs() - packs_before, 14, "7 combos x 2 members, packed once");
+        assert_eq!(m.registry_a_misses(), 14);
+        let second = multiply_batched_bi_registered(&srv, &acts, &weights, run).unwrap();
+        for (c1, c2) in first.cs.iter().zip(&second.cs) {
+            assert_eq!(c1.data, c2.data, "repeat run must be bit-identical");
+        }
+        assert_eq!(m.a_panel_packs() - packs_before, 14, "repeat run packed nothing");
+        assert_eq!(m.registry_a_hits(), 14, "second run is pure A-side cache hits");
+        acts.unregister(&srv).unwrap();
+        weights.unregister(&srv).unwrap();
+        let stats = srv.stats();
+        assert_eq!((stats.registered_activations, stats.registered_weights), (0, 0));
+        // Depth mismatch between the two sides is rejected up front.
+        let w0 = register_weights(&srv, &b, 0).unwrap();
+        let a1 = register_activations(&srv, &a_list, 1).unwrap();
+        assert!(multiply_batched_bi_registered(&srv, &a1, &w0, run).is_err());
+        a1.unregister(&srv).unwrap();
+        w0.unregister(&srv).unwrap();
+    }
+
+    #[test]
+    fn bi_registered_depth_zero_and_validation() {
+        let srv = server();
+        let b = Matrix::random(12, 16, 180);
+        let a_list: Vec<Matrix> = (0..3u64).map(|i| Matrix::random(20, 12, 181 + i)).collect();
+        let weights = register_weights(&srv, &b, 0).unwrap();
+        let acts = register_activations(&srv, &a_list, 0).unwrap();
+        assert_eq!(acts.leaf_handles().len(), 1);
+        assert_eq!(acts.leaf_handles()[0].len(), 3);
+        let r = multiply_batched_bi_registered(&srv, &acts, &weights, None).unwrap();
+        assert_eq!((r.depth, r.leaf_groups, r.leaf_gemms), (0, 1, 3));
+        for (a, c) in a_list.iter().zip(&r.cs) {
+            assert!(c.allclose(&a.matmul(&b), 1e-4));
+        }
+        acts.unregister(&srv).unwrap();
+        weights.unregister(&srv).unwrap();
+        // Registration validation: ragged batches, empty batches, and
+        // over-deep requests are rejected.
+        assert!(register_activations(&srv, &[], 0).is_err());
+        let ragged = vec![Matrix::random(4, 4, 190), Matrix::random(4, 6, 191)];
+        assert!(register_activations(&srv, &ragged, 0).is_err());
+        assert!(register_activations(&srv, &[Matrix::random(2, 2, 192)], 2).is_err());
+        // Contraction mismatch across registered sides.
+        let w = register_weights(&srv, &Matrix::random(8, 8, 193), 0).unwrap();
+        let a = register_activations(&srv, &[Matrix::random(4, 6, 194)], 0).unwrap();
+        assert!(multiply_batched_bi_registered(&srv, &a, &w, None).is_err());
+        a.unregister(&srv).unwrap();
+        w.unregister(&srv).unwrap();
     }
 
     #[test]

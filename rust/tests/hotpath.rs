@@ -144,7 +144,7 @@ fn coordinator_zero_copy_and_correct_across_partitions() {
         let a = Matrix::random(m, k, (m + n) as u64);
         let b = Matrix::random(k, n, (m * n) as u64);
         let want = a.matmul(&b);
-        let job = GemmJob { id: 0, a, b: b.into(), run: Some(RunConfig::square(np, si)) };
+        let job = GemmJob { id: 0, a: a.into(), b: b.into(), run: Some(RunConfig::square(np, si)) };
         let r = co.run_job(job).unwrap();
         assert!(r.c.allclose(&want, 1e-4), "{m}x{k}x{n} np={np}");
     }

@@ -206,7 +206,7 @@ fn coordinator_end_to_end_golden() {
     let a = Matrix::random(200, 120, 10);
     let b = Matrix::random(120, 160, 11);
     let want = a.matmul(&b);
-    let r = co.run_job(GemmJob { id: 1, a, b: b.into(), run: None }).unwrap();
+    let r = co.run_job(GemmJob { id: 1, a: a.into(), b: b.into(), run: None }).unwrap();
     assert!(r.c.allclose(&want, 1e-4));
     assert!(r.sim.gflops > 0.0);
     assert_eq!(co.metrics().jobs(), 1);
@@ -223,7 +223,7 @@ fn coordinator_batch_of_jobs() {
         let b = Matrix::random(*k, *n, 100 + i as u64);
         let want = a.matmul(&b);
         let r = co
-            .run_job(GemmJob { id: i as u64, a, b: b.into(), run: None })
+            .run_job(GemmJob { id: i as u64, a: a.into(), b: b.into(), run: None })
             .unwrap();
         assert!(r.c.allclose(&want, 1e-4), "job {i}");
     }

@@ -98,7 +98,7 @@ fn coordinator_with_pjrt_engine() {
     let a = Matrix::random(150, 90, 11);
     let b = Matrix::random(90, 130, 12);
     let want = a.matmul(&b);
-    let r = co.run_job(GemmJob { id: 1, a, b: b.into(), run: None }).unwrap();
+    let r = co.run_job(GemmJob { id: 1, a: a.into(), b: b.into(), run: None }).unwrap();
     assert!(
         r.c.allclose(&want, 1e-3),
         "max err {}",

@@ -59,7 +59,7 @@ fn stress_concurrent_mixed_size_submitters() {
                     let b = Matrix::random(k, n, seed + 500);
                     let want = a.matmul(&b);
                     let ticket = srv
-                        .submit(GemmJob { id: seed, a, b: b.into(), run: Some(run) })
+                        .submit(GemmJob { id: seed, a: a.into(), b: b.into(), run: Some(run) })
                         .unwrap();
                     let r = ticket.wait().unwrap();
                     assert_eq!(r.id, seed);
@@ -103,7 +103,7 @@ fn sixty_four_concurrent_mixed_jobs_with_cross_job_stealing() {
         let b = Matrix::random(k, n, seed + 1000);
         let want = a.matmul(&b);
         let ticket = srv
-            .submit(GemmJob { id: seed, a, b: b.into(), run: Some(run) })
+            .submit(GemmJob { id: seed, a: a.into(), b: b.into(), run: Some(run) })
             .unwrap();
         pending.push((ticket, want));
     }
@@ -152,7 +152,7 @@ fn batched_small_jobs_bit_identical_to_individual_runs() {
                 .enumerate()
                 .map(|(i, (a, b))| GemmJob {
                     id: i as u64,
-                    a: a.clone(),
+                    a: a.clone().into(),
                     b: b.clone().into(),
                     run: Some(run),
                 })
@@ -168,7 +168,7 @@ fn batched_small_jobs_bit_identical_to_individual_runs() {
         let individual = co
             .run_job(GemmJob {
                 id: r.id,
-                a: a.clone(),
+                a: a.clone().into(),
                 b: b.clone().into(),
                 run: Some(run),
             })
@@ -212,7 +212,7 @@ fn batched_gemm_bit_identical_across_ragged_shapes() {
                 individual
                     .submit(GemmJob {
                         id: i as u64,
-                        a: a.clone(),
+                        a: a.clone().into(),
                         b: b.clone().into(),
                         run: Some(run),
                     })
@@ -279,7 +279,7 @@ fn batched_gemm_conserves_one_b_pack() {
     let individual = server(cfg(4, 16));
     for (i, a) in many_a.into_iter().enumerate() {
         individual
-            .submit(GemmJob { id: i as u64, a, b: b.clone().into(), run: Some(run) })
+            .submit(GemmJob { id: i as u64, a: a.into(), b: b.clone().into(), run: Some(run) })
             .unwrap()
             .wait()
             .unwrap();
@@ -339,7 +339,7 @@ fn registered_b_bit_identical_to_inline_across_ragged_shapes() {
         // Lone registered submits reuse the same cached pack and agree.
         for (i, (a, want)) in many_a.iter().zip(&inline_results).enumerate() {
             let r = registered
-                .submit(GemmJob { id: i as u64, a: a.clone(), b: h.into(), run: Some(run) })
+                .submit(GemmJob { id: i as u64, a: a.clone().into(), b: h.into(), run: Some(run) })
                 .unwrap()
                 .wait()
                 .unwrap();
@@ -410,7 +410,7 @@ fn registry_eviction_under_tight_budget_keeps_results_correct() {
             let a = Matrix::random(20, 16, 3200 + 10 * round + j as u64);
             let want = a.matmul(b);
             let r = srv
-                .submit(GemmJob { id: round, a, b: h.into(), run })
+                .submit(GemmJob { id: round, a: a.into(), b: h.into(), run })
                 .unwrap()
                 .wait()
                 .unwrap();
@@ -484,11 +484,12 @@ fn try_submit_sheds_load_without_losing_jobs() {
         let a = Matrix::random(32, 16, j);
         let b = Matrix::random(16, 32, j + 200);
         let want = a.matmul(&b);
-        match srv.try_submit(GemmJob { id: j, a, b: b.into(), run: Some(run) }) {
+        match srv.try_submit(GemmJob { id: j, a: a.into(), b: b.into(), run: Some(run) }) {
             Ok(t) => admitted.push((t, want)),
             Err(TrySubmitError::Full(job)) => {
                 assert_eq!(job.id, j, "rejected job must come back intact");
-                assert_eq!((job.a.rows, job.b.as_inline().unwrap().cols), (32, 32));
+                assert_eq!(job.a.inline_dims(), Some((32, 16)));
+                assert_eq!(job.b.as_inline().unwrap().cols, 32);
                 rejected += 1;
             }
             Err(TrySubmitError::Closed(_)) => panic!("server is not closed"),
@@ -514,7 +515,7 @@ fn steals_balance_and_zero_copy_hold_under_serving() {
         let b = Matrix::random(24, 64, j + 77);
         let want = a.matmul(&b);
         pending.push((
-            srv.submit(GemmJob { id: j, a, b: b.into(), run: Some(run) }).unwrap(),
+            srv.submit(GemmJob { id: j, a: a.into(), b: b.into(), run: Some(run) }).unwrap(),
             want,
         ));
     }
