@@ -16,7 +16,7 @@ use multi_array::coordinator::{GemmJob, JobServer, NumericsEngine, ServerConfig}
 use multi_array::gemm::Matrix;
 
 fn burst(srv: &JobServer, njobs: usize) -> anyhow::Result<()> {
-    let mut tickets = Vec::with_capacity(njobs);
+    let mut futures = Vec::with_capacity(njobs);
     for j in 0..njobs {
         let seed = j as u64;
         let (a, b) = if j % 8 == 0 {
@@ -24,15 +24,15 @@ fn burst(srv: &JobServer, njobs: usize) -> anyhow::Result<()> {
         } else {
             (Matrix::random(64, 32, seed), Matrix::random(32, 64, seed + 900))
         };
-        tickets.push(srv.submit(GemmJob {
+        futures.push(srv.submit_async(GemmJob {
             id: seed,
             a: a.into(),
             b: b.into(),
             run: Some(RunConfig::square(4, 64)),
         })?);
     }
-    for t in tickets {
-        t.wait()?;
+    for f in futures {
+        f.wait()?;
     }
     Ok(())
 }

@@ -36,12 +36,19 @@
 //!   activation batch (`ActivationBatch`, A side) against registered
 //!   Q/K/V/O weights (B side) — after warmup, repeated runs pack
 //!   nothing on either side (`a_cache_hits`/`b_cache_hits`
-//!   annotations). Also CI-gated.
+//!   annotations). Also CI-gated;
+//! * `serving_multi_tenant` — the admission front end under tenancy:
+//!   two tenants with 1:3 DRR weights push the same backlogged mouse
+//!   stream under per-job deadlines; `deadline_miss_frac` and the
+//!   per-tenant throughput annotations come from `stats()`. Also
+//!   CI-gated.
 
 use std::cell::Cell;
 
 use multi_array::config::{HardwareConfig, RunConfig};
-use multi_array::coordinator::{GemmJob, JobServer, NumericsEngine, ServerConfig};
+use multi_array::coordinator::{
+    GemmJob, JobServer, NumericsEngine, ServerConfig, Submission, TenantConfig, TenantId,
+};
 use multi_array::gemm::Matrix;
 use multi_array::util::Bench;
 
@@ -96,11 +103,11 @@ fn serve_once(
     };
     let srv = JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), cfg)
         .expect("server construction");
-    let tickets: Vec<_> = jobs
+    let futures: Vec<_> = jobs
         .iter()
         .enumerate()
         .map(|(id, (a, b, run))| {
-            srv.submit(GemmJob {
+            srv.submit_async(GemmJob {
                 id: id as u64,
                 a: a.clone().into(),
                 b: b.clone().into(),
@@ -109,8 +116,8 @@ fn serve_once(
             .expect("submit")
         })
         .collect();
-    for t in tickets {
-        t.wait().expect("job result");
+    for f in futures {
+        f.wait().expect("job result");
     }
     let stats = srv.stats();
     assert_eq!(stats.jobs, NJOBS as u64, "every job must complete");
@@ -163,11 +170,11 @@ fn main() {
     bench.run_throughput("serving_individual_shared_b_workload", shared_flops, || {
         let srv = JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), shared_cfg())
             .expect("server construction");
-        let tickets: Vec<_> = many_a
+        let futures: Vec<_> = many_a
             .iter()
             .enumerate()
             .map(|(id, a)| {
-                srv.submit(GemmJob {
+                srv.submit_async(GemmJob {
                     id: id as u64,
                     a: a.clone().into(),
                     b: b.clone().into(),
@@ -176,8 +183,8 @@ fn main() {
                 .expect("submit")
             })
             .collect();
-        for t in tickets {
-            t.wait().expect("job result");
+        for f in futures {
+            f.wait().expect("job result");
         }
         assert_eq!(srv.stats().b_panel_packs, NJOBS as u64);
     });
@@ -190,9 +197,7 @@ fn main() {
         let srv = JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), shared_cfg())
             .expect("server construction");
         let results = srv
-            .submit_batched_gemm(b.clone(), many_a.clone(), Some(run))
-            .expect("batched submit")
-            .wait_all()
+            .submit_blocking(Submission::batched(b.clone(), many_a.clone()).run(run))
             .expect("batched results");
         assert_eq!(results.len(), NJOBS);
         let stats = srv.stats();
@@ -218,9 +223,7 @@ fn main() {
     let handle = srv.register_b(b.clone()).expect("register weight");
     bench.run_throughput("serving_registered_weights", shared_flops, || {
         let results = srv
-            .submit_batched_gemm(handle, many_a.clone(), Some(run))
-            .expect("registered submit")
-            .wait_all()
+            .submit_blocking(Submission::batched(handle, many_a.clone()).run(run))
             .expect("registered results");
         assert_eq!(results.len(), NJOBS);
     });
@@ -275,6 +278,72 @@ fn main() {
         abatch.unregister(&srv).expect("unregister activations");
         weights.unregister(&srv).expect("unregister weights");
         srv.shutdown();
+    }
+
+    // Multi-tenant admission: two tenants with 1:3 DRR weights push the
+    // same backlogged mouse stream through the front end under per-job
+    // deadlines. Every job completes (fairness shapes order, not
+    // totals); the gate label carries the deadline-miss fraction and
+    // each tenant's served throughput. CI-gated.
+    {
+        const PER_TENANT: usize = 24;
+        let mt_flops = 2 * 64 * 32 * 64 * (2 * PER_TENANT) as u64;
+        let miss_frac = Cell::new(0.0f64);
+        let t0_rate = Cell::new(0.0f64);
+        let t1_rate = Cell::new(0.0f64);
+        let mt_samples = Cell::new(0u32);
+        bench.run_throughput("serving_multi_tenant", mt_flops, || {
+            let srv =
+                JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), shared_cfg())
+                    .expect("server construction");
+            srv.configure_tenant(TenantId(0), TenantConfig { weight: 1, ..Default::default() })
+                .expect("tenant 0");
+            srv.configure_tenant(TenantId(1), TenantConfig { weight: 3, ..Default::default() })
+                .expect("tenant 1");
+            let start = std::time::Instant::now();
+            let mut futures = Vec::with_capacity(2 * PER_TENANT);
+            for t in 0..2u32 {
+                for j in 0..PER_TENANT {
+                    let seed = 6000 + (t as usize * PER_TENANT + j) as u64;
+                    let a = Matrix::random(64, 32, seed);
+                    futures.push(
+                        srv.submit_async(
+                            Submission::gemm(a, b.clone())
+                                .id(seed)
+                                .tenant(TenantId(t))
+                                .run(run)
+                                .deadline(std::time::Duration::from_millis(250)),
+                        )
+                        .expect("submit"),
+                    );
+                }
+            }
+            for f in futures {
+                f.wait().expect("job result");
+            }
+            let wall = start.elapsed().as_secs_f64().max(1e-9);
+            let stats = srv.stats();
+            assert_eq!(stats.deadline_jobs, (2 * PER_TENANT) as u64);
+            miss_frac
+                .set(miss_frac.get() + stats.deadline_misses as f64 / stats.deadline_jobs as f64);
+            for (id, c) in &stats.tenants {
+                let rate = c.jobs as f64 / wall;
+                match id.0 {
+                    0 => t0_rate.set(t0_rate.get() + rate),
+                    1 => t1_rate.set(t1_rate.get() + rate),
+                    _ => {}
+                }
+            }
+            mt_samples.set(mt_samples.get() + 1);
+            srv.shutdown();
+        });
+        let n = mt_samples.get().max(1) as f64;
+        bench.annotate("deadline_miss_frac", miss_frac.get() / n);
+        bench.annotate("tenant0_weight", 1.0);
+        bench.annotate("tenant1_weight", 3.0);
+        bench.annotate("tenant0_jobs_per_sec", t0_rate.get() / n);
+        bench.annotate("tenant1_jobs_per_sec", t1_rate.get() / n);
+        bench.annotate("jobs", (2 * PER_TENANT) as f64);
     }
 
     if let Err(e) = bench.write_json("BENCH_serving.json") {

@@ -51,7 +51,7 @@ fn main() {
 
     bench.run_throughput("direct_server_256", flops, || {
         let job = GemmJob { id: 0, a: a.clone().into(), b: b.clone().into(), run: Some(run) };
-        srv.submit(job).expect("submit").wait().expect("direct job")
+        srv.submit_blocking(job).expect("direct job")
     });
 
     // Evaluate the model once, outside any timed region, so the

@@ -28,7 +28,7 @@
 
 use crate::config::RunConfig;
 use crate::coordinator::{
-    ActivationHandle, AOperand, BOperand, GemmJob, JobServer, WeightHandle,
+    ActivationHandle, AOperand, BOperand, GemmJob, JobServer, Submission, WeightHandle,
 };
 use crate::gemm::Matrix;
 
@@ -255,12 +255,12 @@ fn block_core(
     // Q/K/V: three shared-B groups over the same activation batch,
     // all in flight before the first wait so the pool sees the whole
     // fan-out at once.
-    let gq = server.submit_batched_gemm_operands(wq, make_xs(), run)?;
-    let gk = server.submit_batched_gemm_operands(wk, make_xs(), run)?;
-    let gv = server.submit_batched_gemm_operands(wv, make_xs(), run)?;
-    let qs: Vec<Matrix> = gq.wait_all()?.into_iter().map(|r| r.c).collect();
-    let ks: Vec<Matrix> = gk.wait_all()?.into_iter().map(|r| r.c).collect();
-    let vs: Vec<Matrix> = gv.wait_all()?.into_iter().map(|r| r.c).collect();
+    let gq = server.submit_async(Submission::batched(wq, make_xs()).run(run))?;
+    let gk = server.submit_async(Submission::batched(wk, make_xs()).run(run))?;
+    let gv = server.submit_async(Submission::batched(wv, make_xs()).run(run))?;
+    let qs: Vec<Matrix> = gq.wait()?.into_iter().map(|r| r.c).collect();
+    let ks: Vec<Matrix> = gk.wait()?.into_iter().map(|r| r.c).collect();
+    let vs: Vec<Matrix> = gv.wait()?.into_iter().map(|r| r.c).collect();
 
     // Scores: one Q·Kᵀ job per member, submitted as a single group
     // (K differs per member, so there is no shared side to register).
@@ -275,8 +275,11 @@ fn block_core(
             run,
         })
         .collect();
-    let scores: Vec<Matrix> =
-        server.submit_group(score_jobs)?.wait_all()?.into_iter().map(|r| r.c).collect();
+    let scores: Vec<Matrix> = server
+        .submit_blocking(Submission::group(score_jobs))?
+        .into_iter()
+        .map(|r| r.c)
+        .collect();
 
     // Attention probabilities: numerically stable scaled softmax on
     // the host (elementwise, O(seq²) — not GEMM traffic).
@@ -290,13 +293,15 @@ fn block_core(
         .enumerate()
         .map(|(i, (p, v))| GemmJob { id: i as u64, a: p.into(), b: v.into(), run })
         .collect();
-    let ctxs: Vec<Matrix> =
-        server.submit_group(ctx_jobs)?.wait_all()?.into_iter().map(|r| r.c).collect();
+    let ctxs: Vec<Matrix> = server
+        .submit_blocking(Submission::group(ctx_jobs))?
+        .into_iter()
+        .map(|r| r.c)
+        .collect();
 
     // Output projection: one shared-B group over the fresh contexts.
-    let go = server
-        .submit_batched_gemm_operands(wo, ctxs.into_iter().map(AOperand::from).collect(), run)?;
-    Ok(go.wait_all()?.into_iter().map(|r| r.c).collect())
+    let go = server.submit_async(Submission::batched(wo, ctxs).run(run))?;
+    Ok(go.wait()?.into_iter().map(|r| r.c).collect())
 }
 
 /// Row-wise softmax of `scores / sqrt(d_model)`, max-subtracted for

@@ -6,7 +6,7 @@
 //! `in_channels x kh x kw`, `N` = output pixels. Under batched
 //! inference every image of the batch multiplies the *same* filter
 //! matrix, so the natural serving shape is the shared-B batch of
-//! [`crate::coordinator::JobServer::submit_batched_gemm`]: one shared
+//! [`crate::coordinator::Submission::batched`]: one shared
 //! B, many A. This module does the lowering in that orientation:
 //!
 //! * an input feature map is a [`Matrix`] of `in_channels` rows x

@@ -21,12 +21,12 @@
 //! packs exactly once per process, with repeat runs resolving the
 //! cached pack (registry hits) instead of repacking. Conv layers still
 //! ride the shared-B group shape
-//! ([`crate::coordinator::JobServer::submit_batched_gemm`]) so the
+//! ([`crate::coordinator::Submission::batched`]) so the
 //! within-call sharing composes with the cross-call cache.
 
 use crate::accelerator::{Accelerator, SimOptions};
 use crate::config::{HardwareConfig, RunConfig};
-use crate::coordinator::{GemmJob, JobServer, WeightHandle};
+use crate::coordinator::{JobServer, Submission, WeightHandle};
 use crate::dse;
 use crate::gemm::Matrix;
 
@@ -109,12 +109,12 @@ pub fn schedule_network(
     })
 }
 
-/// How one served layer is in flight: a lone ticket (FC / dense
-/// layers) or a shared-B batch group (conv layers — one packed filter,
-/// `batch` im2col'd images).
+/// How one served layer is in flight: a lone future (FC / dense
+/// layers) or a shared-B batch future (conv layers — one packed
+/// filter, `batch` im2col'd images).
 enum LayerHandle {
-    Single(crate::coordinator::JobTicket),
-    Batched(crate::coordinator::JobGroup),
+    Single(crate::coordinator::JobFuture),
+    Batched(crate::coordinator::JobFuture),
 }
 
 /// A network's weights as server-resident state: one registered
@@ -246,7 +246,7 @@ pub fn schedule_network_served(
 /// **Every layer streams through its registered handle.** Conv layers
 /// are lowered via im2col ([`super::im2col`]) to `batch` patch-row
 /// GEMMs submitted as one shared-B group
-/// ([`JobServer::submit_batched_gemm`]) under the layer's
+/// ([`Submission::batched`]) under the layer's
 /// [`WeightHandle`]: the packed filter is resolved from the operand
 /// registry — packed on first use, a cache hit ever after — so a
 /// filter reused by N batches across any number of calls packs exactly
@@ -285,16 +285,14 @@ pub fn schedule_network_served_with(
         let weight = weights.handles[i];
         if l.is_conv() {
             let many_a = conv_activations(l, batch, seed);
-            handles
-                .push(LayerHandle::Batched(server.submit_batched_gemm(weight, many_a, run)?));
+            handles.push(LayerHandle::Batched(
+                server.submit_async(Submission::batched(weight, many_a).run(run))?,
+            ));
         } else {
             let a = Matrix::random(l.m, l.k, seed);
-            handles.push(LayerHandle::Single(server.submit(GemmJob {
-                id: i as u64,
-                a: a.into(),
-                b: weight.into(),
-                run,
-            })?));
+            handles.push(LayerHandle::Single(server.submit_async(
+                Submission::gemm(a, weight).id(i as u64).run(run),
+            )?));
         }
     }
     let mut out = Vec::with_capacity(layers.len());
@@ -306,11 +304,11 @@ pub fn schedule_network_served_with(
         // (config, layer compute seconds, layer FLOPs).
         let (run, secs, layer_flops) = match h {
             LayerHandle::Single(t) => {
-                let r = t.wait()?;
+                let r = t.wait_one()?;
                 (r.run, r.sim.total_secs, l.flops())
             }
             LayerHandle::Batched(g) => {
-                let results = g.wait_all()?;
+                let results = g.wait()?;
                 let run = results[0].run;
                 debug_assert!(results.iter().all(|r| r.run == run));
                 let secs: f64 = results.iter().map(|r| r.sim.total_secs).sum();

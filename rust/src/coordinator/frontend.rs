@@ -1,0 +1,1070 @@
+//! Traffic-shaped admission front end for the [`JobServer`]: the
+//! unified [`Submission`] builder, awaitable [`JobFuture`]s, per-tenant
+//! quotas and weighted deficit-round-robin fairness, and the
+//! deadline-slack ordering the sharded dispatchers drain by.
+//!
+//! The serving runtime below the job boundary (per-job WQMs, cross-job
+//! stealing) already equalizes *work*; this module shapes *traffic*:
+//!
+//! * **One submission surface.** [`Submission::gemm`],
+//!   [`Submission::group`] and [`Submission::batched`] (or
+//!   `Submission::gemm(a, b).shared_b(more)`) replace the historical
+//!   seven-way `submit`/`submit_batch`/`submit_group`/
+//!   `submit_batched_gemm`/... sprawl. Every submission carries a
+//!   [`TenantId`], an optional deadline, and an optional pinned
+//!   [`RunConfig`]; it enters through `submit_async` (awaitable,
+//!   blocks on backpressure), `submit_blocking` (await inline) or
+//!   `try_submit` (sheds, hands the submission back).
+//! * **Per-tenant quotas.** [`TenantConfig`] bounds a tenant's
+//!   in-flight jobs and in-flight inline operand bytes; the internal
+//!   `QuotaLedger` charges at admission and releases exactly once per
+//!   job when its reply is delivered (or abandoned), via a
+//!   `TenantSlot` drop guard riding the reply channel.
+//! * **Weighted deficit round robin.** Each tenant owns a FIFO of
+//!   admitted submissions; dispatch serves the tenant ring with a
+//!   deficit counter recharged to the tenant's weight at the ring
+//!   head, so a tenant with weight `w` gets `w` submissions per round
+//!   while backlogged and an idle tenant's unused quantum never
+//!   accumulates — one heavy tenant cannot starve the rest.
+//! * **Deadline-slack ordering.** Within the tenant the round picked,
+//!   the submission with the least *slack* — time to deadline minus
+//!   the analytical model's predicted execution time — dispatches
+//!   first (earliest-deadline-first, cost-adjusted); submissions
+//!   without a deadline have infinite slack and fall back to FIFO
+//!   among themselves. Misses are counted in
+//!   `Metrics::deadline_misses` and surfaced by `stats()`.
+//!
+//! The queue (`FrontEnd<T>`) keeps the old admission contract intact:
+//! capacity is bounded in *jobs*, blocked pushers are admitted strictly
+//! in arrival order (no barging), an oversized submission is admitted
+//! once the queue is empty, and `try_push` never barges past blocked
+//! FIFO pushers.
+//!
+//! [`JobServer`]: super::JobServer
+
+use std::collections::{BTreeMap, VecDeque};
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Condvar, Mutex};
+use std::task::{Context, Poll};
+use std::time::{Duration, Instant};
+
+use crate::config::RunConfig;
+use crate::gemm::Matrix;
+
+use super::registry::{AOperand, BOperand};
+use super::server::JobTicket;
+use super::{GemmJob, JobResult};
+
+/// A client identity every submission carries. Tenants are cheap: the
+/// server tracks only those that submit or are explicitly configured
+/// (`JobServer::configure_tenant`); an unconfigured tenant runs with
+/// weight 1 and unlimited quotas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub u32);
+
+impl TenantId {
+    /// The tenant submissions run under when none is set.
+    pub const DEFAULT: TenantId = TenantId(0);
+}
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tenant#{}", self.0)
+    }
+}
+
+/// Per-tenant admission policy: DRR weight plus in-flight quotas.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantConfig {
+    /// Deficit-round-robin weight: submissions served per ring round
+    /// while the tenant is backlogged. Must be >= 1.
+    pub weight: u32,
+    /// Maximum jobs the tenant may have in flight (admitted but not yet
+    /// replied to). `None` = unlimited. A submission from a tenant with
+    /// *nothing* in flight is admitted even when it alone exceeds the
+    /// cap, so an oversized batch makes progress instead of deadlocking.
+    pub max_inflight_jobs: Option<usize>,
+    /// Maximum inline operand bytes in flight (registered operands are
+    /// server-resident and billed to the registry budget, not here).
+    /// Same idle-tenant oversize rule as `max_inflight_jobs`.
+    pub max_inflight_bytes: Option<usize>,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        Self { weight: 1, max_inflight_jobs: None, max_inflight_bytes: None }
+    }
+}
+
+/// What one [`Submission`] asks the server to run.
+#[derive(Debug)]
+pub enum SubmissionKind {
+    /// One GEMM: `a x b`.
+    Gemm { a: AOperand, b: BOperand },
+    /// Jobs admitted as one unit; the dispatcher coalesces the
+    /// sub-threshold members into batched super-jobs deterministically.
+    Group(Vec<GemmJob>),
+    /// `many_a[i] x b` with B packed at most once for the whole batch.
+    SharedB { b: BOperand, many_a: Vec<AOperand> },
+}
+
+/// The unified submission builder: what to run, as which tenant, by
+/// when. Construct with [`Submission::gemm`], [`Submission::group`] or
+/// [`Submission::batched`], refine with the chained setters, then hand
+/// to `JobServer::submit_async` / `submit_blocking` / `try_submit`.
+///
+/// ```ignore
+/// let fut = srv.submit_async(
+///     Submission::gemm(a, b)
+///         .tenant(TenantId(3))
+///         .deadline(Duration::from_millis(50)),
+/// )?;
+/// let results = fut.wait()?;
+/// ```
+#[derive(Debug)]
+pub struct Submission {
+    pub(crate) kind: SubmissionKind,
+    pub(crate) tenant: TenantId,
+    /// Relative deadline, resolved to an `Instant` at admission.
+    pub(crate) deadline: Option<Duration>,
+    /// Run-config pin applied to every job that has none of its own.
+    pub(crate) run: Option<RunConfig>,
+    /// Base job id (`JobResult::id`); shared-B members get `id + index`.
+    pub(crate) id: u64,
+}
+
+impl Submission {
+    /// One GEMM `a x b`; either side inline or registered.
+    pub fn gemm(a: impl Into<AOperand>, b: impl Into<BOperand>) -> Self {
+        Self::with_kind(SubmissionKind::Gemm { a: a.into(), b: b.into() })
+    }
+
+    /// Jobs admitted as one unit (the old `submit_batch`/`submit_group`
+    /// shape); each keeps its own id and optional run pin.
+    pub fn group(jobs: Vec<GemmJob>) -> Self {
+        Self::with_kind(SubmissionKind::Group(jobs))
+    }
+
+    /// A shared-B batch: `many_a[i] x b` with one packed B (the old
+    /// `submit_batched_gemm` shape). Also reachable as
+    /// `Submission::gemm(a, b).shared_b(more_as)`.
+    pub fn batched<B, A>(b: B, many_a: impl IntoIterator<Item = A>) -> Self
+    where
+        B: Into<BOperand>,
+        A: Into<AOperand>,
+    {
+        Self::with_kind(SubmissionKind::SharedB {
+            b: b.into(),
+            many_a: many_a.into_iter().map(Into::into).collect(),
+        })
+    }
+
+    fn with_kind(kind: SubmissionKind) -> Self {
+        Self { kind, tenant: TenantId::DEFAULT, deadline: None, run: None, id: 0 }
+    }
+
+    /// Submit as `tenant` (default [`TenantId::DEFAULT`]).
+    pub fn tenant(mut self, tenant: TenantId) -> Self {
+        self.tenant = tenant;
+        self
+    }
+
+    /// Ask for completion within `deadline` of admission. The
+    /// dispatcher orders eligible work by slack (deadline minus
+    /// predicted execution time); a miss is counted, never cancelled —
+    /// the job still runs to completion.
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Pin the run configuration for every job in the submission that
+    /// does not pin its own. Accepts a bare `RunConfig` or an
+    /// `Option<RunConfig>` (callers threading an optional pin through).
+    pub fn run(mut self, run: impl Into<Option<RunConfig>>) -> Self {
+        self.run = run.into();
+        self
+    }
+
+    /// Base id reported back in [`JobResult::id`].
+    pub fn id(mut self, id: u64) -> Self {
+        self.id = id;
+        self
+    }
+
+    /// Widen a single GEMM into a shared-B batch over the same B: the
+    /// original A becomes the first member, `more_a` the rest. On a
+    /// submission that is already a batch, appends to it; on a group,
+    /// this is a no-op (a group has no shared operand).
+    pub fn shared_b<A: Into<AOperand>>(mut self, more_a: impl IntoIterator<Item = A>) -> Self {
+        self.kind = match self.kind {
+            SubmissionKind::Gemm { a, b } => {
+                let mut many_a = vec![a];
+                many_a.extend(more_a.into_iter().map(Into::into));
+                SubmissionKind::SharedB { b, many_a }
+            }
+            SubmissionKind::SharedB { b, mut many_a } => {
+                many_a.extend(more_a.into_iter().map(Into::into));
+                SubmissionKind::SharedB { b, many_a }
+            }
+            other => other,
+        };
+        self
+    }
+
+    /// Jobs this submission admits (what admission capacity and
+    /// per-tenant job quotas are counted in).
+    pub fn jobs(&self) -> usize {
+        match &self.kind {
+            SubmissionKind::Gemm { .. } => 1,
+            SubmissionKind::Group(g) => g.len(),
+            SubmissionKind::SharedB { many_a, .. } => many_a.len(),
+        }
+    }
+
+    /// Inline operand bytes (what per-tenant byte quotas are counted
+    /// in; registered operands are billed to the registry budget).
+    pub fn inline_bytes(&self) -> usize {
+        fn m(x: Option<&Matrix>) -> usize {
+            x.map_or(0, |m| 4 * m.rows * m.cols)
+        }
+        match &self.kind {
+            SubmissionKind::Gemm { a, b } => m(a.as_inline()) + m(b.as_inline()),
+            SubmissionKind::Group(g) => {
+                g.iter().map(|j| m(j.a.as_inline()) + m(j.b.as_inline())).sum()
+            }
+            SubmissionKind::SharedB { b, many_a } => {
+                m(b.as_inline()) + many_a.iter().map(|a| m(a.as_inline())).sum::<usize>()
+            }
+        }
+    }
+
+    /// The payload back out — what a shed submission's owner uses to
+    /// recover operands for retry or spill.
+    pub fn into_kind(self) -> SubmissionKind {
+        self.kind
+    }
+}
+
+/// A lone job is a one-GEMM submission with its id and pin preserved.
+impl From<GemmJob> for Submission {
+    fn from(job: GemmJob) -> Self {
+        let GemmJob { id, a, b, run } = job;
+        let mut s = Submission::gemm(a, b).id(id);
+        s.run = run;
+        s
+    }
+}
+
+/// Why `try_submit` rejected; the shed variants hand the whole
+/// [`Submission`] back (operands intact) so the caller can retry,
+/// spill, or route elsewhere — the never-silently-drop contract.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Admission queue at capacity (backpressure).
+    Full(Submission),
+    /// The tenant's in-flight quota would be exceeded.
+    QuotaExceeded { submission: Submission, tenant: TenantId },
+    /// Server is shutting down.
+    Closed(Submission),
+    /// Malformed submission (e.g. an empty group); nothing to hand back
+    /// beyond the message.
+    Invalid(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full(_) => write!(f, "admission queue full; submission handed back"),
+            SubmitError::QuotaExceeded { tenant, .. } => {
+                write!(f, "{tenant} in-flight quota exceeded; submission handed back")
+            }
+            SubmitError::Closed(_) => write!(f, "server closed; submission handed back"),
+            SubmitError::Invalid(msg) => write!(f, "invalid submission: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Awaitable handle to one submission: resolves to its [`JobResult`]s
+/// in submission order. Poll it ([`JobFuture::poll`]), block on it
+/// ([`JobFuture::wait`]), bound the block ([`JobFuture::wait_timeout`]),
+/// or `.await` it — the [`Future`] impl self-wakes, so it works under
+/// any executor (including a trivial block-on) without a reactor.
+#[derive(Debug)]
+pub struct JobFuture {
+    slots: Vec<Slot>,
+}
+
+#[derive(Debug)]
+enum Slot {
+    Pending(JobTicket),
+    Ready(Box<anyhow::Result<JobResult>>),
+    Taken,
+}
+
+impl JobFuture {
+    pub(crate) fn new(tickets: Vec<JobTicket>) -> Self {
+        Self { slots: tickets.into_iter().map(Slot::Pending).collect() }
+    }
+
+    /// Jobs this future resolves to.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Non-blocking: `Some(results)` once every job has replied, `None`
+    /// while any is still in flight. Results already received are
+    /// buffered across calls, so polling is incremental. A future
+    /// yields its results once; after that it is spent.
+    pub fn poll(&mut self) -> Option<anyhow::Result<Vec<JobResult>>> {
+        for slot in &mut self.slots {
+            if let Slot::Pending(t) = slot {
+                match t.try_wait() {
+                    Some(r) => *slot = Slot::Ready(Box::new(r)),
+                    None => return None,
+                }
+            }
+        }
+        Some(self.take_ready())
+    }
+
+    /// Block until every job replies; results in submission order. All
+    /// replies are drained even when one fails (no in-flight work is
+    /// abandoned); the first failure is returned, tagged with its job.
+    pub fn wait(mut self) -> anyhow::Result<Vec<JobResult>> {
+        for slot in &mut self.slots {
+            if let Slot::Pending(t) = slot {
+                let id = t.id;
+                let r = std::mem::replace(slot, Slot::Taken);
+                let Slot::Pending(t) = r else { unreachable!() };
+                *slot =
+                    Slot::Ready(Box::new(t.wait().map_err(|e| e.context(format!("job {id} failed")))));
+            }
+        }
+        self.take_ready()
+    }
+
+    /// Like [`JobFuture::wait`] for a single-job submission.
+    pub fn wait_one(self) -> anyhow::Result<JobResult> {
+        anyhow::ensure!(self.slots.len() == 1, "wait_one on a {}-job future", self.slots.len());
+        let mut results = self.wait()?;
+        Ok(results.pop().expect("one result"))
+    }
+
+    /// Block for at most `timeout`: `Ok(Some(results))` when everything
+    /// replied in time, `Ok(None)` on timeout (replies received so far
+    /// stay buffered — call again, or `wait`, to finish), `Err` when a
+    /// job failed.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> anyhow::Result<Option<Vec<JobResult>>> {
+        let deadline = Instant::now() + timeout;
+        for slot in &mut self.slots {
+            if let Slot::Pending(t) = slot {
+                let left = deadline.saturating_duration_since(Instant::now());
+                match t.wait_timeout(left) {
+                    Some(r) => *slot = Slot::Ready(Box::new(r)),
+                    None => return Ok(None),
+                }
+            }
+        }
+        self.take_ready().map(Some)
+    }
+
+    /// Drain the buffered results (every slot must be `Ready`/`Taken`).
+    fn take_ready(&mut self) -> anyhow::Result<Vec<JobResult>> {
+        let mut results = Vec::with_capacity(self.slots.len());
+        let mut first_err: Option<anyhow::Error> = None;
+        for slot in &mut self.slots {
+            match std::mem::replace(slot, Slot::Taken) {
+                Slot::Ready(r) => match *r {
+                    Ok(r) => results.push(r),
+                    Err(e) => first_err.get_or_insert(e).ignore(),
+                },
+                Slot::Pending(_) => unreachable!("take_ready with a pending slot"),
+                Slot::Taken => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(results),
+        }
+    }
+
+    /// The underlying per-job tickets (all must still be pending —
+    /// i.e. the future was not polled); used by the deprecated
+    /// single-ticket shims.
+    pub fn into_tickets(self) -> Vec<JobTicket> {
+        self.slots
+            .into_iter()
+            .filter_map(|s| match s {
+                Slot::Pending(t) => Some(t),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// `get_or_insert(..)` returns `&mut E`; this makes the discard explicit
+/// without a clippy-baiting `let _ =`.
+trait Ignore {
+    fn ignore(&self) {}
+}
+impl<T> Ignore for T {}
+
+impl Future for JobFuture {
+    type Output = anyhow::Result<Vec<JobResult>>;
+
+    /// Self-waking poll: when still pending, the waker is rescheduled
+    /// immediately, so simple executors spin-poll to completion without
+    /// a reactor to register the mpsc replies with.
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        match self.get_mut().poll() {
+            Some(r) => Poll::Ready(r),
+            None => {
+                cx.waker().wake_by_ref();
+                Poll::Pending
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Quota ledger
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct TenantLedger {
+    cfg: TenantConfig,
+    inflight_jobs: usize,
+    inflight_bytes: usize,
+}
+
+/// Per-tenant in-flight accounting. Charged (all-or-nothing per
+/// submission) before the queue push; released one job at a time by the
+/// [`TenantSlot`] drop guard riding each job's reply — exactly once,
+/// whether the job completed, failed at planning, or was abandoned at
+/// shutdown.
+pub(crate) struct QuotaLedger {
+    st: Mutex<BTreeMap<TenantId, TenantLedger>>,
+    space: Condvar,
+    closed: Mutex<bool>,
+}
+
+impl QuotaLedger {
+    pub(crate) fn new() -> Self {
+        Self { st: Mutex::new(BTreeMap::new()), space: Condvar::new(), closed: Mutex::new(false) }
+    }
+
+    pub(crate) fn configure(&self, tenant: TenantId, cfg: TenantConfig) {
+        self.st.lock().unwrap().entry(tenant).or_default().cfg = cfg;
+        // A raised quota may unblock waiters.
+        self.space.notify_all();
+    }
+
+    /// The tenant's DRR weight (1 when unconfigured).
+    pub(crate) fn weight(&self, tenant: TenantId) -> u32 {
+        self.st.lock().unwrap().get(&tenant).map_or(1, |t| t.cfg.weight.max(1))
+    }
+
+    /// Charge `jobs`/`bytes` against the tenant's quota, all or
+    /// nothing. An idle tenant (nothing in flight) is always admitted —
+    /// the oversize rule that keeps a lone batch larger than the quota
+    /// from deadlocking.
+    pub(crate) fn try_charge(&self, tenant: TenantId, jobs: usize, bytes: usize) -> bool {
+        let mut st = self.st.lock().unwrap();
+        let t = st.entry(tenant).or_default();
+        let idle = t.inflight_jobs == 0 && t.inflight_bytes == 0;
+        let jobs_ok =
+            t.cfg.max_inflight_jobs.is_none_or(|cap| t.inflight_jobs + jobs <= cap);
+        let bytes_ok =
+            t.cfg.max_inflight_bytes.is_none_or(|cap| t.inflight_bytes + bytes <= cap);
+        if idle || (jobs_ok && bytes_ok) {
+            t.inflight_jobs += jobs;
+            t.inflight_bytes += bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Blocking [`QuotaLedger::try_charge`]: waits for in-flight work
+    /// to release quota; errors once the server closes.
+    pub(crate) fn charge_blocking(
+        &self,
+        tenant: TenantId,
+        jobs: usize,
+        bytes: usize,
+    ) -> anyhow::Result<()> {
+        loop {
+            if self.try_charge(tenant, jobs, bytes) {
+                return Ok(());
+            }
+            let closed = self.closed.lock().unwrap();
+            if *closed {
+                anyhow::bail!("server closed while waiting for {tenant} quota");
+            }
+            // Re-check under the closed lock: a release between the
+            // failed try and this wait would notify `space` first, so
+            // wait on `closed`'s mutex with a timeout-free condvar is
+            // unsafe — instead wait on `space` via the ledger mutex.
+            drop(closed);
+            let st = self.st.lock().unwrap();
+            let closed_now = *self.closed.lock().unwrap();
+            if closed_now {
+                anyhow::bail!("server closed while waiting for {tenant} quota");
+            }
+            let _unused = self.space.wait_timeout(st, Duration::from_millis(50)).unwrap();
+        }
+    }
+
+    fn release(&self, tenant: TenantId, jobs: usize, bytes: usize) {
+        let mut st = self.st.lock().unwrap();
+        if let Some(t) = st.get_mut(&tenant) {
+            t.inflight_jobs = t.inflight_jobs.saturating_sub(jobs);
+            t.inflight_bytes = t.inflight_bytes.saturating_sub(bytes);
+        }
+        drop(st);
+        self.space.notify_all();
+    }
+
+    pub(crate) fn close(&self) {
+        *self.closed.lock().unwrap() = true;
+        self.space.notify_all();
+    }
+
+    /// `(inflight_jobs, inflight_bytes)` for one tenant.
+    #[cfg(test)]
+    fn inflight(&self, tenant: TenantId) -> (usize, usize) {
+        self.st
+            .lock()
+            .unwrap()
+            .get(&tenant)
+            .map_or((0, 0), |t| (t.inflight_jobs, t.inflight_bytes))
+    }
+}
+
+/// Drop guard releasing one job's share of its tenant's quota. Lives in
+/// the job's reply wrapper, so delivery, planner rejection, and
+/// shutdown abandonment all release exactly once.
+pub(crate) struct TenantSlot {
+    ledger: Arc<QuotaLedger>,
+    tenant: TenantId,
+    bytes: usize,
+}
+
+impl TenantSlot {
+    pub(crate) fn new(ledger: Arc<QuotaLedger>, tenant: TenantId, bytes: usize) -> Self {
+        Self { ledger, tenant, bytes }
+    }
+}
+
+impl std::fmt::Debug for TenantSlot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TenantSlot({}, {}B)", self.tenant, self.bytes)
+    }
+}
+
+impl Drop for TenantSlot {
+    fn drop(&mut self) {
+        self.ledger.release(self.tenant, 1, self.bytes);
+    }
+}
+
+// ---------------------------------------------------------------------
+// The DRR + slack admission queue
+// ---------------------------------------------------------------------
+
+/// Admission metadata the queue orders by.
+pub(crate) struct AdmitMeta {
+    pub(crate) tenant: TenantId,
+    /// DRR weight snapshot (read from the ledger at push; a weight
+    /// change applies from the tenant's next submission).
+    pub(crate) weight: u32,
+    /// Jobs (what capacity is counted in). Always >= 1.
+    pub(crate) cost: usize,
+    /// Absolute completion deadline, if any.
+    pub(crate) deadline: Option<Instant>,
+    /// Modeled execution time ([`crate::analytical::predict`]) used for
+    /// slack; 0 when no estimate was available.
+    pub(crate) predicted_secs: f64,
+}
+
+struct QueuedItem<T> {
+    item: T,
+    cost: usize,
+    seq: u64,
+    deadline: Option<Instant>,
+    predicted_secs: f64,
+}
+
+impl<T> QueuedItem<T> {
+    /// Slack = time-to-deadline minus predicted execution time; +inf
+    /// without a deadline (deadline traffic always outranks it).
+    fn slack(&self, now: Instant) -> f64 {
+        match self.deadline {
+            Some(d) => {
+                let to_deadline = if d >= now {
+                    d.duration_since(now).as_secs_f64()
+                } else {
+                    -now.duration_since(d).as_secs_f64()
+                };
+                to_deadline - self.predicted_secs
+            }
+            None => f64::INFINITY,
+        }
+    }
+}
+
+struct TenantQueue<T> {
+    weight: u32,
+    deficit: u32,
+    items: VecDeque<QueuedItem<T>>,
+}
+
+struct FrontState<T> {
+    tenants: BTreeMap<TenantId, TenantQueue<T>>,
+    /// Backlogged tenants in round order. Invariant: a tenant is in the
+    /// ring iff its queue is non-empty.
+    ring: VecDeque<TenantId>,
+    /// Jobs (not submissions) currently queued — what capacity bounds.
+    queued_jobs: usize,
+    closed: bool,
+    seq: u64,
+    /// FIFO tickets for blocking pushers: each `push_blocking` takes
+    /// `next_ticket` and may only admit when it becomes `serving`, so a
+    /// large submission waiting for space cannot be starved by a stream
+    /// of later submitters barging into the freed capacity.
+    next_ticket: u64,
+    serving: u64,
+}
+
+pub(crate) enum TryPushError<T> {
+    Full(T),
+    Closed(T),
+}
+
+/// Bounded multi-tenant admission queue: weighted deficit round robin
+/// across tenants, deadline-slack (then FIFO) within a tenant, blocking
+/// and load-shedding entry points, shared by N dispatcher shards.
+pub(crate) struct FrontEnd<T> {
+    capacity: usize,
+    st: Mutex<FrontState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl<T> FrontEnd<T> {
+    pub(crate) fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            st: Mutex::new(FrontState {
+                tenants: BTreeMap::new(),
+                ring: VecDeque::new(),
+                queued_jobs: 0,
+                closed: false,
+                seq: 0,
+                next_ticket: 0,
+                serving: 0,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    fn enqueue_locked(st: &mut FrontState<T>, meta: &AdmitMeta, item: T) {
+        let seq = st.seq;
+        st.seq += 1;
+        let tq = st.tenants.entry(meta.tenant).or_insert_with(|| TenantQueue {
+            weight: meta.weight.max(1),
+            deficit: 0,
+            items: VecDeque::new(),
+        });
+        tq.weight = meta.weight.max(1);
+        let was_empty = tq.items.is_empty();
+        tq.items.push_back(QueuedItem {
+            item,
+            cost: meta.cost,
+            seq,
+            deadline: meta.deadline,
+            predicted_secs: meta.predicted_secs,
+        });
+        if was_empty {
+            st.ring.push_back(meta.tenant);
+        }
+        st.queued_jobs += meta.cost;
+    }
+
+    /// Block until the submission fits (backpressure), admitting
+    /// blocked pushers strictly in arrival (ticket) order. A submission
+    /// larger than the whole capacity is admitted once the queue is
+    /// empty, so oversized batches make progress instead of
+    /// deadlocking.
+    pub(crate) fn push_blocking(&self, meta: AdmitMeta, item: T) -> Result<(), T> {
+        let n = meta.cost;
+        let mut st = self.st.lock().unwrap();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        loop {
+            if st.closed {
+                // Every waiter sees `closed` and exits; `serving` need
+                // not advance past abandoned tickets.
+                return Err(item);
+            }
+            if st.serving == ticket && (st.queued_jobs + n <= self.capacity || st.queued_jobs == 0)
+            {
+                st.serving += 1;
+                Self::enqueue_locked(&mut st, &meta, item);
+                self.not_empty.notify_one();
+                // Hand the turn to the next ticket holder, if any.
+                self.not_full.notify_all();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    pub(crate) fn try_push(&self, meta: AdmitMeta, item: T) -> Result<(), TryPushError<T>> {
+        let n = meta.cost;
+        let mut st = self.st.lock().unwrap();
+        if st.closed {
+            return Err(TryPushError::Closed(item));
+        }
+        // Never barge past blocked FIFO pushers (serving < next_ticket
+        // means someone is waiting for space).
+        if st.serving != st.next_ticket
+            || (st.queued_jobs + n > self.capacity && st.queued_jobs > 0)
+        {
+            return Err(TryPushError::Full(item));
+        }
+        st.next_ticket += 1;
+        st.serving += 1;
+        Self::enqueue_locked(&mut st, &meta, item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// One DRR step: pick the ring-head tenant (recharging its deficit
+    /// to its weight when spent), then that tenant's least-slack
+    /// submission. Maintains the ring invariant and rotates the head
+    /// out when its deficit is exhausted.
+    fn pop_locked(st: &mut FrontState<T>) -> Option<T> {
+        let now = Instant::now();
+        loop {
+            let tenant = *st.ring.front()?;
+            let tq = st.tenants.get_mut(&tenant).expect("ring tenant has a queue");
+            if tq.items.is_empty() {
+                // Belt and braces; the invariant should prevent this.
+                st.ring.pop_front();
+                tq.deficit = 0;
+                continue;
+            }
+            if tq.deficit == 0 {
+                tq.deficit = tq.weight.max(1);
+            }
+            let mut best = 0usize;
+            let mut best_key = (tq.items[0].slack(now), tq.items[0].seq);
+            for (i, q) in tq.items.iter().enumerate().skip(1) {
+                let key = (q.slack(now), q.seq);
+                if key.0 < best_key.0 || (key.0 == best_key.0 && key.1 < best_key.1) {
+                    best = i;
+                    best_key = key;
+                }
+            }
+            let q = tq.items.remove(best).expect("best index in range");
+            tq.deficit -= 1;
+            st.queued_jobs -= q.cost;
+            if tq.items.is_empty() {
+                // Leaving the ring resets the deficit: an idle tenant
+                // does not bank unused quantum.
+                tq.deficit = 0;
+                st.ring.pop_front();
+            } else if tq.deficit == 0 {
+                let t = st.ring.pop_front().expect("ring head");
+                st.ring.push_back(t);
+            }
+            return Some(q.item);
+        }
+    }
+
+    /// Dispatcher side: next submission, or `None` once closed *and*
+    /// drained. Safe to call from several shards concurrently.
+    pub(crate) fn pop_blocking(&self) -> Option<T> {
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if let Some(item) = Self::pop_locked(&mut st) {
+                self.not_full.notify_all();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    pub(crate) fn try_pop(&self) -> Option<T> {
+        let mut st = self.st.lock().unwrap();
+        let item = Self::pop_locked(&mut st)?;
+        self.not_full.notify_all();
+        Some(item)
+    }
+
+    pub(crate) fn close(&self) {
+        let mut st = self.st.lock().unwrap();
+        st.closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Jobs currently queued.
+    pub(crate) fn len(&self) -> usize {
+        self.st.lock().unwrap().queued_jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(tenant: u32, weight: u32) -> AdmitMeta {
+        AdmitMeta {
+            tenant: TenantId(tenant),
+            weight,
+            cost: 1,
+            deadline: None,
+            predicted_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn drr_serves_weights_exactly_while_backlogged() {
+        let q: FrontEnd<&'static str> = FrontEnd::new(64);
+        for _ in 0..8 {
+            q.try_push(meta(1, 3), "a").map_err(|_| ()).unwrap();
+        }
+        for _ in 0..8 {
+            q.try_push(meta(2, 1), "b").map_err(|_| ()).unwrap();
+        }
+        let order: String = std::iter::from_fn(|| q.try_pop()).collect();
+        // Weight 3:1 — three a's per b while both are backlogged; the
+        // a-queue empties mid-quantum and b drains the tail alone.
+        assert_eq!(order, "aaabaaabaabbbbbb");
+    }
+
+    #[test]
+    fn drr_idle_tenant_banks_no_quantum() {
+        let q: FrontEnd<&'static str> = FrontEnd::new(64);
+        // Tenant 1 (weight 3) drains completely, THEN tenant 2 arrives:
+        // tenant 1's unused quantum must not defer tenant 2.
+        q.try_push(meta(1, 3), "a").map_err(|_| ()).unwrap();
+        assert_eq!(q.try_pop(), Some("a"));
+        q.try_push(meta(2, 1), "b").map_err(|_| ()).unwrap();
+        q.try_push(meta(1, 3), "a").map_err(|_| ()).unwrap();
+        // Tenant 2 re-entered the ring first; it serves before tenant 1
+        // despite the lower weight.
+        assert_eq!(q.try_pop(), Some("b"));
+        assert_eq!(q.try_pop(), Some("a"));
+    }
+
+    #[test]
+    fn within_tenant_least_slack_first_then_fifo() {
+        let q: FrontEnd<u32> = FrontEnd::new(64);
+        let now = Instant::now();
+        let push = |deadline: Option<Duration>, predicted: f64, tag: u32| {
+            q.try_push(
+                AdmitMeta {
+                    tenant: TenantId(1),
+                    weight: 1,
+                    cost: 1,
+                    deadline: deadline.map(|d| now + d),
+                    predicted_secs: predicted,
+                },
+                tag,
+            )
+            .map_err(|_| ())
+            .unwrap();
+        };
+        push(None, 0.0, 10); // no deadline: infinite slack, FIFO tail
+        push(Some(Duration::from_secs(100)), 0.0, 11); // slack ~100
+        push(Some(Duration::from_secs(100)), 95.0, 12); // slack ~5: first
+        push(None, 0.0, 13); // infinite slack, after tag 10 (FIFO)
+        assert_eq!(
+            std::iter::from_fn(|| q.try_pop()).collect::<Vec<_>>(),
+            vec![12, 11, 10, 13]
+        );
+    }
+
+    #[test]
+    fn capacity_counts_jobs_and_oversize_admits_when_empty() {
+        let q: FrontEnd<u32> = FrontEnd::new(2);
+        let big = AdmitMeta { cost: 5, ..meta(1, 1) };
+        // Oversized but empty: admitted.
+        q.try_push(big, 1).map_err(|_| ()).unwrap();
+        assert_eq!(q.len(), 5);
+        // Non-empty and over capacity: shed.
+        assert!(matches!(q.try_push(meta(1, 1), 2), Err(TryPushError::Full(2))));
+        assert_eq!(q.try_pop(), Some(1));
+        q.try_push(meta(1, 1), 3).map_err(|_| ()).unwrap();
+        q.try_push(meta(1, 1), 4).map_err(|_| ()).unwrap();
+        assert!(matches!(q.try_push(meta(1, 1), 5), Err(TryPushError::Full(5))));
+    }
+
+    #[test]
+    fn close_rejects_then_drains() {
+        let q: FrontEnd<u32> = FrontEnd::new(4);
+        q.try_push(meta(1, 1), 1).map_err(|_| ()).unwrap();
+        q.close();
+        assert!(matches!(q.try_push(meta(1, 1), 2), Err(TryPushError::Closed(2))));
+        assert_eq!(q.pop_blocking(), Some(1));
+        assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn blocked_pusher_not_barged_past() {
+        let q: Arc<FrontEnd<u32>> = Arc::new(FrontEnd::new(1));
+        q.try_push(meta(1, 1), 1).map_err(|_| ()).unwrap();
+        let q2 = q.clone();
+        let blocked = std::thread::spawn(move || q2.push_blocking(meta(1, 1), 2));
+        // Give the pusher time to take its ticket and block.
+        std::thread::sleep(Duration::from_millis(30));
+        // A try_push may not steal the capacity the blocked pusher is
+        // waiting for.
+        assert!(matches!(q.try_push(meta(1, 1), 3), Err(TryPushError::Full(3))));
+        assert_eq!(q.try_pop(), Some(1));
+        blocked.join().unwrap().map_err(|_| ()).unwrap();
+        assert_eq!(q.try_pop(), Some(2));
+    }
+
+    #[test]
+    fn quota_ledger_charges_and_releases() {
+        let ledger = Arc::new(QuotaLedger::new());
+        let t = TenantId(7);
+        ledger.configure(
+            t,
+            TenantConfig { weight: 1, max_inflight_jobs: Some(2), max_inflight_bytes: None },
+        );
+        assert!(ledger.try_charge(t, 1, 10));
+        assert!(ledger.try_charge(t, 1, 10));
+        assert!(!ledger.try_charge(t, 1, 10), "third job over the cap");
+        assert_eq!(ledger.inflight(t), (2, 20));
+        drop(TenantSlot::new(ledger.clone(), t, 10));
+        assert_eq!(ledger.inflight(t), (1, 10));
+        assert!(ledger.try_charge(t, 1, 10));
+    }
+
+    #[test]
+    fn quota_idle_tenant_oversize_admitted() {
+        let ledger = QuotaLedger::new();
+        let t = TenantId(8);
+        ledger.configure(
+            t,
+            TenantConfig {
+                weight: 1,
+                max_inflight_jobs: Some(2),
+                max_inflight_bytes: Some(100),
+            },
+        );
+        // Nothing in flight: a 5-job, 1000-byte batch is admitted.
+        assert!(ledger.try_charge(t, 5, 1000));
+        // But nothing more until it drains.
+        assert!(!ledger.try_charge(t, 1, 0));
+    }
+
+    #[test]
+    fn quota_byte_cap_enforced() {
+        let ledger = QuotaLedger::new();
+        let t = TenantId(9);
+        ledger.configure(
+            t,
+            TenantConfig { weight: 1, max_inflight_jobs: None, max_inflight_bytes: Some(64) },
+        );
+        assert!(ledger.try_charge(t, 1, 40));
+        assert!(!ledger.try_charge(t, 1, 40), "over the byte cap");
+        assert!(ledger.try_charge(t, 1, 24));
+    }
+
+    #[test]
+    fn submission_builder_counts_and_conversions() {
+        let a = Matrix::random(4, 3, 1);
+        let b = Matrix::random(3, 5, 2);
+        let s = Submission::gemm(a.clone(), b.clone());
+        assert_eq!(s.jobs(), 1);
+        assert_eq!(s.inline_bytes(), 4 * (4 * 3 + 3 * 5));
+        // gemm(..).shared_b(more) widens into a batch with the original
+        // A as member 0.
+        let s = Submission::gemm(a.clone(), b.clone())
+            .shared_b(vec![Matrix::random(2, 3, 3)])
+            .tenant(TenantId(4))
+            .deadline(Duration::from_millis(5))
+            .id(40);
+        assert_eq!(s.jobs(), 2);
+        assert_eq!(s.tenant, TenantId(4));
+        assert!(s.deadline.is_some());
+        match s.into_kind() {
+            SubmissionKind::SharedB { many_a, .. } => {
+                assert_eq!(many_a[0].as_inline().map(|m| m.rows), Some(4));
+                assert_eq!(many_a[1].as_inline().map(|m| m.rows), Some(2));
+            }
+            _ => panic!("expected a shared-B batch"),
+        }
+        let job = GemmJob { id: 9, a: a.into(), b: b.into(), run: None };
+        let s: Submission = job.into();
+        assert_eq!((s.jobs(), s.id), (1, 9));
+    }
+
+    #[test]
+    fn job_future_poll_wait_and_timeout() {
+        use std::sync::mpsc;
+        let mk = |id: u64| {
+            let (tx, rx) = mpsc::channel();
+            (tx, JobTicket::new(id, rx))
+        };
+        let (tx0, t0) = mk(0);
+        let (tx1, t1) = mk(1);
+        let mut fut = JobFuture::new(vec![t0, t1]);
+        assert_eq!(fut.len(), 2);
+        assert!(fut.poll().is_none(), "nothing replied yet");
+        let result = |id: u64| JobResult {
+            id,
+            c: Matrix::zeros(1, 1),
+            run: RunConfig::square(1, 16),
+            sim: crate::accelerator::SimReport {
+                run: RunConfig::square(1, 16),
+                m: 1,
+                k: 1,
+                n: 1,
+                total_secs: 0.0,
+                gflops: 0.0,
+                arrays: Vec::new(),
+                total_tasks: 0,
+                total_steals: 0,
+                memory_bound_frac: 0.0,
+                trace: Vec::new(),
+            },
+            host_latency_secs: 0.0,
+            batched: false,
+        };
+        tx0.send(Ok(result(0))).unwrap();
+        assert!(fut.poll().is_none(), "one of two replied");
+        assert_eq!(
+            fut.wait_timeout(Duration::from_millis(10)).unwrap(),
+            None,
+            "job 1 still pending"
+        );
+        tx1.send(Ok(result(1))).unwrap();
+        let results = fut.wait_timeout(Duration::from_secs(5)).unwrap().unwrap();
+        assert_eq!(results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+
+        // wait() surfaces a dropped server as an error, tagged by job.
+        let (_tx2, t2) = mk(2);
+        drop(_tx2);
+        let err = JobFuture::new(vec![t2]).wait().unwrap_err();
+        assert!(format!("{err:#}").contains("job 2"), "got: {err:#}");
+    }
+}

@@ -6,9 +6,11 @@
 //! percentiles (p50/p95/p99) come from the true distribution, not from
 //! a mean — tail latency is the serving metric that matters.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use super::frontend::TenantId;
 use crate::util::rng::Rng;
 
 /// Latency samples kept for percentile queries. Exact up to this many
@@ -41,10 +43,10 @@ pub struct Metrics {
     b_panel_packs: AtomicU64,
     /// Sub-jobs served from an *already-packed* shared operand instead
     /// of packing their own — each increment is one whole-operand pack
-    /// avoided (the sharing win `submit_batched_gemm` exists for).
+    /// avoided (the sharing win `Submission::batched` exists for).
     panels_shared: AtomicU64,
     /// Shared-B batch groups dispatched (one per
-    /// `submit_batched_gemm` call that reached activation).
+    /// `Submission::batched` call that reached activation).
     shared_b_groups: AtomicU64,
     /// Operand-registry resolutions served from an already-cached pack
     /// — each hit is one whole-operand pack avoided *across* calls,
@@ -77,7 +79,29 @@ pub struct Metrics {
     /// Registry unregister calls that failed (dead or foreign handle) —
     /// nonzero means a handle leak or a double-free somewhere upstream.
     unregister_failures: AtomicU64,
+    /// Completed jobs that carried a deadline.
+    deadline_jobs: AtomicU64,
+    /// Deadline jobs that completed *after* their deadline. Deadlines
+    /// shape dispatch order; a miss is a served-late job, never a
+    /// dropped one — which is why this sits next to p99 in `stats()`.
+    deadline_misses: AtomicU64,
+    /// Per-tenant served/deadline/miss counts, keyed by `TenantId`.
+    tenants: Mutex<BTreeMap<TenantId, TenantCounters>>,
     latencies: Mutex<LatencyAgg>,
+}
+
+/// Per-tenant serving counters, surfaced through
+/// [`crate::coordinator::ServerStats::tenants`] — the observability half
+/// of the fairness story: weights shape *dispatch order*, these prove
+/// who actually got served.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantCounters {
+    /// Jobs completed successfully for this tenant.
+    pub jobs: u64,
+    /// The subset of `jobs` that carried a deadline.
+    pub deadline_jobs: u64,
+    /// The subset of `deadline_jobs` that finished late.
+    pub deadline_misses: u64,
 }
 
 #[derive(Debug)]
@@ -207,6 +231,28 @@ impl Metrics {
         self.jobs_failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a completed deadline-carrying job; `missed` when it
+    /// finished past its deadline.
+    pub fn deadline_job_done(&self, missed: bool) {
+        self.deadline_jobs.fetch_add(1, Ordering::Relaxed);
+        if missed {
+            self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a completed job against its tenant's counters.
+    pub fn tenant_job_done(&self, tenant: TenantId, has_deadline: bool, missed: bool) {
+        let mut t = self.tenants.lock().unwrap();
+        let c = t.entry(tenant).or_default();
+        c.jobs += 1;
+        if has_deadline {
+            c.deadline_jobs += 1;
+        }
+        if missed {
+            c.deadline_misses += 1;
+        }
+    }
+
     pub fn jobs(&self) -> u64 {
         self.jobs.load(Ordering::Relaxed)
     }
@@ -291,6 +337,19 @@ impl Metrics {
         self.unregister_failures.load(Ordering::Relaxed)
     }
 
+    pub fn deadline_jobs(&self) -> u64 {
+        self.deadline_jobs.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_misses(&self) -> u64 {
+        self.deadline_misses.load(Ordering::Relaxed)
+    }
+
+    /// Per-tenant counter snapshot, ordered by `TenantId`.
+    pub fn tenant_counters(&self) -> Vec<(TenantId, TenantCounters)> {
+        self.tenants.lock().unwrap().iter().map(|(&t, &c)| (t, c)).collect()
+    }
+
     /// (mean, max) host latency in seconds.
     pub fn host_latency(&self) -> (f64, f64) {
         let l = self.latencies.lock().unwrap();
@@ -346,6 +405,7 @@ impl Metrics {
              panel_copies={} packs(a/b)={}/{} panels_shared={} \
              registry(hit/miss/evict)={}/{}/{} \
              a_panel(hit/miss/evict)={}/{}/{} plan_residency_hits={} \
+             deadline(miss/ddl)={}/{} \
              host_lat(mean/p95/max)={:.3}s/{:.3}s/{:.3}s sim(mean)={:.6}s",
             self.jobs(),
             self.jobs_failed(),
@@ -364,6 +424,8 @@ impl Metrics {
             self.registry_a_misses(),
             self.registry_a_evictions(),
             self.plan_residency_hits(),
+            self.deadline_misses(),
+            self.deadline_jobs(),
             mean,
             self.host_latency_percentile(0.95),
             max,
@@ -485,5 +547,28 @@ mod tests {
         assert!(m.summary().contains("cross-job=0"));
         assert!(m.summary().contains("a_panel(hit/miss/evict)=0/0/0"));
         assert!(m.summary().contains("plan_residency_hits=0"));
+        assert!(m.summary().contains("deadline(miss/ddl)=0/0"));
+    }
+
+    #[test]
+    fn deadline_and_tenant_counters() {
+        let m = Metrics::default();
+        m.deadline_job_done(false);
+        m.deadline_job_done(true);
+        assert_eq!((m.deadline_jobs(), m.deadline_misses()), (2, 1));
+        let (a, b) = (TenantId(1), TenantId(2));
+        m.tenant_job_done(a, true, false);
+        m.tenant_job_done(a, true, true);
+        m.tenant_job_done(b, false, false);
+        let rows = m.tenant_counters();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0],
+            (a, TenantCounters { jobs: 2, deadline_jobs: 2, deadline_misses: 1 })
+        );
+        assert_eq!(
+            rows[1],
+            (b, TenantCounters { jobs: 1, deadline_jobs: 0, deadline_misses: 0 })
+        );
     }
 }

@@ -12,7 +12,7 @@
 //!   [`crate::gemm::PackedPanels`]; A panels transposed, the MAC's
 //!   layout fix) instead of once per task — and at most once per
 //!   *batch*: a shared-B workload
-//!   ([`server::JobServer::submit_batched_gemm`]) packs B once and
+//!   ([`frontend::Submission::batched`]) packs B once and
 //!   shares the `Arc<PackedB>` across every sub-job — and at most once
 //!   per *process* for operands registered in the server's
 //!   [`registry::OperandRegistry`] ([`server::JobServer::register_b`]
@@ -46,24 +46,35 @@
 //!   and joins them before returning (the shape of the paper's single
 //!   measured run). Simple, deterministic, good for tests and the CLI.
 //! * [`server::JobServer`] — the production shape: a persistent worker
-//!   pool fed by a bounded admission queue, per-job `AtomicWqm`s in an
-//!   epoch-tagged job table ([`crate::wqm::JobRegistry`]), **cross-job**
-//!   work stealing so small requests can't idle the pool behind a large
-//!   one, and batching of sub-threshold jobs into shared super-jobs.
-//!   Use this when jobs arrive as traffic rather than as one call.
+//!   pool fed by a traffic-shaped admission front end
+//!   ([`frontend`]: one typed [`Submission`] builder,
+//!   awaitable [`JobFuture`]s, per-tenant quotas + weighted
+//!   deficit-round-robin fairness, deadline-slack ordering, N
+//!   dispatcher shards), per-job `AtomicWqm`s in an epoch-tagged job
+//!   table ([`crate::wqm::JobRegistry`]), **cross-job** work stealing
+//!   so small requests can't idle the pool behind a large one, and
+//!   batching of sub-threshold jobs into shared super-jobs. Use this
+//!   when jobs arrive as traffic rather than as one call.
 //!
 //! Both report into the same [`Metrics`] shape; the server additionally
 //! exposes throughput and latency percentiles via
 //! [`server::JobServer::stats`].
 
 pub mod engine;
+pub mod frontend;
 pub mod metrics;
 pub mod registry;
 pub mod server;
 
 pub use engine::NumericsEngine;
-pub use metrics::Metrics;
-pub use registry::{ActivationHandle, AOperand, BOperand, OperandRegistry, WeightHandle};
+pub use frontend::{
+    JobFuture, SubmitError, Submission, SubmissionKind, TenantConfig, TenantId,
+};
+pub use metrics::{Metrics, TenantCounters};
+pub use registry::{
+    ActivationHandle, AOperand, BOperand, Operand, OperandRegistry, TenantResidency,
+    WeightHandle,
+};
 pub use server::{
     JobGroup, JobServer, JobTicket, ServerConfig, ServerStats, TrySubmitBatchedError,
     TrySubmitError,

@@ -2,7 +2,7 @@
 //! never repack it across calls — on **either** side of the GEMM.
 //!
 //! PR 4's shared-B batches made a packed B shareable *within* one
-//! [`super::JobServer::submit_batched_gemm`] call; successive batches,
+//! [`super::Submission::batched`] call; successive batches,
 //! epochs, and layers that reuse the same weight still repacked it per
 //! call. Inference servers solve this with an explicit model-load step
 //! — weights are stationary state, activations are traffic — and the
@@ -48,6 +48,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::gemm::{Matrix, PackedA, PackedB};
 
+use super::frontend::TenantId;
 use super::metrics::Metrics;
 
 /// Process-unique registry ids, so a handle minted by one server can
@@ -103,121 +104,79 @@ impl std::fmt::Display for ActivationHandle {
     }
 }
 
-/// The B side of a submission: a one-shot inline matrix (packed per
-/// call, exactly the pre-registry behavior) or a registered weight
-/// resolved from the server's [`OperandRegistry`].
+/// One side of a submission, generic over its handle type: a one-shot
+/// inline matrix (packed per call, exactly the pre-registry behavior)
+/// or a registered operand resolved from the server's
+/// [`OperandRegistry`]. The two sides are the instantiations
+/// [`BOperand`] (`H = WeightHandle`, pack cached per `(handle, S_j)`)
+/// and [`AOperand`] (`H = ActivationHandle`, cached per
+/// `(handle, S_i)`) — one conversion path, one accessor surface,
+/// no per-side duplication.
 #[derive(Debug, Clone)]
-pub enum BOperand {
+pub enum Operand<H> {
     /// Caller-owned operand; packed once for this call.
     Inline(Matrix),
-    /// Server-resident weight; packed at most once per `(handle, S_j)`
-    /// for the whole process.
-    Registered(WeightHandle),
+    /// Server-resident operand; packed at most once per
+    /// `(handle, block size)` for the whole process.
+    Registered(H),
 }
 
-impl BOperand {
+/// The B side of a submission: inline, or a registered weight.
+pub type BOperand = Operand<WeightHandle>;
+
+/// The A side of a submission: inline, or a registered activation.
+pub type AOperand = Operand<ActivationHandle>;
+
+impl<H: Copy> Operand<H> {
     /// `(rows, cols)` when the operand is inline; `None` for a handle
     /// (its dims live in the server's registry).
     pub fn inline_dims(&self) -> Option<(usize, usize)> {
         match self {
-            BOperand::Inline(m) => Some((m.rows, m.cols)),
-            BOperand::Registered(_) => None,
+            Operand::Inline(m) => Some((m.rows, m.cols)),
+            Operand::Registered(_) => None,
         }
     }
 
     /// Borrow the inline matrix, if any.
     pub fn as_inline(&self) -> Option<&Matrix> {
         match self {
-            BOperand::Inline(m) => Some(m),
-            BOperand::Registered(_) => None,
+            Operand::Inline(m) => Some(m),
+            Operand::Registered(_) => None,
         }
     }
 
     /// Take the inline matrix back out, if any.
     pub fn into_inline(self) -> Option<Matrix> {
         match self {
-            BOperand::Inline(m) => Some(m),
-            BOperand::Registered(_) => None,
+            Operand::Inline(m) => Some(m),
+            Operand::Registered(_) => None,
         }
     }
 
     /// The registered handle, if any.
-    pub fn handle(&self) -> Option<WeightHandle> {
+    pub fn handle(&self) -> Option<H> {
         match self {
-            BOperand::Inline(_) => None,
-            BOperand::Registered(h) => Some(*h),
+            Operand::Inline(_) => None,
+            Operand::Registered(h) => Some(*h),
         }
     }
 }
 
-impl From<Matrix> for BOperand {
+impl<H> From<Matrix> for Operand<H> {
     fn from(m: Matrix) -> Self {
-        BOperand::Inline(m)
+        Operand::Inline(m)
     }
 }
 
 impl From<WeightHandle> for BOperand {
     fn from(h: WeightHandle) -> Self {
-        BOperand::Registered(h)
-    }
-}
-
-/// The A side of a submission, mirroring [`BOperand`]: a one-shot
-/// inline matrix or a registered activation resolved from the server's
-/// [`OperandRegistry`].
-#[derive(Debug, Clone)]
-pub enum AOperand {
-    /// Caller-owned operand; packed once for this call.
-    Inline(Matrix),
-    /// Server-resident activation; packed at most once per
-    /// `(handle, S_i)` for the whole process.
-    Registered(ActivationHandle),
-}
-
-impl AOperand {
-    /// `(rows, cols)` when the operand is inline; `None` for a handle
-    /// (its dims live in the server's registry).
-    pub fn inline_dims(&self) -> Option<(usize, usize)> {
-        match self {
-            AOperand::Inline(m) => Some((m.rows, m.cols)),
-            AOperand::Registered(_) => None,
-        }
-    }
-
-    /// Borrow the inline matrix, if any.
-    pub fn as_inline(&self) -> Option<&Matrix> {
-        match self {
-            AOperand::Inline(m) => Some(m),
-            AOperand::Registered(_) => None,
-        }
-    }
-
-    /// Take the inline matrix back out, if any.
-    pub fn into_inline(self) -> Option<Matrix> {
-        match self {
-            AOperand::Inline(m) => Some(m),
-            AOperand::Registered(_) => None,
-        }
-    }
-
-    /// The registered handle, if any.
-    pub fn handle(&self) -> Option<ActivationHandle> {
-        match self {
-            AOperand::Inline(_) => None,
-            AOperand::Registered(h) => Some(*h),
-        }
-    }
-}
-
-impl From<Matrix> for AOperand {
-    fn from(m: Matrix) -> Self {
-        AOperand::Inline(m)
+        Operand::Registered(h)
     }
 }
 
 impl From<ActivationHandle> for AOperand {
     fn from(h: ActivationHandle) -> Self {
-        AOperand::Registered(h)
+        Operand::Registered(h)
     }
 }
 
@@ -254,11 +213,15 @@ struct PackSlot {
     stamp: u64,
 }
 
-/// One registered operand: the retained matrix, its side, and its
-/// per-block-size pack variants (`sj` keys for B entries, `si` for A).
+/// One registered operand: the retained matrix, its side, the tenant
+/// that registered it, and its per-block-size pack variants (`sj` keys
+/// for B entries, `si` for A).
 struct Entry {
     matrix: Arc<Matrix>,
     side: Side,
+    /// The tenant this operand is billed to ([`TenantId::DEFAULT`] for
+    /// the tenant-unaware `register_a`/`register_b` paths).
+    tenant: TenantId,
     packs: HashMap<usize, PackSlot>,
 }
 
@@ -275,6 +238,18 @@ struct State {
     resident_bytes: u64,
     /// The A-side share of `resident_bytes`.
     a_resident_bytes: u64,
+}
+
+/// One tenant's registry footprint (see
+/// [`OperandRegistry::tenant_residency`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantResidency {
+    /// Live registered operands (both sides) billed to this tenant.
+    pub operands: usize,
+    /// Bytes of cached packs across those operands.
+    pub resident_bytes: u64,
+    /// The subset of `resident_bytes` pinned by in-flight jobs.
+    pub pinned_bytes: u64,
 }
 
 /// The server-resident operand cache. Owned by the `JobServer`'s shared
@@ -316,7 +291,7 @@ impl OperandRegistry {
         (h.registry == self.nonce).then_some(h.id)
     }
 
-    fn register_side(&self, m: Matrix, side: Side) -> anyhow::Result<u64> {
+    fn register_side(&self, m: Matrix, side: Side, tenant: TenantId) -> anyhow::Result<u64> {
         anyhow::ensure!(
             m.rows > 0 && m.cols > 0,
             "cannot register degenerate operand {}x{}",
@@ -326,22 +301,36 @@ impl OperandRegistry {
         let mut st = self.state.lock().unwrap();
         let id = st.next_handle;
         st.next_handle += 1;
-        st.entries.insert(id, Entry { matrix: Arc::new(m), side, packs: HashMap::new() });
+        st.entries
+            .insert(id, Entry { matrix: Arc::new(m), side, tenant, packs: HashMap::new() });
         Ok(id)
     }
 
     /// Register one B operand; packing is lazy (first resolution per
     /// block size), so the handle is cheap to create and never packs at
-    /// a block size no job asks for.
+    /// a block size no job asks for. Billed to [`TenantId::DEFAULT`];
+    /// see [`OperandRegistry::register_for`].
     pub fn register(&self, b: Matrix) -> anyhow::Result<WeightHandle> {
-        let id = self.register_side(b, Side::B)?;
+        self.register_for(b, TenantId::DEFAULT)
+    }
+
+    /// [`OperandRegistry::register`] billed to a specific tenant, so
+    /// [`OperandRegistry::tenant_residency`] can attribute resident and
+    /// pinned pack bytes to whoever registered the operand.
+    pub fn register_for(&self, b: Matrix, tenant: TenantId) -> anyhow::Result<WeightHandle> {
+        let id = self.register_side(b, Side::B, tenant)?;
         Ok(WeightHandle { registry: self.nonce, id })
     }
 
     /// Register one A operand (same lazy-packing contract as
     /// [`OperandRegistry::register`], keyed by `S_i` instead of `S_j`).
     pub fn register_a(&self, a: Matrix) -> anyhow::Result<ActivationHandle> {
-        let id = self.register_side(a, Side::A)?;
+        self.register_a_for(a, TenantId::DEFAULT)
+    }
+
+    /// [`OperandRegistry::register_a`] billed to a specific tenant.
+    pub fn register_a_for(&self, a: Matrix, tenant: TenantId) -> anyhow::Result<ActivationHandle> {
+        let id = self.register_side(a, Side::A, tenant)?;
         Ok(ActivationHandle { registry: self.nonce, id })
     }
 
@@ -598,6 +587,30 @@ impl OperandRegistry {
         self.state.lock().unwrap().resident_bytes
     }
 
+    /// Per-tenant residency snapshot, ordered by `TenantId`: for each
+    /// tenant that has live registered operands, `(operands, resident
+    /// pack bytes, pinned pack bytes)` — pinned meaning an in-flight
+    /// job still holds the pack's `Arc`, so it is immune to LRU
+    /// eviction. This is the registry half of multi-tenant accounting:
+    /// quotas bound a tenant's in-flight traffic, this shows what it
+    /// keeps resident between calls.
+    pub fn tenant_residency(&self) -> Vec<(TenantId, TenantResidency)> {
+        let st = self.state.lock().unwrap();
+        let mut rows: std::collections::BTreeMap<TenantId, TenantResidency> =
+            std::collections::BTreeMap::new();
+        for e in st.entries.values() {
+            let row = rows.entry(e.tenant).or_default();
+            row.operands += 1;
+            for slot in e.packs.values() {
+                row.resident_bytes += slot.bytes;
+                if slot.pack.strong_count() > 1 {
+                    row.pinned_bytes += slot.bytes;
+                }
+            }
+        }
+        rows.into_iter().collect()
+    }
+
     /// The A-side share of [`OperandRegistry::resident_bytes`].
     pub fn a_resident_bytes(&self) -> u64 {
         self.state.lock().unwrap().a_resident_bytes
@@ -851,6 +864,40 @@ mod tests {
         assert!(reg.into_inline().is_none());
         assert_eq!(AOperand::Registered(h).handle(), Some(h));
         assert_eq!(h.to_string(), "act#7");
+    }
+
+    #[test]
+    fn tenant_residency_attributes_bytes_and_pins() {
+        let (reg, _) = registry(u64::MAX);
+        let t1 = TenantId(1);
+        let t2 = TenantId(2);
+        let hb = reg.register_for(Matrix::random(8, 8, 1), t1).unwrap();
+        let ha = reg.register_a_for(Matrix::random(8, 8, 2), t2).unwrap();
+        let _anon = reg.register(Matrix::random(8, 8, 3)).unwrap();
+
+        // t1's pack held by an "in-flight job" → pinned; t2's dropped.
+        let pinned = reg.resolve_pack(hb, 8).unwrap();
+        let released = reg.resolve_pack_a(ha, 8).unwrap();
+        drop(released);
+
+        let rows = reg.tenant_residency();
+        assert_eq!(rows.len(), 3, "default tenant + t1 + t2");
+        let row = |t: TenantId| rows.iter().find(|(rt, _)| *rt == t).unwrap().1;
+        assert_eq!(row(TenantId::DEFAULT).operands, 1);
+        assert_eq!(row(TenantId::DEFAULT).resident_bytes, 0, "never resolved, no packs");
+        let r1 = row(t1);
+        assert!(r1.resident_bytes > 0);
+        assert_eq!(r1.pinned_bytes, r1.resident_bytes, "held Arc pins the pack");
+        let r2 = row(t2);
+        assert!(r2.resident_bytes > 0);
+        assert_eq!(r2.pinned_bytes, 0, "released pack is unpinned");
+
+        drop(pinned);
+        let rows = reg.tenant_residency();
+        let r1 = rows.iter().find(|(t, _)| *t == t1).unwrap().1;
+        assert_eq!(r1.pinned_bytes, 0);
+        reg.unregister(hb).unwrap();
+        assert!(!reg.tenant_residency().iter().any(|(t, _)| *t == t1));
     }
 
     #[test]

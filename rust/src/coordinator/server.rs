@@ -52,7 +52,25 @@
 //!   chosen `(S_i, S_j)` toward an already-resident one (turning repack
 //!   misses into cache hits, counted in `Metrics::plan_residency_hits`)
 //!   unless the analytical model prices every resident candidate worse
-//!   than the baseline by more than `ServerConfig::plan_residency_slack`.
+//!   than the baseline by more than `ServerConfig::plan_residency_slack`;
+//! * **traffic-shaped admission** ([`super::frontend`]): every
+//!   submission enters through the unified [`Submission`] builder
+//!   carrying a [`TenantId`] and an optional deadline.
+//!   [`JobServer::submit_async`] returns an awaitable [`JobFuture`]
+//!   (poll/wait/timeout/`.await`), [`JobServer::submit_blocking`]
+//!   resolves inline, and [`JobServer::try_submit`] sheds with the
+//!   submission handed back. Per-tenant quotas (max in-flight
+//!   jobs/bytes) are charged at admission and released per job as
+//!   replies deliver; the bounded queue serves tenants by weighted
+//!   deficit round robin and, within a tenant, by deadline slack
+//!   (time to deadline minus the analytical model's predicted
+//!   execution time). Deadline misses are counted next to the latency
+//!   percentiles in [`JobServer::stats`];
+//! * **sharded dispatchers**: `ServerConfig::admission_shards` threads
+//!   each independently drain the front end, plan, pack, and publish
+//!   into the *shared* epoch-tagged [`JobRegistry`] — admission stops
+//!   being a serial bottleneck while cross-job stealing still sees one
+//!   pool.
 //!
 //! Completion is counter-driven: the worker that finishes a job's last
 //! task assembles the result, runs the timing simulation, records
@@ -60,11 +78,10 @@
 //! percentiles), replies on the job's ticket channel, and retires the
 //! job from the registry.
 
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::accelerator::{Accelerator, SimOptions};
 use crate::blocking::{BlockPlan, BlockTask};
@@ -73,7 +90,11 @@ use crate::gemm::{DisjointBlocks, Matrix, PackedA, PackedB, PackedPanels};
 use crate::wqm::{AtomicWqm, JobRegistry};
 
 use super::engine::NumericsEngine;
-use super::metrics::Metrics;
+use super::frontend::{
+    AdmitMeta, FrontEnd, JobFuture, QuotaLedger, SubmitError, Submission, SubmissionKind,
+    TenantConfig, TenantId, TenantSlot, TryPushError,
+};
+use super::metrics::{Metrics, TenantCounters};
 use super::registry::{ActivationHandle, AOperand, BOperand, OperandRegistry, WeightHandle};
 use super::{choose_run_dims, GemmJob, JobResult};
 
@@ -111,6 +132,13 @@ pub struct ServerConfig {
     /// bounded compute penalty. Negative disables the refinement
     /// entirely (the planner ignores residency).
     pub plan_residency_slack: f64,
+    /// Dispatcher (admission) shards: threads that independently drain
+    /// the front-end queue, plan + pack, and publish into the shared
+    /// job registry. More shards overlap planning/packing of
+    /// concurrent submissions; cross-job stealing is unaffected (the
+    /// workers see one pool either way). Must be >= 1; 2 by default so
+    /// admission is never serial out of the box.
+    pub admission_shards: usize,
 }
 
 impl Default for ServerConfig {
@@ -125,7 +153,29 @@ impl Default for ServerConfig {
             default_run: None,
             registry_budget_bytes: 256 << 20,
             plan_residency_slack: 0.05,
+            admission_shards: 2,
         }
+    }
+}
+
+impl ServerConfig {
+    /// Validate the knob set against a hardware config. Every
+    /// [`JobServer`] constructor funnels through this, so `Default`,
+    /// the docs, and the CLI cannot silently diverge on what a legal
+    /// configuration is.
+    pub fn validate(&self, hw: &HardwareConfig) -> anyhow::Result<()> {
+        anyhow::ensure!(self.workers >= 1, "need at least one worker");
+        anyhow::ensure!(self.queue_capacity >= 1, "need admission capacity >= 1");
+        anyhow::ensure!(self.batch_window >= 1, "batch window must be >= 1");
+        anyhow::ensure!(self.admission_shards >= 1, "need at least one admission shard");
+        anyhow::ensure!(
+            !self.plan_residency_slack.is_nan() && self.plan_residency_slack != f64::INFINITY,
+            "plan residency slack must be a finite factor (negative disables)"
+        );
+        if let Some(run) = self.default_run {
+            run.validate(hw)?;
+        }
+        Ok(())
     }
 }
 
@@ -137,6 +187,10 @@ pub struct JobTicket {
 }
 
 impl JobTicket {
+    pub(crate) fn new(id: u64, rx: mpsc::Receiver<anyhow::Result<JobResult>>) -> Self {
+        Self { id, rx }
+    }
+
     /// Block until the job completes.
     pub fn wait(self) -> anyhow::Result<JobResult> {
         match self.rx.recv() {
@@ -154,6 +208,21 @@ impl JobTicket {
             Ok(r) => Some(r),
             Err(mpsc::TryRecvError::Empty) => None,
             Err(mpsc::TryRecvError::Disconnected) => Some(Err(anyhow::anyhow!(
+                "server dropped job {} without replying",
+                self.id
+            ))),
+        }
+    }
+
+    /// Bounded block: `Some(result)` when the job replies within
+    /// `timeout`, `None` on timeout (the ticket stays valid — wait
+    /// again, or poll). A dropped reply channel surfaces as
+    /// `Some(Err(..))`, never as an eternal timeout.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<anyhow::Result<JobResult>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => Some(Err(anyhow::anyhow!(
                 "server dropped job {} without replying",
                 self.id
             ))),
@@ -208,8 +277,11 @@ impl JobGroup {
     }
 }
 
-/// Why [`JobServer::try_submit`] rejected a job; carries the job back so
-/// the caller can retry, shed, or route elsewhere.
+/// Legacy shed-path error (the pre-builder `try_submit(GemmJob)`
+/// surface); carries the job back so the caller can retry, shed, or
+/// route elsewhere. New code matches [`SubmitError`] from
+/// [`JobServer::try_submit`] instead, which hands back the whole
+/// [`Submission`].
 #[derive(Debug)]
 pub enum TrySubmitError {
     /// Admission queue at capacity (backpressure).
@@ -288,6 +360,15 @@ pub struct ServerStats {
     pub latency_p50_secs: f64,
     pub latency_p95_secs: f64,
     pub latency_p99_secs: f64,
+    /// Completed jobs that carried a deadline, and how many of those
+    /// finished past it — surfaced next to the tail latencies above: a
+    /// p99 inside the deadline with a nonzero miss count means the
+    /// misses live in the tail beyond p99.
+    pub deadline_jobs: u64,
+    pub deadline_misses: u64,
+    /// Per-tenant completion counters, ascending by tenant id — one
+    /// entry per tenant that completed at least one job.
+    pub tenants: Vec<(TenantId, TenantCounters)>,
     /// Total worker busy time (numerics execution), seconds.
     pub worker_busy_secs: f64,
     /// `1 - busy / (workers * uptime)` — the figure cross-job stealing
@@ -304,7 +385,8 @@ impl std::fmt::Display for ServerStats {
              registry(hit/miss/evict)={}/{}/{} weights={} resident={}B \
              a_panel(hit/miss/evict)={}/{}/{} activations={} a_resident={}B \
              plan_residency_hits={} panel_copies={} {:.1} jobs/s \
-             lat(p50/p95/p99)={:.4}s/{:.4}s/{:.4}s idle={:.1}%",
+             lat(p50/p95/p99)={:.4}s/{:.4}s/{:.4}s deadline(miss/ddl)={}/{} \
+             tenants=[{}] idle={:.1}%",
             self.jobs,
             self.jobs_failed,
             self.batched_jobs,
@@ -331,6 +413,13 @@ impl std::fmt::Display for ServerStats {
             self.latency_p50_secs,
             self.latency_p95_secs,
             self.latency_p99_secs,
+            self.deadline_misses,
+            self.deadline_jobs,
+            self.tenants
+                .iter()
+                .map(|(t, c)| format!("#{}:{}j/{}m", t.0, c.jobs, c.deadline_misses))
+                .collect::<Vec<_>>()
+                .join(","),
             100.0 * self.worker_idle_frac
         )
     }
@@ -383,9 +472,13 @@ struct SubJob {
     pending: AtomicUsize,
     /// First task-level error, if any (delivered at finalize).
     error: Mutex<Option<anyhow::Error>>,
-    reply: Mutex<Option<mpsc::Sender<anyhow::Result<JobResult>>>>,
+    reply: Mutex<Option<Reply>>,
     accepted_at: Instant,
     batched: bool,
+    tenant: TenantId,
+    /// Absolute completion deadline; finishing past it counts a miss
+    /// (the job is never cancelled — a late answer still answers).
+    deadline: Option<Instant>,
 }
 
 /// A registered job: its lock-free task queues plus execution context.
@@ -436,11 +529,32 @@ impl WorkGate {
     }
 }
 
-/// One admitted submission awaiting dispatch.
-struct Submission {
+/// A job's reply endpoint, carrying its per-tenant quota slot: the
+/// slot releases when the `Reply` is consumed (result sent) *or*
+/// dropped (planner rejection, shed hand-back, shutdown abandonment) —
+/// exactly once either way, which is what makes quota accounting
+/// conserve under every failure path.
+struct Reply {
+    tx: mpsc::Sender<anyhow::Result<JobResult>>,
+    _slot: Option<TenantSlot>,
+}
+
+impl Reply {
+    fn send(self, r: anyhow::Result<JobResult>) {
+        // A departed client (dropped ticket) is not an error; the quota
+        // slot releases regardless as `self` drops here.
+        let _ = self.tx.send(r);
+    }
+}
+
+/// One admitted job awaiting dispatch — the queue-side form of a
+/// [`Submission`], with the tenant resolved and the deadline absolute.
+struct Admitted {
     job: GemmJob,
-    reply: mpsc::Sender<anyhow::Result<JobResult>>,
+    reply: Reply,
     accepted_at: Instant,
+    tenant: TenantId,
+    deadline: Option<Instant>,
 }
 
 /// One sub-request of a shared-B batch: its own A (inline, or a
@@ -449,8 +563,10 @@ struct Submission {
 struct SharedSub {
     id: u64,
     a: AOperand,
-    reply: mpsc::Sender<anyhow::Result<JobResult>>,
+    reply: Reply,
     accepted_at: Instant,
+    tenant: TenantId,
+    deadline: Option<Instant>,
 }
 
 /// An admitted [`JobServer::submit_batched_gemm`] call: one B (inline,
@@ -463,160 +579,46 @@ struct SharedBatch {
     subs: Vec<SharedSub>,
 }
 
-/// Split a shared batch's A operands into per-sub tickets and
-/// submissions (shared by the blocking and load-shedding entry points).
-fn shared_batch_parts(many_a: Vec<AOperand>) -> (Vec<JobTicket>, Vec<SharedSub>) {
-    let now = Instant::now();
-    let mut tickets = Vec::with_capacity(many_a.len());
-    let mut subs = Vec::with_capacity(many_a.len());
-    for (i, a) in many_a.into_iter().enumerate() {
-        let (tx, rx) = mpsc::channel();
-        tickets.push(JobTicket { id: i as u64, rx });
-        subs.push(SharedSub { id: i as u64, a, reply: tx, accepted_at: now });
-    }
-    (tickets, subs)
-}
-
 /// Admission-queue element: a lone job, an explicit group (from
-/// [`JobServer::submit_batch`]) the dispatcher coalesces as a unit, or
-/// a shared-B batch.
+/// [`Submission::group`]) the dispatcher coalesces as a unit, or a
+/// shared-B batch. The bounded multi-tenant queue itself
+/// ([`FrontEnd`]) lives in [`super::frontend`]; this is its payload.
 enum QueueItem {
-    One(Submission),
-    Group(Vec<Submission>),
+    One(Admitted),
+    Group(Vec<Admitted>),
     SharedB(SharedBatch),
 }
 
-impl QueueItem {
-    fn jobs(&self) -> usize {
-        match self {
-            QueueItem::One(_) => 1,
-            QueueItem::Group(g) => g.len(),
-            QueueItem::SharedB(b) => b.subs.len(),
+/// Rebuild the caller-facing [`Submission`] from a shed queue item:
+/// operands, tenant, pin, and remaining deadline come back intact,
+/// while the replies (and the quota slots riding them) drop — which is
+/// exactly what releases the charge taken at admission.
+fn reclaim_submission(item: QueueItem, deadline: Option<Instant>) -> Submission {
+    let left = deadline.map(|d| d.saturating_duration_since(Instant::now()));
+    let mut s = match item {
+        QueueItem::One(adm) => {
+            let tenant = adm.tenant;
+            let GemmJob { id, a, b, run } = adm.job;
+            let mut s = Submission::gemm(a, b).tenant(tenant).id(id);
+            s.run = run;
+            s
         }
-    }
-}
-
-struct AdmissionState {
-    queue: VecDeque<QueueItem>,
-    /// Jobs (not items) currently queued — what capacity bounds.
-    len: usize,
-    closed: bool,
-    /// FIFO tickets for blocking pushers: each `push_blocking` call takes
-    /// `next_ticket` and may only admit when it becomes `serving`, so a
-    /// large group waiting for space cannot be starved by a stream of
-    /// later single-job submitters barging into the freed capacity.
-    next_ticket: u64,
-    serving: u64,
-}
-
-/// Bounded admission queue with blocking and load-shedding entry points.
-struct Admission {
-    capacity: usize,
-    state: Mutex<AdmissionState>,
-    not_full: Condvar,
-    not_empty: Condvar,
-}
-
-enum TryPushError {
-    Full(QueueItem),
-    Closed(QueueItem),
-}
-
-impl Admission {
-    fn new(capacity: usize) -> Self {
-        Self {
-            capacity,
-            state: Mutex::new(AdmissionState {
-                queue: VecDeque::new(),
-                len: 0,
-                closed: false,
-                next_ticket: 0,
-                serving: 0,
-            }),
-            not_full: Condvar::new(),
-            not_empty: Condvar::new(),
+        QueueItem::Group(subs) => {
+            let tenant = subs.first().map_or(TenantId::DEFAULT, |s| s.tenant);
+            Submission::group(subs.into_iter().map(|s| s.job).collect()).tenant(tenant)
         }
-    }
-
-    /// Block until the item fits (backpressure), admitting blocked
-    /// pushers strictly in arrival (ticket) order. An item larger than
-    /// the whole capacity is admitted once the queue is empty, so
-    /// oversized explicit batches make progress instead of deadlocking.
-    fn push_blocking(&self, item: QueueItem) -> Result<(), QueueItem> {
-        let n = item.jobs();
-        let mut st = self.state.lock().unwrap();
-        let ticket = st.next_ticket;
-        st.next_ticket += 1;
-        loop {
-            if st.closed {
-                // Every waiter sees `closed` and exits; `serving` need
-                // not advance past abandoned tickets.
-                return Err(item);
-            }
-            if st.serving == ticket && (st.len + n <= self.capacity || st.len == 0) {
-                st.serving += 1;
-                st.len += n;
-                st.queue.push_back(item);
-                self.not_empty.notify_one();
-                // Hand the turn to the next ticket holder, if any.
-                self.not_full.notify_all();
-                return Ok(());
-            }
-            st = self.not_full.wait(st).unwrap();
+        QueueItem::SharedB(batch) => {
+            let tenant = batch.subs.first().map_or(TenantId::DEFAULT, |s| s.tenant);
+            let id = batch.subs.first().map_or(0, |s| s.id);
+            let run = batch.run;
+            let many_a: Vec<AOperand> = batch.subs.into_iter().map(|s| s.a).collect();
+            let mut s = Submission::batched(batch.b, many_a).tenant(tenant).id(id);
+            s.run = run;
+            s
         }
-    }
-
-    fn try_push(&self, item: QueueItem) -> Result<(), TryPushError> {
-        let n = item.jobs();
-        let mut st = self.state.lock().unwrap();
-        if st.closed {
-            return Err(TryPushError::Closed(item));
-        }
-        // Never barge past blocked FIFO pushers (serving < next_ticket
-        // means someone is waiting for space).
-        if st.serving != st.next_ticket || (st.len + n > self.capacity && st.len > 0) {
-            return Err(TryPushError::Full(item));
-        }
-        st.len += n;
-        st.queue.push_back(item);
-        self.not_empty.notify_one();
-        Ok(())
-    }
-
-    /// Dispatcher side: next item, or `None` once closed *and* drained.
-    fn pop_blocking(&self) -> Option<QueueItem> {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if let Some(item) = st.queue.pop_front() {
-                st.len -= item.jobs();
-                self.not_full.notify_all();
-                return Some(item);
-            }
-            if st.closed {
-                return None;
-            }
-            st = self.not_empty.wait(st).unwrap();
-        }
-    }
-
-    fn try_pop(&self) -> Option<QueueItem> {
-        let mut st = self.state.lock().unwrap();
-        let item = st.queue.pop_front()?;
-        st.len -= item.jobs();
-        self.not_full.notify_all();
-        Some(item)
-    }
-
-    fn close(&self) {
-        let mut st = self.state.lock().unwrap();
-        st.closed = true;
-        self.not_full.notify_all();
-        self.not_empty.notify_all();
-    }
-
-    fn len(&self) -> usize {
-        self.state.lock().unwrap().len
-    }
+    };
+    s.deadline = left;
+    s
 }
 
 /// State shared by the dispatcher and every worker.
@@ -640,7 +642,7 @@ struct Shared {
 
 /// A planned submission, ready to activate.
 struct Planned {
-    sub: Submission,
+    sub: Admitted,
     run: RunConfig,
     plan: BlockPlan,
     small: bool,
@@ -649,8 +651,9 @@ struct Planned {
 /// The serving runtime. See the module docs for the architecture.
 pub struct JobServer {
     shared: Arc<Shared>,
-    admission: Arc<Admission>,
-    dispatcher: Option<thread::JoinHandle<()>>,
+    admission: Arc<FrontEnd<QueueItem>>,
+    ledger: Arc<QuotaLedger>,
+    dispatchers: Vec<thread::JoinHandle<()>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
@@ -660,12 +663,7 @@ impl JobServer {
         engine: NumericsEngine,
         cfg: ServerConfig,
     ) -> anyhow::Result<Self> {
-        anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
-        anyhow::ensure!(cfg.queue_capacity >= 1, "need admission capacity >= 1");
-        anyhow::ensure!(cfg.batch_window >= 1, "batch window must be >= 1");
-        if let Some(run) = cfg.default_run {
-            run.validate(&hw)?;
-        }
+        cfg.validate(&hw)?;
         let metrics = Arc::new(Metrics::default());
         let shared = Arc::new(Shared {
             accelerator: Accelerator::new(hw.clone()),
@@ -681,7 +679,8 @@ impl JobServer {
             started: Instant::now(),
             cfg,
         });
-        let admission = Arc::new(Admission::new(shared.cfg.queue_capacity));
+        let admission = Arc::new(FrontEnd::new(shared.cfg.queue_capacity));
+        let ledger = Arc::new(QuotaLedger::new());
 
         let mut workers = Vec::with_capacity(shared.cfg.workers);
         for w in 0..shared.cfg.workers {
@@ -692,14 +691,17 @@ impl JobServer {
                     .spawn(move || worker_loop(shared, w))?,
             );
         }
-        let dispatcher = {
+        let mut dispatchers = Vec::with_capacity(shared.cfg.admission_shards);
+        for d in 0..shared.cfg.admission_shards {
             let shared = shared.clone();
             let admission = admission.clone();
-            thread::Builder::new()
-                .name("marr-dispatcher".into())
-                .spawn(move || dispatcher_loop(shared, admission))?
-        };
-        Ok(Self { shared, admission, dispatcher: Some(dispatcher), workers })
+            dispatchers.push(
+                thread::Builder::new()
+                    .name(format!("marr-dispatch-{d}"))
+                    .spawn(move || dispatcher_loop(shared, admission))?,
+            );
+        }
+        Ok(Self { shared, admission, ledger, dispatchers, workers })
     }
 
     /// A server with default knobs.
@@ -707,62 +709,235 @@ impl JobServer {
         Self::new(hw, engine, ServerConfig::default())
     }
 
-    /// Submit one job; blocks while the admission queue is full
-    /// (backpressure) and errors once the server is shutting down.
-    pub fn submit(&self, job: GemmJob) -> anyhow::Result<JobTicket> {
-        let (tx, rx) = mpsc::channel();
-        let id = job.id;
-        let item = QueueItem::One(Submission {
-            job,
-            reply: tx,
-            accepted_at: Instant::now(),
-        });
-        match self.admission.push_blocking(item) {
-            Ok(()) => Ok(JobTicket { id, rx }),
-            Err(_) => Err(anyhow::anyhow!("server closed; job {id} rejected")),
+    /// Configure a tenant's DRR weight and in-flight quotas. Takes
+    /// effect for the tenant's *next* submission (weight) and next
+    /// quota check (caps); in-flight work is never re-billed.
+    pub fn configure_tenant(&self, tenant: TenantId, cfg: TenantConfig) -> anyhow::Result<()> {
+        anyhow::ensure!(cfg.weight >= 1, "tenant weight must be >= 1");
+        self.ledger.configure(tenant, cfg);
+        Ok(())
+    }
+
+    /// Submit through the unified builder and get an awaitable
+    /// [`JobFuture`] back. Blocks only on *admission* (tenant quota,
+    /// then queue capacity — backpressure), never on execution: the
+    /// future resolves via poll, wait, bounded wait, or `.await`.
+    /// Errors once the server is shutting down.
+    ///
+    /// Accepts anything `Into<Submission>`: the builder itself, or a
+    /// bare [`GemmJob`].
+    pub fn submit_async(&self, s: impl Into<Submission>) -> anyhow::Result<JobFuture> {
+        self.admit(s.into(), true).map_err(anyhow::Error::new)
+    }
+
+    /// [`JobServer::submit_async`] + [`JobFuture::wait`] in one call —
+    /// the blocking path, now a veneer over the async one (results are
+    /// bit-identical by construction: same queue, same dispatch, same
+    /// workers).
+    pub fn submit_blocking(&self, s: impl Into<Submission>) -> anyhow::Result<Vec<JobResult>> {
+        self.submit_async(s)?.wait()
+    }
+
+    /// Non-blocking submit: rejects — with the whole [`Submission`]
+    /// handed back, operands intact — when the queue is full (shed
+    /// load), the tenant's in-flight quota is exhausted, or the server
+    /// is closed. Never barges past blocked `submit_async` callers.
+    pub fn try_submit(&self, s: impl Into<Submission>) -> Result<JobFuture, SubmitError> {
+        self.admit(s.into(), false)
+    }
+
+    /// The one admission path every entry point funnels through:
+    /// validate, charge the tenant's quota (all-or-nothing), mint
+    /// per-job quota slots onto the replies, price the work for slack
+    /// ordering, and push into the multi-tenant front end.
+    fn admit(&self, s: Submission, blocking: bool) -> Result<JobFuture, SubmitError> {
+        let njobs = s.jobs();
+        if njobs == 0 {
+            return Err(SubmitError::Invalid("empty submission".into()));
+        }
+        let tenant = s.tenant;
+        let bytes = s.inline_bytes();
+        // Quota before queue: a submission blocked on queue space must
+        // already hold its quota, so a tenant cannot overcommit by
+        // stacking blocked pushers.
+        if blocking {
+            if self.ledger.charge_blocking(tenant, njobs, bytes).is_err() {
+                return Err(SubmitError::Closed(s));
+            }
+        } else if !self.ledger.try_charge(tenant, njobs, bytes) {
+            return Err(SubmitError::QuotaExceeded { submission: s, tenant });
+        }
+        let deadline = s.deadline.map(|d| Instant::now() + d);
+        let meta = AdmitMeta {
+            tenant,
+            weight: self.ledger.weight(tenant),
+            cost: njobs,
+            deadline,
+            predicted_secs: self.predict_submission(&s),
+        };
+        let (tickets, item) = self.build_item(s, deadline);
+        let fut = JobFuture::new(tickets);
+        let res = if blocking {
+            self.admission.push_blocking(meta, item).map_err(TryPushError::Closed)
+        } else {
+            self.admission.try_push(meta, item)
+        };
+        match res {
+            Ok(()) => Ok(fut),
+            Err(e) => {
+                let (full, item) = match e {
+                    TryPushError::Full(i) => (true, i),
+                    TryPushError::Closed(i) => (false, i),
+                };
+                // Rebuilding drops the item's replies — and with them
+                // the quota slots, so the charge above releases here.
+                let s = reclaim_submission(item, deadline);
+                Err(if full { SubmitError::Full(s) } else { SubmitError::Closed(s) })
+            }
         }
     }
 
-    /// Non-blocking submit: rejects with the job handed back when the
-    /// queue is full (shed load) or the server is closed.
-    pub fn try_submit(&self, job: GemmJob) -> Result<JobTicket, TrySubmitError> {
-        let (tx, rx) = mpsc::channel();
-        let id = job.id;
-        let item = QueueItem::One(Submission {
-            job,
-            reply: tx,
-            accepted_at: Instant::now(),
-        });
-        match self.admission.try_push(item) {
-            Ok(()) => Ok(JobTicket { id, rx }),
-            Err(TryPushError::Full(QueueItem::One(s))) => Err(TrySubmitError::Full(s.job)),
-            Err(TryPushError::Closed(QueueItem::One(s))) => Err(TrySubmitError::Closed(s.job)),
-            Err(_) => unreachable!("single submission came back as a group"),
+    /// Split one submission into its reply tickets and queue item,
+    /// minting one quota slot per job. Each slot carries its job's
+    /// inline bytes; a shared B is billed to the first sub (the split
+    /// is an accounting detail — only the per-tenant totals matter).
+    fn build_item(&self, s: Submission, deadline: Option<Instant>) -> (Vec<JobTicket>, QueueItem) {
+        let now = Instant::now();
+        let tenant = s.tenant;
+        let mb = |m: Option<&Matrix>| m.map_or(0, |m| 4 * m.rows * m.cols);
+        let slot = |bytes: usize| Some(TenantSlot::new(self.ledger.clone(), tenant, bytes));
+        match s.kind {
+            SubmissionKind::Gemm { a, b } => {
+                let bytes = mb(a.as_inline()) + mb(b.as_inline());
+                let (tx, rx) = mpsc::channel();
+                let adm = Admitted {
+                    job: GemmJob { id: s.id, a, b, run: s.run },
+                    reply: Reply { tx, _slot: slot(bytes) },
+                    accepted_at: now,
+                    tenant,
+                    deadline,
+                };
+                (vec![JobTicket::new(s.id, rx)], QueueItem::One(adm))
+            }
+            SubmissionKind::Group(jobs) => {
+                let mut tickets = Vec::with_capacity(jobs.len());
+                let mut subs = Vec::with_capacity(jobs.len());
+                for j in jobs {
+                    let bytes = mb(j.a.as_inline()) + mb(j.b.as_inline());
+                    let (tx, rx) = mpsc::channel();
+                    tickets.push(JobTicket::new(j.id, rx));
+                    subs.push(Admitted {
+                        // A member without its own pin inherits the
+                        // submission-level one.
+                        job: GemmJob { run: j.run.or(s.run), ..j },
+                        reply: Reply { tx, _slot: slot(bytes) },
+                        accepted_at: now,
+                        tenant,
+                        deadline,
+                    });
+                }
+                (tickets, QueueItem::Group(subs))
+            }
+            SubmissionKind::SharedB { b, many_a } => {
+                let b_bytes = mb(b.as_inline());
+                let mut tickets = Vec::with_capacity(many_a.len());
+                let mut subs = Vec::with_capacity(many_a.len());
+                for (i, a) in many_a.into_iter().enumerate() {
+                    let bytes = mb(a.as_inline()) + if i == 0 { b_bytes } else { 0 };
+                    let (tx, rx) = mpsc::channel();
+                    let id = s.id + i as u64;
+                    tickets.push(JobTicket::new(id, rx));
+                    subs.push(SharedSub {
+                        id,
+                        a,
+                        reply: Reply { tx, _slot: slot(bytes) },
+                        accepted_at: now,
+                        tenant,
+                        deadline,
+                    });
+                }
+                (tickets, QueueItem::SharedB(SharedBatch { b, run: s.run, subs }))
+            }
         }
+    }
+
+    /// Modeled execution time for deadline-slack ordering: per-job
+    /// [`crate::analytical::predict`] under the job-pin → submission-pin
+    /// → server-default cascade. Work the model cannot price before
+    /// dispatch (no config short of the DSE, unknown dims) contributes
+    /// zero and sorts as pure earliest-deadline-first; submissions
+    /// without a deadline skip the model walk entirely.
+    fn predict_submission(&self, s: &Submission) -> f64 {
+        if s.deadline.is_none() {
+            return 0.0;
+        }
+        let shared = &self.shared;
+        let dims_a = |a: &AOperand| match a {
+            AOperand::Inline(m) => Some((m.rows, m.cols)),
+            AOperand::Registered(h) => shared.operands.dims_a(*h),
+        };
+        let dims_b = |b: &BOperand| match b {
+            BOperand::Inline(m) => Some((m.rows, m.cols)),
+            BOperand::Registered(h) => shared.operands.dims(*h),
+        };
+        let predict = |run: Option<RunConfig>, m: usize, k: usize, n: usize| -> f64 {
+            let Some(run) = run.or(shared.cfg.default_run) else { return 0.0 };
+            crate::analytical::predict(&shared.hw, &run, m, k, n, shared.accelerator.surface())
+                .map(|p| p.t_overlap())
+                .unwrap_or(0.0)
+        };
+        match &s.kind {
+            SubmissionKind::Gemm { a, b } => match (dims_a(a), dims_b(b)) {
+                (Some((m, k)), Some((_, n))) => predict(s.run, m, k, n),
+                _ => 0.0,
+            },
+            SubmissionKind::Group(jobs) => jobs
+                .iter()
+                .map(|j| match (dims_a(&j.a), dims_b(&j.b)) {
+                    (Some((m, k)), Some((_, n))) => predict(j.run.or(s.run), m, k, n),
+                    _ => 0.0,
+                })
+                .sum(),
+            SubmissionKind::SharedB { b, many_a } => {
+                let Some((_, n)) = dims_b(b) else { return 0.0 };
+                many_a
+                    .iter()
+                    .map(|a| match dims_a(a) {
+                        Some((m, k)) => predict(s.run, m, k, n),
+                        None => 0.0,
+                    })
+                    .sum()
+            }
+        }
+    }
+
+    /// Submit one job; blocks while the admission queue is full
+    /// (backpressure) and errors once the server is shutting down.
+    #[deprecated(note = "use `submit_async(Submission::gemm(a, b))` or `submit_blocking`")]
+    pub fn submit(&self, job: GemmJob) -> anyhow::Result<JobTicket> {
+        let id = job.id;
+        let fut = self
+            .admit(job.into(), true)
+            .map_err(|_| anyhow::anyhow!("server closed; job {id} rejected"))?;
+        Ok(fut.into_tickets().pop().expect("one-job submission yields one ticket"))
     }
 
     /// Submit jobs as one admission unit: the dispatcher coalesces the
     /// sub-threshold ones into batched super-jobs deterministically
     /// (no reliance on queue-timing races). Blocks under backpressure.
+    #[deprecated(note = "use `submit_async(Submission::group(jobs))`")]
     pub fn submit_batch(&self, jobs: Vec<GemmJob>) -> anyhow::Result<Vec<JobTicket>> {
         anyhow::ensure!(!jobs.is_empty(), "empty batch");
-        let now = Instant::now();
-        let mut tickets = Vec::with_capacity(jobs.len());
-        let mut subs = Vec::with_capacity(jobs.len());
-        for job in jobs {
-            let (tx, rx) = mpsc::channel();
-            tickets.push(JobTicket { id: job.id, rx });
-            subs.push(Submission { job, reply: tx, accepted_at: now });
-        }
-        match self.admission.push_blocking(QueueItem::Group(subs)) {
-            Ok(()) => Ok(tickets),
-            Err(_) => Err(anyhow::anyhow!("server closed; batch rejected")),
-        }
+        let fut = self
+            .admit(Submission::group(jobs), true)
+            .map_err(|_| anyhow::anyhow!("server closed; batch rejected"))?;
+        Ok(fut.into_tickets())
     }
 
     /// Submit jobs as one admission unit and get a joint handle back:
     /// [`JobGroup::wait_all`] resolves the whole group in submission
     /// order. Same admission semantics as [`JobServer::submit_batch`].
+    #[deprecated(note = "use `submit_async(Submission::group(jobs))`")]
     pub fn submit_group(&self, jobs: Vec<GemmJob>) -> anyhow::Result<JobGroup> {
         Ok(JobGroup { tickets: self.submit_batch(jobs)? })
     }
@@ -784,6 +959,7 @@ impl JobServer {
     /// size, and each C element accumulates in ascending-k order
     /// regardless of batching. Blocks under backpressure like
     /// [`JobServer::submit`].
+    #[deprecated(note = "use `submit_async(Submission::batched(b, many_a))`")]
     pub fn submit_batched_gemm(
         &self,
         b: impl Into<BOperand>,
@@ -806,6 +982,7 @@ impl JobServer {
     /// identical, including bit-identical results to inline submission:
     /// a cached pack holds the same bytes a private pack of the same
     /// matrix would.
+    #[deprecated(note = "use `submit_async(Submission::batched(b, many_a))`")]
     pub fn submit_batched_gemm_operands(
         &self,
         b: impl Into<BOperand>,
@@ -813,12 +990,12 @@ impl JobServer {
         run: Option<RunConfig>,
     ) -> anyhow::Result<JobGroup> {
         anyhow::ensure!(!many_a.is_empty(), "empty shared-B batch");
-        let (tickets, subs) = shared_batch_parts(many_a);
-        let item = QueueItem::SharedB(SharedBatch { b: b.into(), run, subs });
-        match self.admission.push_blocking(item) {
-            Ok(()) => Ok(JobGroup { tickets }),
-            Err(_) => Err(anyhow::anyhow!("server closed; shared-B batch rejected")),
-        }
+        let mut s = Submission::batched(b, many_a);
+        s.run = run;
+        let fut = self
+            .admit(s, true)
+            .map_err(|_| anyhow::anyhow!("server closed; shared-B batch rejected"))?;
+        Ok(JobGroup { tickets: fut.into_tickets() })
     }
 
     /// Non-blocking [`JobServer::submit_batched_gemm`]: rejects with
@@ -826,34 +1003,39 @@ impl JobServer {
     /// (shed load) or the server is closed, so shared-B traffic
     /// respects the same backpressure contract as
     /// [`JobServer::try_submit`].
+    #[deprecated(note = "use `try_submit(Submission::batched(b, many_a))`")]
     pub fn try_submit_batched_gemm(
         &self,
         b: impl Into<BOperand>,
         many_a: Vec<Matrix>,
         run: Option<RunConfig>,
     ) -> Result<JobGroup, TrySubmitBatchedError> {
-        let b = b.into();
         if many_a.is_empty() {
             return Err(TrySubmitBatchedError::Empty);
         }
-        let (tickets, subs) =
-            shared_batch_parts(many_a.into_iter().map(AOperand::from).collect());
-        let item = QueueItem::SharedB(SharedBatch { b, run, subs });
-        match self.admission.try_push(item) {
-            Ok(()) => Ok(JobGroup { tickets }),
+        let mut s = Submission::batched(b, many_a);
+        s.run = run;
+        match self.admit(s, false) {
+            Ok(fut) => Ok(JobGroup { tickets: fut.into_tickets() }),
             Err(e) => {
-                let (full, item) = match e {
-                    TryPushError::Full(item) => (true, item),
-                    TryPushError::Closed(item) => (false, item),
+                let (full, s) = match e {
+                    SubmitError::Full(s) => (true, s),
+                    SubmitError::Closed(s) => (false, s),
+                    // The default tenant runs unlimited, but map the
+                    // variant anyway: quota pressure is backpressure.
+                    SubmitError::QuotaExceeded { submission, .. } => (true, submission),
+                    SubmitError::Invalid(msg) => {
+                        unreachable!("non-empty batch rejected as invalid: {msg}")
+                    }
                 };
-                let QueueItem::SharedB(SharedBatch { b, subs, .. }) = item else {
-                    unreachable!("shared-B batch came back as another item kind")
+                let SubmissionKind::SharedB { b, many_a } = s.into_kind() else {
+                    unreachable!("shared-B batch came back as another submission kind")
                 };
                 // This entry point only ever builds inline subs, so the
                 // hand-back unwrap cannot miss.
-                let many_a = subs
+                let many_a = many_a
                     .into_iter()
-                    .map(|s| s.a.into_inline().expect("try-submit subs are inline"))
+                    .map(|a| a.into_inline().expect("try-submit subs are inline"))
                     .collect();
                 Err(if full {
                     TrySubmitBatchedError::Full { b, many_a }
@@ -871,6 +1053,13 @@ impl JobServer {
     /// returned handle. See [`OperandRegistry`] for eviction semantics.
     pub fn register_b(&self, b: Matrix) -> anyhow::Result<WeightHandle> {
         self.shared.operands.register(b)
+    }
+
+    /// [`JobServer::register_b`] billed to a specific tenant, so
+    /// [`JobServer::tenant_residency`] attributes the resident packs to
+    /// whoever loaded the model.
+    pub fn register_b_for(&self, b: Matrix, tenant: TenantId) -> anyhow::Result<WeightHandle> {
+        self.shared.operands.register_for(b, tenant)
     }
 
     /// Drop a registered weight and its cached packs. In-flight jobs
@@ -912,6 +1101,18 @@ impl JobServer {
     /// cache the B side uses.
     pub fn register_a(&self, a: Matrix) -> anyhow::Result<ActivationHandle> {
         self.shared.operands.register_a(a)
+    }
+
+    /// [`JobServer::register_a`] billed to a specific tenant.
+    pub fn register_a_for(&self, a: Matrix, tenant: TenantId) -> anyhow::Result<ActivationHandle> {
+        self.shared.operands.register_a_for(a, tenant)
+    }
+
+    /// Per-tenant registry footprint: live operands, resident pack
+    /// bytes, and the pinned share — see
+    /// [`super::registry::OperandRegistry::tenant_residency`].
+    pub fn tenant_residency(&self) -> Vec<(TenantId, super::registry::TenantResidency)> {
+        self.shared.operands.tenant_residency()
     }
 
     /// Drop a registered activation and its cached packs. In-flight
@@ -1011,6 +1212,9 @@ impl JobServer {
             latency_p50_secs: pcts[0],
             latency_p95_secs: pcts[1],
             latency_p99_secs: pcts[2],
+            deadline_jobs: m.deadline_jobs(),
+            deadline_misses: m.deadline_misses(),
+            tenants: m.tenant_counters(),
             worker_busy_secs: busy_secs,
             worker_idle_frac: idle,
         }
@@ -1025,7 +1229,10 @@ impl JobServer {
 
     fn shutdown_inner(&mut self) {
         self.admission.close();
-        if let Some(d) = self.dispatcher.take() {
+        // Unblock submitters waiting on tenant quota, not just on queue
+        // space — they error out instead of hanging on a closing server.
+        self.ledger.close();
+        for d in self.dispatchers.drain(..) {
             let _ = d.join();
         }
         // Wait for registered jobs to drain; unregister bumps the gate.
@@ -1049,7 +1256,7 @@ impl JobServer {
 
 impl Drop for JobServer {
     fn drop(&mut self) {
-        if self.dispatcher.is_some() || !self.workers.is_empty() {
+        if !self.dispatchers.is_empty() || !self.workers.is_empty() {
             self.shutdown_inner();
         }
     }
@@ -1058,7 +1265,7 @@ impl Drop for JobServer {
 /// Plan one submission: validate, choose the run config, build the block
 /// grid. On failure the submitter gets the error through its ticket and
 /// `None` comes back.
-fn plan_one(shared: &Shared, s: Submission) -> Option<Planned> {
+fn plan_one(shared: &Shared, s: Admitted) -> Option<Planned> {
     let planned = (|| -> anyhow::Result<(RunConfig, BlockPlan)> {
         // A registered operand plans from the registry's recorded dims;
         // the pack itself resolves at activation.
@@ -1113,7 +1320,7 @@ fn plan_one(shared: &Shared, s: Submission) -> Option<Planned> {
         }
         Err(e) => {
             shared.metrics.job_failed();
-            let _ = s.reply.send(Err(e));
+            s.reply.send(Err(e));
             None
         }
     }
@@ -1220,14 +1427,16 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
         packed_a: Option<Arc<PackedA>>,
         b: Arc<Matrix>,
         packed_b: Option<Arc<PackedB>>,
-        reply: mpsc::Sender<anyhow::Result<JobResult>>,
+        reply: Reply,
         accepted_at: Instant,
+        tenant: TenantId,
+        deadline: Option<Instant>,
     }
     let inprocess = shared.engine.is_inprocess();
     let mut builds: Vec<Build> = Vec::with_capacity(planned.len());
     for p in planned {
         let Planned { sub, run, plan, .. } = p;
-        let Submission { job, reply, accepted_at } = sub;
+        let Admitted { job, reply, accepted_at, tenant, deadline } = sub;
         let GemmJob { id, a, b, .. } = job;
         let resolved = (|| -> anyhow::Result<_> {
             let (a, packed_a) = resolve_a_operand(shared, a, run.si, inprocess)?;
@@ -1258,12 +1467,22 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
             Ok((a, packed_a, b, packed_b))
         })();
         match resolved {
-            Ok((a, packed_a, b, packed_b)) => {
-                builds.push(Build { id, run, plan, a, packed_a, b, packed_b, reply, accepted_at })
-            }
+            Ok((a, packed_a, b, packed_b)) => builds.push(Build {
+                id,
+                run,
+                plan,
+                a,
+                packed_a,
+                b,
+                packed_b,
+                reply,
+                accepted_at,
+                tenant,
+                deadline,
+            }),
             Err(e) => {
                 shared.metrics.job_failed();
-                let _ = reply.send(Err(e));
+                reply.send(Err(e));
             }
         }
     }
@@ -1294,6 +1513,8 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
             build.reply,
             build.accepted_at,
             batched,
+            build.tenant,
+            build.deadline,
         ));
     }
     publish(shared, subs, tasks);
@@ -1356,9 +1577,11 @@ fn build_sub(
     b: Arc<Matrix>,
     panels: Option<PackedPanels>,
     num_tasks: usize,
-    reply: mpsc::Sender<anyhow::Result<JobResult>>,
+    reply: Reply,
     accepted_at: Instant,
     batched: bool,
+    tenant: TenantId,
+    deadline: Option<Instant>,
 ) -> SubJob {
     let mut c = Matrix::zeros(a.rows, b.cols);
     let raw = RawOut { ptr: c.data.as_mut_ptr(), rows: c.rows, cols: c.cols };
@@ -1375,6 +1598,8 @@ fn build_sub(
         reply: Mutex::new(Some(reply)),
         accepted_at,
         batched,
+        tenant,
+        deadline,
     }
 }
 
@@ -1404,7 +1629,7 @@ enum Carry {
     Planned(Planned),
 }
 
-fn dispatcher_loop(shared: Arc<Shared>, admission: Arc<Admission>) {
+fn dispatcher_loop(shared: Arc<Shared>, admission: Arc<FrontEnd<QueueItem>>) {
     let mut carry: Option<Carry> = None;
     loop {
         let item = match carry.take() {
@@ -1434,7 +1659,7 @@ fn dispatcher_loop(shared: Arc<Shared>, admission: Arc<Admission>) {
 /// admitted between them).
 fn dispatch_single(
     shared: &Arc<Shared>,
-    admission: &Admission,
+    admission: &FrontEnd<QueueItem>,
     first: Planned,
     carry: &mut Option<Carry>,
 ) {
@@ -1467,7 +1692,7 @@ fn dispatch_single(
 
 /// Dispatch an explicit group: batch its small members (in windows),
 /// activate the rest individually.
-fn dispatch_group(shared: &Arc<Shared>, group: Vec<Submission>) {
+fn dispatch_group(shared: &Arc<Shared>, group: Vec<Admitted>) {
     let mut smalls: Vec<Planned> = Vec::new();
     for s in group {
         if let Some(p) = plan_one(shared, s) {
@@ -1549,7 +1774,7 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
     let reject_all = |subs: Vec<SharedSub>, msg: String| {
         for s in subs {
             shared.metrics.job_failed();
-            let _ = s.reply.send(Err(anyhow::anyhow!("shared-B batch rejected: {msg}")));
+            s.reply.send(Err(anyhow::anyhow!("shared-B batch rejected: {msg}")));
         }
     };
     // Resolve the shared operand up front: a dead handle or a
@@ -1585,7 +1810,7 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
             Ok((rows, cols)) if cols == b.rows && rows > 0 => accepted.push((s, (rows, cols))),
             Ok((rows, cols)) => {
                 shared.metrics.job_failed();
-                let _ = s.reply.send(Err(anyhow::anyhow!(
+                s.reply.send(Err(anyhow::anyhow!(
                     "sub-job {}: A is {}x{} against shared B {}x{}",
                     s.id,
                     rows,
@@ -1596,7 +1821,7 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
             }
             Err(e) => {
                 shared.metrics.job_failed();
-                let _ = s.reply.send(Err(e));
+                s.reply.send(Err(e));
             }
         }
     }
@@ -1611,7 +1836,7 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
             let msg = format!("{e:#}");
             for (s, _) in accepted {
                 shared.metrics.job_failed();
-                let _ = s.reply.send(Err(anyhow::anyhow!("shared-B batch rejected: {msg}")));
+                s.reply.send(Err(anyhow::anyhow!("shared-B batch rejected: {msg}")));
             }
             return;
         }
@@ -1658,7 +1883,7 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
             Ok(resolved) => resolved,
             Err(e) => {
                 shared.metrics.job_failed();
-                let _ = s.reply.send(Err(e));
+                s.reply.send(Err(e));
                 continue;
             }
         };
@@ -1681,6 +1906,8 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
             s.reply,
             s.accepted_at,
             batched,
+            s.tenant,
+            s.deadline,
         ));
     }
     if subs_built.is_empty() {
@@ -1853,7 +2080,9 @@ fn execute_subtask(shared: &Shared, job: &ActiveJob, tag: u64, st: SubTask) {
 }
 
 /// Assemble and deliver one finished sub-job: take C, run the timing
-/// simulation, record per-job metrics, reply on the ticket.
+/// simulation, record per-job and per-tenant metrics (a deadline job
+/// that completes after its deadline counts as a miss), reply on the
+/// ticket.
 fn finalize_sub(shared: &Shared, sub: &SubJob) {
     let c = sub.out.lock().unwrap().take();
     let err = sub.error.lock().unwrap().take();
@@ -1864,6 +2093,15 @@ fn finalize_sub(shared: &Shared, sub: &SubJob) {
             .simulate(&sub.run, sub.a.rows, sub.a.cols, sub.b.cols, &SimOptions::default())
             .map(|sim| {
                 shared.metrics.job_done(host_latency_secs, sim.total_secs);
+                let missed = sub.deadline.map(|d| Instant::now() > d);
+                if let Some(m) = missed {
+                    shared.metrics.deadline_job_done(m);
+                }
+                shared.metrics.tenant_job_done(
+                    sub.tenant,
+                    sub.deadline.is_some(),
+                    missed.unwrap_or(false),
+                );
                 JobResult {
                     id: sub.id,
                     c,
@@ -1879,12 +2117,13 @@ fn finalize_sub(shared: &Shared, sub: &SubJob) {
     if result.is_err() {
         shared.metrics.job_failed();
     }
-    if let Some(tx) = sub.reply.lock().unwrap().take() {
-        let _ = tx.send(result);
+    if let Some(reply) = sub.reply.lock().unwrap().take() {
+        reply.send(result);
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // legacy shims are exercised on purpose
 mod tests {
     use super::*;
 
@@ -2352,24 +2591,39 @@ mod tests {
         ));
     }
 
-    #[test]
-    fn admission_hands_back_shared_batch_intact() {
-        // The recovery path try_submit_batched_gemm builds on: a shed
-        // shared-B batch comes back with every operand intact.
-        let adm = Admission::new(1);
-        let (tx, _rx) = mpsc::channel::<anyhow::Result<JobResult>>();
-        adm.try_push(QueueItem::One(Submission {
+    /// Test-only [`AdmitMeta`]: default tenant, no deadline, `cost` jobs.
+    fn meta(cost: usize) -> AdmitMeta {
+        AdmitMeta {
+            tenant: TenantId::DEFAULT,
+            weight: 1,
+            cost,
+            deadline: None,
+            predicted_secs: 0.0,
+        }
+    }
+
+    fn admitted(tx: &mpsc::Sender<anyhow::Result<JobResult>>, id: u64) -> Admitted {
+        Admitted {
             job: GemmJob {
-                id: 0,
+                id,
                 a: Matrix::zeros(1, 1).into(),
                 b: Matrix::zeros(1, 1).into(),
                 run: None,
             },
-            reply: tx.clone(),
+            reply: Reply { tx: tx.clone(), _slot: None },
             accepted_at: Instant::now(),
-        }))
-        .map_err(|_| ())
-        .unwrap();
+            tenant: TenantId::DEFAULT,
+            deadline: None,
+        }
+    }
+
+    #[test]
+    fn admission_hands_back_shared_batch_intact() {
+        // The recovery path try_submit builds on: a shed shared-B batch
+        // comes back with every operand intact.
+        let adm: FrontEnd<QueueItem> = FrontEnd::new(1);
+        let (tx, _rx) = mpsc::channel::<anyhow::Result<JobResult>>();
+        adm.try_push(meta(1), QueueItem::One(admitted(&tx, 0))).map_err(|_| ()).unwrap();
         let batch = QueueItem::SharedB(SharedBatch {
             b: Matrix::random(5, 7, 991).into(),
             run: None,
@@ -2377,12 +2631,14 @@ mod tests {
                 .map(|i| SharedSub {
                     id: i,
                     a: Matrix::random(3, 5, 992 + i).into(),
-                    reply: tx.clone(),
+                    reply: Reply { tx: tx.clone(), _slot: None },
                     accepted_at: Instant::now(),
+                    tenant: TenantId::DEFAULT,
+                    deadline: None,
                 })
                 .collect(),
         });
-        match adm.try_push(batch) {
+        match adm.try_push(meta(2), batch) {
             Err(TryPushError::Full(QueueItem::SharedB(SharedBatch { b, subs, .. }))) => {
                 assert_eq!(b.inline_dims(), Some((5, 7)));
                 assert_eq!(subs.len(), 2);
@@ -2394,27 +2650,21 @@ mod tests {
 
     #[test]
     fn admission_try_push_full_and_closed() {
-        let adm = Admission::new(1);
+        let adm: FrontEnd<QueueItem> = FrontEnd::new(1);
         let (tx, _rx) = mpsc::channel();
-        let sub = |tx: &mpsc::Sender<anyhow::Result<JobResult>>| {
-            QueueItem::One(Submission {
-                job: GemmJob {
-                    id: 0,
-                    a: Matrix::zeros(1, 1).into(),
-                    b: Matrix::zeros(1, 1).into(),
-                    run: None,
-                },
-                reply: tx.clone(),
-                accepted_at: Instant::now(),
-            })
-        };
-        assert!(adm.try_push(sub(&tx)).is_ok());
-        assert!(matches!(adm.try_push(sub(&tx)), Err(TryPushError::Full(_))));
+        assert!(adm.try_push(meta(1), QueueItem::One(admitted(&tx, 0))).is_ok());
+        assert!(matches!(
+            adm.try_push(meta(1), QueueItem::One(admitted(&tx, 1))),
+            Err(TryPushError::Full(_))
+        ));
         assert_eq!(adm.len(), 1);
         assert!(adm.try_pop().is_some());
-        assert!(adm.try_push(sub(&tx)).is_ok());
+        assert!(adm.try_push(meta(1), QueueItem::One(admitted(&tx, 2))).is_ok());
         adm.close();
-        assert!(matches!(adm.try_push(sub(&tx)), Err(TryPushError::Closed(_))));
+        assert!(matches!(
+            adm.try_push(meta(1), QueueItem::One(admitted(&tx, 3))),
+            Err(TryPushError::Closed(_))
+        ));
         // Closed but not drained: the dispatcher still sees the item.
         assert!(adm.pop_blocking().is_some());
         assert!(adm.pop_blocking().is_none());
@@ -2422,24 +2672,59 @@ mod tests {
 
     #[test]
     fn admission_oversized_group_admitted_when_empty() {
-        let adm = Admission::new(2);
+        let adm: FrontEnd<QueueItem> = FrontEnd::new(2);
         let (tx, _rx) = mpsc::channel::<anyhow::Result<JobResult>>();
-        let group = QueueItem::Group(
-            (0..5)
-                .map(|i| Submission {
-                    job: GemmJob {
-                        id: i,
-                        a: Matrix::zeros(1, 1).into(),
-                        b: Matrix::zeros(1, 1).into(),
-                        run: None,
-                    },
-                    reply: tx.clone(),
-                    accepted_at: Instant::now(),
-                })
-                .collect(),
-        );
-        assert!(adm.try_push(group).is_ok());
+        let group = QueueItem::Group((0..5).map(|i| admitted(&tx, i)).collect());
+        assert!(adm.try_push(meta(5), group).is_ok());
         assert_eq!(adm.len(), 5);
+    }
+
+    #[test]
+    fn server_config_default_is_valid() {
+        // The Default-consistency gate: every knob Default ships must
+        // pass its own validation, and the sharded front is on by
+        // default.
+        let cfg = ServerConfig::default();
+        cfg.validate(&HardwareConfig::paper()).unwrap();
+        assert!(cfg.admission_shards >= 2, "sharded admission is the default");
+        assert!(ServerConfig { workers: 0, ..cfg }.validate(&HardwareConfig::paper()).is_err());
+        assert!(
+            ServerConfig { admission_shards: 0, ..ServerConfig::default() }
+                .validate(&HardwareConfig::paper())
+                .is_err()
+        );
+        assert!(
+            ServerConfig { queue_capacity: 0, ..ServerConfig::default() }
+                .validate(&HardwareConfig::paper())
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn deadline_misses_counted_and_surfaced() {
+        let srv = server(small_cfg());
+        let a = Matrix::random(24, 16, 51);
+        let b = Matrix::random(16, 24, 52);
+        let want = a.matmul(&b);
+        // A deadline already in the past must still complete correctly —
+        // deadlines shape ordering, they never drop work — but counts as
+        // a miss for its tenant.
+        let t9 = TenantId(9);
+        let r = srv
+            .submit_blocking(
+                Submission::gemm(a, b)
+                    .tenant(t9)
+                    .deadline(Duration::ZERO)
+                    .run(RunConfig::square(2, 16)),
+            )
+            .unwrap();
+        assert!(r[0].c.allclose(&want, 1e-4));
+        let s = srv.stats();
+        assert_eq!((s.deadline_jobs, s.deadline_misses), (1, 1));
+        let (tid, tc) = s.tenants.iter().find(|(t, _)| *t == t9).expect("tenant row");
+        assert_eq!(*tid, t9);
+        assert_eq!((tc.jobs, tc.deadline_jobs, tc.deadline_misses), (1, 1, 1));
+        assert!(s.to_string().contains("deadline(miss/ddl)=1/1"), "got: {s}");
     }
 
     #[test]

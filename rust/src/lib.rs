@@ -40,9 +40,13 @@
 //!   once per job, workers draining lock-free WQMs and writing disjoint
 //!   C blocks in place, timing via the simulator. Two shapes: the
 //!   one-job-at-a-time `Coordinator`, and the multi-job `JobServer` —
-//!   a persistent pool behind a bounded admission queue with cross-job
+//!   a persistent pool behind a traffic-shaped admission front end
+//!   (one typed `Submission` builder with `submit_async` →
+//!   awaitable `JobFuture`, per-tenant quotas + weighted
+//!   deficit-round-robin fairness, deadline-slack dispatch with
+//!   misses surfaced in `stats()`, N admission shards) with cross-job
 //!   work stealing, small-job batching, shared-operand batches
-//!   (`submit_batched_gemm`: one B packed once, fanned out to N
+//!   (`Submission::batched`: one B packed once, fanned out to N
 //!   sub-jobs as a `JobGroup`, bit-identical to individual runs), and
 //!   a server-resident operand registry symmetric over both sides
 //!   (`register_b` → `WeightHandle`, `register_a` →
@@ -88,6 +92,7 @@ pub mod wqm;
 
 pub use config::{HardwareConfig, RunConfig};
 pub use coordinator::{
-    ActivationHandle, AOperand, BOperand, GemmJob, JobServer, ServerConfig, WeightHandle,
+    ActivationHandle, AOperand, BOperand, GemmJob, JobFuture, JobServer, ServerConfig,
+    SubmitError, Submission, TenantConfig, TenantId, WeightHandle,
 };
 pub use gemm::Matrix;

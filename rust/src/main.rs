@@ -17,7 +17,7 @@ use multi_array::accelerator::{Accelerator, SimOptions};
 use multi_array::analytical::{self, bandwidth::SI_GRID, BandwidthSurface};
 use multi_array::cnn;
 use multi_array::config::{HardwareConfig, RunConfig};
-use multi_array::coordinator::{Coordinator, GemmJob, NumericsEngine};
+use multi_array::coordinator::{Coordinator, GemmJob, NumericsEngine, Submission};
 use multi_array::dse;
 use multi_array::gemm::Matrix;
 use multi_array::resources;
@@ -46,12 +46,18 @@ COMMANDS:
                                     '-' reads stdin. --shared-b runs the
                                     batch (uniform K N required) against ONE
                                     shared B both ways — individual submits
-                                    vs submit_batched_gemm — and reports the
+                                    vs one Submission::batched — and reports the
                                     pack-traffic win. --register-weights
                                     runs the batch R times (default 3)
                                     inline vs through one registered
                                     WeightHandle and reports the repacks
                                     avoided across runs
+  serve-demo [--tenants N] [--jobs J] [--deadline-ms MS] [--workers W]
+             [--golden]             multi-tenant admission demo: N tenants
+                                    with DRR weights 1..=N submit skewed
+                                    async streams under a per-job deadline;
+                                    prints per-tenant service counters and
+                                    the deadline-miss rate from stats()
   schedule [--reconfig-us US]       whole-AlexNet schedule: per-layer
                                     optimal (w/ reconfiguration cost) vs
                                     best fixed config
@@ -140,6 +146,7 @@ fn main() -> anyhow::Result<()> {
         "run" => cmd_run(&hw, &args),
         "strassen" => cmd_strassen(&hw, &args),
         "batch" => cmd_batch(&hw, &args),
+        "serve-demo" => cmd_serve_demo(&hw, &args),
         "schedule" => cmd_schedule(&hw, &args),
         "attention" => cmd_attention(&hw, &args),
         "help" | "-h" | "--help" => {
@@ -612,8 +619,8 @@ fn batch_server(
 
 /// Shared-B mode of `marr batch`: the whole job file is one batch
 /// multiplying a single B, run through the `JobServer` both ways —
-/// individual `submit`s (N private B packs) and one
-/// `submit_batched_gemm` (one shared pack) — so the pack-traffic win is
+/// individual GEMM submissions (N private B packs) and one
+/// `Submission::batched` (one shared pack) — so the pack-traffic win is
 /// directly observable from the printed stats.
 fn cmd_batch_shared_b(
     hw: &HardwareConfig,
@@ -622,18 +629,20 @@ fn cmd_batch_shared_b(
 ) -> anyhow::Result<()> {
     let SharedBWorkload { b, many_a, run, k0, n0 } = shared_b_workload("--shared-b", jobs)?;
 
-    // Baseline: the same traffic, one submit per job.
+    // Baseline: the same traffic, one submission per job.
     let srv = batch_server(hw, args, jobs.len(), "individual")?;
     let t0 = std::time::Instant::now();
-    let tickets: Vec<_> = many_a
+    let futures: Vec<_> = many_a
         .iter()
         .enumerate()
         .map(|(id, a)| {
-            srv.submit(GemmJob { id: id as u64, a: a.clone().into(), b: b.clone().into(), run })
+            srv.submit_async(
+                Submission::gemm(a.clone(), b.clone()).id(id as u64).run(run),
+            )
         })
         .collect::<anyhow::Result<_>>()?;
-    for t in tickets {
-        t.wait()?;
+    for f in futures {
+        f.wait()?;
     }
     let individual_wall = t0.elapsed().as_secs_f64();
     let individual_stats = srv.stats();
@@ -642,7 +651,7 @@ fn cmd_batch_shared_b(
     // Shared: one admission unit, one packed B for the whole batch.
     let srv = batch_server(hw, args, jobs.len(), "shared-B")?;
     let t0 = std::time::Instant::now();
-    let results = srv.submit_batched_gemm(b, many_a, run)?.wait_all()?;
+    let results = srv.submit_blocking(Submission::batched(b, many_a).run(run))?;
     let shared_wall = t0.elapsed().as_secs_f64();
     let shared_stats = srv.stats();
     srv.shutdown();
@@ -686,7 +695,7 @@ fn cmd_batch_register_weights(
     let srv = batch_server(hw, args, jobs.len(), "inline")?;
     let t0 = std::time::Instant::now();
     for _ in 0..repeat {
-        srv.submit_batched_gemm(b.clone(), many_a.clone(), run)?.wait_all()?;
+        srv.submit_blocking(Submission::batched(b.clone(), many_a.clone()).run(run))?;
     }
     let inline_wall = t0.elapsed().as_secs_f64();
     let inline_stats = srv.stats();
@@ -697,7 +706,7 @@ fn cmd_batch_register_weights(
     let handle = srv.register_b(b)?;
     let t0 = std::time::Instant::now();
     for _ in 0..repeat {
-        srv.submit_batched_gemm(handle, many_a.clone(), run)?.wait_all()?;
+        srv.submit_blocking(Submission::batched(handle, many_a.clone()).run(run))?;
     }
     let registered_wall = t0.elapsed().as_secs_f64();
     let registered_stats = srv.stats();
@@ -720,6 +729,79 @@ fn cmd_batch_register_weights(
     );
     println!("  inline server:     {inline_stats}");
     println!("  registered server: {registered_stats}");
+    Ok(())
+}
+
+/// `marr serve-demo`: the multi-tenant admission front end in action.
+/// `--tenants N` clients with DRR weights `1..=N` each submit a skewed
+/// async stream (tenant `t` submits `(t+1) * --jobs` GEMMs up front, so
+/// the queue is backlogged and fairness — not arrival order — decides
+/// service) under a per-job `--deadline-ms` budget. Per-tenant service
+/// counters and the deadline-miss rate come straight from `stats()`.
+fn cmd_serve_demo(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
+    use multi_array::coordinator::{JobServer, ServerConfig, TenantConfig, TenantId};
+
+    let tenants = args.get_usize("tenants")?.unwrap_or(3).max(1);
+    let per = args.get_usize("jobs")?.unwrap_or(8).max(1);
+    let deadline_ms = args.get_usize("deadline-ms")?.unwrap_or(250) as u64;
+    let engine = engine_from(args);
+    println!(
+        "serve-demo: numerics backend {} | {tenants} tenants, DRR weights 1..={tenants}",
+        engine.name
+    );
+    let mut cfg = ServerConfig::default();
+    if let Some(w) = args.get_usize("workers")? {
+        cfg.workers = w;
+    }
+    cfg.default_run = Some(RunConfig::square(2, 16));
+    let srv = JobServer::new(hw.clone(), engine, cfg)?;
+
+    for t in 0..tenants {
+        srv.configure_tenant(
+            TenantId(t as u32),
+            TenantConfig { weight: (t + 1) as u32, ..TenantConfig::default() },
+        )?;
+    }
+
+    let mut futures = Vec::new();
+    for t in 0..tenants {
+        for j in 0..(t + 1) * per {
+            let seed = (t * 10_000 + j) as u64;
+            let a = Matrix::random(48, 32, seed * 2);
+            let b = Matrix::random(32, 40, seed * 2 + 1);
+            futures.push(srv.submit_async(
+                Submission::gemm(a, b)
+                    .id(seed)
+                    .tenant(TenantId(t as u32))
+                    .deadline(std::time::Duration::from_millis(deadline_ms)),
+            )?);
+        }
+    }
+    let total = futures.len();
+    let t0 = std::time::Instant::now();
+    for f in futures {
+        f.wait()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let stats = srv.stats();
+    println!("\n{total} jobs served in {wall:.3} s wall");
+    println!(
+        "deadlines: {}/{} missed ({deadline_ms} ms budget each)",
+        stats.deadline_misses, stats.deadline_jobs
+    );
+    println!("{:>8} {:>8} {:>8} {:>8}", "tenant", "weight", "jobs", "misses");
+    for (id, c) in &stats.tenants {
+        println!(
+            "{:>8} {:>8} {:>8} {:>8}",
+            format!("#{}", id.0),
+            id.0 + 1,
+            c.jobs,
+            c.deadline_misses
+        );
+    }
+    println!("server: {stats}");
+    srv.shutdown();
     Ok(())
 }
 

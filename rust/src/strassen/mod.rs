@@ -15,7 +15,7 @@
 //!   quadrants through borrowed [`crate::gemm::MatrixView`]s;
 //! * the 7 sub-products of a level are submitted to the
 //!   [`crate::coordinator::JobServer`] as **one group**
-//!   ([`crate::coordinator::JobServer::submit_group`]) — cross-job work
+//!   ([`crate::coordinator::Submission::group`]) — cross-job work
 //!   stealing spreads the 7-way fan-out over the persistent pool, the
 //!   serving-runtime twin of the paper's inter-array WQM balancing;
 //! * recursion depth comes from the analytical model:
@@ -37,7 +37,7 @@
 //! member, so the combinations are **registered with the server's
 //! operand registry** ([`register_weights`] → [`StrassenWeights`],
 //! `7^depth` handles in recursion order) and each leaf pairing streams
-//! through [`crate::coordinator::JobServer::submit_batched_gemm`] under
+//! through [`crate::coordinator::Submission::batched`] under
 //! its handle — every B combination packed exactly once for the whole
 //! batch. Repeated inference over the same weights should hold the
 //! [`StrassenWeights`] and call [`multiply_batched_registered`] per

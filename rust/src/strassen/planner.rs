@@ -22,7 +22,9 @@
 
 use crate::analytical::{strassen_crossover, CrossoverPlan};
 use crate::config::RunConfig;
-use crate::coordinator::{ActivationHandle, AOperand, GemmJob, JobServer, WeightHandle};
+use crate::coordinator::{
+    ActivationHandle, AOperand, GemmJob, JobServer, Submission, WeightHandle,
+};
 use crate::gemm::{ops, Matrix, MatrixView};
 
 use super::arena::{ArenaStats, ScratchArena};
@@ -192,7 +194,7 @@ pub fn multiply(
     let (c, padded) = if depth == 0 {
         let job =
             GemmJob { id: ctx.fresh_id(), a: a.clone().into(), b: b.clone().into(), run: cfg.run };
-        let r = server.submit(job)?.wait()?;
+        let r = server.submit_async(job)?.wait_one()?;
         ctx.leaf_gemms = 1;
         (r.c, (m, k, n))
     } else {
@@ -277,7 +279,7 @@ fn node(
             .into_iter()
             .map(|(ta, tb)| GemmJob { id: ctx.fresh_id(), a: ta.into(), b: tb.into(), run: ctx.run })
             .collect();
-        let results = ctx.server.submit_group(jobs)?.wait_all()?;
+        let results = ctx.server.submit_blocking(Submission::group(jobs))?;
         ctx.leaf_gemms += 7;
         let mut ms = Vec::with_capacity(7);
         for r in results {
@@ -477,8 +479,8 @@ fn collect_b_combos(
 /// `B11 + B22`, and so on. A per-member recursion would rematerialize
 /// and repack each combination `batch` times; here the combinations are
 /// **registered with the server's operand registry**
-/// ([`register_weights`]) and every leaf pairing streams through
-/// [`JobServer::submit_batched_gemm`] under its [`WeightHandle`] — one
+/// ([`register_weights`]) and every leaf pairing streams through a
+/// [`Submission::batched`] under its [`WeightHandle`] — one
 /// shared-B group per combination, the packed combo built exactly once
 /// however large the batch is (`Metrics::b_panel_packs` = `7^depth`
 /// total, `Metrics::panels_shared` = `(batch-1) · 7^depth`). This
@@ -526,8 +528,9 @@ pub fn multiply_batched(
 
     if depth == 0 {
         // One direct shared-B group; nothing worth registering.
-        let group = server.submit_batched_gemm(b.clone(), a_list.to_vec(), cfg.run)?;
-        let cs = group.wait_all()?.into_iter().map(|r| r.c).collect();
+        let results =
+            server.submit_blocking(Submission::batched(b.clone(), a_list.to_vec()).run(cfg.run))?;
+        let cs = results.into_iter().map(|r| r.c).collect();
         return Ok(BatchedStrassenReport {
             cs,
             depth: 0,
@@ -597,10 +600,11 @@ pub fn multiply_batched_registered(
     };
 
     let (cs, padded) = if depth == 0 {
-        let group = server.submit_batched_gemm(weights.handles[0], a_list.to_vec(), run)?;
+        let results = server
+            .submit_blocking(Submission::batched(weights.handles[0], a_list.to_vec()).run(run))?;
         ctx.leaf_groups = 1;
         ctx.leaf_gemms = a_list.len() as u64;
-        let cs = group.wait_all()?.into_iter().map(|r| r.c).collect();
+        let cs = results.into_iter().map(|r| r.c).collect();
         (cs, (m, k, weights.n))
     } else {
         let align = 1usize << depth;
@@ -690,13 +694,13 @@ fn node_batched_registered(
         for acs in a_combos {
             let h = weights.handles[*cursor];
             *cursor += 1;
-            groups.push(ctx.server.submit_batched_gemm(h, acs, ctx.run)?);
+            groups.push(ctx.server.submit_async(Submission::batched(h, acs).run(ctx.run))?);
         }
         ctx.leaf_groups += 7;
         ctx.leaf_gemms += 7 * batch as u64;
         let mut ms = Vec::with_capacity(7);
         for g in groups {
-            let results = g.wait_all()?;
+            let results = g.wait()?;
             let mut per_member = Vec::with_capacity(batch);
             for r in results {
                 anyhow::ensure!(
@@ -973,10 +977,11 @@ pub fn multiply_batched_bi_registered(
     let (cs, padded) = if depth == 0 {
         let many_a: Vec<AOperand> =
             acts.handles[0].iter().map(|&h| AOperand::from(h)).collect();
-        let group = server.submit_batched_gemm_operands(weights.handles[0], many_a, run)?;
+        let results = server
+            .submit_blocking(Submission::batched(weights.handles[0], many_a).run(run))?;
         ctx.leaf_groups = 1;
         ctx.leaf_gemms = acts.batch as u64;
-        let cs = group.wait_all()?.into_iter().map(|r| r.c).collect();
+        let cs = results.into_iter().map(|r| r.c).collect();
         (cs, (acts.m, acts.k, weights.n))
     } else {
         let (mp, kp, np) = (acts.padded_m, acts.padded_k, weights.padded_n);
@@ -1038,13 +1043,13 @@ fn node_bi_registered(
             let many_a: Vec<AOperand> =
                 acts.handles[*cursor].iter().map(|&h| AOperand::from(h)).collect();
             *cursor += 1;
-            groups.push(ctx.server.submit_batched_gemm_operands(wh, many_a, ctx.run)?);
+            groups.push(ctx.server.submit_async(Submission::batched(wh, many_a).run(ctx.run))?);
         }
         ctx.leaf_groups += 7;
         ctx.leaf_gemms += 7 * batch as u64;
         let mut ms = Vec::with_capacity(7);
         for g in groups {
-            let results = g.wait_all()?;
+            let results = g.wait()?;
             let mut per_member = Vec::with_capacity(batch);
             for r in results {
                 anyhow::ensure!(

@@ -11,7 +11,10 @@
 //!
 //! Concurrency design: membership changes (register/unregister) are rare
 //! compared to pops, so they take a plain mutex and bump a global epoch
-//! counter. Workers keep a private snapshot of the table and revalidate
+//! counter. Registration is multi-producer by construction: the server's
+//! N admission shards plan and pack independently and publish into this
+//! one table concurrently, so cross-job stealing still sees a single
+//! pool — sharding the front never partitions the work. Workers keep a private snapshot of the table and revalidate
 //! it with a single relaxed-cost atomic load per scan
 //! ([`JobRegistry::epoch`]); only when the epoch moved do they pay the
 //! lock for a fresh [`JobRegistry::snapshot`]. The hot path (popping
@@ -150,6 +153,34 @@ mod tests {
         assert_ne!(reg.epoch(), seen);
         let (seen, _) = reg.snapshot();
         assert_eq!(reg.epoch(), seen);
+    }
+
+    #[test]
+    fn concurrent_shard_registration_yields_one_pool() {
+        // The sharded-dispatcher contract: several "shards" registering
+        // concurrently produce unique tags and one coherent table — a
+        // reader snapshot sees every published job exactly once.
+        let reg = Arc::new(JobRegistry::<u64>::new());
+        std::thread::scope(|s| {
+            for shard in 0..4u64 {
+                let reg = &reg;
+                s.spawn(move || {
+                    for i in 0..25 {
+                        reg.register(Arc::new(shard * 100 + i));
+                    }
+                });
+            }
+        });
+        let (_, jobs) = reg.snapshot();
+        assert_eq!(jobs.len(), 100);
+        let mut tags: Vec<u64> = jobs.iter().map(|(t, _)| *t).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), 100, "tags unique across shards");
+        let mut vals: Vec<u64> = jobs.iter().map(|(_, j)| **j).collect();
+        vals.sort_unstable();
+        vals.dedup();
+        assert_eq!(vals.len(), 100, "every shard's jobs all present");
     }
 
     #[test]

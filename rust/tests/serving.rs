@@ -1,13 +1,22 @@
 //! Serving-runtime integration tests: the multi-job `JobServer` under
 //! real thread contention — per-job correctness against the scalar
 //! reference, task conservation across the job table, cross-job
-//! stealing actually firing, batching bit-identity, and backpressure.
+//! stealing actually firing, batching bit-identity, backpressure, and
+//! the multi-tenant admission front end (DRR fairness, quota hand-back,
+//! deadline accounting, async/blocking bit-identity).
+//!
+//! Several tests deliberately exercise the deprecated pre-`Submission`
+//! entry points (`submit`, `submit_batch`, `submit_batched_gemm`, ...):
+//! they are kept shims and must keep behaving until removed.
+#![allow(deprecated)]
+
+use std::time::Duration;
 
 use multi_array::blocking::BlockPlan;
 use multi_array::config::{HardwareConfig, RunConfig};
 use multi_array::coordinator::{
-    Coordinator, GemmJob, JobServer, NumericsEngine, ServerConfig, TrySubmitBatchedError,
-    TrySubmitError,
+    Coordinator, GemmJob, JobServer, NumericsEngine, ServerConfig, SubmitError, Submission,
+    SubmissionKind, TenantConfig, TenantId, TrySubmitBatchedError,
 };
 use multi_array::gemm::Matrix;
 
@@ -474,8 +483,9 @@ fn try_submit_batched_gemm_sheds_with_operands_returned() {
 
 #[test]
 fn try_submit_sheds_load_without_losing_jobs() {
-    // try_submit either admits a job (which must then complete
-    // correctly) or hands it back intact — never silently drops it.
+    // try_submit either admits a submission (which must then complete
+    // correctly) or hands it back intact inside `SubmitError::Full` —
+    // never silently drops it.
     let srv = server(cfg(2, 2));
     let run = RunConfig::square(2, 16);
     let mut admitted = Vec::new();
@@ -484,23 +494,260 @@ fn try_submit_sheds_load_without_losing_jobs() {
         let a = Matrix::random(32, 16, j);
         let b = Matrix::random(16, 32, j + 200);
         let want = a.matmul(&b);
-        match srv.try_submit(GemmJob { id: j, a: a.into(), b: b.into(), run: Some(run) }) {
-            Ok(t) => admitted.push((t, want)),
-            Err(TrySubmitError::Full(job)) => {
-                assert_eq!(job.id, j, "rejected job must come back intact");
-                assert_eq!(job.a.inline_dims(), Some((32, 16)));
-                assert_eq!(job.b.as_inline().unwrap().cols, 32);
+        match srv.try_submit(Submission::gemm(a, b).id(j).run(run)) {
+            Ok(f) => admitted.push((f, want)),
+            Err(SubmitError::Full(s)) => {
+                assert_eq!(s.jobs(), 1);
+                match s.into_kind() {
+                    SubmissionKind::Gemm { a, b } => {
+                        assert_eq!(a.inline_dims(), Some((32, 16)), "A must come back intact");
+                        assert_eq!(b.inline_dims(), Some((16, 32)), "B must come back intact");
+                    }
+                    other => panic!("wrong kind handed back: {other:?}"),
+                }
                 rejected += 1;
             }
-            Err(TrySubmitError::Closed(_)) => panic!("server is not closed"),
+            Err(e) => panic!("unexpected rejection: {e}"),
         }
     }
     assert!(!admitted.is_empty());
-    for (t, want) in admitted {
-        assert!(t.wait().unwrap().c.allclose(&want, 1e-4));
+    for (f, want) in admitted {
+        assert!(f.wait_one().unwrap().c.allclose(&want, 1e-4));
     }
     // Conservation: admitted + rejected covers every submission.
     assert_eq!(srv.metrics().jobs() as usize + rejected, 100);
+}
+
+#[test]
+fn async_and_blocking_paths_bit_identical_over_ragged_shapes() {
+    // The api-redesign acceptance gate: `submit_async` + wait and
+    // `submit_blocking` must produce bit-identical results — same
+    // admission queue, same dispatch, same workers — across ragged
+    // prime/odd shapes hitting every packing edge, on the lone-GEMM and
+    // the shared-B path alike.
+    let run = RunConfig::square(2, 16);
+    for (m, k, n, seed) in [
+        (7usize, 13usize, 29usize, 9100u64),
+        (31, 23, 17, 9200),
+        (1, 5, 53, 9300),
+        (37, 11, 19, 9400),
+    ] {
+        let a = Matrix::random(m, k, seed);
+        let b = Matrix::random(k, n, seed + 1);
+        let srv_async = server(cfg(4, 16));
+        let r_async = srv_async
+            .submit_async(Submission::gemm(a.clone(), b.clone()).run(run))
+            .unwrap()
+            .wait_one()
+            .unwrap();
+        let srv_blocking = server(cfg(4, 16));
+        let r_blocking = srv_blocking
+            .submit_blocking(Submission::gemm(a.clone(), b.clone()).run(run))
+            .unwrap();
+        assert_eq!(r_blocking.len(), 1);
+        assert_eq!(
+            r_async.c.data, r_blocking[0].c.data,
+            "async vs blocking diverged for {m}x{k}x{n}"
+        );
+        // And both agree with the oracle (not just with each other).
+        assert!(r_async.c.allclose(&a.matmul(&b), 1e-4));
+    }
+
+    // Shared-B batch: member-for-member identity across the two paths.
+    let b = Matrix::random(13, 29, 9500);
+    let many_a: Vec<Matrix> = [7usize, 31, 1, 17]
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| Matrix::random(m, 13, 9501 + i as u64))
+        .collect();
+    let srv_async = server(cfg(4, 16));
+    let r_async = srv_async
+        .submit_async(Submission::batched(b.clone(), many_a.clone()).run(run))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let srv_blocking = server(cfg(4, 16));
+    let r_blocking = srv_blocking
+        .submit_blocking(Submission::batched(b.clone(), many_a.clone()).run(run))
+        .unwrap();
+    assert_eq!(r_async.len(), r_blocking.len());
+    for (i, (x, y)) in r_async.iter().zip(&r_blocking).enumerate() {
+        assert_eq!(x.c.data, y.c.data, "shared-B member {i} diverged across paths");
+        assert!(x.c.allclose(&many_a[i].matmul(&b), 1e-4));
+    }
+}
+
+#[test]
+fn drr_fairness_served_ratio_tracks_weights() {
+    // Two tenants push identical backlogged streams; the light tenant
+    // submits its WHOLE stream first. Under FIFO admission the first
+    // half of completions would be almost entirely light-tenant jobs;
+    // under weighted DRR the heavy (weight 5) tenant must hold a clear
+    // majority of early service despite arriving second.
+    let light = TenantId(1);
+    let heavy = TenantId(2);
+    let mut c = cfg(1, 64);
+    c.default_run = Some(RunConfig::square(2, 16));
+    let srv = server(c);
+    srv.configure_tenant(light, TenantConfig { weight: 1, ..Default::default() }).unwrap();
+    srv.configure_tenant(heavy, TenantConfig { weight: 5, ..Default::default() }).unwrap();
+
+    let per = 16usize;
+    let run = RunConfig::square(2, 16);
+    // Pre-generate all operands so the submit loop is a pure push burst
+    // — far faster than the dispatcher's pop+plan+pack, so the queue is
+    // backlogged and DRR (not arrival order) decides service.
+    let make = |t: u32, j: usize| {
+        let seed = (t as usize * 100 + j) as u64;
+        (Matrix::random(48, 32, seed), Matrix::random(32, 48, seed + 50))
+    };
+    let streams: Vec<(TenantId, Vec<(Matrix, Matrix)>)> = vec![
+        (light, (0..per).map(|j| make(1, j)).collect()),
+        (heavy, (0..per).map(|j| make(2, j)).collect()),
+    ];
+    let mut futures = Vec::with_capacity(2 * per);
+    for (tenant, jobs) in streams {
+        for (j, (a, b)) in jobs.into_iter().enumerate() {
+            futures.push((
+                tenant,
+                srv.submit_async(Submission::gemm(a, b).id(j as u64).run(run).tenant(tenant))
+                    .unwrap(),
+            ));
+        }
+    }
+
+    // One waiter thread per future records its completion instant; the
+    // single worker serializes execution, so the sorted timestamps are
+    // the service order.
+    let order = std::sync::Mutex::new(Vec::with_capacity(2 * per));
+    std::thread::scope(|s| {
+        for (tenant, f) in futures {
+            let order = &order;
+            s.spawn(move || {
+                f.wait().unwrap();
+                order.lock().unwrap().push((std::time::Instant::now(), tenant));
+            });
+        }
+    });
+    let mut order = order.into_inner().unwrap();
+    assert_eq!(order.len(), 2 * per);
+    order.sort_by_key(|(t, _)| *t);
+
+    let first_half = &order[..per];
+    let heavy_served = first_half.iter().filter(|(_, t)| *t == heavy).count();
+    let light_served = per - heavy_served;
+    assert!(
+        heavy_served > light_served,
+        "weight-5 tenant served {heavy_served}/{per} of the first half \
+         (light tenant, weight 1, arrived first and took {light_served}) — \
+         DRR is not tracking weights"
+    );
+
+    // Totals are conserved per tenant regardless of shaping.
+    let stats = srv.stats();
+    let totals: std::collections::BTreeMap<TenantId, u64> =
+        stats.tenants.iter().map(|(id, c)| (*id, c.jobs)).collect();
+    assert_eq!(totals.get(&light), Some(&(per as u64)));
+    assert_eq!(totals.get(&heavy), Some(&(per as u64)));
+}
+
+#[test]
+fn quota_rejection_hands_submission_back_conserved() {
+    // A tenant capped at 2 in-flight jobs bursts 20 submissions: every
+    // one is either admitted (and completes correctly) or handed back
+    // intact inside `SubmitError::QuotaExceeded` — and once the burst
+    // drains, the quota slots are fully released.
+    let tenant = TenantId(7);
+    let srv = server(cfg(2, 64));
+    srv.configure_tenant(
+        tenant,
+        TenantConfig { weight: 1, max_inflight_jobs: Some(2), ..Default::default() },
+    )
+    .unwrap();
+    let run = RunConfig::square(2, 16);
+    let mut admitted = Vec::new();
+    let mut quota_rejected = 0usize;
+    for j in 0..20u64 {
+        let a = Matrix::random(32, 16, j);
+        let b = Matrix::random(16, 32, j + 900);
+        let want = a.matmul(&b);
+        match srv.try_submit(Submission::gemm(a, b).id(j).run(run).tenant(tenant)) {
+            Ok(f) => admitted.push((f, want)),
+            Err(SubmitError::QuotaExceeded { submission, tenant: t }) => {
+                assert_eq!(t, tenant);
+                match submission.into_kind() {
+                    SubmissionKind::Gemm { a, b } => {
+                        assert_eq!(a.inline_dims(), Some((32, 16)), "A must come back intact");
+                        assert_eq!(b.inline_dims(), Some((16, 32)), "B must come back intact");
+                    }
+                    other => panic!("wrong kind handed back: {other:?}"),
+                }
+                quota_rejected += 1;
+            }
+            Err(SubmitError::Full(_)) => panic!("queue is sized to hold the whole burst"),
+            Err(e) => panic!("unexpected rejection: {e}"),
+        }
+    }
+    // A tight 20-submission burst against a 2-job cap must trip the
+    // quota at least once (job service is slower than submission).
+    assert!(quota_rejected > 0, "quota never engaged");
+    for (f, want) in admitted {
+        assert!(f.wait_one().unwrap().c.allclose(&want, 1e-4));
+    }
+    // Conservation: admitted + rejected covers every submission.
+    assert_eq!(srv.metrics().jobs() as usize + quota_rejected, 20);
+
+    // All slots released: the tenant is idle again, so a fresh
+    // submission admits immediately.
+    let a = Matrix::random(32, 16, 990);
+    let b = Matrix::random(16, 32, 991);
+    let f = srv.try_submit(Submission::gemm(a, b).run(run).tenant(tenant)).unwrap();
+    f.wait().unwrap();
+}
+
+#[test]
+fn deadline_counters_split_hits_from_misses() {
+    // Deadline accounting, exactly: jobs under a generous deadline
+    // count as deadline jobs but not misses; jobs under an
+    // already-expired deadline count as both; jobs with no deadline
+    // count in neither.
+    let srv = server(cfg(2, 16));
+    let run = RunConfig::square(2, 16);
+    let mut futures = Vec::new();
+    for j in 0..4u64 {
+        let a = Matrix::random(24, 16, j);
+        let b = Matrix::random(16, 24, j + 50);
+        futures.push(
+            srv.submit_async(
+                Submission::gemm(a, b).id(j).run(run).deadline(Duration::from_secs(3600)),
+            )
+            .unwrap(),
+        );
+    }
+    for j in 10..13u64 {
+        let a = Matrix::random(24, 16, j);
+        let b = Matrix::random(16, 24, j + 50);
+        futures.push(
+            srv.submit_async(Submission::gemm(a, b).id(j).run(run).deadline(Duration::ZERO))
+                .unwrap(),
+        );
+    }
+    for f in futures {
+        f.wait().unwrap();
+    }
+    let stats = srv.stats();
+    assert_eq!(stats.deadline_jobs, 7, "every deadline-carrying job counted");
+    assert_eq!(stats.deadline_misses, 3, "exactly the expired-deadline jobs missed");
+    let by_tenant: u64 = stats.tenants.iter().map(|(_, c)| c.deadline_misses).sum();
+    assert_eq!(by_tenant, 3, "per-tenant misses sum to the global counter");
+
+    // No deadline -> counted in neither.
+    let a = Matrix::random(24, 16, 99);
+    let b = Matrix::random(16, 24, 98);
+    srv.submit_blocking(Submission::gemm(a, b).run(run)).unwrap();
+    let stats = srv.stats();
+    assert_eq!((stats.deadline_jobs, stats.deadline_misses), (7, 3));
+    assert!(stats.to_string().contains("deadline(miss/ddl)=3/7"));
 }
 
 #[test]
