@@ -1,0 +1,160 @@
+#!/usr/bin/env python3
+"""Validate the JSONL flight-recorder export from `marr trace --json`.
+
+Reads JSONL job traces (one object per line) from stdin or a file and
+checks the contract `TraceExporter::write_jsonl` promises:
+
+* every line is a JSON object carrying the full field set;
+* `terminal` is one of the known terminal names;
+* stage timestamps that are present are monotonic
+  (submit <= pop <= planned <= published <= first_task <= last_task
+   <= done);
+* for `done` jobs: all stage spans, the end-to-end latency, and the
+  predicted/measured drift record are present, and the five stage
+  spans telescope — they sum to the end-to-end latency within
+  tolerance;
+* `workers[]` tallies are consistent: per-worker tasks sum to `tasks`,
+  stolen counts sum to `stolen_tasks`, and stolen <= tasks everywhere.
+
+Exit code 0 on success, 1 with a per-line diagnosis otherwise.
+
+Usage:
+    marr trace --json | python3 ci/check_trace_schema.py
+    python3 ci/check_trace_schema.py traces.jsonl
+"""
+
+import json
+import sys
+
+REQUIRED_FIELDS = [
+    "uid",
+    "tenant",
+    "terminal",
+    "submit_us",
+    "pop_us",
+    "planned_us",
+    "published_us",
+    "first_task_us",
+    "last_task_us",
+    "done_us",
+    "queue_secs",
+    "plan_secs",
+    "pack_secs",
+    "execute_secs",
+    "finalize_secs",
+    "e2e_secs",
+    "predicted_secs",
+    "measured_secs",
+    "drift_frac",
+    "tasks",
+    "stolen_tasks",
+    "workers",
+]
+
+TERMINALS = {"done", "quota_rejected", "shed", "plan_failed", "failed", "in_flight"}
+
+STAGE_ORDER = [
+    "submit_us",
+    "pop_us",
+    "planned_us",
+    "published_us",
+    "first_task_us",
+    "last_task_us",
+    "done_us",
+]
+
+STAGE_SPANS = ["queue_secs", "plan_secs", "pack_secs", "execute_secs", "finalize_secs"]
+
+# Stage spans are derived from the same microsecond stamps as the
+# end-to-end latency, so the telescoped sum should agree to rounding.
+SUM_TOL_SECS = 5e-5
+
+
+def check_trace(t, errors):
+    for f in REQUIRED_FIELDS:
+        if f not in t:
+            errors.append(f"missing field {f!r}")
+    if errors:
+        return
+
+    if t["terminal"] not in TERMINALS:
+        errors.append(f"unknown terminal {t['terminal']!r}")
+
+    stamps = [(name, t[name]) for name in STAGE_ORDER if t[name] is not None]
+    for (a_name, a), (b_name, b) in zip(stamps, stamps[1:]):
+        if a > b:
+            errors.append(f"timestamps not monotonic: {a_name}={a} > {b_name}={b}")
+
+    workers = t["workers"]
+    if not isinstance(workers, list):
+        errors.append("workers is not a list")
+        return
+    for w in workers:
+        for f in ("worker", "tasks", "stolen"):
+            if f not in w:
+                errors.append(f"worker tally missing {f!r}")
+                return
+        if w["stolen"] > w["tasks"]:
+            errors.append(f"worker {w['worker']}: stolen {w['stolen']} > tasks {w['tasks']}")
+    if sum(w["tasks"] for w in workers) != t["tasks"]:
+        errors.append("per-worker tasks do not sum to `tasks`")
+    if sum(w["stolen"] for w in workers) != t["stolen_tasks"]:
+        errors.append("per-worker stolen do not sum to `stolen_tasks`")
+
+    if t["terminal"] == "done":
+        for f in STAGE_SPANS + ["e2e_secs", "predicted_secs", "measured_secs"]:
+            if t[f] is None:
+                errors.append(f"done job missing {f!r}")
+        if all(t[f] is not None for f in STAGE_SPANS + ["e2e_secs"]):
+            total = sum(t[f] for f in STAGE_SPANS)
+            if abs(total - t["e2e_secs"]) > SUM_TOL_SECS:
+                errors.append(
+                    f"stage spans sum to {total:.6f}s but e2e is {t['e2e_secs']:.6f}s"
+                )
+        if t["tasks"] < 1:
+            errors.append("done job executed zero tasks")
+
+
+def main():
+    src = open(sys.argv[1]) if len(sys.argv) > 1 else sys.stdin
+    n = 0
+    done = 0
+    failed_lines = 0
+    for lineno, line in enumerate(src, 1):
+        line = line.strip()
+        if not line:
+            continue
+        n += 1
+        errors = []
+        try:
+            t = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"invalid JSON: {e}")
+            t = None
+        if t is not None:
+            if not isinstance(t, dict):
+                errors.append("line is not a JSON object")
+            else:
+                check_trace(t, errors)
+                if not errors and t["terminal"] == "done":
+                    done += 1
+        if errors:
+            failed_lines += 1
+            uid = t.get("uid", "?") if isinstance(t, dict) else "?"
+            for e in errors:
+                print(f"line {lineno} (uid {uid}): {e}", file=sys.stderr)
+
+    if n == 0:
+        print("no job traces on input — is tracing enabled?", file=sys.stderr)
+        sys.exit(1)
+    if done == 0:
+        print(f"{n} traces but none terminal=done — workload ran?", file=sys.stderr)
+        sys.exit(1)
+    if failed_lines:
+        print(f"{failed_lines}/{n} traces failed validation", file=sys.stderr)
+        sys.exit(1)
+    print(f"ok: {n} job traces validated ({done} done)")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,8 @@
 
 use crate::config::RunConfig;
 use crate::coordinator::{
-    ActivationHandle, AOperand, BOperand, GemmJob, JobServer, Submission, WeightHandle,
+    ActivationHandle, AOperand, BOperand, GemmJob, JobServer, SpanKind, Submission,
+    WeightHandle,
 };
 use crate::gemm::Matrix;
 
@@ -255,15 +256,18 @@ fn block_core(
     // Q/K/V: three shared-B groups over the same activation batch,
     // all in flight before the first wait so the pool sees the whole
     // fan-out at once.
+    server.trace_span_begin(SpanKind::AttentionPhase, 0);
     let gq = server.submit_async(Submission::batched(wq, make_xs()).run(run))?;
     let gk = server.submit_async(Submission::batched(wk, make_xs()).run(run))?;
     let gv = server.submit_async(Submission::batched(wv, make_xs()).run(run))?;
     let qs: Vec<Matrix> = gq.wait()?.into_iter().map(|r| r.c).collect();
     let ks: Vec<Matrix> = gk.wait()?.into_iter().map(|r| r.c).collect();
     let vs: Vec<Matrix> = gv.wait()?.into_iter().map(|r| r.c).collect();
+    server.trace_span_end(SpanKind::AttentionPhase, 0);
 
     // Scores: one Q·Kᵀ job per member, submitted as a single group
     // (K differs per member, so there is no shared side to register).
+    server.trace_span_begin(SpanKind::AttentionPhase, 1);
     let score_jobs: Vec<GemmJob> = qs
         .iter()
         .zip(&ks)
@@ -298,10 +302,14 @@ fn block_core(
         .into_iter()
         .map(|r| r.c)
         .collect();
+    server.trace_span_end(SpanKind::AttentionPhase, 1);
 
     // Output projection: one shared-B group over the fresh contexts.
+    server.trace_span_begin(SpanKind::AttentionPhase, 2);
     let go = server.submit_async(Submission::batched(wo, ctxs).run(run))?;
-    Ok(go.wait()?.into_iter().map(|r| r.c).collect())
+    let out = go.wait()?.into_iter().map(|r| r.c).collect();
+    server.trace_span_end(SpanKind::AttentionPhase, 2);
+    Ok(out)
 }
 
 /// Row-wise softmax of `scores / sqrt(d_model)`, max-subtracted for

@@ -26,7 +26,7 @@
 
 use crate::accelerator::{Accelerator, SimOptions};
 use crate::config::{HardwareConfig, RunConfig};
-use crate::coordinator::{JobServer, Submission, WeightHandle};
+use crate::coordinator::{JobServer, SpanKind, Submission, WeightHandle};
 use crate::dse;
 use crate::gemm::Matrix;
 
@@ -283,6 +283,7 @@ pub fn schedule_network_served_with(
         };
         let seed = layer_seed(i);
         let weight = weights.handles[i];
+        server.trace_span_begin(SpanKind::CnnLayer, i as u64);
         if l.is_conv() {
             let many_a = conv_activations(l, batch, seed);
             handles.push(LayerHandle::Batched(
@@ -300,7 +301,7 @@ pub fn schedule_network_served_with(
     let mut total = 0.0;
     let mut reconfigs = 0;
     let mut flops = 0u64;
-    for (l, h) in layers.iter().zip(handles) {
+    for (i, (l, h)) in layers.iter().zip(handles).enumerate() {
         // (config, layer compute seconds, layer FLOPs).
         let (run, secs, layer_flops) = match h {
             LayerHandle::Single(t) => {
@@ -315,6 +316,7 @@ pub fn schedule_network_served_with(
                 (run, secs, l.flops() * results.len() as u64)
             }
         };
+        server.trace_span_end(SpanKind::CnnLayer, i as u64);
         let reconfigured = prev.is_some_and(|p| p != run);
         if reconfigured {
             reconfigs += 1;

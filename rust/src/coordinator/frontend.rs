@@ -54,6 +54,7 @@ use crate::gemm::Matrix;
 
 use super::registry::{AOperand, BOperand};
 use super::server::JobTicket;
+use super::trace::{EventKind, TraceRing, ACTOR_NONE};
 use super::{GemmJob, JobResult};
 
 /// A client identity every submission carries. Tenants are cheap: the
@@ -654,6 +655,10 @@ pub(crate) enum TryPushError<T> {
 /// and load-shedding entry points, shared by N dispatcher shards.
 pub(crate) struct FrontEnd<T> {
     capacity: usize,
+    /// Flight recorder; every DRR pop stamps the tenant served, its
+    /// remaining backlog, and the quantum left (disabled rings record
+    /// nothing).
+    trace: Arc<TraceRing>,
     st: Mutex<FrontState<T>>,
     not_full: Condvar,
     not_empty: Condvar,
@@ -661,8 +666,13 @@ pub(crate) struct FrontEnd<T> {
 
 impl<T> FrontEnd<T> {
     pub(crate) fn new(capacity: usize) -> Self {
+        Self::with_trace(capacity, Arc::new(TraceRing::new(0)))
+    }
+
+    pub(crate) fn with_trace(capacity: usize, trace: Arc<TraceRing>) -> Self {
         Self {
             capacity,
+            trace,
             st: Mutex::new(FrontState {
                 tenants: BTreeMap::new(),
                 ring: VecDeque::new(),
@@ -752,8 +762,10 @@ impl<T> FrontEnd<T> {
     /// One DRR step: pick the ring-head tenant (recharging its deficit
     /// to its weight when spent), then that tenant's least-slack
     /// submission. Maintains the ring invariant and rotates the head
-    /// out when its deficit is exhausted.
-    fn pop_locked(st: &mut FrontState<T>) -> Option<T> {
+    /// out when its deficit is exhausted. Each serve stamps a
+    /// [`EventKind::DrrPop`] trace event, making the round-robin
+    /// schedule itself observable.
+    fn pop_locked(&self, st: &mut FrontState<T>) -> Option<T> {
         let now = Instant::now();
         loop {
             let tenant = *st.ring.front()?;
@@ -779,6 +791,7 @@ impl<T> FrontEnd<T> {
             let q = tq.items.remove(best).expect("best index in range");
             tq.deficit -= 1;
             st.queued_jobs -= q.cost;
+            let (backlog, deficit) = (tq.items.len() as u64, tq.deficit as u64);
             if tq.items.is_empty() {
                 // Leaving the ring resets the deficit: an idle tenant
                 // does not bank unused quantum.
@@ -788,6 +801,7 @@ impl<T> FrontEnd<T> {
                 let t = st.ring.pop_front().expect("ring head");
                 st.ring.push_back(t);
             }
+            self.trace.emit(EventKind::DrrPop, 0, tenant.0, ACTOR_NONE, backlog, deficit);
             return Some(q.item);
         }
     }
@@ -797,7 +811,7 @@ impl<T> FrontEnd<T> {
     pub(crate) fn pop_blocking(&self) -> Option<T> {
         let mut st = self.st.lock().unwrap();
         loop {
-            if let Some(item) = Self::pop_locked(&mut st) {
+            if let Some(item) = self.pop_locked(&mut st) {
                 self.not_full.notify_all();
                 return Some(item);
             }
@@ -810,7 +824,7 @@ impl<T> FrontEnd<T> {
 
     pub(crate) fn try_pop(&self) -> Option<T> {
         let mut st = self.st.lock().unwrap();
-        let item = Self::pop_locked(&mut st)?;
+        let item = self.pop_locked(&mut st)?;
         self.not_full.notify_all();
         Some(item)
     }
@@ -855,6 +869,25 @@ mod tests {
         // Weight 3:1 — three a's per b while both are backlogged; the
         // a-queue empties mid-quantum and b drains the tail alone.
         assert_eq!(order, "aaabaaabaabbbbbb");
+    }
+
+    #[test]
+    fn drr_pops_are_traced_with_backlog_and_deficit() {
+        let ring = Arc::new(TraceRing::new(32));
+        let q: FrontEnd<&'static str> = FrontEnd::with_trace(64, ring.clone());
+        q.try_push(meta(5, 2), "a").map_err(|_| ()).unwrap();
+        q.try_push(meta(5, 2), "b").map_err(|_| ()).unwrap();
+        assert_eq!(q.try_pop(), Some("a"));
+        assert_eq!(q.try_pop(), Some("b"));
+        let evs = ring.snapshot().events;
+        assert_eq!(evs.len(), 2);
+        for e in &evs {
+            assert_eq!(e.kind, EventKind::DrrPop);
+            assert_eq!(e.tenant, 5);
+        }
+        // First serve: one job left, one quantum left. Second: drained.
+        assert_eq!((evs[0].a, evs[0].b), (1, 1));
+        assert_eq!((evs[1].a, evs[1].b), (0, 0));
     }
 
     #[test]

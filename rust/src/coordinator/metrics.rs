@@ -88,6 +88,9 @@ pub struct Metrics {
     /// Per-tenant served/deadline/miss counts, keyed by `TenantId`.
     tenants: Mutex<BTreeMap<TenantId, TenantCounters>>,
     latencies: Mutex<LatencyAgg>,
+    /// Relative model-drift records `(measured - predicted) / predicted`,
+    /// one per finalized job whose config was priced at plan time.
+    drift: Mutex<DriftAgg>,
 }
 
 /// Per-tenant serving counters, surfaced through
@@ -129,6 +132,83 @@ impl Default for LatencyAgg {
             rng: Rng::new(0x7A11_1A7E),
         }
     }
+}
+
+/// One-lock copy of the latency aggregate: every derived figure
+/// (mean, max, any set of percentiles, mean sim time) comes from the
+/// *same* consistent snapshot, and the percentile sort happens off the
+/// lock so finalizing workers never wait behind a stats poll.
+#[derive(Debug, Clone)]
+pub struct LatencySnapshot {
+    /// Jobs recorded.
+    pub count: u64,
+    /// Mean host latency, seconds (0 with no jobs).
+    pub mean: f64,
+    /// Max host latency, seconds.
+    pub max: f64,
+    /// Mean simulated FPGA time per job, seconds.
+    pub mean_sim: f64,
+    sorted: Vec<f64>,
+}
+
+impl LatencySnapshot {
+    /// Nearest-rank percentile for `p` in `[0, 1]`, seconds; 0 with no
+    /// recorded jobs.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = ((p.clamp(0.0, 1.0) * self.sorted.len() as f64).ceil() as usize)
+            .saturating_sub(1)
+            .min(self.sorted.len() - 1);
+        self.sorted[idx]
+    }
+
+    /// [`LatencySnapshot::percentile`] for each `p`, in order.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        ps.iter().map(|&p| self.percentile(p)).collect()
+    }
+}
+
+#[derive(Debug)]
+struct DriftAgg {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    /// Reservoir for the drift p95 (same scheme as `LatencyAgg`).
+    all: Vec<f64>,
+    rng: Rng,
+}
+
+impl Default for DriftAgg {
+    fn default() -> Self {
+        Self {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            all: Vec::new(),
+            rng: Rng::new(0x0D21_F7A0),
+        }
+    }
+}
+
+/// Rollup of the model-drift distribution: how far the simulator's
+/// measured time ran from `analytical::predict`'s plan-time price,
+/// as a fraction of the prediction (positive = slower than predicted).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftStats {
+    /// Jobs with a drift record.
+    pub count: u64,
+    /// Smallest relative drift.
+    pub min: f64,
+    /// Mean relative drift.
+    pub mean: f64,
+    /// Largest relative drift.
+    pub max: f64,
+    /// Nearest-rank p95 of relative drift.
+    pub p95: f64,
 }
 
 impl Metrics {
@@ -229,6 +309,50 @@ impl Metrics {
 
     pub fn job_failed(&self) {
         self.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one model-drift observation: the analytical prediction
+    /// priced at plan time vs the simulator's measured time at
+    /// finalize. Stored as relative drift `(measured - predicted) /
+    /// predicted`; non-positive predictions are ignored.
+    pub fn record_drift(&self, predicted_secs: f64, measured_secs: f64) {
+        if !predicted_secs.is_finite()
+            || !measured_secs.is_finite()
+            || predicted_secs <= 0.0
+        {
+            return;
+        }
+        let frac = (measured_secs - predicted_secs) / predicted_secs;
+        let mut d = self.drift.lock().unwrap();
+        d.count += 1;
+        d.sum += frac;
+        d.min = d.min.min(frac);
+        d.max = d.max.max(frac);
+        if d.all.len() < LATENCY_RESERVOIR {
+            d.all.push(frac);
+        } else {
+            let j = (d.rng.next_u64() % d.count) as usize;
+            if j < LATENCY_RESERVOIR {
+                d.all[j] = frac;
+            }
+        }
+    }
+
+    /// Rollup of the recorded model drift; `None` before the first
+    /// record.
+    pub fn drift_stats(&self) -> Option<DriftStats> {
+        let (count, sum, min, max, mut all) = {
+            let d = self.drift.lock().unwrap();
+            if d.count == 0 {
+                return None;
+            }
+            (d.count, d.sum, d.min, d.max, d.all.clone())
+        };
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((0.95 * all.len() as f64).ceil() as usize)
+            .saturating_sub(1)
+            .min(all.len() - 1);
+        Some(DriftStats { count, min, mean: sum / count as f64, max, p95: all[idx] })
     }
 
     /// Record a completed deadline-carrying job; `missed` when it
@@ -360,6 +484,24 @@ impl Metrics {
         }
     }
 
+    /// One consistent copy of the whole latency aggregate under a
+    /// single lock acquisition — mean, max, sim mean, and the
+    /// percentile reservoir together. Use this instead of separate
+    /// [`Self::host_latency`] / [`Self::host_latency_percentile`] /
+    /// [`Self::mean_sim_secs`] calls when deriving several figures at
+    /// once: three separate locks can interleave with `job_done` and
+    /// report a mean and a p95 from *different* job populations.
+    pub fn latency_snapshot(&self) -> LatencySnapshot {
+        let (count, mean, max, mean_sim, mut sorted) = {
+            let l = self.latencies.lock().unwrap();
+            let mean = if l.count == 0 { 0.0 } else { l.host_sum / l.count as f64 };
+            let mean_sim = if l.count == 0 { 0.0 } else { l.sim_sum / l.count as f64 };
+            (l.count, mean, l.host_max, mean_sim, l.host_all.clone())
+        };
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencySnapshot { count, mean, max, mean_sim, sorted }
+    }
+
     /// Host-latency percentiles (nearest-rank) for each `p` in `[0, 1]`,
     /// seconds; zeros with no recorded jobs. One snapshot + one sort for
     /// the whole batch, with the sort done off the lock so finalizing
@@ -399,14 +541,20 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
-        let (mean, max) = self.host_latency();
-        format!(
+        // One lock acquisition for every latency-derived figure: a
+        // mean, percentiles, and sim mean read under separate locks can
+        // interleave with `job_done` and describe different job
+        // populations in one line.
+        let lat = self.latency_snapshot();
+        let ps = lat.percentiles(&[0.50, 0.95, 0.99]);
+        let mut s = format!(
             "jobs={} (failed={}, batched={}) tasks={} steals={} (cross-job={}) \
              panel_copies={} packs(a/b)={}/{} panels_shared={} \
              registry(hit/miss/evict)={}/{}/{} \
              a_panel(hit/miss/evict)={}/{}/{} plan_residency_hits={} \
              deadline(miss/ddl)={}/{} \
-             host_lat(mean/p95/max)={:.3}s/{:.3}s/{:.3}s sim(mean)={:.6}s",
+             host_lat(mean/p50/p95/p99/max)={:.3}s/{:.3}s/{:.3}s/{:.3}s/{:.3}s \
+             sim(mean)={:.6}s",
             self.jobs(),
             self.jobs_failed(),
             self.batched_jobs(),
@@ -426,11 +574,20 @@ impl Metrics {
             self.plan_residency_hits(),
             self.deadline_misses(),
             self.deadline_jobs(),
-            mean,
-            self.host_latency_percentile(0.95),
-            max,
-            self.mean_sim_secs()
-        )
+            lat.mean,
+            ps[0],
+            ps[1],
+            ps[2],
+            lat.max,
+            lat.mean_sim
+        );
+        if let Some(d) = self.drift_stats() {
+            s.push_str(&format!(
+                " drift(min/mean/max/p95)={:+.3}/{:+.3}/{:+.3}/{:+.3}",
+                d.min, d.mean, d.max, d.p95
+            ));
+        }
+        s
     }
 }
 
@@ -548,6 +705,55 @@ mod tests {
         assert!(m.summary().contains("a_panel(hit/miss/evict)=0/0/0"));
         assert!(m.summary().contains("plan_residency_hits=0"));
         assert!(m.summary().contains("deadline(miss/ddl)=0/0"));
+        assert!(m.summary().contains("host_lat(mean/p50/p95/p99/max)"));
+        // No drift recorded → no drift segment.
+        assert!(!m.summary().contains("drift("));
+        m.record_drift(0.010, 0.012);
+        assert!(m.summary().contains("drift(min/mean/max/p95)="));
+    }
+
+    #[test]
+    fn latency_snapshot_is_one_consistent_copy() {
+        let m = Metrics::default();
+        for v in 1..=100 {
+            m.job_done(v as f64, (v as f64) * 1e-3);
+        }
+        let s = m.latency_snapshot();
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean_sim - 0.0505).abs() < 1e-12);
+        // Percentiles agree with the multi-lock path on a quiescent
+        // metrics object.
+        assert_eq!(s.percentile(0.50), m.host_latency_percentile(0.50));
+        assert_eq!(s.percentile(0.95), 95.0);
+        assert_eq!(s.percentile(0.99), 99.0);
+        assert_eq!(s.percentiles(&[0.5, 0.99]), vec![50.0, 99.0]);
+        let empty = Metrics::default().latency_snapshot();
+        assert_eq!(empty.percentile(0.99), 0.0);
+        assert_eq!((empty.count, empty.mean, empty.max), (0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn drift_stats_roll_up() {
+        let m = Metrics::default();
+        assert!(m.drift_stats().is_none());
+        // predicted 1.0 vs measured 0.9 / 1.0 / 1.5 → drift -0.1, 0, +0.5.
+        m.record_drift(1.0, 0.9);
+        m.record_drift(1.0, 1.0);
+        m.record_drift(1.0, 1.5);
+        let d = m.drift_stats().unwrap();
+        assert_eq!(d.count, 3);
+        assert!((d.min - -0.1).abs() < 1e-12);
+        assert!((d.max - 0.5).abs() < 1e-12);
+        assert!((d.mean - (0.4 / 3.0)).abs() < 1e-12);
+        assert!((d.p95 - 0.5).abs() < 1e-12);
+        // Degenerate inputs are ignored, not recorded.
+        m.record_drift(0.0, 1.0);
+        m.record_drift(-1.0, 1.0);
+        m.record_drift(f64::NAN, 1.0);
+        m.record_drift(1.0, f64::INFINITY);
+        assert_eq!(m.drift_stats().unwrap().count, 3);
     }
 
     #[test]

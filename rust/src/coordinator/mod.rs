@@ -58,19 +58,26 @@
 //!
 //! Both report into the same [`Metrics`] shape; the server additionally
 //! exposes throughput and latency percentiles via
-//! [`server::JobServer::stats`].
+//! [`server::JobServer::stats`], and — when
+//! [`server::ServerConfig::trace_capacity`] is set — a lock-free
+//! flight recorder ([`trace`]) that stamps every job's lifecycle for
+//! per-stage latency breakdowns, per-worker steal provenance, and
+//! predicted-vs-measured model-drift records, exportable as JSONL or
+//! Chrome `trace_event` JSON via
+//! [`server::JobServer::trace_snapshot`].
 
 pub mod engine;
 pub mod frontend;
 pub mod metrics;
 pub mod registry;
 pub mod server;
+pub mod trace;
 
 pub use engine::NumericsEngine;
 pub use frontend::{
     JobFuture, SubmitError, Submission, SubmissionKind, TenantConfig, TenantId,
 };
-pub use metrics::{Metrics, TenantCounters};
+pub use metrics::{DriftStats, LatencySnapshot, Metrics, TenantCounters};
 pub use registry::{
     ActivationHandle, AOperand, BOperand, Operand, OperandRegistry, TenantResidency,
     WeightHandle,
@@ -78,6 +85,10 @@ pub use registry::{
 pub use server::{
     JobGroup, JobServer, JobTicket, ServerConfig, ServerStats, TrySubmitBatchedError,
     TrySubmitError,
+};
+pub use trace::{
+    JobTrace, SpanKind, Terminal, TraceEvent, TraceExporter, TraceRing, TraceSnapshot,
+    WorkerTally,
 };
 
 use std::sync::{mpsc, Arc};

@@ -50,6 +50,7 @@ use crate::gemm::{Matrix, PackedA, PackedB};
 
 use super::frontend::TenantId;
 use super::metrics::Metrics;
+use super::trace::{EventKind, TraceRing, ACTOR_NONE};
 
 /// Process-unique registry ids, so a handle minted by one server can
 /// never silently resolve against another server's registry.
@@ -260,15 +261,27 @@ pub struct OperandRegistry {
     nonce: u64,
     budget_bytes: u64,
     metrics: Arc<Metrics>,
+    /// Flight recorder (disabled rings record nothing); hit / miss /
+    /// evict events carry the handle id, pack bytes, and side.
+    trace: Arc<TraceRing>,
     state: Mutex<State>,
 }
 
+/// `TraceEvent.b` payload for registry events.
+fn side_code(side: Side) -> u64 {
+    match side {
+        Side::A => 0,
+        Side::B => 1,
+    }
+}
+
 impl OperandRegistry {
-    pub(crate) fn new(budget_bytes: u64, metrics: Arc<Metrics>) -> Self {
+    pub(crate) fn new(budget_bytes: u64, metrics: Arc<Metrics>, trace: Arc<TraceRing>) -> Self {
         Self {
             nonce: NEXT_REGISTRY_NONCE.fetch_add(1, Ordering::Relaxed),
             budget_bytes,
             metrics,
+            trace,
             state: Mutex::new(State {
                 entries: HashMap::new(),
                 next_handle: 0,
@@ -413,7 +426,7 @@ impl OperandRegistry {
         let key = self
             .key(h)
             .ok_or_else(|| anyhow::anyhow!("{h} belongs to a different server's registry"))?;
-        let matrix = {
+        let (matrix, tenant) = {
             let mut st = self.state.lock().unwrap();
             st.clock += 1;
             let clock = st.clock;
@@ -425,12 +438,26 @@ impl OperandRegistry {
             if let Some(slot) = entry.packs.get_mut(&sj) {
                 slot.stamp = clock;
                 self.metrics.add_registry_hits(1);
+                let tenant = entry.tenant.0;
+                let bytes = slot.bytes;
                 match &slot.pack {
-                    AnyPack::B(p) => return Ok(p.clone()),
+                    AnyPack::B(p) => {
+                        let p = p.clone();
+                        drop(st);
+                        self.trace.emit(
+                            EventKind::RegistryHit,
+                            key,
+                            tenant,
+                            ACTOR_NONE,
+                            bytes,
+                            side_code(Side::B),
+                        );
+                        return Ok(p);
+                    }
                     AnyPack::A(_) => unreachable!("B entry holds an A pack"),
                 }
             }
-            entry.matrix.clone()
+            (entry.matrix.clone(), entry.tenant.0)
         };
         // Miss: pack outside the lock (packing a large weight must not
         // stall concurrent register/stats calls), then publish. A
@@ -442,6 +469,8 @@ impl OperandRegistry {
         self.metrics.add_b_panel_packs(1);
         let pack = Arc::new(PackedB::pack(matrix.view(), sj));
         let bytes = pack.packed_bytes();
+        self.trace
+            .emit(EventKind::RegistryMiss, key, tenant, ACTOR_NONE, bytes, side_code(Side::B));
         self.publish(key, sj, AnyPack::B(pack.clone()), bytes, Side::B);
         Ok(pack)
     }
@@ -452,7 +481,7 @@ impl OperandRegistry {
         let key = self
             .key_a(h)
             .ok_or_else(|| anyhow::anyhow!("{h} belongs to a different server's registry"))?;
-        let matrix = {
+        let (matrix, tenant) = {
             let mut st = self.state.lock().unwrap();
             st.clock += 1;
             let clock = st.clock;
@@ -465,18 +494,34 @@ impl OperandRegistry {
                 slot.stamp = clock;
                 self.metrics.add_registry_hits(1);
                 self.metrics.add_registry_a_hits(1);
+                let tenant = entry.tenant.0;
+                let bytes = slot.bytes;
                 match &slot.pack {
-                    AnyPack::A(p) => return Ok(p.clone()),
+                    AnyPack::A(p) => {
+                        let p = p.clone();
+                        drop(st);
+                        self.trace.emit(
+                            EventKind::RegistryHit,
+                            key,
+                            tenant,
+                            ACTOR_NONE,
+                            bytes,
+                            side_code(Side::A),
+                        );
+                        return Ok(p);
+                    }
                     AnyPack::B(_) => unreachable!("A entry holds a B pack"),
                 }
             }
-            entry.matrix.clone()
+            (entry.matrix.clone(), entry.tenant.0)
         };
         self.metrics.add_registry_misses(1);
         self.metrics.add_registry_a_misses(1);
         self.metrics.add_a_panel_packs(1);
         let pack = Arc::new(PackedA::pack(matrix.view(), si));
         let bytes = pack.packed_bytes();
+        self.trace
+            .emit(EventKind::RegistryMiss, key, tenant, ACTOR_NONE, bytes, side_code(Side::A));
         self.publish(key, si, AnyPack::A(pack.clone()), bytes, Side::A);
         Ok(pack)
     }
@@ -522,19 +567,17 @@ impl OperandRegistry {
                 })
                 .min_by_key(|(stamp, id, s_param, _)| (*stamp, *id, *s_param));
             let Some((_, id, s_param, side)) = victim else { break };
-            let slot = st
-                .entries
-                .get_mut(&id)
-                .expect("victim entry vanished under the lock")
-                .packs
-                .remove(&s_param)
-                .expect("victim slot vanished under the lock");
+            let entry = st.entries.get_mut(&id).expect("victim entry vanished under the lock");
+            let tenant = entry.tenant.0;
+            let slot = entry.packs.remove(&s_param).expect("victim slot vanished under the lock");
             st.resident_bytes -= slot.bytes;
             self.metrics.add_registry_evictions(1);
             if side == Side::A {
                 st.a_resident_bytes -= slot.bytes;
                 self.metrics.add_registry_a_evictions(1);
             }
+            self.trace
+                .emit(EventKind::RegistryEvict, id, tenant, ACTOR_NONE, slot.bytes, side_code(side));
         }
     }
 
@@ -623,7 +666,51 @@ mod tests {
 
     fn registry(budget: u64) -> (OperandRegistry, Arc<Metrics>) {
         let metrics = Arc::new(Metrics::default());
-        (OperandRegistry::new(budget, metrics.clone()), metrics)
+        (OperandRegistry::new(budget, metrics.clone(), Arc::new(TraceRing::new(0))), metrics)
+    }
+
+    fn traced_registry(budget: u64) -> (OperandRegistry, Arc<TraceRing>) {
+        let ring = Arc::new(TraceRing::new(64));
+        (OperandRegistry::new(budget, Arc::new(Metrics::default()), ring.clone()), ring)
+    }
+
+    #[test]
+    fn registry_events_land_in_the_trace() {
+        let (reg, ring) = traced_registry(1);
+        let hb = reg.register_for(Matrix::random(8, 8, 1), TenantId(3)).unwrap();
+        let ha = reg.register_a(Matrix::random(8, 8, 2)).unwrap();
+
+        let pb = reg.resolve_pack(hb, 8).unwrap(); // B miss
+        let pb2 = reg.resolve_pack(hb, 8).unwrap(); // B hit
+        drop((pb, pb2)); // unpin → evictable
+        let _pa = reg.resolve_pack_a(ha, 8).unwrap(); // A miss + evicts the B pack
+
+        let evs = ring.snapshot().events;
+        let kinds: Vec<EventKind> = evs.iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::RegistryMiss,
+                EventKind::RegistryHit,
+                EventKind::RegistryMiss,
+                EventKind::RegistryEvict,
+            ]
+        );
+        // B-side events carry the B handle id, side code 1, the
+        // registering tenant, and the pack's byte size.
+        for e in &evs[..2] {
+            assert_eq!(e.uid, hb.id());
+            assert_eq!(e.b, 1, "B side");
+            assert_eq!(e.tenant, 3);
+            assert!(e.a > 0, "pack bytes recorded");
+        }
+        assert_eq!(evs[2].uid, ha.id());
+        assert_eq!(evs[2].b, 0, "A side");
+        assert_eq!(evs[2].tenant, TenantId::DEFAULT.0);
+        // The eviction victim was the (unpinned) B pack.
+        assert_eq!(evs[3].uid, hb.id());
+        assert_eq!(evs[3].b, 1);
+        assert_eq!(evs[3].a, evs[0].a, "evicted the bytes the miss published");
     }
 
     #[test]

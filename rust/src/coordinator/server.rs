@@ -94,8 +94,12 @@ use super::frontend::{
     AdmitMeta, FrontEnd, JobFuture, QuotaLedger, SubmitError, Submission, SubmissionKind,
     TenantConfig, TenantId, TenantSlot, TryPushError,
 };
-use super::metrics::{Metrics, TenantCounters};
+use super::metrics::{DriftStats, Metrics, TenantCounters};
 use super::registry::{ActivationHandle, AOperand, BOperand, OperandRegistry, WeightHandle};
+use super::trace::{
+    stage_percentiles, EventKind, SpanKind, TraceRing, TraceSnapshot, ACTOR_NONE, STAGE_NAMES,
+    TASK_CROSS_JOB, TASK_STOLEN,
+};
 use super::{choose_run_dims, GemmJob, JobResult};
 
 /// Serving-runtime knobs.
@@ -139,6 +143,13 @@ pub struct ServerConfig {
     /// workers see one pool either way). Must be >= 1; 2 by default so
     /// admission is never serial out of the box.
     pub admission_shards: usize,
+    /// Flight-recorder capacity, in events ([`super::trace::TraceRing`]
+    /// slots). `0` (the default) disables tracing entirely: no ring is
+    /// allocated and every emission short-circuits on one atomic load.
+    /// Nonzero rounds up to a power of two; when the ring fills, the
+    /// oldest events are overwritten (`TraceSnapshot::dropped` counts
+    /// them) — tracing never blocks the serving path.
+    pub trace_capacity: usize,
 }
 
 impl Default for ServerConfig {
@@ -154,6 +165,7 @@ impl Default for ServerConfig {
             registry_budget_bytes: 256 << 20,
             plan_residency_slack: 0.05,
             admission_shards: 2,
+            trace_capacity: 0,
         }
     }
 }
@@ -374,6 +386,27 @@ pub struct ServerStats {
     /// `1 - busy / (workers * uptime)` — the figure cross-job stealing
     /// exists to lower.
     pub worker_idle_frac: f64,
+    /// Tasks executed by each worker, indexed by worker. The sum equals
+    /// `tasks`; the spread is what stealing exists to flatten.
+    pub per_worker_tasks: Vec<u64>,
+    /// Tasks each worker claimed from a queue other than its own
+    /// (steal provenance, intra- or cross-job).
+    pub per_worker_steals: Vec<u64>,
+    /// `max / min` of `per_worker_tasks` — 1.0 is a perfectly balanced
+    /// pool, `inf` means some worker executed nothing while others
+    /// worked, 0.0 means no tasks ran at all.
+    pub worker_imbalance: f64,
+    /// Predicted-vs-measured model drift over completed jobs
+    /// ([`Metrics::record_drift`]); `None` before the first completion.
+    pub drift: Option<DriftStats>,
+    /// Flight-recorder stage rollup, index-aligned with
+    /// [`STAGE_NAMES`]: `(p50, p95)` seconds per stage. `None` when
+    /// tracing is disabled or no job has a full breakdown yet.
+    pub stage_p50_p95_secs: Option<[(f64, f64); 5]>,
+    /// Events currently recorded / overwritten in the trace ring
+    /// (both 0 when tracing is disabled).
+    pub trace_recorded: u64,
+    pub trace_dropped: u64,
 }
 
 impl std::fmt::Display for ServerStats {
@@ -421,7 +454,31 @@ impl std::fmt::Display for ServerStats {
                 .collect::<Vec<_>>()
                 .join(","),
             100.0 * self.worker_idle_frac
-        )
+        )?;
+        let max_t = self.per_worker_tasks.iter().copied().max().unwrap_or(0);
+        let min_t = self.per_worker_tasks.iter().copied().min().unwrap_or(0);
+        write!(
+            f,
+            " worker_tasks(max/min)={max_t}/{min_t} imbalance={:.2}",
+            self.worker_imbalance
+        )?;
+        if let Some(d) = &self.drift {
+            write!(
+                f,
+                " drift(min/mean/max/p95)={:+.3}/{:+.3}/{:+.3}/{:+.3}",
+                d.min, d.mean, d.max, d.p95
+            )?;
+        }
+        if let Some(stages) = &self.stage_p50_p95_secs {
+            let body = STAGE_NAMES
+                .iter()
+                .zip(stages)
+                .map(|(name, (p50, p95))| format!("{name}={p50:.5}s/{p95:.5}s"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            write!(f, " stages(p50/p95)=[{body}]")?;
+        }
+        Ok(())
     }
 }
 
@@ -479,6 +536,14 @@ struct SubJob {
     /// Absolute completion deadline; finishing past it counts a miss
     /// (the job is never cancelled — a late answer still answers).
     deadline: Option<Instant>,
+    /// Flight-recorder identity, minted at admission: unique across
+    /// every sub-job the server has ever seen, and the key that stitches
+    /// this sub-job's Submit → … → Done events into one [`super::trace::JobTrace`].
+    uid: u64,
+    /// What the analytical model priced this sub-job at when the
+    /// dispatcher planned it; compared against the measured (simulated)
+    /// time at finalize — the model-drift record.
+    predicted_secs: f64,
 }
 
 /// A registered job: its lock-free task queues plus execution context.
@@ -555,6 +620,8 @@ struct Admitted {
     accepted_at: Instant,
     tenant: TenantId,
     deadline: Option<Instant>,
+    /// Flight-recorder identity (see [`SubJob::uid`]).
+    uid: u64,
 }
 
 /// One sub-request of a shared-B batch: its own A (inline, or a
@@ -567,6 +634,8 @@ struct SharedSub {
     accepted_at: Instant,
     tenant: TenantId,
     deadline: Option<Instant>,
+    /// Flight-recorder identity (see [`SubJob::uid`]).
+    uid: u64,
 }
 
 /// An admitted [`JobServer::submit_batched_gemm`] call: one B (inline,
@@ -635,9 +704,19 @@ struct Shared {
     cfg: ServerConfig,
     /// Per-worker busy nanoseconds (numerics execution only).
     worker_busy: Vec<AtomicU64>,
+    /// Per-worker tasks executed / tasks claimed from a foreign queue —
+    /// the load-balance breakdown [`JobServer::stats`] surfaces.
+    worker_tasks: Vec<AtomicU64>,
+    worker_steals: Vec<AtomicU64>,
     /// Registered-but-unfinished jobs; shutdown drains this to zero.
     inflight: AtomicUsize,
     started: Instant,
+    /// Bounded lock-free flight recorder (disabled at capacity 0: every
+    /// emission is one relaxed load and out).
+    trace: Arc<TraceRing>,
+    /// Sub-job uid allocator; a submission of `n` jobs takes a
+    /// contiguous range so even quota-rejected work has an identity.
+    next_uid: AtomicU64,
 }
 
 /// A planned submission, ready to activate.
@@ -646,6 +725,9 @@ struct Planned {
     run: RunConfig,
     plan: BlockPlan,
     small: bool,
+    /// Analytical-model price of the chosen config (0.0 when the model
+    /// could not price it) — carried to the finished job's drift record.
+    predicted: f64,
 }
 
 /// The serving runtime. See the module docs for the architecture.
@@ -665,21 +747,31 @@ impl JobServer {
     ) -> anyhow::Result<Self> {
         cfg.validate(&hw)?;
         let metrics = Arc::new(Metrics::default());
+        let trace = Arc::new(TraceRing::new(cfg.trace_capacity));
         let shared = Arc::new(Shared {
             accelerator: Accelerator::new(hw.clone()),
             hw,
             engine,
-            operands: OperandRegistry::new(cfg.registry_budget_bytes, metrics.clone()),
+            operands: OperandRegistry::new(
+                cfg.registry_budget_bytes,
+                metrics.clone(),
+                trace.clone(),
+            ),
             metrics,
             registry: JobRegistry::new(),
             gate: WorkGate::new(),
             stop: AtomicBool::new(false),
             worker_busy: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
+            worker_tasks: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
+            worker_steals: (0..cfg.workers).map(|_| AtomicU64::new(0)).collect(),
             inflight: AtomicUsize::new(0),
             started: Instant::now(),
+            trace,
+            next_uid: AtomicU64::new(0),
             cfg,
         });
-        let admission = Arc::new(FrontEnd::new(shared.cfg.queue_capacity));
+        let admission =
+            Arc::new(FrontEnd::with_trace(shared.cfg.queue_capacity, shared.trace.clone()));
         let ledger = Arc::new(QuotaLedger::new());
 
         let mut workers = Vec::with_capacity(shared.cfg.workers);
@@ -698,7 +790,7 @@ impl JobServer {
             dispatchers.push(
                 thread::Builder::new()
                     .name(format!("marr-dispatch-{d}"))
-                    .spawn(move || dispatcher_loop(shared, admission))?,
+                    .spawn(move || dispatcher_loop(shared, admission, d))?,
             );
         }
         Ok(Self { shared, admission, ledger, dispatchers, workers })
@@ -757,14 +849,30 @@ impl JobServer {
         }
         let tenant = s.tenant;
         let bytes = s.inline_bytes();
+        // One uid per sub-job, minted before any outcome is known, so
+        // quota-rejected and shed work still has a trace identity. The
+        // emit helper walks the range; every emission is a no-op load
+        // when tracing is disabled.
+        let trace = &self.shared.trace;
+        let base_uid = self.shared.next_uid.fetch_add(njobs as u64, Ordering::Relaxed);
+        let emit_each = |kind: EventKind| {
+            if trace.enabled() {
+                for i in 0..njobs as u64 {
+                    trace.emit(kind, base_uid + i, tenant.0, ACTOR_NONE, 0, 0);
+                }
+            }
+        };
+        emit_each(EventKind::Submit);
         // Quota before queue: a submission blocked on queue space must
         // already hold its quota, so a tenant cannot overcommit by
         // stacking blocked pushers.
         if blocking {
             if self.ledger.charge_blocking(tenant, njobs, bytes).is_err() {
+                emit_each(EventKind::Shed);
                 return Err(SubmitError::Closed(s));
             }
         } else if !self.ledger.try_charge(tenant, njobs, bytes) {
+            emit_each(EventKind::QuotaReject);
             return Err(SubmitError::QuotaExceeded { submission: s, tenant });
         }
         let deadline = s.deadline.map(|d| Instant::now() + d);
@@ -775,7 +883,7 @@ impl JobServer {
             deadline,
             predicted_secs: self.predict_submission(&s),
         };
-        let (tickets, item) = self.build_item(s, deadline);
+        let (tickets, item) = self.build_item(s, deadline, base_uid);
         let fut = JobFuture::new(tickets);
         let res = if blocking {
             self.admission.push_blocking(meta, item).map_err(TryPushError::Closed)
@@ -783,8 +891,12 @@ impl JobServer {
             self.admission.try_push(meta, item)
         };
         match res {
-            Ok(()) => Ok(fut),
+            Ok(()) => {
+                emit_each(EventKind::Admit);
+                Ok(fut)
+            }
             Err(e) => {
+                emit_each(EventKind::Shed);
                 let (full, item) = match e {
                     TryPushError::Full(i) => (true, i),
                     TryPushError::Closed(i) => (false, i),
@@ -801,7 +913,12 @@ impl JobServer {
     /// minting one quota slot per job. Each slot carries its job's
     /// inline bytes; a shared B is billed to the first sub (the split
     /// is an accounting detail — only the per-tenant totals matter).
-    fn build_item(&self, s: Submission, deadline: Option<Instant>) -> (Vec<JobTicket>, QueueItem) {
+    fn build_item(
+        &self,
+        s: Submission,
+        deadline: Option<Instant>,
+        base_uid: u64,
+    ) -> (Vec<JobTicket>, QueueItem) {
         let now = Instant::now();
         let tenant = s.tenant;
         let mb = |m: Option<&Matrix>| m.map_or(0, |m| 4 * m.rows * m.cols);
@@ -816,13 +933,14 @@ impl JobServer {
                     accepted_at: now,
                     tenant,
                     deadline,
+                    uid: base_uid,
                 };
                 (vec![JobTicket::new(s.id, rx)], QueueItem::One(adm))
             }
             SubmissionKind::Group(jobs) => {
                 let mut tickets = Vec::with_capacity(jobs.len());
                 let mut subs = Vec::with_capacity(jobs.len());
-                for j in jobs {
+                for (i, j) in jobs.into_iter().enumerate() {
                     let bytes = mb(j.a.as_inline()) + mb(j.b.as_inline());
                     let (tx, rx) = mpsc::channel();
                     tickets.push(JobTicket::new(j.id, rx));
@@ -834,6 +952,7 @@ impl JobServer {
                         accepted_at: now,
                         tenant,
                         deadline,
+                        uid: base_uid + i as u64,
                     });
                 }
                 (tickets, QueueItem::Group(subs))
@@ -854,6 +973,7 @@ impl JobServer {
                         accepted_at: now,
                         tenant,
                         deadline,
+                        uid: base_uid + i as u64,
                     });
                 }
                 (tickets, QueueItem::SharedB(SharedBatch { b, run: s.run, subs }))
@@ -1168,6 +1288,47 @@ impl JobServer {
         self.admission.len()
     }
 
+    /// Consistent snapshot of the flight recorder: every stable event
+    /// in generation order, plus the recorded/overwritten totals. Empty
+    /// (and allocation-free) when `ServerConfig::trace_capacity` is 0.
+    pub fn trace_snapshot(&self) -> TraceSnapshot {
+        self.shared.trace.snapshot()
+    }
+
+    /// Whether the flight recorder is collecting events.
+    pub fn trace_enabled(&self) -> bool {
+        self.shared.trace.enabled()
+    }
+
+    /// Open a workload-level span on the trace (Strassen recursion
+    /// level, CNN layer, attention phase). `detail` is the span's
+    /// kind-specific payload — a level / layer / phase index. No-op
+    /// when tracing is disabled; spans render as their own track in the
+    /// Chrome export.
+    pub fn trace_span_begin(&self, kind: SpanKind, detail: u64) {
+        self.shared.trace.emit(
+            EventKind::SpanBegin,
+            kind as u32 as u64,
+            ACTOR_NONE,
+            ACTOR_NONE,
+            detail,
+            0,
+        );
+    }
+
+    /// Close the innermost span of `kind` (see
+    /// [`JobServer::trace_span_begin`]).
+    pub fn trace_span_end(&self, kind: SpanKind, detail: u64) {
+        self.shared.trace.emit(
+            EventKind::SpanEnd,
+            kind as u32 as u64,
+            ACTOR_NONE,
+            ACTOR_NONE,
+            detail,
+            0,
+        );
+    }
+
     /// Server-level snapshot (throughput, percentiles, idle fraction).
     pub fn stats(&self) -> ServerStats {
         let m = &self.shared.metrics;
@@ -1180,8 +1341,33 @@ impl JobServer {
             .sum::<f64>();
         let denom = uptime * self.shared.cfg.workers as f64;
         let idle = if denom > 0.0 { (1.0 - busy_secs / denom).clamp(0.0, 1.0) } else { 0.0 };
-        let (mean, _) = m.host_latency();
-        let pcts = m.host_latency_percentiles(&[0.50, 0.95, 0.99]);
+        // One latency snapshot feeds mean and every percentile — a
+        // single pass over one consistent copy of the reservoir.
+        let lat = m.latency_snapshot();
+        let pcts = lat.percentiles(&[0.50, 0.95, 0.99]);
+        let per_worker_tasks: Vec<u64> =
+            self.shared.worker_tasks.iter().map(|t| t.load(Ordering::Relaxed)).collect();
+        let per_worker_steals: Vec<u64> =
+            self.shared.worker_steals.iter().map(|t| t.load(Ordering::Relaxed)).collect();
+        let max_t = per_worker_tasks.iter().copied().max().unwrap_or(0);
+        let min_t = per_worker_tasks.iter().copied().min().unwrap_or(0);
+        let worker_imbalance = match (max_t, min_t) {
+            (0, _) => 0.0,
+            (_, 0) => f64::INFINITY,
+            (max, min) => max as f64 / min as f64,
+        };
+        let stage_p50_p95_secs = if self.shared.trace.enabled() {
+            let traces = self.shared.trace.snapshot().job_traces();
+            stage_percentiles(&traces, &[0.50, 0.95]).map(|per_stage| {
+                let mut out = [(0.0, 0.0); 5];
+                for (slot, ps) in out.iter_mut().zip(&per_stage) {
+                    *slot = (ps[0], ps[1]);
+                }
+                out
+            })
+        } else {
+            None
+        };
         ServerStats {
             jobs: m.jobs(),
             jobs_failed: m.jobs_failed(),
@@ -1208,7 +1394,7 @@ impl JobServer {
             panels_shared: m.panels_shared(),
             uptime_secs: uptime,
             throughput_jobs_per_sec: if uptime > 0.0 { m.jobs() as f64 / uptime } else { 0.0 },
-            latency_mean_secs: mean,
+            latency_mean_secs: lat.mean,
             latency_p50_secs: pcts[0],
             latency_p95_secs: pcts[1],
             latency_p99_secs: pcts[2],
@@ -1217,6 +1403,13 @@ impl JobServer {
             tenants: m.tenant_counters(),
             worker_busy_secs: busy_secs,
             worker_idle_frac: idle,
+            per_worker_tasks,
+            per_worker_steals,
+            worker_imbalance,
+            drift: m.drift_stats(),
+            stage_p50_p95_secs,
+            trace_recorded: self.shared.trace.recorded(),
+            trace_dropped: self.shared.trace.dropped(),
         }
     }
 
@@ -1262,11 +1455,13 @@ impl Drop for JobServer {
     }
 }
 
-/// Plan one submission: validate, choose the run config, build the block
+/// Plan one submission: validate, choose the run config, price it with
+/// the analytical model (the job's drift baseline), build the block
 /// grid. On failure the submitter gets the error through its ticket and
-/// `None` comes back.
-fn plan_one(shared: &Shared, s: Admitted) -> Option<Planned> {
-    let planned = (|| -> anyhow::Result<(RunConfig, BlockPlan)> {
+/// `None` comes back. `shard` tags the trace events with the planning
+/// dispatcher.
+fn plan_one(shared: &Shared, s: Admitted, shard: usize) -> Option<Planned> {
+    let planned = (|| -> anyhow::Result<(RunConfig, BlockPlan, f64)> {
         // A registered operand plans from the registry's recorded dims;
         // the pack itself resolves at activation.
         let (a_rows, a_cols) = match &s.job.a {
@@ -1311,19 +1506,38 @@ fn plan_one(shared: &Shared, s: Admitted) -> Option<Planned> {
             b_cols,
         );
         let plan = BlockPlan::new(a_rows, a_cols, b_cols, run.si, run.sj);
-        Ok((run, plan))
+        let predicted = predict_run(shared, &run, a_rows, a_cols, b_cols);
+        Ok((run, plan, predicted))
     })();
     match planned {
-        Ok((run, plan)) => {
+        Ok((run, plan, predicted)) => {
+            shared.trace.emit(
+                EventKind::Planned,
+                s.uid,
+                s.tenant.0,
+                shard as u32,
+                predicted.to_bits(),
+                plan.num_tasks() as u64,
+            );
             let small = plan.num_tasks() <= shared.cfg.batch_max_tasks;
-            Some(Planned { sub: s, run, plan, small })
+            Some(Planned { sub: s, run, plan, small, predicted })
         }
         Err(e) => {
+            shared.trace.emit(EventKind::PlanFail, s.uid, s.tenant.0, shard as u32, 0, 0);
             shared.metrics.job_failed();
             s.reply.send(Err(e));
             None
         }
     }
+}
+
+/// Price a `(run, m, k, n)` with the analytical model; 0.0 when the
+/// model rejects the configuration (drift records then skip the job —
+/// `Metrics::record_drift` guards non-positive predictions).
+fn predict_run(shared: &Shared, run: &RunConfig, m: usize, k: usize, n: usize) -> f64 {
+    crate::analytical::predict(&shared.hw, run, m, k, n, shared.accelerator.surface())
+        .map(|p| p.t_overlap())
+        .unwrap_or(0.0)
 }
 
 /// Registry-aware run refinement: when a submission's registered
@@ -1411,7 +1625,7 @@ fn refine_run_for_residency(
 /// the queue fills, and `submit` blocks — so total server memory is
 /// bounded by `queue_capacity` queued plus `max(queue_capacity,
 /// workers)` active jobs, not by the arrival rate.
-fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
+fn activate(shared: &Arc<Shared>, planned: Vec<Planned>, shard: usize) {
     debug_assert!(!planned.is_empty());
     wait_for_inflight_slot(shared);
     // Resolve every sub's operands first: an inline side wraps (and
@@ -1431,12 +1645,14 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
         accepted_at: Instant,
         tenant: TenantId,
         deadline: Option<Instant>,
+        uid: u64,
+        predicted: f64,
     }
     let inprocess = shared.engine.is_inprocess();
     let mut builds: Vec<Build> = Vec::with_capacity(planned.len());
     for p in planned {
-        let Planned { sub, run, plan, .. } = p;
-        let Admitted { job, reply, accepted_at, tenant, deadline } = sub;
+        let Planned { sub, run, plan, predicted, .. } = p;
+        let Admitted { job, reply, accepted_at, tenant, deadline, uid } = sub;
         let GemmJob { id, a, b, .. } = job;
         let resolved = (|| -> anyhow::Result<_> {
             let (a, packed_a) = resolve_a_operand(shared, a, run.si, inprocess)?;
@@ -1479,8 +1695,11 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
                 accepted_at,
                 tenant,
                 deadline,
+                uid,
+                predicted,
             }),
             Err(e) => {
+                shared.trace.emit(EventKind::Fail, uid, tenant.0, shard as u32, 0, 0);
                 shared.metrics.job_failed();
                 reply.send(Err(e));
             }
@@ -1515,9 +1734,11 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>) {
             batched,
             build.tenant,
             build.deadline,
+            build.uid,
+            build.predicted,
         ));
     }
-    publish(shared, subs, tasks);
+    publish(shared, subs, tasks, shard);
 }
 
 /// Resolve one A operand for execution under block size `si`: an inline
@@ -1582,6 +1803,8 @@ fn build_sub(
     batched: bool,
     tenant: TenantId,
     deadline: Option<Instant>,
+    uid: u64,
+    predicted_secs: f64,
 ) -> SubJob {
     let mut c = Matrix::zeros(a.rows, b.cols);
     let raw = RawOut { ptr: c.data.as_mut_ptr(), rows: c.rows, cols: c.cols };
@@ -1600,13 +1823,27 @@ fn build_sub(
         batched,
         tenant,
         deadline,
+        uid,
+        predicted_secs,
     }
 }
 
 /// Register one active (super-)job: round-robin the combined task set
 /// over the pool's queues — the same initial static partition a single
 /// job's WQM gets — and wake the workers.
-fn publish(shared: &Arc<Shared>, subs: Vec<SubJob>, tasks: Vec<SubTask>) {
+fn publish(shared: &Arc<Shared>, subs: Vec<SubJob>, tasks: Vec<SubTask>, shard: usize) {
+    if shared.trace.enabled() {
+        for sub in &subs {
+            shared.trace.emit(
+                EventKind::Published,
+                sub.uid,
+                sub.tenant.0,
+                shard as u32,
+                sub.pending.load(Ordering::Relaxed) as u64,
+                subs.len() as u64,
+            );
+        }
+    }
     let mut partition: Vec<Vec<SubTask>> = vec![Vec::new(); shared.cfg.workers];
     for (i, st) in tasks.into_iter().enumerate() {
         partition[i % shared.cfg.workers].push(st);
@@ -1629,25 +1866,45 @@ enum Carry {
     Planned(Planned),
 }
 
-fn dispatcher_loop(shared: Arc<Shared>, admission: Arc<FrontEnd<QueueItem>>) {
+/// Stamp a `Pop` for every sub-job of a freshly-popped queue item:
+/// the end of the queue-wait stage for each of them, tagged with the
+/// dispatcher shard that took the item.
+fn emit_pops(shared: &Shared, item: &QueueItem, shard: usize) {
+    if !shared.trace.enabled() {
+        return;
+    }
+    let one = |uid: u64, tenant: TenantId| {
+        shared.trace.emit(EventKind::Pop, uid, tenant.0, shard as u32, 0, 0);
+    };
+    match item {
+        QueueItem::One(s) => one(s.uid, s.tenant),
+        QueueItem::Group(subs) => subs.iter().for_each(|s| one(s.uid, s.tenant)),
+        QueueItem::SharedB(batch) => batch.subs.iter().for_each(|s| one(s.uid, s.tenant)),
+    }
+}
+
+fn dispatcher_loop(shared: Arc<Shared>, admission: Arc<FrontEnd<QueueItem>>, shard: usize) {
     let mut carry: Option<Carry> = None;
     loop {
         let item = match carry.take() {
             Some(c) => c,
             None => match admission.pop_blocking() {
-                Some(i) => Carry::Fresh(i),
+                Some(i) => {
+                    emit_pops(&shared, &i, shard);
+                    Carry::Fresh(i)
+                }
                 None => break, // closed and drained
             },
         };
         match item {
-            Carry::Fresh(QueueItem::Group(group)) => dispatch_group(&shared, group),
-            Carry::Fresh(QueueItem::SharedB(batch)) => dispatch_shared_b(&shared, batch),
+            Carry::Fresh(QueueItem::Group(group)) => dispatch_group(&shared, group, shard),
+            Carry::Fresh(QueueItem::SharedB(batch)) => dispatch_shared_b(&shared, batch, shard),
             Carry::Fresh(QueueItem::One(s)) => {
-                if let Some(p) = plan_one(&shared, s) {
-                    dispatch_single(&shared, &admission, p, &mut carry);
+                if let Some(p) = plan_one(&shared, s, shard) {
+                    dispatch_single(&shared, &admission, p, &mut carry, shard);
                 }
             }
-            Carry::Planned(p) => dispatch_single(&shared, &admission, p, &mut carry),
+            Carry::Planned(p) => dispatch_single(&shared, &admission, p, &mut carry, shard),
         }
     }
 }
@@ -1662,52 +1919,59 @@ fn dispatch_single(
     admission: &FrontEnd<QueueItem>,
     first: Planned,
     carry: &mut Option<Carry>,
+    shard: usize,
 ) {
     if !first.small || shared.cfg.batch_window <= 1 {
-        activate(shared, vec![first]);
+        activate(shared, vec![first], shard);
         return;
     }
     let mut batch = vec![first];
     while batch.len() < shared.cfg.batch_window {
         match admission.try_pop() {
-            Some(QueueItem::One(s)) => match plan_one(shared, s) {
-                Some(p) if p.small => batch.push(p),
-                Some(p) => {
-                    *carry = Some(Carry::Planned(p));
-                    break;
+            Some(item) => {
+                emit_pops(shared, &item, shard);
+                match item {
+                    QueueItem::One(s) => match plan_one(shared, s, shard) {
+                        Some(p) if p.small => batch.push(p),
+                        Some(p) => {
+                            *carry = Some(Carry::Planned(p));
+                            break;
+                        }
+                        None => {}
+                    },
+                    // An explicit group or shared-B batch ends the
+                    // coalescing run; it is dispatched as its own unit
+                    // next iteration.
+                    other => {
+                        *carry = Some(Carry::Fresh(other));
+                        break;
+                    }
                 }
-                None => {}
-            },
-            // An explicit group or shared-B batch ends the coalescing
-            // run; it is dispatched as its own unit next iteration.
-            Some(other) => {
-                *carry = Some(Carry::Fresh(other));
-                break;
             }
             None => break,
         }
     }
-    activate(shared, batch);
+    activate(shared, batch, shard);
 }
 
 /// Dispatch an explicit group: batch its small members (in windows),
 /// activate the rest individually.
-fn dispatch_group(shared: &Arc<Shared>, group: Vec<Admitted>) {
+fn dispatch_group(shared: &Arc<Shared>, group: Vec<Admitted>, shard: usize) {
     let mut smalls: Vec<Planned> = Vec::new();
     for s in group {
-        if let Some(p) = plan_one(shared, s) {
+        if let Some(p) = plan_one(shared, s, shard) {
             if p.small && shared.cfg.batch_window > 1 {
                 smalls.push(p);
                 if smalls.len() == shared.cfg.batch_window {
-                    activate(shared, std::mem::take(&mut smalls));
+                    activate(shared, std::mem::take(&mut smalls), shard);
                 }
             } else {
-                activate(shared, vec![p]);
+                activate(shared, vec![p], shard);
             }
         }
     }
     if !smalls.is_empty() {
-        activate(shared, smalls);
+        activate(shared, smalls, shard);
     }
 }
 
@@ -1769,10 +2033,11 @@ fn choose_shared_run(
 /// combined task grid.
 /// `Metrics::b_panel_packs` counts actual packs and
 /// `Metrics::panels_shared` the within-call packs the sharing avoided.
-fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
+fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch, shard: usize) {
     let SharedBatch { b, run, subs } = batch;
     let reject_all = |subs: Vec<SharedSub>, msg: String| {
         for s in subs {
+            shared.trace.emit(EventKind::Fail, s.uid, s.tenant.0, shard as u32, 0, 0);
             shared.metrics.job_failed();
             s.reply.send(Err(anyhow::anyhow!("shared-B batch rejected: {msg}")));
         }
@@ -1809,6 +2074,7 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
         match dims {
             Ok((rows, cols)) if cols == b.rows && rows > 0 => accepted.push((s, (rows, cols))),
             Ok((rows, cols)) => {
+                shared.trace.emit(EventKind::PlanFail, s.uid, s.tenant.0, shard as u32, 0, 0);
                 shared.metrics.job_failed();
                 s.reply.send(Err(anyhow::anyhow!(
                     "sub-job {}: A is {}x{} against shared B {}x{}",
@@ -1820,6 +2086,7 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
                 )));
             }
             Err(e) => {
+                shared.trace.emit(EventKind::PlanFail, s.uid, s.tenant.0, shard as u32, 0, 0);
                 shared.metrics.job_failed();
                 s.reply.send(Err(e));
             }
@@ -1835,12 +2102,28 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
         Err(e) => {
             let msg = format!("{e:#}");
             for (s, _) in accepted {
+                shared.trace.emit(EventKind::PlanFail, s.uid, s.tenant.0, shard as u32, 0, 0);
                 shared.metrics.job_failed();
                 s.reply.send(Err(anyhow::anyhow!("shared-B batch rejected: {msg}")));
             }
             return;
         }
     };
+    // One Planned per surviving sub, each priced for its own shape
+    // under the batch's single config — the drift baselines.
+    if shared.trace.enabled() {
+        for (s, (rows, cols)) in &accepted {
+            let predicted = predict_run(shared, &run, *rows, *cols, b.cols);
+            shared.trace.emit(
+                EventKind::Planned,
+                s.uid,
+                s.tenant.0,
+                shard as u32,
+                predicted.to_bits(),
+                0,
+            );
+        }
+    }
     wait_for_inflight_slot(shared);
 
     // Obtain the shared packed half at most once: an inline B packs
@@ -1882,6 +2165,7 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
         let (a, packed_a) = match resolve_a_operand(shared, s.a, run.si, inprocess) {
             Ok(resolved) => resolved,
             Err(e) => {
+                shared.trace.emit(EventKind::Fail, s.uid, s.tenant.0, shard as u32, 0, 0);
                 shared.metrics.job_failed();
                 s.reply.send(Err(e));
                 continue;
@@ -1896,6 +2180,7 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
             (Some(pa), Some(pb)) => Some(PackedPanels::from_parts(pa, pb.clone())),
             _ => None,
         };
+        let predicted = predict_run(shared, &run, rows, cols, b.cols);
         subs_built.push(build_sub(
             s.id,
             run,
@@ -1908,12 +2193,14 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch) {
             batched,
             s.tenant,
             s.deadline,
+            s.uid,
+            predicted,
         ));
     }
     if subs_built.is_empty() {
         return;
     }
-    publish(shared, subs_built, tasks);
+    publish(shared, subs_built, tasks, shard);
 }
 
 fn worker_loop(shared: Arc<Shared>, w: usize) {
@@ -1941,13 +2228,15 @@ fn worker_loop(shared: Arc<Shared>, w: usize) {
 
         // 1) Keep draining the job we're already on. A job that retired
         //    from the table resets the affinity — adopting the next job
-        //    after that is assignment, not a cross-job steal.
-        let mut claimed: Option<(u64, Arc<ActiveJob>, SubTask, bool)> = None;
+        //    after that is assignment, not a cross-job steal. `stolen`
+        //    records intra-job provenance: the task came off a queue
+        //    other than this worker's own.
+        let mut claimed: Option<(u64, Arc<ActiveJob>, SubTask, bool, bool)> = None;
         if let Some(tag) = last_job {
             match cache.iter().find(|(t, _)| *t == tag) {
                 Some((t, job)) => {
-                    if let Some(st) = job.wqm.pop(w) {
-                        claimed = Some((*t, job.clone(), st, false));
+                    if let Some((st, src)) = job.wqm.pop_with_source(w) {
+                        claimed = Some((*t, job.clone(), st, false, src != w));
                     }
                 }
                 None => last_job = None,
@@ -1969,14 +2258,14 @@ fn worker_loop(shared: Arc<Shared>, w: usize) {
                 cache.iter().map(|(t, j)| (*t, j, j.wqm.remaining())).next()
             };
             if let Some((tag, job, _)) = pick {
-                if let Some(st) = job.wqm.pop(w) {
+                if let Some((st, src)) = job.wqm.pop_with_source(w) {
                     // Adopting a job when we had none is assignment, not
                     // stealing; and the no-cross-steal baseline moves to
                     // the next job sequentially, which doesn't count.
                     let switched = shared.cfg.cross_job_stealing
                         && last_job.is_some()
                         && last_job != Some(tag);
-                    claimed = Some((tag, job.clone(), st, switched));
+                    claimed = Some((tag, job.clone(), st, switched, src != w));
                 } else if shared.cfg.cross_job_stealing {
                     // Raced with other workers; another job may still
                     // hold work — rescan immediately.
@@ -1997,13 +2286,19 @@ fn worker_loop(shared: Arc<Shared>, w: usize) {
         }
 
         match claimed {
-            Some((tag, job, st, switched)) => {
+            Some((tag, job, st, switched, stolen)) => {
                 if switched {
                     shared.metrics.add_cross_job_steals(1);
                 }
+                shared.worker_tasks[w].fetch_add(1, Ordering::Relaxed);
+                if stolen {
+                    shared.worker_steals[w].fetch_add(1, Ordering::Relaxed);
+                }
                 last_job = Some(tag);
+                let flags =
+                    (stolen as u64 * TASK_STOLEN) | (switched as u64 * TASK_CROSS_JOB);
                 let t0 = Instant::now();
-                execute_subtask(&shared, &job, tag, st);
+                execute_subtask(&shared, &job, tag, st, w, flags);
                 shared.worker_busy[w]
                     .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             }
@@ -2021,8 +2316,9 @@ fn worker_loop(shared: Arc<Shared>, w: usize) {
     }
 }
 
-fn execute_subtask(shared: &Shared, job: &ActiveJob, tag: u64, st: SubTask) {
+fn execute_subtask(shared: &Shared, job: &ActiveJob, tag: u64, st: SubTask, w: usize, flags: u64) {
     let sub = &job.subs[st.sub as usize];
+    let start_us = shared.trace.now_us();
     // SAFETY: `sub.out` keeps C's buffer alive until the final task's
     // completion below; the WQM hands each task to exactly one worker
     // and a BlockPlan's tasks tile C disjointly, so concurrent
@@ -2065,6 +2361,10 @@ fn execute_subtask(shared: &Shared, job: &ActiveJob, tag: u64, st: SubTask) {
         }
     }
     shared.metrics.task_done();
+    // Stamped before the completion bookkeeping so the last task's
+    // record lands before (and its timestamp never exceeds) the job's
+    // Done event emitted by `finalize_sub` below.
+    shared.trace.emit(EventKind::TaskExec, sub.uid, sub.tenant.0, w as u32, start_us, flags);
     if sub.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
         finalize_sub(shared, sub);
         if job.subs_pending.fetch_sub(1, Ordering::AcqRel) == 1 {
@@ -2102,6 +2402,18 @@ fn finalize_sub(shared: &Shared, sub: &SubJob) {
                     sub.deadline.is_some(),
                     missed.unwrap_or(false),
                 );
+                // Model drift: what planning predicted vs what the
+                // simulation measured (guarded inside `record_drift`
+                // when the model could not price the job).
+                shared.metrics.record_drift(sub.predicted_secs, sim.total_secs);
+                shared.trace.emit(
+                    EventKind::Done,
+                    sub.uid,
+                    sub.tenant.0,
+                    ACTOR_NONE,
+                    sub.predicted_secs.to_bits(),
+                    sim.total_secs.to_bits(),
+                );
                 JobResult {
                     id: sub.id,
                     c,
@@ -2115,6 +2427,7 @@ fn finalize_sub(shared: &Shared, sub: &SubJob) {
         (None, None) => Err(anyhow::anyhow!("job {} finalized twice", sub.id)),
     };
     if result.is_err() {
+        shared.trace.emit(EventKind::Fail, sub.uid, sub.tenant.0, ACTOR_NONE, 0, 0);
         shared.metrics.job_failed();
     }
     if let Some(reply) = sub.reply.lock().unwrap().take() {
@@ -2360,6 +2673,12 @@ mod tests {
         assert!(s.latency_p50_secs <= s.latency_p95_secs);
         assert!(s.latency_p95_secs <= s.latency_p99_secs);
         assert!((0.0..=1.0).contains(&s.worker_idle_frac));
+        // Per-worker breakdown: the tallies partition the task total,
+        // and the imbalance ratio is well-defined once work ran.
+        assert_eq!(s.per_worker_tasks.len(), 4);
+        assert_eq!(s.per_worker_tasks.iter().sum::<u64>(), s.tasks);
+        assert!(s.per_worker_steals.iter().sum::<u64>() <= s.tasks);
+        assert!(s.worker_imbalance >= 1.0);
         assert!(s.to_string().contains("jobs=5"));
     }
 
@@ -2614,6 +2933,7 @@ mod tests {
             accepted_at: Instant::now(),
             tenant: TenantId::DEFAULT,
             deadline: None,
+            uid: id,
         }
     }
 
@@ -2635,6 +2955,7 @@ mod tests {
                     accepted_at: Instant::now(),
                     tenant: TenantId::DEFAULT,
                     deadline: None,
+                    uid: i,
                 })
                 .collect(),
         });
@@ -2901,5 +3222,193 @@ mod tests {
         assert_eq!((s.registry_hits, s.registry_misses), (0, 4), "every variant packed fresh");
         assert!(s.registry_evictions >= 2, "unpinned packs evicted past the budget");
         assert!(s.registry_a_evictions >= 1, "the A side participated in cross-side LRU");
+    }
+
+    use super::super::trace::Terminal;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        // The overhead gate: with `trace_capacity: 0` (the default) the
+        // whole pipeline runs without recording a single event — and
+        // the snapshot allocates nothing.
+        let srv = server(small_cfg());
+        assert!(!srv.trace_enabled());
+        let a = Matrix::random(32, 16, 1);
+        let b = Matrix::random(16, 32, 2);
+        srv.submit(GemmJob { id: 0, a: a.into(), b: b.into(), run: Some(RunConfig::square(2, 16)) })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let snap = srv.trace_snapshot();
+        assert_eq!(snap.recorded, 0);
+        assert_eq!(snap.dropped, 0);
+        assert!(snap.events.is_empty());
+        assert!(snap.events.capacity() == 0, "disabled snapshot must not allocate");
+        let s = srv.stats();
+        assert_eq!((s.trace_recorded, s.trace_dropped), (0, 0));
+        assert!(s.stage_p50_p95_secs.is_none());
+    }
+
+    #[test]
+    fn traced_lifecycle_telescopes_and_surfaces_drift() {
+        let cfg = ServerConfig { trace_capacity: 1024, ..small_cfg() };
+        let srv = server(cfg);
+        for i in 0..3u64 {
+            let a = Matrix::random(48, 24, 10 + i);
+            let b = Matrix::random(24, 40, 20 + i);
+            srv.submit(GemmJob {
+                id: i,
+                a: a.into(),
+                b: b.into(),
+                run: Some(RunConfig::square(2, 16)),
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        }
+        let snap = srv.trace_snapshot();
+        let traces = snap.job_traces();
+        assert_eq!(traces.len(), 3, "one JobTrace per submitted job");
+        for t in &traces {
+            assert_eq!(t.terminal, Terminal::Done);
+            let stages = t.stage_secs().expect("full stage breakdown");
+            let e2e = t.end_to_end_secs().expect("e2e span");
+            let sum: f64 = stages.iter().sum();
+            assert!(
+                (sum - e2e).abs() < 1e-9,
+                "stages must telescope to e2e: {sum} vs {e2e}"
+            );
+            assert!(t.tasks >= 1);
+            assert_eq!(
+                t.workers.iter().map(|w| w.tasks).sum::<u64>(),
+                t.tasks,
+                "per-worker tallies partition the task count"
+            );
+            assert!(t.predicted_secs.is_some(), "planned jobs carry a prediction");
+            let measured = t.measured_secs.expect("done jobs carry a measurement");
+            assert!(measured > 0.0);
+        }
+        // The drift aggregate and stage rollups surface in stats().
+        let s = srv.stats();
+        assert!(s.trace_recorded > 0);
+        let d = s.drift.expect("3 completed jobs recorded drift");
+        assert_eq!(d.count, 3);
+        assert!(d.min <= d.mean && d.mean <= d.max);
+        let stages = s.stage_p50_p95_secs.expect("stage rollup with tracing on");
+        for (p50, p95) in stages {
+            assert!(p50 <= p95);
+        }
+        let text = s.to_string();
+        assert!(text.contains("worker_tasks(max/min)="), "got: {text}");
+        assert!(text.contains("drift(min/mean/max/p95)="), "got: {text}");
+        assert!(text.contains("stages(p50/p95)=[queue="), "got: {text}");
+    }
+
+    #[test]
+    fn plan_failure_is_a_traced_terminal() {
+        let cfg = ServerConfig { trace_capacity: 256, ..small_cfg() };
+        let srv = server(cfg);
+        let bad = GemmJob {
+            id: 1,
+            a: Matrix::random(8, 8, 5).into(),
+            b: Matrix::random(9, 8, 6).into(), // contraction mismatch
+            run: None,
+        };
+        assert!(srv.submit(bad).unwrap().wait().is_err());
+        let traces = srv.trace_snapshot().job_traces();
+        assert_eq!(traces.len(), 1);
+        assert_eq!(traces[0].terminal, Terminal::PlanFailed);
+        assert!(traces[0].done_us.is_some(), "terminal events carry a timestamp");
+    }
+
+    #[test]
+    fn quota_rejection_is_a_traced_terminal() {
+        let cfg = ServerConfig { trace_capacity: 1024, workers: 1, ..small_cfg() };
+        let srv = server(cfg);
+        let t7 = TenantId(7);
+        srv.configure_tenant(
+            t7,
+            TenantConfig { weight: 1, max_inflight_jobs: Some(1), max_inflight_bytes: None },
+        )
+        .unwrap();
+        // A large job holds the tenant's whole quota while in flight...
+        let a = Matrix::random(512, 64, 30);
+        let b = Matrix::random(64, 512, 31);
+        let fut = srv
+            .submit_async(Submission::gemm(a, b).tenant(t7).run(RunConfig::square(2, 16)))
+            .unwrap();
+        // ...so the next submission bounces at the door.
+        let r = srv.try_submit(
+            Submission::gemm(Matrix::random(8, 8, 32), Matrix::random(8, 8, 33)).tenant(t7),
+        );
+        assert!(matches!(r, Err(SubmitError::QuotaExceeded { .. })));
+        fut.wait().unwrap();
+        let traces = srv.trace_snapshot().job_traces();
+        assert_eq!(traces.len(), 2, "rejected work still has a trace identity");
+        let rejected: Vec<_> =
+            traces.iter().filter(|t| t.terminal == Terminal::QuotaRejected).collect();
+        assert_eq!(rejected.len(), 1, "exactly one quota rejection");
+        assert_eq!(rejected[0].tenant, 7);
+        assert_eq!(
+            traces.iter().filter(|t| t.terminal == Terminal::Done).count(),
+            1,
+            "the admitted job completed"
+        );
+    }
+
+    #[test]
+    fn trace_conserves_every_submission_under_shedding() {
+        // Conservation: every uid that entered `admit` ends with exactly
+        // one terminal — Done for completions, Shed for queue-full
+        // rejections — no matter how the flood races the dispatcher.
+        let cfg = ServerConfig {
+            trace_capacity: 8192,
+            workers: 1,
+            queue_capacity: 1,
+            ..small_cfg()
+        };
+        let srv = server(cfg);
+        let mut futs = Vec::new();
+        let mut shed = 0u64;
+        let total = 24u64;
+        for i in 0..total {
+            let s = Submission::gemm(Matrix::random(64, 32, i), Matrix::random(32, 64, 100 + i))
+                .run(RunConfig::square(2, 16));
+            match srv.try_submit(s) {
+                Ok(f) => futs.push(f),
+                Err(SubmitError::Full(_)) => shed += 1,
+                Err(e) => panic!("unexpected admission outcome: {e:?}"),
+            }
+        }
+        for f in futs {
+            f.wait().unwrap();
+        }
+        let traces = srv.trace_snapshot().job_traces();
+        assert_eq!(traces.len() as u64, total, "every submission traced exactly once");
+        assert!(traces.iter().all(|t| t.terminal != Terminal::InFlight));
+        let sheds = traces.iter().filter(|t| t.terminal == Terminal::Shed).count() as u64;
+        let dones = traces.iter().filter(|t| t.terminal == Terminal::Done).count() as u64;
+        assert_eq!(sheds, shed, "one Shed terminal per queue-full rejection");
+        assert_eq!(dones, total - shed, "everything admitted ran to completion");
+    }
+
+    #[test]
+    fn workload_spans_bracket_in_the_trace() {
+        let cfg = ServerConfig { trace_capacity: 128, ..small_cfg() };
+        let srv = server(cfg);
+        srv.trace_span_begin(SpanKind::StrassenLevel, 2);
+        srv.trace_span_end(SpanKind::StrassenLevel, 2);
+        let snap = srv.trace_snapshot();
+        let spans: Vec<_> = snap
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::SpanBegin | EventKind::SpanEnd))
+            .collect();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].kind, EventKind::SpanBegin);
+        assert_eq!(spans[0].uid, SpanKind::StrassenLevel as u64);
+        assert_eq!(spans[0].a, 2);
+        assert_eq!(spans[1].kind, EventKind::SpanEnd);
+        assert!(spans[0].t_us <= spans[1].t_us);
     }
 }

@@ -1,0 +1,1166 @@
+//! Flight recorder for the serving stack.
+//!
+//! The server's counters (`Metrics`, `ServerStats`) say *how much* —
+//! jobs, packs, steals, percentiles — but not *where the time went* or
+//! *which worker did the work*. This module adds the missing evidence
+//! layer: a bounded, lock-free, multi-producer flight recorder that
+//! stamps every job's lifecycle
+//!
+//! ```text
+//! submit → quota/admit → DRR pop → plan → pack → publish
+//!        → first/last task → finalize/reply
+//! ```
+//!
+//! so each [`JobTrace`] yields
+//!
+//! * a **queue-wait / plan / pack / execute / finalize** breakdown whose
+//!   five spans telescope exactly to the job's end-to-end latency (all
+//!   spans are differences of the *same* event timestamps);
+//! * **per-worker task and steal-provenance counts** — the direct
+//!   observable for the paper's claim that work stealing equalizes the
+//!   workload partition across arrays;
+//! * a **`predicted_secs` vs `measured_secs` drift record**: the
+//!   analytical model (Eqs. 3–7) prices the *chosen* config at plan
+//!   time, the simulator reports measured time at finalize, and the
+//!   relative drift between them is the model-calibration signal the
+//!   ROADMAP's measured-backend item needs.
+//!
+//! ## The ring
+//!
+//! [`TraceRing`] is a fixed-capacity MPSC ring of compact, `Copy`
+//! [`TraceEvent`]s with overwrite-oldest semantics. Each slot carries a
+//! seqlock word: a writer claims generation `n` by CAS-ing the slot's
+//! sequence from an even (stable) value to `2n+1`, writes the payload,
+//! and publishes `2n+2`; the snapshot reader copies a slot only when it
+//! observes the same even sequence before and after the copy, so a
+//! snapshot can never tear an event. A writer that loses the claim race
+//! (another writer lapped the ring onto the same slot) drops its event
+//! and counts it — the recorder is lossy-oldest by design, never
+//! blocking and never corrupting. With `capacity == 0` the ring holds
+//! no slots, allocates nothing, and `emit` returns immediately — the
+//! disabled recorder's cost is one branch.
+//!
+//! ## Export
+//!
+//! [`TraceSnapshot::job_traces`] folds the raw events into per-job
+//! records; [`TraceExporter`] writes them as JSONL (one job per line,
+//! validated by `ci/check_trace_schema.py`) and as Chrome
+//! `trace_event` JSON loadable in Perfetto — one track per worker
+//! (task execution with steal provenance), one per dispatcher shard
+//! (plan/pack), one for registry activity, one for workload-level
+//! spans, plus per-job async stage spans.
+
+use std::cell::UnsafeCell;
+use std::collections::BTreeMap;
+use std::io::{self, Write};
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::time::Instant;
+
+/// What a [`TraceEvent`] records. Job-lifecycle kinds (`Submit` through
+/// `Fail`) are keyed by job uid; registry kinds carry a handle id;
+/// span kinds carry a [`SpanKind`] code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Job entered `admit` (one event per sub-job of the submission).
+    Submit,
+    /// Job passed quota and was pushed into the admission queue.
+    Admit,
+    /// Terminal: the tenant's quota rejected the submission.
+    QuotaReject,
+    /// Terminal: `try_submit` shed the job (queue full / closed).
+    Shed,
+    /// A dispatcher shard popped the job from the DRR queue
+    /// (`actor` = shard).
+    Pop,
+    /// Planning chose a config; `a` = predicted seconds (f64 bits).
+    Planned,
+    /// Terminal: planning failed, the job replied with an error.
+    PlanFail,
+    /// Operands packed and tasks published to the workers.
+    Published,
+    /// A worker finished one task (`actor` = worker, `a` = start µs,
+    /// `b` = provenance flags, see [`TASK_STOLEN`]).
+    TaskExec,
+    /// Terminal: finalized and replied; `a`/`b` = predicted/measured
+    /// seconds (f64 bits) — the model-drift record.
+    Done,
+    /// Terminal: the job failed after admission (operand resolution,
+    /// validation, execution error).
+    Fail,
+    /// Registry pack-cache hit (`uid` = handle, `a` = bytes,
+    /// `b` = side: 0 = A, 1 = B).
+    RegistryHit,
+    /// Registry pack-cache miss (payload as [`EventKind::RegistryHit`]).
+    RegistryMiss,
+    /// Registry evicted a pack (payload as [`EventKind::RegistryHit`]).
+    RegistryEvict,
+    /// Workload-level span opened (`uid` = [`SpanKind`] code,
+    /// `a` = detail).
+    SpanBegin,
+    /// Workload-level span closed (payload as [`EventKind::SpanBegin`]).
+    SpanEnd,
+    /// The admission queue's DRR scheduler served a tenant
+    /// (`a` = jobs still queued, `b` = remaining deficit).
+    DrrPop,
+}
+
+/// `TaskExec.b` bit: the task was claimed from a queue other than the
+/// executing worker's own (intra-job steal).
+pub const TASK_STOLEN: u64 = 1;
+/// `TaskExec.b` bit: the worker switched jobs to claim this task
+/// (cross-job steal).
+pub const TASK_CROSS_JOB: u64 = 2;
+
+/// `actor` value for events not tied to a worker or shard.
+pub const ACTOR_NONE: u32 = u32::MAX;
+
+/// Workload-level span labels for [`EventKind::SpanBegin`] /
+/// [`EventKind::SpanEnd`], emitted by the strassen / cnn / attention
+/// layers around their group submissions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u32)]
+pub enum SpanKind {
+    /// One Strassen recursion level's 7-product fan-out (`detail` =
+    /// level).
+    StrassenLevel = 1,
+    /// One served CNN layer (`detail` = layer index).
+    CnnLayer = 2,
+    /// One attention-block phase (`detail`: 0 = Q/K/V projections,
+    /// 1 = QKᵀ + softmax + AV, 2 = O projection).
+    AttentionPhase = 3,
+}
+
+impl SpanKind {
+    /// Exporter-facing name for the span track.
+    pub fn name(code: u64) -> &'static str {
+        match code {
+            1 => "strassen-level",
+            2 => "cnn-layer",
+            3 => "attention-phase",
+            _ => "span",
+        }
+    }
+}
+
+/// One compact flight-recorder record. `Copy` and fixed-size so the
+/// ring's seqlock copy is a plain memcpy.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Microseconds since the ring's epoch (server start).
+    pub t_us: u64,
+    /// Job uid for lifecycle kinds; handle id for registry kinds;
+    /// span code for span kinds.
+    pub uid: u64,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub a: u64,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub b: u64,
+    /// Tenant tag (`u32::MAX` when not applicable).
+    pub tenant: u32,
+    /// Worker index (`TaskExec`), dispatcher shard (`Pop`/`Planned`/
+    /// `Published`), or [`ACTOR_NONE`].
+    pub actor: u32,
+    /// What happened.
+    pub kind: EventKind,
+}
+
+impl TraceEvent {
+    const EMPTY: TraceEvent = TraceEvent {
+        t_us: 0,
+        uid: 0,
+        a: 0,
+        b: 0,
+        tenant: 0,
+        actor: ACTOR_NONE,
+        kind: EventKind::Submit,
+    };
+}
+
+struct Slot {
+    /// Seqlock word: `0` = never written, odd `2n+1` = generation `n`
+    /// being written, even `2n+2` = generation `n` stable.
+    seq: AtomicU64,
+    ev: UnsafeCell<TraceEvent>,
+}
+
+/// Bounded lock-free MPSC flight recorder (see module docs).
+pub struct TraceRing {
+    epoch: Instant,
+    /// Next generation number; slot = `n % capacity`.
+    next: AtomicU64,
+    /// Events dropped on lap collision (writer raced a lapping writer).
+    dropped: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+// SAFETY: the `UnsafeCell` payload is only written by the writer that
+// owns the slot's odd sequence (claimed by CAS from an even value, so
+// exactly one writer at a time), and only read through the seqlock
+// protocol (copy validated by an unchanged even sequence on both
+// sides). Torn reads are detected and retried, never returned.
+unsafe impl Sync for TraceRing {}
+unsafe impl Send for TraceRing {}
+
+impl std::fmt::Debug for TraceRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRing")
+            .field("capacity", &self.slots.len())
+            .field("recorded", &self.recorded())
+            .field("dropped", &self.dropped())
+            .finish()
+    }
+}
+
+impl TraceRing {
+    /// A recorder with room for `capacity` events. `capacity == 0`
+    /// disables recording entirely: no slots are allocated
+    /// (`Vec::new().into_boxed_slice()` holds no heap block) and
+    /// [`TraceRing::emit`] is a single branch.
+    pub fn new(capacity: usize) -> Self {
+        let slots: Vec<Slot> = (0..capacity)
+            .map(|_| Slot { seq: AtomicU64::new(0), ev: UnsafeCell::new(TraceEvent::EMPTY) })
+            .collect();
+        Self {
+            epoch: Instant::now(),
+            next: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            slots: slots.into_boxed_slice(),
+        }
+    }
+
+    /// Whether the recorder stores anything at all.
+    pub fn enabled(&self) -> bool {
+        !self.slots.is_empty()
+    }
+
+    /// Slot count.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total emit attempts while enabled (monotonic; the ring retains
+    /// the most recent `capacity` of them, minus lap drops).
+    pub fn recorded(&self) -> u64 {
+        if self.enabled() {
+            self.next.load(Ordering::Relaxed)
+        } else {
+            0
+        }
+    }
+
+    /// Events lost to lap collisions (not to ordinary overwrite).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Microseconds since the ring's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one event. Lock-free: one fetch-add, one CAS, one
+    /// payload copy, one release store. Never blocks; on a lap
+    /// collision (a writer `capacity` generations ahead already owns
+    /// the slot) the event is dropped and counted.
+    #[allow(clippy::too_many_arguments)]
+    pub fn emit(&self, kind: EventKind, uid: u64, tenant: u32, actor: u32, a: u64, b: u64) {
+        if self.slots.is_empty() {
+            return;
+        }
+        let t_us = self.now_us();
+        let n = self.next.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(n as usize) % self.slots.len()];
+        let claimed = 2 * n + 1;
+        let seen = slot.seq.load(Ordering::Relaxed);
+        // Only claim forward: an odd `seen` means another writer is
+        // mid-write here; `seen >= claimed` means a *newer* generation
+        // already owns the slot (we were lapped while stalled). Either
+        // way our event is the oldest thing in sight — drop it.
+        if seen % 2 == 1 || seen >= claimed {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if slot
+            .seq
+            .compare_exchange(seen, claimed, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // SAFETY: the successful CAS from an even value makes this
+        // thread the slot's unique writer until the release store
+        // below (any racing writer observes an odd sequence and drops).
+        unsafe {
+            std::ptr::write_volatile(
+                slot.ev.get(),
+                TraceEvent { t_us, uid, a, b, tenant, actor, kind },
+            );
+        }
+        slot.seq.store(claimed + 1, Ordering::Release);
+    }
+
+    /// Tear-free copy of every stable event, oldest first.
+    pub fn snapshot(&self) -> TraceSnapshot {
+        let mut tagged: Vec<(u64, TraceEvent)> = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            loop {
+                let s1 = slot.seq.load(Ordering::Acquire);
+                if s1 == 0 || s1 % 2 == 1 {
+                    // Never written, or mid-write right now — skip.
+                    break;
+                }
+                // SAFETY: seqlock read — the copy is only kept if the
+                // sequence is unchanged (still `s1`) after it, which
+                // means no writer touched the payload during the copy.
+                let ev = unsafe { std::ptr::read_volatile(slot.ev.get()) };
+                fence(Ordering::Acquire);
+                if slot.seq.load(Ordering::Relaxed) == s1 {
+                    tagged.push((s1 / 2 - 1, ev));
+                    break;
+                }
+                // Torn — a writer claimed the slot mid-copy; retry.
+            }
+        }
+        tagged.sort_unstable_by_key(|(n, _)| *n);
+        TraceSnapshot {
+            events: tagged.into_iter().map(|(_, ev)| ev).collect(),
+            recorded: self.recorded(),
+            dropped: self.dropped(),
+        }
+    }
+}
+
+/// A consistent copy of the recorder's contents.
+#[derive(Debug, Clone)]
+pub struct TraceSnapshot {
+    /// Stable events, oldest first.
+    pub events: Vec<TraceEvent>,
+    /// Total events ever accepted by the ring (≥ `events.len()`).
+    pub recorded: u64,
+    /// Events lost to writer lap collisions.
+    pub dropped: u64,
+}
+
+impl TraceSnapshot {
+    /// Fold raw events into per-job lifecycle records, uid-ascending.
+    pub fn job_traces(&self) -> Vec<JobTrace> {
+        job_traces(&self.events)
+    }
+
+    /// A [`TraceExporter`] over this snapshot.
+    pub fn exporter(&self) -> TraceExporter<'_> {
+        TraceExporter { snap: self }
+    }
+}
+
+/// How a job's lifecycle ended (or hasn't yet).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Terminal {
+    /// Finalized and replied successfully.
+    Done,
+    /// Rejected at the door by the tenant's quota.
+    QuotaRejected,
+    /// Shed by `try_submit` (queue full or closed).
+    Shed,
+    /// Planning failed; the job replied with an error.
+    PlanFailed,
+    /// Failed after admission (resolution / validation / execution).
+    Failed,
+    /// No terminal event recorded (still running, or its terminal
+    /// event was overwritten).
+    InFlight,
+}
+
+impl Terminal {
+    /// JSONL-facing name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Terminal::Done => "done",
+            Terminal::QuotaRejected => "quota_rejected",
+            Terminal::Shed => "shed",
+            Terminal::PlanFailed => "plan_failed",
+            Terminal::Failed => "failed",
+            Terminal::InFlight => "in_flight",
+        }
+    }
+}
+
+/// Per-worker execution tally within one job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerTally {
+    /// Worker index.
+    pub worker: u32,
+    /// Tasks this worker executed for the job.
+    pub tasks: u64,
+    /// Of those, tasks claimed from another queue (steal provenance:
+    /// intra-job back-steals plus cross-job switches).
+    pub stolen: u64,
+}
+
+/// One job's reconstructed lifecycle: stage timestamps, per-worker
+/// provenance, and the model-drift record.
+#[derive(Clone, Debug)]
+pub struct JobTrace {
+    /// Server-minted job uid (unique per sub-job for the process).
+    pub uid: u64,
+    /// Owning tenant.
+    pub tenant: u32,
+    /// `Submit` timestamp (µs since ring epoch).
+    pub submit_us: Option<u64>,
+    /// `Admit` timestamp.
+    pub admit_us: Option<u64>,
+    /// DRR `Pop` timestamp.
+    pub pop_us: Option<u64>,
+    /// `Planned` timestamp.
+    pub planned_us: Option<u64>,
+    /// `Published` (packed + tasks live) timestamp.
+    pub published_us: Option<u64>,
+    /// Earliest task start.
+    pub first_task_us: Option<u64>,
+    /// Latest task completion.
+    pub last_task_us: Option<u64>,
+    /// Terminal-event timestamp.
+    pub done_us: Option<u64>,
+    /// How the lifecycle ended.
+    pub terminal: Terminal,
+    /// Total tasks executed.
+    pub tasks: u64,
+    /// Tasks with steal provenance (claimed off another queue).
+    pub stolen_tasks: u64,
+    /// Per-worker tallies, worker-ascending.
+    pub workers: Vec<WorkerTally>,
+    /// `analytical::predict` for the chosen config, priced at plan
+    /// time.
+    pub predicted_secs: Option<f64>,
+    /// Simulated execution time reported at finalize.
+    pub measured_secs: Option<f64>,
+}
+
+impl JobTrace {
+    fn new(uid: u64, tenant: u32) -> Self {
+        Self {
+            uid,
+            tenant,
+            submit_us: None,
+            admit_us: None,
+            pop_us: None,
+            planned_us: None,
+            published_us: None,
+            first_task_us: None,
+            last_task_us: None,
+            done_us: None,
+            terminal: Terminal::InFlight,
+            tasks: 0,
+            stolen_tasks: 0,
+            workers: Vec::new(),
+            predicted_secs: None,
+            measured_secs: None,
+        }
+    }
+
+    fn span_secs(a: Option<u64>, b: Option<u64>) -> Option<f64> {
+        Some(b?.saturating_sub(a?) as f64 * 1e-6)
+    }
+
+    /// submit → pop: admission-queue wait.
+    pub fn queue_secs(&self) -> Option<f64> {
+        Self::span_secs(self.submit_us, self.pop_us)
+    }
+
+    /// pop → planned: config choice (DSE / residency refinement).
+    pub fn plan_secs(&self) -> Option<f64> {
+        Self::span_secs(self.pop_us, self.planned_us)
+    }
+
+    /// planned → published: operand resolve + pack + task publish.
+    pub fn pack_secs(&self) -> Option<f64> {
+        Self::span_secs(self.planned_us, self.published_us)
+    }
+
+    /// published → last task: worker execution.
+    pub fn execute_secs(&self) -> Option<f64> {
+        Self::span_secs(self.published_us, self.last_task_us)
+    }
+
+    /// last task → done: take C, simulate timing, reply.
+    pub fn finalize_secs(&self) -> Option<f64> {
+        Self::span_secs(self.last_task_us, self.done_us)
+    }
+
+    /// submit → done.
+    pub fn end_to_end_secs(&self) -> Option<f64> {
+        Self::span_secs(self.submit_us, self.done_us)
+    }
+
+    /// The five stage spans `[queue, plan, pack, execute, finalize]`.
+    /// They are differences of one timestamp chain, so their sum
+    /// telescopes to [`JobTrace::end_to_end_secs`] exactly (up to µs
+    /// quantization).
+    pub fn stage_secs(&self) -> Option<[f64; 5]> {
+        Some([
+            self.queue_secs()?,
+            self.plan_secs()?,
+            self.pack_secs()?,
+            self.execute_secs()?,
+            self.finalize_secs()?,
+        ])
+    }
+
+    /// Relative model drift `(measured - predicted) / predicted`.
+    pub fn drift_frac(&self) -> Option<f64> {
+        let (p, m) = (self.predicted_secs?, self.measured_secs?);
+        if p > 0.0 {
+            Some((m - p) / p)
+        } else {
+            None
+        }
+    }
+}
+
+/// Stage labels, index-aligned with [`JobTrace::stage_secs`].
+pub const STAGE_NAMES: [&str; 5] = ["queue", "plan", "pack", "execute", "finalize"];
+
+/// Fold a raw event stream into per-job records (uid-ascending).
+/// Registry / span / DRR events are not job-keyed and are skipped.
+pub fn job_traces(events: &[TraceEvent]) -> Vec<JobTrace> {
+    let mut map: BTreeMap<u64, JobTrace> = BTreeMap::new();
+    for ev in events {
+        match ev.kind {
+            EventKind::RegistryHit
+            | EventKind::RegistryMiss
+            | EventKind::RegistryEvict
+            | EventKind::SpanBegin
+            | EventKind::SpanEnd
+            | EventKind::DrrPop => continue,
+            _ => {}
+        }
+        let jt = map.entry(ev.uid).or_insert_with(|| JobTrace::new(ev.uid, ev.tenant));
+        if ev.tenant != ACTOR_NONE {
+            jt.tenant = ev.tenant;
+        }
+        match ev.kind {
+            EventKind::Submit => jt.submit_us = Some(ev.t_us),
+            EventKind::Admit => jt.admit_us = Some(ev.t_us),
+            EventKind::QuotaReject => {
+                jt.terminal = Terminal::QuotaRejected;
+                jt.done_us = Some(ev.t_us);
+            }
+            EventKind::Shed => {
+                jt.terminal = Terminal::Shed;
+                jt.done_us = Some(ev.t_us);
+            }
+            EventKind::Pop => jt.pop_us = Some(ev.t_us),
+            EventKind::Planned => {
+                jt.planned_us = Some(ev.t_us);
+                jt.predicted_secs = Some(f64::from_bits(ev.a));
+            }
+            EventKind::PlanFail => {
+                jt.terminal = Terminal::PlanFailed;
+                jt.done_us = Some(ev.t_us);
+            }
+            EventKind::Published => jt.published_us = Some(ev.t_us),
+            EventKind::TaskExec => {
+                jt.tasks += 1;
+                let stolen = ev.b & (TASK_STOLEN | TASK_CROSS_JOB) != 0;
+                if stolen {
+                    jt.stolen_tasks += 1;
+                }
+                jt.first_task_us =
+                    Some(jt.first_task_us.map_or(ev.a, |f| f.min(ev.a)));
+                jt.last_task_us =
+                    Some(jt.last_task_us.map_or(ev.t_us, |l| l.max(ev.t_us)));
+                match jt.workers.binary_search_by_key(&ev.actor, |w| w.worker) {
+                    Ok(i) => {
+                        jt.workers[i].tasks += 1;
+                        if stolen {
+                            jt.workers[i].stolen += 1;
+                        }
+                    }
+                    Err(i) => jt.workers.insert(
+                        i,
+                        WorkerTally {
+                            worker: ev.actor,
+                            tasks: 1,
+                            stolen: u64::from(stolen),
+                        },
+                    ),
+                }
+            }
+            EventKind::Done => {
+                jt.terminal = Terminal::Done;
+                jt.done_us = Some(ev.t_us);
+                jt.predicted_secs = Some(f64::from_bits(ev.a));
+                jt.measured_secs = Some(f64::from_bits(ev.b));
+            }
+            EventKind::Fail => {
+                jt.terminal = Terminal::Failed;
+                jt.done_us = Some(ev.t_us);
+            }
+            _ => unreachable!("non-job kinds filtered above"),
+        }
+    }
+    map.into_values().collect()
+}
+
+/// Nearest-rank percentiles of each stage span over completed traces:
+/// `result[stage][i]` is the `ps[i]` percentile of stage `stage`
+/// (index-aligned with [`STAGE_NAMES`]). `None` when no trace has a
+/// full stage breakdown.
+pub fn stage_percentiles(traces: &[JobTrace], ps: &[f64]) -> Option<Vec<Vec<f64>>> {
+    let mut per_stage: [Vec<f64>; 5] = Default::default();
+    for t in traces {
+        if let Some(stages) = t.stage_secs() {
+            for (acc, v) in per_stage.iter_mut().zip(stages) {
+                acc.push(v);
+            }
+        }
+    }
+    if per_stage[0].is_empty() {
+        return None;
+    }
+    Some(
+        per_stage
+            .iter_mut()
+            .map(|vals| {
+                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                ps.iter()
+                    .map(|&p| {
+                        let rank = ((p * vals.len() as f64).ceil() as usize)
+                            .saturating_sub(1)
+                            .min(vals.len() - 1);
+                        vals[rank]
+                    })
+                    .collect()
+            })
+            .collect(),
+    )
+}
+
+fn json_f64(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x.is_finite() => format!("{x}"),
+        _ => "null".to_string(),
+    }
+}
+
+fn json_u64(v: Option<u64>) -> String {
+    match v {
+        Some(x) => format!("{x}"),
+        None => "null".to_string(),
+    }
+}
+
+/// Writes a [`TraceSnapshot`] in the two interchange formats.
+pub struct TraceExporter<'a> {
+    snap: &'a TraceSnapshot,
+}
+
+impl TraceExporter<'_> {
+    /// JSONL: one JSON object per job trace, schema validated by
+    /// `ci/check_trace_schema.py`. Stage spans and drift are emitted
+    /// pre-computed so consumers never re-derive them.
+    pub fn write_jsonl<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        for t in self.snap.job_traces() {
+            let mut workers = String::new();
+            for (i, wt) in t.workers.iter().enumerate() {
+                if i > 0 {
+                    workers.push(',');
+                }
+                workers.push_str(&format!(
+                    "{{\"worker\":{},\"tasks\":{},\"stolen\":{}}}",
+                    wt.worker, wt.tasks, wt.stolen
+                ));
+            }
+            writeln!(
+                w,
+                "{{\"uid\":{},\"tenant\":{},\"terminal\":\"{}\",\
+                 \"submit_us\":{},\"pop_us\":{},\"planned_us\":{},\
+                 \"published_us\":{},\"first_task_us\":{},\"last_task_us\":{},\
+                 \"done_us\":{},\"queue_secs\":{},\"plan_secs\":{},\
+                 \"pack_secs\":{},\"execute_secs\":{},\"finalize_secs\":{},\
+                 \"e2e_secs\":{},\"predicted_secs\":{},\"measured_secs\":{},\
+                 \"drift_frac\":{},\"tasks\":{},\"stolen_tasks\":{},\
+                 \"workers\":[{}]}}",
+                t.uid,
+                t.tenant,
+                t.terminal.name(),
+                json_u64(t.submit_us),
+                json_u64(t.pop_us),
+                json_u64(t.planned_us),
+                json_u64(t.published_us),
+                json_u64(t.first_task_us),
+                json_u64(t.last_task_us),
+                json_u64(t.done_us),
+                json_f64(t.queue_secs()),
+                json_f64(t.plan_secs()),
+                json_f64(t.pack_secs()),
+                json_f64(t.execute_secs()),
+                json_f64(t.finalize_secs()),
+                json_f64(t.end_to_end_secs()),
+                json_f64(t.predicted_secs),
+                json_f64(t.measured_secs),
+                json_f64(t.drift_frac()),
+                t.tasks,
+                t.stolen_tasks,
+                workers,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Chrome `trace_event` JSON (Perfetto-loadable): one track per
+    /// worker carrying task "X" slices with steal provenance, one per
+    /// dispatcher shard carrying plan/pack slices, instant events for
+    /// registry activity, "B"/"E" slices for workload spans, and
+    /// per-job "b"/"e" async stage spans.
+    pub fn write_chrome<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        const PID: u32 = 1;
+        let tid_worker = |wk: u32| 1 + wk;
+        let tid_shard = |sh: u32| 1001 + sh;
+        const TID_REGISTRY: u32 = 900;
+        const TID_SPANS: u32 = 901;
+
+        write!(w, "[")?;
+        let mut first = true;
+        let mut sep = |w: &mut W| -> io::Result<()> {
+            if first {
+                first = false;
+            } else {
+                write!(w, ",")?;
+            }
+            writeln!(w)
+        };
+
+        // Thread-name metadata for every track that appears.
+        let mut workers: Vec<u32> = Vec::new();
+        let mut shards: Vec<u32> = Vec::new();
+        let mut saw_registry = false;
+        let mut saw_spans = false;
+        for ev in &self.snap.events {
+            match ev.kind {
+                EventKind::TaskExec => {
+                    if !workers.contains(&ev.actor) {
+                        workers.push(ev.actor);
+                    }
+                }
+                EventKind::Pop | EventKind::Planned | EventKind::Published
+                    if ev.actor != ACTOR_NONE =>
+                {
+                    if !shards.contains(&ev.actor) {
+                        shards.push(ev.actor);
+                    }
+                }
+                EventKind::RegistryHit | EventKind::RegistryMiss | EventKind::RegistryEvict => {
+                    saw_registry = true;
+                }
+                EventKind::SpanBegin | EventKind::SpanEnd => saw_spans = true,
+                _ => {}
+            }
+        }
+        workers.sort_unstable();
+        shards.sort_unstable();
+        for &wk in &workers {
+            sep(w)?;
+            write!(
+                w,
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{PID},\"tid\":{},\
+                 \"args\":{{\"name\":\"worker-{wk}\"}}}}",
+                tid_worker(wk)
+            )?;
+        }
+        for &sh in &shards {
+            sep(w)?;
+            write!(
+                w,
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{PID},\"tid\":{},\
+                 \"args\":{{\"name\":\"dispatch-{sh}\"}}}}",
+                tid_shard(sh)
+            )?;
+        }
+        if saw_registry {
+            sep(w)?;
+            write!(
+                w,
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{PID},\
+                 \"tid\":{TID_REGISTRY},\"args\":{{\"name\":\"registry\"}}}}"
+            )?;
+        }
+        if saw_spans {
+            sep(w)?;
+            write!(
+                w,
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{PID},\
+                 \"tid\":{TID_SPANS},\"args\":{{\"name\":\"workload\"}}}}"
+            )?;
+        }
+
+        // Worker / shard slices, registry instants, workload spans.
+        for ev in &self.snap.events {
+            match ev.kind {
+                EventKind::TaskExec => {
+                    sep(w)?;
+                    let dur = ev.t_us.saturating_sub(ev.a).max(1);
+                    let stolen = ev.b & TASK_STOLEN != 0;
+                    let cross = ev.b & TASK_CROSS_JOB != 0;
+                    write!(
+                        w,
+                        "{{\"name\":\"task\",\"cat\":\"exec\",\"ph\":\"X\",\
+                         \"pid\":{PID},\"tid\":{},\"ts\":{},\"dur\":{dur},\
+                         \"args\":{{\"job\":{},\"stolen\":{stolen},\
+                         \"cross_job\":{cross}}}}}",
+                        tid_worker(ev.actor),
+                        ev.a,
+                        ev.uid
+                    )?;
+                }
+                EventKind::RegistryHit | EventKind::RegistryMiss | EventKind::RegistryEvict => {
+                    sep(w)?;
+                    let name = match ev.kind {
+                        EventKind::RegistryHit => "hit",
+                        EventKind::RegistryMiss => "miss",
+                        _ => "evict",
+                    };
+                    let side = if ev.b == 0 { "A" } else { "B" };
+                    write!(
+                        w,
+                        "{{\"name\":\"{name}\",\"cat\":\"registry\",\"ph\":\"i\",\
+                         \"s\":\"t\",\"pid\":{PID},\"tid\":{TID_REGISTRY},\
+                         \"ts\":{},\"args\":{{\"handle\":{},\"bytes\":{},\
+                         \"side\":\"{side}\"}}}}",
+                        ev.t_us, ev.uid, ev.a
+                    )?;
+                }
+                EventKind::SpanBegin | EventKind::SpanEnd => {
+                    sep(w)?;
+                    let ph = if ev.kind == EventKind::SpanBegin { "B" } else { "E" };
+                    write!(
+                        w,
+                        "{{\"name\":\"{}-{}\",\"cat\":\"workload\",\"ph\":\"{ph}\",\
+                         \"pid\":{PID},\"tid\":{TID_SPANS},\"ts\":{}}}",
+                        SpanKind::name(ev.uid),
+                        ev.a,
+                        ev.t_us
+                    )?;
+                }
+                _ => {}
+            }
+        }
+
+        // Dispatcher slices + per-job async stage spans from the
+        // folded traces (differences of the same timestamps the JSONL
+        // carries, so the two exports always agree).
+        for t in self.snap.job_traces() {
+            // Plan + pack slices on the owning shard's track need the
+            // shard id, which lives on the raw Pop event; recover it.
+            let shard = self
+                .snap
+                .events
+                .iter()
+                .find(|e| e.kind == EventKind::Pop && e.uid == t.uid)
+                .map(|e| e.actor)
+                .filter(|&a| a != ACTOR_NONE);
+            if let (Some(sh), Some(pop), Some(published)) =
+                (shard, t.pop_us, t.published_us)
+            {
+                sep(w)?;
+                write!(
+                    w,
+                    "{{\"name\":\"plan+pack\",\"cat\":\"dispatch\",\"ph\":\"X\",\
+                     \"pid\":{PID},\"tid\":{},\"ts\":{pop},\"dur\":{},\
+                     \"args\":{{\"job\":{}}}}}",
+                    tid_shard(sh),
+                    published.saturating_sub(pop).max(1),
+                    t.uid
+                )?;
+            }
+            let spans: [(usize, Option<u64>, Option<u64>); 5] = [
+                (0, t.submit_us, t.pop_us),
+                (1, t.pop_us, t.planned_us),
+                (2, t.planned_us, t.published_us),
+                (3, t.published_us, t.last_task_us),
+                (4, t.last_task_us, t.done_us),
+            ];
+            for (stage, begin, end) in spans {
+                if let (Some(b), Some(e)) = (begin, end) {
+                    sep(w)?;
+                    write!(
+                        w,
+                        "{{\"name\":\"{}\",\"cat\":\"job\",\"ph\":\"b\",\
+                         \"id\":{},\"pid\":{PID},\"ts\":{b}}}",
+                        STAGE_NAMES[stage], t.uid
+                    )?;
+                    sep(w)?;
+                    write!(
+                        w,
+                        "{{\"name\":\"{}\",\"cat\":\"job\",\"ph\":\"e\",\
+                         \"id\":{},\"pid\":{PID},\"ts\":{e}}}",
+                        STAGE_NAMES[stage], t.uid
+                    )?;
+                }
+            }
+        }
+        writeln!(w)?;
+        writeln!(w, "]")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, uid: u64, t_us: u64, a: u64, b: u64, actor: u32) -> TraceEvent {
+        TraceEvent { t_us, uid, a, b, tenant: 7, actor, kind }
+    }
+
+    #[test]
+    fn disabled_ring_records_nothing_and_allocates_nothing() {
+        let ring = TraceRing::new(0);
+        assert!(!ring.enabled());
+        assert_eq!(ring.capacity(), 0);
+        for i in 0..100 {
+            ring.emit(EventKind::Submit, i, 0, ACTOR_NONE, 0, 0);
+        }
+        assert_eq!(ring.recorded(), 0);
+        assert_eq!(ring.dropped(), 0);
+        assert!(ring.snapshot().events.is_empty());
+    }
+
+    #[test]
+    fn overwrite_drops_oldest_first() {
+        let ring = TraceRing::new(4);
+        for i in 0..10u64 {
+            ring.emit(EventKind::Submit, i, 0, ACTOR_NONE, 0, 0);
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.recorded, 10);
+        let uids: Vec<u64> = snap.events.iter().map(|e| e.uid).collect();
+        assert_eq!(uids, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn snapshot_under_capacity_keeps_everything_in_order() {
+        let ring = TraceRing::new(16);
+        for i in 0..5u64 {
+            ring.emit(EventKind::Admit, i, 3, ACTOR_NONE, i * 10, i * 100);
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.events.len(), 5);
+        for (i, e) in snap.events.iter().enumerate() {
+            assert_eq!(e.uid, i as u64);
+            assert_eq!(e.a, i as u64 * 10);
+            assert_eq!(e.b, i as u64 * 100);
+            assert_eq!(e.tenant, 3);
+        }
+    }
+
+    #[test]
+    fn threaded_emit_never_tears_an_event() {
+        // Writers stamp correlated payloads (a = uid * 3, b = uid * 7);
+        // concurrent snapshots must never observe a mixed record.
+        let ring = TraceRing::new(64);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let ring = &ring;
+                s.spawn(move || {
+                    for i in 0..5_000u64 {
+                        let uid = t * 1_000_000 + i;
+                        ring.emit(EventKind::TaskExec, uid, t as u32, 0, uid * 3, uid * 7);
+                    }
+                });
+            }
+            let ring = &ring;
+            s.spawn(move || {
+                for _ in 0..200 {
+                    for e in ring.snapshot().events {
+                        assert_eq!(e.a, e.uid * 3, "torn event: a mismatch");
+                        assert_eq!(e.b, e.uid * 7, "torn event: b mismatch");
+                    }
+                }
+            });
+        });
+        // The generation counter saw every attempted emit.
+        assert_eq!(ring.recorded(), 20_000);
+        let snap = ring.snapshot();
+        assert_eq!(snap.events.len(), 64);
+    }
+
+    #[test]
+    fn job_trace_stages_sum_to_end_to_end() {
+        let events = vec![
+            ev(EventKind::Submit, 1, 100, 0, 0, ACTOR_NONE),
+            ev(EventKind::Admit, 1, 110, 0, 0, ACTOR_NONE),
+            ev(EventKind::Pop, 1, 400, 0, 0, 0),
+            ev(EventKind::Planned, 1, 650, 0.004f64.to_bits(), 0, 0),
+            ev(EventKind::Published, 1, 900, 0, 0, 0),
+            ev(EventKind::TaskExec, 1, 1500, 950, TASK_STOLEN, 2),
+            ev(EventKind::TaskExec, 1, 1800, 1000, 0, 0),
+            ev(
+                EventKind::Done,
+                1,
+                2100,
+                0.004f64.to_bits(),
+                0.005f64.to_bits(),
+                ACTOR_NONE,
+            ),
+        ];
+        let traces = job_traces(&events);
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        assert_eq!(t.terminal, Terminal::Done);
+        assert_eq!(t.tenant, 7);
+        let stages = t.stage_secs().unwrap();
+        let sum: f64 = stages.iter().sum();
+        let e2e = t.end_to_end_secs().unwrap();
+        assert!((sum - e2e).abs() < 1e-12, "stages {sum} != e2e {e2e}");
+        assert!((e2e - 2000e-6).abs() < 1e-12);
+        assert_eq!(t.tasks, 2);
+        assert_eq!(t.stolen_tasks, 1);
+        assert_eq!(t.workers.len(), 2);
+        assert_eq!(t.workers[0], WorkerTally { worker: 0, tasks: 1, stolen: 0 });
+        assert_eq!(t.workers[1], WorkerTally { worker: 2, tasks: 1, stolen: 1 });
+        assert_eq!(t.first_task_us, Some(950));
+        assert_eq!(t.last_task_us, Some(1800));
+        let drift = t.drift_frac().unwrap();
+        assert!((drift - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn terminal_kinds_map_to_terminal_states() {
+        for (kind, want) in [
+            (EventKind::QuotaReject, Terminal::QuotaRejected),
+            (EventKind::Shed, Terminal::Shed),
+            (EventKind::PlanFail, Terminal::PlanFailed),
+            (EventKind::Fail, Terminal::Failed),
+        ] {
+            let events = vec![
+                ev(EventKind::Submit, 9, 10, 0, 0, ACTOR_NONE),
+                ev(kind, 9, 20, 0, 0, ACTOR_NONE),
+            ];
+            let traces = job_traces(&events);
+            assert_eq!(traces.len(), 1);
+            assert_eq!(traces[0].terminal, want);
+            assert_eq!(traces[0].done_us, Some(20));
+        }
+    }
+
+    #[test]
+    fn non_job_events_do_not_create_traces() {
+        let events = vec![
+            ev(EventKind::RegistryHit, 5, 10, 4096, 1, ACTOR_NONE),
+            ev(EventKind::SpanBegin, 1, 20, 0, 0, ACTOR_NONE),
+            ev(EventKind::DrrPop, 0, 30, 2, 1, ACTOR_NONE),
+        ];
+        assert!(job_traces(&events).is_empty());
+    }
+
+    #[test]
+    fn stage_percentiles_nearest_rank() {
+        let mut traces = Vec::new();
+        for i in 1..=4u64 {
+            let events = vec![
+                ev(EventKind::Submit, i, 0, 0, 0, ACTOR_NONE),
+                ev(EventKind::Pop, i, i * 100, 0, 0, 0),
+                ev(EventKind::Planned, i, i * 100 + 10, 0, 0, 0),
+                ev(EventKind::Published, i, i * 100 + 20, 0, 0, 0),
+                ev(EventKind::TaskExec, i, i * 100 + 50, i * 100 + 20, 0, 0),
+                ev(EventKind::Done, i, i * 100 + 60, 0, 0, ACTOR_NONE),
+            ];
+            traces.extend(job_traces(&events));
+        }
+        let p = stage_percentiles(&traces, &[0.50, 1.0]).unwrap();
+        // queue stage: 100/200/300/400 µs → p50 = 200 µs, max = 400 µs.
+        assert!((p[0][0] - 200e-6).abs() < 1e-12);
+        assert!((p[0][1] - 400e-6).abs() < 1e-12);
+        // plan stage is constant 10 µs.
+        assert!((p[1][0] - 10e-6).abs() < 1e-12);
+        assert!(stage_percentiles(&[], &[0.5]).is_none());
+    }
+
+    #[test]
+    fn jsonl_export_carries_required_fields() {
+        let events = vec![
+            ev(EventKind::Submit, 1, 100, 0, 0, ACTOR_NONE),
+            ev(EventKind::Pop, 1, 200, 0, 0, 0),
+            ev(EventKind::Planned, 1, 300, 0.001f64.to_bits(), 0, 0),
+            ev(EventKind::Published, 1, 400, 0, 0, 0),
+            ev(EventKind::TaskExec, 1, 600, 450, 0, 1),
+            ev(
+                EventKind::Done,
+                1,
+                700,
+                0.001f64.to_bits(),
+                0.002f64.to_bits(),
+                ACTOR_NONE,
+            ),
+        ];
+        let snap = TraceSnapshot { events, recorded: 6, dropped: 0 };
+        let mut buf = Vec::new();
+        snap.exporter().write_jsonl(&mut buf).unwrap();
+        let line = String::from_utf8(buf).unwrap();
+        assert_eq!(line.lines().count(), 1);
+        for field in [
+            "\"uid\":1",
+            "\"tenant\":7",
+            "\"terminal\":\"done\"",
+            "\"queue_secs\":",
+            "\"plan_secs\":",
+            "\"pack_secs\":",
+            "\"execute_secs\":",
+            "\"finalize_secs\":",
+            "\"e2e_secs\":",
+            "\"predicted_secs\":0.001",
+            "\"measured_secs\":0.002",
+            "\"drift_frac\":1",
+            "\"workers\":[{\"worker\":1,\"tasks\":1,\"stolen\":0}]",
+        ] {
+            assert!(line.contains(field), "missing {field} in {line}");
+        }
+    }
+
+    #[test]
+    fn chrome_export_has_tracks_and_stage_spans() {
+        let events = vec![
+            ev(EventKind::Submit, 1, 100, 0, 0, ACTOR_NONE),
+            ev(EventKind::Pop, 1, 200, 0, 0, 0),
+            ev(EventKind::Planned, 1, 300, 0.001f64.to_bits(), 0, 0),
+            ev(EventKind::Published, 1, 400, 0, 0, 0),
+            ev(EventKind::TaskExec, 1, 600, 450, TASK_STOLEN, 2),
+            ev(EventKind::RegistryMiss, 40, 350, 8192, 1, ACTOR_NONE),
+            ev(EventKind::SpanBegin, 1, 90, 0, 0, ACTOR_NONE),
+            ev(EventKind::SpanEnd, 1, 800, 0, 0, ACTOR_NONE),
+            ev(
+                EventKind::Done,
+                1,
+                700,
+                0.001f64.to_bits(),
+                0.002f64.to_bits(),
+                ACTOR_NONE,
+            ),
+        ];
+        let snap = TraceSnapshot { events, recorded: 9, dropped: 0 };
+        let mut buf = Vec::new();
+        snap.exporter().write_chrome(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.trim_start().starts_with('['));
+        assert!(text.trim_end().ends_with(']'));
+        for needle in [
+            "\"name\":\"worker-2\"",
+            "\"name\":\"dispatch-0\"",
+            "\"name\":\"registry\"",
+            "\"name\":\"workload\"",
+            "\"ph\":\"X\"",
+            "\"stolen\":true",
+            "\"name\":\"queue\"",
+            "\"name\":\"finalize\"",
+            "\"ph\":\"b\"",
+            "\"ph\":\"e\"",
+            "\"name\":\"miss\"",
+            "\"name\":\"strassen-level-0\"",
+        ] {
+            assert!(text.contains(needle), "missing {needle}");
+        }
+    }
+}

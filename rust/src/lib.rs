@@ -55,8 +55,13 @@
 //!   every submission carrying a handle, one shared byte budget with
 //!   refcount-pinned cross-side LRU eviction) plus registry-aware
 //!   planning (a pinned or DSE'd config is steered to an
-//!   already-resident block-size variant within a cost slack), the
-//!   production serving runtime;
+//!   already-resident block-size variant within a cost slack), and a
+//!   bounded lock-free flight recorder (`coordinator::trace`: a
+//!   seqlock ring stamping every job's submit → admit → pop → plan →
+//!   publish → task → finalize lifecycle, folded into per-job
+//!   queue/plan/pack/execute/finalize breakdowns, per-worker steal
+//!   provenance, predicted-vs-measured drift, and JSONL / Chrome
+//!   `trace_event` export), the production serving runtime;
 //! * [`attention`] — the flagship registered-operand workload: a
 //!   transformer block (Q/K/V/O projections, QKᵀ, softmax, AV) served
 //!   entirely through registered operands — activations registered

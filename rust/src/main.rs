@@ -70,6 +70,18 @@ COMMANDS:
                                     batch; prints the packs avoided.
                                     --check verifies against the scalar
                                     oracle
+  trace [--tenants N] [--jobs J] [--workers W] [--capacity C]
+        [--json] [--out PREFIX] [--golden]
+                                    flight-recorder demo: run a mixed
+                                    workload (plain GEMMs, a shared-B
+                                    batch over a registered weight,
+                                    deadlines) with tracing on, then
+                                    print the per-job stage breakdown,
+                                    per-worker task/steal provenance and
+                                    predicted-vs-measured drift. --json
+                                    emits the JSONL job traces to stdout;
+                                    --out PREFIX writes PREFIX.jsonl and
+                                    PREFIX.chrome.json (Perfetto-loadable)
   help                              this message
 ";
 
@@ -80,7 +92,7 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
-const BOOL_FLAGS: &[&str] = &["golden", "check", "shared-b", "register-weights"];
+const BOOL_FLAGS: &[&str] = &["golden", "check", "shared-b", "register-weights", "json"];
 
 fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
     let mut cmd = None;
@@ -147,6 +159,7 @@ fn main() -> anyhow::Result<()> {
         "strassen" => cmd_strassen(&hw, &args),
         "batch" => cmd_batch(&hw, &args),
         "serve-demo" => cmd_serve_demo(&hw, &args),
+        "trace" => cmd_trace(&hw, &args),
         "schedule" => cmd_schedule(&hw, &args),
         "attention" => cmd_attention(&hw, &args),
         "help" | "-h" | "--help" => {
@@ -801,6 +814,150 @@ fn cmd_serve_demo(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
         );
     }
     println!("server: {stats}");
+    srv.shutdown();
+    Ok(())
+}
+
+/// `marr trace`: the flight recorder end to end. Runs a mixed workload
+/// — per-tenant plain GEMMs under a deadline, plus one shared-B batch
+/// against a registered weight so the trace carries registry hits —
+/// with `trace_capacity` ring slots, then renders the per-job stage
+/// breakdown (queue/plan/pack/execute/finalize), per-worker task and
+/// steal provenance, and predicted-vs-measured drift. `--json` prints
+/// the JSONL job traces to stdout (consumed by
+/// `ci/check_trace_schema.py`); `--out PREFIX` writes `PREFIX.jsonl`
+/// and `PREFIX.chrome.json` for Perfetto / `chrome://tracing`.
+fn cmd_trace(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
+    use multi_array::coordinator::trace::{stage_percentiles, STAGE_NAMES};
+    use multi_array::coordinator::{JobServer, ServerConfig, TenantConfig, TenantId};
+
+    let tenants = args.get_usize("tenants")?.unwrap_or(2).max(1);
+    let per = args.get_usize("jobs")?.unwrap_or(6).max(1);
+    let capacity = args.get_usize("capacity")?.unwrap_or(4096).max(1);
+    let json = args.flags.contains_key("json");
+    let engine = engine_from(args);
+
+    let mut cfg = ServerConfig::default();
+    if let Some(w) = args.get_usize("workers")? {
+        cfg.workers = w;
+    }
+    cfg.default_run = Some(RunConfig::square(2, 16));
+    cfg.trace_capacity = capacity;
+    let srv = JobServer::new(hw.clone(), engine, cfg)?;
+
+    for t in 0..tenants {
+        srv.configure_tenant(
+            TenantId(t as u32),
+            TenantConfig { weight: (t + 1) as u32, ..TenantConfig::default() },
+        )?;
+    }
+
+    // Plain per-tenant streams; odd tenants carry a deadline so the
+    // trace exercises the deadline accounting too.
+    let mut futures = Vec::new();
+    for t in 0..tenants {
+        for j in 0..per {
+            let seed = (t * 10_000 + j) as u64;
+            let a = Matrix::random(48, 32, seed * 2);
+            let b = Matrix::random(32, 40, seed * 2 + 1);
+            let mut sub = Submission::gemm(a, b).id(seed).tenant(TenantId(t as u32));
+            if t % 2 == 1 {
+                sub = sub.deadline(std::time::Duration::from_millis(250));
+            }
+            futures.push(srv.submit_async(sub)?);
+        }
+    }
+    // One shared-B batch against a registered weight: the pack stage
+    // resolves through the operand registry, so the trace carries
+    // registry-hit events alongside the job lifecycle.
+    let wb = srv.register_b(Matrix::random(32, 40, 7))?;
+    let many_a: Vec<Matrix> = (0..4).map(|i| Matrix::random(48, 32, 100 + i)).collect();
+    futures.push(srv.submit_async(Submission::batched(wb, many_a))?);
+
+    for f in futures {
+        f.wait()?;
+    }
+    srv.unregister_b(wb)?;
+
+    let snap = srv.trace_snapshot();
+    if json {
+        let mut out = std::io::stdout().lock();
+        snap.exporter().write_jsonl(&mut out)?;
+        srv.shutdown();
+        return Ok(());
+    }
+
+    let traces = snap.job_traces();
+    println!(
+        "trace: {} events recorded ({} overwritten), {} job traces",
+        snap.recorded,
+        snap.dropped,
+        traces.len()
+    );
+    println!(
+        "{:>6} {:>7} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>7}",
+        "uid", "tenant", "terminal", "queue_s", "plan_s", "pack_s", "exec_s", "final_s",
+        "e2e_s", "drift"
+    );
+    let fmt = |v: Option<f64>| match v {
+        Some(x) => format!("{x:.6}"),
+        None => "-".to_string(),
+    };
+    for t in &traces {
+        println!(
+            "{:>6} {:>7} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>7}",
+            t.uid,
+            t.tenant,
+            t.terminal.name(),
+            fmt(t.queue_secs()),
+            fmt(t.plan_secs()),
+            fmt(t.pack_secs()),
+            fmt(t.execute_secs()),
+            fmt(t.finalize_secs()),
+            fmt(t.end_to_end_secs()),
+            match t.drift_frac() {
+                Some(d) => format!("{:+.1}%", 100.0 * d),
+                None => "-".to_string(),
+            },
+        );
+    }
+
+    if let Some(pcts) = stage_percentiles(&traces, &[0.50, 0.95]) {
+        println!("\nstage rollup (p50 / p95):");
+        for (name, ps) in STAGE_NAMES.iter().zip(&pcts) {
+            println!("  {name:>8}: {:.6} s / {:.6} s", ps[0], ps[1]);
+        }
+    }
+
+    let mut tallies: std::collections::BTreeMap<u32, (u64, u64)> = Default::default();
+    for t in &traces {
+        for wt in &t.workers {
+            let e = tallies.entry(wt.worker).or_default();
+            e.0 += wt.tasks;
+            e.1 += wt.stolen;
+        }
+    }
+    println!("\n{:>8} {:>8} {:>8}", "worker", "tasks", "stolen");
+    for (w, (tasks, stolen)) in &tallies {
+        println!("{w:>8} {tasks:>8} {stolen:>8}");
+    }
+
+    let stats = srv.stats();
+    if let Some(d) = &stats.drift {
+        println!(
+            "\ndrift over {} jobs: min {:+.3} mean {:+.3} max {:+.3} p95 {:+.3}",
+            d.count, d.min, d.mean, d.max, d.p95
+        );
+    }
+    println!("\nserver: {stats}");
+
+    if let Some(prefix) = args.flags.get("out") {
+        let mut jl = std::fs::File::create(format!("{prefix}.jsonl"))?;
+        snap.exporter().write_jsonl(&mut jl)?;
+        let mut ch = std::fs::File::create(format!("{prefix}.chrome.json"))?;
+        snap.exporter().write_chrome(&mut ch)?;
+        println!("wrote {prefix}.jsonl and {prefix}.chrome.json");
+    }
     srv.shutdown();
     Ok(())
 }

@@ -23,7 +23,7 @@
 use crate::analytical::{strassen_crossover, CrossoverPlan};
 use crate::config::RunConfig;
 use crate::coordinator::{
-    ActivationHandle, AOperand, GemmJob, JobServer, Submission, WeightHandle,
+    ActivationHandle, AOperand, GemmJob, JobServer, SpanKind, Submission, WeightHandle,
 };
 use crate::gemm::{ops, Matrix, MatrixView};
 
@@ -279,7 +279,9 @@ fn node(
             .into_iter()
             .map(|(ta, tb)| GemmJob { id: ctx.fresh_id(), a: ta.into(), b: tb.into(), run: ctx.run })
             .collect();
+        ctx.server.trace_span_begin(SpanKind::StrassenLevel, level as u64);
         let results = ctx.server.submit_blocking(Submission::group(jobs))?;
+        ctx.server.trace_span_end(SpanKind::StrassenLevel, level as u64);
         ctx.leaf_gemms += 7;
         let mut ms = Vec::with_capacity(7);
         for r in results {

@@ -168,9 +168,17 @@ impl<T: Copy> AtomicWqm<T> {
     /// enabled, steal one task from the fullest non-empty queue.
     /// Returns `None` only once every reachable queue is empty.
     pub fn pop(&self, queue: usize) -> Option<T> {
+        self.pop_with_source(queue).map(|(task, _)| task)
+    }
+
+    /// [`AtomicWqm::pop`] that also reports *which* queue the task was
+    /// claimed from — the steal-provenance signal the serving layer's
+    /// flight recorder stamps onto each task (`source != queue` means
+    /// the task was stolen off another array's queue).
+    pub fn pop_with_source(&self, queue: usize) -> Option<(T, usize)> {
         if let Some(task) = self.queues[queue].pop_front() {
             self.queues[queue].executed.fetch_add(1, Ordering::Relaxed);
-            return Some(task);
+            return Some((task, queue));
         }
         if !self.stealing.load(Ordering::Relaxed) {
             return None;
@@ -181,7 +189,7 @@ impl<T: Copy> AtomicWqm<T> {
                 self.queues[victim].stolen_out.fetch_add(1, Ordering::Relaxed);
                 self.queues[queue].stolen_in.fetch_add(1, Ordering::Relaxed);
                 self.queues[queue].executed.fetch_add(1, Ordering::Relaxed);
-                return Some(task);
+                return Some((task, victim));
             }
             // Victim drained between the scan and the CAS — rescan. The
             // loop terminates: total remaining work is finite and
@@ -250,6 +258,18 @@ mod tests {
         let stats = w.stats();
         assert_eq!(stats[1].stolen_in, 1);
         assert_eq!(stats[2].stolen_out, 1);
+    }
+
+    #[test]
+    fn pop_with_source_reports_provenance() {
+        let w = loaded(&[2, 0, 5]);
+        // Local pop: source is the popper's own queue.
+        assert_eq!(w.pop_with_source(0), Some((0, 0)));
+        // Steal: source is the victim queue.
+        assert_eq!(w.pop_with_source(1), Some((6, 2)));
+        // Drained: None either way.
+        let w2 = loaded(&[0]);
+        assert_eq!(w2.pop_with_source(0), None);
     }
 
     #[test]

@@ -16,7 +16,7 @@ use multi_array::blocking::BlockPlan;
 use multi_array::config::{HardwareConfig, RunConfig};
 use multi_array::coordinator::{
     Coordinator, GemmJob, JobServer, NumericsEngine, ServerConfig, SubmitError, Submission,
-    SubmissionKind, TenantConfig, TenantId, TrySubmitBatchedError,
+    SubmissionKind, TenantConfig, TenantId, Terminal, TrySubmitBatchedError,
 };
 use multi_array::gemm::Matrix;
 
@@ -775,5 +775,103 @@ fn steals_balance_and_zero_copy_hold_under_serving() {
     // bounded by total pops (sanity, not exact accounting).
     assert!(m.steals() <= m.tasks());
     assert!(m.cross_job_steals() <= m.tasks());
+    srv.shutdown();
+}
+
+#[test]
+fn flight_recorder_conserves_submissions_and_telescopes_under_load() {
+    // Mixed traffic with tracing on and real thread contention: every
+    // sub-job appears in the trace exactly once with a terminal event,
+    // the five stage spans of each completed job telescope to its
+    // end-to-end latency, per-worker tallies partition the job's
+    // tasks, and every completion carries a predicted-vs-measured
+    // drift record.
+    let mut c = cfg(4, 64);
+    c.trace_capacity = 8192;
+    let srv = server(c);
+    let run = RunConfig::square(2, 16);
+    let mut futures = Vec::new();
+    for j in 0..12u64 {
+        let a = Matrix::random(48, 32, j);
+        let b = Matrix::random(32, 40, j + 400);
+        futures.push(srv.submit_async(Submission::gemm(a, b).id(j).run(run)).unwrap());
+    }
+    // A shared-B batch rides along so group members are traced too.
+    let b = Matrix::random(32, 40, 999);
+    let many_a: Vec<Matrix> =
+        (0..4u64).map(|i| Matrix::random(48, 32, 700 + i)).collect();
+    futures.push(srv.submit_async(Submission::batched(b, many_a).run(run)).unwrap());
+    for f in futures {
+        f.wait().unwrap();
+    }
+
+    let traces = srv.trace_snapshot().job_traces();
+    assert_eq!(traces.len(), 16, "12 lone jobs + 4 batch members, each traced once");
+    for t in &traces {
+        assert_eq!(t.terminal, Terminal::Done, "uid {} not done", t.uid);
+        let stages = t.stage_secs().expect("done job has all five stages");
+        let e2e = t.end_to_end_secs().unwrap();
+        assert!(
+            (stages.iter().sum::<f64>() - e2e).abs() < 1e-9,
+            "uid {}: stages sum {} != e2e {}",
+            t.uid,
+            stages.iter().sum::<f64>(),
+            e2e
+        );
+        assert!(t.tasks > 0);
+        assert_eq!(
+            t.workers.iter().map(|w| w.tasks).sum::<u64>(),
+            t.tasks,
+            "uid {}: worker tallies must partition the job's tasks",
+            t.uid
+        );
+        assert_eq!(t.workers.iter().map(|w| w.stolen).sum::<u64>(), t.stolen_tasks);
+        assert!(t.predicted_secs.is_some() && t.measured_secs.is_some());
+    }
+
+    // The rollups surface in stats(): per-stage percentiles, drift,
+    // and the per-worker breakdown agreeing with the trace.
+    let stats = srv.stats();
+    let drift = stats.drift.expect("16 completions must price drift");
+    assert_eq!(drift.count, 16);
+    assert!(drift.min <= drift.mean && drift.mean <= drift.max);
+    let stages = stats.stage_p50_p95_secs.expect("tracing on => stage rollup");
+    for (p50, p95) in stages {
+        assert!(p50 <= p95);
+    }
+    assert_eq!(stats.per_worker_tasks.len(), 4);
+    let traced: u64 = traces.iter().map(|t| t.tasks).sum();
+    assert_eq!(stats.per_worker_tasks.iter().sum::<u64>(), traced);
+
+    // The JSONL export carries one line per job trace.
+    let snap = srv.trace_snapshot();
+    let mut out = Vec::new();
+    snap.exporter().write_jsonl(&mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    assert_eq!(text.lines().count(), 16);
+    assert!(text.lines().all(|l| l.contains("\"terminal\":\"done\"")));
+    srv.shutdown();
+}
+
+#[test]
+fn disabled_tracing_stays_dark_under_serving() {
+    // The default config (trace_capacity = 0) must record nothing —
+    // the flight recorder is pay-for-what-you-use.
+    let srv = server(cfg(2, 16));
+    let run = RunConfig::square(2, 16);
+    for j in 0..4u64 {
+        let a = Matrix::random(32, 16, j);
+        let b = Matrix::random(16, 32, j + 40);
+        srv.submit_blocking(Submission::gemm(a, b).id(j).run(run)).unwrap();
+    }
+    assert!(!srv.trace_enabled());
+    let snap = srv.trace_snapshot();
+    assert_eq!(snap.recorded, 0);
+    assert!(snap.events.is_empty());
+    let stats = srv.stats();
+    assert_eq!((stats.trace_recorded, stats.trace_dropped), (0, 0));
+    assert!(stats.stage_p50_p95_secs.is_none());
+    // Per-worker execution tallies are independent of tracing.
+    assert!(stats.per_worker_tasks.iter().sum::<u64>() > 0);
     srv.shutdown();
 }
