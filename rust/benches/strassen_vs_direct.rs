@@ -1,49 +1,83 @@
 //! Strassen vs direct execution through the serving runtime.
 //!
-//! Four modes over the same 256x256x256 problem on one persistent
+//! Five modes over the same 256x256x256 problem on one persistent
 //! 4-worker server:
 //!
-//! * `direct_server_256`    — one plain job (the baseline);
-//! * `strassen_depth1_256`  — one forced recursion level: 7 leaf GEMMs
-//!   submitted as a job group, combine on the host;
-//! * `strassen_depth2_256`  — two forced levels (49 leaves);
-//! * `strassen_model_256`   — the model-chosen cutoff (depth 0 at this
+//! * `direct_server_256`     — one plain job (the baseline);
+//! * `strassen_depth1_256`   — one forced recursion level, classic
+//!   schedule: 7 leaf GEMMs submitted as a job group, combine on the
+//!   host;
+//! * `strassen_depth2_256`   — two forced classic levels (49 leaves);
+//! * `strassen_winograd_256` — two forced levels on the Winograd
+//!   schedule (15 combine ops per node instead of 18, leaf operands
+//!   fused into the packer) with the parallel recursion walk;
+//! * `strassen_model_256`    — the model-chosen cutoff (depth 0 at this
 //!   size: 256³ sits far below the modeled crossover, so this measures
 //!   the predictor declining to recurse).
 //!
 //! Annotations carry the acceptance-relevant facts into
 //! `BENCH_strassen.json`: the model-chosen depth for the measured
 //! problem and for a serving-scale 4096³/8192³ projection, the executed
-//! depth, leaf-GEMM count, and the measured per-level fan-out (7
-//! sub-multiplies per node vs 8 for a direct quadrant split).
+//! depth, leaf-GEMM count, the measured per-level fan-out (7
+//! sub-multiplies per node vs 8 for a direct quadrant split), the
+//! combine-op and temp-materialization counters behind the Winograd
+//! win, and — from fresh single-run servers so the lifetime-wide idle
+//! figure is per-mode — `worker_idle_frac` for the parallel and
+//! sequential depth-2 walks.
 
 use multi_array::analytical::strassen_crossover;
 use multi_array::config::{HardwareConfig, RunConfig};
 use multi_array::coordinator::{GemmJob, JobServer, NumericsEngine, ServerConfig};
 use multi_array::gemm::Matrix;
-use multi_array::strassen::{self, Cutoff, StrassenConfig, DIRECT_SPLIT_FANOUT};
+use multi_array::strassen::{
+    self, Cutoff, StrassenAlgo, StrassenConfig, DIRECT_SPLIT_FANOUT,
+};
 use multi_array::util::Bench;
 
 const DIM: usize = 256;
+
+fn server_config(run: RunConfig) -> ServerConfig {
+    ServerConfig {
+        workers: 4,
+        queue_capacity: 64,
+        batch_max_tasks: 0,
+        batch_window: 1,
+        cross_job_stealing: true,
+        default_run: Some(run),
+        ..ServerConfig::default()
+    }
+}
+
+/// One depth-2 Winograd multiply on a fresh server; returns the
+/// server's lifetime `worker_idle_frac`, which with a single run on a
+/// fresh pool is that run's idle fraction.
+fn depth2_idle_frac(
+    hw: &HardwareConfig,
+    run: RunConfig,
+    a: &Matrix,
+    b: &Matrix,
+    parallel: bool,
+) -> f64 {
+    let srv = JobServer::new(hw.clone(), NumericsEngine::golden(), server_config(run))
+        .expect("server construction");
+    let cfg = StrassenConfig {
+        cutoff: Cutoff::Depth(2),
+        run: Some(run),
+        parallel,
+        ..StrassenConfig::default()
+    };
+    strassen::multiply(&srv, a, b, &cfg).expect("strassen multiply");
+    let idle = srv.stats().worker_idle_frac;
+    srv.shutdown();
+    idle
+}
 
 fn main() {
     let bench = Bench::new("strassen_vs_direct");
     let hw = HardwareConfig::paper();
     let run = RunConfig::square(4, 64);
-    let srv = JobServer::new(
-        hw.clone(),
-        NumericsEngine::golden(),
-        ServerConfig {
-            workers: 4,
-            queue_capacity: 64,
-            batch_max_tasks: 0,
-            batch_window: 1,
-            cross_job_stealing: true,
-            default_run: Some(run),
-            ..ServerConfig::default()
-        },
-    )
-    .expect("server construction");
+    let srv = JobServer::new(hw.clone(), NumericsEngine::golden(), server_config(run))
+        .expect("server construction");
 
     let a = Matrix::random(DIM, DIM, 1);
     let b = Matrix::random(DIM, DIM, 2);
@@ -60,12 +94,13 @@ fn main() {
     // it in-loop, which is what that mode measures).
     let plan_256 = strassen_crossover(&hw, DIM, DIM, DIM, srv.surface()).expect("crossover");
 
-    for (label, cutoff) in [
-        ("strassen_depth1_256", Cutoff::Depth(1)),
-        ("strassen_depth2_256", Cutoff::Depth(2)),
-        ("strassen_model_256", Cutoff::Model),
+    for (label, cutoff, algo) in [
+        ("strassen_depth1_256", Cutoff::Depth(1), StrassenAlgo::Classic),
+        ("strassen_depth2_256", Cutoff::Depth(2), StrassenAlgo::Classic),
+        ("strassen_winograd_256", Cutoff::Depth(2), StrassenAlgo::Winograd),
+        ("strassen_model_256", Cutoff::Model, StrassenAlgo::Winograd),
     ] {
-        let cfg = StrassenConfig { cutoff, run: Some(run) };
+        let cfg = StrassenConfig { cutoff, run: Some(run), algo, ..StrassenConfig::default() };
         let mut last = None;
         bench.run_throughput(label, flops, || {
             last = Some(strassen::multiply(&srv, &a, &b, &cfg).expect("strassen multiply"));
@@ -78,9 +113,26 @@ fn main() {
         // vs the 8 a direct quadrant split would spawn.
         bench.annotate("sub_multiplies_per_level", if r.depth > 0 { r.fanout(0) } else { 1.0 });
         bench.annotate("direct_sub_multiplies_per_level", DIRECT_SPLIT_FANOUT as f64);
+        bench.annotate("combine_ops_per_node", r.combine.ops_per_node());
+        bench.annotate("temps_materialized", r.combine.temps_materialized as f64);
+        bench.annotate("temps_avoided_by_fusion", r.combine.temps_avoided as f64);
         bench.annotate("arena_fresh_bytes", r.arena.fresh_bytes as f64);
         bench.annotate("arena_reuses", r.arena.reuses as f64);
     }
+
+    // Worker occupancy of the depth-2 Winograd walk, parallel vs
+    // sequential, each on a fresh single-run server so the lifetime-wide
+    // idle fraction belongs to exactly one walk. The parallel walk keeps
+    // all sibling leaf groups in flight, so its idle fraction should sit
+    // at or below the sequential one.
+    let idle_par = depth2_idle_frac(&hw, run, &a, &b, true);
+    let idle_seq = depth2_idle_frac(&hw, run, &a, &b, false);
+    bench.annotate("worker_idle_frac_parallel", idle_par);
+    bench.annotate("worker_idle_frac_sequential", idle_seq);
+    println!(
+        "bench strassen_vs_direct/depth2_worker_idle_frac      parallel {idle_par:.4} \
+         sequential {idle_seq:.4}"
+    );
 
     // Where the model arms at serving scale (no execution — pure Eqs.
     // 3–9 + combine-traffic prediction on the calibrated surface).

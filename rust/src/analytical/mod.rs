@@ -18,7 +18,7 @@ pub mod bandwidth;
 pub mod strassen;
 
 pub use bandwidth::BandwidthSurface;
-pub use strassen::{strassen_crossover, CrossoverPlan};
+pub use strassen::{strassen_crossover, strassen_crossover_with, CrossoverPlan, StrassenAlgo};
 
 
 use crate::blocking::BlockPlan;

@@ -11,6 +11,14 @@
 //! master (`BW(1, S_max)` — sequential bursts, the surface's sweet
 //! spot).
 //!
+//! The combine term is priced per [`StrassenAlgo`] — the classic 7
+//! products use 5+5 operand add/subs and 8 C-side ops, the Winograd
+//! schedule 4+4 and 7 — and knows about **fused combine-packing**: at a
+//! level whose children run direct, the planner forms each operand
+//! combination *inside* the pack pass instead of materializing it, so
+//! only the extra operand read is billed, not a round trip through a
+//! temporary.
+//!
 //! [`strassen_crossover`] evaluates that recurrence level by level and
 //! stops at the first level where recursing no longer pays (or where a
 //! half falls below one `S_i = 16` granule). The result is a
@@ -18,13 +26,6 @@
 //! decision trace, which [`crate::dse::explore_strassen`] surfaces as a
 //! first-class DSE output and `strassen::multiply` uses as its default
 //! cutoff policy.
-//!
-//! Combine-traffic accounting per level (quadrants `m2 x k2`, `k2 x n2`,
-//! `m2 x n2`, FP32): operand formation does 5 add/subs and 2 copies on
-//! each operand side (7 products need `A11+A22`, `A21+A22`, `A11`,
-//! `A22`, `A11+A12`, `A21-A11`, `A12-A22` and the B-side mirror), and
-//! recombination does 8 add/subs on C quadrants. An add/sub streams
-//! 12 bytes per element (two reads + one write), a copy 8.
 
 use crate::config::{HardwareConfig, RunConfig};
 
@@ -34,6 +35,28 @@ use super::{feasible_nps, predict};
 /// Recursion is only considered while both halves keep at least one
 /// full `S_i = 16` block granule per dimension.
 pub const MIN_HALF: usize = 16;
+
+/// Which 7-product schedule the Strassen recursion runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StrassenAlgo {
+    /// Strassen's original 1969 schedule: 5 operand add/subs and 2
+    /// copies per side, 8 C-side ops — 18 two-term combines per node.
+    Classic,
+    /// Winograd's rearrangement of the same 7 products: 4 operand
+    /// add/subs per side and 7 C-side ops (two of them shared partial
+    /// sums) — 15 two-term combines per node, the known minimum.
+    #[default]
+    Winograd,
+}
+
+impl StrassenAlgo {
+    pub fn name(self) -> &'static str {
+        match self {
+            StrassenAlgo::Classic => "classic",
+            StrassenAlgo::Winograd => "winograd",
+        }
+    }
+}
 
 /// One level of the crossover recurrence: the problem size seen at that
 /// level and the model's two options for it.
@@ -47,7 +70,8 @@ pub struct LevelDecision {
     /// `7 · T(child) + combine`, seconds; infinite when recursion is
     /// infeasible (a half below [`MIN_HALF`]).
     pub t_strassen: f64,
-    /// The combine term alone, seconds (0 when infeasible).
+    /// The combine term alone, seconds (0 when infeasible). Priced with
+    /// the fused constants when this level's children run direct.
     pub combine_secs: f64,
     /// Did the model choose to recurse at this level?
     pub recurse: bool,
@@ -61,6 +85,8 @@ pub struct CrossoverPlan {
     pub m: usize,
     pub k: usize,
     pub n: usize,
+    /// Schedule the plan was priced for.
+    pub algo: StrassenAlgo,
     /// Recursion levels the model recommends (0 = run direct).
     pub depth: usize,
     /// Decision at each level, outermost first; `levels.len() == depth + 1`.
@@ -71,13 +97,56 @@ pub struct CrossoverPlan {
     pub t_chosen: f64,
 }
 
+/// Bytes per element of combine traffic on one operand side.
+///
+/// Materialized (interior nodes): an add/sub streams 12 bytes per
+/// element (two reads + one write), a copy 8. Fused (leaf-parents, where
+/// the combination forms inside the pack pass): a two-view combination
+/// only adds the second operand read, 4 bytes, and a pass-through view
+/// adds nothing — the pack itself would have read one operand anyway.
+fn side_bytes_per_elem(algo: StrassenAlgo, fused: bool) -> f64 {
+    match (algo, fused) {
+        // 5 add/subs + 2 copies.
+        (StrassenAlgo::Classic, false) => 5.0 * 12.0 + 2.0 * 8.0,
+        // All 7 operands fuse: 5 two-view combos, 2 pass-throughs.
+        (StrassenAlgo::Classic, true) => 5.0 * 4.0 + 2.0 * 0.0,
+        // 4 chained add/subs; the all-materialized form also copies the
+        // 3 quadrants that feed products directly (A11, A12, A22 /
+        // B11, B21, B22).
+        (StrassenAlgo::Winograd, false) => 4.0 * 12.0 + 3.0 * 8.0,
+        // The chain heads (S1/S2, S5/S6) must materialize because later
+        // steps read them; the other 2 steps and every pass-through
+        // operand fuse into the packs.
+        (StrassenAlgo::Winograd, true) => 2.0 * 12.0 + 2.0 * 4.0,
+    }
+}
+
+/// C-side two-term ops per node: classic recombines with 8, Winograd
+/// with 7 (two shared partial sums `t1`, `t2` included).
+fn c_side_ops(algo: StrassenAlgo) -> f64 {
+    match algo {
+        StrassenAlgo::Classic => 8.0,
+        StrassenAlgo::Winograd => 7.0,
+    }
+}
+
 /// Seconds to form the 7 operand combinations and recombine the 7
 /// sub-products, for quadrants `m2 x k2` (A side), `k2 x n2` (B side)
-/// and `m2 x n2` (C side), streaming at `bw` bytes/s.
-pub fn combine_secs(m2: usize, k2: usize, n2: usize, bw: f64) -> f64 {
-    let a_bytes = (m2 * k2) as f64 * (5.0 * 12.0 + 2.0 * 8.0);
-    let b_bytes = (k2 * n2) as f64 * (5.0 * 12.0 + 2.0 * 8.0);
-    let c_bytes = (m2 * n2) as f64 * (8.0 * 12.0);
+/// and `m2 x n2` (C side), streaming at `bw` bytes/s. `fused` selects
+/// the leaf-parent pricing where operand formation rides inside the
+/// pack pass.
+pub fn combine_secs(
+    algo: StrassenAlgo,
+    fused: bool,
+    m2: usize,
+    k2: usize,
+    n2: usize,
+    bw: f64,
+) -> f64 {
+    let per_side = side_bytes_per_elem(algo, fused);
+    let a_bytes = (m2 * k2) as f64 * per_side;
+    let b_bytes = (k2 * n2) as f64 * per_side;
+    let c_bytes = (m2 * n2) as f64 * (c_side_ops(algo) * 12.0);
     (a_bytes + b_bytes + c_bytes) / bw
 }
 
@@ -105,10 +174,8 @@ pub fn best_direct_secs(
     best.ok_or_else(|| anyhow::anyhow!("no feasible direct design point for {m}x{k}x{n}"))
 }
 
-/// Evaluate the Strassen recurrence for `(m, k, n)` and return the
-/// model-chosen recursion depth with its full decision trace. Child
-/// sizes are `ceil(dim / 2)` — the even-padded halves the planner
-/// actually executes.
+/// [`strassen_crossover_with`] under the default schedule
+/// ([`StrassenAlgo::Winograd`]).
 pub fn strassen_crossover(
     hw: &HardwareConfig,
     m: usize,
@@ -116,16 +183,32 @@ pub fn strassen_crossover(
     n: usize,
     surface: &BandwidthSurface,
 ) -> anyhow::Result<CrossoverPlan> {
+    strassen_crossover_with(hw, m, k, n, surface, StrassenAlgo::default())
+}
+
+/// Evaluate the Strassen recurrence for `(m, k, n)` under `algo` and
+/// return the model-chosen recursion depth with its full decision
+/// trace. Child sizes are `ceil(dim / 2)` — the even-padded halves the
+/// planner actually executes.
+pub fn strassen_crossover_with(
+    hw: &HardwareConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+    algo: StrassenAlgo,
+) -> anyhow::Result<CrossoverPlan> {
     // Combine traffic streams sequentially through one master; use the
     // surface's best single-master point (largest calibrated burst).
     let combine_bw = surface.bw(1, SI_GRID[SI_GRID.len() - 1]);
-    let (levels, t_chosen) = eval_level(hw, m, k, n, surface, combine_bw)?;
+    let (levels, t_chosen) = eval_level(hw, m, k, n, surface, combine_bw, algo)?;
     let depth = levels.len() - 1;
-    Ok(CrossoverPlan { m, k, n, depth, t_direct: levels[0].t_direct, levels, t_chosen })
+    Ok(CrossoverPlan { m, k, n, algo, depth, t_direct: levels[0].t_direct, levels, t_chosen })
 }
 
 /// Recursive core: returns the decision chain from this level down
 /// (ending at the first non-recursing level) and the chosen total time.
+#[allow(clippy::too_many_arguments)]
 fn eval_level(
     hw: &HardwareConfig,
     m: usize,
@@ -133,6 +216,7 @@ fn eval_level(
     n: usize,
     surface: &BandwidthSurface,
     combine_bw: f64,
+    algo: StrassenAlgo,
 ) -> anyhow::Result<(Vec<LevelDecision>, f64)> {
     let t_direct = best_direct_secs(hw, m, k, n, surface)?;
     let (m2, k2, n2) = (m.div_ceil(2), k.div_ceil(2), n.div_ceil(2));
@@ -148,8 +232,11 @@ fn eval_level(
         };
         return Ok((vec![leaf], t_direct));
     }
-    let (child_levels, t_child) = eval_level(hw, m2, k2, n2, surface, combine_bw)?;
-    let combine = combine_secs(m2, k2, n2, combine_bw);
+    let (child_levels, t_child) = eval_level(hw, m2, k2, n2, surface, combine_bw, algo)?;
+    // Children that run direct are leaves: their parent fuses operand
+    // formation into the pack pass instead of materializing temps.
+    let fused = child_levels.len() == 1;
+    let combine = combine_secs(algo, fused, m2, k2, n2, combine_bw);
     let t_strassen = 7.0 * t_child + combine;
     let recurse = t_strassen < t_direct;
     let here = LevelDecision { m, k, n, t_direct, t_strassen, combine_secs: combine, recurse };
@@ -181,6 +268,7 @@ mod tests {
         assert_eq!(plan.levels.len(), 1);
         assert!(!plan.levels[0].recurse);
         assert_eq!(plan.t_chosen, plan.t_direct);
+        assert_eq!(plan.algo, StrassenAlgo::Winograd, "default schedule");
     }
 
     #[test]
@@ -189,10 +277,12 @@ mod tests {
         // sub-multiplies: the saved eighth of compute dwarfs the O(n²)
         // combine traffic.
         let (hw, s) = setup();
-        let plan = strassen_crossover(&hw, 8192, 8192, 8192, &s).unwrap();
-        assert!(plan.depth >= 1, "depth {} at 8192^3", plan.depth);
-        assert!(plan.t_chosen < plan.t_direct);
-        assert!(plan.levels[0].recurse);
+        for algo in [StrassenAlgo::Classic, StrassenAlgo::Winograd] {
+            let plan = strassen_crossover_with(&hw, 8192, 8192, 8192, &s, algo).unwrap();
+            assert!(plan.depth >= 1, "depth {} at 8192^3 ({})", plan.depth, algo.name());
+            assert!(plan.t_chosen < plan.t_direct);
+            assert!(plan.levels[0].recurse);
+        }
     }
 
     #[test]
@@ -223,23 +313,39 @@ mod tests {
     #[test]
     fn chosen_time_matches_recurrence() {
         let (hw, s) = setup();
-        let plan = strassen_crossover(&hw, 8192, 8192, 8192, &s).unwrap();
-        // Reconstruct the total from the trace: fold leaf-up.
-        let mut t = plan.levels.last().unwrap().t_direct;
-        for lvl in plan.levels.iter().rev().skip(1) {
-            t = 7.0 * t + lvl.combine_secs;
+        for algo in [StrassenAlgo::Classic, StrassenAlgo::Winograd] {
+            let plan = strassen_crossover_with(&hw, 8192, 8192, 8192, &s, algo).unwrap();
+            // Reconstruct the total from the trace: fold leaf-up.
+            let mut t = plan.levels.last().unwrap().t_direct;
+            for lvl in plan.levels.iter().rev().skip(1) {
+                t = 7.0 * t + lvl.combine_secs;
+            }
+            assert!((t - plan.t_chosen).abs() <= 1e-12 * t.max(1.0));
         }
-        assert!((t - plan.t_chosen).abs() <= 1e-12 * t.max(1.0));
+    }
+
+    #[test]
+    fn combine_constants_per_algo_and_fusion() {
+        let area = 100.0 * 100.0;
+        let at = |algo, fused| combine_secs(algo, fused, 100, 100, 100, 1e9) * 1e9;
+        // Materialized: classic 5·12+2·8 = 76 per side, 8·12 = 96 on C;
+        // Winograd 4·12+3·8 = 72 per side, 7·12 = 84 on C.
+        assert!((at(StrassenAlgo::Classic, false) - area * (76.0 + 76.0 + 96.0)).abs() < 1e-6);
+        assert!((at(StrassenAlgo::Winograd, false) - area * (72.0 + 72.0 + 84.0)).abs() < 1e-6);
+        // Fused: classic 5·4 = 20 per side; Winograd 2·12+2·4 = 32.
+        assert!((at(StrassenAlgo::Classic, true) - area * (20.0 + 20.0 + 96.0)).abs() < 1e-6);
+        assert!((at(StrassenAlgo::Winograd, true) - area * (32.0 + 32.0 + 84.0)).abs() < 1e-6);
+        // Winograd wins where temps materialize (interior nodes);
+        // classic's copy-heavy schedule fuses better at leaf-parents.
+        assert!(at(StrassenAlgo::Winograd, false) < at(StrassenAlgo::Classic, false));
+        assert!(at(StrassenAlgo::Classic, true) < at(StrassenAlgo::Winograd, true));
     }
 
     #[test]
     fn combine_grows_linearly_with_area() {
-        let t1 = combine_secs(100, 100, 100, 1e9);
-        let t4 = combine_secs(200, 200, 200, 1e9);
+        let t1 = combine_secs(StrassenAlgo::Winograd, false, 100, 100, 100, 1e9);
+        let t4 = combine_secs(StrassenAlgo::Winograd, false, 200, 200, 200, 1e9);
         assert!((t4 / t1 - 4.0).abs() < 1e-9);
-        // 12 bytes per add/sub element, 8 per copied element.
-        let bytes = 100.0 * 100.0 * (76.0 + 76.0 + 96.0);
-        assert!((t1 - bytes / 1e9).abs() < 1e-15);
     }
 
     #[test]

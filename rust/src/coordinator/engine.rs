@@ -133,11 +133,16 @@ impl NumericsEngine {
     /// that built `panels` and sized `out`, and each task must be
     /// executed at most once per writer — the disjointness contract of
     /// [`DisjointBlocks::write_block`].
+    ///
+    /// The full operands are optional because a fused sub-job exists
+    /// *only* in packed form (its combination was formed inside the pack
+    /// pass); the gather fallback needs both full matrices and errors
+    /// without them.
     pub fn task_product_into(
         &self,
         panels: Option<&PackedPanels>,
-        a: &Matrix,
-        b: &Matrix,
+        a: Option<&Matrix>,
+        b: Option<&Matrix>,
         task: &BlockTask,
         out: &DisjointBlocks<'_>,
     ) -> anyhow::Result<bool> {
@@ -150,6 +155,9 @@ impl NumericsEngine {
                 return Ok(true);
             }
         }
+        let (Some(a), Some(b)) = (a, b) else {
+            anyhow::bail!("packed-only (fused) operands need an in-process engine")
+        };
         // One gather copy per operand; the owned variant moves them into
         // the channel, so `panel_copies` (+2/task) is the true count.
         let sa = a.block(task.row0, 0, task.si, a.cols);
@@ -228,8 +236,9 @@ mod tests {
         {
             let w = DisjointBlocks::new(c.view_mut());
             for task in plan.tasks() {
-                let zero_copy =
-                    e.task_product_into(Some(&panels), &a, &b, &task, &w).unwrap();
+                let zero_copy = e
+                    .task_product_into(Some(&panels), Some(&a), Some(&b), &task, &w)
+                    .unwrap();
                 assert!(zero_copy);
             }
         }
@@ -248,7 +257,8 @@ mod tests {
         {
             let w = DisjointBlocks::new(c.view_mut());
             for task in plan.tasks() {
-                let zero_copy = e.task_product_into(None, &a, &b, &task, &w).unwrap();
+                let zero_copy =
+                    e.task_product_into(None, Some(&a), Some(&b), &task, &w).unwrap();
                 assert!(!zero_copy);
             }
         }

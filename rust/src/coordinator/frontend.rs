@@ -50,7 +50,6 @@ use std::task::{Context, Poll};
 use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
-use crate::gemm::Matrix;
 
 use super::registry::{AOperand, BOperand};
 use super::server::JobTicket;
@@ -224,19 +223,17 @@ impl Submission {
         }
     }
 
-    /// Inline operand bytes (what per-tenant byte quotas are counted
-    /// in; registered operands are billed to the registry budget).
+    /// Caller-supplied operand bytes (what per-tenant byte quotas are
+    /// counted in): inline matrices plus fused windows; registered
+    /// operands are billed to the registry budget.
     pub fn inline_bytes(&self) -> usize {
-        fn m(x: Option<&Matrix>) -> usize {
-            x.map_or(0, |m| 4 * m.rows * m.cols)
-        }
         match &self.kind {
-            SubmissionKind::Gemm { a, b } => m(a.as_inline()) + m(b.as_inline()),
+            SubmissionKind::Gemm { a, b } => a.quota_bytes() + b.quota_bytes(),
             SubmissionKind::Group(g) => {
-                g.iter().map(|j| m(j.a.as_inline()) + m(j.b.as_inline())).sum()
+                g.iter().map(|j| j.a.quota_bytes() + j.b.quota_bytes()).sum()
             }
             SubmissionKind::SharedB { b, many_a } => {
-                m(b.as_inline()) + many_a.iter().map(|a| m(a.as_inline())).sum::<usize>()
+                b.quota_bytes() + many_a.iter().map(|a| a.quota_bytes()).sum::<usize>()
             }
         }
     }
@@ -845,6 +842,7 @@ impl<T> FrontEnd<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gemm::Matrix;
 
     fn meta(tenant: u32, weight: u32) -> AdmitMeta {
         AdmitMeta {

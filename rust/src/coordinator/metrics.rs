@@ -45,6 +45,11 @@ pub struct Metrics {
     /// of packing their own — each increment is one whole-operand pack
     /// avoided (the sharing win `Submission::batched` exists for).
     panels_shared: AtomicU64,
+    /// Operands whose combine was fused into the pack pass (a
+    /// `FusedOperand` packed via `from_sum_of_views`) — each increment
+    /// is one materialized temp write + read the Strassen fused path
+    /// avoided.
+    fused_packs: AtomicU64,
     /// Shared-B batch groups dispatched (one per
     /// `Submission::batched` call that reached activation).
     shared_b_groups: AtomicU64,
@@ -244,6 +249,10 @@ impl Metrics {
         self.panels_shared.fetch_add(n, Ordering::Relaxed);
     }
 
+    pub fn add_fused_packs(&self, n: u64) {
+        self.fused_packs.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn add_shared_b_groups(&self, n: u64) {
         self.shared_b_groups.fetch_add(n, Ordering::Relaxed);
     }
@@ -417,6 +426,10 @@ impl Metrics {
         self.panels_shared.load(Ordering::Relaxed)
     }
 
+    pub fn fused_packs(&self) -> u64 {
+        self.fused_packs.load(Ordering::Relaxed)
+    }
+
     pub fn shared_b_groups(&self) -> u64 {
         self.shared_b_groups.load(Ordering::Relaxed)
     }
@@ -549,7 +562,7 @@ impl Metrics {
         let ps = lat.percentiles(&[0.50, 0.95, 0.99]);
         let mut s = format!(
             "jobs={} (failed={}, batched={}) tasks={} steals={} (cross-job={}) \
-             panel_copies={} packs(a/b)={}/{} panels_shared={} \
+             panel_copies={} packs(a/b)={}/{} panels_shared={} fused_packs={} \
              registry(hit/miss/evict)={}/{}/{} \
              a_panel(hit/miss/evict)={}/{}/{} plan_residency_hits={} \
              deadline(miss/ddl)={}/{} \
@@ -565,6 +578,7 @@ impl Metrics {
             self.a_panel_packs(),
             self.b_panel_packs(),
             self.panels_shared(),
+            self.fused_packs(),
             self.registry_hits(),
             self.registry_misses(),
             self.registry_evictions(),
@@ -607,6 +621,7 @@ mod tests {
         m.add_a_panel_packs(5);
         m.add_b_panel_packs(1);
         m.add_panels_shared(4);
+        m.add_fused_packs(6);
         m.add_shared_b_groups(1);
         m.add_registry_hits(3);
         m.add_registry_misses(2);
@@ -631,6 +646,7 @@ mod tests {
         assert_eq!(m.a_panel_packs(), 5);
         assert_eq!(m.b_panel_packs(), 1);
         assert_eq!(m.panels_shared(), 4);
+        assert_eq!(m.fused_packs(), 6);
         assert_eq!(m.shared_b_groups(), 1);
         assert_eq!(m.registry_hits(), 3);
         assert_eq!(m.registry_misses(), 2);

@@ -79,8 +79,8 @@ pub use frontend::{
 };
 pub use metrics::{DriftStats, LatencySnapshot, Metrics, TenantCounters};
 pub use registry::{
-    ActivationHandle, AOperand, BOperand, Operand, OperandRegistry, TenantResidency,
-    WeightHandle,
+    ActivationHandle, AOperand, BOperand, FusedOperand, FusedSource, Operand, OperandRegistry,
+    TenantResidency, WeightHandle,
 };
 pub use server::{
     JobGroup, JobServer, JobTicket, ServerConfig, ServerStats, TrySubmitBatchedError,
@@ -192,13 +192,13 @@ impl Coordinator {
     pub fn plan_job(&self, job: &GemmJob) -> anyhow::Result<RunConfig> {
         let (a_rows, a_cols) = job.a.inline_dims().ok_or_else(|| {
             anyhow::anyhow!(
-                "registered activation handles resolve inside a JobServer; \
+                "registered and fused operands resolve inside a JobServer; \
                  Coordinator jobs need an inline A"
             )
         })?;
         let (_, b_cols) = job.b.inline_dims().ok_or_else(|| {
             anyhow::anyhow!(
-                "registered weight handles resolve inside a JobServer; \
+                "registered and fused operands resolve inside a JobServer; \
                  Coordinator jobs need an inline B"
             )
         })?;
@@ -258,8 +258,8 @@ impl Coordinator {
                     let metrics = &self.metrics;
                     handles.push(s.spawn(move || -> anyhow::Result<()> {
                         while let Some(task) = wqm.pop(w) {
-                            let zero_copy =
-                                engine.task_product_into(packed, a, b, &task, writer)?;
+                            let zero_copy = engine
+                                .task_product_into(packed, Some(a), Some(b), &task, writer)?;
                             if !zero_copy {
                                 metrics.add_panel_copies(2);
                             }

@@ -46,7 +46,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::gemm::{Matrix, PackedA, PackedB};
+use crate::gemm::{CombineOp, Matrix, MatrixView, PackedA, PackedB};
 
 use super::frontend::TenantId;
 use super::metrics::Metrics;
@@ -105,13 +105,131 @@ impl std::fmt::Display for ActivationHandle {
     }
 }
 
+/// One window of a shared parent matrix that a [`FusedOperand`] reads —
+/// the parent is refcounted so the submission can outlive the caller's
+/// stack frame (Strassen's async leaf groups hold these across `wait`).
+#[derive(Debug, Clone)]
+pub struct FusedSource {
+    /// The matrix the window reads from.
+    pub parent: Arc<Matrix>,
+    /// Window origin (row, col) inside `parent`.
+    pub row0: usize,
+    pub col0: usize,
+}
+
+impl FusedSource {
+    /// A window covering all of `parent`.
+    pub fn whole(parent: Arc<Matrix>) -> Self {
+        Self { parent, row0: 0, col0: 0 }
+    }
+
+    /// The `rows x cols` view at this source's origin. Caller guarantees
+    /// bounds (checked by [`FusedOperand::validate`]).
+    fn view(&self, rows: usize, cols: usize) -> MatrixView<'_> {
+        self.parent.view().block(self.row0, self.col0, rows, cols)
+    }
+}
+
+/// An operand formed *during* packing as `x op y` (or a plain window
+/// `x`) over one or two [`FusedSource`] windows — never materialized as
+/// its own matrix. This is how Strassen ships `A11 + A22`-style quadrant
+/// combinations to the server: the combine happens inside the pack
+/// pass ([`PackedA::from_sum_of_views`]), cutting one full temp
+/// write + read per operand.
+#[derive(Debug, Clone)]
+pub struct FusedOperand {
+    /// Operand shape (both windows must hold a full `rows x cols`).
+    pub rows: usize,
+    pub cols: usize,
+    pub x: FusedSource,
+    /// Second window and the op combining it with `x`; `None` packs `x`
+    /// alone (a fused copy — no temp either).
+    pub y: Option<(FusedSource, CombineOp)>,
+}
+
+impl FusedOperand {
+    /// A single-window fused operand (`rows x cols` at `x`'s origin).
+    pub fn single(rows: usize, cols: usize, x: FusedSource) -> Self {
+        Self { rows, cols, x, y: None }
+    }
+
+    /// A two-window combination `x op y`.
+    pub fn combine(rows: usize, cols: usize, x: FusedSource, y: FusedSource, op: CombineOp) -> Self {
+        Self { rows, cols, x, y: Some((y, op)) }
+    }
+
+    /// Both windows fit their parents. Explicit because
+    /// [`MatrixView::block`] clips silently — an out-of-bounds fused
+    /// operand must fail the job, not shrink it.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let fits = |s: &FusedSource| {
+            s.row0 + self.rows <= s.parent.rows && s.col0 + self.cols <= s.parent.cols
+        };
+        anyhow::ensure!(
+            fits(&self.x),
+            "fused operand window {}x{} at ({}, {}) exceeds its {}x{} parent",
+            self.rows,
+            self.cols,
+            self.x.row0,
+            self.x.col0,
+            self.x.parent.rows,
+            self.x.parent.cols
+        );
+        if let Some((y, _)) = &self.y {
+            anyhow::ensure!(
+                y.row0 + self.rows <= y.parent.rows && y.col0 + self.cols <= y.parent.cols,
+                "fused operand window {}x{} at ({}, {}) exceeds its {}x{} parent",
+                self.rows,
+                self.cols,
+                y.row0,
+                y.col0,
+                y.parent.rows,
+                y.parent.cols
+            );
+        }
+        Ok(())
+    }
+
+    /// Pack as an A operand at block size `si` — combine fused into the
+    /// pack pass, bit-identical to materialize-then-pack.
+    pub fn pack_a(&self, si: usize) -> PackedA {
+        let y = self.y.as_ref().map(|(s, op)| (s.view(self.rows, self.cols), *op));
+        PackedA::from_sum_of_views(self.x.view(self.rows, self.cols), y, si)
+    }
+
+    /// Pack as a B operand at block size `sj`.
+    pub fn pack_b(&self, sj: usize) -> PackedB {
+        let y = self.y.as_ref().map(|(s, op)| (s.view(self.rows, self.cols), *op));
+        PackedB::from_sum_of_views(self.x.view(self.rows, self.cols), y, sj)
+    }
+
+    /// Materialize the combined operand as its own matrix — the
+    /// fallback for backends that need a contiguous operand (PJRT
+    /// gather path). Same per-element expression as the fused packers.
+    pub fn materialize(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        let xv = self.x.view(self.rows, self.cols);
+        match &self.y {
+            None => crate::gemm::ops::copy_into(xv, &mut m.view_mut()),
+            Some((ys, op)) => {
+                let yv = ys.view(self.rows, self.cols);
+                match op {
+                    CombineOp::Add => crate::gemm::ops::add_into(xv, yv, &mut m.view_mut()),
+                    CombineOp::Sub => crate::gemm::ops::sub_into(xv, yv, &mut m.view_mut()),
+                }
+            }
+        }
+        m
+    }
+}
+
 /// One side of a submission, generic over its handle type: a one-shot
-/// inline matrix (packed per call, exactly the pre-registry behavior)
-/// or a registered operand resolved from the server's
-/// [`OperandRegistry`]. The two sides are the instantiations
-/// [`BOperand`] (`H = WeightHandle`, pack cached per `(handle, S_j)`)
-/// and [`AOperand`] (`H = ActivationHandle`, cached per
-/// `(handle, S_i)`) — one conversion path, one accessor surface,
+/// inline matrix (packed per call, exactly the pre-registry behavior),
+/// a registered operand resolved from the server's [`OperandRegistry`],
+/// or a fused view-combination packed on the fly. The two sides are the
+/// instantiations [`BOperand`] (`H = WeightHandle`, pack cached per
+/// `(handle, S_j)`) and [`AOperand`] (`H = ActivationHandle`, cached
+/// per `(handle, S_i)`) — one conversion path, one accessor surface,
 /// no per-side duplication.
 #[derive(Debug, Clone)]
 pub enum Operand<H> {
@@ -120,6 +238,9 @@ pub enum Operand<H> {
     /// Server-resident operand; packed at most once per
     /// `(handle, block size)` for the whole process.
     Registered(H),
+    /// `x op y` over windows of shared parents, combined inside the
+    /// pack pass — never materialized on the in-process path.
+    Fused(FusedOperand),
 }
 
 /// The B side of a submission: inline, or a registered weight.
@@ -130,11 +251,13 @@ pub type AOperand = Operand<ActivationHandle>;
 
 impl<H: Copy> Operand<H> {
     /// `(rows, cols)` when the operand is inline; `None` for a handle
-    /// (its dims live in the server's registry).
+    /// (its dims live in the server's registry) **and** for a fused
+    /// operand — callers that demand an inline matrix
+    /// (`Coordinator::plan_job`) must reject both.
     pub fn inline_dims(&self) -> Option<(usize, usize)> {
         match self {
             Operand::Inline(m) => Some((m.rows, m.cols)),
-            Operand::Registered(_) => None,
+            Operand::Registered(_) | Operand::Fused(_) => None,
         }
     }
 
@@ -142,7 +265,7 @@ impl<H: Copy> Operand<H> {
     pub fn as_inline(&self) -> Option<&Matrix> {
         match self {
             Operand::Inline(m) => Some(m),
-            Operand::Registered(_) => None,
+            Operand::Registered(_) | Operand::Fused(_) => None,
         }
     }
 
@@ -150,15 +273,29 @@ impl<H: Copy> Operand<H> {
     pub fn into_inline(self) -> Option<Matrix> {
         match self {
             Operand::Inline(m) => Some(m),
-            Operand::Registered(_) => None,
+            Operand::Registered(_) | Operand::Fused(_) => None,
         }
     }
 
     /// The registered handle, if any.
     pub fn handle(&self) -> Option<H> {
         match self {
-            Operand::Inline(_) => None,
             Operand::Registered(h) => Some(*h),
+            Operand::Inline(_) | Operand::Fused(_) => None,
+        }
+    }
+
+    /// Bytes this operand charges against per-tenant byte quotas: the
+    /// caller-supplied payload. Inline bills its matrix, fused bills
+    /// the combined window it will pack (its parents are shared with
+    /// sibling operands — billing windows rather than parents avoids
+    /// multi-counting one quadrant 7x); registered operands are billed
+    /// to the registry budget instead.
+    pub fn quota_bytes(&self) -> usize {
+        match self {
+            Operand::Inline(m) => 4 * m.rows * m.cols,
+            Operand::Fused(f) => 4 * f.rows * f.cols,
+            Operand::Registered(_) => 0,
         }
     }
 }
@@ -951,6 +1088,52 @@ mod tests {
         assert!(reg.into_inline().is_none());
         assert_eq!(AOperand::Registered(h).handle(), Some(h));
         assert_eq!(h.to_string(), "act#7");
+    }
+
+    #[test]
+    fn fused_operand_validates_packs_and_bills() {
+        let parent = Arc::new(Matrix::random(8, 8, 40));
+        let x = FusedSource { parent: parent.clone(), row0: 0, col0: 0 };
+        let y = FusedSource { parent: parent.clone(), row0: 4, col0: 4 };
+        let f = FusedOperand::combine(4, 4, x, y, CombineOp::Add);
+        f.validate().unwrap();
+
+        // Materialized vs fused-packed: bit-identical panels.
+        let mat = f.materialize();
+        for r in 0..4 {
+            for c in 0..4 {
+                assert_eq!(mat.get(r, c), parent.get(r, c) + parent.get(4 + r, 4 + c));
+            }
+        }
+        assert_eq!(f.pack_a(4).panel(0), PackedA::pack(mat.view(), 4).panel(0));
+        assert_eq!(f.pack_b(4).panel(0), PackedB::pack(mat.view(), 4).panel(0));
+
+        // Quota billing: the window, not the parent.
+        let op: AOperand = Operand::Fused(f.clone());
+        assert_eq!(op.quota_bytes(), 4 * 4 * 4);
+        assert!(op.inline_dims().is_none(), "fused is not inline");
+        assert!(op.as_inline().is_none());
+        assert!(op.handle().is_none());
+        let inline: AOperand = Matrix::zeros(3, 5).into();
+        assert_eq!(inline.quota_bytes(), 4 * 15);
+        let reg: BOperand = WeightHandle { registry: 0, id: 1 }.into();
+        assert_eq!(reg.quota_bytes(), 0);
+
+        // Out-of-bounds windows are an error, not a clipped view.
+        let oob = FusedOperand::single(
+            9,
+            4,
+            FusedSource::whole(parent.clone()),
+        );
+        assert!(oob.validate().is_err());
+        let oob2 = FusedOperand::combine(
+            4,
+            4,
+            FusedSource::whole(parent.clone()),
+            FusedSource { parent, row0: 6, col0: 0 },
+            CombineOp::Sub,
+        );
+        assert!(oob2.validate().is_err());
     }
 
     #[test]

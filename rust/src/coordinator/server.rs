@@ -506,16 +506,52 @@ struct RawOut {
 unsafe impl Send for RawOut {}
 unsafe impl Sync for RawOut {}
 
+/// An activated sub-job's view of one operand: the full matrix (inline
+/// and registered operands — the gather fallback reads it per task), or
+/// dimensions only, for a fused operand that exists purely as packed
+/// panels (its combination was formed inside the pack pass and a full
+/// matrix was never materialized).
+enum ExecOperand {
+    Full(Arc<Matrix>),
+    Packed { rows: usize, cols: usize },
+}
+
+impl ExecOperand {
+    fn rows(&self) -> usize {
+        match self {
+            ExecOperand::Full(m) => m.rows,
+            ExecOperand::Packed { rows, .. } => *rows,
+        }
+    }
+
+    fn cols(&self) -> usize {
+        match self {
+            ExecOperand::Full(m) => m.cols,
+            ExecOperand::Packed { cols, .. } => *cols,
+        }
+    }
+
+    /// The full matrix, when one exists (`None` for packed-only fused
+    /// operands — the engine's gather path errors on those).
+    fn full(&self) -> Option<&Arc<Matrix>> {
+        match self {
+            ExecOperand::Full(m) => Some(m),
+            ExecOperand::Packed { .. } => None,
+        }
+    }
+}
+
 /// One GEMM inside an active (possibly batched) job.
 struct SubJob {
     id: u64,
     run: RunConfig,
     /// Refcounted on both sides: a registered operand's matrix is the
     /// registry's own `Arc` (never cloned per job), an inline one is
-    /// wrapped at dispatch. The gather-fallback path reads these per
-    /// task; a shared-B batch holds one B across all sub-jobs.
-    a: Arc<Matrix>,
-    b: Arc<Matrix>,
+    /// wrapped at dispatch; a fused operand carries dims only (it lives
+    /// in `panels`). The gather-fallback path reads the full matrices
+    /// per task; a shared-B batch holds one B across all sub-jobs.
+    a: ExecOperand,
+    b: ExecOperand,
     /// Packed once at dispatch for in-process engines; `None` for the
     /// channel-fed PJRT backend (it gathers per task). The packed B
     /// half inside is an `Arc<PackedB>` — one pack feeds every sub-job
@@ -921,11 +957,10 @@ impl JobServer {
     ) -> (Vec<JobTicket>, QueueItem) {
         let now = Instant::now();
         let tenant = s.tenant;
-        let mb = |m: Option<&Matrix>| m.map_or(0, |m| 4 * m.rows * m.cols);
         let slot = |bytes: usize| Some(TenantSlot::new(self.ledger.clone(), tenant, bytes));
         match s.kind {
             SubmissionKind::Gemm { a, b } => {
-                let bytes = mb(a.as_inline()) + mb(b.as_inline());
+                let bytes = a.quota_bytes() + b.quota_bytes();
                 let (tx, rx) = mpsc::channel();
                 let adm = Admitted {
                     job: GemmJob { id: s.id, a, b, run: s.run },
@@ -941,7 +976,7 @@ impl JobServer {
                 let mut tickets = Vec::with_capacity(jobs.len());
                 let mut subs = Vec::with_capacity(jobs.len());
                 for (i, j) in jobs.into_iter().enumerate() {
-                    let bytes = mb(j.a.as_inline()) + mb(j.b.as_inline());
+                    let bytes = j.a.quota_bytes() + j.b.quota_bytes();
                     let (tx, rx) = mpsc::channel();
                     tickets.push(JobTicket::new(j.id, rx));
                     subs.push(Admitted {
@@ -958,11 +993,11 @@ impl JobServer {
                 (tickets, QueueItem::Group(subs))
             }
             SubmissionKind::SharedB { b, many_a } => {
-                let b_bytes = mb(b.as_inline());
+                let b_bytes = b.quota_bytes();
                 let mut tickets = Vec::with_capacity(many_a.len());
                 let mut subs = Vec::with_capacity(many_a.len());
                 for (i, a) in many_a.into_iter().enumerate() {
-                    let bytes = mb(a.as_inline()) + if i == 0 { b_bytes } else { 0 };
+                    let bytes = a.quota_bytes() + if i == 0 { b_bytes } else { 0 };
                     let (tx, rx) = mpsc::channel();
                     let id = s.id + i as u64;
                     tickets.push(JobTicket::new(id, rx));
@@ -995,10 +1030,12 @@ impl JobServer {
         let dims_a = |a: &AOperand| match a {
             AOperand::Inline(m) => Some((m.rows, m.cols)),
             AOperand::Registered(h) => shared.operands.dims_a(*h),
+            AOperand::Fused(f) => Some((f.rows, f.cols)),
         };
         let dims_b = |b: &BOperand| match b {
             BOperand::Inline(m) => Some((m.rows, m.cols)),
             BOperand::Registered(h) => shared.operands.dims(*h),
+            BOperand::Fused(f) => Some((f.rows, f.cols)),
         };
         let predict = |run: Option<RunConfig>, m: usize, k: usize, n: usize| -> f64 {
             let Some(run) = run.or(shared.cfg.default_run) else { return 0.0 };
@@ -1470,6 +1507,12 @@ fn plan_one(shared: &Shared, s: Admitted, shard: usize) -> Option<Planned> {
                 .operands
                 .dims_a(*h)
                 .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?,
+            AOperand::Fused(f) => {
+                // An out-of-window fused operand fails its job here,
+                // before any panels are packed from clipped views.
+                f.validate()?;
+                (f.rows, f.cols)
+            }
         };
         let (b_rows, b_cols) = match &s.job.b {
             BOperand::Inline(m) => (m.rows, m.cols),
@@ -1477,6 +1520,10 @@ fn plan_one(shared: &Shared, s: Admitted, shard: usize) -> Option<Planned> {
                 .operands
                 .dims(*h)
                 .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?,
+            BOperand::Fused(f) => {
+                f.validate()?;
+                (f.rows, f.cols)
+            }
         };
         anyhow::ensure!(a_cols == b_rows, "contraction mismatch");
         // BlockPlan::new panics on zero dims; in a server that would
@@ -1637,9 +1684,9 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>, shard: usize) {
         id: u64,
         run: RunConfig,
         plan: BlockPlan,
-        a: Arc<Matrix>,
+        a: ExecOperand,
         packed_a: Option<Arc<PackedA>>,
-        b: Arc<Matrix>,
+        b: ExecOperand,
         packed_b: Option<Arc<PackedB>>,
         reply: Reply,
         accepted_at: Instant,
@@ -1665,7 +1712,7 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>, shard: usize) {
                     } else {
                         None
                     };
-                    (m, packed)
+                    (ExecOperand::Full(m), packed)
                 }
                 BOperand::Registered(h) => {
                     let m = shared
@@ -1677,7 +1724,24 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>, shard: usize) {
                     } else {
                         None
                     };
-                    (m, packed)
+                    (ExecOperand::Full(m), packed)
+                }
+                BOperand::Fused(f) => {
+                    if inprocess {
+                        // The combine happens inside the pack pass; the
+                        // operand never exists as a matrix.
+                        shared.metrics.add_b_panel_packs(1);
+                        shared.metrics.add_fused_packs(1);
+                        let packed = Arc::new(f.pack_b(run.sj));
+                        (
+                            ExecOperand::Packed { rows: f.rows, cols: f.cols },
+                            Some(packed),
+                        )
+                    } else {
+                        // Channel-fed backends gather per task and need
+                        // the full operand — materialize once here.
+                        (ExecOperand::Full(Arc::new(f.materialize())), None)
+                    }
                 }
             };
             Ok((a, packed_a, b, packed_b))
@@ -1744,13 +1808,15 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>, shard: usize) {
 /// Resolve one A operand for execution under block size `si`: an inline
 /// matrix wraps and (on in-process engines) packs privately; a
 /// registered activation borrows the registry's `Arc<Matrix>` and
-/// resolves its cached `Arc<PackedA>` — a registry hit packs nothing.
+/// resolves its cached `Arc<PackedA>` — a registry hit packs nothing;
+/// a fused operand packs its combination straight from its parent
+/// views (no materialized matrix on in-process engines).
 fn resolve_a_operand(
     shared: &Shared,
     a: AOperand,
     si: usize,
     inprocess: bool,
-) -> anyhow::Result<(Arc<Matrix>, Option<Arc<PackedA>>)> {
+) -> anyhow::Result<(ExecOperand, Option<Arc<PackedA>>)> {
     match a {
         AOperand::Inline(m) => {
             let m = Arc::new(m);
@@ -1760,7 +1826,7 @@ fn resolve_a_operand(
             } else {
                 None
             };
-            Ok((m, packed))
+            Ok((ExecOperand::Full(m), packed))
         }
         AOperand::Registered(h) => {
             let m = shared
@@ -1769,7 +1835,17 @@ fn resolve_a_operand(
                 .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?;
             let packed =
                 if inprocess { Some(shared.operands.resolve_pack_a(h, si)?) } else { None };
-            Ok((m, packed))
+            Ok((ExecOperand::Full(m), packed))
+        }
+        AOperand::Fused(f) => {
+            if inprocess {
+                shared.metrics.add_a_panel_packs(1);
+                shared.metrics.add_fused_packs(1);
+                let packed = Arc::new(f.pack_a(si));
+                Ok((ExecOperand::Packed { rows: f.rows, cols: f.cols }, Some(packed)))
+            } else {
+                Ok((ExecOperand::Full(Arc::new(f.materialize())), None))
+            }
         }
     }
 }
@@ -1794,8 +1870,8 @@ fn wait_for_inflight_slot(shared: &Shared) {
 fn build_sub(
     id: u64,
     run: RunConfig,
-    a: Arc<Matrix>,
-    b: Arc<Matrix>,
+    a: ExecOperand,
+    b: ExecOperand,
     panels: Option<PackedPanels>,
     num_tasks: usize,
     reply: Reply,
@@ -1806,7 +1882,7 @@ fn build_sub(
     uid: u64,
     predicted_secs: f64,
 ) -> SubJob {
-    let mut c = Matrix::zeros(a.rows, b.cols);
+    let mut c = Matrix::zeros(a.rows(), b.cols());
     let raw = RawOut { ptr: c.data.as_mut_ptr(), rows: c.rows, cols: c.cols };
     SubJob {
         id,
@@ -2053,6 +2129,13 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch, shard: usize) {
                 return;
             }
         },
+        BOperand::Fused(_) => {
+            // A fused B exists only as a combination recipe; sharing it
+            // across subs would re-form it per pack. Callers materialize
+            // or submit per-job instead.
+            reject_all(subs, "fused operands are not supported as a shared B".into());
+            return;
+        }
     };
     if b.rows == 0 || b.cols == 0 {
         reject_all(subs, format!("degenerate B {}x{}", b.rows, b.cols));
@@ -2070,6 +2153,10 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch, shard: usize) {
                 .operands
                 .dims_a(*h)
                 .ok_or_else(|| anyhow::anyhow!("sub-job {}: {h} is not registered", s.id)),
+            AOperand::Fused(_) => Err(anyhow::anyhow!(
+                "sub-job {}: fused operands are not supported in shared-B batches",
+                s.id
+            )),
         };
         match dims {
             Ok((rows, cols)) if cols == b.rows && rows > 0 => accepted.push((s, (rows, cols))),
@@ -2185,7 +2272,7 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch, shard: usize) {
             s.id,
             run,
             a,
-            b.clone(),
+            ExecOperand::Full(b.clone()),
             panels,
             plan.num_tasks(),
             s.reply,
@@ -2334,7 +2421,13 @@ fn execute_subtask(shared: &Shared, job: &ActiveJob, tag: u64, st: SubTask, w: u
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         shared
             .engine
-            .task_product_into(sub.panels.as_ref(), &sub.a, &sub.b, &st.task, &writer)
+            .task_product_into(
+                sub.panels.as_ref(),
+                sub.a.full().map(|a| &**a),
+                sub.b.full().map(|b| &**b),
+                &st.task,
+                &writer,
+            )
     }));
     match outcome {
         Ok(Ok(zero_copy)) => {
@@ -2390,7 +2483,7 @@ fn finalize_sub(shared: &Shared, sub: &SubJob) {
     let result = match (err, c) {
         (None, Some(c)) => shared
             .accelerator
-            .simulate(&sub.run, sub.a.rows, sub.a.cols, sub.b.cols, &SimOptions::default())
+            .simulate(&sub.run, sub.a.rows(), sub.a.cols(), sub.b.cols(), &SimOptions::default())
             .map(|sim| {
                 shared.metrics.job_done(host_latency_secs, sim.total_secs);
                 let missed = sub.deadline.map(|d| Instant::now() > d);

@@ -129,6 +129,10 @@ pub enum SpanKind {
     /// One attention-block phase (`detail`: 0 = Q/K/V projections,
     /// 1 = QKᵀ + softmax + AV, 2 = O projection).
     AttentionPhase = 3,
+    /// One Strassen node's C-quadrant recombination (`detail` = level)
+    /// — the host-side add/sub work between leaf groups, so Perfetto
+    /// shows combine-vs-leaf time directly.
+    StrassenCombine = 4,
 }
 
 impl SpanKind {
@@ -138,6 +142,7 @@ impl SpanKind {
             1 => "strassen-level",
             2 => "cnn-layer",
             3 => "attention-phase",
+            4 => "strassen-combine",
             _ => "span",
         }
     }

@@ -35,6 +35,7 @@ pub mod view;
 
 pub use matrix::Matrix;
 pub use microkernel::{micro_kernel, task_product, task_product_into, MR, NR};
+pub use ops::CombineOp;
 pub use pack::{PackedA, PackedB, PackedPanels};
 pub use view::{DisjointBlocks, MatrixView, MatrixViewMut};
 

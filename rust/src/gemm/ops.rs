@@ -16,6 +16,29 @@
 
 use super::view::{MatrixView, MatrixViewMut};
 
+/// The two element-wise combine primitives Strassen's operand formation
+/// is built from. A first-class value so a combination can be *carried*
+/// (into the fused packers, [`crate::gemm::PackedA::from_sum_of_views`])
+/// instead of eagerly applied into a materialized temp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CombineOp {
+    Add,
+    Sub,
+}
+
+impl CombineOp {
+    /// Apply the op to one element pair — a single f32 rounding, exactly
+    /// what [`add_into`] / [`sub_into`] perform per element, so fused
+    /// and materialized formation are bit-identical.
+    #[inline]
+    pub fn apply(self, x: f32, y: f32) -> f32 {
+        match self {
+            CombineOp::Add => x + y,
+            CombineOp::Sub => x - y,
+        }
+    }
+}
+
 /// `out = x + y`, element-wise. All three shapes must match.
 pub fn add_into(x: MatrixView<'_>, y: MatrixView<'_>, out: &mut MatrixViewMut<'_>) {
     assert_shapes(x.rows(), x.cols(), y.rows(), y.cols(), out.rows(), out.cols());
@@ -143,6 +166,20 @@ mod tests {
         let y = Matrix::zeros(3, 2);
         let mut out = Matrix::zeros(2, 3);
         add_into(x.view(), y.view(), &mut out.view_mut());
+    }
+
+    #[test]
+    fn combine_op_matches_kernels() {
+        let x = Matrix::random(4, 6, 7);
+        let y = Matrix::random(4, 6, 8);
+        let mut sum = Matrix::zeros(4, 6);
+        let mut diff = Matrix::zeros(4, 6);
+        add_into(x.view(), y.view(), &mut sum.view_mut());
+        sub_into(x.view(), y.view(), &mut diff.view_mut());
+        for i in 0..24 {
+            assert_eq!(CombineOp::Add.apply(x.data[i], y.data[i]), sum.data[i]);
+            assert_eq!(CombineOp::Sub.apply(x.data[i], y.data[i]), diff.data[i]);
+        }
     }
 
     #[test]

@@ -39,6 +39,7 @@ use std::sync::Arc;
 use crate::blocking::BlockPlan;
 
 use super::microkernel::{MR, NR};
+use super::ops::CombineOp;
 use super::view::MatrixView;
 
 /// The packed row-panels of one A operand (`M x K` at block size `si`):
@@ -65,6 +66,40 @@ impl PackedA {
             let row0 = bi * si;
             let rows = si.min(m - row0);
             panels.push(pack_a_panel(&a, row0, rows, k));
+            rows_eff.push(rows);
+        }
+        Self { k, panels, rows: rows_eff }
+    }
+
+    /// Pack `x op y` (element-wise, or plain `x` when `y` is `None`)
+    /// without ever materializing the combined operand: each packed slot
+    /// is written as `op.apply(x[i], y[i])` — one f32 rounding, exactly
+    /// what a materialize-then-pack pipeline produces, so the result is
+    /// bit-identical to `PackedA::pack(&materialized, si)`. This is the
+    /// Strassen fused combine-packing path: a leaf's `A11 + A22` is
+    /// formed *inside* the pack pass, saving one full temp write + read
+    /// per operand.
+    pub fn from_sum_of_views(
+        x: MatrixView<'_>,
+        y: Option<(MatrixView<'_>, CombineOp)>,
+        si: usize,
+    ) -> Self {
+        assert!(si > 0, "degenerate block size");
+        if let Some((yv, _)) = &y {
+            assert_eq!(
+                (x.rows(), x.cols()),
+                (yv.rows(), yv.cols()),
+                "fused operand shape mismatch"
+            );
+        }
+        let (m, k) = (x.rows(), x.cols());
+        let blocks = m.div_ceil(si);
+        let mut panels = Vec::with_capacity(blocks);
+        let mut rows_eff = Vec::with_capacity(blocks);
+        for bi in 0..blocks {
+            let row0 = bi * si;
+            let rows = si.min(m - row0);
+            panels.push(pack_a_panel_fused(&x, y.as_ref(), row0, rows, k));
             rows_eff.push(rows);
         }
         Self { k, panels, rows: rows_eff }
@@ -122,6 +157,36 @@ impl PackedB {
             let col0 = bj * sj;
             let cols = sj.min(n - col0);
             panels.push(pack_b_panel(&b, col0, cols, k));
+            cols_eff.push(cols);
+        }
+        Self { k, panels, cols: cols_eff }
+    }
+
+    /// Pack `x op y` (element-wise, or plain `x` when `y` is `None`)
+    /// without materializing the combined operand — the B-side twin of
+    /// [`PackedA::from_sum_of_views`], bit-identical to
+    /// materialize-then-`pack`.
+    pub fn from_sum_of_views(
+        x: MatrixView<'_>,
+        y: Option<(MatrixView<'_>, CombineOp)>,
+        sj: usize,
+    ) -> Self {
+        assert!(sj > 0, "degenerate block size");
+        if let Some((yv, _)) = &y {
+            assert_eq!(
+                (x.rows(), x.cols()),
+                (yv.rows(), yv.cols()),
+                "fused operand shape mismatch"
+            );
+        }
+        let (k, n) = (x.rows(), x.cols());
+        let blocks = n.div_ceil(sj);
+        let mut panels = Vec::with_capacity(blocks);
+        let mut cols_eff = Vec::with_capacity(blocks);
+        for bj in 0..blocks {
+            let col0 = bj * sj;
+            let cols = sj.min(n - col0);
+            panels.push(pack_b_panel_fused(&x, y.as_ref(), col0, cols, k));
             cols_eff.push(cols);
         }
         Self { k, panels, cols: cols_eff }
@@ -228,6 +293,73 @@ fn pack_a_panel(a: &MatrixView<'_>, row0: usize, rows: usize, k: usize) -> Vec<f
             let src = a.row(row0 + s * MR + r);
             for (p, &v) in src.iter().enumerate() {
                 out[base + p * MR + r] = v;
+            }
+        }
+    }
+    out
+}
+
+/// [`pack_a_panel`] with the element source replaced by `x op y`; the
+/// slot arithmetic is identical so the layout cannot drift from the
+/// plain packer's.
+fn pack_a_panel_fused(
+    x: &MatrixView<'_>,
+    y: Option<&(MatrixView<'_>, CombineOp)>,
+    row0: usize,
+    rows: usize,
+    k: usize,
+) -> Vec<f32> {
+    let strips = rows.div_ceil(MR);
+    let mut out = vec![0.0f32; strips * k * MR];
+    for s in 0..strips {
+        let base = s * k * MR;
+        for r in 0..MR.min(rows - s * MR) {
+            let row = row0 + s * MR + r;
+            let src = x.row(row);
+            match y {
+                None => {
+                    for (p, &v) in src.iter().enumerate() {
+                        out[base + p * MR + r] = v;
+                    }
+                }
+                Some((yv, op)) => {
+                    let ysrc = yv.row(row);
+                    for (p, (&xv, &yv)) in src.iter().zip(ysrc).enumerate() {
+                        out[base + p * MR + r] = op.apply(xv, yv);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// [`pack_b_panel`] with the element source replaced by `x op y`. The
+/// combined variant goes element-wise where the plain packer uses
+/// `copy_from_slice`, but writes the same slots.
+fn pack_b_panel_fused(
+    x: &MatrixView<'_>,
+    y: Option<&(MatrixView<'_>, CombineOp)>,
+    col0: usize,
+    cols: usize,
+    k: usize,
+) -> Vec<f32> {
+    let strips = cols.div_ceil(NR);
+    let mut out = vec![0.0f32; strips * k * NR];
+    for s in 0..strips {
+        let base = s * k * NR;
+        let c0 = col0 + s * NR;
+        let width = NR.min(cols - s * NR);
+        for p in 0..k {
+            let src = &x.row(p)[c0..c0 + width];
+            match y {
+                None => out[base + p * NR..base + p * NR + width].copy_from_slice(src),
+                Some((yv, op)) => {
+                    let ysrc = &yv.row(p)[c0..c0 + width];
+                    for (c, (&xv, &yv)) in src.iter().zip(ysrc).enumerate() {
+                        out[base + p * NR + c] = op.apply(xv, yv);
+                    }
+                }
             }
         }
     }
@@ -352,6 +484,69 @@ mod tests {
         let a = Arc::new(PackedA::pack(Matrix::zeros(4, 5).view(), 4));
         let b = Arc::new(PackedB::pack(Matrix::zeros(6, 4).view(), 4));
         PackedPanels::from_parts(a, b);
+    }
+
+    #[test]
+    fn fused_pack_equals_materialize_then_pack() {
+        // The fused-combine guarantee Strassen's leaf packing rests on:
+        // packing `x op y` straight from two views is bit-identical to
+        // materializing the combination first and packing that.
+        for op in [CombineOp::Add, CombineOp::Sub] {
+            for (rows, cols, s) in [(13usize, 9usize, 5usize), (16, 16, 16), (7, 21, 4)] {
+                let x = Matrix::random(rows, cols, 31);
+                let y = Matrix::random(rows, cols, 32);
+                let mut mat = Matrix::zeros(rows, cols);
+                for i in 0..rows * cols {
+                    mat.data[i] = op.apply(x.data[i], y.data[i]);
+                }
+                let fused_a = PackedA::from_sum_of_views(x.view(), Some((y.view(), op)), s);
+                let plain_a = PackedA::pack(mat.view(), s);
+                assert_eq!(fused_a.panels, plain_a.panels, "A {op:?} {rows}x{cols}/{s}");
+                assert_eq!(fused_a.rows, plain_a.rows);
+                let fused_b = PackedB::from_sum_of_views(x.view(), Some((y.view(), op)), s);
+                let plain_b = PackedB::pack(mat.view(), s);
+                assert_eq!(fused_b.panels, plain_b.panels, "B {op:?} {rows}x{cols}/{s}");
+                assert_eq!(fused_b.cols, plain_b.cols);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_pack_single_view_equals_plain_pack() {
+        let x = Matrix::random(11, 14, 33);
+        let fa = PackedA::from_sum_of_views(x.view(), None, 6);
+        let pa = PackedA::pack(x.view(), 6);
+        assert_eq!(fa.panels, pa.panels);
+        let fb = PackedB::from_sum_of_views(x.view(), None, 6);
+        let pb = PackedB::pack(x.view(), 6);
+        assert_eq!(fb.panels, pb.panels);
+    }
+
+    #[test]
+    fn fused_pack_from_quadrant_views() {
+        // Strassen's actual call shape: both views are strided quadrant
+        // windows of one parent.
+        let parent = Matrix::random(10, 12, 34);
+        let v = parent.view();
+        let q11 = v.block(0, 0, 5, 6);
+        let q22 = v.block(5, 6, 5, 6);
+        let mut sum = Matrix::zeros(5, 6);
+        crate::gemm::ops::add_into(q11, q22, &mut sum.view_mut());
+        let fused = PackedA::from_sum_of_views(
+            v.block(0, 0, 5, 6),
+            Some((v.block(5, 6, 5, 6), CombineOp::Add)),
+            4,
+        );
+        let plain = PackedA::pack(sum.view(), 4);
+        assert_eq!(fused.panels, plain.panels);
+    }
+
+    #[test]
+    #[should_panic(expected = "fused operand shape mismatch")]
+    fn fused_pack_rejects_shape_mismatch() {
+        let x = Matrix::zeros(4, 4);
+        let y = Matrix::zeros(4, 5);
+        PackedA::from_sum_of_views(x.view(), Some((y.view(), CombineOp::Add)), 4);
     }
 
     #[test]

@@ -69,13 +69,21 @@
 //!   so repeated runs over one batch pack nothing;
 //! * [`strassen`] — the algorithmic layer above the serving runtime:
 //!   recursive Strassen decomposition (7 sub-products per quadrant
-//!   split instead of 8) whose per-level fan-out is submitted to the
+//!   split instead of 8) whose leaf fan-out is submitted to the
 //!   `JobServer` as a job group and load-balanced by cross-job
-//!   stealing, with the recursion cutoff chosen by the analytical
-//!   model (`analytical::strassen_crossover`) and temporaries recycled
-//!   through a scratch arena; `strassen::multiply_batched` runs a
-//!   whole shared-B batch through one recursion, materializing and
-//!   packing each B-side quadrant combination once for the batch.
+//!   stealing; the 7-product algebra is table-driven
+//!   (`strassen::StrassenAlgo` — default Winograd schedule at 15
+//!   combine ops per node vs the classic 18), leaf operand
+//!   combinations are fused into the packer (`FusedOperand`: the
+//!   panel packer streams `X ± Y` straight from parent quadrant views,
+//!   no materialized temps), sibling sub-trees above the leaf walk in
+//!   parallel on scoped threads (bit-identical to the sequential
+//!   walk), the recursion cutoff is chosen by the analytical model
+//!   (`analytical::strassen_crossover_with`, combine term priced per
+//!   schedule and fusion mode) and temporaries recycle through a
+//!   scratch arena; `strassen::multiply_batched` runs a whole
+//!   shared-B batch through one recursion, materializing and packing
+//!   each B-side quadrant combination once for the batch.
 
 pub mod accelerator;
 pub mod analytical;

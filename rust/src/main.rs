@@ -35,11 +35,19 @@ COMMANDS:
   dse --m M --k K --n N             design-space exploration
   run --m M --k K --n N [--np NP --si SI] [--golden] [--artifacts DIR]
                                     run one GEMM end to end
-  strassen --m M --k K --n N [--depth D] [--np NP --si SI]
+  strassen --m M --k K --n N [--depth D] [--algo winograd|classic]
+           [--sequential] [--np NP --si SI]
            [--workers W] [--check] [--golden] [--artifacts DIR]
                                     Strassen-decomposed GEMM through the
                                     job server (depth: forced levels;
-                                    default: model-chosen cutoff)
+                                    default: model-chosen cutoff).
+                                    --algo picks the combine schedule
+                                    (default winograd: 15 combine ops
+                                    per node vs classic's 18); the
+                                    report prints both schedules' op
+                                    counts and the temps the fused leaf
+                                    packing avoided. --sequential
+                                    disables the parallel sibling walk
   batch --file JOBS [--shared-b | --register-weights [--repeat R]]
         [--workers W] [--golden] [--artifacts DIR]
                                     serve a job file (lines: M K N [NP SI]);
@@ -92,7 +100,8 @@ struct Args {
     flags: HashMap<String, String>,
 }
 
-const BOOL_FLAGS: &[&str] = &["golden", "check", "shared-b", "register-weights", "json"];
+const BOOL_FLAGS: &[&str] =
+    &["golden", "check", "shared-b", "register-weights", "json", "sequential"];
 
 fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
     let mut cmd = None;
@@ -339,7 +348,7 @@ fn cmd_run(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
 /// way `dse` prints design points.
 fn cmd_strassen(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
     use multi_array::coordinator::{JobServer, ServerConfig};
-    use multi_array::strassen::{self, Cutoff, StrassenConfig, DIRECT_SPLIT_FANOUT};
+    use multi_array::strassen::{self, Cutoff, StrassenAlgo, StrassenConfig, DIRECT_SPLIT_FANOUT};
 
     let (m, k, n) = (
         args.require_usize("m")?,
@@ -364,6 +373,12 @@ fn cmd_strassen(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
         Some(d) => Cutoff::Depth(d),
         None => Cutoff::Model,
     };
+    let algo = match args.flags.get("algo").map(String::as_str) {
+        None | Some("winograd") => StrassenAlgo::Winograd,
+        Some("classic") => StrassenAlgo::Classic,
+        Some(other) => anyhow::bail!("--algo must be 'winograd' or 'classic', got {other:?}"),
+    };
+    let parallel = !args.flags.contains_key("sequential");
     let a = Matrix::random(m, k, 42);
     let b = Matrix::random(k, n, 43);
     let want = if args.flags.contains_key("check") {
@@ -373,7 +388,7 @@ fn cmd_strassen(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
     };
 
     let t0 = std::time::Instant::now();
-    let r = strassen::multiply(&srv, &a, &b, &StrassenConfig { cutoff, run })?;
+    let r = strassen::multiply(&srv, &a, &b, &StrassenConfig { cutoff, run, algo, parallel })?;
     let wall = t0.elapsed().as_secs_f64();
 
     // Model runs carry their plan in the report; forced-depth runs skip
@@ -412,10 +427,27 @@ fn cmd_strassen(hw: &HardwareConfig, args: &Args) -> anyhow::Result<()> {
         "executed depth: {} ({} leaf GEMMs; padded to {}x{}x{})",
         r.depth, r.leaf_gemms, r.padded.0, r.padded.1, r.padded.2
     );
+    println!(
+        "schedule: {} ({} tree walk)",
+        r.algo.name(),
+        if parallel { "parallel" } else { "sequential" }
+    );
     for lvl in 0..r.depth {
         println!(
             "  level {lvl}: {} node(s), measured fan-out {} sub-multiplies (direct split: {})",
             r.level_nodes[lvl], r.fanout(lvl), DIRECT_SPLIT_FANOUT
+        );
+    }
+    if r.depth > 0 {
+        println!(
+            "combine: {} ops over {} nodes ({:.1}/node; winograd schedules 15, classic 18)",
+            r.combine.combine_ops,
+            r.combine.nodes,
+            r.combine.ops_per_node()
+        );
+        println!(
+            "temps: {} materialized, {} avoided by fused leaf packing",
+            r.combine.temps_materialized, r.combine.temps_avoided
         );
     }
     println!(

@@ -82,6 +82,27 @@ impl ScratchArena {
     pub fn stats(&self) -> ArenaStats {
         self.stats
     }
+
+    /// Zero the per-run counters while keeping the parked buffers (and
+    /// the `freelist_bytes` gauge that describes them). A long-lived
+    /// arena carried across `multiply` calls otherwise reports the sum
+    /// of every run it ever served instead of the run at hand.
+    pub fn reset_stats(&mut self) {
+        let parked = self.stats.freelist_bytes;
+        self.stats = ArenaStats { freelist_bytes: parked, ..ArenaStats::default() };
+    }
+
+    /// Merge another arena into this one: its parked buffers join the
+    /// free list and its counters fold into ours. Used by the parallel
+    /// recursion walk, where each sub-tree runs on a private arena that
+    /// the parent absorbs at the join.
+    pub fn absorb(&mut self, other: ScratchArena) {
+        self.stats.fresh_allocs += other.stats.fresh_allocs;
+        self.stats.reuses += other.stats.reuses;
+        self.stats.fresh_bytes += other.stats.fresh_bytes;
+        self.stats.freelist_bytes += other.stats.freelist_bytes;
+        self.free.extend(other.free);
+    }
 }
 
 #[cfg(test)]
@@ -128,6 +149,43 @@ mod tests {
         assert_eq!(s.reuses, 49);
         assert_eq!(s.fresh_bytes, 4 * 64);
         assert_eq!(s.freelist_bytes, 4 * 64);
+    }
+
+    #[test]
+    fn reset_stats_keeps_freelist_and_its_gauge() {
+        let mut arena = ScratchArena::new();
+        let m = arena.take(4, 4);
+        arena.put(m);
+        arena.reset_stats();
+        let s = arena.stats();
+        assert_eq!(s.fresh_allocs, 0);
+        assert_eq!(s.reuses, 0);
+        assert_eq!(s.fresh_bytes, 0);
+        assert_eq!(s.freelist_bytes, 4 * 16, "parked buffers survive the reset");
+        // The parked buffer still serves the next request.
+        let again = arena.take(4, 4);
+        assert_eq!(again, Matrix::zeros(4, 4));
+        assert_eq!(arena.stats().reuses, 1);
+        assert_eq!(arena.stats().fresh_allocs, 0);
+    }
+
+    #[test]
+    fn absorb_merges_freelist_and_counters() {
+        let mut parent = ScratchArena::new();
+        let pm = parent.take(2, 3);
+        parent.put(pm);
+        let mut child = ScratchArena::new();
+        let cm = child.take(5, 5);
+        child.put(cm);
+        parent.absorb(child);
+        let s = parent.stats();
+        assert_eq!(s.fresh_allocs, 2);
+        assert_eq!(s.fresh_bytes, 4 * (6 + 25));
+        assert_eq!(s.freelist_bytes, 4 * (6 + 25));
+        // The absorbed buffer is reusable from the parent.
+        let got = parent.take(5, 5);
+        assert_eq!(got.data.capacity(), 25);
+        assert_eq!(parent.stats().reuses, 1);
     }
 
     #[test]

@@ -10,26 +10,43 @@
 //!   quadrants, padding odd dimensions once up front with the Section-IV
 //!   zero-pad machinery ([`crate::gemm::Matrix::pad_to`] to a multiple
 //!   of `2^depth`, so every level halves exactly);
-//! * the 7 operand combinations per level are formed by the
+//! * two table-driven 7-product schedules sit behind
+//!   [`StrassenAlgo`]: the classic form (18 combine operations per
+//!   node) and the default **Winograd form** (15 — 4 chained sums per
+//!   operand side plus a 7-op C-side fold through two shared temps),
+//!   which cuts the O(n²) combine traffic by roughly 20%;
+//! * above the leaf level operand combinations are formed by the
 //!   row-streamed add/sub kernels of [`crate::gemm::ops`] reading
-//!   quadrants through borrowed [`crate::gemm::MatrixView`]s;
-//! * the 7 sub-products of a level are submitted to the
+//!   quadrants through borrowed [`crate::gemm::MatrixView`]s; **at the
+//!   leaf level they are not materialized at all** — each goes down as
+//!   a [`crate::coordinator::FusedOperand`] and the packer streams
+//!   `X op Y` straight from the parent quadrants into panel layout;
+//! * the 7 sub-products of a leaf are submitted to the
 //!   [`crate::coordinator::JobServer`] as **one group**
 //!   ([`crate::coordinator::Submission::group`]) — cross-job work
 //!   stealing spreads the 7-way fan-out over the persistent pool, the
 //!   serving-runtime twin of the paper's inter-array WQM balancing;
+//! * above the leaf the 7 sibling sub-trees walk **in parallel** on
+//!   scoped threads by default ([`StrassenConfig::parallel`]), each
+//!   with a private arena the parent absorbs at the join —
+//!   bit-identical to the sequential walk, but the server sees the
+//!   whole tree's leaf groups in flight at once;
 //! * recursion depth comes from the analytical model:
-//!   [`crate::analytical::strassen_crossover`] recurses only while
-//!   `7·T(n/2) + combine` beats the best direct multi-array time
-//!   (override with [`Cutoff::Depth`] to force levels);
+//!   [`crate::analytical::strassen_crossover_with`] recurses only while
+//!   `7·T(n/2) + combine` (priced per schedule and per fusion mode)
+//!   beats the best direct multi-array time (override with
+//!   [`Cutoff::Depth`] to force levels);
 //! * per-level temporaries cycle through a reusable [`ScratchArena`],
 //!   so peak allocation stays bounded across recursion levels instead
 //!   of growing with every node.
 //!
 //! [`multiply`] returns a [`StrassenReport`]: the result matrix plus
-//! the executed depth, the measured per-level fan-out (7, vs 8 for a
-//! direct quadrant split), leaf-GEMM count, the model's crossover
-//! trace (on model-cutoff runs), and arena statistics.
+//! the executed depth and schedule, the measured per-level fan-out (7,
+//! vs 8 for a direct quadrant split), leaf-GEMM count, the
+//! [`CombineStats`] counters behind the Winograd/fusion savings
+//! (combine ops per node, temporaries materialized and avoided), the
+//! model's crossover trace (on model-cutoff runs), and arena
+//! statistics.
 //!
 //! [`multiply_batched`] extends the planner to the shared-operand
 //! workload (one B, many A — the im2col inference stream): the 7-way
@@ -54,9 +71,11 @@
 mod arena;
 mod planner;
 
+pub use crate::analytical::StrassenAlgo;
 pub use arena::{ArenaStats, ScratchArena};
 pub use planner::{
     multiply, multiply_batched, multiply_batched_bi_registered, multiply_batched_registered,
-    register_activations, register_weights, BatchedStrassenReport, Cutoff, StrassenActivations,
-    StrassenConfig, StrassenReport, StrassenWeights, DIRECT_SPLIT_FANOUT,
+    register_activations, register_activations_with, register_weights, register_weights_with,
+    BatchedStrassenReport, CombineStats, Cutoff, StrassenActivations, StrassenConfig,
+    StrassenReport, StrassenWeights, DIRECT_SPLIT_FANOUT,
 };

@@ -1,31 +1,48 @@
 //! The recursive Strassen planner: quadrant split, 7-way sub-product
 //! fan-out through the [`JobServer`], combine from the scratch arena.
 //!
-//! One recursion node computes `C = A x B` (all dimensions even, kept
-//! divisible by `2^depth` by the top-level padding) as:
+//! Two 7-multiplication schedules are table-driven behind
+//! [`StrassenAlgo`]. The default is the Winograd form, which reaches the
+//! same 7 products with 15 combine operations per node instead of the
+//! classic form's 18 (4 A-side + 4 B-side + 7 C-side vs 5 + 5 + 8):
 //!
 //! ```text
-//! M1 = (A11 + A22)(B11 + B22)    C11 = M1 + M4 - M5 + M7
-//! M2 = (A21 + A22) B11           C12 = M3 + M5
-//! M3 =  A11 (B12 - B22)          C21 = M2 + M4
-//! M4 =  A22 (B21 - B11)          C22 = M1 - M2 + M3 + M6
-//! M5 = (A11 + A12) B22
-//! M6 = (A21 - A11)(B11 + B12)
-//! M7 = (A12 - A22)(B21 + B22)
+//! S1 = A21 + A22   S5 = B12 - B11    M1 = S2*S6   M5 = S1*S5
+//! S2 = S1  - A11   S6 = B22 - S5     M2 = A11*B11 M6 = S4*B22
+//! S3 = A11 - A21   S7 = B22 - B12    M3 = A12*B21 M7 = A22*S8
+//! S4 = A12 - S2    S8 = S6  - B21    M4 = S3*S7
+//!
+//! t1 = M1 + M2     C11 = M2 + M3     C21 = t2 - M7
+//! t2 = t1 + M4     C12 = t1 + M5 + M6    C22 = t2 + M5
 //! ```
 //!
-//! 7 sub-products per node instead of the direct split's 8. At the leaf
-//! level all 7 are submitted to the server as one job group, so the
-//! pool's cross-job stealing load-balances the fan-out; above the leaf
-//! the planner recurses depth-first. Temporaries and results cycle
-//! through the node-local [`ScratchArena`].
+//! At the leaf level the 7 operand pairs are not materialized at all:
+//! each is handed to the server as a fused operand
+//! ([`FusedOperand`]), so the packer streams `X op Y` straight from the
+//! parent quadrants into panel layout — one read of each source, no
+//! intermediate write/read round trip. Only schedule steps that later
+//! steps depend on (S1/S2 and S5/S6 under Winograd, nothing under
+//! classic) are materialized. All 7 leaf jobs go down as one job group,
+//! so the pool's cross-job stealing load-balances the fan-out.
+//!
+//! Above the leaf level the planner recurses; with
+//! [`StrassenConfig::parallel`] (the default) the 7 sibling sub-trees
+//! walk concurrently on scoped threads, each with a private
+//! [`ScratchArena`] the parent absorbs at the join — the server sees
+//! the whole tree's leaf groups in flight instead of one sub-tree at a
+//! time. The walk is bit-identical to the sequential one: join order is
+//! fixed, arena buffers are zeroed, and job IDs carry no numerics.
 
-use crate::analytical::{strassen_crossover, CrossoverPlan};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::analytical::{strassen_crossover_with, CrossoverPlan, StrassenAlgo};
 use crate::config::RunConfig;
 use crate::coordinator::{
-    ActivationHandle, AOperand, GemmJob, JobServer, SpanKind, Submission, WeightHandle,
+    ActivationHandle, AOperand, BOperand, FusedOperand, FusedSource, GemmJob, JobServer,
+    SpanKind, Submission, WeightHandle,
 };
-use crate::gemm::{ops, Matrix, MatrixView};
+use crate::gemm::{ops, CombineOp, Matrix, MatrixView};
 
 use super::arena::{ArenaStats, ScratchArena};
 
@@ -36,7 +53,7 @@ pub const DIRECT_SPLIT_FANOUT: u64 = 8;
 /// How the recursion depth is chosen.
 #[derive(Debug, Clone, Copy)]
 pub enum Cutoff {
-    /// Ask [`strassen_crossover`]: recurse while the model says
+    /// Ask the analytical crossover model: recurse while it says
     /// `7·T(n/2) + combine` beats the direct multi-array time.
     Model,
     /// Force exactly this many levels (clamped so no padded leaf
@@ -52,11 +69,59 @@ pub struct StrassenConfig {
     /// Pinned run config for the leaf GEMMs; `None` lets the server
     /// plan each leaf (server default or per-job DSE).
     pub run: Option<RunConfig>,
+    /// Which 7-product schedule to run (Winograd by default: 15 combine
+    /// ops per node vs classic's 18).
+    pub algo: StrassenAlgo,
+    /// Walk sibling sub-trees above the leaf level on concurrent
+    /// threads (bit-identical to the sequential walk).
+    pub parallel: bool,
 }
 
 impl Default for StrassenConfig {
     fn default() -> Self {
-        Self { cutoff: Cutoff::Model, run: None }
+        Self {
+            cutoff: Cutoff::Model,
+            run: None,
+            algo: StrassenAlgo::default(),
+            parallel: true,
+        }
+    }
+}
+
+/// Combine-phase accounting, the numbers behind the Winograd form's
+/// ~20% operand-traffic cut: how many add/sub/copy passes ran and how
+/// many temporaries were (and were not) written to memory.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CombineStats {
+    /// Recursion nodes that contributed to these counters.
+    pub nodes: u64,
+    /// Logical combine operations executed: operand-side add/subs
+    /// (whether materialized or fused into the packer) plus C-side
+    /// quadrant folds. 15 per node under Winograd, 18 under classic.
+    pub combine_ops: u64,
+    /// Temporaries actually written: materialized schedule steps,
+    /// quadrant copies, and C-side `t1`/`t2` under Winograd.
+    pub temps_materialized: u64,
+    /// Leaf operand temporaries *avoided* by fusing formation into the
+    /// packer (out of the 14 a fully-materialized node would write).
+    pub temps_avoided: u64,
+}
+
+impl CombineStats {
+    pub fn merge(&mut self, o: CombineStats) {
+        self.nodes += o.nodes;
+        self.combine_ops += o.combine_ops;
+        self.temps_materialized += o.temps_materialized;
+        self.temps_avoided += o.temps_avoided;
+    }
+
+    /// Average combine operations per recursion node — 15.0 for a pure
+    /// Winograd run, 18.0 for classic.
+    pub fn ops_per_node(&self) -> f64 {
+        if self.nodes == 0 {
+            return 0.0;
+        }
+        self.combine_ops as f64 / self.nodes as f64
     }
 }
 
@@ -66,6 +131,8 @@ pub struct StrassenReport {
     pub c: Matrix,
     /// Recursion levels actually executed (0 = ran direct).
     pub depth: usize,
+    /// The schedule that ran.
+    pub algo: StrassenAlgo,
     /// GEMMs submitted to the server (`7^depth`).
     pub leaf_gemms: u64,
     /// Recursion nodes per level (`level_nodes[i]` = nodes at level i).
@@ -73,12 +140,13 @@ pub struct StrassenReport {
     /// Sub-multiplies spawned per level, measured by counting at each
     /// node (not assumed).
     pub level_spawns: Vec<u64>,
+    /// Combine-phase operation and temporary counts across the run.
+    pub combine: CombineStats,
     /// Operand shapes after top-level padding to a multiple of
     /// `2^depth` (equals the input shape when depth = 0).
     pub padded: (usize, usize, usize),
     /// The analytical model's verdict, present only when the cutoff was
-    /// [`Cutoff::Model`] (forced-depth runs skip the sweep; call
-    /// [`strassen_crossover`] directly to compare against a forced run).
+    /// [`Cutoff::Model`] (forced-depth runs skip the sweep).
     pub model: Option<CrossoverPlan>,
     pub arena: ArenaStats,
 }
@@ -100,58 +168,402 @@ fn depth_cap(m: usize, k: usize, n: usize) -> usize {
     (m.ilog2().min(k.ilog2()).min(n.ilog2())) as usize
 }
 
-struct Ctx<'s> {
+/// One term of a side schedule: a parent quadrant or an earlier step's
+/// result.
+#[derive(Debug, Clone, Copy)]
+enum Term {
+    /// Quadrant `q`: row `q / 2`, column `q % 2` of the parent.
+    Q(usize),
+    /// The result of schedule step `i`.
+    S(usize),
+}
+
+/// One schedule step: `x` alone (a copy) or `x op y`.
+#[derive(Debug, Clone, Copy)]
+struct Step {
+    x: Term,
+    op: Option<(CombineOp, Term)>,
+}
+
+/// One operand side (A or B) of a 7-product schedule: the temporaries
+/// in dependency order, then the 7 sub-product operands M1..M7 as
+/// terms over quadrants and steps.
+struct SideSchedule {
+    steps: &'static [Step],
+    operands: [Term; 7],
+}
+
+use CombineOp::{Add, Sub};
+use Term::{Q, S};
+
+/// Classic Strassen, A side: each operand is its own step, nothing is
+/// shared between steps.
+static CLASSIC_A: SideSchedule = SideSchedule {
+    steps: &[
+        Step { x: Q(0), op: Some((Add, Q(3))) }, // A11 + A22
+        Step { x: Q(2), op: Some((Add, Q(3))) }, // A21 + A22
+        Step { x: Q(0), op: None },              // A11
+        Step { x: Q(3), op: None },              // A22
+        Step { x: Q(0), op: Some((Add, Q(1))) }, // A11 + A12
+        Step { x: Q(2), op: Some((Sub, Q(0))) }, // A21 - A11
+        Step { x: Q(1), op: Some((Sub, Q(3))) }, // A12 - A22
+    ],
+    operands: [S(0), S(1), S(2), S(3), S(4), S(5), S(6)],
+};
+
+/// Classic Strassen, B side.
+static CLASSIC_B: SideSchedule = SideSchedule {
+    steps: &[
+        Step { x: Q(0), op: Some((Add, Q(3))) }, // B11 + B22
+        Step { x: Q(0), op: None },              // B11
+        Step { x: Q(1), op: Some((Sub, Q(3))) }, // B12 - B22
+        Step { x: Q(2), op: Some((Sub, Q(0))) }, // B21 - B11
+        Step { x: Q(3), op: None },              // B22
+        Step { x: Q(0), op: Some((Add, Q(1))) }, // B11 + B12
+        Step { x: Q(2), op: Some((Add, Q(3))) }, // B21 + B22
+    ],
+    operands: [S(0), S(1), S(2), S(3), S(4), S(5), S(6)],
+};
+
+/// Winograd form, A side: 4 chained sums serve all 7 operands (steps 0
+/// and 1 feed later steps, so leaves materialize only those two).
+static WINOGRAD_A: SideSchedule = SideSchedule {
+    steps: &[
+        Step { x: Q(2), op: Some((Add, Q(3))) }, // S1 = A21 + A22
+        Step { x: S(0), op: Some((Sub, Q(0))) }, // S2 = S1 - A11
+        Step { x: Q(0), op: Some((Sub, Q(2))) }, // S3 = A11 - A21
+        Step { x: Q(1), op: Some((Sub, S(1))) }, // S4 = A12 - S2
+    ],
+    operands: [S(1), Q(0), Q(1), S(2), S(0), S(3), Q(3)],
+};
+
+/// Winograd form, B side (dual of the A side).
+static WINOGRAD_B: SideSchedule = SideSchedule {
+    steps: &[
+        Step { x: Q(1), op: Some((Sub, Q(0))) }, // S5 = B12 - B11
+        Step { x: Q(3), op: Some((Sub, S(0))) }, // S6 = B22 - S5
+        Step { x: Q(3), op: Some((Sub, Q(1))) }, // S7 = B22 - B12
+        Step { x: S(1), op: Some((Sub, Q(2))) }, // S8 = S6 - B21
+    ],
+    operands: [S(1), Q(0), Q(2), S(2), S(0), Q(3), S(3)],
+};
+
+fn a_schedule(algo: StrassenAlgo) -> &'static SideSchedule {
+    match algo {
+        StrassenAlgo::Classic => &CLASSIC_A,
+        StrassenAlgo::Winograd => &WINOGRAD_A,
+    }
+}
+
+fn b_schedule(algo: StrassenAlgo) -> &'static SideSchedule {
+    match algo {
+        StrassenAlgo::Classic => &CLASSIC_B,
+        StrassenAlgo::Winograd => &WINOGRAD_B,
+    }
+}
+
+/// Quadrant `q` of `parent` as a view (`r2 x c2` halves).
+fn quad_view(parent: &Matrix, q: usize, r2: usize, c2: usize) -> MatrixView<'_> {
+    parent.view().block((q / 2) * r2, (q % 2) * c2, r2, c2)
+}
+
+/// Resolve a schedule term against the parent and the materialized
+/// steps so far.
+fn term_view<'p>(
+    parent: &'p Matrix,
+    steps: &'p [Matrix],
+    t: Term,
+    r2: usize,
+    c2: usize,
+) -> MatrixView<'p> {
+    match t {
+        Term::Q(q) => quad_view(parent, q, r2, c2),
+        Term::S(i) => steps[i].view(),
+    }
+}
+
+/// Materialize one side of a schedule: every step written to an arena
+/// buffer, the 7 operands returned in M1..M7 order (quadrant operands
+/// are copied so each sub-product owns its matrix). Used above the leaf
+/// level and at registration time, where operands must outlive the
+/// parent.
+fn form_side(
+    sched: &SideSchedule,
+    parent: &Matrix,
+    arena: &mut ScratchArena,
+    combine: &mut CombineStats,
+) -> Vec<Matrix> {
+    debug_assert!(parent.rows % 2 == 0 && parent.cols % 2 == 0, "side dims must be even");
+    let (r2, c2) = (parent.rows / 2, parent.cols / 2);
+    let mut steps: Vec<Matrix> = Vec::with_capacity(sched.steps.len());
+    for step in sched.steps {
+        let mut out = arena.take(r2, c2);
+        {
+            let x = term_view(parent, &steps, step.x, r2, c2);
+            let mut ov = out.view_mut();
+            match step.op {
+                None => ops::copy_into(x, &mut ov),
+                Some((op, y)) => {
+                    let yv = term_view(parent, &steps, y, r2, c2);
+                    match op {
+                        CombineOp::Add => ops::add_into(x, yv, &mut ov),
+                        CombineOp::Sub => ops::sub_into(x, yv, &mut ov),
+                    }
+                    combine.combine_ops += 1;
+                }
+            }
+        }
+        combine.temps_materialized += 1;
+        steps.push(out);
+    }
+    let mut parked: Vec<Option<Matrix>> = steps.into_iter().map(Some).collect();
+    let mut out = Vec::with_capacity(7);
+    for &t in &sched.operands {
+        match t {
+            Term::S(i) => {
+                out.push(parked[i].take().expect("schedule reuses a step as two operands"))
+            }
+            Term::Q(q) => {
+                let mut m = arena.take(r2, c2);
+                ops::copy_into(quad_view(parent, q, r2, c2), &mut m.view_mut());
+                combine.temps_materialized += 1;
+                out.push(m);
+            }
+        }
+    }
+    for leftover in parked.into_iter().flatten() {
+        arena.put(leftover);
+    }
+    out
+}
+
+/// Form one side of a schedule for a *leaf* node: only steps that later
+/// steps read are materialized; every operand becomes a
+/// [`FusedOperand`] the packer resolves directly from the parent
+/// quadrants (or a materialized step), so the add/sub happens inside
+/// the pack pass. Returns the 7 operands in M1..M7 order plus the Arcs
+/// holding the materialized steps (reclaim them after the jobs finish).
+fn form_side_fused(
+    sched: &SideSchedule,
+    parent: &Arc<Matrix>,
+    arena: &mut ScratchArena,
+    combine: &mut CombineStats,
+) -> (Vec<FusedOperand>, Vec<Arc<Matrix>>) {
+    debug_assert!(parent.rows % 2 == 0 && parent.cols % 2 == 0, "side dims must be even");
+    let (r2, c2) = (parent.rows / 2, parent.cols / 2);
+    // A step must hit memory only if a later step's recipe reads it;
+    // operand references expand into fused packs instead.
+    let mut needed = [false; 7];
+    for step in sched.steps {
+        if let Term::S(i) = step.x {
+            needed[i] = true;
+        }
+        if let Some((_, Term::S(i))) = step.op {
+            needed[i] = true;
+        }
+    }
+    let mut mats: Vec<Option<Arc<Matrix>>> = Vec::with_capacity(sched.steps.len());
+    let mut materialized = 0u64;
+    for (i, step) in sched.steps.iter().enumerate() {
+        if needed[i] {
+            let mut out = arena.take(r2, c2);
+            {
+                let x = fused_term_view(parent, &mats, step.x, r2, c2);
+                let mut ov = out.view_mut();
+                match step.op {
+                    None => ops::copy_into(x, &mut ov),
+                    Some((op, y)) => {
+                        let yv = fused_term_view(parent, &mats, y, r2, c2);
+                        match op {
+                            CombineOp::Add => ops::add_into(x, yv, &mut ov),
+                            CombineOp::Sub => ops::sub_into(x, yv, &mut ov),
+                        }
+                    }
+                }
+            }
+            combine.temps_materialized += 1;
+            materialized += 1;
+            mats.push(Some(Arc::new(out)));
+        } else {
+            mats.push(None);
+        }
+        if step.op.is_some() {
+            combine.combine_ops += 1;
+        }
+    }
+    // A fully-materialized side writes one temp per operand.
+    combine.temps_avoided += 7 - materialized;
+
+    let src = |t: Term| -> FusedSource {
+        match t {
+            Term::Q(q) => FusedSource {
+                parent: parent.clone(),
+                row0: (q / 2) * r2,
+                col0: (q % 2) * c2,
+            },
+            Term::S(i) => FusedSource::whole(
+                mats[i].as_ref().expect("referenced step was materialized").clone(),
+            ),
+        }
+    };
+    let mut out = Vec::with_capacity(7);
+    for &t in &sched.operands {
+        let f = match t {
+            Term::S(i) if mats[i].is_none() => {
+                // Un-materialized step: hand its recipe to the packer.
+                let step = &sched.steps[i];
+                match step.op {
+                    None => FusedOperand::single(r2, c2, src(step.x)),
+                    Some((op, y)) => FusedOperand::combine(r2, c2, src(step.x), src(y), op),
+                }
+            }
+            _ => FusedOperand::single(r2, c2, src(t)),
+        };
+        out.push(f);
+    }
+    let arcs = mats.into_iter().flatten().collect();
+    (out, arcs)
+}
+
+/// Resolve a schedule term at a fused leaf (materialized steps live in
+/// Arcs).
+fn fused_term_view<'p>(
+    parent: &'p Matrix,
+    mats: &'p [Option<Arc<Matrix>>],
+    t: Term,
+    r2: usize,
+    c2: usize,
+) -> MatrixView<'p> {
+    match t {
+        Term::Q(q) => quad_view(parent, q, r2, c2),
+        Term::S(i) => mats[i].as_ref().expect("referenced step was materialized").view(),
+    }
+}
+
+/// Fold the 7 sub-products `ms` (M1..M7) into `c`'s quadrants under
+/// `algo` — the single combine kernel every recursion variant shares,
+/// so batched, registered and parallel runs recombine bit-identically.
+fn combine_quadrants(
+    algo: StrassenAlgo,
+    arena: &mut ScratchArena,
+    combine: &mut CombineStats,
+    ms: [&Matrix; 7],
+    c: &mut Matrix,
+) {
+    let (m2, n2) = (c.rows / 2, c.cols / 2);
+    match algo {
+        StrassenAlgo::Classic => {
+            let mut cv = c.view_mut();
+            {
+                let mut c11 = cv.block_mut(0, 0, m2, n2);
+                ops::add_into(ms[0].view(), ms[3].view(), &mut c11);
+                ops::acc_sub(&mut c11, ms[4].view());
+                ops::acc_add(&mut c11, ms[6].view());
+            }
+            {
+                let mut c12 = cv.block_mut(0, n2, m2, n2);
+                ops::add_into(ms[2].view(), ms[4].view(), &mut c12);
+            }
+            {
+                let mut c21 = cv.block_mut(m2, 0, m2, n2);
+                ops::add_into(ms[1].view(), ms[3].view(), &mut c21);
+            }
+            {
+                let mut c22 = cv.block_mut(m2, n2, m2, n2);
+                ops::sub_into(ms[0].view(), ms[1].view(), &mut c22);
+                ops::acc_add(&mut c22, ms[2].view());
+                ops::acc_add(&mut c22, ms[5].view());
+            }
+            combine.combine_ops += 8;
+        }
+        StrassenAlgo::Winograd => {
+            // t1 = M1 + M2, t2 = t1 + M4 feed three quadrants; the two
+            // temps are the Winograd C-side's whole working set.
+            let mut t1 = arena.take(m2, n2);
+            ops::add_into(ms[0].view(), ms[1].view(), &mut t1.view_mut());
+            let mut t2 = arena.take(m2, n2);
+            ops::add_into(t1.view(), ms[3].view(), &mut t2.view_mut());
+            {
+                let mut cv = c.view_mut();
+                {
+                    let mut c11 = cv.block_mut(0, 0, m2, n2);
+                    ops::add_into(ms[1].view(), ms[2].view(), &mut c11);
+                }
+                {
+                    let mut c12 = cv.block_mut(0, n2, m2, n2);
+                    ops::add_into(t1.view(), ms[4].view(), &mut c12);
+                    ops::acc_add(&mut c12, ms[5].view());
+                }
+                {
+                    let mut c21 = cv.block_mut(m2, 0, m2, n2);
+                    ops::sub_into(t2.view(), ms[6].view(), &mut c21);
+                }
+                {
+                    let mut c22 = cv.block_mut(m2, n2, m2, n2);
+                    ops::add_into(t2.view(), ms[4].view(), &mut c22);
+                }
+            }
+            arena.put(t1);
+            arena.put(t2);
+            combine.combine_ops += 7;
+            combine.temps_materialized += 2;
+        }
+    }
+}
+
+/// Read-only run state shared across the (possibly parallel) tree walk.
+struct Shared<'s> {
     server: &'s JobServer,
-    arena: ScratchArena,
     run: Option<RunConfig>,
-    next_id: u64,
+    algo: StrassenAlgo,
+    parallel: bool,
+    depth: usize,
+    next_id: AtomicU64,
+}
+
+impl Shared<'_> {
+    fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// Per-sub-tree counters; parallel siblings each fill their own and the
+/// parent merges at the join.
+struct NodeStats {
     leaf_gemms: u64,
-    /// Shared-B leaf groups submitted (batched recursion only; each
-    /// packs its B combination exactly once for the whole batch).
-    leaf_groups: u64,
     level_nodes: Vec<u64>,
     level_spawns: Vec<u64>,
+    combine: CombineStats,
 }
 
-impl Ctx<'_> {
-    fn fresh_id(&mut self) -> u64 {
-        let id = self.next_id;
-        self.next_id += 1;
-        id
+impl NodeStats {
+    fn new(depth: usize) -> Self {
+        Self {
+            leaf_gemms: 0,
+            level_nodes: vec![0; depth],
+            level_spawns: vec![0; depth],
+            combine: CombineStats::default(),
+        }
     }
-}
 
-/// One operand combination to materialize from quadrant views.
-#[derive(Clone, Copy)]
-enum Combo<'v> {
-    Copy(MatrixView<'v>),
-    Add(MatrixView<'v>, MatrixView<'v>),
-    Sub(MatrixView<'v>, MatrixView<'v>),
-}
-
-/// Stream one operand combination into `ov` — the single copy of the
-/// `Combo` → add/sub/copy kernel dispatch (the in-recursion
-/// [`materialize`] and the registration-time [`collect_b_combos`] must
-/// form bit-identical values, so they share it).
-fn fill_combo(ov: &mut crate::gemm::MatrixViewMut<'_>, combo: Combo<'_>) {
-    match combo {
-        Combo::Copy(x) => ops::copy_into(x, ov),
-        Combo::Add(x, y) => ops::add_into(x, y, ov),
-        Combo::Sub(x, y) => ops::sub_into(x, y, ov),
+    fn merge(&mut self, o: NodeStats) {
+        self.leaf_gemms += o.leaf_gemms;
+        for (mine, theirs) in self.level_nodes.iter_mut().zip(o.level_nodes) {
+            *mine += theirs;
+        }
+        for (mine, theirs) in self.level_spawns.iter_mut().zip(o.level_spawns) {
+            *mine += theirs;
+        }
+        self.combine.merge(o.combine);
     }
-}
-
-fn materialize(arena: &mut ScratchArena, rows: usize, cols: usize, combo: Combo<'_>) -> Matrix {
-    let mut out = arena.take(rows, cols);
-    fill_combo(&mut out.view_mut(), combo);
-    out
 }
 
 /// Compute `C = A x B` through the Strassen planner on `server`.
 ///
-/// The recursion depth is `cfg.cutoff` (model-chosen by default),
-/// clamped by the shape; `depth = 0` degrades to one direct server job,
-/// the model's own verdict for sub-crossover problems.
+/// The recursion depth is `cfg.cutoff` (model-chosen by default, under
+/// `cfg.algo`'s combine pricing), clamped by the shape; `depth = 0`
+/// degrades to one direct server job, the model's own verdict for
+/// sub-crossover problems.
 pub fn multiply(
     server: &JobServer,
     a: &Matrix,
@@ -172,7 +584,7 @@ pub fn multiply(
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let (model, requested) = match cfg.cutoff {
         Cutoff::Model => {
-            let plan = strassen_crossover(server.hw(), m, k, n, server.surface())?;
+            let plan = strassen_crossover_with(server.hw(), m, k, n, server.surface(), cfg.algo)?;
             let depth = plan.depth;
             (Some(plan), depth)
         }
@@ -180,22 +592,25 @@ pub fn multiply(
     };
     let depth = requested.min(depth_cap(m, k, n));
 
-    let mut ctx = Ctx {
+    let mut arena = ScratchArena::new();
+    // Fresh here, but pins the contract: report counters describe this
+    // run even if an arena is ever carried across runs.
+    arena.reset_stats();
+    let mut stats = NodeStats::new(depth);
+    let sh = Shared {
         server,
-        arena: ScratchArena::new(),
         run: cfg.run,
-        next_id: 0,
-        leaf_gemms: 0,
-        leaf_groups: 0,
-        level_nodes: vec![0; depth],
-        level_spawns: vec![0; depth],
+        algo: cfg.algo,
+        parallel: cfg.parallel,
+        depth,
+        next_id: AtomicU64::new(0),
     };
 
     let (c, padded) = if depth == 0 {
         let job =
-            GemmJob { id: ctx.fresh_id(), a: a.clone().into(), b: b.clone().into(), run: cfg.run };
+            GemmJob { id: sh.fresh_id(), a: a.clone().into(), b: b.clone().into(), run: cfg.run };
         let r = server.submit_async(job)?.wait_one()?;
-        ctx.leaf_gemms = 1;
+        stats.leaf_gemms = 1;
         (r.c, (m, k, n))
     } else {
         // Section-IV zero padding, once, up to a multiple of 2^depth:
@@ -205,84 +620,75 @@ pub fn multiply(
             (m.next_multiple_of(align), k.next_multiple_of(align), n.next_multiple_of(align));
         let ap = a.pad_to(mp, kp);
         let bp = b.pad_to(kp, np);
-        let cp = node(&mut ctx, ap, bp, depth, 0)?;
+        let cp = node(&sh, 0, ap, bp, &mut arena, &mut stats)?;
         // Padded columns of A meet padded rows of B as exact zero
         // terms, so the real product is the top-left block.
         let c = cp.block(0, 0, m, n);
-        ctx.arena.put(cp);
+        arena.put(cp);
         (c, (mp, kp, np))
     };
 
     Ok(StrassenReport {
         c,
         depth,
-        leaf_gemms: ctx.leaf_gemms,
-        level_nodes: ctx.level_nodes,
-        level_spawns: ctx.level_spawns,
+        algo: cfg.algo,
+        leaf_gemms: stats.leaf_gemms,
+        level_nodes: stats.level_nodes,
+        level_spawns: stats.level_spawns,
+        combine: stats.combine,
         padded,
         model,
-        arena: ctx.arena.stats(),
+        arena: arena.stats(),
     })
 }
 
-/// One recursion node (`depth_left >= 1`; all dims even).
+/// One recursion node (`level < sh.depth`; all dims even).
 fn node(
-    ctx: &mut Ctx<'_>,
+    sh: &Shared<'_>,
+    level: usize,
     a: Matrix,
     b: Matrix,
-    depth_left: usize,
-    level: usize,
+    arena: &mut ScratchArena,
+    stats: &mut NodeStats,
 ) -> anyhow::Result<Matrix> {
     let (m, k, n) = (a.rows, a.cols, b.cols);
     debug_assert!(m % 2 == 0 && k % 2 == 0 && n % 2 == 0, "node dims must be even");
-    let (m2, k2, n2) = (m / 2, k / 2, n / 2);
-
-    let mut pairs: Vec<(Matrix, Matrix)> = Vec::with_capacity(7);
-    {
-        let av = a.view();
-        let bv = b.view();
-        let a11 = av.block(0, 0, m2, k2);
-        let a12 = av.block(0, k2, m2, k2);
-        let a21 = av.block(m2, 0, m2, k2);
-        let a22 = av.block(m2, k2, m2, k2);
-        let b11 = bv.block(0, 0, k2, n2);
-        let b12 = bv.block(0, n2, k2, n2);
-        let b21 = bv.block(k2, 0, k2, n2);
-        let b22 = bv.block(k2, n2, k2, n2);
-        let specs: [(Combo<'_>, Combo<'_>); 7] = [
-            (Combo::Add(a11, a22), Combo::Add(b11, b22)), // M1
-            (Combo::Add(a21, a22), Combo::Copy(b11)),     // M2
-            (Combo::Copy(a11), Combo::Sub(b12, b22)),     // M3
-            (Combo::Copy(a22), Combo::Sub(b21, b11)),     // M4
-            (Combo::Add(a11, a12), Combo::Copy(b22)),     // M5
-            (Combo::Sub(a21, a11), Combo::Add(b11, b12)), // M6
-            (Combo::Sub(a12, a22), Combo::Add(b21, b22)), // M7
-        ];
-        for (ca, cb) in specs {
-            let ta = materialize(&mut ctx.arena, m2, k2, ca);
-            let tb = materialize(&mut ctx.arena, k2, n2, cb);
-            pairs.push((ta, tb));
-        }
-    }
-    // Operands are fully captured in the combos; recycle them before
-    // the sub-products run so children draw from the same pool.
-    ctx.arena.put(a);
-    ctx.arena.put(b);
-    ctx.level_nodes[level] += 1;
-    ctx.level_spawns[level] += 7;
+    let (m2, n2) = (m / 2, n / 2);
+    let _ = k;
+    let depth_left = sh.depth - level;
+    stats.level_nodes[level] += 1;
+    stats.level_spawns[level] += 7;
+    stats.combine.nodes += 1;
 
     let ms: Vec<Matrix> = if depth_left == 1 {
-        // Leaf level: one job group of 7 — the admission queue keeps
-        // them together and cross-job stealing spreads them over the
-        // pool.
-        let jobs: Vec<GemmJob> = pairs
+        // Leaf level: operand formation is fused into the packer. The
+        // parents (and the few chained schedule steps) go down wrapped
+        // in Arcs; the server packs `X op Y` straight from them.
+        let a = Arc::new(a);
+        let b = Arc::new(b);
+        let (fas, a_arcs) = form_side_fused(a_schedule(sh.algo), &a, arena, &mut stats.combine);
+        let (fbs, b_arcs) = form_side_fused(b_schedule(sh.algo), &b, arena, &mut stats.combine);
+        let jobs: Vec<GemmJob> = fas
             .into_iter()
-            .map(|(ta, tb)| GemmJob { id: ctx.fresh_id(), a: ta.into(), b: tb.into(), run: ctx.run })
+            .zip(fbs)
+            .map(|(fa, fb)| GemmJob {
+                id: sh.fresh_id(),
+                a: AOperand::Fused(fa),
+                b: BOperand::Fused(fb),
+                run: sh.run,
+            })
             .collect();
-        ctx.server.trace_span_begin(SpanKind::StrassenLevel, level as u64);
-        let results = ctx.server.submit_blocking(Submission::group(jobs))?;
-        ctx.server.trace_span_end(SpanKind::StrassenLevel, level as u64);
-        ctx.leaf_gemms += 7;
+        sh.server.trace_span_begin(SpanKind::StrassenLevel, level as u64);
+        let results = sh.server.submit_async(Submission::group(jobs))?.wait()?;
+        sh.server.trace_span_end(SpanKind::StrassenLevel, level as u64);
+        stats.leaf_gemms += 7;
+        // Reclaim whatever the server has let go of; a worker cache may
+        // briefly pin an Arc, in which case the buffer just drops.
+        for arc in a_arcs.into_iter().chain(b_arcs).chain([a, b]) {
+            if let Ok(freed) = Arc::try_unwrap(arc) {
+                arena.put(freed);
+            }
+        }
         let mut ms = Vec::with_capacity(7);
         for r in results {
             anyhow::ensure!(
@@ -296,39 +702,65 @@ fn node(
         }
         ms
     } else {
-        let mut ms = Vec::with_capacity(7);
-        for (ta, tb) in pairs {
-            ms.push(node(ctx, ta, tb, depth_left - 1, level + 1)?);
+        let tas = form_side(a_schedule(sh.algo), &a, arena, &mut stats.combine);
+        let tbs = form_side(b_schedule(sh.algo), &b, arena, &mut stats.combine);
+        arena.put(a);
+        arena.put(b);
+        let pairs: Vec<(Matrix, Matrix)> = tas.into_iter().zip(tbs).collect();
+        if sh.parallel {
+            // Walk the 7 sibling sub-trees concurrently: each thread
+            // owns a private arena and counters the parent absorbs at
+            // the fixed-order join, so results and stats are identical
+            // to the sequential walk while the server sees every
+            // sub-tree's leaf groups in flight at once. submit_async
+            // blocks on backpressure, so a full admission queue throttles
+            // the walkers instead of failing them.
+            let subs = std::thread::scope(|scope| {
+                let handles: Vec<_> = pairs
+                    .into_iter()
+                    .map(|(ta, tb)| {
+                        scope.spawn(move || -> anyhow::Result<(Matrix, ScratchArena, NodeStats)> {
+                            let mut sub_arena = ScratchArena::new();
+                            let mut sub_stats = NodeStats::new(sh.depth);
+                            let c = node(sh, level + 1, ta, tb, &mut sub_arena, &mut sub_stats)?;
+                            Ok((c, sub_arena, sub_stats))
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("strassen sub-tree thread panicked"))
+                    .collect::<Vec<_>>()
+            });
+            let mut ms = Vec::with_capacity(7);
+            for sub in subs {
+                let (c, sub_arena, sub_stats) = sub?;
+                arena.absorb(sub_arena);
+                stats.merge(sub_stats);
+                ms.push(c);
+            }
+            ms
+        } else {
+            let mut ms = Vec::with_capacity(7);
+            for (ta, tb) in pairs {
+                ms.push(node(sh, level + 1, ta, tb, arena, stats)?);
+            }
+            ms
         }
-        ms
     };
 
-    let mut c = ctx.arena.take(m, n);
-    {
-        let mut cv = c.view_mut();
-        {
-            let mut c11 = cv.block_mut(0, 0, m2, n2);
-            ops::add_into(ms[0].view(), ms[3].view(), &mut c11);
-            ops::acc_sub(&mut c11, ms[4].view());
-            ops::acc_add(&mut c11, ms[6].view());
-        }
-        {
-            let mut c12 = cv.block_mut(0, n2, m2, n2);
-            ops::add_into(ms[2].view(), ms[4].view(), &mut c12);
-        }
-        {
-            let mut c21 = cv.block_mut(m2, 0, m2, n2);
-            ops::add_into(ms[1].view(), ms[3].view(), &mut c21);
-        }
-        {
-            let mut c22 = cv.block_mut(m2, n2, m2, n2);
-            ops::sub_into(ms[0].view(), ms[1].view(), &mut c22);
-            ops::acc_add(&mut c22, ms[2].view());
-            ops::acc_add(&mut c22, ms[5].view());
-        }
-    }
+    sh.server.trace_span_begin(SpanKind::StrassenCombine, level as u64);
+    let mut c = arena.take(m, n);
+    combine_quadrants(
+        sh.algo,
+        arena,
+        &mut stats.combine,
+        std::array::from_fn(|j| &ms[j]),
+        &mut c,
+    );
+    sh.server.trace_span_end(SpanKind::StrassenCombine, level as u64);
     for mi in ms {
-        ctx.arena.put(mi);
+        arena.put(mi);
     }
     Ok(c)
 }
@@ -341,6 +773,8 @@ pub struct BatchedStrassenReport {
     /// Recursion levels actually executed (0 = one direct shared-B
     /// group).
     pub depth: usize,
+    /// The schedule that ran (must match the registered sides).
+    pub algo: StrassenAlgo,
     /// Shared-B groups submitted (`7^depth`, or 1 at depth 0) — each
     /// packed its B combination exactly once for the whole batch.
     pub leaf_groups: u64,
@@ -350,11 +784,33 @@ pub struct BatchedStrassenReport {
     pub level_nodes: Vec<u64>,
     /// Sub-multiplies spawned per level, counted at each node.
     pub level_spawns: Vec<u64>,
+    /// Combine-phase counters for the recursion-time work (per-member
+    /// A forming and C recombination; registered-side forming happens
+    /// at registration, not here).
+    pub combine: CombineStats,
     /// Operand shapes after top-level padding (input shape at depth 0).
     pub padded: (usize, usize, usize),
     /// Present only under [`Cutoff::Model`].
     pub model: Option<CrossoverPlan>,
     pub arena: ArenaStats,
+}
+
+/// Recursion state for the batched (shared-B) variants, which stay
+/// sequential: their leaves already batch whole member sets per
+/// submission, so the admission queue sees wide groups without a
+/// parallel tree walk.
+struct Ctx<'s> {
+    server: &'s JobServer,
+    arena: ScratchArena,
+    run: Option<RunConfig>,
+    algo: StrassenAlgo,
+    leaf_gemms: u64,
+    /// Shared-B leaf groups submitted (each packs its B combination
+    /// exactly once for the whole batch).
+    leaf_groups: u64,
+    level_nodes: Vec<u64>,
+    level_spawns: Vec<u64>,
+    combine: CombineStats,
 }
 
 /// The B side of a batched Strassen recursion registered as
@@ -371,6 +827,8 @@ pub struct StrassenWeights {
     /// visit order.
     handles: Vec<WeightHandle>,
     depth: usize,
+    /// The schedule the combinations were formed under.
+    algo: StrassenAlgo,
     /// Original B dims.
     k: usize,
     n: usize,
@@ -383,6 +841,11 @@ impl StrassenWeights {
     /// The recursion depth the combinations were registered for.
     pub fn depth(&self) -> usize {
         self.depth
+    }
+
+    /// The schedule the combinations were formed under.
+    pub fn algo(&self) -> StrassenAlgo {
+        self.algo
     }
 
     /// The registered leaf-combination handles (`7^depth`, or 1 at
@@ -399,15 +862,25 @@ impl StrassenWeights {
     }
 }
 
-/// Form and register the B-side quadrant-combination tree of `b` at
-/// `depth` — the Strassen model-load step. The combinations are built
-/// with the same row-streamed add/sub kernels the recursion uses, so a
-/// registered run is bit-identical to an inline one. `depth = 0`
-/// registers `b` itself as a single shared operand.
+/// [`register_weights_with`] under the default schedule.
 pub fn register_weights(
     server: &JobServer,
     b: &Matrix,
     depth: usize,
+) -> anyhow::Result<StrassenWeights> {
+    register_weights_with(server, b, depth, StrassenAlgo::default())
+}
+
+/// Form and register the B-side combination tree of `b` at `depth`
+/// under `algo` — the Strassen model-load step. The combinations are
+/// built with the same row-streamed add/sub kernels the recursion uses,
+/// so a registered run is bit-identical to an inline one. `depth = 0`
+/// registers `b` itself as a single shared operand.
+pub fn register_weights_with(
+    server: &JobServer,
+    b: &Matrix,
+    depth: usize,
+    algo: StrassenAlgo,
 ) -> anyhow::Result<StrassenWeights> {
     let (k, n) = (b.rows, b.cols);
     anyhow::ensure!(k > 0 && n > 0, "degenerate B {k}x{n}");
@@ -423,10 +896,10 @@ pub fn register_weights(
         let align = 1usize << depth;
         let (kp, np) = (k.next_multiple_of(align), n.next_multiple_of(align));
         let bp = b.pad_to(kp, np);
-        collect_b_combos(server, &bp, depth, &mut handles)?;
+        collect_b_combos(server, &bp, depth, algo, &mut handles)?;
         (kp, np)
     };
-    Ok(StrassenWeights { handles, depth, k, n, padded_k, padded_n })
+    Ok(StrassenWeights { handles, depth, algo, k, n, padded_k, padded_n })
 }
 
 /// Register the `7^depth_left` leaf combinations under `b`, pre-order
@@ -436,38 +909,18 @@ fn collect_b_combos(
     server: &JobServer,
     b: &Matrix,
     depth_left: usize,
+    algo: StrassenAlgo,
     handles: &mut Vec<WeightHandle>,
 ) -> anyhow::Result<()> {
-    let (k, n) = (b.rows, b.cols);
-    debug_assert!(k % 2 == 0 && n % 2 == 0, "combo dims must be even");
-    let (k2, n2) = (k / 2, n / 2);
-    let mut combos: Vec<Matrix> = Vec::with_capacity(7);
-    {
-        let bv = b.view();
-        let b11 = bv.block(0, 0, k2, n2);
-        let b12 = bv.block(0, n2, k2, n2);
-        let b21 = bv.block(k2, 0, k2, n2);
-        let b22 = bv.block(k2, n2, k2, n2);
-        let specs: [Combo<'_>; 7] = [
-            Combo::Add(b11, b22), // M1
-            Combo::Copy(b11),     // M2
-            Combo::Sub(b12, b22), // M3
-            Combo::Sub(b21, b11), // M4
-            Combo::Copy(b22),     // M5
-            Combo::Add(b11, b12), // M6
-            Combo::Add(b21, b22), // M7
-        ];
-        for cb in specs {
-            let mut combo = Matrix::zeros(k2, n2);
-            fill_combo(&mut combo.view_mut(), cb);
-            combos.push(combo);
-        }
-    }
+    // Registration runs outside any recursion arena; a throwaway
+    // arena/stats pair keeps the forming kernels identical.
+    let combos =
+        form_side(b_schedule(algo), b, &mut ScratchArena::new(), &mut CombineStats::default());
     for combo in combos {
         if depth_left == 1 {
             handles.push(server.register_b(combo)?);
         } else {
-            collect_b_combos(server, &combo, depth_left - 1, handles)?;
+            collect_b_combos(server, &combo, depth_left - 1, algo, handles)?;
         }
     }
     Ok(())
@@ -477,25 +930,24 @@ fn collect_b_combos(
 /// whole batch, reusing the B-side quadrant combinations across it.
 ///
 /// The 7-product fan-out repeats every B combination once per batch
-/// member — M2 of every member multiplies the *same* `B11`, M1 the same
-/// `B11 + B22`, and so on. A per-member recursion would rematerialize
-/// and repack each combination `batch` times; here the combinations are
-/// **registered with the server's operand registry**
-/// ([`register_weights`]) and every leaf pairing streams through a
-/// [`Submission::batched`] under its [`WeightHandle`] — one
-/// shared-B group per combination, the packed combo built exactly once
-/// however large the batch is (`Metrics::b_panel_packs` = `7^depth`
-/// total, `Metrics::panels_shared` = `(batch-1) · 7^depth`). This
-/// convenience wrapper registers, runs once, and unregisters; repeated
-/// recursions over the same `b` should hold a [`StrassenWeights`] and
-/// call [`multiply_batched_registered`] per batch so later runs hit
-/// the cache instead of re-forming `7^depth` packs.
+/// member — a per-member recursion would rematerialize and repack each
+/// combination `batch` times; here the combinations are **registered
+/// with the server's operand registry** ([`register_weights_with`],
+/// under `cfg.algo`) and every leaf pairing streams through a
+/// [`Submission::batched`] under its [`WeightHandle`] — one shared-B
+/// group per combination, the packed combo built exactly once however
+/// large the batch is (`Metrics::b_panel_packs` = `7^depth` total,
+/// `Metrics::panels_shared` = `(batch-1) · 7^depth`). This convenience
+/// wrapper registers, runs once, and unregisters; repeated recursions
+/// over the same `b` should hold a [`StrassenWeights`] and call
+/// [`multiply_batched_registered`] per batch so later runs hit the
+/// cache instead of re-forming `7^depth` packs.
 ///
 /// Every member must have the same shape (a batch of identical GEMMs —
 /// the im2col inference stream). Results are bit-identical to running
 /// [`multiply`] per member with the same `cfg`: identical combine
 /// kernels and identical leaf accumulation order, over operands whose
-/// packed layout does not depend on sharing.
+/// packed layout does not depend on sharing or on fused formation.
 pub fn multiply_batched(
     server: &JobServer,
     a_list: &[Matrix],
@@ -520,7 +972,7 @@ pub fn multiply_batched(
     let n = b.cols;
     let (model, requested) = match cfg.cutoff {
         Cutoff::Model => {
-            let plan = strassen_crossover(server.hw(), m, k, n, server.surface())?;
+            let plan = strassen_crossover_with(server.hw(), m, k, n, server.surface(), cfg.algo)?;
             let depth = plan.depth;
             (Some(plan), depth)
         }
@@ -536,16 +988,18 @@ pub fn multiply_batched(
         return Ok(BatchedStrassenReport {
             cs,
             depth: 0,
+            algo: cfg.algo,
             leaf_groups: 1,
             leaf_gemms: a_list.len() as u64,
             level_nodes: Vec::new(),
             level_spawns: Vec::new(),
+            combine: CombineStats::default(),
             padded: (m, k, n),
             model,
             arena: ScratchArena::new().stats(),
         });
     }
-    let weights = register_weights(server, b, depth)?;
+    let weights = register_weights_with(server, b, depth, cfg.algo)?;
     // Unregister before surfacing any run failure: a failed recursion
     // must not leak 7^depth registrations into a long-lived server.
     let result = multiply_batched_registered(server, a_list, &weights, cfg.run);
@@ -560,8 +1014,9 @@ pub fn multiply_batched(
 /// recursion carries only the A side — every leaf submits its shared-B
 /// group by [`WeightHandle`], so a run over weights already resolved
 /// once performs **zero** B-side forming or packing (pure registry
-/// hits). The recursion depth is `weights.depth()`; the report's
-/// `model` is `None` (register at the model's depth to combine both).
+/// hits). The recursion depth and schedule are the weights'; the
+/// report's `model` is `None` (register at the model's depth to combine
+/// both).
 pub fn multiply_batched_registered(
     server: &JobServer,
     a_list: &[Matrix],
@@ -594,12 +1049,14 @@ pub fn multiply_batched_registered(
         server,
         arena: ScratchArena::new(),
         run,
-        next_id: 0,
+        algo: weights.algo,
         leaf_gemms: 0,
         leaf_groups: 0,
         level_nodes: vec![0; depth],
         level_spawns: vec![0; depth],
+        combine: CombineStats::default(),
     };
+    ctx.arena.reset_stats();
 
     let (cs, padded) = if depth == 0 {
         let results = server
@@ -630,10 +1087,12 @@ pub fn multiply_batched_registered(
     Ok(BatchedStrassenReport {
         cs,
         depth,
+        algo: weights.algo,
         leaf_groups: ctx.leaf_groups,
         leaf_gemms: ctx.leaf_gemms,
         level_nodes: ctx.level_nodes,
         level_spawns: ctx.level_spawns,
+        combine: ctx.combine,
         padded,
         model: None,
         arena: ctx.arena.stats(),
@@ -642,8 +1101,9 @@ pub fn multiply_batched_registered(
 
 /// One batched recursion node against registered B combinations
 /// (`depth_left >= 1`; all dims even, `n` = this node's B columns).
-/// Forms the 7 A combinations per member; the B side is consumed as
-/// handles from `weights` in registration (pre-)order via `cursor`.
+/// Forms the 7 A combinations per member under the registered schedule;
+/// the B side is consumed as handles from `weights` in registration
+/// (pre-)order via `cursor`.
 fn node_batched_registered(
     ctx: &mut Ctx<'_>,
     a_list: Vec<Matrix>,
@@ -656,36 +1116,21 @@ fn node_batched_registered(
     let batch = a_list.len();
     let (m, k) = (a_list[0].rows, a_list[0].cols);
     debug_assert!(m % 2 == 0 && k % 2 == 0 && n % 2 == 0, "node dims must be even");
-    let (m2, k2, n2) = (m / 2, k / 2, n / 2);
+    let (m2, n2) = (m / 2, n / 2);
 
     // Per-member A combinations: a_combos[j] holds combination j of
     // every member, in batch order.
-    let mut a_combos: Vec<Vec<Matrix>> =
-        (0..7).map(|_| Vec::with_capacity(batch)).collect();
+    let mut a_combos: Vec<Vec<Matrix>> = (0..7).map(|_| Vec::with_capacity(batch)).collect();
     for a in a_list {
-        {
-            let av = a.view();
-            let a11 = av.block(0, 0, m2, k2);
-            let a12 = av.block(0, k2, m2, k2);
-            let a21 = av.block(m2, 0, m2, k2);
-            let a22 = av.block(m2, k2, m2, k2);
-            let specs: [Combo<'_>; 7] = [
-                Combo::Add(a11, a22), // M1
-                Combo::Add(a21, a22), // M2
-                Combo::Copy(a11),     // M3
-                Combo::Copy(a22),     // M4
-                Combo::Add(a11, a12), // M5
-                Combo::Sub(a21, a11), // M6
-                Combo::Sub(a12, a22), // M7
-            ];
-            for (j, ca) in specs.into_iter().enumerate() {
-                a_combos[j].push(materialize(&mut ctx.arena, m2, k2, ca));
-            }
+        let combos = form_side(a_schedule(ctx.algo), &a, &mut ctx.arena, &mut ctx.combine);
+        for (j, combo) in combos.into_iter().enumerate() {
+            a_combos[j].push(combo);
         }
         ctx.arena.put(a);
     }
     ctx.level_nodes[level] += 1;
     ctx.level_spawns[level] += 7;
+    ctx.combine.nodes += 1;
 
     // ms[j][member] = combination j's product for that member.
     let ms: Vec<Vec<Matrix>> = if depth_left == 1 {
@@ -737,9 +1182,10 @@ fn node_batched_registered(
 }
 
 /// The per-member Strassen combine for one batched node: fold each
-/// member's 7 sub-products `ms[j][member]` into its `m x n` C, recycling
-/// the sub-products through the arena. Shared by every batched recursion
-/// variant so registered and inline runs combine bit-identically.
+/// member's 7 sub-products `ms[j][member]` into its `m x n` C through
+/// the shared [`combine_quadrants`] kernel, recycling the sub-products
+/// through the arena. Shared by every batched recursion variant so
+/// registered and inline runs combine bit-identically.
 fn combine_members(
     ctx: &mut Ctx<'_>,
     ms: Vec<Vec<Matrix>>,
@@ -747,33 +1193,16 @@ fn combine_members(
     m: usize,
     n: usize,
 ) -> Vec<Matrix> {
-    let (m2, n2) = (m / 2, n / 2);
     let mut cs = Vec::with_capacity(batch);
     for member in 0..batch {
         let mut c = ctx.arena.take(m, n);
-        {
-            let mut cv = c.view_mut();
-            {
-                let mut c11 = cv.block_mut(0, 0, m2, n2);
-                ops::add_into(ms[0][member].view(), ms[3][member].view(), &mut c11);
-                ops::acc_sub(&mut c11, ms[4][member].view());
-                ops::acc_add(&mut c11, ms[6][member].view());
-            }
-            {
-                let mut c12 = cv.block_mut(0, n2, m2, n2);
-                ops::add_into(ms[2][member].view(), ms[4][member].view(), &mut c12);
-            }
-            {
-                let mut c21 = cv.block_mut(m2, 0, m2, n2);
-                ops::add_into(ms[1][member].view(), ms[3][member].view(), &mut c21);
-            }
-            {
-                let mut c22 = cv.block_mut(m2, n2, m2, n2);
-                ops::sub_into(ms[0][member].view(), ms[1][member].view(), &mut c22);
-                ops::acc_add(&mut c22, ms[2][member].view());
-                ops::acc_add(&mut c22, ms[5][member].view());
-            }
-        }
+        combine_quadrants(
+            ctx.algo,
+            &mut ctx.arena,
+            &mut ctx.combine,
+            std::array::from_fn(|j| &ms[j][member]),
+            &mut c,
+        );
         cs.push(c);
     }
     for per_combo in ms {
@@ -800,6 +1229,8 @@ pub struct StrassenActivations {
     /// walks both.
     handles: Vec<Vec<ActivationHandle>>,
     depth: usize,
+    /// The schedule the combinations were formed under.
+    algo: StrassenAlgo,
     batch: usize,
     /// Original per-member A dims.
     m: usize,
@@ -813,6 +1244,11 @@ impl StrassenActivations {
     /// The recursion depth the combinations were registered for.
     pub fn depth(&self) -> usize {
         self.depth
+    }
+
+    /// The schedule the combinations were formed under.
+    pub fn algo(&self) -> StrassenAlgo {
+        self.algo
     }
 
     /// Batch members per leaf combination.
@@ -834,16 +1270,26 @@ impl StrassenActivations {
     }
 }
 
-/// Form and register the A-side quadrant-combination tree of a whole
-/// batch at `depth` — the Strassen activation-load step, dual to
-/// [`register_weights`]. The combinations are built with the same
-/// row-streamed add/sub kernels the recursion uses, so a registered run
-/// is bit-identical to an inline one. `depth = 0` registers each member
-/// itself.
+/// [`register_activations_with`] under the default schedule.
 pub fn register_activations(
     server: &JobServer,
     a_list: &[Matrix],
     depth: usize,
+) -> anyhow::Result<StrassenActivations> {
+    register_activations_with(server, a_list, depth, StrassenAlgo::default())
+}
+
+/// Form and register the A-side combination tree of a whole batch at
+/// `depth` under `algo` — the Strassen activation-load step, dual to
+/// [`register_weights_with`]. The combinations are built with the same
+/// row-streamed add/sub kernels the recursion uses, so a registered run
+/// is bit-identical to an inline one. `depth = 0` registers each member
+/// itself.
+pub fn register_activations_with(
+    server: &JobServer,
+    a_list: &[Matrix],
+    depth: usize,
+    algo: StrassenAlgo,
 ) -> anyhow::Result<StrassenActivations> {
     anyhow::ensure!(!a_list.is_empty(), "empty batch");
     let (m, k) = (a_list[0].rows, a_list[0].cols);
@@ -868,12 +1314,13 @@ pub fn register_activations(
         let align = 1usize << depth;
         let (mp, kp) = (m.next_multiple_of(align), k.next_multiple_of(align));
         let aps: Vec<Matrix> = a_list.iter().map(|a| a.pad_to(mp, kp)).collect();
-        collect_a_combos(server, &aps, depth, &mut handles)?;
+        collect_a_combos(server, &aps, depth, algo, &mut handles)?;
         (mp, kp)
     };
     Ok(StrassenActivations {
         handles,
         depth,
+        algo,
         batch: a_list.len(),
         m,
         k,
@@ -890,30 +1337,18 @@ fn collect_a_combos(
     server: &JobServer,
     a_list: &[Matrix],
     depth_left: usize,
+    algo: StrassenAlgo,
     handles: &mut Vec<Vec<ActivationHandle>>,
 ) -> anyhow::Result<()> {
-    let (m, k) = (a_list[0].rows, a_list[0].cols);
-    debug_assert!(m % 2 == 0 && k % 2 == 0, "combo dims must be even");
-    let (m2, k2) = (m / 2, k / 2);
-    let mut combos: Vec<Vec<Matrix>> = (0..7).map(|_| Vec::with_capacity(a_list.len())).collect();
+    let batch = a_list.len();
+    let mut combos: Vec<Vec<Matrix>> = (0..7).map(|_| Vec::with_capacity(batch)).collect();
+    let mut scratch = ScratchArena::new();
+    let mut stats = CombineStats::default();
     for a in a_list {
-        let av = a.view();
-        let a11 = av.block(0, 0, m2, k2);
-        let a12 = av.block(0, k2, m2, k2);
-        let a21 = av.block(m2, 0, m2, k2);
-        let a22 = av.block(m2, k2, m2, k2);
-        let specs: [Combo<'_>; 7] = [
-            Combo::Add(a11, a22), // M1
-            Combo::Add(a21, a22), // M2
-            Combo::Copy(a11),     // M3
-            Combo::Copy(a22),     // M4
-            Combo::Add(a11, a12), // M5
-            Combo::Sub(a21, a11), // M6
-            Combo::Sub(a12, a22), // M7
-        ];
-        for (j, ca) in specs.into_iter().enumerate() {
-            let mut combo = Matrix::zeros(m2, k2);
-            fill_combo(&mut combo.view_mut(), ca);
+        for (j, combo) in form_side(a_schedule(algo), a, &mut scratch, &mut stats)
+            .into_iter()
+            .enumerate()
+        {
             combos[j].push(combo);
         }
     }
@@ -925,7 +1360,7 @@ fn collect_a_combos(
                 .collect::<anyhow::Result<Vec<_>>>()?;
             handles.push(hs);
         } else {
-            collect_a_combos(server, &group, depth_left - 1, handles)?;
+            collect_a_combos(server, &group, depth_left - 1, algo, handles)?;
         }
     }
     Ok(())
@@ -939,9 +1374,13 @@ fn collect_a_combos(
 /// re-running one activation batch (an attention block's token batch,
 /// an im2col window set) against resident weights.
 ///
-/// Results are bit-identical to [`multiply_batched_registered`] over the
-/// same `a_list`: the registered combinations were built by the same
-/// combine kernels, and packed layout does not depend on residency.
+/// Both sides must have been registered under the same depth **and the
+/// same schedule** — a Winograd A-side combination paired with a classic
+/// B handle would compute garbage, so the mismatch is rejected up
+/// front. Results are bit-identical to [`multiply_batched_registered`]
+/// over the same `a_list`: the registered combinations were built by
+/// the same forming kernels, and packed layout does not depend on
+/// residency.
 pub fn multiply_batched_bi_registered(
     server: &JobServer,
     acts: &StrassenActivations,
@@ -953,6 +1392,12 @@ pub fn multiply_batched_bi_registered(
         "depth mismatch: activations registered at {}, weights at {}",
         acts.depth,
         weights.depth
+    );
+    anyhow::ensure!(
+        acts.algo == weights.algo,
+        "schedule mismatch: activations formed under {}, weights under {}",
+        acts.algo.name(),
+        weights.algo.name()
     );
     anyhow::ensure!(
         acts.k == weights.k,
@@ -969,12 +1414,14 @@ pub fn multiply_batched_bi_registered(
         server,
         arena: ScratchArena::new(),
         run,
-        next_id: 0,
+        algo: weights.algo,
         leaf_gemms: 0,
         leaf_groups: 0,
         level_nodes: vec![0; depth],
         level_spawns: vec![0; depth],
+        combine: CombineStats::default(),
     };
+    ctx.arena.reset_stats();
 
     let (cs, padded) = if depth == 0 {
         let many_a: Vec<AOperand> =
@@ -1005,10 +1452,12 @@ pub fn multiply_batched_bi_registered(
     Ok(BatchedStrassenReport {
         cs,
         depth,
+        algo: weights.algo,
         leaf_groups: ctx.leaf_groups,
         leaf_gemms: ctx.leaf_gemms,
         level_nodes: ctx.level_nodes,
         level_spawns: ctx.level_spawns,
+        combine: ctx.combine,
         padded,
         model: None,
         arena: ctx.arena.stats(),
@@ -1035,6 +1484,7 @@ fn node_bi_registered(
     let (m2, n2) = (m / 2, n / 2);
     ctx.level_nodes[level] += 1;
     ctx.level_spawns[level] += 7;
+    ctx.combine.nodes += 1;
 
     // ms[j][member] = combination j's product for that member.
     let ms: Vec<Vec<Matrix>> = if depth_left == 1 {
@@ -1106,7 +1556,11 @@ mod tests {
     }
 
     fn cfg_depth(d: usize) -> StrassenConfig {
-        StrassenConfig { cutoff: Cutoff::Depth(d), run: Some(RunConfig::square(2, 16)) }
+        StrassenConfig {
+            cutoff: Cutoff::Depth(d),
+            run: Some(RunConfig::square(2, 16)),
+            ..StrassenConfig::default()
+        }
     }
 
     #[test]
@@ -1116,11 +1570,69 @@ mod tests {
         let b = Matrix::random(24, 40, 2);
         let r = multiply(&srv, &a, &b, &cfg_depth(1)).unwrap();
         assert_eq!(r.depth, 1);
+        assert_eq!(r.algo, StrassenAlgo::Winograd);
         assert_eq!(r.leaf_gemms, 7);
         assert_eq!(r.level_nodes, vec![1]);
         assert!((r.fanout(0) - 7.0).abs() < 1e-12);
         assert!(r.model.is_none(), "forced depth must not pay for the model sweep");
+        // Winograd node: 4 + 4 operand ops + 7 C-side ops; only S1/S2,
+        // S5/S6 and t1/t2 hit memory, 10 of 14 operand temps fused away.
+        assert_eq!(r.combine.nodes, 1);
+        assert_eq!(r.combine.combine_ops, 15);
+        assert_eq!(r.combine.temps_materialized, 6);
+        assert_eq!(r.combine.temps_avoided, 10);
         assert!(r.c.allclose(&a.matmul(&b), 1e-4));
+    }
+
+    #[test]
+    fn classic_depth1_counts_and_matches_winograd() {
+        let srv = server();
+        let a = Matrix::random(32, 24, 21);
+        let b = Matrix::random(24, 40, 22);
+        let classic = StrassenConfig { algo: StrassenAlgo::Classic, ..cfg_depth(1) };
+        let rc = multiply(&srv, &a, &b, &classic).unwrap();
+        assert_eq!(rc.algo, StrassenAlgo::Classic);
+        // Classic node: 5 + 5 operand ops + 8 C-side ops; at a fused
+        // leaf no schedule step feeds another, so nothing hits memory.
+        assert_eq!(rc.combine.combine_ops, 18);
+        assert_eq!(rc.combine.temps_materialized, 0);
+        assert_eq!(rc.combine.temps_avoided, 14);
+        let rw = multiply(&srv, &a, &b, &cfg_depth(1)).unwrap();
+        assert_eq!(rw.combine.combine_ops, 15);
+        assert!(
+            rw.combine.combine_ops < rc.combine.combine_ops,
+            "Winograd must save combine ops"
+        );
+        let oracle = a.matmul(&b);
+        assert!(rc.c.allclose(&oracle, 1e-3));
+        assert!(rw.c.allclose(&oracle, 1e-3));
+        assert!(rc.c.allclose(&rw.c, 1e-3), "the two schedules agree within tolerance");
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bit_for_bit() {
+        let srv = server();
+        let a = Matrix::random(40, 36, 31);
+        let b = Matrix::random(36, 44, 32);
+        let seq =
+            multiply(&srv, &a, &b, &StrassenConfig { parallel: false, ..cfg_depth(2) }).unwrap();
+        let par = multiply(&srv, &a, &b, &cfg_depth(2)).unwrap();
+        assert_eq!(par.c.data, seq.c.data, "parallel walk must be bit-identical");
+        assert_eq!(par.level_nodes, seq.level_nodes);
+        assert_eq!(par.level_spawns, seq.level_spawns);
+        assert_eq!(par.combine, seq.combine, "merged counters match the serial walk");
+        let again = multiply(&srv, &a, &b, &cfg_depth(2)).unwrap();
+        assert_eq!(par.c.data, again.c.data, "parallel runs must be deterministic");
+    }
+
+    #[test]
+    fn fused_leaves_count_fused_packs() {
+        let srv = server();
+        let a = Matrix::random(32, 24, 41);
+        let b = Matrix::random(24, 40, 42);
+        let r = multiply(&srv, &a, &b, &cfg_depth(1)).unwrap();
+        assert!(r.c.allclose(&a.matmul(&b), 1e-4));
+        assert_eq!(srv.metrics().fused_packs(), 14, "7 leaf jobs x 2 fused sides");
     }
 
     #[test]
@@ -1142,6 +1654,7 @@ mod tests {
         let r = multiply(&srv, &a, &b, &cfg_depth(0)).unwrap();
         assert_eq!((r.depth, r.leaf_gemms), (0, 1));
         assert_eq!(r.padded, (20, 12, 16));
+        assert_eq!(r.combine, CombineStats::default(), "no recursion, no combines");
         assert!(r.c.allclose(&a.matmul(&b), 1e-4));
     }
 
@@ -1167,10 +1680,15 @@ mod tests {
         let srv = server();
         let a = Matrix::random(64, 64, 11);
         let b = Matrix::random(64, 64, 12);
-        let cfg = StrassenConfig { cutoff: Cutoff::Model, run: Some(RunConfig::square(2, 16)) };
+        let cfg = StrassenConfig {
+            cutoff: Cutoff::Model,
+            run: Some(RunConfig::square(2, 16)),
+            ..StrassenConfig::default()
+        };
         let r = multiply(&srv, &a, &b, &cfg).unwrap();
         assert_eq!(r.depth, 0, "64^3 is far below the modeled crossover");
         assert_eq!(r.model.as_ref().unwrap().depth, 0);
+        assert_eq!(r.model.as_ref().unwrap().algo, StrassenAlgo::Winograd);
         assert!(r.c.allclose(&a.matmul(&b), 1e-4));
     }
 
@@ -1184,6 +1702,14 @@ mod tests {
         assert_eq!(r.leaf_gemms, 49);
         assert_eq!(r.level_nodes, vec![1, 7]);
         assert_eq!(r.level_spawns, vec![7, 49]);
+        // 8 Winograd nodes at 15 ops each; the interior node writes 16
+        // temps (4 steps + 3 quadrant copies per side, plus t1/t2) and
+        // each of the 7 fused leaves writes 6.
+        assert_eq!(r.combine.nodes, 8);
+        assert_eq!(r.combine.combine_ops, 120);
+        assert!((r.combine.ops_per_node() - 15.0).abs() < 1e-12);
+        assert_eq!(r.combine.temps_materialized, 16 + 7 * 6);
+        assert_eq!(r.combine.temps_avoided, 70);
         assert!(r.c.allclose(&a.matmul(&b), 1e-3));
         assert!(r.arena.reuses > 0, "deep recursion must recycle buffers");
     }
@@ -1203,6 +1729,7 @@ mod tests {
         let a_list: Vec<Matrix> = (0..3u64).map(|i| Matrix::random(32, 24, 101 + i)).collect();
         let r = multiply_batched(&srv, &a_list, &b, &cfg_depth(1)).unwrap();
         assert_eq!(r.depth, 1);
+        assert_eq!(r.algo, StrassenAlgo::Winograd);
         assert_eq!(r.leaf_groups, 7, "one shared-B group per combination");
         assert_eq!(r.leaf_gemms, 21);
         assert_eq!(r.level_nodes, vec![1]);
@@ -1220,9 +1747,10 @@ mod tests {
 
     #[test]
     fn batched_matches_single_member_multiply_bit_for_bit() {
-        // Same combos, same combine kernels, same leaf accumulation
+        // Same schedule, same combine kernels, same leaf accumulation
         // order: the shared-B recursion must agree with the per-member
-        // planner exactly, not just approximately.
+        // planner exactly, not just approximately — even though the
+        // batched side materializes operands the fused leaves stream.
         let srv = server();
         let b = Matrix::random(36, 44, 110);
         let a_list: Vec<Matrix> = (0..2u64).map(|i| Matrix::random(40, 36, 111 + i)).collect();
@@ -1277,11 +1805,13 @@ mod tests {
             (0..2u64).map(|i| Matrix::random(32, 24, 151 + i)).collect();
         let weights = register_weights(&srv, &b, 1).unwrap();
         assert_eq!(weights.depth(), 1);
+        assert_eq!(weights.algo(), StrassenAlgo::Winograd);
         assert_eq!(weights.leaf_handles().len(), 7);
         let run = Some(RunConfig::square(2, 16));
         let first = multiply_batched_registered(&srv, &a_list, &weights, run).unwrap();
         assert!(first.model.is_none());
         assert_eq!((first.depth, first.leaf_groups, first.leaf_gemms), (1, 7, 14));
+        assert_eq!(first.algo, StrassenAlgo::Winograd);
         let second = multiply_batched_registered(&srv, &a_list, &weights, run).unwrap();
         for ((a, c1), c2) in a_list.iter().zip(&first.cs).zip(&second.cs) {
             assert!(c1.allclose(&a.matmul(&b), 1e-4));
@@ -1304,6 +1834,29 @@ mod tests {
     }
 
     #[test]
+    fn registered_algos_must_agree_across_sides() {
+        let srv = server();
+        let b = Matrix::random(24, 40, 200);
+        let a_list: Vec<Matrix> =
+            (0..2u64).map(|i| Matrix::random(32, 24, 201 + i)).collect();
+        // Classic weights drive a classic recursion end to end...
+        let wc = register_weights_with(&srv, &b, 1, StrassenAlgo::Classic).unwrap();
+        assert_eq!(wc.algo(), StrassenAlgo::Classic);
+        let run = Some(RunConfig::square(2, 16));
+        let r = multiply_batched_registered(&srv, &a_list, &wc, run).unwrap();
+        assert_eq!(r.algo, StrassenAlgo::Classic);
+        assert_eq!(r.combine.combine_ops, 2 * (5 + 8), "2 members x (5 A-side + 8 C-side ops)");
+        for (a, c) in a_list.iter().zip(&r.cs) {
+            assert!(c.allclose(&a.matmul(&b), 1e-4));
+        }
+        // ...and a bi-registered run rejects mixed schedules up front.
+        let aw = register_activations_with(&srv, &a_list, 1, StrassenAlgo::Winograd).unwrap();
+        assert!(multiply_batched_bi_registered(&srv, &aw, &wc, run).is_err());
+        aw.unregister(&srv).unwrap();
+        wc.unregister(&srv).unwrap();
+    }
+
+    #[test]
     fn bi_registered_leaves_reuse_activation_packs() {
         // Registering the A side too: the 7 x batch activation combos
         // pack once on the first bi-registered run, and a repeat run
@@ -1317,6 +1870,7 @@ mod tests {
         let inline = multiply_batched_registered(&srv, &a_list, &weights, run).unwrap();
         let acts = register_activations(&srv, &a_list, 1).unwrap();
         assert_eq!((acts.depth(), acts.batch()), (1, 2));
+        assert_eq!(acts.algo(), StrassenAlgo::Winograd);
         assert_eq!(acts.leaf_handles().len(), 7);
         let m = srv.metrics();
         let packs_before = m.a_panel_packs();
@@ -1392,7 +1946,11 @@ mod tests {
         let srv = server();
         let a = Matrix::random(8, 8, 17);
         let b = Matrix::random(8, 8, 18);
-        let cfg = StrassenConfig { cutoff: Cutoff::Depth(1), run: Some(RunConfig::square(4, 256)) };
+        let cfg = StrassenConfig {
+            cutoff: Cutoff::Depth(1),
+            run: Some(RunConfig::square(4, 256)),
+            ..StrassenConfig::default()
+        };
         assert!(multiply(&srv, &a, &b, &cfg).is_err());
     }
 }

@@ -1,21 +1,25 @@
 //! Strassen correctness against the scalar oracle over ragged shapes.
 //!
 //! The planner's whole pipeline runs per case: Section-IV padding to a
-//! `2^depth` multiple, quadrant views, add/sub operand combos, the
-//! 7-way job-group fan-out through a real `JobServer`, and the arena-
-//! backed recombination. Every result is compared against the naive
-//! triple-loop oracle with an explicit FP32 tolerance.
+//! `2^depth` multiple, quadrant views, schedule-driven operand forming
+//! (Winograd by default, classic on request), the 7-way job-group
+//! fan-out with fused leaf packing through a real `JobServer`, the
+//! parallel recursion walk, and the arena-backed recombination. Every
+//! result is compared against the naive triple-loop oracle with an
+//! explicit FP32 tolerance.
 
 use multi_array::config::{HardwareConfig, RunConfig};
 use multi_array::coordinator::{JobServer, NumericsEngine, ServerConfig};
 use multi_array::gemm::Matrix;
-use multi_array::strassen::{multiply, Cutoff, StrassenConfig};
+use multi_array::strassen::{multiply, Cutoff, StrassenAlgo, StrassenConfig};
 
 /// Relative tolerance (scaled by `max |C|`, see `Matrix::allclose`) for
 /// Strassen results. The quadrant sums double operand magnitudes per
 /// level and reassociate the additions, so the error grows with depth;
 /// a numpy port measured worst-case relative error ~2e-6 at depth 3
 /// over random `[-1, 1)` operands — 1e-3 leaves three orders of margin.
+/// The Winograd form chains sums one step deeper (S2 = S1 - A11,
+/// S4 = A12 - S2) but stays within the same bound at these depths.
 const TOL: f32 = 1e-3;
 
 /// 33 ragged shapes: primes, odd dims, degenerate 1s, mixed
@@ -70,7 +74,11 @@ fn server() -> JobServer {
 }
 
 fn cfg(cutoff: Cutoff) -> StrassenConfig {
-    StrassenConfig { cutoff, run: Some(RunConfig::square(2, 16)) }
+    StrassenConfig {
+        cutoff,
+        run: Some(RunConfig::square(2, 16)),
+        ..StrassenConfig::default()
+    }
 }
 
 #[test]
@@ -116,15 +124,109 @@ fn ragged_shapes_match_oracle_two_levels() {
 }
 
 #[test]
+fn winograd_and_classic_match_oracle_depths_1_to_3() {
+    // The two schedules against the oracle and against each other, over
+    // ragged prime/odd shapes at every forced depth — with the per-node
+    // combine-op counts (15 vs 18) and the fused-leaf temp savings
+    // asserted from the report's metrics, not assumed.
+    let srv = server();
+    let shapes = [(17, 19, 23), (29, 13, 7), (33, 17, 65), (41, 43, 47)];
+    for (i, &(m, k, n)) in shapes.iter().enumerate() {
+        for depth in 1..=3usize {
+            let a = Matrix::random(m, k, 5000 + i as u64);
+            let b = Matrix::random(k, n, 6000 + i as u64);
+            let want = a.matmul(&b);
+            let wino = multiply(&srv, &a, &b, &cfg(Cutoff::Depth(depth))).unwrap();
+            let classic = multiply(
+                &srv,
+                &a,
+                &b,
+                &StrassenConfig { algo: StrassenAlgo::Classic, ..cfg(Cutoff::Depth(depth)) },
+            )
+            .unwrap();
+            assert_eq!(wino.algo, StrassenAlgo::Winograd);
+            assert_eq!(classic.algo, StrassenAlgo::Classic);
+            assert_eq!(wino.depth, classic.depth, "{m}x{k}x{n} depth {depth}");
+            assert!(
+                wino.c.allclose(&want, TOL),
+                "{m}x{k}x{n} depth {depth} winograd: max err {}",
+                wino.c.max_abs_diff(&want)
+            );
+            assert!(
+                classic.c.allclose(&want, TOL),
+                "{m}x{k}x{n} depth {depth} classic: max err {}",
+                classic.c.max_abs_diff(&want)
+            );
+            assert!(
+                wino.c.allclose(&classic.c, TOL),
+                "{m}x{k}x{n} depth {depth}: schedules disagree by {}",
+                wino.c.max_abs_diff(&classic.c)
+            );
+            if wino.depth > 0 {
+                assert!((wino.combine.ops_per_node() - 15.0).abs() < 1e-12);
+                assert!((classic.combine.ops_per_node() - 18.0).abs() < 1e-12);
+                // Fused leaves: Winograd materializes 4 of 14 operand
+                // temps per leaf node, classic none at all.
+                let leaves = wino.level_nodes[wino.depth - 1];
+                assert_eq!(wino.combine.temps_avoided, 10 * leaves);
+                assert_eq!(classic.combine.temps_avoided, 14 * leaves);
+                assert!(
+                    wino.combine.temps_avoided >= wino.combine.nodes,
+                    "at least one temp set saved per node"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_walk_is_bit_identical_and_deterministic() {
+    // One shared server: the parallel tree walk must reproduce the
+    // sequential walk bit for bit (fixed join order, zeroed arena
+    // buffers) and repeat runs must reproduce themselves.
+    let srv = server();
+    let (m, k, n) = (37, 53, 41);
+    let a = Matrix::random(m, k, 91);
+    let b = Matrix::random(k, n, 92);
+    let seq = multiply(
+        &srv,
+        &a,
+        &b,
+        &StrassenConfig { parallel: false, ..cfg(Cutoff::Depth(3)) },
+    )
+    .unwrap();
+    let par = multiply(&srv, &a, &b, &cfg(Cutoff::Depth(3))).unwrap();
+    assert_eq!(par.depth, 3);
+    assert_eq!(par.c.data, seq.c.data, "parallel result diverged from sequential");
+    assert_eq!(par.leaf_gemms, seq.leaf_gemms);
+    assert_eq!(par.level_nodes, seq.level_nodes);
+    assert_eq!(par.level_spawns, seq.level_spawns);
+    assert_eq!(par.combine, seq.combine, "merged sub-tree counters match serial walk");
+    for round in 0..2 {
+        let again = multiply(&srv, &a, &b, &cfg(Cutoff::Depth(3))).unwrap();
+        assert_eq!(again.c.data, par.c.data, "parallel round {round} not deterministic");
+    }
+    assert!(par.c.allclose(&a.matmul(&b), TOL));
+}
+
+#[test]
 fn deep_forced_recursion_recombines_correctly() {
     // Three levels on a prime-dimension problem: 343 leaf GEMMs over
     // padded 144x144x144 quadrant trees, recombined through the arena.
+    // Sequential walk: the arena-reuse ratio below relies on one arena
+    // threading the whole tree (the parallel walk splits it per thread).
     let srv = server();
     let (m, k, n) = (131, 137, 139);
     let a = Matrix::random(m, k, 77);
     let b = Matrix::random(k, n, 78);
     let want = a.matmul(&b);
-    let r = multiply(&srv, &a, &b, &cfg(Cutoff::Depth(3))).unwrap();
+    let r = multiply(
+        &srv,
+        &a,
+        &b,
+        &StrassenConfig { parallel: false, ..cfg(Cutoff::Depth(3)) },
+    )
+    .unwrap();
     assert_eq!(r.depth, 3);
     assert_eq!(r.leaf_gemms, 343);
     assert_eq!(r.level_nodes, vec![1, 7, 49]);
@@ -156,7 +258,7 @@ fn unpinned_leaves_use_server_default_plan() {
     let a = Matrix::random(24, 20, 7);
     let b = Matrix::random(20, 28, 8);
     let want = a.matmul(&b);
-    let cfg = StrassenConfig { cutoff: Cutoff::Depth(1), run: None };
+    let cfg = StrassenConfig { cutoff: Cutoff::Depth(1), run: None, ..StrassenConfig::default() };
     let r = multiply(&srv, &a, &b, &cfg).unwrap();
     assert!(r.c.allclose(&want, TOL));
 }
