@@ -4,6 +4,7 @@
 Usage:
     check_bench_regression.py [--gate LABEL ...] [--max-drop-frac F]
                               BASELINE.json FRESH.json [SERVING.json]
+    check_bench_regression.py --self-test
 
 Compares `elements_per_sec` of every gated label in FRESH against the
 checked-in BASELINE and fails (exit 1) on a drop of more than
@@ -15,9 +16,22 @@ so each gate arms itself automatically once real numbers are committed.
 A FRESH run missing a gated label always fails — the bench stopped
 emitting a gated metric.
 
+Records may carry a `dtype` string annotation (e.g. the hotpath bench
+tags `functional_block_128x256x128` with "f32" and its `_bf16` sibling
+with "bf16"), so one script gates every precision variant: each label
+is compared against the baseline record of the *same* label, and a
+dtype annotation disagreement between the two is a hard FAIL — it means
+the label was silently rebound to a different precision, which would
+let a slow f32 run pass against a fast bf16 baseline (or vice versa).
+A baseline record without a dtype tag (recorded before tagging) pairs
+with any fresh dtype and passes with a notice until re-recorded.
+
 When SERVING.json is given, also sanity-checks that the cross-job
 stealing mode does not show a *higher* worker idle fraction than the
 per-job-pool baseline; CI runners are noisy, so that check only warns.
+
+--self-test runs the built-in gate scenarios (no files needed) and
+exits 0 only if every scenario behaves as specified above.
 """
 
 import argparse
@@ -58,9 +72,27 @@ def check_label(label, baseline, fresh, base_path, fresh_path, max_drop):
             "runner to arm it."
         )
         return True
+    base_dtype = baseline[label].get("dtype")
+    fresh_dtype = fresh[label].get("dtype")
+    if base_dtype is not None and fresh_dtype is not None and base_dtype != fresh_dtype:
+        print(
+            f"FAIL: '{label}' dtype mismatch — baseline tagged "
+            f"{base_dtype!r}, fresh tagged {fresh_dtype!r}; the label "
+            "was rebound to a different precision, so the comparison "
+            "is meaningless. Re-record the baseline."
+        )
+        return False
+    if (base_dtype is None) != (fresh_dtype is None):
+        tagged = fresh_dtype if base_dtype is None else base_dtype
+        print(
+            f"NOTICE: '{label}' dtype tag present on only one side "
+            f"({tagged!r}); comparing anyway. Re-record the baseline to "
+            "carry the tag."
+        )
     drop = (base_tput - fresh_tput) / base_tput
+    dt = f" [{fresh_dtype}]" if fresh_dtype else ""
     print(
-        f"{label}: baseline {base_tput:.3e} elem/s, "
+        f"{label}{dt}: baseline {base_tput:.3e} elem/s, "
         f"fresh {fresh_tput:.3e} elem/s, drop {drop * 100:+.1f}%"
     )
     if drop > max_drop:
@@ -87,6 +119,91 @@ def check_serving(path):
         print("NOTICE: serving idle-fraction annotations missing; skipped")
 
 
+def self_test():
+    """Exercise every gate behavior on synthetic reports; returns 0/1."""
+
+    def rec(tput, dtype=None):
+        r = {"elements_per_sec": tput}
+        if dtype is not None:
+            r["dtype"] = dtype
+        return r
+
+    label = "functional_block_128x256x128"
+    bf16 = label + "_bf16"
+    scenarios = [
+        (
+            "small drop passes",
+            {label: rec(1.00e9, "f32")},
+            {label: rec(0.90e9, "f32")},
+            [label],
+            True,
+        ),
+        (
+            "big drop fails",
+            {label: rec(1.00e9, "f32")},
+            {label: rec(0.50e9, "f32")},
+            [label],
+            False,
+        ),
+        (
+            "unarmed baseline passes (self-arming)",
+            {},
+            {label: rec(1.00e9, "f32")},
+            [label],
+            True,
+        ),
+        (
+            "fresh missing a gated label fails",
+            {label: rec(1.00e9, "f32")},
+            {},
+            [label],
+            False,
+        ),
+        (
+            "dtype mismatch on one label fails",
+            {label: rec(1.00e9, "bf16")},
+            {label: rec(1.00e9, "f32")},
+            [label],
+            False,
+        ),
+        (
+            "untagged baseline pairs with tagged fresh",
+            {label: rec(1.00e9)},
+            {label: rec(0.95e9, "f32")},
+            [label],
+            True,
+        ),
+        (
+            "f32 and bf16 labels gate side by side",
+            {label: rec(1.00e9, "f32"), bf16: rec(1.60e9, "bf16")},
+            {label: rec(0.95e9, "f32"), bf16: rec(1.55e9, "bf16")},
+            [label, bf16],
+            True,
+        ),
+        (
+            "bf16 regression fails independently of f32",
+            {label: rec(1.00e9, "f32"), bf16: rec(1.60e9, "bf16")},
+            {label: rec(0.95e9, "f32"), bf16: rec(0.80e9, "bf16")},
+            [label, bf16],
+            False,
+        ),
+    ]
+    failures = 0
+    for name, baseline, fresh, gates, want_pass in scenarios:
+        ok = True
+        for g in gates:
+            ok = check_label(g, baseline, fresh, "<baseline>", "<fresh>", 0.20) and ok
+        verdict = "ok" if ok == want_pass else "SELF-TEST FAILURE"
+        print(f"self-test [{name}]: gate {'passed' if ok else 'failed'} — {verdict}")
+        if ok != want_pass:
+            failures += 1
+    if failures:
+        print(f"self-test: {failures}/{len(scenarios)} scenarios misbehaved")
+        return 1
+    print(f"self-test: all {len(scenarios)} scenarios behaved")
+    return 0
+
+
 def main(argv):
     parser = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
@@ -98,10 +215,20 @@ def main(argv):
         help=f"label to gate (repeatable; default: {DEFAULT_GATES})",
     )
     parser.add_argument("--max-drop-frac", type=float, default=0.20)
-    parser.add_argument("baseline")
-    parser.add_argument("fresh")
+    parser.add_argument(
+        "--self-test",
+        action="store_true",
+        help="run the built-in gate scenarios and exit",
+    )
+    parser.add_argument("baseline", nargs="?")
+    parser.add_argument("fresh", nargs="?")
     parser.add_argument("serving", nargs="?")
     args = parser.parse_args(argv[1:])
+
+    if args.self_test:
+        return self_test()
+    if not args.baseline or not args.fresh:
+        parser.error("BASELINE and FRESH reports are required (or --self-test)")
 
     gates = args.gate if args.gate else DEFAULT_GATES
     baseline = load_results(args.baseline)

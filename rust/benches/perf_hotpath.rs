@@ -17,7 +17,7 @@ use multi_array::accelerator::{Accelerator, SimOptions};
 use multi_array::blocking::BlockPlan;
 use multi_array::config::{HardwareConfig, RunConfig};
 use multi_array::ddr::{DdrConfig, DdrSim, StreamPattern};
-use multi_array::gemm::{self, DisjointBlocks, Matrix, PackedPanels};
+use multi_array::gemm::{self, DisjointBlocks, Dtype, Matrix, PackedPanels};
 use multi_array::mpe::LinearArray;
 use multi_array::util::Bench;
 use multi_array::wqm::AtomicWqm;
@@ -71,6 +71,17 @@ fn main() {
         // SAFETY: single-threaded; one writer per iteration.
         unsafe { gemm::task_product_into(&panels, &task, &writer) };
     });
+    bench.annotate_str("dtype", "f32");
+    // Same task with bf16-packed panels: half the panel bytes, the
+    // widen-on-load microkernel accumulating in f32.
+    let panels_bf16 = PackedPanels::pack_dtype(a.view(), b.view(), &plan, Dtype::Bf16);
+    let mut c_bf16 = Matrix::zeros(128, 128);
+    bench.run_throughput("functional_block_128x256x128_bf16", flops, || {
+        let writer = DisjointBlocks::new(c_bf16.view_mut());
+        // SAFETY: single-threaded; one writer per iteration.
+        unsafe { gemm::task_product_into(&panels_bf16, &task, &writer) };
+    });
+    bench.annotate_str("dtype", "bf16");
 
     // Per-job setup costs the packed path amortizes over all tasks.
     bench.run("pack_panels_128x256x128", || {

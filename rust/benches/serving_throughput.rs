@@ -37,6 +37,10 @@
 //!   Q/K/V/O weights (B side) — after warmup, repeated runs pack
 //!   nothing on either side (`a_cache_hits`/`b_cache_hits`
 //!   annotations). Also CI-gated;
+//! * `serving_registered_attention_bf16` — the same block served at
+//!   bf16 on a fresh server (half-width packed panels, widen-on-load
+//!   f32 accumulate); its record carries a `dtype` tag so the gate
+//!   pairs baseline and fresh runs per precision. Also CI-gated;
 //! * `serving_multi_tenant` — the admission front end under tenancy:
 //!   two tenants with 1:3 DRR weights push the same backlogged mouse
 //!   stream under per-job deadlines; `deadline_miss_frac` and the
@@ -243,8 +247,10 @@ fn main() {
     // weights and every projection's activation from the cache. CI-gated.
     {
         use multi_array::attention::{
-            attention_block_registered, ActivationBatch, AttentionWeights,
+            attention_block_registered, attention_block_registered_dtype, ActivationBatch,
+            AttentionWeights,
         };
+        use multi_array::gemm::Dtype;
         const D_MODEL: usize = 64;
         const SEQ: usize = 48;
         const BATCH: usize = 4;
@@ -275,6 +281,43 @@ fn main() {
         bench.annotate("batch", BATCH as f64);
         bench.annotate("seq", SEQ as f64);
         bench.annotate("d_model", D_MODEL as f64);
+        bench.annotate_str("dtype", "f32");
+        abatch.unregister(&srv).expect("unregister activations");
+        weights.unregister(&srv).expect("unregister weights");
+        srv.shutdown();
+
+        // The same block served at bf16 on a fresh server: panels pack
+        // at half width, the microkernel widens on load and accumulates
+        // in f32. Same residency contract — the warmup pass is the only
+        // one that packs the bf16 variants. CI-gated next to the f32
+        // label; the gate pairs records by (label, dtype).
+        let srv = JobServer::new(HardwareConfig::paper(), NumericsEngine::golden(), shared_cfg())
+            .expect("server construction");
+        let weights = AttentionWeights::random(&srv, D_MODEL, 7100).expect("register weights");
+        let abatch = ActivationBatch::register(&srv, &xs).expect("register activations");
+        bench.run_throughput("serving_registered_attention_bf16", attn_flops, || {
+            let outs = attention_block_registered_dtype(
+                &srv,
+                &abatch,
+                &weights,
+                Some(attn_run),
+                Dtype::Bf16,
+            )
+            .expect("attention block");
+            assert_eq!(outs.len(), BATCH);
+        });
+        let stats = srv.stats();
+        assert_eq!(
+            stats.registry_a_misses, BATCH as u64,
+            "each activation packs its bf16 variant once, ever"
+        );
+        bench.annotate("a_cache_hits", stats.registry_a_hits as f64);
+        bench.annotate("a_cache_misses", stats.registry_a_misses as f64);
+        bench.annotate("b_cache_hits", stats.registry_hits as f64);
+        bench.annotate("batch", BATCH as f64);
+        bench.annotate("seq", SEQ as f64);
+        bench.annotate("d_model", D_MODEL as f64);
+        bench.annotate_str("dtype", "bf16");
         abatch.unregister(&srv).expect("unregister activations");
         weights.unregister(&srv).expect("unregister weights");
         srv.shutdown();

@@ -18,11 +18,15 @@ pub mod bandwidth;
 pub mod strassen;
 
 pub use bandwidth::BandwidthSurface;
-pub use strassen::{strassen_crossover, strassen_crossover_with, CrossoverPlan, StrassenAlgo};
+pub use strassen::{
+    strassen_crossover, strassen_crossover_dtype, strassen_crossover_with, CrossoverPlan,
+    StrassenAlgo,
+};
 
 
 use crate::blocking::BlockPlan;
 use crate::config::{HardwareConfig, RunConfig};
+use crate::gemm::Dtype;
 use crate::mpe::timing::TaskTiming;
 
 /// Everything Eqs. 3–7 say about one `(problem, config)` pair.
@@ -83,6 +87,30 @@ pub fn t_work(si: usize, sj: usize, k: usize, bw: f64) -> f64 {
     4.0 * (si as f64 * k as f64 + sj as f64 * k as f64 + si as f64 * sj as f64) / bw
 }
 
+/// Relative per-MAC DSP cost of one fused multiply-add at `dtype`,
+/// normalized to the f32 pipeline the paper synthesizes (2 DSP48E1
+/// slices per f32 FMA on the VC709). A double-precision FMA consumes
+/// roughly 2.3× the DSP budget (wider partial products, deeper
+/// alignment); a half-input FMA that widens to f32 accumulate saves the
+/// multiplier array's LSB half but keeps the f32 adder — about 0.65×.
+pub fn mac_cost(dtype: Dtype) -> f64 {
+    match dtype {
+        Dtype::F64 => 2.28,
+        Dtype::F32 => 1.0,
+        Dtype::F16 | Dtype::Bf16 => 0.65,
+    }
+}
+
+/// Eq. 4 at reduced (or extended) operand precision: `SA_i` and `SB_j`
+/// move at `dtype`'s element width while the `C_ij` writeback stays
+/// f32 (the accumulate-in-f32 pipeline streams f32 results regardless
+/// of operand precision). Collapses to [`t_work`] exactly at `F32`.
+pub fn t_work_dtype(si: usize, sj: usize, k: usize, bw: f64, dtype: Dtype) -> f64 {
+    let operand_bytes = dtype.bytes() as f64 * (si as f64 * k as f64 + sj as f64 * k as f64);
+    let c_bytes = 4.0 * si as f64 * sj as f64;
+    (operand_bytes + c_bytes) / bw
+}
+
 /// Full model evaluation, Eqs. 3–7.
 pub fn predict(
     hw: &HardwareConfig,
@@ -98,6 +126,41 @@ pub fn predict(
     let tw = t_work(run.si, run.sj, k, bw);
     let t_trans = nw as f64 * tw;
     let t_compute = nw as f64
+        * TaskTiming::per_task(run.si, run.sj, k, hw.fmac_stages).total() as f64
+        / (hw.freq_mhz * 1e6);
+    Ok(Prediction {
+        n_work: nw,
+        bw,
+        t_work: tw,
+        t_trans,
+        t_compute,
+        lower: t_compute,
+        upper: t_trans + t_compute,
+    })
+}
+
+/// [`predict`] with a per-precision cost model: the transfer term uses
+/// [`t_work_dtype`] (operands at `dtype` width, f32 `C` writeback) and
+/// the compute term scales by [`mac_cost`] — a wider MAC runs
+/// proportionally fewer PEs at the same DSP budget, a narrower one
+/// proportionally more. Identical to [`predict`] at `F32`; the DSE
+/// prices `(config, dtype)` pairs with this.
+pub fn predict_dtype(
+    hw: &HardwareConfig,
+    run: &RunConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+    dtype: Dtype,
+) -> anyhow::Result<Prediction> {
+    run.validate(hw)?;
+    let nw = n_work(m, n, run.si, run.sj, run.np);
+    let bw = surface.bw(run.np, run.si);
+    let tw = t_work_dtype(run.si, run.sj, k, bw, dtype);
+    let t_trans = nw as f64 * tw;
+    let t_compute = mac_cost(dtype)
+        * nw as f64
         * TaskTiming::per_task(run.si, run.sj, k, hw.fmac_stages).total() as f64
         / (hw.freq_mhz * 1e6);
     Ok(Prediction {
@@ -161,6 +224,33 @@ mod tests {
         let t = t_work(128, 128, 1200, bw);
         let bytes = 4.0 * (128.0 * 1200.0 + 128.0 * 1200.0 + 128.0 * 128.0);
         assert!((t - bytes / bw).abs() < 1e-15);
+    }
+
+    #[test]
+    fn dtype_model_f32_matches_base_and_widths_order() {
+        let hw = HardwareConfig::paper();
+        let s = surface();
+        let run = RunConfig::square(2, 128);
+        let base = predict(&hw, &run, 128, 1200, 729, &s).unwrap();
+        let f32d = predict_dtype(&hw, &run, 128, 1200, 729, &s, Dtype::F32).unwrap();
+        assert_eq!(base.t_trans.to_bits(), f32d.t_trans.to_bits(), "F32 is the base model");
+        assert_eq!(base.t_compute.to_bits(), f32d.t_compute.to_bits());
+        // Narrower operands move less, wider ones more; compute scales
+        // with the MAC cost table in the same order.
+        let f64d = predict_dtype(&hw, &run, 128, 1200, 729, &s, Dtype::F64).unwrap();
+        let bf16 = predict_dtype(&hw, &run, 128, 1200, 729, &s, Dtype::Bf16).unwrap();
+        assert!(bf16.t_trans < f32d.t_trans && f32d.t_trans < f64d.t_trans);
+        assert!(bf16.t_compute < f32d.t_compute && f32d.t_compute < f64d.t_compute);
+    }
+
+    #[test]
+    fn t_work_dtype_byte_count_keeps_f32_writeback() {
+        let bw = 1e9;
+        let t = t_work_dtype(128, 128, 1200, bw, Dtype::Bf16);
+        let bytes = 2.0 * (128.0 * 1200.0 + 128.0 * 1200.0) + 4.0 * 128.0 * 128.0;
+        assert!((t - bytes / bw).abs() < 1e-15);
+        let t32 = t_work_dtype(128, 128, 1200, bw, Dtype::F32);
+        assert_eq!(t32.to_bits(), t_work(128, 128, 1200, bw).to_bits());
     }
 
     #[test]

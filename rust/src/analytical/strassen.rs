@@ -28,9 +28,10 @@
 //! cutoff policy.
 
 use crate::config::{HardwareConfig, RunConfig};
+use crate::gemm::Dtype;
 
 use super::bandwidth::{BandwidthSurface, SI_GRID};
-use super::{feasible_nps, predict};
+use super::{feasible_nps, predict_dtype};
 
 /// Recursion is only considered while both halves keep at least one
 /// full `S_i = 16` block granule per dimension.
@@ -150,6 +151,23 @@ pub fn combine_secs(
     (a_bytes + b_bytes + c_bytes) / bw
 }
 
+/// [`combine_secs`] at a leaf precision: the combine constants above are
+/// f32 (4-byte) element traffic; at a narrower or wider leaf dtype the
+/// same element counts move proportionally fewer or more bytes. Exactly
+/// [`combine_secs`] at `F32` (the scale factor is 1.0).
+#[allow(clippy::too_many_arguments)]
+pub fn combine_secs_dtype(
+    algo: StrassenAlgo,
+    fused: bool,
+    m2: usize,
+    k2: usize,
+    n2: usize,
+    bw: f64,
+    dtype: Dtype,
+) -> f64 {
+    combine_secs(algo, fused, m2, k2, n2, bw) * (dtype.bytes() as f64 / 4.0)
+}
+
 /// Best direct time for `(m, k, n)`: minimum overlap estimate over the
 /// Eq. 9-feasible `(N_p, S_i)` space — the same
 /// [`crate::dse::candidate_sis`] sweep [`crate::dse::explore`] ranks,
@@ -161,10 +179,23 @@ pub fn best_direct_secs(
     n: usize,
     surface: &BandwidthSurface,
 ) -> anyhow::Result<f64> {
+    best_direct_secs_dtype(hw, m, k, n, surface, Dtype::F32)
+}
+
+/// [`best_direct_secs`] priced at `dtype` via
+/// [`predict_dtype`](super::predict_dtype) — identical at `F32`.
+pub fn best_direct_secs_dtype(
+    hw: &HardwareConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+    dtype: Dtype,
+) -> anyhow::Result<f64> {
     let mut best: Option<f64> = None;
     for si in crate::dse::candidate_sis(hw, m) {
         for np in feasible_nps(hw, si) {
-            let p = predict(hw, &RunConfig::square(np, si), m, k, n, surface)?;
+            let p = predict_dtype(hw, &RunConfig::square(np, si), m, k, n, surface, dtype)?;
             let t = p.t_overlap();
             if best.map(|b| t < b).unwrap_or(true) {
                 best = Some(t);
@@ -198,10 +229,26 @@ pub fn strassen_crossover_with(
     surface: &BandwidthSurface,
     algo: StrassenAlgo,
 ) -> anyhow::Result<CrossoverPlan> {
+    strassen_crossover_dtype(hw, m, k, n, surface, algo, Dtype::F32)
+}
+
+/// [`strassen_crossover_with`] priced at a leaf precision: leaf products
+/// cost [`best_direct_secs_dtype`] and combine traffic scales with the
+/// element width ([`combine_secs_dtype`]). Identical at `F32` — the
+/// base functions delegate here.
+pub fn strassen_crossover_dtype(
+    hw: &HardwareConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+    algo: StrassenAlgo,
+    dtype: Dtype,
+) -> anyhow::Result<CrossoverPlan> {
     // Combine traffic streams sequentially through one master; use the
     // surface's best single-master point (largest calibrated burst).
     let combine_bw = surface.bw(1, SI_GRID[SI_GRID.len() - 1]);
-    let (levels, t_chosen) = eval_level(hw, m, k, n, surface, combine_bw, algo)?;
+    let (levels, t_chosen) = eval_level(hw, m, k, n, surface, combine_bw, algo, dtype)?;
     let depth = levels.len() - 1;
     Ok(CrossoverPlan { m, k, n, algo, depth, t_direct: levels[0].t_direct, levels, t_chosen })
 }
@@ -217,8 +264,9 @@ fn eval_level(
     surface: &BandwidthSurface,
     combine_bw: f64,
     algo: StrassenAlgo,
+    dtype: Dtype,
 ) -> anyhow::Result<(Vec<LevelDecision>, f64)> {
-    let t_direct = best_direct_secs(hw, m, k, n, surface)?;
+    let t_direct = best_direct_secs_dtype(hw, m, k, n, surface, dtype)?;
     let (m2, k2, n2) = (m.div_ceil(2), k.div_ceil(2), n.div_ceil(2));
     if m2 < MIN_HALF || k2 < MIN_HALF || n2 < MIN_HALF {
         let leaf = LevelDecision {
@@ -232,11 +280,11 @@ fn eval_level(
         };
         return Ok((vec![leaf], t_direct));
     }
-    let (child_levels, t_child) = eval_level(hw, m2, k2, n2, surface, combine_bw, algo)?;
+    let (child_levels, t_child) = eval_level(hw, m2, k2, n2, surface, combine_bw, algo, dtype)?;
     // Children that run direct are leaves: their parent fuses operand
     // formation into the pack pass instead of materializing temps.
     let fused = child_levels.len() == 1;
-    let combine = combine_secs(algo, fused, m2, k2, n2, combine_bw);
+    let combine = combine_secs_dtype(algo, fused, m2, k2, n2, combine_bw, dtype);
     let t_strassen = 7.0 * t_child + combine;
     let recurse = t_strassen < t_direct;
     let here = LevelDecision { m, k, n, t_direct, t_strassen, combine_secs: combine, recurse };
@@ -339,6 +387,28 @@ mod tests {
         // classic's copy-heavy schedule fuses better at leaf-parents.
         assert!(at(StrassenAlgo::Winograd, false) < at(StrassenAlgo::Classic, false));
         assert!(at(StrassenAlgo::Classic, true) < at(StrassenAlgo::Winograd, true));
+    }
+
+    #[test]
+    fn dtype_crossover_f32_is_the_base_model() {
+        let (hw, s) = setup();
+        let base = strassen_crossover_with(&hw, 8192, 8192, 8192, &s, StrassenAlgo::Winograd)
+            .unwrap();
+        let f32d = strassen_crossover_dtype(
+            &hw, 8192, 8192, 8192, &s, StrassenAlgo::Winograd, Dtype::F32,
+        )
+        .unwrap();
+        assert_eq!(base.depth, f32d.depth);
+        assert_eq!(base.t_chosen.to_bits(), f32d.t_chosen.to_bits());
+        assert_eq!(base.t_direct.to_bits(), f32d.t_direct.to_bits());
+        // Narrower leaves move less combine traffic and compute cheaper
+        // MACs: the bf16 plan can only be as fast or faster.
+        let bf16 = strassen_crossover_dtype(
+            &hw, 8192, 8192, 8192, &s, StrassenAlgo::Winograd, Dtype::Bf16,
+        )
+        .unwrap();
+        assert!(bf16.t_chosen <= f32d.t_chosen);
+        assert!(bf16.t_direct < f32d.t_direct);
     }
 
     #[test]

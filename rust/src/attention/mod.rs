@@ -31,7 +31,7 @@ use crate::coordinator::{
     ActivationHandle, AOperand, BOperand, GemmJob, JobServer, SpanKind, Submission,
     WeightHandle,
 };
-use crate::gemm::Matrix;
+use crate::gemm::{Dtype, Matrix};
 
 /// One attention block's projection weights as server-resident state:
 /// `W_q`, `W_k`, `W_v`, `W_o`, each `d_model x d_model`, registered
@@ -195,6 +195,21 @@ pub fn attention_block_registered(
     weights: &AttentionWeights,
     run: Option<RunConfig>,
 ) -> anyhow::Result<Vec<Matrix>> {
+    attention_block_registered_dtype(server, batch, weights, run, Dtype::F32)
+}
+
+/// [`attention_block_registered`] at a serving precision: every GEMM of
+/// the block submits at `dtype`, so one registered batch and weight set
+/// serve several precisions side by side — the registry caches one pack
+/// per `(handle, S, dtype)` variant. `F32` is exactly the base entry
+/// point (which delegates here).
+pub fn attention_block_registered_dtype(
+    server: &JobServer,
+    batch: &ActivationBatch,
+    weights: &AttentionWeights,
+    run: Option<RunConfig>,
+    dtype: Dtype,
+) -> anyhow::Result<Vec<Matrix>> {
     anyhow::ensure!(
         batch.d_model == weights.d_model,
         "width mismatch: batch d_model = {}, weights d_model = {}",
@@ -203,7 +218,7 @@ pub fn attention_block_registered(
     );
     let xs =
         || -> Vec<AOperand> { batch.handles.iter().map(|&h| AOperand::from(h)).collect() };
-    block_core(server, &xs, weights.handles().map(BOperand::from), batch.d_model, run)
+    block_core(server, &xs, weights.handles().map(BOperand::from), batch.d_model, run, dtype)
 }
 
 /// The inline baseline: the same block over raw matrices — every
@@ -219,6 +234,22 @@ pub fn attention_block_inline(
     wv: &Matrix,
     wo: &Matrix,
     run: Option<RunConfig>,
+) -> anyhow::Result<Vec<Matrix>> {
+    attention_block_inline_dtype(server, xs, wq, wk, wv, wo, run, Dtype::F32)
+}
+
+/// [`attention_block_inline`] at a serving precision (see
+/// [`attention_block_registered_dtype`]).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_block_inline_dtype(
+    server: &JobServer,
+    xs: &[Matrix],
+    wq: &Matrix,
+    wk: &Matrix,
+    wv: &Matrix,
+    wo: &Matrix,
+    run: Option<RunConfig>,
+    dtype: Dtype,
 ) -> anyhow::Result<Vec<Matrix>> {
     anyhow::ensure!(!xs.is_empty(), "empty batch");
     let (seq, d_model) = (xs[0].rows, xs[0].cols);
@@ -238,7 +269,7 @@ pub fn attention_block_inline(
     let make_xs =
         || -> Vec<AOperand> { xs.iter().map(|x| AOperand::from(x.clone())).collect() };
     let ws = [wq, wk, wv, wo].map(|w| BOperand::from(w.clone()));
-    block_core(server, &make_xs, ws, d_model, run)
+    block_core(server, &make_xs, ws, d_model, run, dtype)
 }
 
 /// The shared block body: batched Q/K/V projections, per-member scaled
@@ -250,6 +281,7 @@ fn block_core(
     ws: [BOperand; 4],
     d_model: usize,
     run: Option<RunConfig>,
+    dtype: Dtype,
 ) -> anyhow::Result<Vec<Matrix>> {
     let [wq, wk, wv, wo] = ws;
 
@@ -257,9 +289,9 @@ fn block_core(
     // all in flight before the first wait so the pool sees the whole
     // fan-out at once.
     server.trace_span_begin(SpanKind::AttentionPhase, 0);
-    let gq = server.submit_async(Submission::batched(wq, make_xs()).run(run))?;
-    let gk = server.submit_async(Submission::batched(wk, make_xs()).run(run))?;
-    let gv = server.submit_async(Submission::batched(wv, make_xs()).run(run))?;
+    let gq = server.submit_async(Submission::batched(wq, make_xs()).run(run).dtype(dtype))?;
+    let gk = server.submit_async(Submission::batched(wk, make_xs()).run(run).dtype(dtype))?;
+    let gv = server.submit_async(Submission::batched(wv, make_xs()).run(run).dtype(dtype))?;
     let qs: Vec<Matrix> = gq.wait()?.into_iter().map(|r| r.c).collect();
     let ks: Vec<Matrix> = gk.wait()?.into_iter().map(|r| r.c).collect();
     let vs: Vec<Matrix> = gv.wait()?.into_iter().map(|r| r.c).collect();
@@ -280,7 +312,7 @@ fn block_core(
         })
         .collect();
     let scores: Vec<Matrix> = server
-        .submit_blocking(Submission::group(score_jobs))?
+        .submit_blocking(Submission::group(score_jobs).dtype(dtype))?
         .into_iter()
         .map(|r| r.c)
         .collect();
@@ -298,7 +330,7 @@ fn block_core(
         .map(|(i, (p, v))| GemmJob { id: i as u64, a: p.into(), b: v.into(), run })
         .collect();
     let ctxs: Vec<Matrix> = server
-        .submit_blocking(Submission::group(ctx_jobs))?
+        .submit_blocking(Submission::group(ctx_jobs).dtype(dtype))?
         .into_iter()
         .map(|r| r.c)
         .collect();
@@ -306,7 +338,7 @@ fn block_core(
 
     // Output projection: one shared-B group over the fresh contexts.
     server.trace_span_begin(SpanKind::AttentionPhase, 2);
-    let go = server.submit_async(Submission::batched(wo, ctxs).run(run))?;
+    let go = server.submit_async(Submission::batched(wo, ctxs).run(run).dtype(dtype))?;
     let out = go.wait()?.into_iter().map(|r| r.c).collect();
     server.trace_span_end(SpanKind::AttentionPhase, 2);
     Ok(out)
@@ -411,6 +443,55 @@ mod tests {
         for (o, b) in oracle.iter().zip(&reg) {
             assert!(o.allclose(b, 1e-3), "served block must match the scalar oracle");
         }
+        batch.unregister(&srv).unwrap();
+        weights.unregister(&srv).unwrap();
+    }
+
+    #[test]
+    fn half_precision_block_tracks_oracle_and_packs_per_dtype_variant() {
+        let srv = server();
+        let (d, seq, members) = (16, 13, 2);
+        let xs = token_batch(members, seq, d, 740);
+        let wq = Matrix::random(d, d, 750);
+        let wk = Matrix::random(d, d, 751);
+        let wv = Matrix::random(d, d, 752);
+        let wo = Matrix::random(d, d, 753);
+        let run = Some(RunConfig::square(2, 16));
+        let oracle = attention_block_oracle(&xs, &wq, &wk, &wv, &wo);
+        let weights = AttentionWeights::register(
+            &srv,
+            wq.clone(),
+            wk.clone(),
+            wv.clone(),
+            wo.clone(),
+        )
+        .unwrap();
+        let batch = ActivationBatch::register(&srv, &xs).unwrap();
+        // The explicit-F32 variant is the base entry point, bitwise.
+        let base = attention_block_registered(&srv, &batch, &weights, run).unwrap();
+        let f32v =
+            attention_block_registered_dtype(&srv, &batch, &weights, run, Dtype::F32)
+                .unwrap();
+        for (a, b) in base.iter().zip(&f32v) {
+            assert_eq!(a.data, b.data, "explicit F32 must be the default path");
+        }
+        // Half-precision serving of the same registered operands stays
+        // close to the scalar oracle: five chained GEMMs, with the
+        // softmax renormalizing between them, so the loss is a few
+        // units of the per-GEMM bound (k·u ≈ 8e-3 f16 / 6e-2 bf16).
+        for (dtype, tol) in [(Dtype::F16, 5e-2), (Dtype::Bf16, 3e-1)] {
+            let out =
+                attention_block_registered_dtype(&srv, &batch, &weights, run, dtype)
+                    .unwrap();
+            for (o, b) in oracle.iter().zip(&out) {
+                assert!(o.allclose(b, tol), "{dtype} block must track the oracle");
+            }
+        }
+        // Registered operands pack once per (handle, S, dtype) variant:
+        // three serving dtypes touched the same members and weights.
+        let m = srv.metrics();
+        assert_eq!(m.registry_a_misses(), 3 * members as u64);
+        assert_eq!(m.registry_misses(), (3 * (members + 4)) as u64);
         batch.unregister(&srv).unwrap();
         weights.unregister(&srv).unwrap();
     }

@@ -28,7 +28,7 @@ use crate::accelerator::{Accelerator, SimOptions};
 use crate::config::{HardwareConfig, RunConfig};
 use crate::coordinator::{JobServer, SpanKind, Submission, WeightHandle};
 use crate::dse;
-use crate::gemm::Matrix;
+use crate::gemm::{Dtype, Matrix};
 
 use super::GemmLayer;
 
@@ -267,6 +267,32 @@ pub fn schedule_network_served_with(
     reconfig_secs: f64,
     batch: usize,
 ) -> anyhow::Result<NetworkSchedule> {
+    schedule_network_served_with_dtype(
+        server,
+        layers,
+        weights,
+        policy,
+        reconfig_secs,
+        batch,
+        Dtype::F32,
+    )
+}
+
+/// [`schedule_network_served_with`] at a serving precision: every
+/// layer's GEMMs submit at `dtype`, and the registry caches each
+/// weight's pack once per `(handle, S, dtype)` variant — one registered
+/// network serves several precisions side by side. `F32` is exactly the
+/// base entry point (which delegates here).
+#[allow(clippy::too_many_arguments)]
+pub fn schedule_network_served_with_dtype(
+    server: &JobServer,
+    layers: &[GemmLayer],
+    weights: &NetworkWeights,
+    policy: Policy,
+    reconfig_secs: f64,
+    batch: usize,
+    dtype: Dtype,
+) -> anyhow::Result<NetworkSchedule> {
     anyhow::ensure!(!layers.is_empty(), "empty layer sequence");
     anyhow::ensure!(batch >= 1, "batch must be >= 1");
     anyhow::ensure!(
@@ -287,12 +313,14 @@ pub fn schedule_network_served_with(
         if l.is_conv() {
             let many_a = conv_activations(l, batch, seed);
             handles.push(LayerHandle::Batched(
-                server.submit_async(Submission::batched(weight, many_a).run(run))?,
+                server.submit_async(
+                    Submission::batched(weight, many_a).run(run).dtype(dtype),
+                )?,
             ));
         } else {
             let a = Matrix::random(l.m, l.k, seed);
             handles.push(LayerHandle::Single(server.submit_async(
-                Submission::gemm(a, weight).id(i as u64).run(run),
+                Submission::gemm(a, weight).id(i as u64).run(run).dtype(dtype),
             )?));
         }
     }
@@ -639,6 +667,55 @@ mod tests {
         assert_eq!(m.registry_misses(), 2);
         assert_eq!(m.registry_hits(), 4);
         assert_eq!(m.jobs(), 3 * (batch as u64 + 1));
+        weights.unregister(&srv).unwrap();
+        assert_eq!(srv.stats().registered_weights, 0);
+    }
+
+    #[test]
+    fn served_network_at_two_dtypes_packs_per_variant() {
+        // One registered network streamed at f32 and then bf16: each
+        // layer's weight packs once per (handle, S, dtype) variant —
+        // two layers x two precisions — with no cross-dtype hits.
+        use crate::coordinator::{NumericsEngine, ServerConfig};
+        let (hw, _) = setup();
+        let srv = JobServer::new(
+            hw,
+            NumericsEngine::golden(),
+            ServerConfig {
+                workers: 4,
+                queue_capacity: 16,
+                batch_max_tasks: 0,
+                batch_window: 1,
+                cross_job_stealing: true,
+                default_run: None,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        let layers = vec![
+            GemmLayer { name: "convX", m: 12, k: 18, n: 36 },
+            GemmLayer { name: "fcX", m: 16, k: 12, n: 20 },
+        ];
+        let run = RunConfig::square(2, 16);
+        let weights = NetworkWeights::register(&srv, &layers).unwrap();
+        for dtype in [Dtype::F32, Dtype::Bf16] {
+            let s = schedule_network_served_with_dtype(
+                &srv,
+                &layers,
+                &weights,
+                Policy::Fixed(run),
+                0.0,
+                2,
+                dtype,
+            )
+            .unwrap();
+            assert_eq!(s.layers.len(), 2);
+            assert!(s.total_secs > 0.0);
+        }
+        let m = srv.metrics();
+        assert_eq!(m.b_panel_packs(), 4, "one pack per (weight, dtype) variant");
+        assert_eq!(m.registry_misses(), 4);
+        assert_eq!(m.registry_hits(), 0, "dtype variants must not alias");
         weights.unregister(&srv).unwrap();
         assert_eq!(srv.stats().registered_weights, 0);
     }

@@ -50,6 +50,7 @@ use std::task::{Context, Poll};
 use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
+use crate::gemm::Dtype;
 
 use super::registry::{AOperand, BOperand};
 use super::server::JobTicket;
@@ -130,6 +131,9 @@ pub struct Submission {
     pub(crate) deadline: Option<Duration>,
     /// Run-config pin applied to every job that has none of its own.
     pub(crate) run: Option<RunConfig>,
+    /// Storage precision for every job's packed panels (default `F32`,
+    /// which reproduces pre-multi-precision behavior bit for bit).
+    pub(crate) dtype: Dtype,
     /// Base job id (`JobResult::id`); shared-B members get `id + index`.
     pub(crate) id: u64,
 }
@@ -161,7 +165,14 @@ impl Submission {
     }
 
     fn with_kind(kind: SubmissionKind) -> Self {
-        Self { kind, tenant: TenantId::DEFAULT, deadline: None, run: None, id: 0 }
+        Self {
+            kind,
+            tenant: TenantId::DEFAULT,
+            deadline: None,
+            run: None,
+            dtype: Dtype::F32,
+            id: 0,
+        }
     }
 
     /// Submit as `tenant` (default [`TenantId::DEFAULT`]).
@@ -190,6 +201,19 @@ impl Submission {
     /// Base id reported back in [`JobResult::id`].
     pub fn id(mut self, id: u64) -> Self {
         self.id = id;
+        self
+    }
+
+    /// Storage precision for every job in the submission: operands are
+    /// converted into `dtype` at pack time and the microkernel runs the
+    /// matching per-dtype variant (accumulating in f32 for the half
+    /// types, natively in f64 for `F64`); results are always f32.
+    /// Default [`Dtype::F32`] — the legacy path, bit for bit. Non-f32
+    /// dtypes require an in-process numerics engine (the out-of-process
+    /// gather fallback is f32-only) and are rejected at planning
+    /// otherwise.
+    pub fn dtype(mut self, dtype: Dtype) -> Self {
+        self.dtype = dtype;
         self
     }
 
@@ -1047,6 +1071,16 @@ mod tests {
         let job = GemmJob { id: 9, a: a.into(), b: b.into(), run: None };
         let s: Submission = job.into();
         assert_eq!((s.jobs(), s.id), (1, 9));
+        // Dtype defaults to F32 everywhere (including the GemmJob
+        // conversion) and threads through the chained setter; inline
+        // byte billing stays element-count based regardless of dtype.
+        assert_eq!(s.dtype, Dtype::F32);
+        let a = Matrix::random(4, 3, 5);
+        let b = Matrix::random(3, 5, 6);
+        let bytes = Submission::gemm(a.clone(), b.clone()).inline_bytes();
+        let s = Submission::gemm(a, b).dtype(Dtype::Bf16);
+        assert_eq!(s.dtype, Dtype::Bf16);
+        assert_eq!(s.inline_bytes(), bytes);
     }
 
     #[test]

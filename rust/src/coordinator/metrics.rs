@@ -77,6 +77,9 @@ pub struct Metrics {
     /// Gauge: the A-side (activation-panel) share of
     /// `registry_resident_bytes`.
     registry_a_resident_bytes: AtomicU64,
+    /// Gauge: the per-precision split of `registry_resident_bytes`,
+    /// indexed by `Dtype::index` — the four shares sum to the total.
+    registry_dtype_resident_bytes: [AtomicU64; 4],
     /// Planner selections steered to an already-resident `(S_i, S_j)`
     /// variant instead of the config the pre-residency cascade would
     /// have chosen — each one is a repack turned into a cache hit.
@@ -289,6 +292,15 @@ impl Metrics {
         self.registry_a_resident_bytes.store(bytes, Ordering::Relaxed);
     }
 
+    /// Set one precision's share of the registry resident-bytes gauge
+    /// (`dtype_index` is `Dtype::index`; out-of-range indices are
+    /// ignored rather than panicking a metrics path).
+    pub fn set_registry_dtype_resident_bytes(&self, dtype_index: usize, bytes: u64) {
+        if let Some(g) = self.registry_dtype_resident_bytes.get(dtype_index) {
+            g.store(bytes, Ordering::Relaxed);
+        }
+    }
+
     pub fn add_plan_residency_hits(&self, n: u64) {
         self.plan_residency_hits.fetch_add(n, Ordering::Relaxed);
     }
@@ -466,6 +478,15 @@ impl Metrics {
         self.registry_a_resident_bytes.load(Ordering::Relaxed)
     }
 
+    /// One precision's share of the registry resident-bytes gauge
+    /// (zero for out-of-range indices).
+    pub fn registry_dtype_resident_bytes(&self, dtype_index: usize) -> u64 {
+        self.registry_dtype_resident_bytes
+            .get(dtype_index)
+            .map(|g| g.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
     pub fn plan_residency_hits(&self) -> u64 {
         self.plan_residency_hits.load(Ordering::Relaxed)
     }
@@ -635,6 +656,10 @@ mod tests {
         m.set_registry_resident_bytes(2048); // gauge: set, not summed
         m.set_registry_a_resident_bytes(512);
         m.set_registry_a_resident_bytes(256);
+        m.set_registry_dtype_resident_bytes(0, 2048);
+        m.set_registry_dtype_resident_bytes(3, 128);
+        m.set_registry_dtype_resident_bytes(3, 64); // gauge: set, not summed
+        m.set_registry_dtype_resident_bytes(99, 7); // out of range: ignored
         m.job_done(0.5, 0.001);
         m.job_done(1.5, 0.003);
         m.job_failed();
@@ -658,6 +683,10 @@ mod tests {
         assert_eq!(m.unregister_failures(), 1);
         assert_eq!(m.registry_resident_bytes(), 2048);
         assert_eq!(m.registry_a_resident_bytes(), 256);
+        assert_eq!(m.registry_dtype_resident_bytes(0), 2048);
+        assert_eq!(m.registry_dtype_resident_bytes(3), 64);
+        assert_eq!(m.registry_dtype_resident_bytes(1), 0);
+        assert_eq!(m.registry_dtype_resident_bytes(99), 0);
         assert_eq!(m.jobs(), 2);
         assert_eq!(m.jobs_failed(), 1);
         let (mean, max) = m.host_latency();

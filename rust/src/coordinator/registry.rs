@@ -22,11 +22,13 @@
 //!   resolves inside the dispatcher to the cached [`PackedB`] /
 //!   [`PackedA`];
 //! * the pack cache is side-tagged and keyed by `(handle, side,
-//!   s_param)`: a handle resolved under one block size (`S_j` for B,
-//!   `S_i` for A) reuses its pack on every later call (a *hit*), while
-//!   a different block size re-derives a per-shape variant once (a
-//!   *miss* that packs and caches). The one-pack guarantee therefore
-//!   holds **across** calls, not just within one;
+//!   s_param, dtype)`: a handle resolved under one block size (`S_j`
+//!   for B, `S_i` for A) and precision reuses its pack on every later
+//!   call (a *hit*), while a different block size or serving dtype
+//!   re-derives a per-shape/per-precision variant once (a *miss* that
+//!   packs and caches). The one-pack guarantee therefore holds
+//!   **across** calls, not just within one, and one registered weight
+//!   serves jobs at several precisions without repacking churn;
 //! * both sides share one byte budget and one refcount-pinned LRU
 //!   (`ServerConfig::registry_budget_bytes`): least-recently-used packs
 //!   of either side leave first, but a pack still referenced outside
@@ -46,7 +48,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::gemm::{CombineOp, Matrix, MatrixView, PackedA, PackedB};
+use crate::gemm::{CombineOp, Dtype, Matrix, MatrixView, PackedA, PackedB};
 
 use super::frontend::TenantId;
 use super::metrics::Metrics;
@@ -197,10 +199,23 @@ impl FusedOperand {
         PackedA::from_sum_of_views(self.x.view(self.rows, self.cols), y, si)
     }
 
+    /// [`FusedOperand::pack_a`] at a serving precision: the combine
+    /// happens in f32, the converted panels land in `dtype`'s store.
+    pub fn pack_a_dtype(&self, si: usize, dtype: Dtype) -> PackedA {
+        let y = self.y.as_ref().map(|(s, op)| (s.view(self.rows, self.cols), *op));
+        PackedA::from_sum_of_views_dtype(self.x.view(self.rows, self.cols), y, si, dtype)
+    }
+
     /// Pack as a B operand at block size `sj`.
     pub fn pack_b(&self, sj: usize) -> PackedB {
         let y = self.y.as_ref().map(|(s, op)| (s.view(self.rows, self.cols), *op));
         PackedB::from_sum_of_views(self.x.view(self.rows, self.cols), y, sj)
+    }
+
+    /// [`FusedOperand::pack_b`] at a serving precision.
+    pub fn pack_b_dtype(&self, sj: usize, dtype: Dtype) -> PackedB {
+        let y = self.y.as_ref().map(|(s, op)| (s.view(self.rows, self.cols), *op));
+        PackedB::from_sum_of_views_dtype(self.x.view(self.rows, self.cols), y, sj, dtype)
     }
 
     /// Materialize the combined operand as its own matrix — the
@@ -352,15 +367,15 @@ struct PackSlot {
 }
 
 /// One registered operand: the retained matrix, its side, the tenant
-/// that registered it, and its per-block-size pack variants (`sj` keys
-/// for B entries, `si` for A).
+/// that registered it, and its per-block-size, per-precision pack
+/// variants (`(sj, dtype)` keys for B entries, `(si, dtype)` for A).
 struct Entry {
     matrix: Arc<Matrix>,
     side: Side,
     /// The tenant this operand is billed to ([`TenantId::DEFAULT`] for
     /// the tenant-unaware `register_a`/`register_b` paths).
     tenant: TenantId,
-    packs: HashMap<usize, PackSlot>,
+    packs: HashMap<(usize, Dtype), PackSlot>,
 }
 
 struct State {
@@ -376,6 +391,9 @@ struct State {
     resident_bytes: u64,
     /// The A-side share of `resident_bytes`.
     a_resident_bytes: u64,
+    /// The per-precision split of `resident_bytes`, indexed by
+    /// [`Dtype::index`] — sums to `resident_bytes` across dtypes.
+    dtype_resident_bytes: [u64; Dtype::ALL.len()],
 }
 
 /// One tenant's registry footprint (see
@@ -404,12 +422,16 @@ pub struct OperandRegistry {
     state: Mutex<State>,
 }
 
-/// `TraceEvent.b` payload for registry events.
-fn side_code(side: Side) -> u64 {
-    match side {
+/// `TraceEvent.b` payload for registry events: the side in bit 0, the
+/// pack's [`Dtype::index`] in the bits above it. F32 has index 0, so
+/// f32 traffic emits exactly the pre-multi-precision payloads (0 for
+/// A, 1 for B).
+fn event_payload(side: Side, dtype: Dtype) -> u64 {
+    let side_code = match side {
         Side::A => 0,
         Side::B => 1,
-    }
+    };
+    side_code | ((dtype.index() as u64) << 1)
 }
 
 impl OperandRegistry {
@@ -425,6 +447,7 @@ impl OperandRegistry {
                 clock: 0,
                 resident_bytes: 0,
                 a_resident_bytes: 0,
+                dtype_resident_bytes: [0; Dtype::ALL.len()],
             }),
         }
     }
@@ -496,9 +519,21 @@ impl OperandRegistry {
         if side == Side::A {
             st.a_resident_bytes -= freed;
         }
+        for (&(_, dtype), slot) in &entry.packs {
+            st.dtype_resident_bytes[dtype.index()] -= slot.bytes;
+        }
+        self.publish_gauges(&st);
+        Ok(())
+    }
+
+    /// Push the resident-bytes ledger (total, A-side, per-dtype) into
+    /// the metrics gauges. Called with the state lock held.
+    fn publish_gauges(&self, st: &State) {
         self.metrics.set_registry_resident_bytes(st.resident_bytes);
         self.metrics.set_registry_a_resident_bytes(st.a_resident_bytes);
-        Ok(())
+        for (i, &bytes) in st.dtype_resident_bytes.iter().enumerate() {
+            self.metrics.set_registry_dtype_resident_bytes(i, bytes);
+        }
     }
 
     /// Drop a registered weight and its cached packs. In-flight jobs
@@ -554,12 +589,26 @@ impl OperandRegistry {
         self.matrix_key(self.key_a(h)?, Side::A)
     }
 
-    /// Resolve the packed form of `h` at block size `sj`: a cached
-    /// variant is a **hit**; otherwise pack once (off the lock), cache
-    /// the result, and evict LRU-unpinned packs past the byte budget.
-    /// The returned `Arc` pins its pack against eviction for as long as
-    /// the caller (an in-flight job) holds it.
+    /// Resolve the packed form of `h` at block size `sj` (f32, the
+    /// pre-multi-precision behavior): a cached variant is a **hit**;
+    /// otherwise pack once (off the lock), cache the result, and evict
+    /// LRU-unpinned packs past the byte budget. The returned `Arc` pins
+    /// its pack against eviction for as long as the caller (an
+    /// in-flight job) holds it.
     pub fn resolve_pack(&self, h: WeightHandle, sj: usize) -> anyhow::Result<Arc<PackedB>> {
+        self.resolve_pack_dtype(h, sj, Dtype::F32)
+    }
+
+    /// [`OperandRegistry::resolve_pack`] at a serving precision: the
+    /// cache key is `(handle, sj, dtype)`, so one registered weight
+    /// serves jobs at several precisions, each packed at most once per
+    /// block size.
+    pub fn resolve_pack_dtype(
+        &self,
+        h: WeightHandle,
+        sj: usize,
+        dtype: Dtype,
+    ) -> anyhow::Result<Arc<PackedB>> {
         let key = self
             .key(h)
             .ok_or_else(|| anyhow::anyhow!("{h} belongs to a different server's registry"))?;
@@ -572,7 +621,7 @@ impl OperandRegistry {
                 .get_mut(&key)
                 .filter(|e| e.side == Side::B)
                 .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?;
-            if let Some(slot) = entry.packs.get_mut(&sj) {
+            if let Some(slot) = entry.packs.get_mut(&(sj, dtype)) {
                 slot.stamp = clock;
                 self.metrics.add_registry_hits(1);
                 let tenant = entry.tenant.0;
@@ -587,7 +636,7 @@ impl OperandRegistry {
                             tenant,
                             ACTOR_NONE,
                             bytes,
-                            side_code(Side::B),
+                            event_payload(Side::B, dtype),
                         );
                         return Ok(p);
                     }
@@ -599,22 +648,38 @@ impl OperandRegistry {
         // Miss: pack outside the lock (packing a large weight must not
         // stall concurrent register/stats calls), then publish. A
         // concurrent unregister simply skips the caching, and a
-        // concurrent resolver that won the same-(handle, sj) race has
-        // its slot replaced — with its bytes returned to the ledger, so
-        // resident accounting survives the race exactly.
+        // concurrent resolver that won the same-(handle, sj, dtype)
+        // race has its slot replaced — with its bytes returned to the
+        // ledger, so resident accounting survives the race exactly.
         self.metrics.add_registry_misses(1);
         self.metrics.add_b_panel_packs(1);
-        let pack = Arc::new(PackedB::pack(matrix.view(), sj));
+        let pack = Arc::new(PackedB::pack_dtype(matrix.view(), sj, dtype));
         let bytes = pack.packed_bytes();
-        self.trace
-            .emit(EventKind::RegistryMiss, key, tenant, ACTOR_NONE, bytes, side_code(Side::B));
-        self.publish(key, sj, AnyPack::B(pack.clone()), bytes, Side::B);
+        self.trace.emit(
+            EventKind::RegistryMiss,
+            key,
+            tenant,
+            ACTOR_NONE,
+            bytes,
+            event_payload(Side::B, dtype),
+        );
+        self.publish(key, (sj, dtype), AnyPack::B(pack.clone()), bytes, Side::B);
         Ok(pack)
     }
 
     /// [`OperandRegistry::resolve_pack`], A side: the cache key is the
     /// row block size `S_i` and the cached unit is an `Arc<PackedA>`.
     pub fn resolve_pack_a(&self, h: ActivationHandle, si: usize) -> anyhow::Result<Arc<PackedA>> {
+        self.resolve_pack_a_dtype(h, si, Dtype::F32)
+    }
+
+    /// [`OperandRegistry::resolve_pack_dtype`], A side.
+    pub fn resolve_pack_a_dtype(
+        &self,
+        h: ActivationHandle,
+        si: usize,
+        dtype: Dtype,
+    ) -> anyhow::Result<Arc<PackedA>> {
         let key = self
             .key_a(h)
             .ok_or_else(|| anyhow::anyhow!("{h} belongs to a different server's registry"))?;
@@ -627,7 +692,7 @@ impl OperandRegistry {
                 .get_mut(&key)
                 .filter(|e| e.side == Side::A)
                 .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?;
-            if let Some(slot) = entry.packs.get_mut(&si) {
+            if let Some(slot) = entry.packs.get_mut(&(si, dtype)) {
                 slot.stamp = clock;
                 self.metrics.add_registry_hits(1);
                 self.metrics.add_registry_a_hits(1);
@@ -643,7 +708,7 @@ impl OperandRegistry {
                             tenant,
                             ACTOR_NONE,
                             bytes,
-                            side_code(Side::A),
+                            event_payload(Side::A, dtype),
                         );
                         return Ok(p);
                     }
@@ -655,34 +720,42 @@ impl OperandRegistry {
         self.metrics.add_registry_misses(1);
         self.metrics.add_registry_a_misses(1);
         self.metrics.add_a_panel_packs(1);
-        let pack = Arc::new(PackedA::pack(matrix.view(), si));
+        let pack = Arc::new(PackedA::pack_dtype(matrix.view(), si, dtype));
         let bytes = pack.packed_bytes();
-        self.trace
-            .emit(EventKind::RegistryMiss, key, tenant, ACTOR_NONE, bytes, side_code(Side::A));
-        self.publish(key, si, AnyPack::A(pack.clone()), bytes, Side::A);
+        self.trace.emit(
+            EventKind::RegistryMiss,
+            key,
+            tenant,
+            ACTOR_NONE,
+            bytes,
+            event_payload(Side::A, dtype),
+        );
+        self.publish(key, (si, dtype), AnyPack::A(pack.clone()), bytes, Side::A);
         Ok(pack)
     }
 
     /// Publish a freshly packed variant into the cache, settle the byte
     /// ledger (replacement race included), and run eviction.
-    fn publish(&self, key: u64, s_param: usize, pack: AnyPack, bytes: u64, side: Side) {
+    fn publish(&self, key: u64, slot_key: (usize, Dtype), pack: AnyPack, bytes: u64, side: Side) {
         let mut st = self.state.lock().unwrap();
         st.clock += 1;
         let stamp = st.clock;
+        let dtype = slot_key.1;
         if let Some(entry) = st.entries.get_mut(&key) {
-            if let Some(old) = entry.packs.insert(s_param, PackSlot { pack, bytes, stamp }) {
+            if let Some(old) = entry.packs.insert(slot_key, PackSlot { pack, bytes, stamp }) {
                 st.resident_bytes -= old.bytes;
+                st.dtype_resident_bytes[dtype.index()] -= old.bytes;
                 if side == Side::A {
                     st.a_resident_bytes -= old.bytes;
                 }
             }
             st.resident_bytes += bytes;
+            st.dtype_resident_bytes[dtype.index()] += bytes;
             if side == Side::A {
                 st.a_resident_bytes += bytes;
             }
             self.evict_lru(&mut st);
-            self.metrics.set_registry_resident_bytes(st.resident_bytes);
-            self.metrics.set_registry_a_resident_bytes(st.a_resident_bytes);
+            self.publish_gauges(&st);
         }
     }
 
@@ -700,51 +773,70 @@ impl OperandRegistry {
                     e.packs
                         .iter()
                         .filter(|(_, slot)| slot.pack.strong_count() == 1)
-                        .map(move |(s_param, slot)| (slot.stamp, *id, *s_param, e.side))
+                        .map(move |(slot_key, slot)| (slot.stamp, *id, *slot_key, e.side))
                 })
-                .min_by_key(|(stamp, id, s_param, _)| (*stamp, *id, *s_param));
-            let Some((_, id, s_param, side)) = victim else { break };
+                .min_by_key(|(stamp, id, (s_param, dtype), _)| {
+                    (*stamp, *id, *s_param, dtype.index())
+                });
+            let Some((_, id, slot_key, side)) = victim else { break };
             let entry = st.entries.get_mut(&id).expect("victim entry vanished under the lock");
             let tenant = entry.tenant.0;
-            let slot = entry.packs.remove(&s_param).expect("victim slot vanished under the lock");
+            let slot = entry.packs.remove(&slot_key).expect("victim slot vanished under the lock");
             st.resident_bytes -= slot.bytes;
+            st.dtype_resident_bytes[slot_key.1.index()] -= slot.bytes;
             self.metrics.add_registry_evictions(1);
             if side == Side::A {
                 st.a_resident_bytes -= slot.bytes;
                 self.metrics.add_registry_a_evictions(1);
             }
-            self.trace
-                .emit(EventKind::RegistryEvict, id, tenant, ACTOR_NONE, slot.bytes, side_code(side));
+            self.trace.emit(
+                EventKind::RegistryEvict,
+                id,
+                tenant,
+                ACTOR_NONE,
+                slot.bytes,
+                event_payload(side, slot_key.1),
+            );
         }
     }
 
-    /// The `S_j` variants of `h` currently resident (sorted). Racy by
-    /// nature — a variant can be evicted between this call and the next
-    /// resolution — so callers (the registry-aware planner) treat it as
-    /// a hint, never a guarantee.
+    /// The `S_j` variants of `h` currently resident at f32 (sorted).
+    /// Racy by nature — a variant can be evicted between this call and
+    /// the next resolution — so callers (the registry-aware planner)
+    /// treat it as a hint, never a guarantee.
     pub fn resident_b_sjs(&self, h: WeightHandle) -> Vec<usize> {
+        self.resident_b_sjs_dtype(h, Dtype::F32)
+    }
+
+    /// [`OperandRegistry::resident_b_sjs`] at a serving precision.
+    pub fn resident_b_sjs_dtype(&self, h: WeightHandle, dtype: Dtype) -> Vec<usize> {
         let Some(key) = self.key(h) else { return Vec::new() };
         let st = self.state.lock().unwrap();
         let mut sjs: Vec<usize> = st
             .entries
             .get(&key)
             .filter(|e| e.side == Side::B)
-            .map(|e| e.packs.keys().copied().collect())
+            .map(|e| e.packs.keys().filter(|(_, d)| *d == dtype).map(|(s, _)| *s).collect())
             .unwrap_or_default();
         sjs.sort_unstable();
         sjs
     }
 
     /// [`OperandRegistry::resident_b_sjs`], A side: resident `S_i`
-    /// variants.
+    /// variants at f32.
     pub fn resident_a_sis(&self, h: ActivationHandle) -> Vec<usize> {
+        self.resident_a_sis_dtype(h, Dtype::F32)
+    }
+
+    /// [`OperandRegistry::resident_a_sis`] at a serving precision.
+    pub fn resident_a_sis_dtype(&self, h: ActivationHandle, dtype: Dtype) -> Vec<usize> {
         let Some(key) = self.key_a(h) else { return Vec::new() };
         let st = self.state.lock().unwrap();
         let mut sis: Vec<usize> = st
             .entries
             .get(&key)
             .filter(|e| e.side == Side::A)
-            .map(|e| e.packs.keys().copied().collect())
+            .map(|e| e.packs.keys().filter(|(_, d)| *d == dtype).map(|(s, _)| *s).collect())
             .unwrap_or_default();
         sis.sort_unstable();
         sis
@@ -794,6 +886,12 @@ impl OperandRegistry {
     /// The A-side share of [`OperandRegistry::resident_bytes`].
     pub fn a_resident_bytes(&self) -> u64 {
         self.state.lock().unwrap().a_resident_bytes
+    }
+
+    /// The share of [`OperandRegistry::resident_bytes`] held in packs
+    /// of one precision — the four shares sum to the total.
+    pub fn dtype_resident_bytes(&self, dtype: Dtype) -> u64 {
+        self.state.lock().unwrap().dtype_resident_bytes[dtype.index()]
     }
 }
 
@@ -903,6 +1001,88 @@ mod tests {
         assert_eq!(reg.a_resident_bytes(), reg.resident_bytes(), "pure-A workload");
         assert_eq!(m.registry_a_resident_bytes(), reg.a_resident_bytes());
         assert_eq!(m.b_panel_packs(), 0, "A packs never count as B packs");
+    }
+
+    #[test]
+    fn dtype_variants_cache_independently_with_one_pack_each() {
+        let (reg, m) = registry(u64::MAX);
+        let h = reg.register(Matrix::random(13, 29, 1)).unwrap();
+
+        // Same handle, same block size, two precisions: exactly one
+        // pack per (S, dtype) variant, hits thereafter.
+        let p32 = reg.resolve_pack_dtype(h, 16, Dtype::F32).unwrap();
+        let pbf = reg.resolve_pack_dtype(h, 16, Dtype::Bf16).unwrap();
+        assert_eq!((m.registry_hits(), m.registry_misses()), (0, 2));
+        assert_eq!(m.b_panel_packs(), 2, "one pack per (S, dtype)");
+        assert_eq!(p32.dtype(), Dtype::F32);
+        assert_eq!(pbf.dtype(), Dtype::Bf16);
+
+        let p32b = reg.resolve_pack(h, 16).unwrap(); // f32 delegate
+        let pbfb = reg.resolve_pack_dtype(h, 16, Dtype::Bf16).unwrap();
+        assert!(Arc::ptr_eq(&p32, &p32b), "f32 delegate hits the F32 variant");
+        assert!(Arc::ptr_eq(&pbf, &pbfb), "bf16 resolution hits its own variant");
+        assert_eq!((m.registry_hits(), m.registry_misses()), (2, 2));
+        assert_eq!(m.b_panel_packs(), 2, "hits never repack");
+
+        // Residency hints are per-dtype...
+        assert_eq!(reg.resident_b_sjs(h), vec![16]);
+        assert_eq!(reg.resident_b_sjs_dtype(h, Dtype::Bf16), vec![16]);
+        assert!(reg.resident_b_sjs_dtype(h, Dtype::F16).is_empty());
+        // ...and so is the byte ledger: the bf16 pack of the same
+        // operand is exactly half the f32 bytes (same slot count, 2 vs
+        // 4 bytes per element), and the shares sum to the total.
+        let f32_bytes = reg.dtype_resident_bytes(Dtype::F32);
+        let bf16_bytes = reg.dtype_resident_bytes(Dtype::Bf16);
+        assert_eq!(f32_bytes, p32.packed_bytes());
+        assert_eq!(bf16_bytes, pbf.packed_bytes());
+        assert_eq!(bf16_bytes * 2, f32_bytes);
+        assert_eq!(f32_bytes + bf16_bytes, reg.resident_bytes());
+        assert_eq!(m.registry_dtype_resident_bytes(Dtype::Bf16.index()), bf16_bytes);
+        assert_eq!(m.registry_dtype_resident_bytes(Dtype::F32.index()), f32_bytes);
+    }
+
+    #[test]
+    fn mixed_dtype_lru_evicts_variants_independently() {
+        // Two dtype variants of one handle are separate LRU citizens:
+        // under a budget that holds nothing, the unpinned f32 variant
+        // is evicted while the pinned f16 variant of the *same handle*
+        // survives, and the evicted variant later resolves as a fresh
+        // miss (repacked from the retained matrix, never an error).
+        let (reg, m) = registry(1);
+        let h = reg.register(Matrix::random(8, 8, 1)).unwrap();
+        let f32_pack = reg.resolve_pack(h, 8).unwrap();
+        drop(f32_pack); // unpin the f32 variant
+        let pinned_f16 = reg.resolve_pack_dtype(h, 8, Dtype::F16).unwrap();
+        assert_eq!(m.registry_evictions(), 1, "unpinned f32 variant evicted");
+        assert_eq!(reg.dtype_resident_bytes(Dtype::F32), 0);
+        assert!(reg.resident_b_sjs(h).is_empty(), "no f32 variant resident");
+        assert_eq!(reg.resident_b_sjs_dtype(h, Dtype::F16), vec![8]);
+        assert_eq!(reg.dtype_resident_bytes(Dtype::F16), reg.resident_bytes());
+
+        // The evicted f32 variant is a fresh miss; the pinned f16
+        // variant rides out the churn untouched.
+        let f32_again = reg.resolve_pack(h, 8).unwrap();
+        assert_eq!(m.registry_misses(), 3, "evicted variant repacks as a miss");
+        assert_eq!(m.registry_evictions(), 1, "both variants now pinned");
+        drop(f32_again);
+        let f16_again = reg.resolve_pack_dtype(h, 8, Dtype::F16).unwrap();
+        assert!(Arc::ptr_eq(&pinned_f16, &f16_again), "pinned f16 variant survived");
+        assert_eq!(m.registry_hits(), 1, "pinned variant resolves as a hit");
+    }
+
+    #[test]
+    fn registry_trace_payload_encodes_dtype_above_side_bit() {
+        let (reg, ring) = traced_registry(u64::MAX);
+        let hb = reg.register(Matrix::random(8, 8, 1)).unwrap();
+        let ha = reg.register_a(Matrix::random(8, 8, 2)).unwrap();
+        let _pb = reg.resolve_pack_dtype(hb, 8, Dtype::F16).unwrap(); // B miss
+        let _pa = reg.resolve_pack_a_dtype(ha, 8, Dtype::Bf16).unwrap(); // A miss
+        let evs = ring.snapshot().events;
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].b & 1, 1, "B side in bit 0");
+        assert_eq!((evs[0].b >> 1) as usize, Dtype::F16.index(), "dtype code above it");
+        assert_eq!(evs[1].b & 1, 0, "A side in bit 0");
+        assert_eq!((evs[1].b >> 1) as usize, Dtype::Bf16.index());
     }
 
     #[test]

@@ -86,7 +86,7 @@ use std::time::{Duration, Instant};
 use crate::accelerator::{Accelerator, SimOptions};
 use crate::blocking::{BlockPlan, BlockTask};
 use crate::config::{HardwareConfig, RunConfig};
-use crate::gemm::{DisjointBlocks, Matrix, PackedA, PackedB, PackedPanels};
+use crate::gemm::{DisjointBlocks, Dtype, Matrix, PackedA, PackedB, PackedPanels};
 use crate::wqm::{AtomicWqm, JobRegistry};
 
 use super::engine::NumericsEngine;
@@ -347,6 +347,10 @@ pub struct ServerStats {
     pub registry_resident_bytes: u64,
     /// A-side share of `registry_resident_bytes`.
     pub registry_a_resident_bytes: u64,
+    /// Per-precision split of `registry_resident_bytes`, indexed by
+    /// [`Dtype::index`] (f32, f64, f16, bf16) — which precisions'
+    /// packed variants occupy the cache right now.
+    pub registry_dtype_resident_bytes: [u64; 4],
     /// Weights currently registered ([`JobServer::register_b`]).
     pub registered_weights: u64,
     /// Activations currently registered ([`JobServer::register_a`]).
@@ -454,6 +458,12 @@ impl std::fmt::Display for ServerStats {
                 .collect::<Vec<_>>()
                 .join(","),
             100.0 * self.worker_idle_frac
+        )?;
+        let dt = &self.registry_dtype_resident_bytes;
+        write!(
+            f,
+            " dtype_resident(f32/f64/f16/bf16)={}/{}/{}/{}B",
+            dt[0], dt[1], dt[2], dt[3]
         )?;
         let max_t = self.per_worker_tasks.iter().copied().max().unwrap_or(0);
         let min_t = self.per_worker_tasks.iter().copied().min().unwrap_or(0);
@@ -658,6 +668,9 @@ struct Admitted {
     deadline: Option<Instant>,
     /// Flight-recorder identity (see [`SubJob::uid`]).
     uid: u64,
+    /// Precision the job's panels pack (and its microkernel runs) at;
+    /// carried from the [`Submission`], `F32` for plain `submit` calls.
+    dtype: Dtype,
 }
 
 /// One sub-request of a shared-B batch: its own A (inline, or a
@@ -682,6 +695,9 @@ struct SharedBatch {
     b: BOperand,
     run: Option<RunConfig>,
     subs: Vec<SharedSub>,
+    /// One precision for the whole batch — the shared B packs once per
+    /// `(handle, S_j, dtype)`, so the subs cannot disagree.
+    dtype: Dtype,
 }
 
 /// Admission-queue element: a lone job, an explicit group (from
@@ -703,21 +719,26 @@ fn reclaim_submission(item: QueueItem, deadline: Option<Instant>) -> Submission 
     let mut s = match item {
         QueueItem::One(adm) => {
             let tenant = adm.tenant;
+            let dtype = adm.dtype;
             let GemmJob { id, a, b, run } = adm.job;
-            let mut s = Submission::gemm(a, b).tenant(tenant).id(id);
+            let mut s = Submission::gemm(a, b).tenant(tenant).id(id).dtype(dtype);
             s.run = run;
             s
         }
         QueueItem::Group(subs) => {
             let tenant = subs.first().map_or(TenantId::DEFAULT, |s| s.tenant);
-            Submission::group(subs.into_iter().map(|s| s.job).collect()).tenant(tenant)
+            let dtype = subs.first().map_or(Dtype::F32, |s| s.dtype);
+            Submission::group(subs.into_iter().map(|s| s.job).collect())
+                .tenant(tenant)
+                .dtype(dtype)
         }
         QueueItem::SharedB(batch) => {
             let tenant = batch.subs.first().map_or(TenantId::DEFAULT, |s| s.tenant);
             let id = batch.subs.first().map_or(0, |s| s.id);
             let run = batch.run;
+            let dtype = batch.dtype;
             let many_a: Vec<AOperand> = batch.subs.into_iter().map(|s| s.a).collect();
-            let mut s = Submission::batched(batch.b, many_a).tenant(tenant).id(id);
+            let mut s = Submission::batched(batch.b, many_a).tenant(tenant).id(id).dtype(dtype);
             s.run = run;
             s
         }
@@ -969,6 +990,7 @@ impl JobServer {
                     tenant,
                     deadline,
                     uid: base_uid,
+                    dtype: s.dtype,
                 };
                 (vec![JobTicket::new(s.id, rx)], QueueItem::One(adm))
             }
@@ -988,6 +1010,7 @@ impl JobServer {
                         tenant,
                         deadline,
                         uid: base_uid + i as u64,
+                        dtype: s.dtype,
                     });
                 }
                 (tickets, QueueItem::Group(subs))
@@ -1011,7 +1034,7 @@ impl JobServer {
                         uid: base_uid + i as u64,
                     });
                 }
-                (tickets, QueueItem::SharedB(SharedBatch { b, run: s.run, subs }))
+                (tickets, QueueItem::SharedB(SharedBatch { b, run: s.run, subs, dtype: s.dtype }))
             }
         }
     }
@@ -1421,6 +1444,9 @@ impl JobServer {
             registry_a_evictions: m.registry_a_evictions(),
             registry_resident_bytes: m.registry_resident_bytes(),
             registry_a_resident_bytes: m.registry_a_resident_bytes(),
+            registry_dtype_resident_bytes: std::array::from_fn(|i| {
+                m.registry_dtype_resident_bytes(i)
+            }),
             registered_weights: self.shared.operands.registered_weights() as u64,
             registered_activations: self.shared.operands.registered_activations() as u64,
             plan_residency_hits: m.plan_residency_hits(),
@@ -1532,6 +1558,13 @@ fn plan_one(shared: &Shared, s: Admitted, shard: usize) -> Option<Planned> {
             a_rows > 0 && a_cols > 0 && b_cols > 0,
             "degenerate problem {a_rows}x{a_cols}x{b_cols}",
         );
+        // Channel-fed backends gather f32 panels per task; reduced
+        // precision exists only on the packed in-process path.
+        anyhow::ensure!(
+            s.dtype == Dtype::F32 || shared.engine.is_inprocess(),
+            "dtype {} requires an in-process engine",
+            s.dtype,
+        );
         let run = choose_run_dims(
             &shared.hw,
             shared.accelerator.surface(),
@@ -1541,8 +1574,8 @@ fn plan_one(shared: &Shared, s: Admitted, shard: usize) -> Option<Planned> {
             s.job.run,
             shared.cfg.default_run,
         )?;
-        let a_sis = s.job.a.handle().map(|h| shared.operands.resident_a_sis(h));
-        let b_sjs = s.job.b.handle().map(|h| shared.operands.resident_b_sjs(h));
+        let a_sis = s.job.a.handle().map(|h| shared.operands.resident_a_sis_dtype(h, s.dtype));
+        let b_sjs = s.job.b.handle().map(|h| shared.operands.resident_b_sjs_dtype(h, s.dtype));
         let run = refine_run_for_residency(
             shared,
             run,
@@ -1699,16 +1732,16 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>, shard: usize) {
     let mut builds: Vec<Build> = Vec::with_capacity(planned.len());
     for p in planned {
         let Planned { sub, run, plan, predicted, .. } = p;
-        let Admitted { job, reply, accepted_at, tenant, deadline, uid } = sub;
+        let Admitted { job, reply, accepted_at, tenant, deadline, uid, dtype } = sub;
         let GemmJob { id, a, b, .. } = job;
         let resolved = (|| -> anyhow::Result<_> {
-            let (a, packed_a) = resolve_a_operand(shared, a, run.si, inprocess)?;
+            let (a, packed_a) = resolve_a_operand(shared, a, run.si, dtype, inprocess)?;
             let (b, packed_b) = match b {
                 BOperand::Inline(m) => {
                     let m = Arc::new(m);
                     let packed = if inprocess {
                         shared.metrics.add_b_panel_packs(1);
-                        Some(Arc::new(PackedB::pack(m.view(), run.sj)))
+                        Some(Arc::new(PackedB::pack_dtype(m.view(), run.sj, dtype)))
                     } else {
                         None
                     };
@@ -1720,7 +1753,7 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>, shard: usize) {
                         .matrix(h)
                         .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?;
                     let packed = if inprocess {
-                        Some(shared.operands.resolve_pack(h, run.sj)?)
+                        Some(shared.operands.resolve_pack_dtype(h, run.sj, dtype)?)
                     } else {
                         None
                     };
@@ -1732,7 +1765,7 @@ fn activate(shared: &Arc<Shared>, planned: Vec<Planned>, shard: usize) {
                         // operand never exists as a matrix.
                         shared.metrics.add_b_panel_packs(1);
                         shared.metrics.add_fused_packs(1);
-                        let packed = Arc::new(f.pack_b(run.sj));
+                        let packed = Arc::new(f.pack_b_dtype(run.sj, dtype));
                         (
                             ExecOperand::Packed { rows: f.rows, cols: f.cols },
                             Some(packed),
@@ -1815,6 +1848,7 @@ fn resolve_a_operand(
     shared: &Shared,
     a: AOperand,
     si: usize,
+    dtype: Dtype,
     inprocess: bool,
 ) -> anyhow::Result<(ExecOperand, Option<Arc<PackedA>>)> {
     match a {
@@ -1822,7 +1856,7 @@ fn resolve_a_operand(
             let m = Arc::new(m);
             let packed = if inprocess {
                 shared.metrics.add_a_panel_packs(1);
-                Some(Arc::new(PackedA::pack(m.view(), si)))
+                Some(Arc::new(PackedA::pack_dtype(m.view(), si, dtype)))
             } else {
                 None
             };
@@ -1833,15 +1867,18 @@ fn resolve_a_operand(
                 .operands
                 .matrix_a(h)
                 .ok_or_else(|| anyhow::anyhow!("{h} is not registered"))?;
-            let packed =
-                if inprocess { Some(shared.operands.resolve_pack_a(h, si)?) } else { None };
+            let packed = if inprocess {
+                Some(shared.operands.resolve_pack_a_dtype(h, si, dtype)?)
+            } else {
+                None
+            };
             Ok((ExecOperand::Full(m), packed))
         }
         AOperand::Fused(f) => {
             if inprocess {
                 shared.metrics.add_a_panel_packs(1);
                 shared.metrics.add_fused_packs(1);
-                let packed = Arc::new(f.pack_a(si));
+                let packed = Arc::new(f.pack_a_dtype(si, dtype));
                 Ok((ExecOperand::Packed { rows: f.rows, cols: f.cols }, Some(packed)))
             } else {
                 Ok((ExecOperand::Full(Arc::new(f.materialize())), None))
@@ -2067,6 +2104,7 @@ fn choose_shared_run(
     b_handle: Option<WeightHandle>,
     subs: &[(SharedSub, (usize, usize))],
     run: Option<RunConfig>,
+    dtype: Dtype,
 ) -> anyhow::Result<RunConfig> {
     let m = subs.iter().map(|(_, (rows, _))| *rows).max().expect("non-empty batch");
     let baseline = choose_run_dims(
@@ -2081,12 +2119,12 @@ fn choose_shared_run(
     let all_a_handles: Option<Vec<ActivationHandle>> =
         subs.iter().map(|(s, _)| s.a.handle()).collect();
     let a_sis: Option<Vec<usize>> = all_a_handles.map(|hs| {
-        let mut sets = hs.iter().map(|&h| shared.operands.resident_a_sis(h));
+        let mut sets = hs.iter().map(|&h| shared.operands.resident_a_sis_dtype(h, dtype));
         let first = sets.next().unwrap_or_default();
         let rest: Vec<Vec<usize>> = sets.collect();
         first.into_iter().filter(|si| rest.iter().all(|set| set.contains(si))).collect()
     });
-    let b_sjs = b_handle.map(|h| shared.operands.resident_b_sjs(h));
+    let b_sjs = b_handle.map(|h| shared.operands.resident_b_sjs_dtype(h, dtype));
     Ok(refine_run_for_residency(
         shared,
         baseline,
@@ -2110,7 +2148,7 @@ fn choose_shared_run(
 /// `Metrics::b_panel_packs` counts actual packs and
 /// `Metrics::panels_shared` the within-call packs the sharing avoided.
 fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch, shard: usize) {
-    let SharedBatch { b, run, subs } = batch;
+    let SharedBatch { b, run, subs, dtype } = batch;
     let reject_all = |subs: Vec<SharedSub>, msg: String| {
         for s in subs {
             shared.trace.emit(EventKind::Fail, s.uid, s.tenant.0, shard as u32, 0, 0);
@@ -2118,6 +2156,12 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch, shard: usize) {
             s.reply.send(Err(anyhow::anyhow!("shared-B batch rejected: {msg}")));
         }
     };
+    // Reduced precision exists only on the packed in-process path (see
+    // `plan_one`, which gates lone jobs the same way).
+    if dtype != Dtype::F32 && !shared.engine.is_inprocess() {
+        reject_all(subs, format!("dtype {dtype} requires an in-process engine"));
+        return;
+    }
     // Resolve the shared operand up front: a dead handle or a
     // degenerate inline B rejects every sub.
     let (b, handle): (Arc<Matrix>, Option<WeightHandle>) = match b {
@@ -2184,7 +2228,7 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch, shard: usize) {
     }
     // One config for the whole batch; failure (bad pin, DSE error)
     // rejects every surviving sub.
-    let run = match choose_shared_run(shared, &b, handle, &accepted, run) {
+    let run = match choose_shared_run(shared, &b, handle, &accepted, run, dtype) {
         Ok(r) => r,
         Err(e) => {
             let msg = format!("{e:#}");
@@ -2223,9 +2267,9 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch, shard: usize) {
         let pb = match handle {
             None => {
                 shared.metrics.add_b_panel_packs(1);
-                Arc::new(PackedB::pack(b.view(), run.sj))
+                Arc::new(PackedB::pack_dtype(b.view(), run.sj, dtype))
             }
-            Some(h) => match shared.operands.resolve_pack(h, run.sj) {
+            Some(h) => match shared.operands.resolve_pack_dtype(h, run.sj, dtype) {
                 Ok(pb) => pb,
                 Err(e) => {
                     reject_all(accepted.into_iter().map(|(s, _)| s).collect(), format!("{e:#}"));
@@ -2249,7 +2293,7 @@ fn dispatch_shared_b(shared: &Arc<Shared>, batch: SharedBatch, shard: usize) {
         // Resolve this sub's A: inline packs privately, a registered
         // activation resolves its cached pack — a handle that died
         // since validation fails this sub alone.
-        let (a, packed_a) = match resolve_a_operand(shared, s.a, run.si, inprocess) {
+        let (a, packed_a) = match resolve_a_operand(shared, s.a, run.si, dtype, inprocess) {
             Ok(resolved) => resolved,
             Err(e) => {
                 shared.trace.emit(EventKind::Fail, s.uid, s.tenant.0, shard as u32, 0, 0);
@@ -3027,6 +3071,7 @@ mod tests {
             tenant: TenantId::DEFAULT,
             deadline: None,
             uid: id,
+            dtype: Dtype::F32,
         }
     }
 
@@ -3051,6 +3096,7 @@ mod tests {
                     uid: i,
                 })
                 .collect(),
+            dtype: Dtype::F32,
         });
         match adm.try_push(meta(2), batch) {
             Err(TryPushError::Full(QueueItem::SharedB(SharedBatch { b, subs, .. }))) => {
@@ -3315,6 +3361,110 @@ mod tests {
         assert_eq!((s.registry_hits, s.registry_misses), (0, 4), "every variant packed fresh");
         assert!(s.registry_evictions >= 2, "unpinned packs evicted past the budget");
         assert!(s.registry_a_evictions >= 1, "the A side participated in cross-side LRU");
+    }
+
+    #[test]
+    fn f32_dtype_submission_is_bit_identical_to_default_path() {
+        // The no-regression gate for the whole dtype refactor: an
+        // explicit `.dtype(F32)` submission takes the exact code path a
+        // plain submit does — same packs (counter-asserted), and bits
+        // equal to the pinned packed_matmul reference.
+        let srv = server(small_cfg());
+        let a = Matrix::random(20, 12, 500);
+        let b = Matrix::random(12, 24, 501);
+        let want = crate::gemm::packed_matmul(&a, &b, 16, 16);
+        let plain = srv
+            .submit(GemmJob {
+                id: 0,
+                a: a.clone().into(),
+                b: b.clone().into(),
+                run: Some(RunConfig::square(2, 16)),
+            })
+            .unwrap()
+            .wait()
+            .unwrap();
+        let explicit = srv
+            .submit_blocking(
+                Submission::gemm(a, b).run(RunConfig::square(2, 16)).dtype(Dtype::F32),
+            )
+            .unwrap();
+        assert_eq!(plain.c.data, want.data, "default path matches the pinned reference");
+        assert_eq!(explicit[0].c.data, want.data, "explicit F32 is bit-identical");
+        let s = srv.stats();
+        assert_eq!((s.a_panel_packs, s.b_panel_packs), (2, 2), "one pack per side per job");
+        assert_eq!(
+            s.registry_dtype_resident_bytes,
+            [0, 0, 0, 0],
+            "inline jobs leave nothing resident"
+        );
+    }
+
+    #[test]
+    fn half_dtype_jobs_match_f64_oracle_at_ragged_shapes() {
+        // Reduced-precision GEMM accumulates in f32 over half-width
+        // panels; against an f64 oracle the error stays within the
+        // documented per-dtype bounds even at ragged prime shapes.
+        let srv = server(small_cfg());
+        for (dtype, tol) in [(Dtype::F16, 2e-2f32), (Dtype::Bf16, 1.5e-1)] {
+            for (i, &(m, k, n)) in
+                [(13usize, 7usize, 11usize), (23, 5, 9), (3, 17, 29)].iter().enumerate()
+            {
+                let a = Matrix::random(m, k, 520 + i as u64);
+                let b = Matrix::random(k, n, 540 + i as u64);
+                let oracle = a.matmul_f64(&b);
+                let r = srv
+                    .submit_blocking(
+                        Submission::gemm(a, b).run(RunConfig::square(2, 16)).dtype(dtype),
+                    )
+                    .unwrap();
+                assert!(
+                    r[0].c.allclose(&oracle, tol),
+                    "{dtype} {m}x{k}x{n} exceeded tolerance {tol}"
+                );
+            }
+        }
+        // F64 jobs ride the same plumbing (wide panels, f64 accumulate).
+        let a = Matrix::random(13, 7, 580);
+        let b = Matrix::random(7, 11, 581);
+        let oracle = a.matmul_f64(&b);
+        let r = srv
+            .submit_blocking(
+                Submission::gemm(a, b).run(RunConfig::square(2, 16)).dtype(Dtype::F64),
+            )
+            .unwrap();
+        assert!(r[0].c.allclose(&oracle, 1e-6));
+    }
+
+    #[test]
+    fn registered_weight_serves_two_dtypes_with_one_pack_per_variant() {
+        // The multi-precision registry gate: one WeightHandle serves f32
+        // and bf16 traffic with exactly one pack per (S_j, dtype)
+        // variant, and the per-dtype residency split surfaces in stats.
+        let srv = server(small_cfg());
+        let b = Matrix::random(16, 24, 590);
+        let h = srv.register_b(b.clone()).unwrap();
+        let run = RunConfig::square(2, 16);
+        for (id, dtype) in
+            [(0u64, Dtype::F32), (1, Dtype::Bf16), (2, Dtype::F32), (3, Dtype::Bf16)]
+        {
+            let a = Matrix::random(20, 16, 595 + id);
+            let oracle = a.matmul_f64(&b);
+            let tol = if dtype == Dtype::F32 { 1e-4 } else { 1.5e-1 };
+            let r = srv
+                .submit_blocking(Submission::gemm(a, h).id(id).run(run).dtype(dtype))
+                .unwrap();
+            assert!(r[0].c.allclose(&oracle, tol), "job {id} ({dtype})");
+        }
+        let s = srv.stats();
+        assert_eq!(s.b_panel_packs, 2, "one pack per (handle, sj, dtype) variant");
+        assert_eq!((s.registry_hits, s.registry_misses), (2, 2));
+        assert_eq!(s.a_panel_packs, 4, "inline A packs are per-job regardless of dtype");
+        let f32_bytes = s.registry_dtype_resident_bytes[Dtype::F32.index()];
+        let bf16_bytes = s.registry_dtype_resident_bytes[Dtype::Bf16.index()];
+        assert!(f32_bytes > 0 && bf16_bytes > 0);
+        assert_eq!(bf16_bytes * 2, f32_bytes, "half-width panels, same element count");
+        assert_eq!(f32_bytes + bf16_bytes, s.registry_resident_bytes);
+        assert!(s.to_string().contains("dtype_resident(f32/f64/f16/bf16)="), "got: {s}");
     }
 
     use super::super::trace::Terminal;

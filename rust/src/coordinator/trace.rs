@@ -89,7 +89,9 @@ pub enum EventKind {
     /// validation, execution error).
     Fail,
     /// Registry pack-cache hit (`uid` = handle, `a` = bytes,
-    /// `b` = side: 0 = A, 1 = B).
+    /// `b` = side in bit 0 (0 = A, 1 = B) with the pack's
+    /// `Dtype::index` in the bits above it — f32 packs, index 0, emit
+    /// exactly the pre-multi-precision payloads).
     RegistryHit,
     /// Registry pack-cache miss (payload as [`EventKind::RegistryHit`]).
     RegistryMiss,
@@ -827,13 +829,16 @@ impl TraceExporter<'_> {
                         EventKind::RegistryMiss => "miss",
                         _ => "evict",
                     };
-                    let side = if ev.b == 0 { "A" } else { "B" };
+                    let side = if ev.b & 1 == 0 { "A" } else { "B" };
+                    let dtype = crate::gemm::Dtype::from_index((ev.b >> 1) as usize)
+                        .map(|d| d.label())
+                        .unwrap_or("?");
                     write!(
                         w,
                         "{{\"name\":\"{name}\",\"cat\":\"registry\",\"ph\":\"i\",\
                          \"s\":\"t\",\"pid\":{PID},\"tid\":{TID_REGISTRY},\
                          \"ts\":{},\"args\":{{\"handle\":{},\"bytes\":{},\
-                         \"side\":\"{side}\"}}}}",
+                         \"side\":\"{side}\",\"dtype\":\"{dtype}\"}}}}",
                         ev.t_us, ev.uid, ev.a
                     )?;
                 }
@@ -1163,6 +1168,7 @@ mod tests {
             "\"ph\":\"b\"",
             "\"ph\":\"e\"",
             "\"name\":\"miss\"",
+            "\"side\":\"B\",\"dtype\":\"f32\"",
             "\"name\":\"strassen-level-0\"",
         ] {
             assert!(text.contains(needle), "missing {needle}");

@@ -19,6 +19,7 @@
 use crate::analytical::{self, BandwidthSurface, Prediction};
 use crate::blocking::BlockPlan;
 use crate::config::{HardwareConfig, RunConfig};
+use crate::gemm::Dtype;
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -61,12 +62,28 @@ pub fn explore(
     n: usize,
     surface: &BandwidthSurface,
 ) -> anyhow::Result<Exploration> {
+    explore_dtype(hw, m, k, n, surface, Dtype::F32)
+}
+
+/// [`explore`] with every candidate priced at `dtype`
+/// ([`analytical::predict_dtype`]): narrower operands move less data
+/// and cost cheaper MACs, so the optimum can shift toward smaller
+/// blocks or more arrays. Identical to [`explore`] at `F32` (which
+/// delegates here).
+pub fn explore_dtype(
+    hw: &HardwareConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+    dtype: Dtype,
+) -> anyhow::Result<Exploration> {
     let flops = BlockPlan::new(m, k, n, 16, 16).effective_flops();
     let mut points = Vec::new();
     for si in candidate_sis(hw, m) {
         for np in analytical::feasible_nps(hw, si) {
             let run = RunConfig::square(np, si);
-            let prediction = analytical::predict(hw, &run, m, k, n, surface)?;
+            let prediction = analytical::predict_dtype(hw, &run, m, k, n, surface, dtype)?;
             let est_gflops = prediction.gflops_from(flops);
             points.push(DesignPoint { run, prediction, est_gflops });
         }
@@ -80,6 +97,50 @@ pub fn explore(
             .then(a.prediction.upper.partial_cmp(&b.prediction.upper).unwrap())
     });
     Ok(Exploration { m, k, n, best: points[0].clone(), points })
+}
+
+/// A precision-aware exploration verdict: the chosen dtype and the full
+/// design-point ranking at that precision.
+#[derive(Debug, Clone)]
+pub struct PrecisionChoice {
+    pub dtype: Dtype,
+    pub exploration: Exploration,
+}
+
+/// Precision-aware DSE: among the precisions whose unit roundoff is at
+/// most `accuracy_floor`, return the one whose best design point is
+/// fastest. f16 and bf16 price identically (same width, same MAC
+/// cost); the tie resolves toward bf16, whose f32-width exponent keeps
+/// long accumulations out of overflow. Errors when no precision meets
+/// the floor (ask for better than f64 and nothing qualifies).
+pub fn explore_precision(
+    hw: &HardwareConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    surface: &BandwidthSurface,
+    accuracy_floor: f64,
+) -> anyhow::Result<PrecisionChoice> {
+    // Preference order under ties: widest exponent range per byte
+    // first. Strict `<` below means earlier entries win exact ties.
+    let mut best: Option<PrecisionChoice> = None;
+    for dtype in [Dtype::Bf16, Dtype::F16, Dtype::F32, Dtype::F64] {
+        if dtype.unit_roundoff() > accuracy_floor {
+            continue;
+        }
+        let exploration = explore_dtype(hw, m, k, n, surface, dtype)?;
+        let t = exploration.best.prediction.t_overlap();
+        if best
+            .as_ref()
+            .map(|b| t < b.exploration.best.prediction.t_overlap())
+            .unwrap_or(true)
+        {
+            best = Some(PrecisionChoice { dtype, exploration });
+        }
+    }
+    best.ok_or_else(|| {
+        anyhow::anyhow!("no precision meets accuracy floor {accuracy_floor:e} (f64 is the best available)")
+    })
 }
 
 /// Direct exploration plus the Strassen recursion verdict — the cutoff
@@ -213,6 +274,43 @@ mod tests {
         assert!(*sis.last().unwrap() <= 96);
         let sis = candidate_sis(&hw, 1);
         assert_eq!(sis, vec![16]);
+    }
+
+    #[test]
+    fn explore_dtype_f32_is_the_base_sweep() {
+        let (hw, s) = setup();
+        let base = explore(&hw, 128, 1200, 729, &s).unwrap();
+        let f32d = explore_dtype(&hw, 128, 1200, 729, &s, Dtype::F32).unwrap();
+        assert_eq!(base.best.run, f32d.best.run);
+        assert_eq!(
+            base.best.prediction.t_overlap().to_bits(),
+            f32d.best.prediction.t_overlap().to_bits()
+        );
+    }
+
+    #[test]
+    fn explore_precision_selects_cheapest_dtype_meeting_the_floor() {
+        // The acceptance pin for precision-aware DSE, against the
+        // per-precision cost tables: a loose floor admits the half
+        // types (bf16 wins the f16 tie on exponent range), a 1e-6
+        // floor excludes both halves and falls back to f32, a floor
+        // only f64 meets returns f64, and an impossible floor errors.
+        let (hw, s) = setup();
+        let loose = explore_precision(&hw, 128, 1200, 729, &s, 5e-3).unwrap();
+        assert_eq!(loose.dtype, Dtype::Bf16);
+        let f16_only = explore_precision(&hw, 128, 1200, 729, &s, 1e-3).unwrap();
+        assert_eq!(f16_only.dtype, Dtype::F16, "bf16 fails a 1e-3 floor, f16 meets it");
+        let tight = explore_precision(&hw, 128, 1200, 729, &s, 1e-6).unwrap();
+        assert_eq!(tight.dtype, Dtype::F32);
+        let double = explore_precision(&hw, 128, 1200, 729, &s, 2e-16).unwrap();
+        assert_eq!(double.dtype, Dtype::F64);
+        assert!(explore_precision(&hw, 128, 1200, 729, &s, 1e-17).is_err());
+        // The cheaper precision is genuinely predicted faster: that is
+        // WHY the loose floor picks it.
+        assert!(
+            loose.exploration.best.prediction.t_overlap()
+                < tight.exploration.best.prediction.t_overlap()
+        );
     }
 
     #[test]

@@ -1,0 +1,377 @@
+//! Element precision as a first-class job parameter.
+//!
+//! [`Dtype`] names the four storage precisions a job can request for its
+//! packed panels. The host-side substrate ([`super::Matrix`]) stays `f32`
+//! everywhere — dtype is applied **at pack time**: the packer converts each
+//! element into the job's storage format, the per-dtype microkernels widen
+//! half-precision elements back to `f32` on load and accumulate in `f32`
+//! (natively in `f64` for [`Dtype::F64`]), and results stream back into the
+//! `f32` `C` buffer exactly as before. `F32` jobs never touch a conversion:
+//! they run the pre-existing pack functions and microkernel bit for bit.
+//!
+//! Stable Rust has no `f16`/`bf16` primitives, so the half types are stored
+//! as IEEE bit patterns in `u16` and converted with the scalar kernels in
+//! this module ([`f32_to_f16_bits`] & co. — round-to-nearest-even, with
+//! subnormal, infinity, and NaN handling).
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Storage precision for a job's packed panels.
+///
+/// The default is [`Dtype::F32`], which reproduces the pre-multi-precision
+/// behavior bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Dtype {
+    /// IEEE double; packs widen `f32` inputs exactly, accumulates in `f64`.
+    F64,
+    /// IEEE single — the legacy path, byte- and bit-identical to before.
+    #[default]
+    F32,
+    /// IEEE half (1-5-10); widen-on-load, accumulate in `f32`.
+    F16,
+    /// bfloat16 (1-8-7); widen-on-load, accumulate in `f32`.
+    Bf16,
+}
+
+impl Dtype {
+    /// Every dtype, in [`Dtype::index`] order (`F32` first so that index 0
+    /// — and the dtype bits of trace payloads — stay zero for f32 traffic).
+    pub const ALL: [Dtype; 4] = [Dtype::F32, Dtype::F64, Dtype::F16, Dtype::Bf16];
+
+    /// Storage bytes per element (8 / 4 / 2 / 2).
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F64 => 8,
+            Dtype::F32 => 4,
+            Dtype::F16 | Dtype::Bf16 => 2,
+        }
+    }
+
+    /// Lower-case label used in CLI flags, bench annotations, and stats.
+    pub fn label(self) -> &'static str {
+        match self {
+            Dtype::F64 => "f64",
+            Dtype::F32 => "f32",
+            Dtype::F16 => "f16",
+            Dtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Dense index for per-dtype metric arrays and trace payloads.
+    ///
+    /// `F32` is index 0 so that encoding a dtype into previously-zero
+    /// payload bits leaves every f32-only trace bitwise unchanged.
+    pub fn index(self) -> usize {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::F64 => 1,
+            Dtype::F16 => 2,
+            Dtype::Bf16 => 3,
+        }
+    }
+
+    /// Inverse of [`Dtype::index`].
+    pub fn from_index(i: usize) -> Option<Dtype> {
+        Dtype::ALL.get(i).copied()
+    }
+
+    /// Unit roundoff of the *storage* format — the worst-case relative
+    /// error introduced by rounding one operand element into this dtype
+    /// (`2^-(p)` for `p` stored significand bits plus the implicit one).
+    /// Accumulation is always f32 or wider, so per-element storage error
+    /// dominates the end-to-end GEMM error; DSE compares this against a
+    /// caller-supplied accuracy floor.
+    pub fn unit_roundoff(self) -> f64 {
+        match self {
+            Dtype::F64 => 1.1102230246251565e-16, // 2^-53
+            Dtype::F32 => 5.960464477539063e-8,   // 2^-24
+            Dtype::F16 => 4.8828125e-4,           // 2^-11
+            Dtype::Bf16 => 3.90625e-3,            // 2^-8
+        }
+    }
+
+    /// True for the two 16-bit formats.
+    pub fn is_half(self) -> bool {
+        matches!(self, Dtype::F16 | Dtype::Bf16)
+    }
+
+    /// `u16` bit-pattern encoder for the half formats (`None` otherwise).
+    pub fn half_encoder(self) -> Option<fn(f32) -> u16> {
+        match self {
+            Dtype::F16 => Some(f32_to_f16_bits),
+            Dtype::Bf16 => Some(f32_to_bf16_bits),
+            _ => None,
+        }
+    }
+
+    /// `u16` bit-pattern decoder for the half formats (`None` otherwise).
+    pub fn half_decoder(self) -> Option<fn(u16) -> f32> {
+        match self {
+            Dtype::F16 => Some(f16_bits_to_f32),
+            Dtype::Bf16 => Some(bf16_bits_to_f32),
+            _ => None,
+        }
+    }
+
+    /// Round-trip one element through this dtype's storage format: the
+    /// value a packed panel actually holds for input `x`.
+    pub fn quantize(self, x: f32) -> f32 {
+        match self {
+            Dtype::F64 | Dtype::F32 => x,
+            Dtype::F16 => f16_bits_to_f32(f32_to_f16_bits(x)),
+            Dtype::Bf16 => bf16_bits_to_f32(f32_to_bf16_bits(x)),
+        }
+    }
+}
+
+impl fmt::Display for Dtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl FromStr for Dtype {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f64" => Ok(Dtype::F64),
+            "f32" => Ok(Dtype::F32),
+            "f16" => Ok(Dtype::F16),
+            "bf16" => Ok(Dtype::Bf16),
+            other => Err(format!(
+                "unknown dtype {other:?} (expected f64, f32, f16, or bf16)"
+            )),
+        }
+    }
+}
+
+/// Convert `f32` to IEEE half (1-5-10) bits, round-to-nearest-even.
+///
+/// Overflow saturates to infinity, values below the smallest half
+/// subnormal round to signed zero, and NaN stays NaN (quiet bit forced so
+/// a truncated payload can never turn into infinity).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xff) as i32;
+    let man32 = bits & 0x007f_ffff;
+    if exp32 == 0xff {
+        let payload = if man32 == 0 {
+            0 // infinity
+        } else {
+            0x0200 | ((man32 >> 13) as u16 & 0x03ff)
+        };
+        return sign | 0x7c00 | payload;
+    }
+    let exp_h = exp32 - 127 + 15;
+    if exp_h >= 0x1f {
+        return sign | 0x7c00; // overflow -> infinity
+    }
+    if exp_h <= 0 {
+        // Subnormal target: shift the implicit-1 mantissa into place.
+        // Below exp_h = -10 even the halfway point rounds to zero.
+        if exp_h < -10 {
+            return sign;
+        }
+        let m = man32 | 0x0080_0000;
+        let shift = (14 - exp_h) as u32; // 14..=24
+        let half = 1u32 << (shift - 1);
+        let rem = m & ((1u32 << shift) - 1);
+        let mut man_h = m >> shift;
+        if rem > half || (rem == half && man_h & 1 == 1) {
+            man_h += 1; // may carry into the smallest normal — still correct
+        }
+        return sign | man_h as u16;
+    }
+    // Normal target: round 23 mantissa bits to 10, RNE; a mantissa that
+    // rounds up to 2.0 carries into the exponent (possibly to infinity).
+    let round = 0x0fff + ((man32 >> 13) & 1);
+    let h = ((exp_h as u32) << 10) + ((man32 + round) >> 13);
+    sign | h as u16
+}
+
+/// Convert IEEE half (1-5-10) bits to `f32`. Exact for every input.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, _) => {
+            // Subnormal: renormalize into f32's normal range.
+            let mut e = -14i32;
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03ff;
+            sign | (((e + 127) as u32) << 23) | (m << 13)
+        }
+        (0x1f, 0) => sign | 0x7f80_0000,
+        (0x1f, _) => sign | 0x7f80_0000 | (man << 13), // NaN, payload kept
+        _ => sign | ((exp + 112) << 23) | (man << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Convert `f32` to bfloat16 (1-8-7) bits, round-to-nearest-even.
+///
+/// bf16 shares f32's exponent range, so there is no overflow/underflow
+/// special-casing beyond the rounding itself; NaN keeps its quiet bit.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Force the quiet bit so truncating the payload can't yield Inf.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7fff;
+    ((bits + round) >> 16) as u16
+}
+
+/// Convert bfloat16 (1-8-7) bits to `f32`. Exact for every input.
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scalar oracle: round an `f32` to `p` significand bits (RNE) via
+    /// `f64` arithmetic, without reimplementing the bit tricks under test.
+    fn round_to_precision(x: f32, p: i32, min_exp: i32) -> f64 {
+        let v = x as f64;
+        if v == 0.0 || !v.is_finite() {
+            return v;
+        }
+        let e = v.abs().log2().floor() as i32;
+        let e = e.max(min_exp); // subnormals round on a fixed grid
+        let ulp = (e - (p - 1)).clamp(-1074, 1023);
+        let scale = (ulp as f64).exp2();
+        (v / scale).round_ties_even() * scale
+    }
+
+    #[test]
+    fn f16_matches_scalar_oracle_on_sweep() {
+        // Magnitudes from deep subnormal to overflow, both signs.
+        let mut xs = vec![0.0f32, -0.0];
+        for e in -30..=18 {
+            for m in [1.0f32, 1.25, 1.5, 1.9990234375] {
+                let v = m * (e as f32).exp2();
+                xs.push(v);
+                xs.push(-v);
+            }
+        }
+        for &x in &xs {
+            let rt = f16_bits_to_f32(f32_to_f16_bits(x));
+            let oracle = round_to_precision(x, 11, -14);
+            if oracle.abs() > 65504.0 {
+                assert!(rt.is_infinite() && (rt > 0.0) == (x > 0.0), "x={x}");
+            } else if oracle.abs() < (-149f64).exp2() {
+                assert_eq!(rt, 0.0, "x={x} rt={rt}");
+            } else {
+                assert_eq!(rt as f64, oracle, "x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_matches_scalar_oracle_on_sweep() {
+        let mut xs = vec![0.0f32, -0.0];
+        for e in -40..=38 {
+            for m in [1.0f32, 1.2421875, 1.5, 1.984375] {
+                let v = m * (e as f32).exp2();
+                xs.push(v);
+                xs.push(-v);
+            }
+        }
+        for &x in &xs {
+            let rt = bf16_bits_to_f32(f32_to_bf16_bits(x));
+            let oracle = round_to_precision(x, 8, -126);
+            assert_eq!(rt as f64, oracle, "x={x}");
+        }
+    }
+
+    #[test]
+    fn f16_special_values() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // f16::MAX
+        assert_eq!(f32_to_f16_bits(65536.0), 0x7c00); // overflow -> inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        let nan = f32_to_f16_bits(f32::NAN);
+        assert_eq!(nan & 0x7c00, 0x7c00);
+        assert_ne!(nan & 0x03ff, 0);
+        // Smallest f16 subnormal and the value just under half of it.
+        assert_eq!(f16_bits_to_f32(0x0001), (-24f32).exp2());
+        assert_eq!(f32_to_f16_bits((-24f32).exp2()), 0x0001);
+        assert_eq!(f32_to_f16_bits((-26f32).exp2()), 0x0000);
+        // Exact tie at half the smallest subnormal rounds to even (zero).
+        assert_eq!(f32_to_f16_bits((-25f32).exp2()), 0x0000);
+    }
+
+    #[test]
+    fn f16_rne_ties() {
+        // 1 + 2^-11 is exactly between 1.0 and the next f16 (1 + 2^-10):
+        // ties to even -> 1.0. One ulp32 above the tie rounds up.
+        let tie = f32::from_bits(0x3f80_1000);
+        assert_eq!(f32_to_f16_bits(tie), 0x3c00);
+        let above = f32::from_bits(0x3f80_1001);
+        assert_eq!(f32_to_f16_bits(above), 0x3c01);
+        // 1 + 3*2^-11 ties between 1+2^-10 and 1+2^-9: to even -> 1+2^-9.
+        let tie_odd = f32::from_bits(0x3f80_3000);
+        assert_eq!(f32_to_f16_bits(tie_odd), 0x3c02);
+    }
+
+    #[test]
+    fn bf16_special_values() {
+        assert_eq!(f32_to_bf16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_bf16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3f80);
+        assert_eq!(bf16_bits_to_f32(0x3f80), 1.0);
+        assert_eq!(f32_to_bf16_bits(f32::INFINITY), 0x7f80);
+        let nan = f32_to_bf16_bits(f32::NAN);
+        assert_eq!(nan & 0x7f80, 0x7f80);
+        assert_ne!(nan & 0x007f, 0);
+        // RNE tie: 1 + 2^-8 is between 1.0 and 1 + 2^-7 -> even (1.0).
+        assert_eq!(f32_to_bf16_bits(1.0 + (-8f32).exp2()), 0x3f80);
+        assert_eq!(f32_to_bf16_bits(1.0 + 3.0 * (-8f32).exp2()), 0x3f82);
+        // Rounding can push f32::MAX over the top: correct RNE -> inf.
+        assert_eq!(f32_to_bf16_bits(f32::MAX), 0x7f80);
+    }
+
+    #[test]
+    fn grid_values_round_trip_exactly_in_both_half_formats() {
+        // k/256 for k in [-256, 256) is exactly representable in f16
+        // (11-bit significand) and bf16 (8-bit significand): |k| <= 256
+        // needs at most 8 significant bits after normalization.
+        for k in -256i32..256 {
+            let x = k as f32 / 256.0;
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), x, "f16 k={k}");
+            assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(x)), x, "bf16 k={k}");
+        }
+    }
+
+    #[test]
+    fn dtype_surface() {
+        assert_eq!(Dtype::default(), Dtype::F32);
+        for d in Dtype::ALL {
+            assert_eq!(Dtype::from_index(d.index()), Some(d));
+            assert_eq!(d.label().parse::<Dtype>(), Ok(d));
+            assert_eq!(format!("{d}"), d.label());
+        }
+        assert_eq!(Dtype::F32.index(), 0); // trace payloads rely on this
+        assert_eq!(Dtype::F64.bytes(), 8);
+        assert_eq!(Dtype::F16.bytes(), 2);
+        assert!(Dtype::Bf16.unit_roundoff() > Dtype::F16.unit_roundoff());
+        assert!("f8".parse::<Dtype>().is_err());
+        assert_eq!(Dtype::F32.quantize(0.1), 0.1);
+        assert!((Dtype::Bf16.quantize(0.1) - 0.1).abs() < 1e-3);
+    }
+}

@@ -39,6 +39,15 @@ impl Matrix {
         Self { rows, cols, data }
     }
 
+    /// Deterministic pseudo-random matrix on the `k/256` grid — every
+    /// element exactly representable in f16 and bf16, for half-precision
+    /// bit-identity tests (see [`Rng::next_f32_grid`]).
+    pub fn random_quantized(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols).map(|_| rng.next_f32_grid()).collect();
+        Self { rows, cols, data }
+    }
+
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> f32 {
         self.data[r * self.cols + c]
@@ -68,6 +77,36 @@ impl Matrix {
                 for (o, b) in orow.iter_mut().zip(brow) {
                     *o += a * b;
                 }
+            }
+        }
+        out
+    }
+
+    /// Reference GEMM with f64 accumulation (result narrowed to f32 at
+    /// the end): the oracle the reduced-precision kernels are measured
+    /// against — its own rounding error is negligible next to any
+    /// f32/f16/bf16 path's.
+    pub fn matmul_f64(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "contraction mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        let mut acc = vec![0.0f64; other.cols];
+        for i in 0..self.rows {
+            acc.fill(0.0);
+            for k in 0..self.cols {
+                let a = self.get(i, k) as f64;
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                for (o, &b) in acc.iter_mut().zip(brow) {
+                    *o += a * b as f64;
+                }
+            }
+            for (o, &v) in out.data[i * other.cols..(i + 1) * other.cols]
+                .iter_mut()
+                .zip(&acc)
+            {
+                *o = v as f32;
             }
         }
         out
@@ -188,6 +227,23 @@ mod tests {
         let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
         let c = a.matmul(&b);
         assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_f64_agrees_with_f32_oracle() {
+        let a = Matrix::random(13, 29, 50);
+        let b = Matrix::random(29, 11, 51);
+        let got = a.matmul_f64(&b);
+        assert!(got.allclose(&a.matmul(&b), 1e-5));
+    }
+
+    #[test]
+    fn quantized_random_is_half_exact() {
+        use crate::gemm::dtype::{f16_bits_to_f32, f32_to_f16_bits};
+        let m = Matrix::random_quantized(9, 7, 52);
+        for &v in &m.data {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), v);
+        }
     }
 
     #[test]

@@ -12,10 +12,19 @@
 //! the PE array (ascending k, one rank-1 update per step), so results
 //! agree with the oracle to the usual FP32 reassociation noise only from
 //! padding zeros, which contribute exact `+0.0` terms.
+//!
+//! Multi-precision: the kernel has one variant per storage class.
+//! [`micro_kernel`] is the legacy f32 path, untouched;
+//! [`micro_kernel_f64`] accumulates natively in f64 and narrows the
+//! finished tile once on write-out; [`micro_kernel_half`] widens each
+//! f16/bf16 element to f32 on load and accumulates in f32 (the
+//! accumulate-in-f32 scheme gemm_hls uses for half precision). All
+//! variants stream into the same f32 `C` writer, so downstream stays
+//! dtype-blind.
 
 use crate::blocking::BlockTask;
 
-use super::pack::PackedPanels;
+use super::pack::{PackedPanels, PanelRef};
 use super::view::DisjointBlocks;
 use super::Matrix;
 
@@ -34,6 +43,49 @@ pub fn micro_kernel(ap: &[f32], bp: &[f32], k: usize) -> [f32; MR * NR] {
     for (a_col, b_row) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)).take(k) {
         for (acc_row, &a) in acc.chunks_exact_mut(NR).zip(a_col) {
             for (c, &b) in acc_row.iter_mut().zip(b_row) {
+                *c += a * b;
+            }
+        }
+    }
+    acc
+}
+
+/// [`micro_kernel`] over f64 strips: same dataflow, native f64
+/// accumulation. The caller narrows the finished tile to f32 once, so a
+/// full-K dot product suffers exactly one f32 rounding instead of one
+/// per step.
+#[inline]
+pub fn micro_kernel_f64(ap: &[f64], bp: &[f64], k: usize) -> [f64; MR * NR] {
+    debug_assert!(ap.len() >= k * MR && bp.len() >= k * NR);
+    let mut acc = [0.0f64; MR * NR];
+    for (a_col, b_row) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)).take(k) {
+        for (acc_row, &a) in acc.chunks_exact_mut(NR).zip(a_col) {
+            for (c, &b) in acc_row.iter_mut().zip(b_row) {
+                *c += a * b;
+            }
+        }
+    }
+    acc
+}
+
+/// [`micro_kernel`] over f16/bf16 bit-pattern strips: each element is
+/// widened to f32 through `decode` on load and the tile accumulates in
+/// f32 — precision is lost only where the *storage* rounded, never in
+/// the accumulation dataflow, which stays bit-compatible with the f32
+/// kernel fed pre-quantized inputs.
+#[inline]
+pub fn micro_kernel_half(ap: &[u16], bp: &[u16], k: usize, decode: fn(u16) -> f32) -> [f32; MR * NR] {
+    debug_assert!(ap.len() >= k * MR && bp.len() >= k * NR);
+    let mut acc = [0.0f32; MR * NR];
+    for (a_col, b_row) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)).take(k) {
+        // Widen the NR-wide B row once per k step, not once per FMA.
+        let mut brow = [0.0f32; NR];
+        for (o, &b) in brow.iter_mut().zip(b_row) {
+            *o = decode(b);
+        }
+        for (acc_row, &a) in acc.chunks_exact_mut(NR).zip(a_col) {
+            let a = decode(a);
+            for (c, &b) in acc_row.iter_mut().zip(&brow) {
                 *c += a * b;
             }
         }
@@ -74,19 +126,51 @@ unsafe fn write_task(
     base_col: usize,
 ) {
     let k = panels.k();
-    let (ap, rows) = panels.a_panel(task.bi);
-    let (bp, cols) = panels.b_panel(task.bj);
+    let (apr, rows) = panels.a_panel_ref(task.bi);
+    let (bpr, cols) = panels.b_panel_ref(task.bj);
     assert_eq!(rows, task.rows, "panel/task row mismatch");
     assert_eq!(cols, task.cols, "panel/task col mismatch");
     let a_strips = rows.div_ceil(MR);
     let b_strips = cols.div_ceil(NR);
     for s in 0..a_strips {
-        let ap_s = &ap[s * k * MR..(s + 1) * k * MR];
         let rows_here = MR.min(rows - s * MR);
         for t in 0..b_strips {
-            let bp_t = &bp[t * k * NR..(t + 1) * k * NR];
             let cols_here = NR.min(cols - t * NR);
-            let acc = micro_kernel(ap_s, bp_t, k);
+            // Dispatch on the panels' storage dtype; `from_parts`
+            // guarantees both halves agree, so mixed arms are
+            // unreachable. The F32 arm is the untouched legacy kernel.
+            let acc: [f32; MR * NR] = match (apr, bpr) {
+                (PanelRef::F32(ap), PanelRef::F32(bp)) => micro_kernel(
+                    &ap[s * k * MR..(s + 1) * k * MR],
+                    &bp[t * k * NR..(t + 1) * k * NR],
+                    k,
+                ),
+                (PanelRef::F64(ap), PanelRef::F64(bp)) => {
+                    let wide = micro_kernel_f64(
+                        &ap[s * k * MR..(s + 1) * k * MR],
+                        &bp[t * k * NR..(t + 1) * k * NR],
+                        k,
+                    );
+                    let mut acc = [0.0f32; MR * NR];
+                    for (o, v) in acc.iter_mut().zip(wide) {
+                        *o = v as f32;
+                    }
+                    acc
+                }
+                (PanelRef::Half(ap), PanelRef::Half(bp)) => {
+                    let decode = panels
+                        .dtype()
+                        .half_decoder()
+                        .expect("half panels carry a half dtype");
+                    micro_kernel_half(
+                        &ap[s * k * MR..(s + 1) * k * MR],
+                        &bp[t * k * NR..(t + 1) * k * NR],
+                        k,
+                        decode,
+                    )
+                }
+                _ => unreachable!("packed halves disagree on dtype"),
+            };
             out.write_block(
                 base_row + s * MR,
                 base_col + t * NR,
@@ -177,6 +261,86 @@ mod tests {
                 assert!(got.allclose(&want, 1e-3), "task {}", task.id);
             }
         });
+    }
+
+    #[test]
+    fn dtype_f32_task_product_is_bit_identical() {
+        // The dtype-parameterized pack at F32 must reproduce the legacy
+        // path bit for bit, task by task.
+        let a = Matrix::random(37, 19, 21);
+        let b = Matrix::random(19, 29, 22);
+        let plan = BlockPlan::new(37, 19, 29, 16, 12);
+        let legacy = PackedPanels::pack(a.view(), b.view(), &plan);
+        let typed = PackedPanels::pack_dtype(a.view(), b.view(), &plan, crate::gemm::Dtype::F32);
+        for task in plan.tasks() {
+            let x = task_product(&legacy, &task);
+            let y = task_product(&typed, &task);
+            assert_eq!(x.data, y.data, "task {}", task.id);
+        }
+    }
+
+    #[test]
+    fn f64_panels_match_f64_oracle_tightly() {
+        use crate::gemm::Dtype;
+        // Ragged prime shapes; the f64 kernel should sit within f32
+        // output rounding of the f64 oracle.
+        let a = Matrix::random(31, 53, 23);
+        let b = Matrix::random(53, 37, 24);
+        let plan = BlockPlan::new(31, 53, 37, 16, 12);
+        let panels = PackedPanels::pack_dtype(a.view(), b.view(), &plan, Dtype::F64);
+        let oracle = a.matmul_f64(&b);
+        for task in plan.tasks() {
+            let got = task_product(&panels, &task);
+            let want = oracle.block(task.row0, task.col0, task.rows, task.cols);
+            assert!(got.allclose(&want, 1e-6), "task {} err {}", task.id, got.max_abs_diff(&want));
+        }
+    }
+
+    #[test]
+    fn half_panels_match_f64_oracle_within_dtype_tolerance() {
+        use crate::gemm::Dtype;
+        // Storage rounding dominates: with values in [-1, 1) and k = 53,
+        // per-element error is bounded by ~2*k*u_dtype against an f64
+        // oracle (u_f16 = 2^-11, u_bf16 = 2^-8). The documented
+        // tolerances below have ~4x headroom over the random-case error.
+        let a = Matrix::random(29, 53, 25);
+        let b = Matrix::random(53, 31, 26);
+        let plan = BlockPlan::new(29, 53, 31, 16, 12);
+        let oracle = a.matmul_f64(&b);
+        for (dtype, tol) in [(Dtype::F16, 2e-2f32), (Dtype::Bf16, 1.5e-1)] {
+            let panels = PackedPanels::pack_dtype(a.view(), b.view(), &plan, dtype);
+            for task in plan.tasks() {
+                let got = task_product(&panels, &task);
+                let want = oracle.block(task.row0, task.col0, task.rows, task.cols);
+                assert!(
+                    got.allclose(&want, tol),
+                    "{dtype} task {} err {}",
+                    task.id,
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn half_kernel_on_quantized_inputs_equals_f32_kernel() {
+        use crate::gemm::Dtype;
+        // Grid-quantized inputs are exactly representable in f16 and
+        // bf16, so storage rounds nothing and the half kernels must
+        // agree with the f32 kernel bit for bit (same accumulation
+        // dataflow, same f32 arithmetic).
+        let a = Matrix::random_quantized(23, 17, 27);
+        let b = Matrix::random_quantized(17, 19, 28);
+        let plan = BlockPlan::new(23, 17, 19, 8, 8);
+        let f32p = PackedPanels::pack(a.view(), b.view(), &plan);
+        for dtype in [Dtype::F16, Dtype::Bf16] {
+            let panels = PackedPanels::pack_dtype(a.view(), b.view(), &plan, dtype);
+            for task in plan.tasks() {
+                let want = task_product(&f32p, &task);
+                let got = task_product(&panels, &task);
+                assert_eq!(got.data, want.data, "{dtype} task {}", task.id);
+            }
+        }
     }
 
     #[test]

@@ -26,17 +26,25 @@
 //! [`ops`] adds the row-streamed element-wise add/sub kernels the
 //! Strassen layer ([`crate::strassen`]) uses to form operand
 //! combinations and recombine quadrants through borrowed views.
+//!
+//! [`dtype`] makes element precision a job parameter: panels can be
+//! packed in f64/f32/f16/bf16 ([`Dtype`]), the microkernel widens half
+//! types back to f32 on load (accumulating in f32, natively in f64 for
+//! `F64`), and results always stream into the f32 `C` buffer. `F32` jobs
+//! run the pre-existing code paths bit for bit.
 
+pub mod dtype;
 mod matrix;
 pub mod microkernel;
 pub mod ops;
 pub mod pack;
 pub mod view;
 
+pub use dtype::Dtype;
 pub use matrix::Matrix;
 pub use microkernel::{micro_kernel, task_product, task_product_into, MR, NR};
 pub use ops::CombineOp;
-pub use pack::{PackedA, PackedB, PackedPanels};
+pub use pack::{PackedA, PackedB, PackedPanels, PanelRef};
 pub use view::{DisjointBlocks, MatrixView, MatrixViewMut};
 
 use crate::blocking::BlockPlan;

@@ -38,18 +38,46 @@ use std::sync::Arc;
 
 use crate::blocking::BlockPlan;
 
+use super::dtype::Dtype;
 use super::microkernel::{MR, NR};
 use super::ops::CombineOp;
 use super::view::MatrixView;
 
+/// A borrowed view of one packed panel's strips in whatever storage
+/// precision the panel was packed at. The microkernel dispatches on this
+/// to pick the matching per-dtype inner loop; f16/bf16 strips are `u16`
+/// bit patterns decoded on load.
+#[derive(Debug, Clone, Copy)]
+pub enum PanelRef<'a> {
+    /// f32 strips — the legacy layout, served from the same storage as
+    /// [`PackedA::panel`] / [`PackedB::panel`].
+    F32(&'a [f32]),
+    /// f64 strips (exact widenings of the f32 source elements).
+    F64(&'a [f64]),
+    /// f16 or bf16 bit patterns; which one is named by the owner's
+    /// [`Dtype`].
+    Half(&'a [u16]),
+}
+
 /// The packed row-panels of one A operand (`M x K` at block size `si`):
 /// strip-major `[strip][k][MR]` per panel. Refcounted and immutable
 /// after packing; shareable across jobs that multiply the same A.
+///
+/// Panels are stored in the dtype the job asked for ([`Dtype`], default
+/// `F32`): exactly one of the three panel stores is populated. The `F32`
+/// store and its constructors are byte-for-byte the pre-multi-precision
+/// code path.
 #[derive(Debug, Clone)]
 pub struct PackedA {
     k: usize,
-    /// Per block-row of A: strip-major `[strip][k][MR]` packing.
+    /// Storage precision of the populated panel store.
+    dtype: Dtype,
+    /// Per block-row of A: strip-major `[strip][k][MR]` packing (`F32`).
     panels: Vec<Vec<f32>>,
+    /// `F64` storage: same slot arithmetic, exact widenings.
+    wide_panels: Vec<Vec<f64>>,
+    /// `F16`/`Bf16` storage: same slot arithmetic, RNE-converted bits.
+    half_panels: Vec<Vec<u16>>,
     /// Effective (unpadded) rows per panel.
     rows: Vec<usize>,
 }
@@ -68,7 +96,50 @@ impl PackedA {
             panels.push(pack_a_panel(&a, row0, rows, k));
             rows_eff.push(rows);
         }
-        Self { k, panels, rows: rows_eff }
+        Self {
+            k,
+            dtype: Dtype::F32,
+            panels,
+            wide_panels: Vec::new(),
+            half_panels: Vec::new(),
+            rows: rows_eff,
+        }
+    }
+
+    /// [`PackedA::pack`] with the storage precision as a parameter:
+    /// `F32` is exactly `pack` (same storage, bit for bit); other dtypes
+    /// convert each element once on the way into the panel (`F64` widens
+    /// exactly, the half types round to nearest even).
+    pub fn pack_dtype(a: MatrixView<'_>, si: usize, dtype: Dtype) -> Self {
+        if dtype == Dtype::F32 {
+            return Self::pack(a, si);
+        }
+        assert!(si > 0, "degenerate block size");
+        let (m, k) = (a.rows(), a.cols());
+        let blocks = m.div_ceil(si);
+        let mut out = Self {
+            k,
+            dtype,
+            panels: Vec::new(),
+            wide_panels: Vec::new(),
+            half_panels: Vec::new(),
+            rows: Vec::with_capacity(blocks),
+        };
+        for bi in 0..blocks {
+            let row0 = bi * si;
+            let rows = si.min(m - row0);
+            match dtype {
+                Dtype::F64 => out
+                    .wide_panels
+                    .push(pack_a_panel_conv(&a, row0, rows, k, 0.0f64, |v| v as f64)),
+                _ => {
+                    let enc = dtype.half_encoder().expect("half dtype has an encoder");
+                    out.half_panels.push(pack_a_panel_conv(&a, row0, rows, k, 0u16, enc));
+                }
+            }
+            out.rows.push(rows);
+        }
+        out
     }
 
     /// Pack `x op y` (element-wise, or plain `x` when `y` is `None`)
@@ -102,7 +173,71 @@ impl PackedA {
             panels.push(pack_a_panel_fused(&x, y.as_ref(), row0, rows, k));
             rows_eff.push(rows);
         }
-        Self { k, panels, rows: rows_eff }
+        Self {
+            k,
+            dtype: Dtype::F32,
+            panels,
+            wide_panels: Vec::new(),
+            half_panels: Vec::new(),
+            rows: rows_eff,
+        }
+    }
+
+    /// [`PackedA::from_sum_of_views`] with the storage precision as a
+    /// parameter. The combination `x op y` is always formed in f32 first
+    /// (one f32 rounding, exactly like the materialize-then-pack
+    /// pipeline) and then converted into the storage dtype — so a fused
+    /// half-precision pack is bit-identical to materializing the f32
+    /// combination and `pack_dtype`-ing it.
+    pub fn from_sum_of_views_dtype(
+        x: MatrixView<'_>,
+        y: Option<(MatrixView<'_>, CombineOp)>,
+        si: usize,
+        dtype: Dtype,
+    ) -> Self {
+        if dtype == Dtype::F32 {
+            return Self::from_sum_of_views(x, y, si);
+        }
+        assert!(si > 0, "degenerate block size");
+        if let Some((yv, _)) = &y {
+            assert_eq!(
+                (x.rows(), x.cols()),
+                (yv.rows(), yv.cols()),
+                "fused operand shape mismatch"
+            );
+        }
+        let (m, k) = (x.rows(), x.cols());
+        let blocks = m.div_ceil(si);
+        let mut out = Self {
+            k,
+            dtype,
+            panels: Vec::new(),
+            wide_panels: Vec::new(),
+            half_panels: Vec::new(),
+            rows: Vec::with_capacity(blocks),
+        };
+        for bi in 0..blocks {
+            let row0 = bi * si;
+            let rows = si.min(m - row0);
+            match dtype {
+                Dtype::F64 => out.wide_panels.push(pack_a_panel_fused_conv(
+                    &x,
+                    y.as_ref(),
+                    row0,
+                    rows,
+                    k,
+                    0.0f64,
+                    |v| v as f64,
+                )),
+                _ => {
+                    let enc = dtype.half_encoder().expect("half dtype has an encoder");
+                    out.half_panels
+                        .push(pack_a_panel_fused_conv(&x, y.as_ref(), row0, rows, k, 0u16, enc));
+                }
+            }
+            out.rows.push(rows);
+        }
+        out
     }
 
     /// Contraction depth K this operand was packed for.
@@ -110,25 +245,49 @@ impl PackedA {
         self.k
     }
 
+    /// Storage precision of the packed panels.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
     /// Number of packed row-panels (`ceil(M / si)`).
     pub fn num_panels(&self) -> usize {
-        self.panels.len()
+        self.rows.len()
     }
 
     /// Packed strips of row-panel `bi` and its effective row count.
+    /// The f32 accessor — for other dtypes use [`PackedA::panel_ref`].
     pub fn panel(&self, bi: usize) -> (&[f32], usize) {
+        debug_assert_eq!(self.dtype, Dtype::F32, "panel() reads the f32 store");
         (&self.panels[bi], self.rows[bi])
     }
 
-    /// Total packed floats (diagnostics: equals the padded operand size).
+    /// Packed strips of row-panel `bi` in the panel's own storage
+    /// precision, plus its effective row count.
+    pub fn panel_ref(&self, bi: usize) -> (PanelRef<'_>, usize) {
+        let p = match self.dtype {
+            Dtype::F32 => PanelRef::F32(&self.panels[bi]),
+            Dtype::F64 => PanelRef::F64(&self.wide_panels[bi]),
+            Dtype::F16 | Dtype::Bf16 => PanelRef::Half(&self.half_panels[bi]),
+        };
+        (p, self.rows[bi])
+    }
+
+    /// Total packed elements (diagnostics: equals the padded operand
+    /// size, whatever the storage precision).
     pub fn packed_len(&self) -> usize {
-        self.panels.iter().map(Vec::len).sum()
+        match self.dtype {
+            Dtype::F32 => self.panels.iter().map(Vec::len).sum(),
+            Dtype::F64 => self.wide_panels.iter().map(Vec::len).sum(),
+            Dtype::F16 | Dtype::Bf16 => self.half_panels.iter().map(Vec::len).sum(),
+        }
     }
 
     /// Packed payload size in bytes — what a cached pack costs the
-    /// operand registry's byte budget.
+    /// operand registry's byte budget. Scales with the storage dtype
+    /// (a bf16 pack of the same operand costs half an f32 pack).
     pub fn packed_bytes(&self) -> u64 {
-        (self.packed_len() * std::mem::size_of::<f32>()) as u64
+        (self.packed_len() * self.dtype.bytes()) as u64
     }
 }
 
@@ -139,8 +298,14 @@ impl PackedA {
 #[derive(Debug, Clone)]
 pub struct PackedB {
     k: usize,
-    /// Per block-column of B: strip-major `[strip][k][NR]` packing.
+    /// Storage precision of the populated panel store.
+    dtype: Dtype,
+    /// Per block-column of B: strip-major `[strip][k][NR]` packing (`F32`).
     panels: Vec<Vec<f32>>,
+    /// `F64` storage: same slot arithmetic, exact widenings.
+    wide_panels: Vec<Vec<f64>>,
+    /// `F16`/`Bf16` storage: same slot arithmetic, RNE-converted bits.
+    half_panels: Vec<Vec<u16>>,
     /// Effective (unpadded) columns per panel.
     cols: Vec<usize>,
 }
@@ -159,7 +324,49 @@ impl PackedB {
             panels.push(pack_b_panel(&b, col0, cols, k));
             cols_eff.push(cols);
         }
-        Self { k, panels, cols: cols_eff }
+        Self {
+            k,
+            dtype: Dtype::F32,
+            panels,
+            wide_panels: Vec::new(),
+            half_panels: Vec::new(),
+            cols: cols_eff,
+        }
+    }
+
+    /// [`PackedB::pack`] with the storage precision as a parameter:
+    /// `F32` is exactly `pack`; other dtypes convert each element once
+    /// on the way into the panel.
+    pub fn pack_dtype(b: MatrixView<'_>, sj: usize, dtype: Dtype) -> Self {
+        if dtype == Dtype::F32 {
+            return Self::pack(b, sj);
+        }
+        assert!(sj > 0, "degenerate block size");
+        let (k, n) = (b.rows(), b.cols());
+        let blocks = n.div_ceil(sj);
+        let mut out = Self {
+            k,
+            dtype,
+            panels: Vec::new(),
+            wide_panels: Vec::new(),
+            half_panels: Vec::new(),
+            cols: Vec::with_capacity(blocks),
+        };
+        for bj in 0..blocks {
+            let col0 = bj * sj;
+            let cols = sj.min(n - col0);
+            match dtype {
+                Dtype::F64 => out
+                    .wide_panels
+                    .push(pack_b_panel_conv(&b, col0, cols, k, 0.0f64, |v| v as f64)),
+                _ => {
+                    let enc = dtype.half_encoder().expect("half dtype has an encoder");
+                    out.half_panels.push(pack_b_panel_conv(&b, col0, cols, k, 0u16, enc));
+                }
+            }
+            out.cols.push(cols);
+        }
+        out
     }
 
     /// Pack `x op y` (element-wise, or plain `x` when `y` is `None`)
@@ -189,7 +396,69 @@ impl PackedB {
             panels.push(pack_b_panel_fused(&x, y.as_ref(), col0, cols, k));
             cols_eff.push(cols);
         }
-        Self { k, panels, cols: cols_eff }
+        Self {
+            k,
+            dtype: Dtype::F32,
+            panels,
+            wide_panels: Vec::new(),
+            half_panels: Vec::new(),
+            cols: cols_eff,
+        }
+    }
+
+    /// [`PackedB::from_sum_of_views`] with the storage precision as a
+    /// parameter — the B-side twin of
+    /// [`PackedA::from_sum_of_views_dtype`]: the combination is formed in
+    /// f32, then converted into the storage dtype.
+    pub fn from_sum_of_views_dtype(
+        x: MatrixView<'_>,
+        y: Option<(MatrixView<'_>, CombineOp)>,
+        sj: usize,
+        dtype: Dtype,
+    ) -> Self {
+        if dtype == Dtype::F32 {
+            return Self::from_sum_of_views(x, y, sj);
+        }
+        assert!(sj > 0, "degenerate block size");
+        if let Some((yv, _)) = &y {
+            assert_eq!(
+                (x.rows(), x.cols()),
+                (yv.rows(), yv.cols()),
+                "fused operand shape mismatch"
+            );
+        }
+        let (k, n) = (x.rows(), x.cols());
+        let blocks = n.div_ceil(sj);
+        let mut out = Self {
+            k,
+            dtype,
+            panels: Vec::new(),
+            wide_panels: Vec::new(),
+            half_panels: Vec::new(),
+            cols: Vec::with_capacity(blocks),
+        };
+        for bj in 0..blocks {
+            let col0 = bj * sj;
+            let cols = sj.min(n - col0);
+            match dtype {
+                Dtype::F64 => out.wide_panels.push(pack_b_panel_fused_conv(
+                    &x,
+                    y.as_ref(),
+                    col0,
+                    cols,
+                    k,
+                    0.0f64,
+                    |v| v as f64,
+                )),
+                _ => {
+                    let enc = dtype.half_encoder().expect("half dtype has an encoder");
+                    out.half_panels
+                        .push(pack_b_panel_fused_conv(&x, y.as_ref(), col0, cols, k, 0u16, enc));
+                }
+            }
+            out.cols.push(cols);
+        }
+        out
     }
 
     /// Contraction depth K this operand was packed for.
@@ -197,25 +466,48 @@ impl PackedB {
         self.k
     }
 
+    /// Storage precision of the packed panels.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
     /// Number of packed column-panels (`ceil(N / sj)`).
     pub fn num_panels(&self) -> usize {
-        self.panels.len()
+        self.cols.len()
     }
 
     /// Packed strips of column-panel `bj` and its effective column count.
+    /// The f32 accessor — for other dtypes use [`PackedB::panel_ref`].
     pub fn panel(&self, bj: usize) -> (&[f32], usize) {
+        debug_assert_eq!(self.dtype, Dtype::F32, "panel() reads the f32 store");
         (&self.panels[bj], self.cols[bj])
     }
 
-    /// Total packed floats (diagnostics: equals the padded operand size).
+    /// Packed strips of column-panel `bj` in the panel's own storage
+    /// precision, plus its effective column count.
+    pub fn panel_ref(&self, bj: usize) -> (PanelRef<'_>, usize) {
+        let p = match self.dtype {
+            Dtype::F32 => PanelRef::F32(&self.panels[bj]),
+            Dtype::F64 => PanelRef::F64(&self.wide_panels[bj]),
+            Dtype::F16 | Dtype::Bf16 => PanelRef::Half(&self.half_panels[bj]),
+        };
+        (p, self.cols[bj])
+    }
+
+    /// Total packed elements (diagnostics: equals the padded operand
+    /// size, whatever the storage precision).
     pub fn packed_len(&self) -> usize {
-        self.panels.iter().map(Vec::len).sum()
+        match self.dtype {
+            Dtype::F32 => self.panels.iter().map(Vec::len).sum(),
+            Dtype::F64 => self.wide_panels.iter().map(Vec::len).sum(),
+            Dtype::F16 | Dtype::Bf16 => self.half_panels.iter().map(Vec::len).sum(),
+        }
     }
 
     /// Packed payload size in bytes — what a cached pack costs the
-    /// operand registry's byte budget.
+    /// operand registry's byte budget. Scales with the storage dtype.
     pub fn packed_bytes(&self) -> u64 {
-        (self.packed_len() * std::mem::size_of::<f32>()) as u64
+        (self.packed_len() * self.dtype.bytes()) as u64
     }
 }
 
@@ -242,16 +534,38 @@ impl PackedPanels {
         )
     }
 
+    /// [`PackedPanels::pack`] with the storage precision as a parameter.
+    pub fn pack_dtype(
+        a: MatrixView<'_>,
+        b: MatrixView<'_>,
+        plan: &BlockPlan,
+        dtype: Dtype,
+    ) -> Self {
+        assert_eq!((a.rows(), a.cols()), (plan.m, plan.k), "A shape mismatch");
+        assert_eq!((b.rows(), b.cols()), (plan.k, plan.n), "B shape mismatch");
+        Self::from_parts(
+            Arc::new(PackedA::pack_dtype(a, plan.si, dtype)),
+            Arc::new(PackedB::pack_dtype(b, plan.sj, dtype)),
+        )
+    }
+
     /// Compose a job's panels from pre-packed (possibly shared) halves.
-    /// The halves must agree on K — they came from conformable operands.
+    /// The halves must agree on K — they came from conformable operands —
+    /// and on storage dtype, so the microkernel sees one precision.
     pub fn from_parts(a: Arc<PackedA>, b: Arc<PackedB>) -> Self {
         assert_eq!(a.k(), b.k(), "packed halves disagree on contraction depth");
+        assert_eq!(a.dtype(), b.dtype(), "packed halves disagree on dtype");
         Self { a, b }
     }
 
     /// Shared contraction depth K.
     pub fn k(&self) -> usize {
         self.a.k()
+    }
+
+    /// Shared storage precision of both halves.
+    pub fn dtype(&self) -> Dtype {
+        self.a.dtype()
     }
 
     /// The refcounted A half.
@@ -274,6 +588,16 @@ impl PackedPanels {
     /// count.
     pub fn b_panel(&self, bj: usize) -> (&[f32], usize) {
         self.b.panel(bj)
+    }
+
+    /// Dtype-generic access to A's row-panel `bi`.
+    pub fn a_panel_ref(&self, bi: usize) -> (PanelRef<'_>, usize) {
+        self.a.panel_ref(bi)
+    }
+
+    /// Dtype-generic access to B's column-panel `bj`.
+    pub fn b_panel_ref(&self, bj: usize) -> (PanelRef<'_>, usize) {
+        self.b.panel_ref(bj)
     }
 
     /// Total packed floats (diagnostics: equals padded operand sizes).
@@ -358,6 +682,129 @@ fn pack_b_panel_fused(
                     let ysrc = &yv.row(p)[c0..c0 + width];
                     for (c, (&xv, &yv)) in src.iter().zip(ysrc).enumerate() {
                         out[base + p * NR + c] = op.apply(xv, yv);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// [`pack_a_panel`] generalized over the storage element: identical slot
+/// arithmetic, each source element passed through `conv` on the way in.
+/// The f32 packers above stay as dedicated functions so the legacy path
+/// is untouched; this handles every other dtype.
+fn pack_a_panel_conv<T: Copy>(
+    a: &MatrixView<'_>,
+    row0: usize,
+    rows: usize,
+    k: usize,
+    zero: T,
+    conv: impl Fn(f32) -> T,
+) -> Vec<T> {
+    let strips = rows.div_ceil(MR);
+    let mut out = vec![zero; strips * k * MR];
+    for s in 0..strips {
+        let base = s * k * MR;
+        for r in 0..MR.min(rows - s * MR) {
+            let src = a.row(row0 + s * MR + r);
+            for (p, &v) in src.iter().enumerate() {
+                out[base + p * MR + r] = conv(v);
+            }
+        }
+    }
+    out
+}
+
+/// [`pack_a_panel_fused`] generalized over the storage element: the
+/// combination is formed in f32 (`op.apply`), then converted.
+fn pack_a_panel_fused_conv<T: Copy>(
+    x: &MatrixView<'_>,
+    y: Option<&(MatrixView<'_>, CombineOp)>,
+    row0: usize,
+    rows: usize,
+    k: usize,
+    zero: T,
+    conv: impl Fn(f32) -> T,
+) -> Vec<T> {
+    let strips = rows.div_ceil(MR);
+    let mut out = vec![zero; strips * k * MR];
+    for s in 0..strips {
+        let base = s * k * MR;
+        for r in 0..MR.min(rows - s * MR) {
+            let row = row0 + s * MR + r;
+            let src = x.row(row);
+            match y {
+                None => {
+                    for (p, &v) in src.iter().enumerate() {
+                        out[base + p * MR + r] = conv(v);
+                    }
+                }
+                Some((yv, op)) => {
+                    let ysrc = yv.row(row);
+                    for (p, (&xv, &yv)) in src.iter().zip(ysrc).enumerate() {
+                        out[base + p * MR + r] = conv(op.apply(xv, yv));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// [`pack_b_panel`] generalized over the storage element.
+fn pack_b_panel_conv<T: Copy>(
+    b: &MatrixView<'_>,
+    col0: usize,
+    cols: usize,
+    k: usize,
+    zero: T,
+    conv: impl Fn(f32) -> T,
+) -> Vec<T> {
+    let strips = cols.div_ceil(NR);
+    let mut out = vec![zero; strips * k * NR];
+    for s in 0..strips {
+        let base = s * k * NR;
+        let c0 = col0 + s * NR;
+        let width = NR.min(cols - s * NR);
+        for p in 0..k {
+            let src = &b.row(p)[c0..c0 + width];
+            for (c, &v) in src.iter().enumerate() {
+                out[base + p * NR + c] = conv(v);
+            }
+        }
+    }
+    out
+}
+
+/// [`pack_b_panel_fused`] generalized over the storage element.
+fn pack_b_panel_fused_conv<T: Copy>(
+    x: &MatrixView<'_>,
+    y: Option<&(MatrixView<'_>, CombineOp)>,
+    col0: usize,
+    cols: usize,
+    k: usize,
+    zero: T,
+    conv: impl Fn(f32) -> T,
+) -> Vec<T> {
+    let strips = cols.div_ceil(NR);
+    let mut out = vec![zero; strips * k * NR];
+    for s in 0..strips {
+        let base = s * k * NR;
+        let c0 = col0 + s * NR;
+        let width = NR.min(cols - s * NR);
+        for p in 0..k {
+            let src = &x.row(p)[c0..c0 + width];
+            match y {
+                None => {
+                    for (c, &v) in src.iter().enumerate() {
+                        out[base + p * NR + c] = conv(v);
+                    }
+                }
+                Some((yv, op)) => {
+                    let ysrc = &yv.row(p)[c0..c0 + width];
+                    for (c, (&xv, &yv)) in src.iter().zip(ysrc).enumerate() {
+                        out[base + p * NR + c] = conv(op.apply(xv, yv));
                     }
                 }
             }
@@ -547,6 +994,95 @@ mod tests {
         let x = Matrix::zeros(4, 4);
         let y = Matrix::zeros(4, 5);
         PackedA::from_sum_of_views(x.view(), Some((y.view(), CombineOp::Add)), 4);
+    }
+
+    #[test]
+    fn dtype_f32_pack_is_bit_identical_to_plain_pack() {
+        // The tentpole's bit-identity guarantee at the pack layer:
+        // requesting F32 through the dtype entry points runs the exact
+        // legacy packers.
+        let a = Matrix::random(29, 17, 40);
+        let pa = PackedA::pack(a.view(), 12);
+        let da = PackedA::pack_dtype(a.view(), 12, Dtype::F32);
+        assert_eq!(da.dtype(), Dtype::F32);
+        assert_eq!(pa.panels, da.panels);
+        assert_eq!(pa.rows, da.rows);
+        let b = Matrix::random(17, 23, 41);
+        let pb = PackedB::pack(b.view(), 10);
+        let db = PackedB::pack_dtype(b.view(), 10, Dtype::F32);
+        assert_eq!(pb.panels, db.panels);
+        assert_eq!(pb.packed_bytes(), db.packed_bytes());
+    }
+
+    #[test]
+    fn dtype_packs_store_converted_elements() {
+        use crate::gemm::dtype::{f32_to_bf16_bits, f32_to_f16_bits};
+        let a = Matrix::random(13, 7, 42);
+        let f32p = PackedA::pack(a.view(), 8);
+        for dtype in [Dtype::F64, Dtype::F16, Dtype::Bf16] {
+            let p = PackedA::pack_dtype(a.view(), 8, dtype);
+            assert_eq!(p.dtype(), dtype);
+            assert_eq!(p.packed_len(), f32p.packed_len());
+            assert_eq!(p.packed_bytes(), (p.packed_len() * dtype.bytes()) as u64);
+            for bi in 0..p.num_panels() {
+                let (f32strip, _) = f32p.panel(bi);
+                match p.panel_ref(bi).0 {
+                    PanelRef::F64(w) => {
+                        for (x, &v) in w.iter().zip(f32strip) {
+                            assert_eq!(*x, v as f64); // widening is exact
+                        }
+                    }
+                    PanelRef::Half(h) => {
+                        let enc = match dtype {
+                            Dtype::F16 => f32_to_f16_bits,
+                            _ => f32_to_bf16_bits,
+                        };
+                        for (x, &v) in h.iter().zip(f32strip) {
+                            assert_eq!(*x, enc(v), "slot mismatch at {dtype}");
+                        }
+                    }
+                    PanelRef::F32(_) => panic!("expected non-f32 store"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_dtype_pack_equals_materialize_then_pack_dtype() {
+        let x = Matrix::random(11, 9, 43);
+        let y = Matrix::random(11, 9, 44);
+        let mut mat = Matrix::zeros(11, 9);
+        for i in 0..11 * 9 {
+            mat.data[i] = CombineOp::Sub.apply(x.data[i], y.data[i]);
+        }
+        for dtype in [Dtype::F64, Dtype::F16, Dtype::Bf16] {
+            let fused = PackedA::from_sum_of_views_dtype(
+                x.view(),
+                Some((y.view(), CombineOp::Sub)),
+                4,
+                dtype,
+            );
+            let plain = PackedA::pack_dtype(mat.view(), 4, dtype);
+            assert_eq!(fused.wide_panels, plain.wide_panels, "{dtype}");
+            assert_eq!(fused.half_panels, plain.half_panels, "{dtype}");
+            let fused_b = PackedB::from_sum_of_views_dtype(
+                x.view(),
+                Some((y.view(), CombineOp::Sub)),
+                4,
+                dtype,
+            );
+            let plain_b = PackedB::pack_dtype(mat.view(), 4, dtype);
+            assert_eq!(fused_b.wide_panels, plain_b.wide_panels, "{dtype}");
+            assert_eq!(fused_b.half_panels, plain_b.half_panels, "{dtype}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "disagree on dtype")]
+    fn from_parts_rejects_mismatched_dtype() {
+        let a = Arc::new(PackedA::pack_dtype(Matrix::zeros(4, 5).view(), 4, Dtype::Bf16));
+        let b = Arc::new(PackedB::pack(Matrix::zeros(5, 4).view(), 4));
+        PackedPanels::from_parts(a, b);
     }
 
     #[test]

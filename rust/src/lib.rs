@@ -15,7 +15,11 @@
 //!   panel pipeline (borrowed `MatrixView`s → refcounted packed halves
 //!   `PackedA`/`PackedB` composed per job as `PackedPanels` — packed
 //!   once per job, shareable across jobs → register-blocked
-//!   microkernel → lock-free `DisjointBlocks` writes into C);
+//!   microkernel → lock-free `DisjointBlocks` writes into C) — the
+//!   whole pipeline parameterized over a job-level [`Dtype`]
+//!   (f64/f32/f16/bf16): panels convert at pack time, half-width
+//!   panels widen on load and accumulate in f32, and the operand
+//!   registry caches one pack per `(handle, side, S, dtype)`;
 //! * [`blocking`] — the blocked algorithm's task grid (`BlockPlan`,
 //!   whose exact tiling of C is what makes the disjoint writes sound);
 //! * [`ddr`] — DDR3 bank/row timing model (the Fig. 3 substrate);
@@ -108,4 +112,4 @@ pub use coordinator::{
     ActivationHandle, AOperand, BOperand, GemmJob, JobFuture, JobServer, ServerConfig,
     SubmitError, Submission, TenantConfig, TenantId, WeightHandle,
 };
-pub use gemm::Matrix;
+pub use gemm::{Dtype, Matrix};

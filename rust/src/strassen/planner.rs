@@ -42,7 +42,7 @@ use crate::coordinator::{
     ActivationHandle, AOperand, BOperand, FusedOperand, FusedSource, GemmJob, JobServer,
     SpanKind, Submission, WeightHandle,
 };
-use crate::gemm::{ops, CombineOp, Matrix, MatrixView};
+use crate::gemm::{ops, CombineOp, Dtype, Matrix, MatrixView};
 
 use super::arena::{ArenaStats, ScratchArena};
 
@@ -75,6 +75,12 @@ pub struct StrassenConfig {
     /// Walk sibling sub-trees above the leaf level on concurrent
     /// threads (bit-identical to the sequential walk).
     pub parallel: bool,
+    /// Precision the leaf GEMMs submit at ([`Dtype::F32`] by default —
+    /// the legacy path, bit for bit). The combine phase always runs in
+    /// f32: leaves accumulate in f32 and stream f32 C blocks, so
+    /// quadrant folds see full-width partials regardless of the leaf
+    /// dtype.
+    pub dtype: Dtype,
 }
 
 impl Default for StrassenConfig {
@@ -84,6 +90,7 @@ impl Default for StrassenConfig {
             run: None,
             algo: StrassenAlgo::default(),
             parallel: true,
+            dtype: Dtype::F32,
         }
     }
 }
@@ -518,6 +525,7 @@ struct Shared<'s> {
     algo: StrassenAlgo,
     parallel: bool,
     depth: usize,
+    dtype: Dtype,
     next_id: AtomicU64,
 }
 
@@ -603,13 +611,14 @@ pub fn multiply(
         algo: cfg.algo,
         parallel: cfg.parallel,
         depth,
+        dtype: cfg.dtype,
         next_id: AtomicU64::new(0),
     };
 
     let (c, padded) = if depth == 0 {
         let job =
             GemmJob { id: sh.fresh_id(), a: a.clone().into(), b: b.clone().into(), run: cfg.run };
-        let r = server.submit_async(job)?.wait_one()?;
+        let r = server.submit_async(Submission::from(job).dtype(cfg.dtype))?.wait_one()?;
         stats.leaf_gemms = 1;
         (r.c, (m, k, n))
     } else {
@@ -679,7 +688,8 @@ fn node(
             })
             .collect();
         sh.server.trace_span_begin(SpanKind::StrassenLevel, level as u64);
-        let results = sh.server.submit_async(Submission::group(jobs))?.wait()?;
+        let results =
+            sh.server.submit_async(Submission::group(jobs).dtype(sh.dtype))?.wait()?;
         sh.server.trace_span_end(SpanKind::StrassenLevel, level as u64);
         stats.leaf_gemms += 7;
         // Reclaim whatever the server has let go of; a worker cache may
@@ -1560,6 +1570,38 @@ mod tests {
             cutoff: Cutoff::Depth(d),
             run: Some(RunConfig::square(2, 16)),
             ..StrassenConfig::default()
+        }
+    }
+
+    #[test]
+    fn half_precision_leaves_track_oracle_and_f32_is_default() {
+        let srv = server();
+        let a = Matrix::random(32, 24, 60);
+        let b = Matrix::random(24, 40, 61);
+        let base = multiply(&srv, &a, &b, &cfg_depth(1)).unwrap();
+        let f32v = multiply(
+            &srv,
+            &a,
+            &b,
+            &StrassenConfig { dtype: Dtype::F32, ..cfg_depth(1) },
+        )
+        .unwrap();
+        assert_eq!(base.c.data, f32v.c.data, "explicit F32 must be the default path");
+        // Half-precision leaves: the fused packer quantizes `X ± Y` at
+        // the leaf dtype, leaves accumulate in f32, and the combine
+        // phase folds full-width partials — the recursion stays within
+        // a few units of the per-leaf bound of the oracle.
+        let oracle = a.matmul(&b);
+        for (dtype, tol) in [(Dtype::F16, 2e-2), (Dtype::Bf16, 1.5e-1)] {
+            let r = multiply(
+                &srv,
+                &a,
+                &b,
+                &StrassenConfig { dtype, ..cfg_depth(1) },
+            )
+            .unwrap();
+            assert_eq!(r.leaf_gemms, 7);
+            assert!(oracle.allclose(&r.c, tol), "{dtype} recursion must track the oracle");
         }
     }
 

@@ -35,6 +35,9 @@ struct Record {
     /// Caller-attached named metrics (e.g. a measured idle fraction),
     /// emitted as extra JSON fields on the record.
     extras: Vec<(String, f64)>,
+    /// Caller-attached named string tags (e.g. the serving `dtype`),
+    /// emitted as quoted JSON fields on the record.
+    extras_str: Vec<(String, String)>,
 }
 
 impl Bench {
@@ -108,6 +111,7 @@ impl Bench {
             stats,
             elements,
             extras: Vec::new(),
+            extras_str: Vec::new(),
         });
         stats
     }
@@ -119,6 +123,17 @@ impl Bench {
         if let Some(r) = self.records.borrow_mut().last_mut() {
             println!("bench {}/{:<32} {key} = {value:.6}", self.name, r.label);
             r.extras.push((key.to_string(), value));
+        }
+    }
+
+    /// Attach a named string tag to the most recently recorded
+    /// benchmark (no-op before the first `run`) — e.g.
+    /// `annotate_str("dtype", "bf16")` so the regression gate can pair
+    /// baseline and fresh records per precision.
+    pub fn annotate_str(&self, key: &str, value: &str) {
+        if let Some(r) = self.records.borrow_mut().last_mut() {
+            println!("bench {}/{:<32} {key} = {value}", self.name, r.label);
+            r.extras_str.push((key.to_string(), value.to_string()));
         }
     }
 
@@ -156,6 +171,13 @@ impl Bench {
             for (key, value) in &r.extras {
                 let value = if value.is_finite() { *value } else { 0.0 };
                 out.push_str(&format!(", \"{}\": {:.6e}", escape_json(key), value));
+            }
+            for (key, value) in &r.extras_str {
+                out.push_str(&format!(
+                    ", \"{}\": \"{}\"",
+                    escape_json(key),
+                    escape_json(value)
+                ));
             }
             out.push('}');
             if i + 1 < records.len() {
@@ -264,6 +286,22 @@ mod tests {
         assert!(text.contains("\"jobs\": 6.400000e1"));
         assert!(text.contains("\"bad\": 0.000000e0"));
         assert!(!text.contains("NaN"));
+    }
+
+    #[test]
+    fn string_annotations_emit_quoted_fields() {
+        let b = Bench::new("annot_str").samples(3);
+        b.annotate_str("ignored_before_first_run", "x"); // no record yet
+        b.run("one", || 0u8);
+        b.annotate_str("dtype", "bf16");
+        b.annotate("jobs", 4.0); // numeric and string extras coexist
+        let path = std::env::temp_dir().join("marr_bench_annotate_str_test.json");
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(!text.contains("ignored_before_first_run"));
+        assert!(text.contains("\"dtype\": \"bf16\""));
+        assert!(text.contains("\"jobs\": 4.000000e0"));
     }
 
     #[test]

@@ -34,6 +34,15 @@ impl Rng {
         (self.next_f64() * 2.0 - 1.0) as f32
     }
 
+    /// Uniform f32 on the grid `k / 256` for `k` in `[-256, 256)` —
+    /// every value is exactly representable in f16 (11-bit significand)
+    /// and bf16 (8-bit significand), so half-precision bit-identity
+    /// tests built on this data don't depend on rounding luck.
+    #[inline]
+    pub fn next_f32_grid(&mut self) -> f32 {
+        ((self.next_u64() % 512) as i64 - 256) as f32 / 256.0
+    }
+
     /// Uniform in `[lo, hi)` (integer).
     #[inline]
     pub fn range(&mut self, lo: usize, hi: usize) -> usize {
@@ -75,6 +84,17 @@ mod tests {
         for _ in 0..10_000 {
             let x = r.next_f64();
             assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn grid_values_are_on_the_256_grid_and_in_range() {
+        let mut r = Rng::new(13);
+        for _ in 0..10_000 {
+            let x = r.next_f32_grid();
+            assert!((-1.0..1.0).contains(&x));
+            let k = x * 256.0;
+            assert_eq!(k, k.trunc(), "off-grid value {x}");
         }
     }
 
